@@ -1,0 +1,71 @@
+//! CalCOFI salinity regression (the paper's Fig. 4 scenario, Section V-D):
+//! learn water salinity from bottle-cast covariates (depth, temperature,
+//! O2 saturation, O2 concentration, potential density, chlorophyll) over
+//! an asynchronous federation of oceanographic stations.
+//!
+//! Uses the real `bottle.csv` when `CALCOFI_CSV` points at it, otherwise
+//! the synthetic oceanographic substitute documented in DESIGN.md §6.
+//!
+//! Run: `cargo run --release --example calcofi_salinity`
+//!      `CALCOFI_CSV=/data/bottle.csv cargo run --release --example calcofi_salinity`
+
+use pao_fed::data::calcofi;
+use pao_fed::data::stream::{FedStream, StreamConfig};
+use pao_fed::fl::algorithms::{build, Variant};
+use pao_fed::fl::backend::NativeBackend;
+use pao_fed::fl::delay::DelayModel;
+use pao_fed::fl::engine::{run, Environment};
+use pao_fed::fl::participation::Participation;
+use pao_fed::rff::RffSpace;
+use pao_fed::util::plot;
+use pao_fed::util::rng::Pcg32;
+
+fn main() -> pao_fed::Result<()> {
+    let seed = 11;
+    let (k, d, n) = (128usize, 200usize, 1500usize);
+    let mut source = calcofi::open(None, 80_000, seed);
+    println!("data source: {}", source.name());
+
+    let stream = FedStream::build(
+        &StreamConfig {
+            n_clients: k,
+            n_iters: n,
+            data_group_samples: vec![n / 4, n / 2, 3 * n / 4, n],
+            test_size: 500,
+        },
+        source.as_mut(),
+        seed,
+    );
+    let rff = RffSpace::sample(calcofi::CALCOFI_DIM, d, 1.0, &mut Pcg32::derive(seed, &[1]));
+    let mut backend = NativeBackend::new(rff.clone());
+    let env = Environment::new(
+        stream,
+        rff,
+        Participation::grouped(k, &[0.25, 0.1, 0.025, 0.005], 4),
+        DelayModel::Geometric { delta: 0.2 },
+        seed,
+        &mut backend,
+    )?;
+
+    let mut series = Vec::new();
+    for variant in [Variant::OnlineFedSgd, Variant::PaoFedU1, Variant::PaoFedC2] {
+        let algo = build(variant, 0.4, 4, 10, 25);
+        let res = run(&env, &algo, &mut backend)?;
+        println!(
+            "{:<15} final {:>7.2} dB   {:>11} scalars",
+            algo.name,
+            res.final_db(),
+            res.comm.total_scalars()
+        );
+        series.push(plot::Series {
+            label: algo.name.clone(),
+            xs: res.iters.iter().map(|&i| i as f64).collect(),
+            ys: res.mse_db.clone(),
+        });
+    }
+    println!(
+        "\n{}",
+        plot::render(&series, 70, 16, "CalCOFI salinity: MSE-test (dB) vs iteration")
+    );
+    Ok(())
+}

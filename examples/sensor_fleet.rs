@@ -1,0 +1,102 @@
+//! End-to-end driver: a 256-device sensor fleet learning the paper's
+//! nonlinear model online, with the client compute served by the
+//! **AOT-compiled XLA artifacts through PJRT** - the full three-layer stack
+//! (Pallas kernel -> JAX graph -> HLO text -> rust PJRT runtime -> the
+//! asynchronous coordinator) composing on a real workload.
+//!
+//! Requires `make artifacts`; falls back to the native backend (with a
+//! notice) if they are missing. Logs the MSE-test curve as it trains and
+//! reports the paper's headline numbers: accuracy vs Online-FedSGD and the
+//! ~98% communication cut. The reference run is recorded in EXPERIMENTS.md.
+//!
+//! Run: `make artifacts && cargo run --release --example sensor_fleet`
+
+use pao_fed::data::stream::{FedStream, StreamConfig};
+use pao_fed::data::synthetic::Eq39Source;
+use pao_fed::fl::algorithms::{build, Variant};
+use pao_fed::fl::backend::{ComputeBackend, NativeBackend};
+use pao_fed::fl::delay::DelayModel;
+use pao_fed::fl::engine::{run, Environment};
+use pao_fed::fl::participation::Participation;
+use pao_fed::rff::RffSpace;
+use pao_fed::runtime::{artifact_dir, XlaBackend};
+use pao_fed::util::rng::Pcg32;
+use pao_fed::util::Stopwatch;
+
+fn main() -> pao_fed::Result<()> {
+    let seed = 7;
+    let (k, d, l, n) = (256usize, 200usize, 4usize, 2000usize);
+
+    // --- Layer-3 environment: the paper's Section V-A setting -------------
+    let stream = FedStream::build(
+        &StreamConfig {
+            n_clients: k,
+            n_iters: n,
+            data_group_samples: vec![500, 1000, 1500, 2000],
+            test_size: 500,
+        },
+        &mut Eq39Source::new(seed),
+        seed,
+    );
+    println!(
+        "sensor fleet: {k} devices, {n} iterations, {} streamed samples",
+        stream.total_samples()
+    );
+    let rff = RffSpace::sample(l, d, 1.0, &mut Pcg32::derive(seed, &[1]));
+
+    // --- Layers 1+2: the AOT artifacts through PJRT ------------------------
+    let mut backend: Box<dyn ComputeBackend> =
+        match XlaBackend::new(&artifact_dir(), k, rff.clone()) {
+            Ok(b) => {
+                println!(
+                    "client compute: XLA artifacts via PJRT ({})",
+                    b.engine().platform()
+                );
+                Box::new(b)
+            }
+            Err(e) => {
+                eprintln!("artifacts unavailable ({e}); falling back to the native backend");
+                Box::new(NativeBackend::new(rff.clone()))
+            }
+        };
+
+    let env = Environment::new(
+        stream,
+        rff,
+        Participation::grouped(k, &[0.25, 0.1, 0.025, 0.005], 4),
+        DelayModel::Geometric { delta: 0.2 },
+        seed,
+        backend.as_mut(),
+    )?;
+
+    // --- Train: PAO-Fed-C2 vs the Online-FedSGD reference ------------------
+    let mut results = Vec::new();
+    for variant in [Variant::OnlineFedSgd, Variant::PaoFedC2] {
+        let algo = build(variant, 0.4, 4, 10, 100);
+        let sw = Stopwatch::start();
+        let res = run(&env, &algo, backend.as_mut())?;
+        println!(
+            "\n=== {} ({:.1}s, backend: {}) ===",
+            algo.name,
+            sw.secs(),
+            backend.name()
+        );
+        for (it, db) in res.iters.iter().zip(&res.mse_db) {
+            println!("  iter {it:>5}  MSE {db:>7.2} dB");
+        }
+        println!(
+            "  traffic: {} uplink + {} downlink scalars",
+            res.comm.uplink_scalars, res.comm.downlink_scalars
+        );
+        results.push((algo.name.clone(), res));
+    }
+
+    let (ref sgd_name, ref sgd) = results[0];
+    let (ref pao_name, ref pao) = results[1];
+    println!(
+        "\n{pao_name} vs {sgd_name}: {:+.2} dB accuracy, {:.1}% less communication",
+        sgd.final_db() - pao.final_db(),
+        100.0 * pao.comm.reduction_vs(&sgd.comm)
+    );
+    Ok(())
+}

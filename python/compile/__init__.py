@@ -1,0 +1,7 @@
+"""Build-time-only python package for the PAO-Fed reproduction.
+
+Layer-1 (Pallas kernels) and Layer-2 (JAX compute graph) live here; they are
+lowered once by `compile.aot` into HLO-text artifacts that the rust Layer-3
+coordinator loads through PJRT.  Nothing in this package is imported at
+runtime by the serving/training path.
+"""

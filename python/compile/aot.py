@@ -1,0 +1,126 @@
+"""AOT bridge: lower the Layer-2 graphs to HLO *text* artifacts.
+
+Run via `make artifacts` (or `python -m compile.aot`).  Python's job ends
+here; the rust coordinator (`rust/src/runtime/`) loads these files with
+`HloModuleProto::from_text_file`, compiles them on the PJRT CPU client and
+executes them on the request path.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` 0.1.6 crate binds) rejects
+(`proto.id() <= INT_MAX`).  The text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Alongside the `.hlo.txt` files a `manifest.json` records, for every
+artifact, the parameter order/shapes and output arity the rust runtime must
+marshal - the rust side parses this instead of hard-coding shapes.
+"""
+
+import argparse
+import json
+import os
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (name, kind, dims) - every entry becomes artifacts/<name>.hlo.txt.
+# kinds: client_step(k, d, l) | rff(t, d, l) | eval(t, d).
+#
+# d=200, l=4  : synthetic benchmark of Section V-A (K=256 clients).
+# d=200, l=6  : CalCOFI bottle regression of Section V-D (6 covariates).
+# small (k=8, d=16): integration-test config exercised by `cargo test`.
+ARTIFACTS = [
+    ("client_step_k256_d200_l4", "client_step", dict(k=256, d=200, l=4)),
+    ("client_step_k256_d200_l6", "client_step", dict(k=256, d=200, l=6)),
+    ("client_step_k8_d16_l4", "client_step", dict(k=8, d=16, l=4)),
+    ("rff_t500_d200_l4", "rff", dict(t=500, d=200, l=4)),
+    ("rff_t500_d200_l6", "rff", dict(t=500, d=200, l=6)),
+    ("rff_t64_d16_l4", "rff", dict(t=64, d=16, l=4)),
+    ("eval_t500_d200", "eval", dict(t=500, d=200)),
+    ("eval_t64_d16", "eval", dict(t=64, d=16)),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _lower(kind, dims):
+    if kind == "client_step":
+        return model.lower_client_step(dims["k"], dims["d"], dims["l"])
+    if kind == "rff":
+        return model.lower_rff_features(dims["t"], dims["d"], dims["l"])
+    if kind == "eval":
+        return model.lower_eval_mse(dims["t"], dims["d"])
+    raise ValueError(f"unknown artifact kind {kind!r}")
+
+
+def _manifest_entry(name, kind, dims):
+    k, d, l, t = (dims.get(x) for x in "kdlt")
+    if kind == "client_step":
+        params = [
+            ["w_local", [k, d]],
+            ["w_global", [d]],
+            ["recv_mask", [k, d]],
+            ["x", [k, l]],
+            ["y", [k]],
+            ["gate", [k]],
+            ["omega", [l, d]],
+            ["b", [d]],
+            ["mu", []],
+        ]
+        outputs = [["w_new", [k, d]], ["e", [k]]]
+    elif kind == "rff":
+        params = [["x", [t, l]], ["omega", [l, d]], ["b", [d]]]
+        outputs = [["z", [t, d]]]
+    else:  # eval
+        params = [["w", [d]], ["z_test", [t, d]], ["y_test", [t]]]
+        outputs = [["mse", []]]
+    return {
+        "name": name,
+        "kind": kind,
+        "dims": {k_: v for k_, v in dims.items()},
+        "file": f"{name}.hlo.txt",
+        "dtype": "f32",
+        "params": params,
+        "outputs": outputs,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    # kept for Makefile compatibility; ignored beyond deriving out-dir
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if args.out is not None:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "dtype": "f32", "artifacts": []}
+    for name, kind, dims in ARTIFACTS:
+        if args.only and args.only not in name:
+            continue
+        text = to_hlo_text(_lower(kind, dims))
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(_manifest_entry(name, kind, dims))
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

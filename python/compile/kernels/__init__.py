@@ -1,0 +1,8 @@
+"""Layer-1 Pallas kernels for the PAO-Fed hot path.
+
+`rff_lms` holds the fused RFF-featurization + KLMS-update kernel that every
+client executes each iteration; `ref` holds the pure-jnp oracle used by the
+pytest suite to validate the kernel numerics.
+"""
+
+from . import ref, rff_lms  # noqa: F401

@@ -1,0 +1,76 @@
+"""Pure-jnp correctness oracle for the fused RFF + KLMS client step.
+
+This module is the ground truth the Pallas kernel (`rff_lms.py`) is tested
+against.  It implements, batched over all K clients, eqs. (10)-(13) of the
+paper:
+
+    w_eff  = M .* w_global + (I - M) .* w_local          (receive, eq. 10)
+    z      = sqrt(2/D) * cos(x @ Omega + b)              (RFF map)
+    e      = y - w_eff' z                                (a-priori error, eq. 11/13)
+    w_new  = w_eff + mu * g * e * z                      (LMS step, eq. 10/12)
+
+where `M` is the per-client receive mask (all-zero when the client did not
+receive from the server, making w_eff == w_local, i.e. the autonomous update
+of eq. (12)/(13)), and `g` gates the learning step on data availability.
+"""
+
+import jax.numpy as jnp
+
+__all__ = ["rff_features", "client_step", "eval_mse"]
+
+
+def rff_features(x, omega, b):
+    """Map raw inputs into the random Fourier feature space.
+
+    Args:
+      x:     [..., L] raw inputs.
+      omega: [L, D] frequency matrix, entries ~ N(0, 1/sigma^2).
+      b:     [D] phases ~ U[0, 2*pi).
+
+    Returns:
+      [..., D] features z with E[z_i z_j] approximating the Gaussian kernel.
+    """
+    d = omega.shape[1]
+    scale = jnp.sqrt(2.0 / d).astype(x.dtype)
+    return scale * jnp.cos(x @ omega + b)
+
+
+def client_step(w_local, w_global, recv_mask, x, y, gate, omega, b, mu):
+    """One synchronous tick of local learning for all K clients at once.
+
+    Args:
+      w_local:   [K, D] local models w_{k,n}.
+      w_global:  [D]    server model w_n.
+      recv_mask: [K, D] 0/1 diagonal of M_{k,n} per client; all-zero row ==
+                 "client k did not receive from the server this iteration".
+      x:         [K, L] streaming inputs x_{k,n}.
+      y:         [K]    streaming outputs y_{k,n}.
+      gate:      [K]    0/1, 1 iff client k received new data (performs the
+                 LMS step; 0 freezes the model, eq. (12) precondition).
+      omega:     [L, D] RFF frequencies (shared across the federation).
+      b:         [D]    RFF phases.
+      mu:        scalar learning rate.
+
+    Returns:
+      (w_new [K, D], e [K]) - updated local models and a-priori errors.
+    """
+    w_eff = recv_mask * w_global[None, :] + (1.0 - recv_mask) * w_local
+    z = rff_features(x, omega, b)
+    e = y - jnp.sum(w_eff * z, axis=1)
+    w_new = w_eff + mu * (gate * e)[:, None] * z
+    return w_new, e
+
+
+def eval_mse(w, z_test, y_test):
+    """Test-set mean squared error of a model in RFF space (eq. 40 inner term).
+
+    Args:
+      w:      [D] model.
+      z_test: [T, D] featurized test inputs.
+      y_test: [T] test outputs.
+
+    Returns:
+      scalar MSE = ||y - Z w||^2 / T.
+    """
+    r = y_test - z_test @ w
+    return jnp.mean(r * r)

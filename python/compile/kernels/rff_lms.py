@@ -1,0 +1,150 @@
+"""Layer-1 Pallas kernel: fused RFF featurization + KLMS client step.
+
+One kernel performs, for a block of clients at a time, the entire per-
+iteration client computation of PAO-Fed (eqs. 10-13 of the paper):
+
+    w_eff = M .* w_global + (1 - M) .* w_local     masked receive
+    z     = sqrt(2/D) * cos(x @ Omega + b)         RFF map (MXU matmul + VPU cos)
+    e     = y - <w_eff, z>                         a-priori error
+    w_new = w_eff + mu * g * e * z                 rank-1 LMS update
+
+TPU adaptation (see DESIGN.md #Hardware-Adaptation): rather than K tiny
+GEMVs, all clients are batched into a [K, D] problem.  The grid tiles the
+client axis; for each tile the x-block, the full Omega panel (L is small:
+4-8 raw features) and the w tile stay resident in VMEM, and the elementwise
+tail (cos / error / update) is fused behind the matmul so each tile makes a
+single HBM round-trip.  Masks are carried as f32 multiplicands instead of
+control flow (TPU-friendly predication).
+
+`interpret=True` is mandatory in this environment: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and interpret mode lowers the kernel to
+plain HLO that any backend (including the rust-side PJRT CPU client) runs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["client_step", "DEFAULT_CLIENT_BLOCK"]
+
+# Client-axis tile. 128 matches the MXU systolic dimension; a [128, 200] f32
+# w-tile is ~100 KiB, far below the ~16 MiB VMEM budget, leaving room for
+# double buffering of the x / mask / output tiles.
+DEFAULT_CLIENT_BLOCK = 128
+
+
+def _fused_kernel(
+    w_local_ref,
+    w_global_ref,
+    recv_mask_ref,
+    x_ref,
+    y_ref,
+    gate_ref,
+    omega_ref,
+    b_ref,
+    mu_ref,
+    w_new_ref,
+    e_ref,
+):
+    """Kernel body for one [K_blk, D] client tile.
+
+    All refs are VMEM tiles. Shapes inside the kernel:
+      w_local [Kb, D], w_global [1, D], recv_mask [Kb, D], x [Kb, L],
+      y [Kb, 1], gate [Kb, 1], omega [L, D], b [1, D], mu [1, 1],
+      outputs: w_new [Kb, D], e [Kb, 1].
+    """
+    w_local = w_local_ref[...]
+    w_global = w_global_ref[...]
+    m = recv_mask_ref[...]
+    x = x_ref[...]
+    y = y_ref[...]
+    gate = gate_ref[...]
+    omega = omega_ref[...]
+    b = b_ref[...]
+    mu = mu_ref[0, 0]
+
+    d = omega.shape[1]
+    scale = jnp.sqrt(2.0 / d).astype(x.dtype)
+
+    # Masked receive (eq. 10 first term; rows with m == 0 reduce to eq. 12).
+    w_eff = m * w_global + (1.0 - m) * w_local
+    # RFF featurization: the MXU-shaped part.
+    z = scale * jnp.cos(jnp.dot(x, omega, preferred_element_type=x.dtype) + b)
+    # A-priori error (eq. 11 / 13) - reduction over the feature axis.
+    e = y - jnp.sum(w_eff * z, axis=1, keepdims=True)
+    # Rank-1 LMS update, gated on data availability.
+    w_new_ref[...] = w_eff + mu * (gate * e) * z
+    e_ref[...] = e
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def client_step(
+    w_local,
+    w_global,
+    recv_mask,
+    x,
+    y,
+    gate,
+    omega,
+    b,
+    mu,
+    *,
+    block_k: int = DEFAULT_CLIENT_BLOCK,
+):
+    """Fused batched client step; drop-in equivalent of `ref.client_step`.
+
+    Args mirror `ref.client_step`; `mu` may be a python float or a scalar
+    array.  The client axis is padded up to a multiple of `block_k` (padding
+    rows carry gate=0 and mask=0 so they are exact no-ops) and the outputs
+    are sliced back.
+
+    Returns:
+      (w_new [K, D], e [K]).
+    """
+    k, d = w_local.shape
+    l = x.shape[1]
+    kb = min(block_k, k) if k > 0 else 1
+    pad = (-k) % kb
+    if pad:
+        w_local = jnp.pad(w_local, ((0, pad), (0, 0)))
+        recv_mask = jnp.pad(recv_mask, ((0, pad), (0, 0)))
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        y = jnp.pad(y, ((0, pad),))
+        gate = jnp.pad(gate, ((0, pad),))
+    kp = k + pad
+
+    mu_arr = jnp.asarray(mu, dtype=w_local.dtype).reshape(1, 1)
+    w_global2 = w_global.reshape(1, d)
+    b2 = b.reshape(1, d)
+    y2 = y.reshape(kp, 1)
+    gate2 = gate.reshape(kp, 1)
+
+    grid = (kp // kb,)
+    w_new, e = pl.pallas_call(
+        _fused_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((kb, d), lambda i: (i, 0)),  # w_local
+            pl.BlockSpec((1, d), lambda i: (0, 0)),  # w_global (broadcast)
+            pl.BlockSpec((kb, d), lambda i: (i, 0)),  # recv_mask
+            pl.BlockSpec((kb, l), lambda i: (i, 0)),  # x
+            pl.BlockSpec((kb, 1), lambda i: (i, 0)),  # y
+            pl.BlockSpec((kb, 1), lambda i: (i, 0)),  # gate
+            pl.BlockSpec((l, d), lambda i: (0, 0)),  # omega (resident)
+            pl.BlockSpec((1, d), lambda i: (0, 0)),  # b
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),  # mu
+        ],
+        out_specs=[
+            pl.BlockSpec((kb, d), lambda i: (i, 0)),
+            pl.BlockSpec((kb, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((kp, d), w_local.dtype),
+            jax.ShapeDtypeStruct((kp, 1), w_local.dtype),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(w_local, w_global2, recv_mask, x, y2, gate2, omega, b2, mu_arr)
+
+    return w_new[:k], e[:k, 0]

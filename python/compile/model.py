@@ -1,0 +1,104 @@
+"""Layer-2 JAX compute graph for PAO-Fed.
+
+Three jittable entry points, each lowered to an HLO-text artifact by
+`compile.aot` and executed from the rust coordinator's hot path:
+
+  * `batched_client_step` - all K clients' masked-receive + RFF + KLMS update
+    in one graph (delegates the fused math to the Layer-1 Pallas kernel);
+  * `rff_features` - featurize a batch of raw inputs (used once per run to
+    build the test-set feature matrix on the rust side);
+  * `eval_mse` - test-set MSE of the server model (eq. 40 inner term).
+
+RFF parameters (Omega, b) are *inputs*, not baked constants: the rust side
+draws them from its seeded PCG stream, keeping python/rust parity trivial
+and letting one artifact serve every Monte-Carlo realization.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref, rff_lms
+
+__all__ = [
+    "batched_client_step",
+    "rff_features",
+    "eval_mse",
+    "lower_client_step",
+    "lower_rff_features",
+    "lower_eval_mse",
+]
+
+
+def batched_client_step(w_local, w_global, recv_mask, x, y, gate, omega, b, mu):
+    """One federation tick of local compute, for every client at once.
+
+    See `kernels.ref.client_step` for the argument contract.  Returns a
+    tuple `(w_new [K, D], e [K])`.
+    """
+    return rff_lms.client_step(w_local, w_global, recv_mask, x, y, gate, omega, b, mu)
+
+
+def rff_features(x, omega, b):
+    """Featurize raw inputs `x [T, L]` into the RFF space -> `[T, D]`."""
+    return ref.rff_features(x, omega, b)
+
+
+def eval_mse(w, z_test, y_test):
+    """Scalar test MSE of model `w [D]` on `(z_test [T, D], y_test [T])`."""
+    return ref.eval_mse(w, z_test, y_test)
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_client_step(k: int, d: int, l: int):
+    """Lower `batched_client_step` for a concrete (K, D, L).
+
+    Positional parameter order of the resulting executable (the rust runtime
+    marshals literals in exactly this order):
+      0 w_local [K,D], 1 w_global [D], 2 recv_mask [K,D], 3 x [K,L],
+      4 y [K], 5 gate [K], 6 omega [L,D], 7 b [D], 8 mu [] (f32 scalar).
+    Output: tuple(w_new [K,D], e [K]).
+    """
+
+    def fn(w_local, w_global, recv_mask, x, y, gate, omega, b, mu):
+        return batched_client_step(
+            w_local, w_global, recv_mask, x, y, gate, omega, b, mu
+        )
+
+    return jax.jit(fn).lower(
+        _spec((k, d)),
+        _spec((d,)),
+        _spec((k, d)),
+        _spec((k, l)),
+        _spec((k,)),
+        _spec((k,)),
+        _spec((l, d)),
+        _spec((d,)),
+        _spec(()),
+    )
+
+
+def lower_rff_features(t: int, d: int, l: int):
+    """Lower `rff_features` for a concrete (T, D, L).
+
+    Parameters: 0 x [T,L], 1 omega [L,D], 2 b [D]. Output: tuple(z [T,D]).
+    """
+
+    def fn(x, omega, b):
+        return (rff_features(x, omega, b),)
+
+    return jax.jit(fn).lower(_spec((t, l)), _spec((l, d)), _spec((d,)))
+
+
+def lower_eval_mse(t: int, d: int):
+    """Lower `eval_mse` for a concrete (T, D).
+
+    Parameters: 0 w [D], 1 z_test [T,D], 2 y_test [T]. Output: tuple(mse []).
+    """
+
+    def fn(w, z_test, y_test):
+        return (eval_mse(w, z_test, y_test),)
+
+    return jax.jit(fn).lower(_spec((d,)), _spec((t, d)), _spec((t,)))

@@ -1,0 +1,52 @@
+"""AOT bridge tests: HLO-text emission and manifest integrity."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot, model
+
+HERE = os.path.dirname(__file__)
+PYROOT = os.path.dirname(HERE)
+
+
+def test_to_hlo_text_small():
+    text = aot.to_hlo_text(model.lower_eval_mse(8, 4))
+    assert "HloModule" in text
+    # return_tuple=True: entry computation must return a tuple type.
+    assert "ENTRY" in text
+
+
+def test_client_step_hlo_has_nine_params():
+    text = aot.to_hlo_text(model.lower_client_step(4, 8, 3))
+    assert "HloModule" in text
+    for i in range(9):
+        assert f"parameter({i})" in text, f"missing parameter({i})"
+
+
+def test_manifest_entries_match_artifact_table():
+    names = {n for n, _, _ in aot.ARTIFACTS}
+    assert "client_step_k256_d200_l4" in names
+    assert "eval_t500_d200" in names
+    entry = aot._manifest_entry("client_step_k8_d16_l4", "client_step", dict(k=8, d=16, l=4))
+    assert [p[0] for p in entry["params"]] == [
+        "w_local", "w_global", "recv_mask", "x", "y", "gate", "omega", "b", "mu",
+    ]
+    assert entry["params"][0][1] == [8, 16]
+    assert entry["outputs"][0][1] == [8, 16]
+
+
+def test_aot_main_writes_small_artifact(tmp_path):
+    out = tmp_path / "arts"
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out), "--only", "eval_t64"],
+        cwd=PYROOT,
+        check=True,
+    )
+    man = json.loads((out / "manifest.json").read_text())
+    assert man["artifacts"][0]["name"] == "eval_t64_d16"
+    hlo = (out / "eval_t64_d16.hlo.txt").read_text()
+    assert "HloModule" in hlo

@@ -1,0 +1,125 @@
+"""Core correctness signal: the Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and mask patterns; every case asserts allclose
+between `kernels.rff_lms.client_step` and `kernels.ref.client_step`.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref, rff_lms
+
+jax.config.update("jax_platform_name", "cpu")
+
+RTOL = 1e-5
+ATOL = 1e-5
+
+
+def _case(rng, k, d, l, mask_kind="random", gate_kind="random"):
+    w_local = rng.standard_normal((k, d)).astype(np.float32)
+    w_global = rng.standard_normal(d).astype(np.float32)
+    if mask_kind == "random":
+        recv_mask = (rng.random((k, d)) < 0.3).astype(np.float32)
+    elif mask_kind == "zeros":
+        recv_mask = np.zeros((k, d), np.float32)
+    elif mask_kind == "ones":
+        recv_mask = np.ones((k, d), np.float32)
+    else:  # contiguous m-block per client, circularly shifted (paper schedule)
+        recv_mask = np.zeros((k, d), np.float32)
+        m = max(1, d // 4)
+        for i in range(k):
+            idx = (np.arange(m) + i * m) % d
+            recv_mask[i, idx] = 1.0
+    x = rng.standard_normal((k, l)).astype(np.float32)
+    y = rng.standard_normal(k).astype(np.float32)
+    if gate_kind == "random":
+        gate = (rng.random(k) < 0.5).astype(np.float32)
+    elif gate_kind == "zeros":
+        gate = np.zeros(k, np.float32)
+    else:
+        gate = np.ones(k, np.float32)
+    omega = (rng.standard_normal((l, d)) / np.sqrt(l)).astype(np.float32)
+    b = (rng.random(d) * 2 * np.pi).astype(np.float32)
+    return w_local, w_global, recv_mask, x, y, gate, omega, b
+
+
+def _check(args, mu, block_k=rff_lms.DEFAULT_CLIENT_BLOCK):
+    w_ref, e_ref = ref.client_step(*map(jnp.asarray, args), mu)
+    w_ker, e_ker = rff_lms.client_step(*map(jnp.asarray, args), mu, block_k=block_k)
+    np.testing.assert_allclose(w_ker, w_ref, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(e_ker, e_ref, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.integers(1, 24),
+    d=st.integers(2, 48),
+    l=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_random_shapes(k, d, l, seed):
+    rng = np.random.default_rng(seed)
+    _check(_case(rng, k, d, l), mu=0.4, block_k=8)
+
+
+@pytest.mark.parametrize("mask_kind", ["zeros", "ones", "schedule"])
+@pytest.mark.parametrize("gate_kind", ["zeros", "ones"])
+def test_kernel_matches_ref_mask_edges(mask_kind, gate_kind):
+    rng = np.random.default_rng(7)
+    _check(_case(rng, 16, 32, 4, mask_kind, gate_kind), mu=0.25, block_k=8)
+
+
+def test_paper_config_shapes():
+    """The exact K=256, D=200, L=4 config that is AOT-exported."""
+    rng = np.random.default_rng(0)
+    _check(_case(rng, 256, 200, 4, "schedule"), mu=0.4)
+
+
+def test_padding_path():
+    """K not divisible by the block: padding rows must be exact no-ops."""
+    rng = np.random.default_rng(1)
+    _check(_case(rng, 13, 20, 4), mu=0.4, block_k=8)
+
+
+def test_zero_gate_freezes_model_modulo_receive():
+    """gate=0 + mask=0: w_new == w_local bit-for-bit semantics (no-op tick)."""
+    rng = np.random.default_rng(2)
+    args = list(_case(rng, 9, 16, 4, "zeros", "zeros"))
+    w_new, _ = rff_lms.client_step(*map(jnp.asarray, args), 0.4, block_k=4)
+    np.testing.assert_allclose(np.asarray(w_new), args[0], rtol=0, atol=0)
+
+
+def test_receive_overwrites_selected_coords():
+    """mask=1 rows: w_eff == w_global regardless of w_local."""
+    rng = np.random.default_rng(3)
+    args = list(_case(rng, 4, 12, 3, "ones", "zeros"))
+    w_new, _ = rff_lms.client_step(*map(jnp.asarray, args), 0.4, block_k=4)
+    np.testing.assert_allclose(
+        np.asarray(w_new), np.broadcast_to(args[1], (4, 12)), rtol=1e-6, atol=1e-6
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(mu=st.floats(0.0, 2.0, allow_nan=False), seed=st.integers(0, 10**6))
+def test_mu_sweep(mu, seed):
+    rng = np.random.default_rng(seed)
+    _check(_case(rng, 8, 16, 4), mu=float(np.float32(mu)), block_k=8)
+
+
+def test_error_is_apriori():
+    """e must be computed with w_eff *before* the LMS step (eq. 11)."""
+    rng = np.random.default_rng(4)
+    w_local, w_global, recv_mask, x, y, gate, omega, b = _case(rng, 6, 10, 4)
+    z = np.asarray(ref.rff_features(jnp.asarray(x), jnp.asarray(omega), jnp.asarray(b)))
+    w_eff = recv_mask * w_global[None, :] + (1 - recv_mask) * w_local
+    e_expected = y - np.sum(w_eff * z, axis=1)
+    _, e = rff_lms.client_step(
+        *map(jnp.asarray, (w_local, w_global, recv_mask, x, y, gate, omega, b)),
+        0.4,
+        block_k=4,
+    )
+    np.testing.assert_allclose(np.asarray(e), e_expected, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,93 @@
+"""Layer-2 model graph tests: featurization quality, eval, lowering."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_rff_kernel_approximation():
+    """RFF inner products must approximate the Gaussian kernel."""
+    rng = np.random.default_rng(0)
+    l, d = 4, 4096
+    sigma = 1.0
+    omega = (rng.standard_normal((l, d)) / sigma).astype(np.float32)
+    b = (rng.random(d) * 2 * np.pi).astype(np.float32)
+    x = rng.standard_normal((20, l)).astype(np.float32)
+    z = np.asarray(model.rff_features(jnp.asarray(x), jnp.asarray(omega), jnp.asarray(b)))
+    gram = z @ z.T
+    sq = ((x[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+    k_true = np.exp(-sq / (2 * sigma**2))
+    assert np.max(np.abs(gram - k_true)) < 0.15
+
+
+def test_eval_mse_exact():
+    rng = np.random.default_rng(1)
+    d, t = 8, 32
+    w = rng.standard_normal(d).astype(np.float32)
+    z = rng.standard_normal((t, d)).astype(np.float32)
+    y = rng.standard_normal(t).astype(np.float32)
+    got = float(model.eval_mse(jnp.asarray(w), jnp.asarray(z), jnp.asarray(y)))
+    want = float(np.mean((y - z @ w) ** 2))
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_perfect_model_zero_error(seed):
+    """If y was produced by w* in RFF space, eval_mse(w*) == 0."""
+    rng = np.random.default_rng(seed)
+    d, t = 16, 64
+    w = rng.standard_normal(d).astype(np.float32)
+    z = rng.standard_normal((t, d)).astype(np.float32)
+    y = z @ w
+    got = float(model.eval_mse(jnp.asarray(w), jnp.asarray(z), jnp.asarray(y)))
+    assert got < 1e-8
+
+
+def test_lms_descends_on_stationary_problem():
+    """Running the batched step repeatedly must reduce test MSE (sanity of
+    the full L2 graph as an *online learner*, not just a pure function)."""
+    rng = np.random.default_rng(2)
+    k, d, l, steps = 8, 32, 4, 200
+    omega = (rng.standard_normal((l, d)) / np.sqrt(l)).astype(np.float32)
+    b = (rng.random(d) * 2 * np.pi).astype(np.float32)
+    w_star = rng.standard_normal(d).astype(np.float32)
+
+    def sample(n):
+        x = rng.standard_normal((n, l)).astype(np.float32)
+        z = np.asarray(ref.rff_features(jnp.asarray(x), jnp.asarray(omega), jnp.asarray(b)))
+        y = (z @ w_star).astype(np.float32)
+        return x, y, z
+
+    x_test, y_test, z_test = sample(128)
+    w_local = np.zeros((k, d), np.float32)
+    w_global = np.zeros(d, np.float32)
+    ones_mask = np.ones((k, d), np.float32)
+    gate = np.ones(k, np.float32)
+    mse0 = float(model.eval_mse(jnp.asarray(w_global), jnp.asarray(z_test), jnp.asarray(y_test)))
+    for _ in range(steps):
+        x, y, _ = sample(k)
+        w_new, _ = model.batched_client_step(
+            jnp.asarray(w_local), jnp.asarray(w_global), jnp.asarray(ones_mask),
+            jnp.asarray(x), jnp.asarray(y), jnp.asarray(gate),
+            jnp.asarray(omega), jnp.asarray(b), 0.5,
+        )
+        w_local = np.asarray(w_new)
+        w_global = w_local.mean(axis=0)  # FedSGD aggregation
+    mse_end = float(model.eval_mse(jnp.asarray(w_global), jnp.asarray(z_test), jnp.asarray(y_test)))
+    assert mse_end < mse0 * 0.1, (mse0, mse_end)
+
+
+def test_lowering_shapes():
+    """All three lowerings must produce HLO with the documented arity."""
+    low = model.lower_client_step(4, 8, 3)
+    text = low.compiler_ir("stablehlo")
+    assert text is not None
+    low = model.lower_rff_features(16, 8, 3)
+    assert low.compiler_ir("stablehlo") is not None
+    low = model.lower_eval_mse(16, 8)
+    assert low.compiler_ir("stablehlo") is not None

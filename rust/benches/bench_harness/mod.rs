@@ -1,0 +1,102 @@
+//! Minimal benchmarking harness (no criterion in the offline crate set).
+//!
+//! Usage inside a `harness = false` bench target:
+//!
+//! ```ignore
+//! let mut b = Bench::from_args();
+//! b.bench("native_step_k256", || { ... });
+//! b.finish();
+//! ```
+//!
+//! Each benchmark is warmed up, then timed over enough iterations to pass a
+//! minimum measurement window; mean / min / p50 are reported. A positional
+//! CLI filter (e.g. `cargo bench --bench hotpath native`) selects a subset.
+
+use std::time::Instant;
+
+/// Bench runner with a name filter.
+pub struct Bench {
+    filter: Option<String>,
+    results: Vec<(String, Stats)>,
+}
+
+/// Timing statistics in nanoseconds.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub p50_ns: f64,
+    pub iters: usize,
+}
+
+impl Bench {
+    /// Parse the filter from argv (ignores cargo's --bench flag etc.).
+    pub fn from_args() -> Self {
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with('-'))
+            .filter(|a| !a.is_empty());
+        Bench {
+            filter,
+            results: Vec::new(),
+        }
+    }
+
+    /// Should this benchmark run under the current filter?
+    pub fn enabled(&self, name: &str) -> bool {
+        self.filter.as_deref().is_none_or(|f| name.contains(f))
+    }
+
+    /// Time `f`, auto-scaling iteration count to a ~0.5s window.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) {
+        if !self.enabled(name) {
+            return;
+        }
+        // Warmup + calibration.
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        let target = 0.5f64;
+        let iters = ((target / once) as usize).clamp(3, 10_000);
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64() * 1e9);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let stats = Stats {
+            mean_ns: samples.iter().sum::<f64>() / samples.len() as f64,
+            min_ns: samples[0],
+            p50_ns: samples[samples.len() / 2],
+            iters,
+        };
+        println!(
+            "{name:<42} mean {:>12}  min {:>12}  p50 {:>12}  (n={})",
+            fmt_ns(stats.mean_ns),
+            fmt_ns(stats.min_ns),
+            fmt_ns(stats.p50_ns),
+            stats.iters
+        );
+        self.results.push((name.to_string(), stats));
+    }
+
+    /// Print the footer; returns collected results for further use.
+    pub fn finish(self) -> Vec<(String, Stats)> {
+        println!("{} benchmark(s) run", self.results.len());
+        self.results
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}

@@ -1,0 +1,52 @@
+//! Figure-regeneration benchmarks: one entry per paper figure panel.
+//!
+//! Each benchmark runs the corresponding experiment end to end (environment
+//! build + Monte-Carlo + aggregation + evaluation) at a reduced scale so
+//! `cargo bench --bench figures` completes in minutes; pass a filter to run
+//! one panel (`cargo bench --bench figures fig3a`). The full-scale curves
+//! are produced by the `pao-fed` binary (`pao-fed all`).
+
+mod bench_harness;
+
+use bench_harness::Bench;
+use pao_fed::experiments::{self, BackendKind, ExperimentCtx};
+
+fn quick_ctx(id: &str) -> ExperimentCtx {
+    ExperimentCtx {
+        mc: 1,
+        seed: 2023,
+        backend: BackendKind::Native,
+        outdir: std::env::temp_dir().join("pao_fed_bench_results"),
+        iters: Some(400),
+        clients: Some(64),
+        quiet: true,
+    }
+    .tagged(id)
+}
+
+trait Tag {
+    fn tagged(self, id: &str) -> Self;
+}
+
+impl Tag for ExperimentCtx {
+    fn tagged(mut self, id: &str) -> Self {
+        self.outdir = self.outdir.join(id);
+        self
+    }
+}
+
+fn main() {
+    let mut b = Bench::from_args();
+    for &id in experiments::ALL {
+        let name = format!("figure/{id}");
+        if !b.enabled(&name) {
+            continue;
+        }
+        let ctx = quick_ctx(id);
+        b.bench(&name, || {
+            experiments::run(id, &ctx).expect(id);
+        });
+    }
+    b.finish();
+    std::fs::remove_dir_all(std::env::temp_dir().join("pao_fed_bench_results")).ok();
+}

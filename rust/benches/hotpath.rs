@@ -1,0 +1,145 @@
+//! Hot-path microbenchmarks: every component on the per-iteration critical
+//! path at the paper's scale (K = 256, D = 200, L = 4), plus the XLA-vs-
+//! native backend ablation. Used by the EXPERIMENTS.md §Perf log.
+//!
+//! Run: `cargo bench --bench hotpath [filter]`
+
+mod bench_harness;
+
+use bench_harness::Bench;
+use pao_fed::fl::backend::{ComputeBackend, NativeBackend, StepArgs};
+use pao_fed::fl::selection::{ScheduleKind, SelectionSchedule};
+use pao_fed::fl::server::{AggregationMode, AlphaSchedule, Server, Update};
+use pao_fed::metrics::mse_test;
+use pao_fed::rff::RffSpace;
+use pao_fed::runtime::{artifact_dir, XlaBackend};
+use pao_fed::util::rng::Pcg32;
+
+const K: usize = 256;
+const D: usize = 200;
+const L: usize = 4;
+const T: usize = 500;
+
+struct Fixture {
+    w_locals: Vec<f32>,
+    w_global: Vec<f32>,
+    recv_mask: Vec<f32>,
+    x: Vec<f32>,
+    y: Vec<f32>,
+    gate: Vec<f32>,
+    active: Vec<usize>,
+}
+
+fn fixture(rng: &mut Pcg32) -> Fixture {
+    // ~60% of clients active (paper's average data-arrival rate).
+    let gate: Vec<f32> = (0..K)
+        .map(|_| if rng.bernoulli(0.6) { 1.0 } else { 0.0 })
+        .collect();
+    let active: Vec<usize> = (0..K).filter(|&c| gate[c] != 0.0).collect();
+    let mut recv_mask = vec![0.0f32; K * D];
+    let sched = SelectionSchedule::new(ScheduleKind::Uncoordinated, D, 4, 0);
+    for &c in active.iter().take(20) {
+        sched.recv(c, 17).fill_mask(&mut recv_mask[c * D..(c + 1) * D]);
+    }
+    Fixture {
+        w_locals: (0..K * D).map(|_| rng.gaussian() as f32).collect(),
+        w_global: (0..D).map(|_| rng.gaussian() as f32).collect(),
+        recv_mask,
+        x: (0..K * L).map(|_| rng.gaussian() as f32).collect(),
+        y: (0..K).map(|_| rng.gaussian() as f32).collect(),
+        gate,
+        active,
+    }
+}
+
+fn main() {
+    let mut b = Bench::from_args();
+    let mut rng = Pcg32::new(99, 0);
+    let rff = RffSpace::sample(L, D, 1.0, &mut rng);
+    let mut native = NativeBackend::new(rff.clone());
+    let mut fx = fixture(&mut rng);
+
+    // --- L3/L1 client-step backends ---------------------------------------
+    b.bench("client_step/native_k256_d200", || {
+        native
+            .client_step(StepArgs {
+                w_locals: &mut fx.w_locals,
+                w_global: &fx.w_global,
+                recv_mask: &fx.recv_mask,
+                x: &fx.x,
+                y: &fx.y,
+                gate: &fx.gate,
+                mu: 0.4,
+                active: Some(&fx.active),
+            })
+            .unwrap();
+    });
+
+    if artifact_dir().join("manifest.json").exists() {
+        let mut xla = XlaBackend::new(&artifact_dir(), K, rff.clone()).expect("artifacts");
+        b.bench("client_step/xla_k256_d200", || {
+            xla.client_step(StepArgs {
+                w_locals: &mut fx.w_locals,
+                w_global: &fx.w_global,
+                recv_mask: &fx.recv_mask,
+                x: &fx.x,
+                y: &fx.y,
+                gate: &fx.gate,
+                mu: 0.4,
+                active: None,
+            })
+            .unwrap();
+        });
+    } else {
+        eprintln!("(skipping xla benches: run `make artifacts`)");
+    }
+
+    // --- RFF featurization --------------------------------------------------
+    let xt: Vec<f32> = (0..T * L).map(|_| rng.gaussian() as f32).collect();
+    b.bench("rff/featurize_t500", || {
+        std::hint::black_box(rff.features_batch(&xt));
+    });
+
+    // --- Evaluation -----------------------------------------------------------
+    let z_test = rff.features_batch(&xt);
+    let y_test: Vec<f32> = (0..T).map(|_| rng.gaussian() as f32).collect();
+    b.bench("metrics/eval_mse_t500_d200", || {
+        std::hint::black_box(mse_test(&fx.w_global, &z_test, &y_test));
+    });
+
+    // --- Server aggregation (eq. 15) -------------------------------------------
+    let sched = SelectionSchedule::new(ScheduleKind::Uncoordinated, D, 4, 0);
+    let updates: Vec<Update> = (0..32)
+        .map(|i| {
+            let coords = sched.send(i, 100 - (i % 5), true);
+            let mut values = Vec::with_capacity(coords.len());
+            coords.for_each(|j| values.push(j as f32 * 0.01));
+            Update {
+                client: i,
+                sent_iter: 100 - (i % 5),
+                coords,
+                values,
+            }
+        })
+        .collect();
+    let mut server = Server::new(
+        D,
+        AggregationMode::DeviationBuckets {
+            alpha: AlphaSchedule::Powers(0.2),
+            l_max: 10,
+            most_recent_wins: true,
+        },
+    );
+    b.bench("server/aggregate_32_updates", || {
+        server.aggregate(100, &updates);
+    });
+
+    // --- Selection schedule ------------------------------------------------------
+    let mut row = vec![0.0f32; D];
+    b.bench("selection/mask_fill", || {
+        sched.recv(37, 1234).fill_mask(&mut row);
+        std::hint::black_box(&row);
+    });
+
+    b.finish();
+}

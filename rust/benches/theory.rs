@@ -1,0 +1,46 @@
+//! Theory-machinery benchmarks: the Section-IV pipeline components -
+//! lambda_max estimation, sampled Kronecker lifts, and the eq. (38) LU
+//! solve - at validation scale.
+//!
+//! Run: `cargo bench --bench theory [filter]`
+
+mod bench_harness;
+
+use bench_harness::Bench;
+use pao_fed::rff::RffSpace;
+use pao_fed::theory::bounds::{correlation_rff, lambda_max_rff, uniform_input_sampler};
+use pao_fed::theory::extended::{ExtendedModel, TheoryConfig};
+use pao_fed::theory::msd::steady_state_msd;
+use pao_fed::util::rng::Pcg32;
+
+fn main() {
+    let mut b = Bench::from_args();
+    let cfg = TheoryConfig {
+        k: 2,
+        d: 4,
+        m: 2,
+        l_max: 1,
+        probs: vec![0.6, 0.3],
+        delta: 0.2,
+        alphas: vec![1.0, 0.2],
+        noise_var: vec![1e-3, 1e-3],
+    };
+    let mut rng = Pcg32::new(5, 0);
+    let rff200 = RffSpace::sample(4, 200, 1.0, &mut rng);
+    let rff4 = RffSpace::sample(2, 4, 1.0, &mut rng);
+
+    b.bench("theory/lambda_max_d200", || {
+        std::hint::black_box(lambda_max_rff(&rff200, 2000, uniform_input_sampler(1)));
+    });
+
+    let r = correlation_rff(&rff4, 4000, uniform_input_sampler(2));
+    let ext = ExtendedModel::new(&cfg);
+    b.bench("theory/q_a_sampled_200", || {
+        std::hint::black_box(ext.q_a(200, 3));
+    });
+    b.bench("theory/steady_state_msd_eq38", || {
+        std::hint::black_box(steady_state_msd(&cfg, 0.15, &r, 200, 4).unwrap());
+    });
+
+    b.finish();
+}

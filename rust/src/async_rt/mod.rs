@@ -1,0 +1,25 @@
+//! Asynchronous deployment runtime: the production shape of the federation.
+//!
+//! Where `fl::engine` is a single-threaded discrete-event simulator (used
+//! for Monte-Carlo reproduction of the paper's figures), this module runs
+//! the *same protocol* over real concurrency: one OS thread per client plus
+//! a server thread, communicating over channels through a delay-injecting
+//! network simulator. No tokio exists in the offline crate set, so the
+//! runtime is built directly on `std::thread` + `std::sync::mpsc`.
+//!
+//! Topology per tick (= one federation iteration):
+//!
+//! ```text
+//!   server ----- Downlink{iter, portion of w} -----> client_k   (m of D)
+//!   client_k --- Uplink{sent_iter, S w_k} ---------> network    (m of D)
+//!   network  --- delivers at iter + delay ---------> server
+//! ```
+//!
+//! The server drives the clock and gates each tick on per-client acks so
+//! results stay deterministic and comparable with the discrete engine;
+//! uplinks still arrive asynchronously through the delay channel, exactly
+//! like the paper's `K_{n,l}` buckets.
+
+mod protocol;
+
+pub use protocol::{run_deployment, DeploymentConfig, DeploymentReport};

@@ -1,0 +1,355 @@
+//! Message protocol and thread orchestration for the deployment runtime.
+
+use crate::data::stream::FedStream;
+use crate::error::{Error, Result};
+use crate::fl::delay::{DelayModel, DelayQueue};
+use crate::fl::engine::AlgoConfig;
+use crate::fl::participation::Participation;
+use crate::fl::selection::{ScheduleKind, SelectionSchedule};
+use crate::fl::server::{AggregationMode, Server, Update};
+use crate::metrics::{mse_test, to_db, CommStats};
+use crate::rff::RffSpace;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+/// Server -> client message.
+enum Downlink {
+    /// Start of iteration `iter`; `portion` is `Some((coords order, values))`
+    /// when the client was selected to participate.
+    Tick {
+        iter: usize,
+        portion: Option<(crate::fl::selection::Coords, Vec<f32>)>,
+    },
+    /// End of run.
+    Shutdown,
+}
+
+/// Client -> server message.
+enum UplinkMsg {
+    /// Tick processed; `upload` is `Some` when the client participated.
+    Ack {
+        client: usize,
+        upload: Option<Update>,
+        /// Local-learning steps the client performed this tick (0 or 1).
+        learned: u32,
+    },
+}
+
+/// Deployment parameters.
+pub struct DeploymentConfig {
+    /// Algorithm preset (same struct the discrete engine consumes).
+    pub algo: AlgoConfig,
+    /// Per-tick wall-clock pacing; `Duration::ZERO` = free-running.
+    pub tick: Duration,
+    /// Seed for availability / delay draws.
+    pub env_seed: u64,
+    /// Curve sampling period.
+    pub eval_every: usize,
+}
+
+/// What the deployment run produced.
+#[derive(Debug, Clone)]
+pub struct DeploymentReport {
+    pub iters: Vec<usize>,
+    pub mse_db: Vec<f64>,
+    pub comm: CommStats,
+    pub final_w: Vec<f32>,
+    /// Total local-learning steps across all clients.
+    pub local_steps: u64,
+    /// Threads spawned (K clients).
+    pub n_client_threads: usize,
+}
+
+struct ClientCtx {
+    id: usize,
+    rff: Arc<RffSpace>,
+    stream: Arc<FedStream>,
+    schedule: SelectionSchedule,
+    algo: AlgoConfig,
+    rx: Receiver<Downlink>,
+    tx: Sender<UplinkMsg>,
+}
+
+/// Client thread: owns its local model, learns on its stream, exchanges
+/// portions with the server (eqs. 10-13 on the client side).
+fn client_main(ctx: ClientCtx) {
+    let d = ctx.rff.d;
+    let mut w = vec![0.0f32; d];
+    let mut z = vec![0.0f32; d];
+    loop {
+        let msg = match ctx.rx.recv() {
+            Ok(m) => m,
+            Err(_) => return, // server gone
+        };
+        let (iter, portion) = match msg {
+            Downlink::Shutdown => return,
+            Downlink::Tick { iter, portion } => (iter, portion),
+        };
+        let participating = portion.is_some();
+        // Masked receive (eq. 10 first term / full overwrite for M = I).
+        if let Some((coords, values)) = portion {
+            let mut vi = 0;
+            coords.for_each(|j| {
+                w[j] = values[vi];
+                vi += 1;
+            });
+        }
+        // Local learning on this tick's sample (eq. 10 / 12).
+        let mut learned = 0u32;
+        if ctx.stream.has_data(ctx.id, iter)
+            && (participating || ctx.algo.autonomous_updates)
+        {
+            let x = ctx.stream.x(ctx.id, iter);
+            let y = ctx.stream.y(ctx.id, iter);
+            ctx.rff.features_into(x, &mut z);
+            let dot: f32 = w.iter().zip(&z).map(|(a, b)| a * b).sum();
+            let e = y - dot;
+            let step = ctx.algo.mu * e;
+            for (wj, zj) in w.iter_mut().zip(&z) {
+                *wj += step * zj;
+            }
+            learned = 1;
+        }
+        // Uplink (S_{k,n} w_{k,n+1}) when participating.
+        let upload = participating.then(|| {
+            let coords = if ctx.algo.schedule == ScheduleKind::Full {
+                crate::fl::selection::Coords::Full { d }
+            } else {
+                ctx.schedule.send(ctx.id, iter, ctx.algo.refine_before_share)
+            };
+            let mut values = Vec::with_capacity(coords.len());
+            coords.for_each(|j| values.push(w[j]));
+            Update {
+                client: ctx.id,
+                sent_iter: iter,
+                coords,
+                values,
+            }
+        });
+        if ctx
+            .tx
+            .send(UplinkMsg::Ack {
+                client: ctx.id,
+                upload,
+                learned,
+            })
+            .is_err()
+        {
+            return;
+        }
+    }
+}
+
+/// Run a full deployment: spawns K client threads + the delay network, runs
+/// `stream.n_iters` ticks, returns the learning curve and traffic stats.
+pub fn run_deployment(
+    stream: FedStream,
+    rff: RffSpace,
+    participation: Participation,
+    delay: DelayModel,
+    cfg: DeploymentConfig,
+) -> Result<DeploymentReport> {
+    let k = stream.n_clients;
+    let n_iters = stream.n_iters;
+    let d = rff.d;
+    let algo = &cfg.algo;
+    if !matches!(algo.aggregation, AggregationMode::DeviationBuckets { .. })
+        && !matches!(algo.aggregation, AggregationMode::PlainAverage)
+    {
+        return Err(Error::Config("unsupported aggregation".into()));
+    }
+    let schedule = SelectionSchedule::new(algo.schedule, d, algo.m, cfg.env_seed);
+
+    // Test set featurized once (server side).
+    let z_test = rff.features_batch(&stream.test_x);
+    let test_y = stream.test_y.clone();
+
+    let stream = Arc::new(stream);
+    let rff = Arc::new(rff);
+    let participation = Arc::new(participation);
+
+    let (up_tx, up_rx) = channel::<UplinkMsg>();
+    let mut down_tx: Vec<Sender<Downlink>> = Vec::with_capacity(k);
+    let mut handles = Vec::with_capacity(k);
+    for id in 0..k {
+        let (tx, rx) = channel::<Downlink>();
+        down_tx.push(tx);
+        let ctx = ClientCtx {
+            id,
+            rff: rff.clone(),
+            stream: stream.clone(),
+            schedule: schedule.clone(),
+            algo: algo.clone(),
+            rx,
+            tx: up_tx.clone(),
+        };
+        handles.push(
+            thread::Builder::new()
+                .name(format!("pao-fed-client-{id}"))
+                .spawn(move || client_main(ctx))
+                .map_err(|e| Error::Config(format!("spawn failed: {e}")))?,
+        );
+    }
+    drop(up_tx);
+
+    let mut server = Server::new(d, algo.aggregation.clone());
+    let horizon = match delay {
+        DelayModel::None => 1,
+        DelayModel::Geometric { .. } => 64,
+        DelayModel::Staged { step, .. } => step * 12,
+    };
+    let mut queue: DelayQueue<Update> = DelayQueue::new(horizon);
+    let mut comm = CommStats::default();
+    let mut iters = Vec::new();
+    let mut mse_db = Vec::new();
+    let mut local_steps = 0u64;
+
+    for n in 0..n_iters {
+        // Participation decisions live on the server side of the protocol
+        // (it must know whom to downlink to); the trials are the same
+        // common-random-number streams the discrete engine uses.
+        let mut participants = Vec::new();
+        for c in 0..k {
+            if participation.is_available(cfg.env_seed, c, n, stream.has_data(c, n)) {
+                participants.push(c);
+            }
+        }
+        if let Some(cap) = algo.subsample {
+            // Blind server-side scheduling (same streams as the discrete
+            // engine): select among all K, keep the reachable intersection.
+            let mut rng = crate::util::rng::Pcg32::derive(cfg.env_seed, &[0x5e1ec7, n as u64]);
+            let selected = rng.sample_indices(k, cap.min(k));
+            let mut sel = vec![false; k];
+            for &c in &selected {
+                sel[c] = true;
+            }
+            participants.retain(|&c| sel[c]);
+        }
+        let is_participant: Vec<bool> = {
+            let mut v = vec![false; k];
+            for &c in &participants {
+                v[c] = true;
+            }
+            v
+        };
+
+        // Downlink.
+        for c in 0..k {
+            let portion = if is_participant[c] {
+                let coords = if algo.full_downlink || algo.schedule == ScheduleKind::Full {
+                    crate::fl::selection::Coords::Full { d }
+                } else {
+                    schedule.recv(c, n)
+                };
+                let mut values = Vec::with_capacity(coords.len());
+                coords.for_each(|j| values.push(server.w[j]));
+                comm.downlink_scalars += values.len() as u64;
+                comm.downlink_msgs += 1;
+                Some((coords, values))
+            } else {
+                None
+            };
+            down_tx[c]
+                .send(Downlink::Tick { iter: n, portion })
+                .map_err(|_| Error::Config(format!("client {c} died")))?;
+        }
+
+        // Collect acks; sort by client id before filing uploads so the
+        // aggregation's floating-point accumulation order is independent
+        // of OS thread scheduling (the deployment must reproduce the
+        // discrete engine bit for bit).
+        let mut acks = Vec::with_capacity(k);
+        for _ in 0..k {
+            match up_rx.recv() {
+                Ok(UplinkMsg::Ack {
+                    client,
+                    upload,
+                    learned,
+                }) => acks.push((client, upload, learned)),
+                Err(_) => return Err(Error::Config("client channel closed".into())),
+            }
+        }
+        acks.sort_by_key(|(c, _, _)| *c);
+        for (client, upload, learned) in acks {
+            local_steps += learned as u64;
+            if let Some(u) = upload {
+                comm.uplink_scalars += u.values.len() as u64;
+                comm.uplink_msgs += 1;
+                let dl = delay.sample(cfg.env_seed, client, n);
+                queue.push(n + dl, u);
+            }
+        }
+
+        // Aggregate arrivals.
+        let arrivals = queue.drain(n);
+        server.aggregate(n, &arrivals);
+
+        if n % cfg.eval_every == 0 || n + 1 == n_iters {
+            iters.push(n);
+            mse_db.push(to_db(mse_test(&server.w, &z_test, &test_y)));
+        }
+        if !cfg.tick.is_zero() {
+            thread::sleep(cfg.tick);
+        }
+    }
+
+    for tx in &down_tx {
+        let _ = tx.send(Downlink::Shutdown);
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+
+    Ok(DeploymentReport {
+        iters,
+        mse_db,
+        comm,
+        final_w: server.w,
+        local_steps,
+        n_client_threads: k,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::stream::StreamConfig;
+    use crate::data::synthetic::Eq39Source;
+    use crate::fl::algorithms::{self, Variant};
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn deployment_learns_and_counts_traffic() {
+        let cfg = StreamConfig {
+            n_clients: 8,
+            n_iters: 200,
+            data_group_samples: vec![50, 100, 150, 200],
+            test_size: 64,
+        };
+        let seed = 3;
+        let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+        let mut rng = Pcg32::derive(seed, &[0xabc]);
+        let rff = RffSpace::sample(4, 32, 1.0, &mut rng);
+        let report = run_deployment(
+            stream,
+            rff,
+            Participation::uniform(8, 0.5),
+            DelayModel::Geometric { delta: 0.2 },
+            DeploymentConfig {
+                algo: algorithms::build(Variant::PaoFedU2, 0.4, 4, 10, 20),
+                tick: Duration::ZERO,
+                env_seed: seed,
+                eval_every: 20,
+            },
+        )
+        .unwrap();
+        assert_eq!(report.n_client_threads, 8);
+        let first = report.mse_db[0];
+        let last = *report.mse_db.last().unwrap();
+        assert!(last < first - 5.0, "no learning: {first} -> {last}");
+        assert_eq!(report.comm.uplink_scalars, 4 * report.comm.uplink_msgs);
+        assert!(report.local_steps > 0);
+    }
+}

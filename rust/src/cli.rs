@@ -1,0 +1,109 @@
+//! Minimal CLI argument parser (no `clap` in the offline crate set).
+//!
+//! Grammar: `pao-fed <command> [--flag value] [--switch]`. Flags may appear
+//! in any order; unknown flags are an error so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Positional command (e.g. "fig2a").
+    pub command: Option<String>,
+    /// `--key value` pairs; boolean switches map to "true".
+    flags: BTreeMap<String, String>,
+}
+
+/// Known boolean switches (take no value).
+const SWITCHES: &[&str] = &["help", "xla", "quiet", "no-plot"];
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut iter = it.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if SWITCHES.contains(&name) {
+                    args.flags.insert(name.to_string(), "true".to_string());
+                } else {
+                    let v = iter
+                        .next()
+                        .ok_or_else(|| format!("flag --{name} expects a value"))?;
+                    args.flags.insert(name.to_string(), v);
+                }
+            } else if args.command.is_none() {
+                args.command = Some(a);
+            } else {
+                return Err(format!("unexpected positional argument {a:?}"));
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// String flag.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed flag with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("flag --{key}: cannot parse {v:?}")),
+        }
+    }
+
+    /// Boolean switch.
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(s: &str) -> Result<Args, String> {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let a = p("fig2a --mc 5 --seed 42 --xla").unwrap();
+        assert_eq!(a.command.as_deref(), Some("fig2a"));
+        assert_eq!(a.get_parse("mc", 1usize).unwrap(), 5);
+        assert_eq!(a.get_parse("seed", 0u64).unwrap(), 42);
+        assert!(a.has("xla"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = p("fig4").unwrap();
+        assert_eq!(a.get_parse("mc", 3usize).unwrap(), 3);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(p("run --mc").is_err());
+    }
+
+    #[test]
+    fn double_positional_is_error() {
+        assert!(p("a b").is_err());
+    }
+
+    #[test]
+    fn bad_parse_is_error() {
+        let a = p("x --mc abc").unwrap();
+        assert!(a.get_parse("mc", 0usize).is_err());
+    }
+}

@@ -1,0 +1,158 @@
+//! Non-stationary data sources: the "underlying model change" scenario the
+//! paper motivates in Sections II-A and II-D (RFF is "resilient to model
+//! change"; "uncoordinated partial-sharing is ideal when dealing with
+//! underlying model changes, as the server's model uniformly steers
+//! towards its new steady-state value").
+//!
+//! Two change models:
+//! * `AbruptSwitch` — the regression function switches between eq. (39)
+//!   and a rotated variant at a given iteration (sensor recalibration,
+//!   environment regime change);
+//! * `SlowRotation` — the function interpolates continuously between the
+//!   two over a window (seasonal drift).
+
+use super::synthetic::Eq39Source;
+use super::{DataSource, Sample};
+use crate::util::rng::Pcg32;
+
+/// The "after" regression function: eq. (39) with permuted roles and
+/// shifted nonlinearities - same smoothness class, different optimum.
+pub fn f_after(x: &[f32]) -> f32 {
+    let (x1, x2, x3, x4) = (x[0] as f64, x[1] as f64, x[2] as f64, x[3] as f64);
+    let t1 = (x3 * x3 + (std::f64::consts::PI * x2).cos().powi(2)).sqrt();
+    let t2 = 0.3 + 0.6 * (-x4 * x4).exp() * x1;
+    (t1 + t2) as f32
+}
+
+/// How the underlying model changes over the stream.
+#[derive(Clone, Copy, Debug)]
+pub enum ChangeKind {
+    /// Hard switch at federation iteration `at`.
+    AbruptSwitch { at: usize },
+    /// Linear interpolation between the functions over iterations
+    /// [start, end].
+    SlowRotation { start: usize, end: usize },
+}
+
+/// Drifting eq.-(39)-family source.
+pub struct DriftingSource {
+    rng: Pcg32,
+    kind: ChangeKind,
+    /// Current federation iteration (advanced by `set_time`; falls back to
+    /// counting draws when used outside a `FedStream`).
+    t: usize,
+    saw_set_time: bool,
+    noise_std: f64,
+}
+
+impl DriftingSource {
+    /// Seeded drifting source.
+    pub fn new(seed: u64, kind: ChangeKind) -> Self {
+        DriftingSource {
+            rng: Pcg32::derive(seed, &[0xd21f7]),
+            kind,
+            t: 0,
+            saw_set_time: false,
+            noise_std: (1e-3f64).sqrt(),
+        }
+    }
+
+    /// Mixing weight of the "after" function at draw t.
+    fn lambda(&self) -> f64 {
+        match self.kind {
+            ChangeKind::AbruptSwitch { at } => {
+                if self.t >= at {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            ChangeKind::SlowRotation { start, end } => {
+                if self.t <= start {
+                    0.0
+                } else if self.t >= end {
+                    1.0
+                } else {
+                    (self.t - start) as f64 / (end - start).max(1) as f64
+                }
+            }
+        }
+    }
+
+    /// The current (noiseless) regression function.
+    pub fn f_now(&self, x: &[f32]) -> f32 {
+        let lam = self.lambda() as f32;
+        (1.0 - lam) * Eq39Source::f(x) + lam * f_after(x)
+    }
+}
+
+impl DataSource for DriftingSource {
+    fn dim(&self) -> usize {
+        4
+    }
+
+    fn draw(&mut self) -> Sample {
+        let x: Vec<f32> = (0..4)
+            .map(|_| self.rng.uniform_in(-1.0, 1.0) as f32)
+            .collect();
+        let y = self.f_now(&x) + self.rng.normal(0.0, self.noise_std) as f32;
+        if !self.saw_set_time {
+            self.t += 1;
+        }
+        Sample { x, y }
+    }
+
+    fn name(&self) -> &str {
+        "drifting-eq39"
+    }
+
+    fn set_time(&mut self, iter: usize) {
+        self.saw_set_time = true;
+        self.t = iter;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn abrupt_switch_changes_function() {
+        let src = DriftingSource::new(1, ChangeKind::AbruptSwitch { at: 10 });
+        let x = [0.5f32, -0.3, 0.7, 0.1];
+        let before = Eq39Source::f(&x);
+        let after = f_after(&x);
+        assert!((before - after).abs() > 0.05, "functions must differ");
+        // Mixing weight flips at the switch point.
+        let mut s = src;
+        for _ in 0..10 {
+            assert_eq!(s.lambda(), 0.0);
+            s.draw();
+        }
+        assert_eq!(s.lambda(), 1.0);
+    }
+
+    #[test]
+    fn slow_rotation_interpolates() {
+        let mut s = DriftingSource::new(2, ChangeKind::SlowRotation { start: 0, end: 100 });
+        let mut last = 0.0;
+        for _ in 0..100 {
+            let lam = s.lambda();
+            assert!(lam >= last, "lambda must be monotone");
+            last = lam;
+            s.draw();
+        }
+        assert!((s.lambda() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut a = DriftingSource::new(3, ChangeKind::AbruptSwitch { at: 5 });
+        let mut b = DriftingSource::new(3, ChangeKind::AbruptSwitch { at: 5 });
+        for _ in 0..20 {
+            let (sa, sb) = (a.draw(), b.draw());
+            assert_eq!(sa.x, sb.x);
+            assert_eq!(sa.y, sb.y);
+        }
+    }
+}

@@ -1,0 +1,34 @@
+//! Data substrate: streaming nonlinear-regression sources.
+//!
+//! * `synthetic` — the paper's eq. (39) benchmark function (Section V-A);
+//! * `calcofi` — the CalCOFI *bottle* salinity task (Section V-D): a CSV
+//!   loader for the real dataset plus a faithful synthetic substitute (see
+//!   DESIGN.md §6 Substitutions);
+//! * `stream` — the federation's imbalanced streaming schedule: data groups,
+//!   per-iteration sample arrivals, and test-set carving.
+
+pub mod calcofi;
+pub mod drift;
+pub mod stream;
+pub mod synthetic;
+
+/// A labelled regression sample (raw space, pre-RFF).
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub x: Vec<f32>,
+    pub y: f32,
+}
+
+/// Any source that can draw samples of dimension `dim()`.
+pub trait DataSource {
+    /// Raw input dimension L.
+    fn dim(&self) -> usize;
+    /// Draw the next sample (sources are seeded; draws are deterministic).
+    fn draw(&mut self) -> Sample;
+    /// Short human-readable name for logs/results.
+    fn name(&self) -> &str;
+    /// Inform the source of the federation iteration about to be sampled.
+    /// Stationary sources ignore this; drifting sources (`data::drift`)
+    /// key their change schedule on it.
+    fn set_time(&mut self, _iter: usize) {}
+}

@@ -1,0 +1,206 @@
+//! Federated streaming schedule: who receives which sample when.
+//!
+//! The paper's setup (Section V-A): K clients split into data groups whose
+//! progressively-available training sets hold {500, 1000, 1500, 2000}
+//! samples over N = 2000 iterations, i.e. a client of group g receives a
+//! fresh sample at any iteration with probability `samples_g / N` (at most
+//! one sample per iteration). The whole environment realization - arrival
+//! pattern and sample values, plus the held-out test set - is materialized
+//! once per Monte-Carlo run so that *every algorithm variant sees the
+//! identical stream* (common random numbers, required for the paper's
+//! curve comparisons).
+
+use super::DataSource;
+use crate::util::rng::Pcg32;
+
+/// Configuration of the streaming schedule.
+#[derive(Clone, Debug)]
+pub struct StreamConfig {
+    /// Number of clients K.
+    pub n_clients: usize,
+    /// Number of federation iterations N.
+    pub n_iters: usize,
+    /// Per-data-group total sample budgets (clients are split into
+    /// `data_group_samples.len()` equal contiguous groups).
+    pub data_group_samples: Vec<usize>,
+    /// Held-out test-set size T.
+    pub test_size: usize,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig {
+            n_clients: 256,
+            n_iters: 2000,
+            data_group_samples: vec![500, 1000, 1500, 2000],
+            test_size: 500,
+        }
+    }
+}
+
+/// One materialized environment realization of the data stream.
+pub struct FedStream {
+    /// K.
+    pub n_clients: usize,
+    /// N.
+    pub n_iters: usize,
+    /// Raw input dimension L.
+    pub dim: usize,
+    /// Flat inputs [K * N * L]; slot (k, n) is meaningful iff `present`.
+    xs: Vec<f32>,
+    /// Flat outputs [K * N].
+    ys: Vec<f32>,
+    /// Arrival indicator [K * N].
+    present: Vec<bool>,
+    /// Test inputs [T * L].
+    pub test_x: Vec<f32>,
+    /// Test outputs [T].
+    pub test_y: Vec<f32>,
+}
+
+impl FedStream {
+    /// Materialize a stream from `source` under `cfg`, seeded by `seed`.
+    pub fn build(cfg: &StreamConfig, source: &mut dyn DataSource, seed: u64) -> Self {
+        let (k, n, l) = (cfg.n_clients, cfg.n_iters, source.dim());
+        let mut rng = Pcg32::derive(seed, &[0x57e4]);
+        let groups = cfg.data_group_samples.len().max(1);
+        let mut xs = vec![0.0f32; k * n * l];
+        let mut ys = vec![0.0f32; k * n];
+        let mut present = vec![false; k * n];
+        // Iteration-major so non-stationary sources see federation time in
+        // order (`DataSource::set_time`).
+        for it in 0..n {
+            source.set_time(it);
+            for client in 0..k {
+                let g = data_group_of(client, k, groups);
+                let q = cfg.data_group_samples[g] as f64 / n as f64;
+                if rng.bernoulli(q.min(1.0)) {
+                    let s = source.draw();
+                    let base = (client * n + it) * l;
+                    xs[base..base + l].copy_from_slice(&s.x);
+                    ys[client * n + it] = s.y;
+                    present[client * n + it] = true;
+                }
+            }
+        }
+        let mut test_x = Vec::with_capacity(cfg.test_size * l);
+        let mut test_y = Vec::with_capacity(cfg.test_size);
+        for _ in 0..cfg.test_size {
+            let s = source.draw();
+            test_x.extend_from_slice(&s.x);
+            test_y.push(s.y);
+        }
+        FedStream {
+            n_clients: k,
+            n_iters: n,
+            dim: l,
+            xs,
+            ys,
+            present,
+            test_x,
+            test_y,
+        }
+    }
+
+    /// Does client `k` receive a new sample at iteration `n`?
+    #[inline]
+    pub fn has_data(&self, k: usize, n: usize) -> bool {
+        self.present[k * self.n_iters + n]
+    }
+
+    /// Input of the (k, n) sample (valid only when `has_data`).
+    #[inline]
+    pub fn x(&self, k: usize, n: usize) -> &[f32] {
+        let base = (k * self.n_iters + n) * self.dim;
+        &self.xs[base..base + self.dim]
+    }
+
+    /// Output of the (k, n) sample (valid only when `has_data`).
+    #[inline]
+    pub fn y(&self, k: usize, n: usize) -> f32 {
+        self.ys[k * self.n_iters + n]
+    }
+
+    /// Total number of arrived samples (diagnostics).
+    pub fn total_samples(&self) -> usize {
+        self.present.iter().filter(|&&p| p).count()
+    }
+}
+
+/// Contiguous-block data-group assignment: the first K/G clients are group
+/// 0, etc. (paper: "the clients are separated into 4 data groups").
+#[inline]
+pub fn data_group_of(client: usize, n_clients: usize, groups: usize) -> usize {
+    (client * groups / n_clients.max(1)).min(groups - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::Eq39Source;
+
+    fn small_cfg() -> StreamConfig {
+        StreamConfig {
+            n_clients: 16,
+            n_iters: 400,
+            data_group_samples: vec![100, 200, 300, 400],
+            test_size: 50,
+        }
+    }
+
+    #[test]
+    fn group_assignment_blocks() {
+        assert_eq!(data_group_of(0, 256, 4), 0);
+        assert_eq!(data_group_of(63, 256, 4), 0);
+        assert_eq!(data_group_of(64, 256, 4), 1);
+        assert_eq!(data_group_of(255, 256, 4), 3);
+    }
+
+    #[test]
+    fn arrival_rates_match_budgets() {
+        let cfg = small_cfg();
+        let mut src = Eq39Source::new(3);
+        let stream = FedStream::build(&cfg, &mut src, 11);
+        // Group 0 (clients 0..4): expected 100/400 = 0.25 arrival rate.
+        for (g, &budget) in cfg.data_group_samples.iter().enumerate() {
+            let clients: Vec<usize> = (0..16).filter(|&c| data_group_of(c, 16, 4) == g).collect();
+            let got: usize = clients
+                .iter()
+                .map(|&c| (0..400).filter(|&n| stream.has_data(c, n)).count())
+                .sum();
+            // Budgets are per client: each group-g client receives
+            // budget_g samples in expectation over the N iterations.
+            let expect = budget as f64 * clients.len() as f64;
+            let tol = 0.25 * expect;
+            assert!(
+                (got as f64 - expect).abs() < tol,
+                "group {g}: got {got}, expect ~{expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_environment() {
+        let cfg = small_cfg();
+        let a = FedStream::build(&cfg, &mut Eq39Source::new(3), 7);
+        let b = FedStream::build(&cfg, &mut Eq39Source::new(3), 7);
+        for k in 0..16 {
+            for n in 0..400 {
+                assert_eq!(a.has_data(k, n), b.has_data(k, n));
+                if a.has_data(k, n) {
+                    assert_eq!(a.x(k, n), b.x(k, n));
+                    assert_eq!(a.y(k, n), b.y(k, n));
+                }
+            }
+        }
+        assert_eq!(a.test_x, b.test_x);
+    }
+
+    #[test]
+    fn test_set_sized() {
+        let cfg = small_cfg();
+        let s = FedStream::build(&cfg, &mut Eq39Source::new(1), 2);
+        assert_eq!(s.test_y.len(), 50);
+        assert_eq!(s.test_x.len(), 50 * 4);
+    }
+}

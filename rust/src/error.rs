@@ -1,0 +1,35 @@
+//! Library-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by the PAO-Fed library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Underlying XLA/PJRT failure (compile, execute, literal marshalling).
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+    /// Artifact directory / manifest problems.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+    /// Configuration is inconsistent (e.g. m > D, K mismatch).
+    #[error("config error: {0}")]
+    Config(String),
+    /// Data loading / parsing failures.
+    #[error("data error: {0}")]
+    Data(String),
+    /// I/O wrapper.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    /// Numerical failure (singular matrix, divergence, ...).
+    #[error("numerical error: {0}")]
+    Numerical(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,398 @@
+//! Shared experiment machinery: the paper's environment presets, the
+//! Monte-Carlo runner, and result serialization.
+
+use crate::data::stream::{FedStream, StreamConfig};
+use crate::data::synthetic::Eq39Source;
+use crate::data::DataSource;
+use crate::error::Result;
+use crate::fl::backend::{ComputeBackend, NativeBackend};
+use crate::fl::delay::DelayModel;
+use crate::fl::engine::{self, AlgoConfig, Environment, RunResult};
+use crate::fl::participation::Participation;
+use crate::metrics::{to_db, CommStats};
+use crate::rff::RffSpace;
+use crate::util::json::{arr_f64, obj, Json};
+use crate::util::rng::Pcg32;
+use crate::util::{plot, write_csv};
+use std::path::PathBuf;
+
+/// Which compute backend serves the client step.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BackendKind {
+    /// Pure-rust reference implementation (default for Monte-Carlo sweeps).
+    Native,
+    /// AOT-compiled XLA executable via PJRT (requires `make artifacts` and a
+    /// matching (K, D, L) artifact).
+    Xla,
+}
+
+/// Global experiment options (from the CLI).
+#[derive(Clone, Debug)]
+pub struct ExperimentCtx {
+    /// Monte-Carlo runs per curve.
+    pub mc: usize,
+    /// Base seed.
+    pub seed: u64,
+    /// Backend for the batched client step.
+    pub backend: BackendKind,
+    /// Output directory for CSV/JSON results.
+    pub outdir: PathBuf,
+    /// Override iteration count (None = paper default 2000).
+    pub iters: Option<usize>,
+    /// Override client count (None = paper default 256).
+    pub clients: Option<usize>,
+    /// Suppress ASCII charts.
+    pub quiet: bool,
+}
+
+impl Default for ExperimentCtx {
+    fn default() -> Self {
+        ExperimentCtx {
+            mc: 3,
+            seed: 2023,
+            backend: BackendKind::Native,
+            outdir: PathBuf::from("results"),
+            iters: None,
+            clients: None,
+            quiet: false,
+        }
+    }
+}
+
+/// The paper's environment description (Section V-A defaults).
+#[derive(Clone, Debug)]
+pub struct PaperEnv {
+    pub n_clients: usize,
+    pub n_iters: usize,
+    pub d: usize,
+    pub l: usize,
+    pub test_size: usize,
+    pub sigma: f64,
+    pub data_group_samples: Vec<usize>,
+    pub avail_probs: Vec<f64>,
+    /// Scale factor applied to every availability probability (Fig. 5(c)).
+    pub avail_scale: f64,
+    pub delay: DelayModel,
+    /// Ideal-environment toggle (Fig. 3(c) "0% stragglers"): full
+    /// availability and no delays.
+    pub ideal: bool,
+    /// Data source: eq. (39) synthetic or the CalCOFI task.
+    pub source: SourceKind,
+}
+
+/// Data-source selector.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SourceKind {
+    Eq39,
+    Calcofi,
+    /// Non-stationary eq.-(39) family with an abrupt function switch at
+    /// iteration `at` (the `track` extension experiment).
+    DriftSwitch { at: usize },
+}
+
+impl PaperEnv {
+    /// Section V-A synthetic benchmark defaults.
+    pub fn synth(ctx: &ExperimentCtx) -> Self {
+        let n_iters = ctx.iters.unwrap_or(2000);
+        let n_clients = ctx.clients.unwrap_or(256);
+        // Budgets scale with the horizon so arrival *rates* stay the
+        // paper's {0.25, 0.5, 0.75, 1.0} under --iters overrides.
+        let scale = n_iters as f64 / 2000.0;
+        PaperEnv {
+            n_clients,
+            n_iters,
+            d: 200,
+            l: 4,
+            test_size: 500,
+            sigma: 1.0,
+            data_group_samples: [500, 1000, 1500, 2000]
+                .iter()
+                .map(|&s| ((s as f64 * scale) as usize).max(1))
+                .collect(),
+            avail_probs: vec![0.25, 0.1, 0.025, 0.005],
+            avail_scale: 1.0,
+            delay: DelayModel::Geometric { delta: 0.2 },
+            ideal: false,
+            source: SourceKind::Eq39,
+        }
+    }
+
+    /// Section V-D CalCOFI environment (same asynchronous model, L = 6).
+    pub fn calcofi(ctx: &ExperimentCtx) -> Self {
+        PaperEnv {
+            l: crate::data::calcofi::CALCOFI_DIM,
+            source: SourceKind::Calcofi,
+            ..Self::synth(ctx)
+        }
+    }
+
+    fn make_source(&self, seed: u64) -> Box<dyn DataSource> {
+        match self.source {
+            SourceKind::Eq39 => Box::new(Eq39Source::new(seed)),
+            SourceKind::Calcofi => crate::data::calcofi::open(None, 80_000, seed),
+            SourceKind::DriftSwitch { at } => Box::new(
+                crate::data::drift::DriftingSource::new(
+                    seed,
+                    crate::data::drift::ChangeKind::AbruptSwitch { at },
+                ),
+            ),
+        }
+    }
+
+    /// Materialize one Monte-Carlo realization (environment + backend).
+    pub fn build(&self, seed: u64, backend_kind: BackendKind) -> Result<(Environment, Box<dyn ComputeBackend>)> {
+        let mut rng = Pcg32::derive(seed, &[0xe2f]);
+        let rff = RffSpace::sample(self.l, self.d, self.sigma, &mut rng);
+        let cfg = StreamConfig {
+            n_clients: self.n_clients,
+            n_iters: self.n_iters,
+            data_group_samples: self.data_group_samples.clone(),
+            test_size: self.test_size,
+        };
+        let mut src = self.make_source(seed);
+        let stream = FedStream::build(&cfg, src.as_mut(), seed);
+        let participation = if self.ideal {
+            Participation::always(self.n_clients)
+        } else {
+            Participation::grouped(self.n_clients, &self.avail_probs, self.data_group_samples.len())
+                .scaled(self.avail_scale)
+        };
+        let delay = if self.ideal { DelayModel::None } else { self.delay };
+        let mut backend: Box<dyn ComputeBackend> = match backend_kind {
+            BackendKind::Native => Box::new(NativeBackend::new(rff.clone())),
+            BackendKind::Xla => Box::new(crate::runtime::XlaBackend::new(
+                &crate::runtime::artifact_dir(),
+                self.n_clients,
+                rff.clone(),
+            )?),
+        };
+        let env = Environment::new(stream, rff, participation, delay, seed, backend.as_mut())?;
+        Ok((env, backend))
+    }
+}
+
+/// One labelled averaged curve.
+#[derive(Clone, Debug)]
+pub struct Curve {
+    pub label: String,
+    pub iters: Vec<usize>,
+    /// Monte-Carlo-averaged MSE (linear), converted to dB on output.
+    pub mse: Vec<f64>,
+    pub comm: CommStats,
+    /// Final linear MSE (avg).
+    pub final_mse: f64,
+}
+
+impl Curve {
+    /// dB view of the averaged curve (eq. 40 then 10log10).
+    pub fn db(&self) -> Vec<f64> {
+        self.mse.iter().map(|&m| to_db(m)).collect()
+    }
+
+    /// Final dB value.
+    pub fn final_db(&self) -> f64 {
+        to_db(self.final_mse)
+    }
+}
+
+/// A figure's worth of curves plus metadata.
+#[derive(Debug)]
+pub struct FigureData {
+    pub id: String,
+    pub title: String,
+    pub curves: Vec<Curve>,
+}
+
+/// Run every algorithm in `algos` over `mc` Monte-Carlo realizations of
+/// `env_of(run)` and average the MSE curves (common random numbers: all
+/// algorithms share each realization).
+pub fn run_variants(
+    ctx: &ExperimentCtx,
+    env: &PaperEnv,
+    algos: &[AlgoConfig],
+    id: &str,
+    title: &str,
+) -> Result<FigureData> {
+    let mut curves: Vec<Curve> = Vec::new();
+    for run in 0..ctx.mc {
+        let seed = ctx.seed.wrapping_add(run as u64 * 0x9e37);
+        let (environment, mut backend) = env.build(seed, ctx.backend)?;
+        for (ai, algo) in algos.iter().enumerate() {
+            let res: RunResult = engine::run(&environment, algo, backend.as_mut())?;
+            if run == 0 {
+                curves.push(Curve {
+                    label: algo.name.clone(),
+                    iters: res.iters.clone(),
+                    mse: res.mse_db.iter().map(|&db| 10f64.powf(db / 10.0)).collect(),
+                    comm: res.comm,
+                    final_mse: res.final_mse,
+                });
+            } else {
+                let c = &mut curves[ai];
+                for (acc, &db) in c.mse.iter_mut().zip(&res.mse_db) {
+                    *acc += 10f64.powf(db / 10.0);
+                }
+                c.final_mse += res.final_mse;
+                c.comm.add(&res.comm);
+            }
+        }
+    }
+    let mc = ctx.mc as f64;
+    for c in &mut curves {
+        for m in &mut c.mse {
+            *m /= mc;
+        }
+        c.final_mse /= mc;
+    }
+    Ok(FigureData {
+        id: id.to_string(),
+        title: title.to_string(),
+        curves,
+    })
+}
+
+/// Persist CSV + JSON and render the ASCII chart + summary table.
+pub fn emit(ctx: &ExperimentCtx, fig: &FigureData) -> Result<()> {
+    // CSV: iter, <label1>, <label2>, ...
+    let mut header: Vec<&str> = vec!["iter"];
+    let labels: Vec<String> = fig.curves.iter().map(|c| c.label.clone()).collect();
+    for l in &labels {
+        header.push(l);
+    }
+    let npts = fig.curves.iter().map(|c| c.iters.len()).max().unwrap_or(0);
+    let mut rows = Vec::with_capacity(npts);
+    for i in 0..npts {
+        let mut row = Vec::with_capacity(header.len());
+        let it = fig
+            .curves
+            .iter()
+            .find(|c| i < c.iters.len())
+            .map(|c| c.iters[i])
+            .unwrap_or(0);
+        row.push(it.to_string());
+        for c in &fig.curves {
+            row.push(if i < c.mse.len() {
+                format!("{:.6}", to_db(c.mse[i]))
+            } else {
+                String::new()
+            });
+        }
+        rows.push(row);
+    }
+    write_csv(&ctx.outdir.join(format!("{}.csv", fig.id)), &header, &rows)?;
+
+    // JSON summary.
+    let summary = Json::Arr(
+        fig.curves
+            .iter()
+            .map(|c| {
+                obj(vec![
+                    ("label", Json::Str(c.label.clone())),
+                    ("final_db", Json::Num(c.final_db())),
+                    ("uplink_scalars", Json::Num(c.comm.uplink_scalars as f64)),
+                    ("downlink_scalars", Json::Num(c.comm.downlink_scalars as f64)),
+                    ("curve_db", arr_f64(&c.db())),
+                ])
+            })
+            .collect(),
+    );
+    let j = obj(vec![
+        ("id", Json::Str(fig.id.clone())),
+        ("title", Json::Str(fig.title.clone())),
+        ("curves", summary),
+    ]);
+    std::fs::create_dir_all(&ctx.outdir)?;
+    std::fs::write(
+        ctx.outdir.join(format!("{}.json", fig.id)),
+        j.to_string_compact(),
+    )?;
+
+    // Terminal rendering.
+    if !ctx.quiet {
+        let series: Vec<plot::Series> = fig
+            .curves
+            .iter()
+            .map(|c| plot::Series {
+                label: c.label.clone(),
+                xs: c.iters.iter().map(|&i| i as f64).collect(),
+                ys: c.db(),
+            })
+            .collect();
+        println!("{}", plot::render(&series, 72, 18, &fig.title));
+    }
+    let baseline_comm = fig.curves.iter().map(|c| c.comm.total_scalars()).max();
+    let rows: Vec<Vec<String>> = fig
+        .curves
+        .iter()
+        .map(|c| {
+            let red = baseline_comm
+                .map(|b| {
+                    if b == 0 {
+                        0.0
+                    } else {
+                        1.0 - c.comm.total_scalars() as f64 / b as f64
+                    }
+                })
+                .unwrap_or(0.0);
+            vec![
+                c.label.clone(),
+                format!("{:.2}", c.final_db()),
+                format!("{}", c.comm.total_scalars()),
+                format!("{:.1}%", red * 100.0),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        crate::util::table::render(
+            &["algorithm", "final MSE (dB)", "scalars moved", "comm cut vs max"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::algorithms::{self, Variant};
+
+    fn quick_ctx() -> ExperimentCtx {
+        ExperimentCtx {
+            mc: 2,
+            seed: 7,
+            backend: BackendKind::Native,
+            outdir: std::env::temp_dir().join("pao_fed_exp_test"),
+            iters: Some(200),
+            clients: Some(16),
+            quiet: true,
+        }
+    }
+
+    #[test]
+    fn run_variants_and_emit() {
+        let ctx = quick_ctx();
+        let env = PaperEnv::synth(&ctx);
+        let algos = vec![
+            algorithms::build(Variant::PaoFedU1, 0.4, 4, 10, 20),
+            algorithms::build(Variant::OnlineFedSgd, 0.4, 4, 10, 20),
+        ];
+        let fig = run_variants(&ctx, &env, &algos, "testfig", "test figure").unwrap();
+        assert_eq!(fig.curves.len(), 2);
+        assert_eq!(fig.curves[0].label, "PAO-Fed-U1");
+        assert!(fig.curves.iter().all(|c| !c.mse.is_empty()));
+        emit(&ctx, &fig).unwrap();
+        assert!(ctx.outdir.join("testfig.csv").exists());
+        assert!(ctx.outdir.join("testfig.json").exists());
+        std::fs::remove_dir_all(&ctx.outdir).ok();
+    }
+
+    #[test]
+    fn iters_override_scales_budgets() {
+        let ctx = quick_ctx();
+        let env = PaperEnv::synth(&ctx);
+        assert_eq!(env.n_iters, 200);
+        // 500 * (200/2000) = 50.
+        assert_eq!(env.data_group_samples[0], 50);
+    }
+}

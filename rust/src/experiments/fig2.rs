@@ -1,0 +1,66 @@
+//! Fig. 2 - PAO-Fed hyper-parameter studies (Section V-B).
+
+use super::common::{emit, run_variants, ExperimentCtx, PaperEnv};
+use crate::error::Result;
+use crate::fl::algorithms::{build, Variant};
+
+/// Paper operating point (Section V-A).
+pub const MU: f32 = 0.4;
+/// Shared coordinates per message.
+pub const M: usize = 4;
+/// Maximum effective delay.
+pub const L_MAX: usize = 10;
+/// Curve sampling period.
+pub const EVAL_EVERY: usize = 10;
+
+/// Fig. 2(a): the *0 variants (S = M_n, single refinement) versus the *1
+/// variants (S = M_{n+1}, eq. 8) under coordinated and uncoordinated
+/// partial sharing. Expected: (C/U)1 > (C/U)0, and U > C (no weight decay).
+pub fn panel_a(ctx: &ExperimentCtx) -> Result<()> {
+    let env = PaperEnv::synth(ctx);
+    let algos: Vec<_> = [
+        Variant::PaoFedC0,
+        Variant::PaoFedU0,
+        Variant::PaoFedC1,
+        Variant::PaoFedU1,
+    ]
+    .iter()
+    .map(|&v| build(v, MU, M, L_MAX, EVAL_EVERY))
+    .collect();
+    let fig = run_variants(ctx, &env, &algos, "fig2a", "Fig 2(a): local updates & selection-matrix choice (MSE dB vs iter)")?;
+    emit(ctx, &fig)
+}
+
+/// Fig. 2(b): message size m in {1, 4, 32} for PAO-Fed-U1. Expected: larger
+/// m converges faster initially but reaches a *worse* steady state in
+/// asynchronous settings.
+pub fn panel_b(ctx: &ExperimentCtx) -> Result<()> {
+    let env = PaperEnv::synth(ctx);
+    let algos: Vec<_> = [1usize, 4, 32]
+        .iter()
+        .map(|&m| {
+            let mut a = build(Variant::PaoFedU1, MU, m, L_MAX, EVAL_EVERY);
+            a.name = format!("PAO-Fed-U1 (m={m})");
+            a
+        })
+        .collect();
+    let fig = run_variants(ctx, &env, &algos, "fig2b", "Fig 2(b): shared parameters m (MSE dB vs iter)")?;
+    emit(ctx, &fig)
+}
+
+/// Fig. 2(c): the weight-decreasing mechanism alpha_l = 0.2^l (the *2
+/// variants) against flat weights. Expected: *2 > *1 and C2 ~ U2.
+pub fn panel_c(ctx: &ExperimentCtx) -> Result<()> {
+    let env = PaperEnv::synth(ctx);
+    let algos: Vec<_> = [
+        Variant::PaoFedC1,
+        Variant::PaoFedU1,
+        Variant::PaoFedC2,
+        Variant::PaoFedU2,
+    ]
+    .iter()
+    .map(|&v| build(v, MU, M, L_MAX, EVAL_EVERY))
+    .collect();
+    let fig = run_variants(ctx, &env, &algos, "fig2c", "Fig 2(c): weight-decreasing mechanism (MSE dB vs iter)")?;
+    emit(ctx, &fig)
+}

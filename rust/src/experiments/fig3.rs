@@ -1,0 +1,161 @@
+//! Fig. 3 - comparison with existing methods (Section V-C).
+
+use super::common::{emit, run_variants, Curve, ExperimentCtx, FigureData, PaperEnv};
+use super::fig2::{EVAL_EVERY, L_MAX, M, MU};
+use crate::error::Result;
+use crate::fl::algorithms::{build, Variant};
+use crate::util::json::{arr_f64, obj, Json};
+use crate::util::write_csv;
+
+/// Server-side scheduling cap used by Online-Fed / PSO-Fed in Fig. 3(a)
+/// (the paper does not quote the subset size; half the expected available
+/// pool - documented in DESIGN.md).
+pub const SUBSAMPLE: usize = 8;
+
+/// Fig. 3(a): PAO-Fed-U1/U2 vs PSO-Fed, Online-Fed, Online-FedSGD in the
+/// asynchronous environment. Expected: Online-Fed and PSO-Fed poor
+/// (sub-sampling an already-reduced pool); U1/U2 >= Online-FedSGD with ~98%
+/// less communication.
+pub fn panel_a(ctx: &ExperimentCtx) -> Result<()> {
+    let env = PaperEnv::synth(ctx);
+    let algos = vec![
+        build(Variant::OnlineFedSgd, MU, M, L_MAX, EVAL_EVERY),
+        build(Variant::OnlineFed { subsample: SUBSAMPLE }, MU, M, L_MAX, EVAL_EVERY),
+        build(Variant::PsoFed { subsample: SUBSAMPLE }, MU, M, L_MAX, EVAL_EVERY),
+        build(Variant::PaoFedU1, MU, M, L_MAX, EVAL_EVERY),
+        build(Variant::PaoFedU2, MU, M, L_MAX, EVAL_EVERY),
+    ];
+    let fig = run_variants(ctx, &env, &algos, "fig3a", "Fig 3(a): PAO-Fed vs existing methods (MSE dB vs iter)")?;
+    emit(ctx, &fig)
+}
+
+/// Fig. 3(b): communication-overhead reduction vs accuracy after N
+/// iterations, relative to Online-FedSGD. Three families:
+/// * scheduling (Online-Fed with shrinking subsets),
+/// * partial sharing (PAO-Fed-U1 with shrinking m),
+/// * partial sharing + weight decay (PAO-Fed-C2).
+/// Expected: scheduling pays an exponential accuracy cost; partial sharing
+/// reverses its cost as m shrinks; C2 dominates everywhere.
+pub fn panel_b(ctx: &ExperimentCtx) -> Result<()> {
+    let env = PaperEnv::synth(ctx);
+    let d = env.d;
+
+    // Reference: Online-FedSGD (no reduction).
+    let base = run_variants(
+        ctx,
+        &env,
+        &[build(Variant::OnlineFedSgd, MU, M, L_MAX, EVAL_EVERY)],
+        "fig3b-base",
+        "baseline",
+    )?;
+    let base_mse = base.curves[0].final_mse;
+    let base_comm = base.curves[0].comm.total_scalars();
+
+    // Families of operating points.
+    let mut families: Vec<(&str, Vec<crate::fl::engine::AlgoConfig>)> = Vec::new();
+    families.push((
+        "Online-Fed (scheduling)",
+        [16usize, 8, 4, 2, 1]
+            .iter()
+            .map(|&s| {
+                let mut a = build(Variant::OnlineFed { subsample: s }, MU, M, L_MAX, EVAL_EVERY);
+                a.name = format!("Online-Fed s={s}");
+                a
+            })
+            .collect(),
+    ));
+    families.push((
+        "PAO-Fed-U1 (partial sharing)",
+        [d, d / 2, d / 8, 16, M, 1]
+            .iter()
+            .map(|&m| {
+                let mut a = build(Variant::PaoFedU1, MU, m, L_MAX, EVAL_EVERY);
+                a.name = format!("PAO-Fed-U1 m={m}");
+                a
+            })
+            .collect(),
+    ));
+    families.push((
+        "PAO-Fed-C2 (partial + decay)",
+        [d, d / 2, d / 8, 16, M, 1]
+            .iter()
+            .map(|&m| {
+                let mut a = build(Variant::PaoFedC2, MU, m, L_MAX, EVAL_EVERY);
+                a.name = format!("PAO-Fed-C2 m={m}");
+                a
+            })
+            .collect(),
+    ));
+
+    // For each operating point: (reduction, accuracy improvement ratio).
+    let mut rows = Vec::new();
+    let mut json_fams = Vec::new();
+    println!("Fig 3(b): communication reduction vs accuracy (vs Online-FedSGD)");
+    for (fam, algos) in families {
+        let data = run_variants(ctx, &env, &algos, &format!("fig3b-{fam}"), fam)?;
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for c in &data.curves {
+            let red = 1.0 - c.comm.total_scalars() as f64 / base_comm.max(1) as f64;
+            let improvement = base_mse / c.final_mse;
+            println!("  {:<28} reduction={:.3} improvement={:.3}", c.label, red, improvement);
+            rows.push(vec![
+                fam.to_string(),
+                c.label.clone(),
+                format!("{red:.4}"),
+                format!("{improvement:.4}"),
+            ]);
+            xs.push(red);
+            ys.push(improvement);
+        }
+        json_fams.push(obj(vec![
+            ("family", Json::Str(fam.to_string())),
+            ("reduction", arr_f64(&xs)),
+            ("improvement", arr_f64(&ys)),
+        ]));
+    }
+    write_csv(
+        &ctx.outdir.join("fig3b.csv"),
+        &["family", "point", "comm_reduction", "accuracy_improvement"],
+        &rows,
+    )?;
+    std::fs::write(
+        ctx.outdir.join("fig3b.json"),
+        obj(vec![
+            ("id", Json::Str("fig3b".into())),
+            ("families", Json::Arr(json_fams)),
+        ])
+        .to_string_compact(),
+    )?;
+    Ok(())
+}
+
+/// Fig. 3(c): impact of straggler clients - the asynchronous environment
+/// (100% potential stragglers) versus an ideal one (always available, no
+/// delays). Expected: coordinated variants shine in the ideal setting;
+/// PAO-Fed-C2 under stragglers roughly matches ideal-setting curves.
+pub fn panel_c(ctx: &ExperimentCtx) -> Result<()> {
+    let async_env = PaperEnv::synth(ctx);
+    let ideal_env = PaperEnv {
+        ideal: true,
+        ..PaperEnv::synth(ctx)
+    };
+    let variants = [Variant::PaoFedC1, Variant::PaoFedU1, Variant::PaoFedC2];
+    let mk = |tag: &str, v: Variant| {
+        let mut a = build(v, MU, M, L_MAX, EVAL_EVERY);
+        a.name = format!("{} [{tag}]", a.name);
+        a
+    };
+    let algos_async: Vec<_> = variants.iter().map(|&v| mk("100% stragglers", v)).collect();
+    let algos_ideal: Vec<_> = variants.iter().map(|&v| mk("0% stragglers", v)).collect();
+
+    let mut fig_a = run_variants(ctx, &async_env, &algos_async, "fig3c", "Fig 3(c)")?;
+    let fig_i = run_variants(ctx, &ideal_env, &algos_ideal, "fig3c-ideal", "Fig 3(c) ideal")?;
+    let curves: Vec<Curve> = fig_a.curves.drain(..).chain(fig_i.curves).collect();
+    let fig = FigureData {
+        id: "fig3c".into(),
+        title: "Fig 3(c): straggler impact, asynchronous vs ideal (MSE dB vs iter)".into(),
+        curves,
+    };
+    emit(ctx, &fig)
+}

@@ -1,0 +1,32 @@
+//! Fig. 4 - real-world dataset: CalCOFI bottle salinity regression
+//! (Section V-D). Uses the real `bottle.csv` when `CALCOFI_CSV` points at
+//! it; otherwise the synthetic oceanographic substitute (DESIGN.md §6).
+
+use super::common::{emit, run_variants, ExperimentCtx, PaperEnv};
+use super::fig2::{EVAL_EVERY, L_MAX, M, MU};
+use super::fig3::SUBSAMPLE;
+use crate::error::Result;
+use crate::fl::algorithms::{build, Variant};
+
+/// Fig. 4: learning curves on the salinity task under the same asynchronous
+/// client model as the synthetic study. Expected ordering identical to
+/// Fig. 3(a): U1 matches Online-FedSGD with 98% less communication; C2
+/// outperforms everything.
+pub fn run(ctx: &ExperimentCtx) -> Result<()> {
+    let env = PaperEnv::calcofi(ctx);
+    let algos = vec![
+        build(Variant::OnlineFedSgd, MU, M, L_MAX, EVAL_EVERY),
+        build(Variant::OnlineFed { subsample: SUBSAMPLE }, MU, M, L_MAX, EVAL_EVERY),
+        build(Variant::PsoFed { subsample: SUBSAMPLE }, MU, M, L_MAX, EVAL_EVERY),
+        build(Variant::PaoFedU1, MU, M, L_MAX, EVAL_EVERY),
+        build(Variant::PaoFedC2, MU, M, L_MAX, EVAL_EVERY),
+    ];
+    let fig = run_variants(
+        ctx,
+        &env,
+        &algos,
+        "fig4",
+        "Fig 4: CalCOFI bottle salinity (MSE dB vs iter)",
+    )?;
+    emit(ctx, &fig)
+}

@@ -1,0 +1,83 @@
+//! Fig. 5 - environment ablations (Section V-E).
+
+use super::common::{emit, run_variants, ExperimentCtx, PaperEnv};
+use super::fig2::{EVAL_EVERY, L_MAX, M, MU};
+use super::fig3::SUBSAMPLE;
+use crate::error::Result;
+use crate::fl::algorithms::{build, Variant};
+use crate::fl::delay::DelayModel;
+use crate::rff::RffSpace;
+use crate::theory::bounds::{lambda_max_rff, step_bound_msd, uniform_input_sampler};
+use crate::util::rng::Pcg32;
+
+/// Fig. 5(a): full server->client communication (M = I): the server sends
+/// its whole model and participants *overwrite* their local models. The
+/// partial-sharing advantage - information kept in not-yet-shared portions -
+/// must collapse. Clients still uplink partial portions.
+pub fn panel_a(ctx: &ExperimentCtx) -> Result<()> {
+    let env = PaperEnv::synth(ctx);
+    let mk_full = |v: Variant| {
+        let mut a = build(v, MU, M, L_MAX, EVAL_EVERY);
+        a.full_downlink = true;
+        a.name = format!("{} [M=I]", a.name);
+        a
+    };
+    let algos = vec![
+        build(Variant::OnlineFedSgd, MU, M, L_MAX, EVAL_EVERY),
+        mk_full(Variant::PaoFedU1),
+        mk_full(Variant::PaoFedC2),
+        // Reference: unmodified U1 for contrast.
+        build(Variant::PaoFedU1, MU, M, L_MAX, EVAL_EVERY),
+    ];
+    let fig = run_variants(ctx, &env, &algos, "fig5a", "Fig 5(a): full server communication ablation (MSE dB vs iter)")?;
+    emit(ctx, &fig)
+}
+
+/// Fig. 5(b): common-delay environment (delta = 0.8, l_max = 5). The
+/// weight-decreasing C2 runs near its Theorem-2 maximum step size to
+/// compensate for down-weighted information. Expected: Online-FedSGD beats
+/// U1, but C2 still reaches the lowest steady-state error.
+pub fn panel_b(ctx: &ExperimentCtx) -> Result<()> {
+    let mut env = PaperEnv::synth(ctx);
+    env.delay = DelayModel::Geometric { delta: 0.8 };
+    let l_max = 5;
+
+    // Increased step for C2, mirroring the paper's "near its maximum value
+    // obtained in Theorem 2". The paper runs mu at ~2.5x its default
+    // (0.98/0.4 with their lambda_max = 1.02); the raw Theorem-2 bound
+    // itself neglects O(mu^2) terms (Assumption 5) and is *not* a practical
+    // operating point, so we take min(2.5 x default, half the bound).
+    let mut rng = Pcg32::derive(ctx.seed, &[0x5b]);
+    let rff = RffSpace::sample(env.l, env.d, env.sigma, &mut rng);
+    let lam = lambda_max_rff(&rff, 3000, uniform_input_sampler(ctx.seed ^ 1));
+    let mu_max = (2.5 * MU as f64).min(0.5 * step_bound_msd(lam));
+
+    let mut c2 = build(Variant::PaoFedC2, mu_max as f32, M, l_max, EVAL_EVERY);
+    c2.name = format!("PAO-Fed-C2 (mu={:.2})", mu_max);
+    let algos = vec![
+        build(Variant::OnlineFedSgd, MU, M, l_max, EVAL_EVERY),
+        build(Variant::PaoFedU1, MU, M, l_max, EVAL_EVERY),
+        c2,
+    ];
+    let fig = run_variants(ctx, &env, &algos, "fig5b", "Fig 5(b): common delays, delta=0.8 l_max=5 (MSE dB vs iter)")?;
+    emit(ctx, &fig)
+}
+
+/// Fig. 5(c): advanced straggler environment - availability x0.1, staged
+/// delays P(delay > 10 i) = 0.4^i truncated at l_max = 60. Expected: the
+/// C2-U1 gap widens (outdated updates dominate) and C2 clearly beats
+/// Online-FedSGD.
+pub fn panel_c(ctx: &ExperimentCtx) -> Result<()> {
+    let mut env = PaperEnv::synth(ctx);
+    env.avail_scale = 0.1;
+    env.delay = DelayModel::Staged { delta: 0.4, step: 10 };
+    let l_max = 60;
+    let algos = vec![
+        build(Variant::OnlineFedSgd, MU, M, l_max, EVAL_EVERY),
+        build(Variant::OnlineFed { subsample: SUBSAMPLE }, MU, M, l_max, EVAL_EVERY),
+        build(Variant::PaoFedU1, MU, M, l_max, EVAL_EVERY),
+        build(Variant::PaoFedC2, MU, M, l_max, EVAL_EVERY),
+    ];
+    let fig = run_variants(ctx, &env, &algos, "fig5c", "Fig 5(c): advanced straggler environment (MSE dB vs iter)")?;
+    emit(ctx, &fig)
+}

@@ -1,0 +1,67 @@
+//! Experiment harness: regenerates every figure of the paper's Section V.
+//!
+//! Each submodule owns one figure; `run(id, ctx)` dispatches. Results land
+//! in `results/<id>.csv` (+ `.json` summary) and are rendered as ASCII
+//! charts so curve *ordering* - what the paper's figures establish - is
+//! visible directly in the terminal.
+//!
+//! | id     | paper     | what                                              |
+//! |--------|-----------|---------------------------------------------------|
+//! | fig2a  | Fig. 2(a) | local updates + C/U partial sharing ablation      |
+//! | fig2b  | Fig. 2(b) | message size m in {1, 4, 32}                      |
+//! | fig2c  | Fig. 2(c) | weight-decreasing mechanism alpha_l = 0.2^l       |
+//! | fig3a  | Fig. 3(a) | PAO-Fed vs PSO-Fed / Online-Fed / Online-FedSGD   |
+//! | fig3b  | Fig. 3(b) | communication reduction vs accuracy               |
+//! | fig3c  | Fig. 3(c) | straggler impact (0% vs 100%)                     |
+//! | fig4   | Fig. 4    | CalCOFI bottle salinity (real-world task)         |
+//! | fig5a  | Fig. 5(a) | full server->client communication ablation        |
+//! | fig5b  | Fig. 5(b) | common delays (delta = 0.8, l_max = 5)            |
+//! | fig5c  | Fig. 5(c) | advanced straggler environment                    |
+//! | theory | Sec. IV   | step-size bounds + steady-state MSD table         |
+
+pub mod ablations;
+pub mod common;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod theory_val;
+
+pub use common::{BackendKind, ExperimentCtx, FigureData};
+
+use crate::error::{Error, Result};
+
+/// All paper-figure experiment ids in paper order.
+pub const ALL: &[&str] = &[
+    "fig2a", "fig2b", "fig2c", "fig3a", "fig3b", "fig3c", "fig4", "fig5a", "fig5b", "fig5c",
+    "theory",
+];
+
+/// Extension experiments (design-choice ablations + tracking; `pao-fed extras`).
+pub const EXTRAS: &[&str] = &["track", "abl-alpha", "abl-lmax", "abl-conflict"];
+
+/// Run one experiment by id.
+pub fn run(id: &str, ctx: &ExperimentCtx) -> Result<()> {
+    match id {
+        "fig2a" => fig2::panel_a(ctx),
+        "fig2b" => fig2::panel_b(ctx),
+        "fig2c" => fig2::panel_c(ctx),
+        "fig3a" => fig3::panel_a(ctx),
+        "fig3b" => fig3::panel_b(ctx),
+        "fig3c" => fig3::panel_c(ctx),
+        "fig4" => fig4::run(ctx),
+        "fig5a" => fig5::panel_a(ctx),
+        "fig5b" => fig5::panel_b(ctx),
+        "fig5c" => fig5::panel_c(ctx),
+        "theory" => theory_val::run(ctx),
+        "track" => ablations::tracking(ctx),
+        "abl-alpha" => ablations::alpha_sweep(ctx),
+        "abl-lmax" => ablations::lmax_sweep(ctx),
+        "abl-conflict" => ablations::conflict_resolution(ctx),
+        other => Err(Error::Config(format!(
+            "unknown experiment {other:?}; available: {} {}",
+            ALL.join(", "),
+            EXTRAS.join(", ")
+        ))),
+    }
+}

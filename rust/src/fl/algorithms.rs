@@ -1,0 +1,179 @@
+//! Algorithm registry: the paper's compared methods as presets over the
+//! single federation engine.
+//!
+//! | Variant          | sharing        | S matrix   | autonomous | alpha_l    | scheduling |
+//! |------------------|----------------|------------|------------|------------|------------|
+//! | Online-FedSGD    | full           | full       | no         | (eq. 6)    | none       |
+//! | Online-Fed       | full           | full       | no         | (eq. 6)    | subsample  |
+//! | PSO-Fed          | partial, coord | M_{n+1}    | yes        | 1          | subsample  |
+//! | PAO-Fed-C0 / U0  | partial C/U    | M_n        | yes        | 1          | none       |
+//! | PAO-Fed-C1 / U1  | partial C/U    | M_{n+1}    | yes        | 1          | none       |
+//! | PAO-Fed-C2 / U2  | partial C/U    | M_{n+1}    | yes        | 0.2^l      | none       |
+
+use super::selection::ScheduleKind;
+use super::server::{AggregationMode, AlphaSchedule};
+use crate::fl::engine::AlgoConfig;
+
+/// The methods of Section V.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Variant {
+    OnlineFedSgd,
+    OnlineFed { subsample: usize },
+    PsoFed { subsample: usize },
+    PaoFedC0,
+    PaoFedU0,
+    PaoFedC1,
+    PaoFedU1,
+    PaoFedC2,
+    PaoFedU2,
+}
+
+impl Variant {
+    /// Canonical display name.
+    pub fn name(&self) -> String {
+        match self {
+            Variant::OnlineFedSgd => "Online-FedSGD".into(),
+            Variant::OnlineFed { .. } => "Online-Fed".into(),
+            Variant::PsoFed { .. } => "PSO-Fed".into(),
+            Variant::PaoFedC0 => "PAO-Fed-C0".into(),
+            Variant::PaoFedU0 => "PAO-Fed-U0".into(),
+            Variant::PaoFedC1 => "PAO-Fed-C1".into(),
+            Variant::PaoFedU1 => "PAO-Fed-U1".into(),
+            Variant::PaoFedC2 => "PAO-Fed-C2".into(),
+            Variant::PaoFedU2 => "PAO-Fed-U2".into(),
+        }
+    }
+
+    /// All PAO-Fed variants (Fig. 2 sweeps).
+    pub fn pao_all() -> [Variant; 6] {
+        [
+            Variant::PaoFedC0,
+            Variant::PaoFedU0,
+            Variant::PaoFedC1,
+            Variant::PaoFedU1,
+            Variant::PaoFedC2,
+            Variant::PaoFedU2,
+        ]
+    }
+}
+
+/// Weight-decay base of the *2 variants (paper: alpha_l = 0.2^l).
+pub const ALPHA_DECAY: f64 = 0.2;
+
+/// Build the engine configuration for `variant`.
+///
+/// * `mu` - step size;
+/// * `m` - shared coordinates per message (ignored by full-sharing methods);
+/// * `l_max` - maximum effective delay of the aggregation;
+/// * `eval_every` - curve sampling period.
+pub fn build(variant: Variant, mu: f32, m: usize, l_max: usize, eval_every: usize) -> AlgoConfig {
+    let buckets = |alpha: AlphaSchedule| AggregationMode::DeviationBuckets {
+        alpha,
+        l_max,
+        most_recent_wins: true,
+    };
+    let base = AlgoConfig {
+        name: variant.name(),
+        mu,
+        schedule: ScheduleKind::Uncoordinated,
+        m,
+        refine_before_share: true,
+        autonomous_updates: true,
+        subsample: None,
+        full_downlink: false,
+        aggregation: buckets(AlphaSchedule::Ones),
+        eval_every,
+    };
+    match variant {
+        Variant::OnlineFedSgd => AlgoConfig {
+            schedule: ScheduleKind::Full,
+            autonomous_updates: false,
+            refine_before_share: false,
+            aggregation: AggregationMode::PlainAverage,
+            ..base
+        },
+        Variant::OnlineFed { subsample } => AlgoConfig {
+            schedule: ScheduleKind::Full,
+            autonomous_updates: false,
+            refine_before_share: false,
+            subsample: Some(subsample),
+            aggregation: AggregationMode::PlainAverage,
+            ..base
+        },
+        Variant::PsoFed { subsample } => AlgoConfig {
+            schedule: ScheduleKind::Coordinated,
+            subsample: Some(subsample),
+            ..base
+        },
+        Variant::PaoFedC0 => AlgoConfig {
+            schedule: ScheduleKind::Coordinated,
+            refine_before_share: false,
+            ..base
+        },
+        Variant::PaoFedU0 => AlgoConfig {
+            refine_before_share: false,
+            ..base
+        },
+        Variant::PaoFedC1 => AlgoConfig {
+            schedule: ScheduleKind::Coordinated,
+            ..base
+        },
+        Variant::PaoFedU1 => base,
+        Variant::PaoFedC2 => AlgoConfig {
+            schedule: ScheduleKind::Coordinated,
+            aggregation: buckets(AlphaSchedule::Powers(ALPHA_DECAY)),
+            ..base
+        },
+        Variant::PaoFedU2 => AlgoConfig {
+            aggregation: buckets(AlphaSchedule::Powers(ALPHA_DECAY)),
+            ..base
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper_table() {
+        let c0 = build(Variant::PaoFedC0, 0.4, 4, 10, 5);
+        assert_eq!(c0.schedule, ScheduleKind::Coordinated);
+        assert!(!c0.refine_before_share);
+        assert!(c0.autonomous_updates);
+
+        let u2 = build(Variant::PaoFedU2, 0.4, 4, 10, 5);
+        assert_eq!(u2.schedule, ScheduleKind::Uncoordinated);
+        assert!(u2.refine_before_share);
+        match &u2.aggregation {
+            AggregationMode::DeviationBuckets { alpha, l_max, .. } => {
+                assert_eq!(*l_max, 10);
+                match alpha {
+                    AlphaSchedule::Powers(a) => assert!((*a - 0.2).abs() < 1e-12),
+                    _ => panic!("U2 must decay"),
+                }
+            }
+            _ => panic!("U2 must bucket"),
+        }
+
+        let sgd = build(Variant::OnlineFedSgd, 0.4, 4, 10, 5);
+        assert_eq!(sgd.schedule, ScheduleKind::Full);
+        assert!(!sgd.autonomous_updates);
+        assert!(matches!(sgd.aggregation, AggregationMode::PlainAverage));
+        assert!(sgd.subsample.is_none());
+
+        let of = build(Variant::OnlineFed { subsample: 16 }, 0.4, 4, 10, 5);
+        assert_eq!(of.subsample, Some(16));
+
+        let pso = build(Variant::PsoFed { subsample: 16 }, 0.4, 4, 10, 5);
+        assert_eq!(pso.schedule, ScheduleKind::Coordinated);
+        assert!(pso.autonomous_updates);
+        assert_eq!(pso.subsample, Some(16));
+    }
+
+    #[test]
+    fn names_stable() {
+        assert_eq!(Variant::PaoFedC2.name(), "PAO-Fed-C2");
+        assert_eq!(Variant::OnlineFed { subsample: 3 }.name(), "Online-Fed");
+    }
+}

@@ -1,0 +1,283 @@
+//! Compute backends for the per-iteration client step.
+//!
+//! The engine is backend-agnostic: the batched client computation
+//! (masked receive + RFF featurization + KLMS update, eqs. 10-13) runs
+//! either natively in rust (`NativeBackend`) or through the AOT-compiled
+//! XLA executable produced by the python Layer-1/Layer-2 stack
+//! (`runtime::XlaBackend`). Both satisfy `ComputeBackend`; a parity test in
+//! `rust/tests/` pins them to each other.
+//!
+//! Interface contract (mirrors the AOT artifact's parameter order):
+//!   w_locals [K*D] row-major, w_global [D], recv_mask [K*D] in {0,1},
+//!   x [K*L], y [K], gate [K] in {0,1}, mu scalar -> updates w_locals in
+//!   place, returns the per-client a-priori errors [K].
+
+use crate::error::Result;
+use crate::rff::RffSpace;
+
+/// Dense batched inputs for one federation tick.
+pub struct StepArgs<'a> {
+    /// Local models, updated in place. [K * D] row-major.
+    pub w_locals: &'a mut [f32],
+    /// Server model broadcast this tick. [D].
+    pub w_global: &'a [f32],
+    /// Receive mask (diagonal of M_{k,n} per client; zero row = no receive).
+    pub recv_mask: &'a [f32],
+    /// Raw inputs. [K * L]; rows of non-gated clients are ignored.
+    pub x: &'a [f32],
+    /// Targets. [K].
+    pub y: &'a [f32],
+    /// Learning-step gate (1 = client has new data this tick). [K].
+    pub gate: &'a [f32],
+    /// Step size.
+    pub mu: f32,
+    /// Optional list of clients that need any work this tick (receive or
+    /// learn). Backends may use it to skip untouched rows; `None` means
+    /// all rows are live.
+    pub active: Option<&'a [usize]>,
+}
+
+/// A provider of the batched client step and test-set evaluation.
+pub trait ComputeBackend {
+    /// Execute one tick; returns a-priori errors [K] (diagnostics).
+    ///
+    /// Error entries are only defined for clients with `gate == 1`: the
+    /// native backend skips featurization (and reports 0) for non-learning
+    /// clients, while the XLA kernel computes the error unconditionally.
+    fn client_step(&mut self, args: StepArgs<'_>) -> Result<Vec<f32>>;
+
+    /// Featurize a batch of raw inputs [T * L] -> [T * D].
+    fn rff_features(&mut self, x: &[f32]) -> Result<Vec<f32>>;
+
+    /// Test MSE of `w` against a featurized test set.
+    fn eval_mse(&mut self, w: &[f32], z_test: &[f32], y_test: &[f32]) -> Result<f64>;
+
+    /// Backend label for logs / results.
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-rust reference backend.
+pub struct NativeBackend {
+    rff: RffSpace,
+    /// Scratch feature buffer (avoids per-client allocation on the hot path).
+    z: Vec<f32>,
+}
+
+impl NativeBackend {
+    /// Build over a concrete RFF realization.
+    pub fn new(rff: RffSpace) -> Self {
+        let d = rff.d;
+        NativeBackend {
+            rff,
+            z: vec![0.0; d],
+        }
+    }
+
+    /// The RFF space in use (shared with the environment).
+    pub fn rff(&self) -> &RffSpace {
+        &self.rff
+    }
+
+    fn step_one(&mut self, w_row: &mut [f32], args_w_global: &[f32], mask: &[f32], x: &[f32], y: f32, gate: f32, mu: f32) -> f32 {
+        let d = w_row.len();
+        // Masked receive: w_eff = M w_global + (I - M) w_local.
+        for j in 0..d {
+            let m = mask[j];
+            if m != 0.0 {
+                w_row[j] = m * args_w_global[j] + (1.0 - m) * w_row[j];
+            }
+        }
+        if gate == 0.0 {
+            return 0.0;
+        }
+        // RFF featurization + a-priori error + rank-1 update.
+        // (A 4-way-accumulator dot was tried and reverted: no measurable
+        // gain, and it breaks bit-exact equality with the per-client
+        // deployment runtime - see EXPERIMENTS.md §Perf.)
+        self.rff.features_into(x, &mut self.z);
+        let mut dot = 0.0f32;
+        for j in 0..d {
+            dot += w_row[j] * self.z[j];
+        }
+        let e = y - dot;
+        let step = mu * e;
+        for j in 0..d {
+            w_row[j] += step * self.z[j];
+        }
+        e
+    }
+}
+
+impl ComputeBackend for NativeBackend {
+    fn client_step(&mut self, args: StepArgs<'_>) -> Result<Vec<f32>> {
+        let d = self.rff.d;
+        let l = self.rff.l;
+        let k = args.y.len();
+        debug_assert_eq!(args.w_locals.len(), k * d);
+        let mut errs = vec![0.0f32; k];
+        let mut run = |idx: usize, zelf: &mut Self, w_locals: &mut [f32]| {
+            let row = &mut w_locals[idx * d..(idx + 1) * d];
+            let mask = &args.recv_mask[idx * d..(idx + 1) * d];
+            let x = &args.x[idx * l..(idx + 1) * l];
+            errs[idx] = zelf.step_one(row, args.w_global, mask, x, args.y[idx], args.gate[idx], args.mu);
+        };
+        match args.active {
+            Some(active) => {
+                for &idx in active {
+                    run(idx, self, args.w_locals);
+                }
+            }
+            None => {
+                for idx in 0..k {
+                    run(idx, self, args.w_locals);
+                }
+            }
+        }
+        Ok(errs)
+    }
+
+    fn rff_features(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+        Ok(self.rff.features_batch(x))
+    }
+
+    fn eval_mse(&mut self, w: &[f32], z_test: &[f32], y_test: &[f32]) -> Result<f64> {
+        Ok(crate::metrics::mse_test(w, z_test, y_test))
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn setup(k: usize, d: usize, l: usize) -> (NativeBackend, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg32::new(5, 0);
+        let rff = RffSpace::sample(l, d, 1.0, &mut rng);
+        let be = NativeBackend::new(rff);
+        let w_locals: Vec<f32> = (0..k * d).map(|_| rng.gaussian() as f32).collect();
+        let w_global: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+        let mask: Vec<f32> = (0..k * d).map(|_| if rng.bernoulli(0.3) { 1.0 } else { 0.0 }).collect();
+        let x: Vec<f32> = (0..k * l).map(|_| rng.gaussian() as f32).collect();
+        let y: Vec<f32> = (0..k).map(|_| rng.gaussian() as f32).collect();
+        let gate: Vec<f32> = (0..k).map(|_| if rng.bernoulli(0.7) { 1.0 } else { 0.0 }).collect();
+        (be, w_locals, w_global, mask, x, y, gate)
+    }
+
+    #[test]
+    fn receive_semantics() {
+        let (mut be, mut w, wg, _, x, y, _) = setup(3, 8, 2);
+        // Full mask, zero gate: every row becomes w_global.
+        let mask = vec![1.0f32; 3 * 8];
+        let gate = vec![0.0f32; 3];
+        be.client_step(StepArgs {
+            w_locals: &mut w,
+            w_global: &wg,
+            recv_mask: &mask,
+            x: &x,
+            y: &y,
+            gate: &gate,
+            mu: 0.4,
+            active: None,
+        })
+        .unwrap();
+        for row in w.chunks(8) {
+            assert_eq!(row, &wg[..]);
+        }
+    }
+
+    #[test]
+    fn apriori_error_and_update_consistent() {
+        let (mut be, mut w, wg, mask, x, y, gate) = setup(4, 16, 3);
+        let w_before = w.clone();
+        let errs = be
+            .client_step(StepArgs {
+                w_locals: &mut w,
+                w_global: &wg,
+                recv_mask: &mask,
+                x: &x,
+                y: &y,
+                gate: &gate,
+                mu: 0.3,
+                active: None,
+            })
+            .unwrap();
+        // Recompute by hand for client 0.
+        let d = 16;
+        let mut w_eff: Vec<f32> = (0..d)
+            .map(|j| mask[j] * wg[j] + (1.0 - mask[j]) * w_before[j])
+            .collect();
+        let z = be.rff().features(&x[0..3]);
+        let dot: f32 = w_eff.iter().zip(&z).map(|(a, b)| a * b).sum();
+        let e = y[0] - dot;
+        if gate[0] != 0.0 {
+            for j in 0..d {
+                w_eff[j] += 0.3 * e * z[j];
+            }
+            assert!((errs[0] - e).abs() < 1e-5);
+        } else {
+            assert_eq!(errs[0], 0.0);
+        }
+        for j in 0..d {
+            assert!((w[j] - w_eff[j]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn active_list_skips_rows() {
+        let (mut be, mut w, wg, mask, x, y, _) = setup(4, 8, 2);
+        let w_before = w.clone();
+        let gate = vec![1.0f32; 4];
+        be.client_step(StepArgs {
+            w_locals: &mut w,
+            w_global: &wg,
+            recv_mask: &mask,
+            x: &x,
+            y: &y,
+            gate: &gate,
+            mu: 0.4,
+            active: Some(&[1, 3]),
+        })
+        .unwrap();
+        // Rows 0 and 2 untouched.
+        assert_eq!(&w[0..8], &w_before[0..8]);
+        assert_eq!(&w[16..24], &w_before[16..24]);
+        assert_ne!(&w[8..16], &w_before[8..16]);
+    }
+
+    #[test]
+    fn single_client_lms_converges() {
+        // Pure eq.-(12) loop must drive the error down on a fixed target.
+        let mut rng = Pcg32::new(9, 1);
+        let rff = RffSpace::sample(2, 64, 1.0, &mut rng);
+        let mut be = NativeBackend::new(rff);
+        let f = |x: &[f32]| (x[0] + 0.5 * x[1]).sin();
+        let mut w = vec![0.0f32; 64];
+        let wg = vec![0.0f32; 64];
+        let mask = vec![0.0f32; 64];
+        let mut last_err = f32::MAX;
+        for it in 0..3000 {
+            let x = [rng.uniform_in(-1.0, 1.0) as f32, rng.uniform_in(-1.0, 1.0) as f32];
+            let y = [f(&x)];
+            let e = be
+                .client_step(StepArgs {
+                    w_locals: &mut w,
+                    w_global: &wg,
+                    recv_mask: &mask,
+                    x: &x,
+                    y: &y,
+                    gate: &[1.0],
+                    mu: 0.5,
+                    active: None,
+                })
+                .unwrap();
+            if it > 2500 {
+                last_err = last_err.min(e[0].abs());
+            }
+        }
+        assert!(last_err < 0.1, "LMS did not converge: |e| = {last_err}");
+    }
+}

@@ -1,0 +1,184 @@
+//! Communication-delay channel models (paper Sections III-A/B, V).
+//!
+//! A client->server message sent at iteration n arrives at n + l. The
+//! paper's primary model: "each communication to the server will be delayed
+//! by more than l iterations with probability delta^l", i.e. a geometric
+//! tail `P(delay > l) = delta^l`. Fig. 5(c) uses a staged variant where the
+//! tail decays per *decade*: `P(delay > 10 i) = delta^i`.
+//!
+//! Updates older than `l_max` are discarded by the aggregation (alpha_l = 0
+//! for l > l_max, eq. 15); the channel still delivers them so the server
+//! can account for the discard.
+//!
+//! Delay draws are keyed on (environment seed, client, send iteration) so
+//! every algorithm variant experiences the identical channel realization.
+
+use crate::util::rng::Pcg32;
+
+const TAG_DELAY: u64 = 0xde1a7;
+
+/// Channel delay model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DelayModel {
+    /// No delays (ideal channels; Fig. 3(c) "0% stragglers").
+    None,
+    /// Geometric tail: P(delay > l) = delta^l.
+    Geometric { delta: f64 },
+    /// Staged decades (Fig. 5(c)): P(delay > step*i) = delta^i; delays come
+    /// in multiples of `step`.
+    Staged { delta: f64, step: usize },
+}
+
+impl DelayModel {
+    /// Sample the delay (in iterations) of the message client `k` sends at
+    /// iteration `n`.
+    pub fn sample(&self, env_seed: u64, k: usize, n: usize) -> usize {
+        match *self {
+            DelayModel::None => 0,
+            DelayModel::Geometric { delta } => {
+                let mut rng = Pcg32::derive(env_seed, &[TAG_DELAY, k as u64, n as u64]);
+                let mut l = 0usize;
+                // P(delay > l) = delta^l: count consecutive successes.
+                while l < 10_000 && rng.bernoulli(delta) {
+                    l += 1;
+                }
+                l
+            }
+            DelayModel::Staged { delta, step } => {
+                let mut rng = Pcg32::derive(env_seed, &[TAG_DELAY, k as u64, n as u64]);
+                let mut i = 0usize;
+                while i < 1_000 && rng.bernoulli(delta) {
+                    i += 1;
+                }
+                i * step
+            }
+        }
+    }
+
+    /// Expected delay (diagnostics / tests).
+    pub fn mean(&self) -> f64 {
+        match *self {
+            DelayModel::None => 0.0,
+            DelayModel::Geometric { delta } => delta / (1.0 - delta),
+            DelayModel::Staged { delta, step } => step as f64 * delta / (1.0 - delta),
+        }
+    }
+}
+
+/// Ring buffer delivering messages at their arrival iteration.
+///
+/// `push(arrival_iter, msg)` files a message; `drain(now)` returns
+/// everything arriving exactly at `now`. Capacity covers the maximum delay
+/// horizon; anything beyond is clamped to the horizon (it would be
+/// discarded by the aggregation anyway, but still counts as traffic).
+pub struct DelayQueue<T> {
+    slots: Vec<Vec<T>>,
+    now: usize,
+}
+
+impl<T> DelayQueue<T> {
+    /// Create with a horizon of `max_delay` iterations.
+    pub fn new(max_delay: usize) -> Self {
+        DelayQueue {
+            slots: (0..max_delay + 1).map(|_| Vec::new()).collect(),
+            now: 0,
+        }
+    }
+
+    /// File a message arriving at absolute iteration `arrival`.
+    pub fn push(&mut self, arrival: usize, msg: T) {
+        let h = self.slots.len();
+        let eff = arrival.max(self.now);
+        let eff = eff.min(self.now + h - 1);
+        let slot = eff % h;
+        self.slots[slot].push(msg);
+    }
+
+    /// Advance to iteration `now` and take everything arriving then.
+    pub fn drain(&mut self, now: usize) -> Vec<T> {
+        debug_assert!(now >= self.now, "time went backwards");
+        self.now = now;
+        let h = self.slots.len();
+        std::mem::take(&mut self.slots[now % h])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometric_tail_rates() {
+        let m = DelayModel::Geometric { delta: 0.2 };
+        let n = 40_000;
+        let mut over: [usize; 4] = [0; 4];
+        for i in 0..n {
+            let d = m.sample(5, 0, i);
+            for (l, o) in over.iter_mut().enumerate() {
+                if d > l {
+                    *o += 1;
+                }
+            }
+        }
+        for (l, &o) in over.iter().enumerate() {
+            let want = 0.2f64.powi(l as i32 + 1);
+            let got = o as f64 / n as f64;
+            assert!(
+                (got - want).abs() < 0.01 + want * 0.3,
+                "P(delay>{l}) got {got} want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn staged_multiples_of_step() {
+        let m = DelayModel::Staged { delta: 0.4, step: 10 };
+        let mut seen_nonzero = false;
+        for i in 0..2000 {
+            let d = m.sample(9, 1, i);
+            assert_eq!(d % 10, 0);
+            seen_nonzero |= d > 0;
+        }
+        assert!(seen_nonzero);
+    }
+
+    #[test]
+    fn none_is_zero() {
+        assert_eq!(DelayModel::None.sample(1, 2, 3), 0);
+    }
+
+    #[test]
+    fn deterministic_per_key() {
+        let m = DelayModel::Geometric { delta: 0.5 };
+        assert_eq!(m.sample(7, 3, 11), m.sample(7, 3, 11));
+    }
+
+    #[test]
+    fn queue_delivers_in_order() {
+        let mut q: DelayQueue<u32> = DelayQueue::new(5);
+        q.push(0, 10);
+        q.push(2, 20);
+        q.push(2, 21);
+        assert_eq!(q.drain(0), vec![10]);
+        assert!(q.drain(1).is_empty());
+        let mut d2 = q.drain(2);
+        d2.sort_unstable();
+        assert_eq!(d2, vec![20, 21]);
+    }
+
+    #[test]
+    fn queue_clamps_beyond_horizon() {
+        let mut q: DelayQueue<u32> = DelayQueue::new(3);
+        q.push(100, 1); // clamped to now + 3
+        assert!(q.drain(0).is_empty());
+        assert!(q.drain(1).is_empty());
+        assert!(q.drain(2).is_empty());
+        assert_eq!(q.drain(3), vec![1]);
+    }
+
+    #[test]
+    fn mean_formulas() {
+        assert!((DelayModel::Geometric { delta: 0.2 }.mean() - 0.25).abs() < 1e-12);
+        assert!((DelayModel::Staged { delta: 0.4, step: 10 }.mean() - 10.0 * 2.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,417 @@
+//! The federation engine: one discrete-event loop implementing Algorithm 1
+//! of the paper, parameterized so that every compared method (Online-Fed,
+//! Online-FedSGD, PSO-Fed, all six PAO-Fed variants and the Fig. 5(a)
+//! ablation) is a configuration of the *same* machinery.
+//!
+//! Per iteration n:
+//!   1. data arrivals `gate_k` come from the materialized `FedStream`;
+//!   2. availability is Bernoulli(p_k) gated on data (common random numbers
+//!      across algorithm variants);
+//!   3. the server optionally subsamples the available set (Online-Fed /
+//!      PSO-Fed scheduling);
+//!   4. selected clients receive `M_{k,n} w_n` (partial or full downlink);
+//!   5. all data-holding clients run the batched RFF/KLMS step through the
+//!      configured `ComputeBackend` (eqs. 10-13) - autonomous local updates
+//!      included when enabled;
+//!   6. selected clients upload `S_{k,n} w_{k,n+1}`, which enters the delay
+//!      channel;
+//!   7. the server drains arrivals and aggregates (eqs. 14-15 or eq. 6);
+//!   8. the test-MSE curve is sampled every `eval_every` iterations.
+
+use super::backend::{ComputeBackend, StepArgs};
+use super::delay::{DelayModel, DelayQueue};
+use super::participation::Participation;
+use super::selection::{Coords, ScheduleKind, SelectionSchedule};
+use super::server::{AggregateInfo, AggregationMode, Server, Update};
+use crate::data::stream::FedStream;
+use crate::error::Result;
+use crate::metrics::{mse_test, to_db, CommStats};
+use crate::rff::RffSpace;
+use crate::util::rng::Pcg32;
+
+const TAG_SELECT: u64 = 0x5e1ec7;
+
+/// Environment realization shared by every algorithm in a comparison:
+/// the data stream, RFF space, participation probabilities and channel.
+pub struct Environment {
+    pub stream: FedStream,
+    pub rff: RffSpace,
+    pub participation: Participation,
+    pub delay: DelayModel,
+    /// Seed keying availability/delay/subsample draws.
+    pub env_seed: u64,
+    /// Featurized test set [T * D] (built once via the backend).
+    pub z_test: Vec<f32>,
+}
+
+impl Environment {
+    /// Assemble an environment, featurizing the test set through `backend`.
+    pub fn new(
+        stream: FedStream,
+        rff: RffSpace,
+        participation: Participation,
+        delay: DelayModel,
+        env_seed: u64,
+        backend: &mut dyn ComputeBackend,
+    ) -> Result<Self> {
+        let z_test = backend.rff_features(&stream.test_x)?;
+        Ok(Environment {
+            stream,
+            rff,
+            participation,
+            delay,
+            env_seed,
+            z_test,
+        })
+    }
+
+    /// Model dimension D.
+    pub fn d(&self) -> usize {
+        self.rff.d
+    }
+}
+
+/// Algorithm definition: everything that distinguishes the compared methods.
+#[derive(Clone, Debug)]
+pub struct AlgoConfig {
+    /// Display name ("PAO-Fed-C2", "Online-FedSGD", ...).
+    pub name: String,
+    /// Step size mu.
+    pub mu: f32,
+    /// Portion-selection discipline (Full = no partial sharing).
+    pub schedule: ScheduleKind,
+    /// Shared coordinates per message.
+    pub m: usize,
+    /// eq. (8): share the locally-refined next portion (S = M_{n+1}).
+    pub refine_before_share: bool,
+    /// eq. (12): unavailable clients still learn locally.
+    pub autonomous_updates: bool,
+    /// Server-side scheduling: pick at most this many of the available
+    /// clients per iteration (Online-Fed / PSO-Fed). `None` = use everyone.
+    pub subsample: Option<usize>,
+    /// Fig. 5(a) ablation: downlink the full model (M = I) regardless of
+    /// `schedule`, overwriting local models at participants.
+    pub full_downlink: bool,
+    /// Server aggregation rule.
+    pub aggregation: AggregationMode,
+    /// Curve sampling period.
+    pub eval_every: usize,
+}
+
+/// Result of one engine run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    /// Iterations at which the curve was sampled.
+    pub iters: Vec<usize>,
+    /// MSE-test in dB at those iterations.
+    pub mse_db: Vec<f64>,
+    /// Communication totals.
+    pub comm: CommStats,
+    /// Final server model.
+    pub final_w: Vec<f32>,
+    /// Aggregation diagnostics summed over the run.
+    pub agg: AggregateInfo,
+    /// Final MSE (linear).
+    pub final_mse: f64,
+}
+
+impl RunResult {
+    /// Final sampled MSE in dB.
+    pub fn final_db(&self) -> f64 {
+        to_db(self.final_mse)
+    }
+}
+
+/// Run `algo` in `env` with the given compute backend.
+pub fn run(env: &Environment, algo: &AlgoConfig, backend: &mut dyn ComputeBackend) -> Result<RunResult> {
+    let k = env.stream.n_clients;
+    let n_iters = env.stream.n_iters;
+    let d = env.d();
+    let l = env.rff.l;
+    let schedule = SelectionSchedule::new(algo.schedule, d, algo.m, env.env_seed);
+
+    let mut w_locals = vec![0.0f32; k * d];
+    let mut server = Server::new(d, algo.aggregation.clone());
+    // Delay horizon: generous cap; aggregation discards beyond l_max anyway.
+    let horizon = match env.delay {
+        DelayModel::None => 1,
+        DelayModel::Geometric { .. } => 64,
+        DelayModel::Staged { step, .. } => step * 12,
+    };
+    let mut queue: DelayQueue<Update> = DelayQueue::new(horizon);
+
+    // Reused dense buffers for the batched backend call.
+    let mut recv_mask = vec![0.0f32; k * d];
+    let mut xbuf = vec![0.0f32; k * l];
+    let mut ybuf = vec![0.0f32; k];
+    let mut gatebuf = vec![0.0f32; k];
+    let mut active: Vec<usize> = Vec::with_capacity(k);
+    let mut in_active = vec![false; k];
+    let mut participants: Vec<usize> = Vec::with_capacity(k);
+    let mut cleared: Vec<usize> = Vec::with_capacity(k);
+
+    let mut comm = CommStats::default();
+    let mut agg_total = AggregateInfo::default();
+    let mut iters = Vec::new();
+    let mut mse_db = Vec::new();
+
+    for n in 0..n_iters {
+        // -- 1-2: data arrivals and availability -------------------------
+        for &c in &active {
+            in_active[c] = false;
+        }
+        active.clear();
+        participants.clear();
+        for c in 0..k {
+            let has_data = env.stream.has_data(c, n);
+            gatebuf[c] = 0.0;
+            if has_data && env.participation.is_available(env.env_seed, c, n, true) {
+                participants.push(c);
+            }
+            if has_data {
+                // Learning happens for participants always; for everyone
+                // else only when autonomous updates are on.
+                let learns = algo.autonomous_updates || participants.last() == Some(&c);
+                if learns {
+                    gatebuf[c] = 1.0;
+                    let xb = &mut xbuf[c * l..(c + 1) * l];
+                    xb.copy_from_slice(env.stream.x(c, n));
+                    ybuf[c] = env.stream.y(c, n);
+                    active.push(c);
+                    in_active[c] = true;
+                }
+            }
+        }
+
+        // -- 3: server-side scheduling (subsampling) ----------------------
+        // The server selects *blindly* among all K clients (it cannot know
+        // availability in advance - Section III-A); only selected clients
+        // that are actually available with fresh data participate. This is
+        // why "sub-sampling the already reduced pool" hurts in asynchronous
+        // settings (Fig. 3(a)).
+        let mut scheduled: Option<Vec<usize>> = None;
+        if let Some(cap) = algo.subsample {
+            let mut rng = Pcg32::derive(env.env_seed, &[TAG_SELECT, n as u64]);
+            let selected = rng.sample_indices(k, cap.min(k));
+            let chosen: Vec<usize> = {
+                let mut sel = vec![false; k];
+                for &c in &selected {
+                    sel[c] = true;
+                }
+                participants.iter().copied().filter(|&c| sel[c]).collect()
+            };
+            // Deselected clients keep learning only under autonomous
+            // updates; otherwise their gate is cleared.
+            for &c in &participants {
+                if !chosen.contains(&c) && !algo.autonomous_updates {
+                    gatebuf[c] = 0.0;
+                }
+            }
+            participants = chosen;
+            scheduled = Some(selected);
+        }
+
+        // -- 4: downlink --------------------------------------------------
+        // Model payloads flow only to scheduled clients that are actually
+        // reachable (the availability handshake is a control message of
+        // negligible size and is not counted as model traffic).
+        let _ = &scheduled;
+        for &c in &cleared {
+            recv_mask[c * d..(c + 1) * d].fill(0.0);
+        }
+        cleared.clear();
+        for &c in &participants {
+            let row = &mut recv_mask[c * d..(c + 1) * d];
+            if algo.full_downlink || algo.schedule == ScheduleKind::Full {
+                row.fill(1.0);
+                comm.downlink_scalars += d as u64;
+            } else {
+                schedule.recv(c, n).fill_mask(row);
+                comm.downlink_scalars += algo.m as u64;
+            }
+            comm.downlink_msgs += 1;
+            cleared.push(c);
+            if !in_active[c] {
+                active.push(c);
+                in_active[c] = true;
+            }
+        }
+
+        // -- 5: batched client compute ------------------------------------
+        if !active.is_empty() {
+            active.sort_unstable();
+            backend.client_step(StepArgs {
+                w_locals: &mut w_locals,
+                w_global: &server.w,
+                recv_mask: &recv_mask,
+                x: &xbuf,
+                y: &ybuf,
+                gate: &gatebuf,
+                mu: algo.mu,
+                active: Some(&active),
+            })?;
+        }
+
+        // -- 6: uplink through the delay channel --------------------------
+        for &c in &participants {
+            let coords = if algo.schedule == ScheduleKind::Full {
+                Coords::Full { d }
+            } else {
+                schedule.send(c, n, algo.refine_before_share)
+            };
+            let mut values = Vec::with_capacity(coords.len());
+            let row = &w_locals[c * d..(c + 1) * d];
+            coords.for_each(|j| values.push(row[j]));
+            comm.uplink_scalars += values.len() as u64;
+            comm.uplink_msgs += 1;
+            let delay = env.delay.sample(env.env_seed, c, n);
+            queue.push(n + delay, Update {
+                client: c,
+                sent_iter: n,
+                coords,
+                values,
+            });
+        }
+
+        // -- 7: server aggregation ----------------------------------------
+        let arrivals = queue.drain(n);
+        let info = server.aggregate(n, &arrivals);
+        agg_total.applied += info.applied;
+        agg_total.discarded_stale += info.discarded_stale;
+        agg_total.conflicts_resolved += info.conflicts_resolved;
+
+        // -- 8: evaluation --------------------------------------------------
+        if n % algo.eval_every == 0 || n + 1 == n_iters {
+            let mse = mse_test(&server.w, &env.z_test, &env.stream.test_y);
+            iters.push(n);
+            mse_db.push(to_db(mse));
+        }
+    }
+
+    let final_mse = mse_test(&server.w, &env.z_test, &env.stream.test_y);
+    Ok(RunResult {
+        iters,
+        mse_db,
+        comm,
+        final_w: server.w,
+        agg: agg_total,
+        final_mse,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::stream::StreamConfig;
+    use crate::data::synthetic::Eq39Source;
+    use crate::fl::algorithms::{self, Variant};
+    use crate::fl::backend::NativeBackend;
+
+    fn tiny_env(seed: u64, delay: DelayModel, part: Participation) -> (Environment, NativeBackend) {
+        let cfg = StreamConfig {
+            n_clients: 16,
+            n_iters: 300,
+            data_group_samples: vec![75, 150, 225, 300],
+            test_size: 100,
+        };
+        let mut src = Eq39Source::new(seed);
+        let stream = FedStream::build(&cfg, &mut src, seed);
+        let mut rng = Pcg32::derive(seed, &[0xabc]);
+        let rff = RffSpace::sample(4, 32, 1.0, &mut rng);
+        let mut backend = NativeBackend::new(rff.clone());
+        let env = Environment::new(stream, rff, part, delay, seed, &mut backend).unwrap();
+        (env, backend)
+    }
+
+    #[test]
+    fn fedsgd_learns_in_ideal_setting() {
+        let (env, mut be) = tiny_env(1, DelayModel::None, Participation::always(16));
+        let algo = algorithms::build(Variant::OnlineFedSgd, 0.4, 4, 10, 10);
+        let res = run(&env, &algo, &mut be).unwrap();
+        let first = res.mse_db[0];
+        let last = *res.mse_db.last().unwrap();
+        assert!(last < first - 10.0, "no learning: {first} -> {last}");
+    }
+
+    #[test]
+    fn pao_fed_learns_under_asynchrony() {
+        let (env, mut be) = tiny_env(
+            2,
+            DelayModel::Geometric { delta: 0.2 },
+            Participation::grouped(16, &[0.5, 0.25, 0.1, 0.05], 4),
+        );
+        let algo = algorithms::build(Variant::PaoFedU2, 0.4, 4, 10, 10);
+        let res = run(&env, &algo, &mut be).unwrap();
+        let first = res.mse_db[0];
+        let last = *res.mse_db.last().unwrap();
+        assert!(last < first - 8.0, "no learning: {first} -> {last}");
+    }
+
+    #[test]
+    fn partial_sharing_cuts_communication() {
+        let (env, mut be) = tiny_env(3, DelayModel::None, Participation::always(16));
+        let full = run(&env, &algorithms::build(Variant::OnlineFedSgd, 0.4, 4, 10, 10), &mut be).unwrap();
+        let pao = run(&env, &algorithms::build(Variant::PaoFedU1, 0.4, 4, 10, 10), &mut be).unwrap();
+        // m = 4 of D = 32 -> 87.5% reduction here.
+        let red = pao.comm.reduction_vs(&full.comm);
+        assert!((red - 0.875).abs() < 0.02, "reduction {red}");
+    }
+
+    #[test]
+    fn pao_with_full_share_no_delay_matches_fedsgd_curve() {
+        // Reduction property: PAO-Fed with m = D, alpha = 1, no delays, no
+        // subsampling and full participation must behave like Online-FedSGD
+        // (deviation-mean == plain average when everyone reports fresh).
+        let (env, mut be) = tiny_env(4, DelayModel::None, Participation::always(16));
+        let mut pao = algorithms::build(Variant::PaoFedC1, 0.4, 32, 10, 10);
+        pao.schedule = ScheduleKind::Full;
+        pao.m = 32;
+        pao.autonomous_updates = false;
+        let sgd = algorithms::build(Variant::OnlineFedSgd, 0.4, 4, 10, 10);
+        let a = run(&env, &pao, &mut be).unwrap();
+        let b = run(&env, &sgd, &mut be).unwrap();
+        for (x, y) in a.mse_db.iter().zip(&b.mse_db) {
+            // f64-accumulated deviation mean vs f32 plain average: allow
+            // tiny arithmetic drift in dB.
+            assert!((x - y).abs() < 1e-3, "curves diverge: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn no_participation_no_server_motion() {
+        let (env, mut be) = tiny_env(5, DelayModel::None, Participation::uniform(16, 0.0));
+        let algo = algorithms::build(Variant::PaoFedU2, 0.4, 4, 10, 10);
+        let res = run(&env, &algo, &mut be).unwrap();
+        assert!(res.final_w.iter().all(|&v| v == 0.0));
+        assert_eq!(res.comm.uplink_msgs, 0);
+    }
+
+    #[test]
+    fn comm_accounting_matches_m_times_messages() {
+        let (env, mut be) = tiny_env(6, DelayModel::None, Participation::always(16));
+        let algo = algorithms::build(Variant::PaoFedU1, 0.4, 4, 10, 10);
+        let res = run(&env, &algo, &mut be).unwrap();
+        assert_eq!(res.comm.uplink_scalars, 4 * res.comm.uplink_msgs);
+        assert_eq!(res.comm.downlink_scalars, 4 * res.comm.downlink_msgs);
+    }
+
+    #[test]
+    fn subsampling_limits_participants() {
+        let (env, mut be) = tiny_env(7, DelayModel::None, Participation::always(16));
+        let algo = algorithms::build(Variant::OnlineFed { subsample: 2 }, 0.4, 4, 10, 10);
+        let res = run(&env, &algo, &mut be).unwrap();
+        // <= 2 uploads per iteration.
+        assert!(res.comm.uplink_msgs <= 2 * 300);
+        assert!(res.comm.uplink_msgs > 100);
+    }
+
+    #[test]
+    fn determinism_same_seed_same_curve() {
+        let (env, mut be) = tiny_env(8, DelayModel::Geometric { delta: 0.3 }, Participation::uniform(16, 0.4));
+        let algo = algorithms::build(Variant::PaoFedC2, 0.4, 4, 10, 10);
+        let a = run(&env, &algo, &mut be).unwrap();
+        let b = run(&env, &algo, &mut be).unwrap();
+        assert_eq!(a.mse_db, b.mse_db);
+        assert_eq!(a.final_w, b.final_w);
+    }
+}

@@ -1,0 +1,17 @@
+//! Federated-learning core: the paper's system contribution.
+//!
+//! * `selection` — partial-sharing selection matrices (eqs. 7-8);
+//! * `participation` — random client availability (Section III-A);
+//! * `delay` — communication-delay channel + delivery queue (Section III-B);
+//! * `server` — the PAO-Fed aggregation (eqs. 14-15) and baselines (eq. 6);
+//! * `backend` — pluggable batched client compute (native rust or AOT XLA);
+//! * `engine` — the per-iteration federation loop (Algorithm 1);
+//! * `algorithms` — presets for every compared method.
+
+pub mod algorithms;
+pub mod backend;
+pub mod delay;
+pub mod engine;
+pub mod participation;
+pub mod selection;
+pub mod server;

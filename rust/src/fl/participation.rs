@@ -1,0 +1,135 @@
+//! Random client participation (paper Section III-A).
+//!
+//! Each client has a participation probability `p_{k,n}`; a Bernoulli trial
+//! decides availability at every iteration, gated on the arrival of new data
+//! ("a client can only participate at an iteration if it receives new
+//! data"). The paper crosses the 4 data groups with 4 availability groups;
+//! `grouped` reproduces that block structure for any K.
+//!
+//! Trials are drawn from streams keyed only on (environment seed, client,
+//! iteration), so every algorithm variant sees the *same* availability
+//! realization within a Monte-Carlo run (common random numbers).
+
+use crate::util::rng::Pcg32;
+
+const TAG_AVAIL: u64 = 0xa7a11;
+
+/// Per-client participation probabilities.
+#[derive(Clone, Debug)]
+pub struct Participation {
+    /// p_k for every client (time-invariant here; Fig. 5(c)'s harsher
+    /// environment is expressed by scaling the whole vector).
+    pub probs: Vec<f64>,
+}
+
+impl Participation {
+    /// The paper's crossed grouping: within each of the `data_groups`
+    /// contiguous data-group blocks, clients are further split into
+    /// `group_probs.len()` contiguous availability sub-blocks.
+    pub fn grouped(n_clients: usize, group_probs: &[f64], data_groups: usize) -> Self {
+        let a = group_probs.len().max(1);
+        let probs = (0..n_clients)
+            .map(|k| {
+                // Position within the data-group block decides the
+                // availability group.
+                let block = n_clients.div_ceil(data_groups.max(1));
+                let pos_in_block = k % block;
+                let sub = (pos_in_block * a) / block.max(1);
+                group_probs[sub.min(a - 1)]
+            })
+            .collect();
+        Participation { probs }
+    }
+
+    /// Uniform probability for every client.
+    pub fn uniform(n_clients: usize, p: f64) -> Self {
+        Participation {
+            probs: vec![p; n_clients],
+        }
+    }
+
+    /// Ideal setting: every client with data participates (Fig. 3(c)'s "0%
+    /// potential stragglers").
+    pub fn always(n_clients: usize) -> Self {
+        Self::uniform(n_clients, 1.0)
+    }
+
+    /// Scale all probabilities (Fig. 5(c): x0.1).
+    pub fn scaled(mut self, f: f64) -> Self {
+        for p in &mut self.probs {
+            *p = (*p * f).clamp(0.0, 1.0);
+        }
+        self
+    }
+
+    /// Availability trial for client `k` at iteration `n`.
+    pub fn is_available(&self, env_seed: u64, k: usize, n: usize, has_data: bool) -> bool {
+        if !has_data {
+            return false;
+        }
+        let p = self.probs[k];
+        if p >= 1.0 {
+            return true;
+        }
+        let mut rng = Pcg32::derive(env_seed, &[TAG_AVAIL, k as u64, n as u64]);
+        rng.bernoulli(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grouped_block_structure_k256() {
+        // Paper config: 256 clients, 4 data groups x 4 availability groups
+        // of 16 clients each.
+        let p = Participation::grouped(256, &[0.25, 0.1, 0.025, 0.005], 4);
+        assert_eq!(p.probs.len(), 256);
+        assert_eq!(p.probs[0], 0.25); // data group 0, avail group 0
+        assert_eq!(p.probs[16], 0.1);
+        assert_eq!(p.probs[32], 0.025);
+        assert_eq!(p.probs[48], 0.005);
+        assert_eq!(p.probs[64], 0.25); // data group 1 restarts the pattern
+        assert_eq!(p.probs[255], 0.005);
+    }
+
+    #[test]
+    fn rates_match_probabilities() {
+        let p = Participation::uniform(4, 0.1);
+        let n_trials = 20_000;
+        let hits = (0..n_trials)
+            .filter(|&n| p.is_available(7, 2, n, true))
+            .count();
+        let rate = hits as f64 / n_trials as f64;
+        assert!((rate - 0.1).abs() < 0.01, "rate {rate}");
+    }
+
+    #[test]
+    fn gated_on_data() {
+        let p = Participation::always(2);
+        assert!(!p.is_available(1, 0, 0, false));
+        assert!(p.is_available(1, 0, 0, true));
+    }
+
+    #[test]
+    fn common_random_numbers_across_algorithms() {
+        // Same (seed, k, n) -> same trial, regardless of who asks.
+        let a = Participation::uniform(8, 0.3);
+        let b = Participation::uniform(8, 0.3);
+        for n in 0..200 {
+            assert_eq!(
+                a.is_available(42, 3, n, true),
+                b.is_available(42, 3, n, true)
+            );
+        }
+    }
+
+    #[test]
+    fn scaled_clamps() {
+        let p = Participation::uniform(3, 0.5).scaled(0.1);
+        assert!((p.probs[0] - 0.05).abs() < 1e-12);
+        let q = Participation::uniform(3, 0.5).scaled(10.0);
+        assert_eq!(q.probs[0], 1.0);
+    }
+}

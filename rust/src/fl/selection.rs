@@ -1,0 +1,242 @@
+//! Partial-sharing selection matrices (paper Section II-C, eqs. 7-8).
+//!
+//! A selection matrix is diagonal 0/1; we represent its diagonal as a
+//! coordinate set (`Coords`). The schedules:
+//!
+//! * **Coordinated**: every client shares the *same* circularly-shifting
+//!   block of `m` coordinates: `diag(M_{k,n}) = circshift(e_m, m*n)`.
+//! * **Uncoordinated**: each client's block is additionally offset by its
+//!   id: `diag(M_{k,n}) = circshift(e_m, m*(n + k))` (the simulation form
+//!   used in Section V: `circshift(diag(M_{1,n}), mk)`).
+//! * **Full**: `M = I` (no communication reduction; Online-Fed(SGD), and
+//!   the Fig. 5(a) server-side ablation).
+//! * **RandomSubset**: i.i.d. uniform m-subsets - the model Assumption 4
+//!   analyzes; used by the theory-validation experiments.
+//!
+//! The client's reply matrix follows eq. (8): `S_{k,n} = M_{k,n+1}` (share
+//! the portion *further refined* by local learning) - or `S_{k,n} = M_{k,n}`
+//! for the PAO-Fed-*0 ablation of Fig. 2(a).
+
+use crate::util::rng::Pcg32;
+
+/// A set of selected coordinates out of `d`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Coords {
+    /// Contiguous circular block `start .. start+len (mod d)`.
+    Range { start: usize, len: usize, d: usize },
+    /// Explicit list.
+    List { idx: Vec<u32>, d: usize },
+    /// All `d` coordinates.
+    Full { d: usize },
+}
+
+impl Coords {
+    /// Number of selected coordinates.
+    pub fn len(&self) -> usize {
+        match self {
+            Coords::Range { len, .. } => *len,
+            Coords::List { idx, .. } => idx.len(),
+            Coords::Full { d } => *d,
+        }
+    }
+
+    /// True when nothing is selected.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Visit selected coordinates in a fixed order.
+    #[inline]
+    pub fn for_each(&self, mut f: impl FnMut(usize)) {
+        match self {
+            Coords::Range { start, len, d } => {
+                for i in 0..*len {
+                    f((start + i) % d);
+                }
+            }
+            Coords::List { idx, .. } => {
+                for &i in idx {
+                    f(i as usize);
+                }
+            }
+            Coords::Full { d } => {
+                for i in 0..*d {
+                    f(i);
+                }
+            }
+        }
+    }
+
+    /// Collect into a vector (tests / slow paths).
+    pub fn to_vec(&self) -> Vec<usize> {
+        let mut v = Vec::with_capacity(self.len());
+        self.for_each(|i| v.push(i));
+        v
+    }
+
+    /// Write a 0/1 f32 dense mask row.
+    pub fn fill_mask(&self, row: &mut [f32]) {
+        row.fill(0.0);
+        self.for_each(|i| row[i] = 1.0);
+    }
+}
+
+/// Which portion-selection discipline the federation runs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ScheduleKind {
+    Coordinated,
+    Uncoordinated,
+    Full,
+    RandomSubset,
+}
+
+/// Deterministic selection-matrix schedule for the whole federation.
+#[derive(Clone, Debug)]
+pub struct SelectionSchedule {
+    pub kind: ScheduleKind,
+    /// Model dimension D.
+    pub d: usize,
+    /// Shared coordinates per message m.
+    pub m: usize,
+    /// Seed for the RandomSubset kind (shared across algorithm variants so
+    /// comparisons use common random numbers).
+    pub seed: u64,
+}
+
+impl SelectionSchedule {
+    /// Construct; clamps `m` into [1, d] (`Full` ignores m).
+    pub fn new(kind: ScheduleKind, d: usize, m: usize, seed: u64) -> Self {
+        SelectionSchedule {
+            kind,
+            d,
+            m: m.clamp(1, d.max(1)),
+            seed,
+        }
+    }
+
+    /// Server->client selection `M_{k,n}`.
+    pub fn recv(&self, k: usize, n: usize) -> Coords {
+        match self.kind {
+            ScheduleKind::Full => Coords::Full { d: self.d },
+            ScheduleKind::Coordinated => Coords::Range {
+                start: (self.m * n) % self.d,
+                len: self.m,
+                d: self.d,
+            },
+            ScheduleKind::Uncoordinated => Coords::Range {
+                start: (self.m * (n + k)) % self.d,
+                len: self.m,
+                d: self.d,
+            },
+            ScheduleKind::RandomSubset => {
+                let mut rng = Pcg32::derive(self.seed, &[0x4d5e1, k as u64, n as u64]);
+                let mut idx: Vec<u32> = rng
+                    .sample_indices(self.d, self.m)
+                    .into_iter()
+                    .map(|i| i as u32)
+                    .collect();
+                idx.sort_unstable();
+                Coords::List { idx, d: self.d }
+            }
+        }
+    }
+
+    /// Client->server selection `S_{k,n}`.
+    ///
+    /// `refined = true` applies eq. (8): `S_{k,n} = M_{k,n+1}` (the portion
+    /// the client just refined at least once); `false` is the *0-variant
+    /// ablation `S_{k,n} = M_{k,n}`.
+    pub fn send(&self, k: usize, n: usize, refined: bool) -> Coords {
+        if refined {
+            self.recv(k, n + 1)
+        } else {
+            self.recv(k, n)
+        }
+    }
+
+    /// Overlap m > D/len never truncates a full cycle: number of iterations
+    /// to cover all coordinates for one client.
+    pub fn cycle_len(&self) -> usize {
+        self.d.div_ceil(self.m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn circshift_coordinated() {
+        let s = SelectionSchedule::new(ScheduleKind::Coordinated, 6, 2, 0);
+        assert_eq!(s.recv(0, 0).to_vec(), vec![0, 1]);
+        assert_eq!(s.recv(5, 0).to_vec(), vec![0, 1]); // same for all clients
+        assert_eq!(s.recv(0, 1).to_vec(), vec![2, 3]);
+        assert_eq!(s.recv(0, 2).to_vec(), vec![4, 5]);
+        assert_eq!(s.recv(0, 3).to_vec(), vec![0, 1]); // wraps
+    }
+
+    #[test]
+    fn circshift_uncoordinated_offsets_by_client() {
+        let s = SelectionSchedule::new(ScheduleKind::Uncoordinated, 6, 2, 0);
+        assert_eq!(s.recv(0, 0).to_vec(), vec![0, 1]);
+        assert_eq!(s.recv(1, 0).to_vec(), vec![2, 3]);
+        assert_eq!(s.recv(2, 0).to_vec(), vec![4, 5]);
+        // Client k at iter n == client 0 at iter n+k.
+        assert_eq!(s.recv(3, 2).to_vec(), s.recv(0, 5).to_vec());
+    }
+
+    #[test]
+    fn send_is_next_receive_when_refined() {
+        let s = SelectionSchedule::new(ScheduleKind::Uncoordinated, 8, 2, 0);
+        assert_eq!(s.send(3, 4, true).to_vec(), s.recv(3, 5).to_vec());
+        assert_eq!(s.send(3, 4, false).to_vec(), s.recv(3, 4).to_vec());
+    }
+
+    #[test]
+    fn wraparound_block() {
+        let s = SelectionSchedule::new(ScheduleKind::Coordinated, 5, 2, 0);
+        // n=2: start = 4, wraps to {4, 0}.
+        assert_eq!(s.recv(0, 2).to_vec(), vec![4, 0]);
+    }
+
+    #[test]
+    fn full_selects_everything() {
+        let s = SelectionSchedule::new(ScheduleKind::Full, 4, 1, 0);
+        assert_eq!(s.recv(0, 7).to_vec(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn random_subset_deterministic_and_distinct() {
+        let s = SelectionSchedule::new(ScheduleKind::RandomSubset, 10, 3, 9);
+        let a = s.recv(1, 2);
+        let b = s.recv(1, 2);
+        assert_eq!(a, b);
+        let v = a.to_vec();
+        assert_eq!(v.len(), 3);
+        let mut u = v.clone();
+        u.sort_unstable();
+        u.dedup();
+        assert_eq!(u.len(), 3);
+    }
+
+    #[test]
+    fn coverage_over_cycle() {
+        // Every coordinate of every client is touched within one cycle.
+        let s = SelectionSchedule::new(ScheduleKind::Uncoordinated, 10, 3, 0);
+        for k in 0..4 {
+            let mut seen = vec![false; 10];
+            for n in 0..s.cycle_len() * 3 {
+                s.recv(k, n).for_each(|i| seen[i] = true);
+            }
+            assert!(seen.iter().all(|&b| b), "client {k} missed coords");
+        }
+    }
+
+    #[test]
+    fn fill_mask_dense() {
+        let s = SelectionSchedule::new(ScheduleKind::Coordinated, 5, 2, 0);
+        let mut row = vec![9.0f32; 5];
+        s.recv(0, 1).fill_mask(&mut row);
+        assert_eq!(row, vec![0.0, 0.0, 1.0, 1.0, 0.0]);
+    }
+}

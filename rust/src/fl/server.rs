@@ -1,0 +1,406 @@
+//! Server-side aggregation (paper Section III-C, eqs. 14-15).
+//!
+//! Arrived updates are bucketed by their lag `l = now - sent_iter` into the
+//! sets `K_{n,l}`. Each non-empty bucket contributes the deviation
+//!
+//! ```text
+//! Delta_{n,l} = (1/|K_{n,l}|) sum_{k in K_{n,l}} S_{k,n-l} (w_k - w_n)
+//! ```
+//!
+//! and the server model moves by `w_{n+1} = w_n + sum_l alpha_l Delta_{n,l}`
+//! with the weight-decreasing schedule `alpha_l` (alpha_0 = 1; alpha_l = 0
+//! for l > l_max discards over-aged updates). When several arrived updates
+//! touch the same coordinate, only the most recently *sent* one is kept and
+//! the selection matrices of the older ones are adjusted (paper, end of
+//! Section III-C).
+//!
+//! `PlainAverage` implements the classical Online-Fed(SGD) aggregation of
+//! eq. (6) - `w_{n+1} = (1/|K_n|) sum w_k` over full-model arrivals - used
+//! by the baselines.
+
+use super::selection::Coords;
+
+/// One client->server message: the masked model portion `S_{k,n} w_{k,n+1}`.
+#[derive(Clone, Debug)]
+pub struct Update {
+    /// Sender.
+    pub client: usize,
+    /// Iteration at which the update was sent.
+    pub sent_iter: usize,
+    /// Selected coordinates (the diagonal of S).
+    pub coords: Coords,
+    /// Model values at `coords`, in `coords.for_each` order.
+    pub values: Vec<f32>,
+}
+
+/// Weight-decreasing schedule for delayed updates.
+#[derive(Clone, Debug)]
+pub enum AlphaSchedule {
+    /// alpha_l = 1 for l <= l_max (PAO-Fed-*1 and *0 variants).
+    Ones,
+    /// alpha_l = a^l for l <= l_max (PAO-Fed-*2: a = 0.2).
+    Powers(f64),
+}
+
+impl AlphaSchedule {
+    /// alpha_l; zero beyond `l_max`.
+    pub fn alpha(&self, l: usize, l_max: usize) -> f64 {
+        if l > l_max {
+            return 0.0;
+        }
+        match self {
+            AlphaSchedule::Ones => 1.0,
+            AlphaSchedule::Powers(a) => a.powi(l as i32),
+        }
+    }
+}
+
+/// Aggregation discipline.
+#[derive(Clone, Debug)]
+pub enum AggregationMode {
+    /// Eqs. (14)-(15) with a weight schedule and most-recent-wins conflict
+    /// resolution.
+    DeviationBuckets {
+        alpha: AlphaSchedule,
+        l_max: usize,
+        most_recent_wins: bool,
+    },
+    /// Eq. (6): average the arrived (full) models.
+    PlainAverage,
+}
+
+/// Aggregation statistics for one server iteration (diagnostics/tests).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AggregateInfo {
+    /// Updates applied (after discards).
+    pub applied: usize,
+    /// Updates discarded because l > l_max.
+    pub discarded_stale: usize,
+    /// Coordinate contributions dropped by conflict resolution.
+    pub conflicts_resolved: usize,
+}
+
+/// The federation server: owns the global model and applies aggregation.
+pub struct Server {
+    /// Global model w_n.
+    pub w: Vec<f32>,
+    mode: AggregationMode,
+    /// Scratch: accumulated deviation per coordinate.
+    delta: Vec<f64>,
+    /// Scratch: touched coordinate list (sparse clear).
+    touched: Vec<u32>,
+    /// Scratch: per-coordinate winning sent_iter + 1 (0 = untouched),
+    /// epoch-tagged to avoid clearing.
+    best_sent: Vec<u64>,
+    epoch: u64,
+}
+
+impl Server {
+    /// Fresh server with a zero model of dimension `d`.
+    pub fn new(d: usize, mode: AggregationMode) -> Self {
+        Server {
+            w: vec![0.0; d],
+            mode,
+            delta: vec![0.0; d],
+            touched: Vec::new(),
+            best_sent: vec![0; d],
+            epoch: 0,
+        }
+    }
+
+    /// Aggregation mode (for reporting).
+    pub fn mode(&self) -> &AggregationMode {
+        &self.mode
+    }
+
+    /// Apply the updates arriving at iteration `now`; returns statistics.
+    pub fn aggregate(&mut self, now: usize, updates: &[Update]) -> AggregateInfo {
+        match &self.mode {
+            AggregationMode::PlainAverage => self.aggregate_plain(updates),
+            AggregationMode::DeviationBuckets {
+                alpha,
+                l_max,
+                most_recent_wins,
+            } => {
+                let (alpha, l_max, mrw) = (alpha.clone(), *l_max, *most_recent_wins);
+                self.aggregate_buckets(now, updates, &alpha, l_max, mrw)
+            }
+        }
+    }
+
+    fn aggregate_plain(&mut self, updates: &[Update]) -> AggregateInfo {
+        if updates.is_empty() {
+            return AggregateInfo::default();
+        }
+        // Eq. (6): coordinate-wise mean over the arrived models. Baselines
+        // send full models, but handle partial rows defensively by averaging
+        // only over the senders covering each coordinate.
+        let d = self.w.len();
+        let mut sum = vec![0.0f64; d];
+        let mut cnt = vec![0u32; d];
+        for u in updates {
+            let mut vi = 0;
+            u.coords.for_each(|c| {
+                sum[c] += u.values[vi] as f64;
+                cnt[c] += 1;
+                vi += 1;
+            });
+        }
+        for c in 0..d {
+            if cnt[c] > 0 {
+                self.w[c] = (sum[c] / cnt[c] as f64) as f32;
+            }
+        }
+        AggregateInfo {
+            applied: updates.len(),
+            ..Default::default()
+        }
+    }
+
+    fn aggregate_buckets(
+        &mut self,
+        now: usize,
+        updates: &[Update],
+        alpha: &AlphaSchedule,
+        l_max: usize,
+        most_recent_wins: bool,
+    ) -> AggregateInfo {
+        let mut info = AggregateInfo::default();
+        if updates.is_empty() {
+            return info;
+        }
+
+        // Bucket sizes |K_{n,l}| (only over non-discarded updates).
+        let mut bucket_size = vec![0usize; l_max + 1];
+        for u in updates {
+            let l = now - u.sent_iter.min(now);
+            if l > l_max {
+                info.discarded_stale += 1;
+                continue;
+            }
+            bucket_size[l] += 1;
+        }
+
+        // Conflict resolution pre-pass: per coordinate, the most recent
+        // sent_iter wins; older contributions are masked out.
+        self.epoch += 1;
+        let epoch_base = self.epoch << 32;
+        if most_recent_wins {
+            for u in updates {
+                let l = now - u.sent_iter.min(now);
+                if l > l_max {
+                    continue;
+                }
+                let stamp = epoch_base | (u.sent_iter as u64 + 1);
+                u.coords.for_each(|c| {
+                    if self.best_sent[c] < stamp {
+                        self.best_sent[c] = stamp;
+                    }
+                });
+            }
+        }
+
+        // Accumulate sum_l alpha_l Delta_{n,l} sparsely.
+        for u in updates {
+            let l = now - u.sent_iter.min(now);
+            if l > l_max {
+                continue;
+            }
+            let a = alpha.alpha(l, l_max);
+            if a == 0.0 {
+                continue;
+            }
+            let scale = a / bucket_size[l] as f64;
+            let stamp = epoch_base | (u.sent_iter as u64 + 1);
+            let mut vi = 0;
+            let (delta, touched, best, w) =
+                (&mut self.delta, &mut self.touched, &self.best_sent, &self.w);
+            u.coords.for_each(|c| {
+                let v = u.values[vi];
+                vi += 1;
+                if most_recent_wins && best[c] != stamp {
+                    info.conflicts_resolved += 1;
+                    return;
+                }
+                if delta[c] == 0.0 {
+                    touched.push(c as u32);
+                }
+                delta[c] += scale * (v - w[c]) as f64;
+            });
+            info.applied += 1;
+        }
+
+        // Apply and clear scratch.
+        for &c in &self.touched {
+            let c = c as usize;
+            self.w[c] = (self.w[c] as f64 + self.delta[c]) as f32;
+            self.delta[c] = 0.0;
+        }
+        self.touched.clear();
+        info
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn upd(client: usize, sent: usize, coords: Vec<usize>, values: Vec<f32>, d: usize) -> Update {
+        Update {
+            client,
+            sent_iter: sent,
+            coords: Coords::List {
+                idx: coords.iter().map(|&i| i as u32).collect(),
+                d,
+            },
+            values,
+        }
+    }
+
+    fn buckets(l_max: usize, alpha: AlphaSchedule) -> AggregationMode {
+        AggregationMode::DeviationBuckets {
+            alpha,
+            l_max,
+            most_recent_wins: true,
+        }
+    }
+
+    #[test]
+    fn eq15_hand_computed_single_bucket() {
+        // w = [0,0]; two fresh updates on coord 0: values 1.0 and 3.0.
+        // Delta_{n,0} = mean(1-0, 3-0) = 2 -> w[0] = 2.
+        let mut s = Server::new(2, buckets(5, AlphaSchedule::Ones));
+        let ups = vec![
+            upd(0, 10, vec![0], vec![1.0], 2),
+            upd(1, 10, vec![0], vec![3.0], 2),
+        ];
+        let info = s.aggregate(10, &ups);
+        assert_eq!(info.applied, 2);
+        assert!((s.w[0] - 2.0).abs() < 1e-6);
+        assert_eq!(s.w[1], 0.0);
+    }
+
+    #[test]
+    fn eq15_weighted_delayed_bucket() {
+        // alpha_l = 0.2^l. One update delayed by 2: contribution 0.04 * (v - w).
+        let mut s = Server::new(1, buckets(10, AlphaSchedule::Powers(0.2)));
+        s.w[0] = 1.0;
+        let ups = vec![upd(0, 8, vec![0], vec![2.0], 1)];
+        s.aggregate(10, &ups);
+        assert!((s.w[0] - (1.0 + 0.04 * 1.0)).abs() < 1e-6, "{}", s.w[0]);
+    }
+
+    #[test]
+    fn buckets_average_within_and_sum_across() {
+        // Bucket l=0: clients 0,1 on coord 0 (values 2, 4; w=0 -> Delta=3).
+        // Bucket l=1: client 2 on coord 0 (value 10 -> Delta=10).
+        // alpha = 1: w[0] = 0 + 3 + 10 = 13. (no conflict resolution here)
+        let mut s = Server::new(
+            1,
+            AggregationMode::DeviationBuckets {
+                alpha: AlphaSchedule::Ones,
+                l_max: 5,
+                most_recent_wins: false,
+            },
+        );
+        let ups = vec![
+            upd(0, 10, vec![0], vec![2.0], 1),
+            upd(1, 10, vec![0], vec![4.0], 1),
+            upd(2, 9, vec![0], vec![10.0], 1),
+        ];
+        s.aggregate(10, &ups);
+        assert!((s.w[0] - 13.0).abs() < 1e-6, "{}", s.w[0]);
+    }
+
+    #[test]
+    fn most_recent_wins_drops_older_coordinate() {
+        // Older (sent 8) and newer (sent 10) updates both touch coord 0;
+        // only the newer contributes.
+        let mut s = Server::new(2, buckets(10, AlphaSchedule::Ones));
+        let ups = vec![
+            upd(0, 8, vec![0, 1], vec![100.0, 7.0], 2),
+            upd(1, 10, vec![0], vec![2.0], 2),
+        ];
+        let info = s.aggregate(10, &ups);
+        assert_eq!(info.conflicts_resolved, 1);
+        assert!((s.w[0] - 2.0).abs() < 1e-6, "{}", s.w[0]);
+        // Coord 1 only touched by the older update: still applied.
+        assert!((s.w[1] - 7.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stale_updates_discarded() {
+        let mut s = Server::new(1, buckets(3, AlphaSchedule::Ones));
+        let ups = vec![upd(0, 0, vec![0], vec![5.0], 1)];
+        let info = s.aggregate(10, &ups); // l = 10 > 3
+        assert_eq!(info.discarded_stale, 1);
+        assert_eq!(info.applied, 0);
+        assert_eq!(s.w[0], 0.0);
+    }
+
+    #[test]
+    fn no_updates_no_change() {
+        let mut s = Server::new(3, buckets(5, AlphaSchedule::Ones));
+        s.w = vec![1.0, 2.0, 3.0];
+        let w0 = s.w.clone();
+        s.aggregate(4, &[]);
+        assert_eq!(s.w, w0);
+    }
+
+    #[test]
+    fn plain_average_eq6() {
+        let mut s = Server::new(2, AggregationMode::PlainAverage);
+        s.w = vec![9.0, 9.0];
+        let ups = vec![
+            upd(0, 10, vec![0, 1], vec![1.0, 3.0], 2),
+            upd(1, 10, vec![0, 1], vec![3.0, 5.0], 2),
+        ];
+        s.aggregate(10, &ups);
+        assert_eq!(s.w, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn plain_average_keeps_model_when_silent() {
+        let mut s = Server::new(2, AggregationMode::PlainAverage);
+        s.w = vec![1.5, -2.5];
+        s.aggregate(3, &[]);
+        assert_eq!(s.w, vec![1.5, -2.5]);
+    }
+
+    #[test]
+    fn full_share_alpha_one_no_delay_equals_fedavg_deviation() {
+        // With full coords, one bucket, alpha=1: w' = w + mean(w_k - w)
+        // == mean(w_k) -> identical to eq. (6) on the same inputs.
+        let d = 3;
+        let mut s1 = Server::new(d, buckets(5, AlphaSchedule::Ones));
+        let mut s2 = Server::new(d, AggregationMode::PlainAverage);
+        s1.w = vec![0.5, -1.0, 2.0];
+        s2.w = s1.w.clone();
+        let mk = |c: usize, vals: Vec<f32>| Update {
+            client: c,
+            sent_iter: 4,
+            coords: Coords::Full { d },
+            values: vals,
+        };
+        let ups = vec![mk(0, vec![1.0, 0.0, 1.0]), mk(1, vec![2.0, -2.0, 3.0])];
+        s1.aggregate(4, &ups);
+        s2.aggregate(4, &ups);
+        for (a, b) in s1.w.iter().zip(&s2.w) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_iterations() {
+        // Run many aggregations; scratch epoch logic must not leak state.
+        let mut s = Server::new(4, buckets(5, AlphaSchedule::Ones));
+        for it in 0..100 {
+            let ups = vec![upd(0, it, vec![it % 4], vec![1.0], 4)];
+            s.aggregate(it, &ups);
+        }
+        // Convergence of every coordinate toward 1.0.
+        for c in 0..4 {
+            assert!((s.w[c] - 1.0).abs() < 1e-3, "coord {c} = {}", s.w[c]);
+        }
+    }
+}

@@ -1,0 +1,34 @@
+//! # PAO-Fed: communication-efficient asynchronous online federated learning
+//!
+//! A three-layer reproduction of Gauthier et al., *"Asynchronous Online
+//! Federated Learning with Reduced Communication Requirements"* (IEEE IoT
+//! Journal 2023, DOI 10.1109/JIOT.2023.3314923):
+//!
+//! * **Layer 3 (this crate)** — the coordination contribution: partial-
+//!   sharing selection schedules, random participation, delay channels, the
+//!   weight-decreasing aggregation (eqs. 14-15), baselines, a discrete-event
+//!   Monte-Carlo engine, a thread-based asynchronous deployment runtime,
+//!   Section-IV theory machinery, and the full experiment harness
+//!   regenerating every figure of Section V.
+//! * **Layer 2/1 (python, build-time only)** — the JAX compute graph and the
+//!   fused Pallas RFF+KLMS kernel, AOT-lowered to HLO text under
+//!   `artifacts/` and executed here through the PJRT CPU client
+//!   ([`runtime`]).
+//!
+//! Quickstart: see `examples/quickstart.rs`; the `pao-fed` binary exposes
+//! every experiment (`pao-fed fig3a`, `pao-fed all`, ...).
+
+pub mod async_rt;
+pub mod cli;
+pub mod data;
+pub mod error;
+pub mod experiments;
+pub mod fl;
+pub mod linalg;
+pub mod metrics;
+pub mod rff;
+pub mod runtime;
+pub mod theory;
+pub mod util;
+
+pub use error::{Error, Result};

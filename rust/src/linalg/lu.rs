@@ -1,0 +1,175 @@
+//! LU decomposition with partial pivoting: solve / inverse / determinant.
+//!
+//! Used by the theory module to solve `(I - F^T) sigma = bvec(E)` for the
+//! steady-state MSD (eq. 38) and by tests needing exact small inverses.
+
+use super::Mat;
+use crate::error::{Error, Result};
+
+/// Packed LU factors of a square matrix (Doolittle, partial pivoting).
+pub struct Lu {
+    lu: Mat,
+    piv: Vec<usize>,
+    /// Number of row swaps (for the determinant sign).
+    swaps: usize,
+}
+
+impl Lu {
+    /// Factor `a` (consumed by copy). Fails on (numerically) singular input.
+    pub fn factor(a: &Mat) -> Result<Lu> {
+        assert_eq!(a.rows, a.cols, "LU requires square matrix");
+        let n = a.rows;
+        let mut lu = a.clone();
+        let mut piv: Vec<usize> = (0..n).collect();
+        let mut swaps = 0;
+        for col in 0..n {
+            // Pivot: largest |entry| in this column at/below the diagonal.
+            let mut p = col;
+            let mut best = lu[(col, col)].abs();
+            for r in (col + 1)..n {
+                let v = lu[(r, col)].abs();
+                if v > best {
+                    best = v;
+                    p = r;
+                }
+            }
+            if best < 1e-300 {
+                return Err(Error::Numerical(format!(
+                    "singular matrix at column {col} (pivot {best:.3e})"
+                )));
+            }
+            if p != col {
+                for j in 0..n {
+                    lu.data.swap(col * n + j, p * n + j);
+                }
+                piv.swap(col, p);
+                swaps += 1;
+            }
+            let d = lu[(col, col)];
+            for r in (col + 1)..n {
+                let f = lu[(r, col)] / d;
+                lu[(r, col)] = f;
+                if f == 0.0 {
+                    continue;
+                }
+                for j in (col + 1)..n {
+                    let v = lu[(col, j)];
+                    lu[(r, j)] -= f * v;
+                }
+            }
+        }
+        Ok(Lu { lu, piv, swaps })
+    }
+
+    /// Solve `A x = b`.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.lu.rows;
+        assert_eq!(b.len(), n);
+        // Apply permutation.
+        let mut x: Vec<f64> = self.piv.iter().map(|&p| b[p]).collect();
+        // Forward substitution (unit lower).
+        for i in 1..n {
+            let mut s = x[i];
+            for j in 0..i {
+                s -= self.lu[(i, j)] * x[j];
+            }
+            x[i] = s;
+        }
+        // Back substitution.
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for j in (i + 1)..n {
+                s -= self.lu[(i, j)] * x[j];
+            }
+            x[i] = s / self.lu[(i, i)];
+        }
+        x
+    }
+
+    /// Full inverse (column-by-column solve).
+    pub fn inverse(&self) -> Mat {
+        let n = self.lu.rows;
+        let mut inv = Mat::zeros(n, n);
+        let mut e = vec![0.0; n];
+        for j in 0..n {
+            e[j] = 1.0;
+            let col = self.solve(&e);
+            for i in 0..n {
+                inv[(i, j)] = col[i];
+            }
+            e[j] = 0.0;
+        }
+        inv
+    }
+
+    /// Determinant from the diagonal of U and the swap parity.
+    pub fn det(&self) -> f64 {
+        let n = self.lu.rows;
+        let mut d = if self.swaps % 2 == 0 { 1.0 } else { -1.0 };
+        for i in 0..n {
+            d *= self.lu[(i, i)];
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solve_hand_system() {
+        // 2x + y = 5; x + 3y = 10 -> x = 1, y = 3.
+        let a = Mat::from_rows(&[&[2.0, 1.0], &[1.0, 3.0]]);
+        let lu = Lu::factor(&a).unwrap();
+        let x = lu.solve(&[5.0, 10.0]);
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverse_matches_identity() {
+        let a = Mat::from_rows(&[&[4.0, 7.0, 1.0], &[2.0, 6.0, 0.0], &[1.0, 0.0, 3.0]]);
+        let inv = Lu::factor(&a).unwrap().inverse();
+        let prod = a.matmul(&inv);
+        for i in 0..3 {
+            for j in 0..3 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod[(i, j)] - want).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn det_hand_value() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let d = Lu::factor(&a).unwrap().det();
+        assert!((d + 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn singular_rejected() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]);
+        assert!(Lu::factor(&a).is_err());
+    }
+
+    #[test]
+    fn random_solve_roundtrip() {
+        let mut rng = crate::util::rng::Pcg32::new(3, 0);
+        for _ in 0..20 {
+            let n = 8;
+            let a = Mat::from_fn(n, n, |i, j| {
+                rng_val(&mut rng) + if i == j { 4.0 } else { 0.0 }
+            });
+            let x_true: Vec<f64> = (0..n).map(|_| rng_val(&mut rng)).collect();
+            let b = a.matvec(&x_true);
+            let x = Lu::factor(&a).unwrap().solve(&b);
+            for (u, v) in x.iter().zip(&x_true) {
+                assert!((u - v).abs() < 1e-9);
+            }
+        }
+        fn rng_val(r: &mut crate::util::rng::Pcg32) -> f64 {
+            r.gaussian()
+        }
+    }
+}

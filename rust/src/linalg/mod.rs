@@ -1,0 +1,306 @@
+//! Dense linear-algebra substrate (f64), built from scratch for the theory
+//! module (Section IV machinery: Kronecker lifts, LU solves, spectral radii)
+//! and for step-size bound computation (`lambda_max(R_k)`).
+//!
+//! Deliberately minimal: row-major `Mat`, matmul, Kronecker product, partial-
+//! pivot LU with solve/inverse, and power iteration. No BLAS is available in
+//! the offline environment; sizes used by `theory/` stay <= a few thousand.
+
+mod lu;
+
+pub use lu::Lu;
+
+/// Row-major dense matrix of f64.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Identity.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Build from nested slices (test convenience).
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        let mut m = Mat::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c);
+            m.data[i * c..(i + 1) * c].copy_from_slice(row);
+        }
+        m
+    }
+
+    /// Matrix product `self * other`.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (n, k, m) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(n, m);
+        // ikj loop order: streams over `other` rows, cache-friendly.
+        for i in 0..n {
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &other.data[p * m..(p + 1) * m];
+                let crow = &mut out.data[i * m..(i + 1) * m];
+                for j in 0..m {
+                    crow[j] += a * orow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len());
+        self.data
+            .chunks(self.cols)
+            .map(|row| row.iter().zip(v).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+    }
+
+    /// In-place scaled accumulate: `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f64, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Scale all entries.
+    pub fn scale(&mut self, alpha: f64) {
+        for a in &mut self.data {
+            *a *= alpha;
+        }
+    }
+
+    /// Kronecker product `self (x) other`.
+    pub fn kron(&self, other: &Mat) -> Mat {
+        let (r1, c1, r2, c2) = (self.rows, self.cols, other.rows, other.cols);
+        let mut out = Mat::zeros(r1 * r2, c1 * c2);
+        for i1 in 0..r1 {
+            for j1 in 0..c1 {
+                let a = self[(i1, j1)];
+                if a == 0.0 {
+                    continue;
+                }
+                for i2 in 0..r2 {
+                    let dst = (i1 * r2 + i2) * out.cols + j1 * c2;
+                    let src = i2 * c2;
+                    for j2 in 0..c2 {
+                        out.data[dst + j2] = a * other.data[src + j2];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Copy `block` into self with its (0,0) at (r0, c0).
+    pub fn set_block(&mut self, r0: usize, c0: usize, block: &Mat) {
+        assert!(r0 + block.rows <= self.rows && c0 + block.cols <= self.cols);
+        for i in 0..block.rows {
+            let dst = (r0 + i) * self.cols + c0;
+            let src = i * block.cols;
+            self.data[dst..dst + block.cols].copy_from_slice(&block.data[src..src + block.cols]);
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Maximum absolute row sum (the infinity norm); upper-bounds the
+    /// spectral radius and is exact for (right-)stochastic nonneg matrices.
+    pub fn inf_norm(&self) -> f64 {
+        self.data
+            .chunks(self.cols)
+            .map(|r| r.iter().map(|x| x.abs()).sum::<f64>())
+            .fold(0.0, f64::max)
+    }
+
+    /// vec(Σ): column-stacking vectorization (matches `A (x) B` identities:
+    /// vec(B X A^T) = (A (x) B) vec(X)).
+    pub fn vec_cols(&self) -> Vec<f64> {
+        let mut v = Vec::with_capacity(self.rows * self.cols);
+        for j in 0..self.cols {
+            for i in 0..self.rows {
+                v.push(self[(i, j)]);
+            }
+        }
+        v
+    }
+
+    /// Inverse of vec_cols for square targets.
+    pub fn from_vec_cols(n: usize, v: &[f64]) -> Mat {
+        assert_eq!(v.len(), n * n);
+        Mat::from_fn(n, n, |i, j| v[j * n + i])
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Dominant-eigenvalue magnitude via power iteration with periodic
+/// re-normalization. For symmetric PSD matrices (correlation matrices R_k)
+/// this is `lambda_max`; for general matrices it estimates the spectral
+/// radius when the dominant eigenvalue is real and simple.
+pub fn power_iteration(m: &Mat, iters: usize, seed: u64) -> f64 {
+    assert_eq!(m.rows, m.cols);
+    let n = m.rows;
+    let mut rng = crate::util::rng::Pcg32::new(seed, 77);
+    let mut v: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+    let norm = |v: &[f64]| v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    let mut lambda = 0.0;
+    for _ in 0..iters {
+        let w = m.matvec(&v);
+        let nw = norm(&w);
+        if nw < 1e-300 {
+            return 0.0;
+        }
+        lambda = nw / norm(&v).max(1e-300);
+        v = w.iter().map(|x| x / nw).collect();
+    }
+    lambda
+}
+
+/// Sample covariance (correlation matrix) of row-vectors in `samples`
+/// ([n, d] row-major): `R = (1/n) sum z z^T`.
+pub fn correlation_from_samples(samples: &[f64], n: usize, d: usize) -> Mat {
+    assert_eq!(samples.len(), n * d);
+    let mut r = Mat::zeros(d, d);
+    for s in 0..n {
+        let z = &samples[s * d..(s + 1) * d];
+        for i in 0..d {
+            let zi = z[i];
+            if zi == 0.0 {
+                continue;
+            }
+            let row = &mut r.data[i * d..(i + 1) * d];
+            for j in 0..d {
+                row[j] += zi * z[j];
+            }
+        }
+    }
+    r.scale(1.0 / n as f64);
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_hand_values() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Mat::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c, Mat::from_rows(&[&[19.0, 22.0], &[43.0, 50.0]]));
+    }
+
+    #[test]
+    fn kron_hand_values() {
+        let a = Mat::from_rows(&[&[1.0, 2.0]]);
+        let b = Mat::from_rows(&[&[0.0, 3.0], &[4.0, 0.0]]);
+        let k = a.kron(&b);
+        assert_eq!(
+            k,
+            Mat::from_rows(&[&[0.0, 3.0, 0.0, 6.0], &[4.0, 0.0, 8.0, 0.0]])
+        );
+    }
+
+    #[test]
+    fn vec_identity_kron() {
+        // vec(B X A^T) == (A (x) B) vec(X)
+        let a = Mat::from_rows(&[&[1.0, -2.0], &[0.5, 3.0]]);
+        let b = Mat::from_rows(&[&[2.0, 1.0], &[-1.0, 4.0]]);
+        let x = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let lhs = b.matmul(&x).matmul(&a.transpose()).vec_cols();
+        let rhs = a.kron(&b).matvec(&x.vec_cols());
+        for (l, r) in lhs.iter().zip(&rhs) {
+            assert!((l - r).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn power_iteration_finds_lambda_max() {
+        // Symmetric with eigenvalues 5 and 1.
+        let m = Mat::from_rows(&[&[3.0, 2.0], &[2.0, 3.0]]);
+        let l = power_iteration(&m, 200, 1);
+        assert!((l - 5.0).abs() < 1e-6, "{l}");
+    }
+
+    #[test]
+    fn correlation_of_unit_axes() {
+        // Samples alternating e1, e2 -> R = 0.5 I.
+        let samples = vec![1.0, 0.0, 0.0, 1.0, 1.0, 0.0, 0.0, 1.0];
+        let r = correlation_from_samples(&samples, 4, 2);
+        assert!((r[(0, 0)] - 0.5).abs() < 1e-12);
+        assert!((r[(1, 1)] - 0.5).abs() < 1e-12);
+        assert!(r[(0, 1)].abs() < 1e-12);
+    }
+
+    #[test]
+    fn inf_norm_stochastic_is_one() {
+        let m = Mat::from_rows(&[&[0.25, 0.75], &[0.5, 0.5]]);
+        assert!((m.inf_norm() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn vec_cols_roundtrip() {
+        let m = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let v = m.vec_cols();
+        assert_eq!(v, vec![1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(Mat::from_vec_cols(2, &v), m);
+    }
+}

@@ -1,0 +1,82 @@
+//! `pao-fed` - experiment launcher for the PAO-Fed reproduction.
+//!
+//! ```text
+//! pao-fed <experiment> [flags]
+//!
+//! experiments: fig2a fig2b fig2c fig3a fig3b fig3c fig4 fig5a fig5b fig5c
+//!              theory all
+//! flags:
+//!   --mc N        Monte-Carlo runs per curve            (default 3)
+//!   --seed S      base seed                             (default 2023)
+//!   --iters N     federation iterations                 (default 2000)
+//!   --clients K   number of clients                     (default 256)
+//!   --out DIR     results directory                     (default results/)
+//!   --xla         run the client step through the AOT PJRT artifacts
+//!   --quiet       suppress ASCII charts
+//! ```
+
+use pao_fed::cli::Args;
+use pao_fed::experiments::{self, BackendKind, ExperimentCtx};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: pao-fed <experiment> [--mc N] [--seed S] [--iters N] [--clients K] \
+         [--out DIR] [--xla] [--quiet]\n\
+         experiments: {} all | extras: {} extras",
+        experiments::ALL.join(" "),
+        experiments::EXTRAS.join(" ")
+    );
+    std::process::exit(2);
+}
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            usage();
+        }
+    };
+    if args.has("help") {
+        usage();
+    }
+    let Some(cmd) = args.command.clone() else {
+        usage();
+    };
+
+    let parse = || -> Result<ExperimentCtx, String> {
+        Ok(ExperimentCtx {
+            mc: args.get_parse("mc", 3usize)?,
+            seed: args.get_parse("seed", 2023u64)?,
+            backend: if args.has("xla") {
+                BackendKind::Xla
+            } else {
+                BackendKind::Native
+            },
+            outdir: args.get("out").unwrap_or("results").into(),
+            iters: args.get("iters").map(|v| v.parse()).transpose().map_err(|_| "bad --iters".to_string())?,
+            clients: args.get("clients").map(|v| v.parse()).transpose().map_err(|_| "bad --clients".to_string())?,
+            quiet: args.has("quiet"),
+        })
+    };
+    let ctx = match parse() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            usage();
+        }
+    };
+
+    let ids: Vec<&str> = match cmd.as_str() {
+        "all" => experiments::ALL.to_vec(),
+        "extras" => experiments::EXTRAS.to_vec(),
+        _ => vec![cmd.as_str()],
+    };
+    for id in ids {
+        println!("=== {id} ===");
+        if let Err(e) = experiments::run(id, &ctx) {
+            eprintln!("{id} failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Evaluation metrics: test MSE (eq. 40), dB conversion, MSD, and
+//! communication accounting.
+
+/// Test-set mean squared error of a model `w [D]` against a featurized test
+/// set `z_test [T, D]` (row-major), `y_test [T]` — the inner term of eq. 40.
+pub fn mse_test(w: &[f32], z_test: &[f32], y_test: &[f32]) -> f64 {
+    let d = w.len();
+    assert_eq!(z_test.len(), y_test.len() * d);
+    let mut acc = 0.0f64;
+    for (row, &y) in z_test.chunks(d).zip(y_test) {
+        let pred: f32 = row.iter().zip(w).map(|(a, b)| a * b).sum();
+        let r = (y - pred) as f64;
+        acc += r * r;
+    }
+    acc / y_test.len() as f64
+}
+
+/// Convert a linear MSE to decibels: 10 log10(mse).
+pub fn to_db(mse: f64) -> f64 {
+    10.0 * mse.max(1e-300).log10()
+}
+
+/// Mean square deviation ||w - w*||^2 between two models.
+pub fn msd(w: &[f32], w_star: &[f32]) -> f64 {
+    w.iter()
+        .zip(w_star)
+        .map(|(a, b)| {
+            let d = (a - b) as f64;
+            d * d
+        })
+        .sum()
+}
+
+/// Communication accounting: scalar counts exchanged over the federation.
+///
+/// Partial sharing sends `m` of `D` model entries per message; the counters
+/// let every experiment report the paper's "98% reduction" claim exactly.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CommStats {
+    /// Scalars sent server -> clients.
+    pub downlink_scalars: u64,
+    /// Scalars sent clients -> server.
+    pub uplink_scalars: u64,
+    /// Number of server -> client messages.
+    pub downlink_msgs: u64,
+    /// Number of client -> server messages.
+    pub uplink_msgs: u64,
+}
+
+impl CommStats {
+    /// Total scalars moved in either direction.
+    pub fn total_scalars(&self) -> u64 {
+        self.downlink_scalars + self.uplink_scalars
+    }
+
+    /// Reduction ratio versus a full-model baseline (e.g. Online-FedSGD):
+    /// `1 - total/baseline_total`. 0.98 == "98% less communication".
+    pub fn reduction_vs(&self, baseline: &CommStats) -> f64 {
+        let b = baseline.total_scalars();
+        if b == 0 {
+            return 0.0;
+        }
+        1.0 - self.total_scalars() as f64 / b as f64
+    }
+
+    /// Accumulate another run's counters (Monte-Carlo totals).
+    pub fn add(&mut self, other: &CommStats) {
+        self.downlink_scalars += other.downlink_scalars;
+        self.uplink_scalars += other.uplink_scalars;
+        self.downlink_msgs += other.downlink_msgs;
+        self.uplink_msgs += other.uplink_msgs;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mse_hand_value() {
+        // w = [1, 0]; z rows [[1,0],[0,1]]; y = [2, 1] -> errors [1, 1].
+        let mse = mse_test(&[1.0, 0.0], &[1.0, 0.0, 0.0, 1.0], &[2.0, 1.0]);
+        assert!((mse - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perfect_model_zero_mse() {
+        let w = [0.5f32, -2.0];
+        let z = [1.0f32, 1.0, 2.0, 0.0];
+        let y = [0.5f32 - 2.0, 1.0];
+        let mse = mse_test(&w, &z, &y);
+        assert!(mse < 1e-12);
+    }
+
+    #[test]
+    fn db_conversion() {
+        assert!((to_db(1.0) - 0.0).abs() < 1e-12);
+        assert!((to_db(0.001) + 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn msd_hand_value() {
+        assert!((msd(&[1.0, 2.0], &[0.0, 0.0]) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn comm_reduction() {
+        let full = CommStats {
+            downlink_scalars: 1000,
+            uplink_scalars: 1000,
+            downlink_msgs: 10,
+            uplink_msgs: 10,
+        };
+        let partial = CommStats {
+            downlink_scalars: 20,
+            uplink_scalars: 20,
+            downlink_msgs: 10,
+            uplink_msgs: 10,
+        };
+        assert!((partial.reduction_vs(&full) - 0.98).abs() < 1e-12);
+    }
+}

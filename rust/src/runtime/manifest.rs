@@ -1,0 +1,199 @@
+//! `artifacts/manifest.json` parsing.
+//!
+//! The python AOT step (`python/compile/aot.py`) records, for every HLO-text
+//! artifact, its kind, dimensions, positional parameter shapes and output
+//! shapes. The rust runtime marshals literals strictly from this metadata -
+//! no shape is hard-coded on the rust side.
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// One named tensor slot (parameter or output).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Slot {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl Slot {
+    /// Number of elements.
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// "client_step" | "rff" | "eval".
+    pub kind: String,
+    /// HLO text file (relative to the artifact dir).
+    pub file: PathBuf,
+    /// Named dimensions (k, d, l, t).
+    pub dims: std::collections::BTreeMap<String, usize>,
+    /// Positional parameters.
+    pub params: Vec<Slot>,
+    /// Tuple outputs.
+    pub outputs: Vec<Slot>,
+}
+
+impl ArtifactSpec {
+    /// Dimension lookup.
+    pub fn dim(&self, name: &str) -> Option<usize> {
+        self.dims.get(name).copied()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+fn slots(j: &Json, what: &str) -> Result<Vec<Slot>> {
+    j.as_arr()
+        .ok_or_else(|| Error::Artifact(format!("{what} is not an array")))?
+        .iter()
+        .map(|p| {
+            let pair = p
+                .as_arr()
+                .filter(|a| a.len() == 2)
+                .ok_or_else(|| Error::Artifact(format!("bad {what} entry")))?;
+            let name = pair[0]
+                .as_str()
+                .ok_or_else(|| Error::Artifact(format!("bad {what} name")))?
+                .to_string();
+            let shape = pair[1]
+                .as_arr()
+                .ok_or_else(|| Error::Artifact(format!("bad {what} shape")))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| Error::Artifact("bad dim".into())))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(Slot { name, shape })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {path:?}: {e}; run `make artifacts` first"
+            ))
+        })?;
+        let j = Json::parse(&text).map_err(|e| Error::Artifact(format!("bad manifest: {e}")))?;
+        let arts = j
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| Error::Artifact("manifest missing `artifacts`".into()))?;
+        let mut artifacts = Vec::new();
+        for a in arts {
+            let name = a
+                .get("name")
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| Error::Artifact("artifact missing name".into()))?
+                .to_string();
+            let kind = a
+                .get("kind")
+                .and_then(|x| x.as_str())
+                .unwrap_or("unknown")
+                .to_string();
+            let file = a
+                .get("file")
+                .and_then(|x| x.as_str())
+                .map(PathBuf::from)
+                .unwrap_or_else(|| PathBuf::from(format!("{name}.hlo.txt")));
+            let mut dims = std::collections::BTreeMap::new();
+            if let Some(Json::Obj(m)) = a.get("dims") {
+                for (k, v) in m {
+                    if let Some(n) = v.as_usize() {
+                        dims.insert(k.clone(), n);
+                    }
+                }
+            }
+            let params = slots(
+                a.get("params").unwrap_or(&Json::Arr(vec![])),
+                "params",
+            )?;
+            let outputs = slots(
+                a.get("outputs").unwrap_or(&Json::Arr(vec![])),
+                "outputs",
+            )?;
+            artifacts.push(ArtifactSpec {
+                name,
+                kind,
+                file,
+                dims,
+                params,
+                outputs,
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+        })
+    }
+
+    /// Find an artifact by exact name.
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Find an artifact by kind and dimension constraints.
+    pub fn find(&self, kind: &str, dims: &[(&str, usize)]) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == kind && dims.iter().all(|&(k, v)| a.dim(k) == Some(v)))
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format":"hlo-text","dtype":"f32","artifacts":[
+              {"name":"client_step_k8_d16_l4","kind":"client_step",
+               "dims":{"k":8,"d":16,"l":4},"file":"client_step_k8_d16_l4.hlo.txt",
+               "params":[["w_local",[8,16]],["mu",[]]],
+               "outputs":[["w_new",[8,16]],["e",[8]]]}
+            ]}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn loads_and_indexes() {
+        let dir = std::env::temp_dir().join("pao_fed_manifest_test");
+        write_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.by_name("client_step_k8_d16_l4").unwrap();
+        assert_eq!(a.dim("k"), Some(8));
+        assert_eq!(a.params[0].shape, vec![8, 16]);
+        assert_eq!(a.params[1].elems(), 1);
+        assert_eq!(a.outputs[1].name, "e");
+        assert!(m.find("client_step", &[("k", 8), ("d", 16)]).is_some());
+        assert!(m.find("client_step", &[("k", 9)]).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_is_friendly() {
+        let err = Manifest::load(Path::new("/nonexistent-pao-fed")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,152 @@
+//! PJRT runtime: load the AOT-lowered HLO-text artifacts and execute them
+//! from the coordinator's hot path.
+//!
+//! Pipeline (see /opt/xla-example and DESIGN.md): `PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile` -> `execute_b` with device-resident input buffers.
+//! HLO *text* is the interchange format because xla_extension 0.5.1 rejects
+//! the 64-bit instruction ids of jax>=0.5 serialized protos.
+//!
+//! Python never runs here: artifacts are produced once by `make artifacts`.
+
+pub mod manifest;
+mod xla_backend;
+
+pub use manifest::{ArtifactSpec, Manifest, Slot};
+pub use xla_backend::XlaBackend;
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Default artifact directory (relative to the repo root).
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// A PJRT CPU engine holding compiled executables for the artifact set.
+pub struct PjRtEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjRtEngine {
+    /// Create a CPU engine over the artifact directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjRtEngine {
+            client,
+            manifest,
+            exes: HashMap::new(),
+        })
+    }
+
+    /// The manifest in use.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact.
+    pub fn prepare(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self
+            .manifest
+            .by_name(name)
+            .ok_or_else(|| Error::Artifact(format!("unknown artifact {name}")))?;
+        let path = self.manifest.path_of(spec);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Upload a host f32 tensor to the device.
+    pub fn buffer(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Execute artifact `name` with positional f32 inputs, validating
+    /// shapes against the manifest; returns the flattened f32 outputs in
+    /// manifest order.
+    pub fn execute_f32(&mut self, name: &str, args: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        self.prepare(name)?;
+        let spec = self.manifest.by_name(name).unwrap().clone();
+        if args.len() != spec.params.len() {
+            return Err(Error::Artifact(format!(
+                "{name}: expected {} args, got {}",
+                spec.params.len(),
+                args.len()
+            )));
+        }
+        let mut bufs = Vec::with_capacity(args.len());
+        for (a, slot) in args.iter().zip(&spec.params) {
+            if a.len() != slot.elems() {
+                return Err(Error::Artifact(format!(
+                    "{name}: param {} expects {} elems, got {}",
+                    slot.name,
+                    slot.elems(),
+                    a.len()
+                )));
+            }
+            bufs.push(self.buffer(a, &slot.shape)?);
+        }
+        let exe = self.exes.get(name).unwrap();
+        let outs = exe.execute_b::<xla::PjRtBuffer>(&bufs)?;
+        Self::unpack(&spec, outs)
+    }
+
+    /// Execute with caller-managed device buffers (hot path: persistent
+    /// constants such as Omega / b / z_test are uploaded once).
+    pub fn execute_buffers(
+        &mut self,
+        name: &str,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<Vec<f32>>> {
+        self.prepare(name)?;
+        let spec = self.manifest.by_name(name).unwrap().clone();
+        let exe = self.exes.get(name).unwrap();
+        let outs = exe.execute_b::<&xla::PjRtBuffer>(args)?;
+        Self::unpack(&spec, outs)
+    }
+
+    fn unpack(spec: &ArtifactSpec, outs: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<Vec<f32>>> {
+        let first = outs
+            .into_iter()
+            .next()
+            .and_then(|r| r.into_iter().next())
+            .ok_or_else(|| Error::Xla("no output buffer".into()))?;
+        // aot.py lowers with return_tuple=True: a single tuple output.
+        let mut lit = first.to_literal_sync()?;
+        let parts = lit.decompose_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            return Err(Error::Artifact(format!(
+                "{}: expected {} outputs, got {}",
+                spec.name,
+                spec.outputs.len(),
+                parts.len()
+            )));
+        }
+        parts.into_iter().map(|p| Ok(p.to_vec::<f32>()?)).collect()
+    }
+}
+
+/// Locate the artifact directory: `$PAO_FED_ARTIFACTS`, else `artifacts/`
+/// relative to the current dir, else relative to the crate root.
+pub fn artifact_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("PAO_FED_ARTIFACTS") {
+        return p.into();
+    }
+    let cwd = std::path::PathBuf::from(DEFAULT_ARTIFACT_DIR);
+    if cwd.join("manifest.json").exists() {
+        return cwd;
+    }
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(DEFAULT_ARTIFACT_DIR)
+}

@@ -1,0 +1,143 @@
+//! `ComputeBackend` implementation over the AOT-compiled XLA executables.
+//!
+//! The fused client step (Layer-1 Pallas kernel inside the Layer-2 JAX
+//! graph) runs through `client_step_k{K}_d{D}_l{L}.hlo.txt`; the test set is
+//! featurized through `rff_t{T}_d{D}_l{L}` and evaluated through
+//! `eval_t{T}_d{D}` when the shapes line up (falling back to the native
+//! implementations otherwise - e.g. ad-hoc sizes in tests).
+//!
+//! RFF parameters are runtime *inputs* of the artifacts; they are uploaded
+//! to the device once at construction and reused every iteration.
+
+use super::PjRtEngine;
+use crate::error::{Error, Result};
+use crate::fl::backend::{ComputeBackend, StepArgs};
+use crate::rff::RffSpace;
+
+/// XLA-backed compute provider for a fixed (K, D, L) federation shape.
+pub struct XlaBackend {
+    engine: PjRtEngine,
+    rff: RffSpace,
+    k: usize,
+    step_name: String,
+    rff_name: Option<String>,
+    eval_name: Option<String>,
+    /// Device-resident RFF parameters (uploaded once).
+    omega_buf: xla::PjRtBuffer,
+    b_buf: xla::PjRtBuffer,
+    /// Cached device buffer for the step size (constant within a run).
+    mu_buf: Option<(f32, xla::PjRtBuffer)>,
+    /// Native fallback for shapes without a matching artifact.
+    native: crate::fl::backend::NativeBackend,
+}
+
+impl XlaBackend {
+    /// Build over the artifact directory for `k` clients and the RFF
+    /// realization `rff` (defines D and L). Fails if no `client_step`
+    /// artifact matches (k, d, l).
+    pub fn new(artifact_dir: &std::path::Path, k: usize, rff: RffSpace) -> Result<Self> {
+        let mut engine = PjRtEngine::load(artifact_dir)?;
+        let (d, l) = (rff.d, rff.l);
+        let step = engine
+            .manifest()
+            .find("client_step", &[("k", k), ("d", d), ("l", l)])
+            .ok_or_else(|| {
+                Error::Artifact(format!(
+                    "no client_step artifact for k={k}, d={d}, l={l}; regenerate with `make artifacts`"
+                ))
+            })?
+            .name
+            .clone();
+        let rff_name = engine
+            .manifest()
+            .find("rff", &[("d", d), ("l", l)])
+            .map(|a| a.name.clone());
+        let eval_name = engine
+            .manifest()
+            .find("eval", &[("d", d)])
+            .map(|a| a.name.clone());
+        engine.prepare(&step)?;
+        let omega_buf = engine.buffer(&rff.omega, &[l, d])?;
+        let b_buf = engine.buffer(&rff.b, &[d])?;
+        Ok(XlaBackend {
+            engine,
+            native: crate::fl::backend::NativeBackend::new(rff.clone()),
+            rff,
+            k,
+            step_name: step,
+            rff_name,
+            eval_name,
+            omega_buf,
+            b_buf,
+            mu_buf: None,
+        })
+    }
+
+    /// The underlying PJRT engine (diagnostics).
+    pub fn engine(&self) -> &PjRtEngine {
+        &self.engine
+    }
+}
+
+impl ComputeBackend for XlaBackend {
+    fn client_step(&mut self, args: StepArgs<'_>) -> Result<Vec<f32>> {
+        let (k, d, l) = (self.k, self.rff.d, self.rff.l);
+        debug_assert_eq!(args.w_locals.len(), k * d);
+        // mu is constant within a run: upload once and reuse the device
+        // buffer across the 2000-iteration hot loop.
+        let reuse = matches!(&self.mu_buf, Some((m, _)) if *m == args.mu);
+        if !reuse {
+            let buf = self.engine.buffer(&[args.mu], &[])?;
+            self.mu_buf = Some((args.mu, buf));
+        }
+        let bufs = [
+            self.engine.buffer(args.w_locals, &[k, d])?,
+            self.engine.buffer(args.w_global, &[d])?,
+            self.engine.buffer(args.recv_mask, &[k, d])?,
+            self.engine.buffer(args.x, &[k, l])?,
+            self.engine.buffer(args.y, &[k])?,
+            self.engine.buffer(args.gate, &[k])?,
+        ];
+        let mu_buf = &self.mu_buf.as_ref().unwrap().1;
+        let arg_refs: [&xla::PjRtBuffer; 9] = [
+            &bufs[0], &bufs[1], &bufs[2], &bufs[3], &bufs[4], &bufs[5],
+            &self.omega_buf, &self.b_buf, mu_buf,
+        ];
+        let mut outs = self.engine.execute_buffers(&self.step_name, &arg_refs)?;
+        let e = outs.pop().ok_or_else(|| Error::Xla("missing e output".into()))?;
+        let w_new = outs.pop().ok_or_else(|| Error::Xla("missing w output".into()))?;
+        args.w_locals.copy_from_slice(&w_new);
+        Ok(e)
+    }
+
+    fn rff_features(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+        let l = self.rff.l;
+        if let Some(name) = self.rff_name.clone() {
+            let spec_t = self.engine.manifest().by_name(&name).and_then(|s| s.dim("t"));
+            if spec_t == Some(x.len() / l) {
+                let mut outs =
+                    self.engine
+                        .execute_f32(&name, &[x, &self.rff.omega, &self.rff.b])?;
+                return outs
+                    .pop()
+                    .ok_or_else(|| Error::Xla("missing z output".into()));
+            }
+        }
+        self.native.rff_features(x)
+    }
+
+    fn eval_mse(&mut self, w: &[f32], z_test: &[f32], y_test: &[f32]) -> Result<f64> {
+        if let Some(name) = self.eval_name.clone() {
+            let spec_t = self.engine.manifest().by_name(&name).and_then(|s| s.dim("t"));
+            if spec_t == Some(y_test.len()) {
+                let outs = self.engine.execute_f32(&name, &[w, z_test, y_test])?;
+                return Ok(outs[0][0] as f64);
+            }
+        }
+        self.native.eval_mse(w, z_test, y_test)
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}

@@ -1,0 +1,338 @@
+//! Extended-state matrices `A_{e,n}`, `B_{e,n}` (eqs. 16-21) under the
+//! analysis model, and their sampled expectations / Kronecker lifts.
+//!
+//! Analysis model (Assumptions 1-4): client k participates with probability
+//! `p_k` i.i.d. per iteration; selection matrices are i.i.d. uniform
+//! m-subsets; a sent update lands in bucket l with probability
+//! `P(delay = l) = delta^l (1 - delta)` and is discarded past `l_max`.
+//!
+//! Block layout (dimension `D (1 + K (l_max + 1))`):
+//! `[server | current_1..K | slot(1)_1..K | ... | slot(l_max)_1..K]`.
+
+use crate::linalg::Mat;
+use crate::util::rng::Pcg32;
+
+/// Small-configuration description for the theory machinery.
+#[derive(Clone, Debug)]
+pub struct TheoryConfig {
+    /// Clients K.
+    pub k: usize,
+    /// Model dimension D.
+    pub d: usize,
+    /// Shared coordinates per message m.
+    pub m: usize,
+    /// Maximum effective delay l_max.
+    pub l_max: usize,
+    /// Participation probability per client.
+    pub probs: Vec<f64>,
+    /// Geometric delay parameter delta (0 = always fresh).
+    pub delta: f64,
+    /// Weight-decreasing schedule alpha_l (length l_max + 1).
+    pub alphas: Vec<f64>,
+    /// Observation-noise variance per client.
+    pub noise_var: Vec<f64>,
+}
+
+impl TheoryConfig {
+    /// Extended-state dimension.
+    pub fn ext_dim(&self) -> usize {
+        self.d * (1 + self.k * (self.l_max + 1))
+    }
+
+    /// Block start offset of the server block.
+    pub fn server_off(&self) -> usize {
+        0
+    }
+
+    /// Block start offset of client k's current model.
+    pub fn cur_off(&self, k: usize) -> usize {
+        self.d * (1 + k)
+    }
+
+    /// Block start offset of history slot l (l >= 1) of client k.
+    pub fn slot_off(&self, l: usize, k: usize) -> usize {
+        debug_assert!(l >= 1 && l <= self.l_max);
+        self.d * (1 + self.k * l + k)
+    }
+
+    /// P(delay == l) under the truncated geometric model.
+    pub fn p_delay(&self, l: usize) -> f64 {
+        self.delta.powi(l as i32) * (1.0 - self.delta)
+    }
+}
+
+/// One sampled realization of the extended matrices.
+pub struct ExtendedModel<'a> {
+    pub cfg: &'a TheoryConfig,
+}
+
+impl<'a> ExtendedModel<'a> {
+    /// Wrap a config.
+    pub fn new(cfg: &'a TheoryConfig) -> Self {
+        ExtendedModel { cfg }
+    }
+
+    /// Draw a random m-subset mask of {0..d}.
+    fn draw_mask(&self, rng: &mut Pcg32) -> Vec<usize> {
+        rng.sample_indices(self.cfg.d, self.cfg.m)
+    }
+
+    /// Sample `A_{e,n}`: the masked-receive step (eq. 17 lifted to the
+    /// extended space). History blocks are untouched (identity).
+    pub fn sample_a(&self, rng: &mut Pcg32) -> Mat {
+        let cfg = self.cfg;
+        let n = cfg.ext_dim();
+        let mut a = Mat::eye(n);
+        for k in 0..cfg.k {
+            if !rng.bernoulli(cfg.probs[k]) {
+                continue;
+            }
+            let mask = self.draw_mask(rng);
+            let co = cfg.cur_off(k);
+            for &j in &mask {
+                // Row (current_k, j): M picks the server coordinate,
+                // (I - M) zeroes the local one.
+                a[(co + j, co + j)] = 0.0;
+                a[(co + j, cfg.server_off() + j)] = 1.0;
+            }
+        }
+        a
+    }
+
+    /// Sample `B_{e,n}`: the aggregation + history shift (eq. 21 lifted).
+    pub fn sample_b(&self, rng: &mut Pcg32) -> Mat {
+        let cfg = self.cfg;
+        let n = cfg.ext_dim();
+        let d = cfg.d;
+        let mut b = Mat::zeros(n, n);
+
+        // Client current blocks: identity (they keep w_{k,n+1}).
+        for k in 0..cfg.k {
+            let co = cfg.cur_off(k);
+            for j in 0..d {
+                b[(co + j, co + j)] = 1.0;
+            }
+        }
+        // History shift: slot 1 <- current; slot l <- slot l-1.
+        for k in 0..cfg.k {
+            for l in 1..=cfg.l_max {
+                let dst = cfg.slot_off(l, k);
+                let src = if l == 1 {
+                    cfg.cur_off(k)
+                } else {
+                    cfg.slot_off(l - 1, k)
+                };
+                for j in 0..d {
+                    b[(dst + j, src + j)] = 1.0;
+                }
+            }
+        }
+
+        // Server row: buckets K_{n,l}. A client's update sent at n-l arrives
+        // now with probability p_k * P(delay = l), independently per l
+        // (a client may appear in several buckets - the paper allows it).
+        let so = cfg.server_off();
+        for j in 0..d {
+            b[(so + j, so + j)] = 1.0;
+        }
+        for l in 0..=cfg.l_max {
+            let p_bucket = cfg.p_delay(l);
+            let members: Vec<usize> = (0..cfg.k)
+                .filter(|&k| rng.bernoulli(cfg.probs[k] * p_bucket))
+                .collect();
+            if members.is_empty() {
+                continue;
+            }
+            let scale = cfg.alphas[l] / members.len() as f64;
+            for &k in &members {
+                let mask = self.draw_mask(rng);
+                // Sent value w_{k,n+1-l}: current block for l = 0, history
+                // slot l otherwise (pre-shift layout).
+                let src = if l == 0 { cfg.cur_off(k) } else { cfg.slot_off(l, k) };
+                for &j in &mask {
+                    b[(so + j, src + j)] += scale;
+                    b[(so + j, so + j)] -= scale;
+                }
+            }
+        }
+        b
+    }
+
+    /// Sampled expectation of a matrix-valued draw.
+    pub fn expect(&self, n_samples: usize, seed: u64, mut f: impl FnMut(&mut Pcg32) -> Mat) -> Mat {
+        let mut rng = Pcg32::derive(seed, &[0xe5717]);
+        let mut acc = f(&mut rng);
+        for _ in 1..n_samples {
+            let s = f(&mut rng);
+            acc.axpy(1.0, &s);
+        }
+        acc.scale(1.0 / n_samples as f64);
+        acc
+    }
+
+    /// `E[A_{e,n}]` by sampling.
+    pub fn mean_a(&self, n_samples: usize, seed: u64) -> Mat {
+        self.expect(n_samples, seed ^ 0xa, |rng| self.sample_a(rng))
+    }
+
+    /// `E[B_{e,n}]` by sampling.
+    pub fn mean_b(&self, n_samples: usize, seed: u64) -> Mat {
+        self.expect(n_samples, seed ^ 0xb, |rng| self.sample_b(rng))
+    }
+
+    /// `Q_A = E[A (x) A]` by sampling (Appendix B shows it is right
+    /// stochastic; asserted in tests).
+    pub fn q_a(&self, n_samples: usize, seed: u64) -> Mat {
+        self.expect(n_samples, seed ^ 0xaa, |rng| {
+            let a = self.sample_a(rng);
+            a.kron(&a)
+        })
+    }
+
+    /// `Q_B = E[B (x) B]` by sampling.
+    pub fn q_b(&self, n_samples: usize, seed: u64) -> Mat {
+        self.expect(n_samples, seed ^ 0xbb, |rng| {
+            let b = self.sample_b(rng);
+            b.kron(&b)
+        })
+    }
+
+    /// Extended correlation `R_e = blockdiag{0, R, ..., R, 0_history}`
+    /// (Assumption 1 with homogeneous clients).
+    pub fn r_e(&self, r: &Mat) -> Mat {
+        let cfg = self.cfg;
+        assert_eq!(r.rows, cfg.d);
+        let mut out = Mat::zeros(cfg.ext_dim(), cfg.ext_dim());
+        for k in 0..cfg.k {
+            let off = cfg.cur_off(k);
+            for i in 0..cfg.d {
+                for j in 0..cfg.d {
+                    out[(off + i, off + j)] = r[(i, j)];
+                }
+            }
+        }
+        out
+    }
+
+    /// `E[Phi] = E[Z Lambda Z^T] = blockdiag{0, sigma_k^2 R, 0_history}`.
+    pub fn phi_mean(&self, r: &Mat) -> Mat {
+        let cfg = self.cfg;
+        let mut out = Mat::zeros(cfg.ext_dim(), cfg.ext_dim());
+        for k in 0..cfg.k {
+            let off = cfg.cur_off(k);
+            let s2 = cfg.noise_var[k];
+            for i in 0..cfg.d {
+                for j in 0..cfg.d {
+                    out[(off + i, off + j)] = s2 * r[(i, j)];
+                }
+            }
+        }
+        out
+    }
+}
+
+/// A tiny default configuration for validation runs and tests.
+pub fn tiny_config() -> TheoryConfig {
+    TheoryConfig {
+        k: 2,
+        d: 4,
+        m: 2,
+        l_max: 1,
+        probs: vec![0.6, 0.3],
+        delta: 0.2,
+        alphas: vec![1.0, 0.2],
+        noise_var: vec![1e-3, 1e-3],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row_sums_one(m: &Mat) {
+        for i in 0..m.rows {
+            let s: f64 = (0..m.cols).map(|j| m[(i, j)]).sum();
+            assert!((s - 1.0).abs() < 1e-9, "row {i} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn sampled_a_b_are_right_stochastic() {
+        let cfg = tiny_config();
+        let ext = ExtendedModel::new(&cfg);
+        let mut rng = Pcg32::new(1, 0);
+        for _ in 0..20 {
+            row_sums_one(&ext.sample_a(&mut rng));
+            row_sums_one(&ext.sample_b(&mut rng));
+        }
+    }
+
+    #[test]
+    fn mean_a_matches_closed_form() {
+        // E[a_k M_k] = p_k * (m/D) * I on the server column of client rows.
+        let cfg = tiny_config();
+        let ext = ExtendedModel::new(&cfg);
+        let ea = ext.mean_a(4000, 3);
+        let pm = cfg.m as f64 / cfg.d as f64;
+        for k in 0..cfg.k {
+            let co = cfg.cur_off(k);
+            let want = cfg.probs[k] * pm;
+            for j in 0..cfg.d {
+                let got = ea[(co + j, j)];
+                assert!((got - want).abs() < 0.03, "client {k}: {got} vs {want}");
+                let diag = ea[(co + j, co + j)];
+                assert!((diag - (1.0 - want)).abs() < 0.03);
+            }
+        }
+        row_sums_one(&ea);
+    }
+
+    #[test]
+    fn q_a_q_b_right_stochastic() {
+        // Appendix B: Q_A and Q_B are right stochastic (rows sum to one).
+        let cfg = tiny_config();
+        let ext = ExtendedModel::new(&cfg);
+        let qa = ext.q_a(400, 5);
+        let qb = ext.q_b(400, 5);
+        for (name, q) in [("Q_A", qa), ("Q_B", qb)] {
+            for i in 0..q.rows {
+                let s: f64 = (0..q.cols).map(|j| q[(i, j)]).sum();
+                assert!((s - 1.0).abs() < 1e-9, "{name} row {i} sums to {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn b_conserves_weight_into_buckets() {
+        // Server row: whatever is subtracted from the server diagonal must
+        // land on sent-value columns (rows sum to one is necessary but also
+        // check the off-diagonal mass is nonnegative).
+        let cfg = tiny_config();
+        let ext = ExtendedModel::new(&cfg);
+        let mut rng = Pcg32::new(7, 0);
+        for _ in 0..10 {
+            let b = ext.sample_b(&mut rng);
+            for j in 0..cfg.d {
+                for c in 0..cfg.ext_dim() {
+                    if c != j {
+                        assert!(b[(j, c)] >= -1e-12, "negative mass at ({j},{c})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn history_shift_structure() {
+        let cfg = tiny_config();
+        let ext = ExtendedModel::new(&cfg);
+        let mut rng = Pcg32::new(9, 0);
+        let b = ext.sample_b(&mut rng);
+        // slot 1 of client 0 reads from current of client 0.
+        let dst = cfg.slot_off(1, 0);
+        let src = cfg.cur_off(0);
+        for j in 0..cfg.d {
+            assert_eq!(b[(dst + j, src + j)], 1.0);
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! Section-IV machinery: convergence bounds and steady-state MSD.
+//!
+//! * `bounds` — Theorem 1/2 step-size conditions from `lambda_max(R_k)`;
+//! * `extended` — the extended-state matrices `A_{e,n}` / `B_{e,n}` of
+//!   eqs. (16)-(21) under the analysis model (Bernoulli participation,
+//!   i.i.d. random m-subset selection - Assumption 4 - and geometric
+//!   delays), plus their sampled expectations and Kronecker lifts
+//!   `Q_A = E[A (x) A]`, `Q_B = E[B (x) B]`;
+//! * `msd` — the `F` matrix of eq. (28), the noise vector `h` of eq. (32),
+//!   and the steady-state MSD of eq. (38) via an LU solve of
+//!   `(I - F^T) sigma = vec(Sigma_0)`.
+//!
+//! Block layout of the extended state (equivalent to eq. (16) up to block
+//! bookkeeping; dimension D * (1 + K * (l_max + 1))):
+//!
+//! ```text
+//!   [ w (server) | w_k (current, K blocks) | slot_1 ... slot_lmax ]
+//! ```
+//!
+//! where after the iteration-n update, `slot_l` holds `w_{k, n+1-l}` - the
+//! value a client *sent* l iterations ago, which is exactly what the bucket
+//! `K_{n,l}` aggregation consumes (eq. 14).
+//!
+//! Numerical notes: the paper works with the block-Kronecker product and
+//! `bvec`; with every block square these are an ordinary Kronecker product
+//! and column-stacking `vec` up to a fixed permutation that cancels when
+//! used consistently, so the implementation uses the ordinary identities
+//! `vec(B X A^T) = (A (x) B) vec(X)`.
+
+pub mod bounds;
+pub mod extended;
+pub mod msd;
+
+pub use bounds::{lambda_max_rff, step_bound_mean, step_bound_msd};
+pub use extended::{ExtendedModel, TheoryConfig};
+pub use msd::{steady_state_msd, MsdReport};

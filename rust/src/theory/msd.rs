@@ -1,0 +1,190 @@
+//! Steady-state mean-square-deviation (eq. 38) and the `F` matrix (eq. 28).
+//!
+//! With ordinary Kronecker/vec identities (see `theory` module docs):
+//!
+//!   F = Q_B (I - mu (I (x) R_e) - mu (R_e (x) I)) Q_A          (eq. 28,
+//!        dropping O(mu^2) terms under Assumption 5)
+//!   h = Q_B vec(E[Phi])                                        (eq. 32)
+//!   MSD_ss = mu^2 h^T (I - F^T)^{-1} vec(Sigma_0)              (eq. 38)
+//!
+//! where `Sigma_0 = blockdiag{I_D, 0, ...}` selects the server block, so
+//! `MSD_ss = lim E||w_n - w*||^2` for the *global* model.
+
+use super::extended::{ExtendedModel, TheoryConfig};
+use crate::error::Result;
+use crate::linalg::{Lu, Mat};
+
+/// Outputs of the steady-state analysis.
+#[derive(Debug, Clone)]
+pub struct MsdReport {
+    /// Steady-state MSD of the server model (linear scale).
+    pub msd_ss: f64,
+    /// Spectral-radius upper bound of F (inf-norm; < 1 certifies stability
+    /// for the right-stochastic construction).
+    pub f_norm_bound: f64,
+    /// Extended dimension used.
+    pub ext_dim: usize,
+}
+
+/// Compute eq. (38) for `cfg` with step size `mu`, data correlation `r`
+/// ([D, D]) and `n_samples` Monte-Carlo draws for the Q expectations.
+pub fn steady_state_msd(
+    cfg: &TheoryConfig,
+    mu: f64,
+    r: &Mat,
+    n_samples: usize,
+    seed: u64,
+) -> Result<MsdReport> {
+    let ext = ExtendedModel::new(cfg);
+    let n = cfg.ext_dim();
+
+    let q_a = ext.q_a(n_samples, seed);
+    let q_b = ext.q_b(n_samples, seed);
+    let r_e = ext.r_e(r);
+
+    // M = I - mu (I (x) R_e) - mu (R_e (x) I), built without materializing
+    // the n^2 x n^2 Kronecker factors from scratch: both terms are sparse
+    // block scalings, but with n <= ~24 a dense build is fine.
+    let eye = Mat::eye(n);
+    let mut mid = Mat::eye(n * n);
+    mid.axpy(-mu, &eye.kron(&r_e));
+    mid.axpy(-mu, &r_e.kron(&eye));
+
+    let f = q_b.matmul(&mid).matmul(&q_a);
+    let f_norm_bound = f.inf_norm();
+
+    // h = Q_B vec(E[Phi]).
+    let phi = ext.phi_mean(r);
+    let h = q_b.matvec(&phi.vec_cols());
+
+    // Sigma_0 selects the server block.
+    let mut sigma0 = Mat::zeros(n, n);
+    for j in 0..cfg.d {
+        sigma0[(j, j)] = 1.0;
+    }
+    // Solve (I - F^T) sigma = vec(Sigma_0).
+    let mut i_ft = Mat::eye(n * n);
+    i_ft.axpy(-1.0, &f.transpose());
+    let lu = Lu::factor(&i_ft)?;
+    let sigma = lu.solve(&sigma0.vec_cols());
+
+    let msd_ss = mu * mu * h.iter().zip(&sigma).map(|(a, b)| a * b).sum::<f64>();
+    Ok(MsdReport {
+        msd_ss,
+        f_norm_bound,
+        ext_dim: n,
+    })
+}
+
+/// Transient MSD curve by iterating the weighted-norm recursion (eq. 33)
+/// forward: returns `E||w_n - w*||^2` of the server block for n = 0..steps,
+/// starting from `w_0 = 0` (so `E||w~_0||^2 = ||w*||^2` per coordinate -
+/// we report the *normalized* transient for a unit-norm w*).
+pub fn transient_msd(
+    cfg: &TheoryConfig,
+    mu: f64,
+    r: &Mat,
+    n_samples: usize,
+    seed: u64,
+    steps: usize,
+) -> Result<Vec<f64>> {
+    let ext = ExtendedModel::new(cfg);
+    let n = cfg.ext_dim();
+    let q_a = ext.q_a(n_samples, seed);
+    let q_b = ext.q_b(n_samples, seed);
+    let r_e = ext.r_e(r);
+    let eye = Mat::eye(n);
+    let mut mid = Mat::eye(n * n);
+    mid.axpy(-mu, &eye.kron(&r_e));
+    mid.axpy(-mu, &r_e.kron(&eye));
+    let f = q_b.matmul(&mid).matmul(&q_a);
+    let ft = f.transpose();
+    let phi = ext.phi_mean(r);
+    let h = q_b.matvec(&phi.vec_cols());
+
+    // sigma_n evolves backwards: E||w~_{n}||^2_{Sigma0} =
+    //   E||w~_0||^2_{vec^-1((F^T)^n sigma0)} + mu^2 h^T sum_{j<n} (F^T)^j sigma0.
+    // w~_0 = 1 (x) w*; take w* with E[w* w*^T] = I_D/D (unit-norm direction)
+    // so the first term is tr of the (server+cross) blocks / D.
+    let mut sigma0 = Mat::zeros(n, n);
+    for j in 0..cfg.d {
+        sigma0[(j, j)] = 1.0;
+    }
+    let s0 = sigma0.vec_cols();
+    let mut cur = s0.clone();
+    let mut noise_acc = 0.0;
+    let mut out = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        // E||w~_0||^2_{vec^-1(cur)}: with w~_0 = ones (x) w*, this is
+        // (1/D) * sum over all D-blocks (i_b, j_b) of tr(block).
+        let sig = Mat::from_vec_cols(n, &cur);
+        let blocks = n / cfg.d;
+        let mut t0 = 0.0;
+        for bi in 0..blocks {
+            for bj in 0..blocks {
+                for j in 0..cfg.d {
+                    t0 += sig[(bi * cfg.d + j, bj * cfg.d + j)];
+                }
+            }
+        }
+        out.push(t0 / cfg.d as f64 + mu * mu * noise_acc);
+        noise_acc += h.iter().zip(&cur).map(|(a, b)| a * b).sum::<f64>();
+        cur = ft.matvec(&cur);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::theory::extended::tiny_config;
+
+    fn iso_r(d: usize, scale: f64) -> Mat {
+        let mut r = Mat::eye(d);
+        r.scale(scale);
+        r
+    }
+
+    #[test]
+    fn msd_positive_and_scales_with_noise() {
+        let mut cfg = tiny_config();
+        let r = iso_r(cfg.d, 0.25);
+        let a = steady_state_msd(&cfg, 0.1, &r, 400, 3).unwrap();
+        assert!(a.msd_ss > 0.0, "MSD must be positive: {}", a.msd_ss);
+        cfg.noise_var = vec![4e-3, 4e-3];
+        let b = steady_state_msd(&cfg, 0.1, &r, 400, 3).unwrap();
+        let ratio = b.msd_ss / a.msd_ss;
+        assert!(
+            (ratio - 4.0).abs() < 0.2,
+            "MSD must scale linearly with noise: ratio {ratio}"
+        );
+    }
+
+    #[test]
+    fn msd_grows_with_mu() {
+        let cfg = tiny_config();
+        let r = iso_r(cfg.d, 0.25);
+        let small = steady_state_msd(&cfg, 0.05, &r, 400, 7).unwrap();
+        let large = steady_state_msd(&cfg, 0.2, &r, 400, 7).unwrap();
+        assert!(
+            large.msd_ss > small.msd_ss,
+            "{} !> {}",
+            large.msd_ss,
+            small.msd_ss
+        );
+    }
+
+    #[test]
+    fn transient_decreases_toward_steady_state() {
+        let cfg = tiny_config();
+        let r = iso_r(cfg.d, 0.25);
+        let curve = transient_msd(&cfg, 0.15, &r, 400, 5, 400).unwrap();
+        assert!(curve[0] > *curve.last().unwrap());
+        // Late curve should flatten (steady state).
+        let tail = &curve[curve.len() - 20..];
+        let (mn, mx) = tail
+            .iter()
+            .fold((f64::MAX, f64::MIN), |(a, b), &v| (a.min(v), b.max(v)));
+        assert!(mx - mn < 0.1 * mx.max(1e-12), "tail not flat: {mn}..{mx}");
+    }
+}

@@ -1,0 +1,71 @@
+//! Self-contained substrates: PRNG, JSON, CSV/plot output, timing.
+//!
+//! The offline crate set has no `rand`/`serde`/`criterion`, so the library
+//! carries minimal, well-tested implementations of exactly what it needs.
+
+pub mod json;
+pub mod plot;
+pub mod rng;
+pub mod table;
+
+use std::time::Instant;
+
+/// Wall-clock stopwatch used by the bench harness.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    /// Start timing.
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+
+    /// Elapsed seconds.
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed milliseconds.
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}
+
+/// Write a CSV file: header plus rows. Columns are joined with commas; no
+/// quoting is needed for our numeric/label payloads.
+pub fn write_csv(
+    path: &std::path::Path,
+    header: &[&str],
+    rows: &[Vec<String>],
+) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut out = String::new();
+    out.push_str(&header.join(","));
+    out.push('\n');
+    for r in rows {
+        out.push_str(&r.join(","));
+        out.push('\n');
+    }
+    std::fs::write(path, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_writes() {
+        let dir = std::env::temp_dir().join("pao_fed_test_csv");
+        let path = dir.join("t.csv");
+        write_csv(
+            &path,
+            &["iter", "mse_db"],
+            &[vec!["0".into(), "-1.5".into()], vec!["1".into(), "-2.0".into()]],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "iter,mse_db\n0,-1.5\n1,-2.0\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

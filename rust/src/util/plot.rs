@@ -1,0 +1,111 @@
+//! Terminal ASCII plotting for learning curves.
+//!
+//! The experiment harness renders every reproduced figure both as CSV (for
+//! external plotting) and as an ASCII chart so `pao-fed fig2a` gives an
+//! immediately readable picture of curve ordering - the property the paper's
+//! figures are judged on.
+
+/// One named series of (x, y) points.
+pub struct Series {
+    pub label: String,
+    pub xs: Vec<f64>,
+    pub ys: Vec<f64>,
+}
+
+impl Series {
+    /// Build a series from y-values with implicit x = 0..n.
+    pub fn from_ys(label: &str, ys: &[f64]) -> Self {
+        Series {
+            label: label.to_string(),
+            xs: (0..ys.len()).map(|i| i as f64).collect(),
+            ys: ys.to_vec(),
+        }
+    }
+}
+
+const GLYPHS: &[char] = &['*', 'o', '+', 'x', '#', '@', '%', '&', '=', '~'];
+
+/// Render series into a text chart of the given size.
+pub fn render(series: &[Series], width: usize, height: usize, title: &str) -> String {
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for s in series {
+        for (&x, &y) in s.xs.iter().zip(&s.ys) {
+            if x.is_finite() && y.is_finite() {
+                xmin = xmin.min(x);
+                xmax = xmax.max(x);
+                ymin = ymin.min(y);
+                ymax = ymax.max(y);
+            }
+        }
+    }
+    if !xmin.is_finite() || !ymin.is_finite() {
+        return format!("{title}: (no finite data)\n");
+    }
+    if (xmax - xmin).abs() < 1e-12 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-12 {
+        ymax = ymin + 1.0;
+    }
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let g = GLYPHS[si % GLYPHS.len()];
+        for (&x, &y) in s.xs.iter().zip(&s.ys) {
+            if !x.is_finite() || !y.is_finite() {
+                continue;
+            }
+            let cx = ((x - xmin) / (xmax - xmin) * (width - 1) as f64).round() as usize;
+            let cy = ((y - ymin) / (ymax - ymin) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx.min(width - 1)] = g;
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    for (ri, row) in grid.iter().enumerate() {
+        let yv = ymax - (ymax - ymin) * ri as f64 / (height - 1) as f64;
+        out.push_str(&format!("{yv:>9.2} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "{:>9} +{}\n{:>11}{:<.1}{}{:>.1}\n",
+        "",
+        "-".repeat(width),
+        "",
+        xmin,
+        " ".repeat(width.saturating_sub(12)),
+        xmax
+    ));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", GLYPHS[si % GLYPHS.len()], s.label));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_without_panic() {
+        let s1 = Series::from_ys("a", &[0.0, -5.0, -10.0, -12.0]);
+        let s2 = Series::from_ys("b", &[0.0, -2.0, -4.0, -5.0]);
+        let txt = render(&[s1, s2], 40, 10, "test");
+        assert!(txt.contains("test"));
+        assert!(txt.contains("a"));
+        assert!(txt.contains('*'));
+    }
+
+    #[test]
+    fn handles_empty_and_flat() {
+        let flat = Series::from_ys("flat", &[1.0, 1.0, 1.0]);
+        let txt = render(&[flat], 20, 5, "flat");
+        assert!(txt.contains("flat"));
+        let none = render(&[], 20, 5, "none");
+        assert!(none.contains("no finite data"));
+    }
+}

@@ -1,0 +1,229 @@
+//! Deterministic PRNG substrate (no external `rand` crate is available in
+//! this offline environment, so the library carries its own).
+//!
+//! `Pcg32` is the PCG-XSH-RR 64/32 generator (O'Neill 2014): 64-bit state,
+//! 64-bit stream selector, 32-bit output. Every stochastic component of the
+//! simulator (data arrival, participation, delays, noise, masks) draws from
+//! its own `Pcg32` stream derived via `derive`, so experiments are
+//! reproducible and individual randomness sources can be held fixed across
+//! algorithm variants (common random numbers - the paper's comparisons
+//! assume the same environment realization per Monte-Carlo run).
+
+/// PCG-XSH-RR 64/32: small, fast, statistically solid for simulation use.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+    /// Cached second Box-Muller variate.
+    gauss_spare: Option<f64>,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+/// splitmix64 finalizer; used to hash (seed, tags...) into stream selectors.
+#[inline]
+pub fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+impl Pcg32 {
+    /// Create a generator from a seed and a stream id.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 {
+            state: 0,
+            inc: (stream << 1) | 1,
+            gauss_spare: None,
+        };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive an independent child stream from this generator's identity
+    /// plus a list of tags (e.g. [client_id, iteration]).
+    pub fn derive(seed: u64, tags: &[u64]) -> Self {
+        let mut h = splitmix64(seed);
+        for &t in tags {
+            h = splitmix64(h ^ t.wrapping_mul(0x9e3779b97f4a7c15));
+        }
+        Pcg32::new(h, splitmix64(h ^ 0xda3e39cb94b95bdb))
+    }
+
+    /// Next raw 32-bit output.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next 64-bit output (two 32-bit draws).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1) with 32 bits of resolution.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        self.next_u32() as f64 * (1.0 / 4294967296.0)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n) (Lemire-style rejection-free for our use).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // 64-bit multiply-shift keeps modulo bias below 2^-32.
+        ((self.next_u32() as u64 * n as u64) >> 32) as usize
+    }
+
+    /// Bernoulli trial with success probability `p`.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.uniform() < p
+    }
+
+    /// Standard normal via Box-Muller (cached pair).
+    pub fn gaussian(&mut self) -> f64 {
+        if let Some(s) = self.gauss_spare.take() {
+            return s;
+        }
+        // Avoid u == 0 so ln() stays finite.
+        let u = (self.next_u32() as f64 + 1.0) * (1.0 / 4294967297.0);
+        let v = self.uniform();
+        let r = (-2.0 * u.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * v).sin_cos();
+        self.gauss_spare = Some(r * s);
+        r * c
+    }
+
+    /// Normal with given mean / standard deviation.
+    #[inline]
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.gaussian()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `m` distinct indices from [0, n) (partial Fisher-Yates).
+    pub fn sample_indices(&mut self, n: usize, m: usize) -> Vec<usize> {
+        debug_assert!(m <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..m {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(m);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Pcg32::new(42, 1);
+        let mut b = Pcg32::new(42, 1);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn distinct_streams_differ() {
+        let mut a = Pcg32::new(42, 1);
+        let mut b = Pcg32::new(42, 2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut r = Pcg32::new(7, 0);
+        let mut sum = 0.0;
+        for _ in 0..20_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        assert!((sum / 20_000.0 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Pcg32::new(9, 3);
+        let n = 50_000;
+        let (mut m1, mut m2) = (0.0, 0.0);
+        for _ in 0..n {
+            let g = r.gaussian();
+            m1 += g;
+            m2 += g * g;
+        }
+        m1 /= n as f64;
+        m2 /= n as f64;
+        assert!(m1.abs() < 0.02, "mean {m1}");
+        assert!((m2 - 1.0).abs() < 0.03, "var {m2}");
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut r = Pcg32::new(11, 0);
+        let hits = (0..50_000).filter(|_| r.bernoulli(0.1)).count();
+        let rate = hits as f64 / 50_000.0;
+        assert!((rate - 0.1).abs() < 0.01, "rate {rate}");
+    }
+
+    #[test]
+    fn below_is_uniform() {
+        let mut r = Pcg32::new(13, 0);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[r.below(5)] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 / 50_000.0 - 0.2).abs() < 0.02);
+        }
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Pcg32::new(17, 0);
+        for _ in 0..100 {
+            let s = r.sample_indices(20, 7);
+            let mut t = s.clone();
+            t.sort_unstable();
+            t.dedup();
+            assert_eq!(t.len(), 7);
+            assert!(s.iter().all(|&i| i < 20));
+        }
+    }
+
+    #[test]
+    fn derive_reproducible() {
+        let mut a = Pcg32::derive(5, &[1, 2, 3]);
+        let mut b = Pcg32::derive(5, &[1, 2, 3]);
+        let mut c = Pcg32::derive(5, &[1, 2, 4]);
+        assert_eq!(a.next_u64(), b.next_u64());
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+}

@@ -1,0 +1,44 @@
+//! Fixed-width terminal tables for experiment summaries.
+
+/// Render a table with a header row and aligned columns.
+pub fn render(header: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for r in rows {
+        for (i, cell) in r.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let line = |out: &mut String, cells: &[String]| {
+        for (i, c) in cells.iter().enumerate().take(ncol) {
+            out.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+        }
+        out.push('\n');
+    };
+    line(&mut out, &header.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    let total: usize = widths.iter().sum::<usize>() + 2 * ncol;
+    out.push_str(&"-".repeat(total));
+    out.push('\n');
+    for r in rows {
+        line(&mut out, r);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn aligns_columns() {
+        let t = super::render(
+            &["alg", "mse_db"],
+            &[
+                vec!["PAO-Fed-C2".into(), "-31.2".into()],
+                vec!["Online-FedSGD".into(), "-28.9".into()],
+            ],
+        );
+        assert!(t.contains("PAO-Fed-C2"));
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+    }
+}

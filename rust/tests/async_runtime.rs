@@ -1,0 +1,93 @@
+//! Integration: the thread-based deployment runtime must reproduce the
+//! discrete-event engine exactly (same protocol, same common-random-number
+//! streams), while actually running one OS thread per client.
+
+use pao_fed::async_rt::{run_deployment, DeploymentConfig};
+use pao_fed::data::stream::{FedStream, StreamConfig};
+use pao_fed::data::synthetic::Eq39Source;
+use pao_fed::fl::algorithms::{self, Variant};
+use pao_fed::fl::backend::NativeBackend;
+use pao_fed::fl::delay::DelayModel;
+use pao_fed::fl::engine::{self, Environment};
+use pao_fed::fl::participation::Participation;
+use pao_fed::rff::RffSpace;
+use pao_fed::util::rng::Pcg32;
+use std::time::Duration;
+
+fn build_env(seed: u64) -> (StreamConfig, RffSpace, Participation, DelayModel) {
+    let cfg = StreamConfig {
+        n_clients: 12,
+        n_iters: 250,
+        data_group_samples: vec![60, 120, 190, 250],
+        test_size: 80,
+    };
+    let mut rng = Pcg32::derive(seed, &[0xabc]);
+    let rff = RffSpace::sample(4, 32, 1.0, &mut rng);
+    let part = Participation::grouped(12, &[0.5, 0.25, 0.1, 0.05], 4);
+    let delay = DelayModel::Geometric { delta: 0.3 };
+    (cfg, rff, part, delay)
+}
+
+#[test]
+fn deployment_matches_discrete_engine() {
+    for variant in [Variant::PaoFedU2, Variant::PaoFedC1, Variant::OnlineFedSgd] {
+        let seed = 17;
+        let (cfg, rff, part, delay) = build_env(seed);
+        let algo = algorithms::build(variant, 0.4, 4, 10, 25);
+
+        // Discrete engine.
+        let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+        let mut backend = NativeBackend::new(rff.clone());
+        let env = Environment::new(stream, rff.clone(), part.clone(), delay, seed, &mut backend)
+            .unwrap();
+        let discrete = engine::run(&env, &algo, &mut backend).unwrap();
+
+        // Thread-per-client deployment over the same environment realization.
+        let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+        let deployed = run_deployment(
+            stream,
+            rff,
+            part,
+            delay,
+            DeploymentConfig {
+                algo,
+                tick: Duration::ZERO,
+                env_seed: seed,
+                eval_every: 25,
+            },
+        )
+        .unwrap();
+
+        assert_eq!(discrete.iters, deployed.iters, "{variant:?}");
+        for (a, b) in discrete.mse_db.iter().zip(&deployed.mse_db) {
+            assert!(
+                (a - b).abs() < 1e-9,
+                "{variant:?}: discrete {a} vs deployed {b}"
+            );
+        }
+        assert_eq!(discrete.comm.uplink_msgs, deployed.comm.uplink_msgs);
+        assert_eq!(discrete.comm.downlink_scalars, deployed.comm.downlink_scalars);
+    }
+}
+
+#[test]
+fn deployment_survives_zero_participation() {
+    let seed = 5;
+    let (cfg, rff, _, delay) = build_env(seed);
+    let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+    let report = run_deployment(
+        stream,
+        rff,
+        Participation::uniform(12, 0.0),
+        delay,
+        DeploymentConfig {
+            algo: algorithms::build(Variant::PaoFedU1, 0.4, 4, 10, 50),
+            tick: Duration::ZERO,
+            env_seed: seed,
+            eval_every: 50,
+        },
+    )
+    .unwrap();
+    assert_eq!(report.comm.uplink_msgs, 0);
+    assert!(report.final_w.iter().all(|&v| v == 0.0));
+}

@@ -1,0 +1,111 @@
+//! End-to-end convergence tests: the full stack must *learn* on both the
+//! synthetic eq.-(39) task and the CalCOFI substitute, under the paper's
+//! asynchronous conditions.
+
+use pao_fed::data::calcofi::CalcofiSynthetic;
+use pao_fed::data::stream::{FedStream, StreamConfig};
+use pao_fed::data::synthetic::Eq39Source;
+use pao_fed::data::DataSource;
+use pao_fed::fl::algorithms::{build, Variant};
+use pao_fed::fl::backend::NativeBackend;
+use pao_fed::fl::delay::DelayModel;
+use pao_fed::fl::engine::{run, Environment};
+use pao_fed::fl::participation::Participation;
+use pao_fed::rff::RffSpace;
+use pao_fed::util::rng::Pcg32;
+
+fn env_for(
+    source: &mut dyn DataSource,
+    k: usize,
+    n: usize,
+    d: usize,
+    seed: u64,
+) -> (Environment, NativeBackend) {
+    let stream = FedStream::build(
+        &StreamConfig {
+            n_clients: k,
+            n_iters: n,
+            data_group_samples: vec![n / 4, n / 2, 3 * n / 4, n],
+            test_size: 300,
+        },
+        source,
+        seed,
+    );
+    let rff = RffSpace::sample(source.dim(), d, 1.0, &mut Pcg32::derive(seed, &[1]));
+    let mut backend = NativeBackend::new(rff.clone());
+    let env = Environment::new(
+        stream,
+        rff,
+        Participation::grouped(k, &[0.25, 0.1, 0.025, 0.005], 4),
+        DelayModel::Geometric { delta: 0.2 },
+        seed,
+        &mut backend,
+    )
+    .unwrap();
+    (env, backend)
+}
+
+#[test]
+fn eq39_all_pao_variants_converge() {
+    let mut src = Eq39Source::new(3);
+    let (env, mut be) = env_for(&mut src, 64, 1200, 128, 3);
+    for v in Variant::pao_all() {
+        let res = run(&env, &build(v, 0.4, 4, 10, 100), &mut be).unwrap();
+        let drop = res.mse_db[0] - res.final_db();
+        // The *0 variants converge more slowly but must still learn.
+        let min_drop = match v {
+            // The *0 variants are the paper's deliberately-weak ablation
+            // (Fig. 2a shows them barely learning); require only that they
+            // improve at all, markedly less than the *1/*2 variants.
+            Variant::PaoFedC0 => 2.5,
+            Variant::PaoFedU0 => 5.0,
+            _ => 12.0,
+        };
+        assert!(
+            drop > min_drop,
+            "{:?}: only {drop:.1} dB improvement",
+            v
+        );
+    }
+}
+
+#[test]
+fn calcofi_substitute_converges() {
+    let mut src = CalcofiSynthetic::new(5);
+    let (env, mut be) = env_for(&mut src, 64, 1200, 128, 5);
+    for v in [Variant::OnlineFedSgd, Variant::PaoFedC2] {
+        let res = run(&env, &build(v, 0.4, 4, 10, 100), &mut be).unwrap();
+        let drop = res.mse_db[0] - res.final_db();
+        assert!(drop > 8.0, "{v:?}: only {drop:.1} dB improvement");
+    }
+}
+
+#[test]
+fn headline_claim_small_scale() {
+    // The paper's headline: PAO-Fed reaches Online-FedSGD-level accuracy
+    // with ~ (1 - 2m/2D) communication. At m=4, D=128 -> ~96.9% cut, with
+    // final accuracy within 1.5 dB of FedSGD.
+    let mut src = Eq39Source::new(11);
+    let (env, mut be) = env_for(&mut src, 64, 1500, 128, 11);
+    let sgd = run(&env, &build(Variant::OnlineFedSgd, 0.4, 4, 10, 100), &mut be).unwrap();
+    let pao = run(&env, &build(Variant::PaoFedC2, 0.4, 4, 10, 100), &mut be).unwrap();
+    let red = pao.comm.reduction_vs(&sgd.comm);
+    assert!(red > 0.95, "communication reduction only {red:.3}");
+    assert!(
+        pao.final_db() < sgd.final_db() + 1.5,
+        "PAO-Fed-C2 {:.2} dB vs FedSGD {:.2} dB",
+        pao.final_db(),
+        sgd.final_db()
+    );
+}
+
+#[test]
+fn paper_scale_headline_comm_cut_is_98_percent() {
+    // m = 4 of D = 200: each message moves 2% of the model -> 98% cut.
+    let mut src = Eq39Source::new(13);
+    let (env, mut be) = env_for(&mut src, 32, 300, 200, 13);
+    let sgd = run(&env, &build(Variant::OnlineFedSgd, 0.4, 4, 10, 100), &mut be).unwrap();
+    let pao = run(&env, &build(Variant::PaoFedU1, 0.4, 4, 10, 100), &mut be).unwrap();
+    let red = pao.comm.reduction_vs(&sgd.comm);
+    assert!((red - 0.98).abs() < 0.002, "reduction {red:.4} != 0.98");
+}

@@ -1,0 +1,158 @@
+//! Figure-shape regression tests: the orderings the paper's figures
+//! establish must hold at reduced scale. These pin the *qualitative*
+//! reproduction (who wins, where) so refactors cannot silently break it.
+
+use pao_fed::data::stream::{FedStream, StreamConfig};
+use pao_fed::data::synthetic::Eq39Source;
+use pao_fed::fl::algorithms::{build, Variant};
+use pao_fed::fl::backend::NativeBackend;
+use pao_fed::fl::delay::DelayModel;
+use pao_fed::fl::engine::{run, AlgoConfig, Environment};
+use pao_fed::fl::participation::Participation;
+use pao_fed::rff::RffSpace;
+use pao_fed::util::rng::Pcg32;
+
+const K: usize = 64;
+const D: usize = 128;
+const N: usize = 1500;
+const MC: usize = 2;
+
+/// Monte-Carlo-averaged final linear MSE of `algo` in the standard reduced
+/// asynchronous environment.
+fn final_mse(algo: &AlgoConfig, delay: DelayModel, ideal: bool) -> f64 {
+    let mut acc = 0.0;
+    for run_i in 0..MC {
+        let seed = 31 + run_i as u64 * 1000;
+        let stream = FedStream::build(
+            &StreamConfig {
+                n_clients: K,
+                n_iters: N,
+                data_group_samples: vec![N / 4, N / 2, 3 * N / 4, N],
+                test_size: 300,
+            },
+            &mut Eq39Source::new(seed),
+            seed,
+        );
+        let rff = RffSpace::sample(4, D, 1.0, &mut Pcg32::derive(seed, &[1]));
+        let mut backend = NativeBackend::new(rff.clone());
+        let participation = if ideal {
+            Participation::always(K)
+        } else {
+            Participation::grouped(K, &[0.25, 0.1, 0.025, 0.005], 4)
+        };
+        let env = Environment::new(
+            stream,
+            rff,
+            participation,
+            if ideal { DelayModel::None } else { delay },
+            seed,
+            &mut backend,
+        )
+        .unwrap();
+        acc += run(&env, algo, &mut backend).unwrap().final_mse;
+    }
+    acc / MC as f64
+}
+
+fn std_delay() -> DelayModel {
+    DelayModel::Geometric { delta: 0.2 }
+}
+
+#[test]
+fn fig2a_refined_sharing_beats_unrefined() {
+    // (C/U)1 (S = M_{n+1}) must beat (C/U)0 (S = M_n) clearly.
+    let u1 = final_mse(&build(Variant::PaoFedU1, 0.4, 4, 10, 500), std_delay(), false);
+    let u0 = final_mse(&build(Variant::PaoFedU0, 0.4, 4, 10, 500), std_delay(), false);
+    let c1 = final_mse(&build(Variant::PaoFedC1, 0.4, 4, 10, 500), std_delay(), false);
+    let c0 = final_mse(&build(Variant::PaoFedC0, 0.4, 4, 10, 500), std_delay(), false);
+    assert!(u1 < u0 * 0.5, "U1 {u1:.4} !<< U0 {u0:.4}");
+    assert!(c1 < c0 * 0.5, "C1 {c1:.4} !<< C0 {c0:.4}");
+}
+
+#[test]
+fn fig2a_uncoordinated_beats_coordinated_without_decay() {
+    let u1 = final_mse(&build(Variant::PaoFedU1, 0.4, 4, 10, 500), std_delay(), false);
+    let c1 = final_mse(&build(Variant::PaoFedC1, 0.4, 4, 10, 500), std_delay(), false);
+    assert!(u1 <= c1 * 1.05, "U1 {u1:.5} should be <= C1 {c1:.5}");
+}
+
+#[test]
+fn fig2b_larger_m_faster_start() {
+    // Larger m converges faster initially (the steady-state penalty of the
+    // paper needs heavier delay traffic to dominate; the early-iteration
+    // ordering is the robust part at this scale).
+    let seed = 77;
+    let stream = FedStream::build(
+        &StreamConfig {
+            n_clients: K,
+            n_iters: 400,
+            data_group_samples: vec![100, 200, 300, 400],
+            test_size: 300,
+        },
+        &mut Eq39Source::new(seed),
+        seed,
+    );
+    let rff = RffSpace::sample(4, D, 1.0, &mut Pcg32::derive(seed, &[1]));
+    let mut backend = NativeBackend::new(rff.clone());
+    let env = Environment::new(
+        stream,
+        rff,
+        Participation::grouped(K, &[0.25, 0.1, 0.025, 0.005], 4),
+        std_delay(),
+        seed,
+        &mut backend,
+    )
+    .unwrap();
+    let mut at = |m: usize| {
+        let res = run(&env, &build(Variant::PaoFedU1, 0.4, m, 10, 50), &mut backend).unwrap();
+        res.mse_db[4] // dB after 200 iterations
+    };
+    let m1 = at(1);
+    let m32 = at(32);
+    assert!(m32 < m1 - 1.0, "m=32 early {m32:.2} dB !< m=1 early {m1:.2} dB");
+}
+
+#[test]
+fn fig2c_weight_decay_helps_under_heavy_delay() {
+    // Fig. 5(c)-style heavy staleness magnifies the *2 advantage.
+    let heavy = DelayModel::Geometric { delta: 0.8 };
+    let c1 = final_mse(&build(Variant::PaoFedC1, 0.4, 4, 20, 500), heavy, false);
+    let c2 = final_mse(&build(Variant::PaoFedC2, 0.4, 4, 20, 500), heavy, false);
+    assert!(c2 < c1, "C2 {c2:.4} !< C1 {c1:.4} under heavy delay");
+}
+
+#[test]
+fn fig3a_scheduling_methods_lose_information() {
+    // Blind sub-sampling of an already sparse pool (Online-Fed, PSO-Fed)
+    // must trail both Online-FedSGD and PAO-Fed.
+    let sgd = final_mse(&build(Variant::OnlineFedSgd, 0.4, 4, 10, 500), std_delay(), false);
+    let ofed = final_mse(
+        &build(Variant::OnlineFed { subsample: 2 }, 0.4, 4, 10, 500),
+        std_delay(),
+        false,
+    );
+    let pao = final_mse(&build(Variant::PaoFedU2, 0.4, 4, 10, 500), std_delay(), false);
+    assert!(ofed > sgd * 1.5, "Online-Fed {ofed:.4} !>> FedSGD {sgd:.4}");
+    assert!(pao < ofed, "PAO-Fed-U2 {pao:.4} !< Online-Fed {ofed:.4}");
+}
+
+#[test]
+fn fig3c_ideal_setting_beats_asynchronous() {
+    let asy = final_mse(&build(Variant::PaoFedC1, 0.4, 4, 10, 500), std_delay(), false);
+    let ideal = final_mse(&build(Variant::PaoFedC1, 0.4, 4, 10, 500), std_delay(), true);
+    assert!(ideal < asy, "ideal {ideal:.4} !< async {asy:.4}");
+}
+
+#[test]
+fn fig5a_full_downlink_destroys_partial_sharing_benefit() {
+    // M = I overwrites the information clients keep in not-yet-shared
+    // portions; accuracy must degrade vs standard PAO-Fed.
+    let normal = final_mse(&build(Variant::PaoFedU1, 0.4, 4, 10, 500), std_delay(), false);
+    let mut full = build(Variant::PaoFedU1, 0.4, 4, 10, 500);
+    full.full_downlink = true;
+    let ablated = final_mse(&full, std_delay(), false);
+    assert!(
+        ablated > normal * 1.3,
+        "M=I ablation {ablated:.4} !>> normal {normal:.4}"
+    );
+}

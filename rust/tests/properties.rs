@@ -1,0 +1,168 @@
+//! Property-based tests: engine and protocol invariants swept over many
+//! seeded random configurations (a lightweight proptest loop - the offline
+//! crate set has no proptest, so cases are enumerated from a PCG stream).
+
+use pao_fed::data::stream::{FedStream, StreamConfig};
+use pao_fed::data::synthetic::Eq39Source;
+use pao_fed::fl::algorithms::{build, Variant};
+use pao_fed::fl::backend::NativeBackend;
+use pao_fed::fl::delay::DelayModel;
+use pao_fed::fl::engine::{self, AlgoConfig, Environment};
+use pao_fed::fl::participation::Participation;
+use pao_fed::fl::selection::{ScheduleKind, SelectionSchedule};
+use pao_fed::rff::RffSpace;
+use pao_fed::util::rng::Pcg32;
+
+/// Draw a random small environment + algorithm config.
+fn random_case(rng: &mut Pcg32) -> (Environment, NativeBackend, AlgoConfig) {
+    let k = 4 + rng.below(12);
+    let n = 150 + rng.below(150);
+    let d = 16 + rng.below(48);
+    let seed = rng.next_u64();
+    let stream = FedStream::build(
+        &StreamConfig {
+            n_clients: k,
+            n_iters: n,
+            data_group_samples: vec![n / 4, n / 2, 3 * n / 4, n],
+            test_size: 40,
+        },
+        &mut Eq39Source::new(seed),
+        seed,
+    );
+    let rff = RffSpace::sample(4, d, 1.0, &mut Pcg32::derive(seed, &[1]));
+    let mut backend = NativeBackend::new(rff.clone());
+    let delta = rng.uniform_in(0.0, 0.7);
+    let env = Environment::new(
+        stream,
+        rff,
+        Participation::uniform(k, rng.uniform_in(0.05, 1.0)),
+        if delta < 0.05 {
+            DelayModel::None
+        } else {
+            DelayModel::Geometric { delta }
+        },
+        seed,
+        &mut backend,
+    )
+    .unwrap();
+
+    let variants = [
+        Variant::OnlineFedSgd,
+        Variant::OnlineFed { subsample: 1 + rng.below(4) },
+        Variant::PsoFed { subsample: 1 + rng.below(4) },
+        Variant::PaoFedC1,
+        Variant::PaoFedU1,
+        Variant::PaoFedC2,
+        Variant::PaoFedU2,
+        Variant::PaoFedC0,
+        Variant::PaoFedU0,
+    ];
+    let v = variants[rng.below(variants.len())];
+    let m = 1 + rng.below(d.min(16));
+    let l_max = rng.below(16);
+    let algo = build(v, 0.3, m, l_max, 50);
+    (env, backend, algo)
+}
+
+#[test]
+fn prop_engine_invariants_hold_across_random_configs() {
+    let mut rng = Pcg32::new(0xbeef, 0);
+    for case in 0..25 {
+        let (env, mut backend, algo) = random_case(&mut rng);
+        let res = engine::run(&env, &algo, &mut backend).unwrap();
+
+        // 1. Model stays finite (no divergence at mu = 0.3 < bound).
+        assert!(
+            res.final_w.iter().all(|v| v.is_finite()),
+            "case {case} ({}): non-finite model",
+            algo.name
+        );
+        // 2. Uplink scalars == message count x message size.
+        let msg_len = match algo.schedule {
+            ScheduleKind::Full => env.d() as u64,
+            _ => algo.m as u64,
+        };
+        assert_eq!(
+            res.comm.uplink_scalars,
+            msg_len * res.comm.uplink_msgs,
+            "case {case} ({}): uplink accounting",
+            algo.name
+        );
+        // 3. Every upload implies a matching downlink (participants
+        //    receive before they send).
+        assert_eq!(res.comm.uplink_msgs, res.comm.downlink_msgs, "case {case}");
+        // 4. Curve sampled as configured.
+        assert!(!res.mse_db.is_empty());
+        assert!(res.iters.windows(2).all(|w| w[0] < w[1]));
+        // 5. With no delays nothing can be discarded as stale.
+        if matches!(env.delay, DelayModel::None) {
+            assert_eq!(res.agg.discarded_stale, 0, "case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_selection_schedules_cover_all_coordinates() {
+    let mut rng = Pcg32::new(0xfeed, 0);
+    for _ in 0..50 {
+        let d = 3 + rng.below(61);
+        let m = 1 + rng.below(d);
+        let kind = match rng.below(3) {
+            0 => ScheduleKind::Coordinated,
+            1 => ScheduleKind::Uncoordinated,
+            _ => ScheduleKind::RandomSubset,
+        };
+        let s = SelectionSchedule::new(kind, d, m, rng.next_u64());
+        // Deterministic kinds must cover all coords within one cycle; the
+        // random kind within a generous multiple.
+        let horizon = if kind == ScheduleKind::RandomSubset {
+            s.cycle_len() * 20
+        } else {
+            s.cycle_len()
+        };
+        let k = rng.below(5);
+        let mut seen = vec![false; d];
+        for n in 0..horizon {
+            s.recv(k, n).for_each(|i| seen[i] = true);
+        }
+        let covered = seen.iter().filter(|&&b| b).count();
+        if kind == ScheduleKind::RandomSubset {
+            assert!(covered * 10 >= d * 9, "random subset covered {covered}/{d}");
+        } else {
+            assert_eq!(covered, d, "{kind:?} m={m} covered {covered}/{d}");
+        }
+        // Selection size is always exactly min(m, d).
+        assert_eq!(s.recv(k, 7).len(), m.min(d));
+    }
+}
+
+#[test]
+fn prop_common_random_numbers_isolate_algorithm_effects() {
+    // Two engine runs with different algorithms over the same environment
+    // must see the identical arrival pattern: uplink opportunities of the
+    // full-participation methods are a superset invariant.
+    let mut rng = Pcg32::new(0xcafe, 0);
+    for _ in 0..5 {
+        let (env, mut backend, _) = random_case(&mut rng);
+        let a = engine::run(&env, &build(Variant::PaoFedU1, 0.3, 4, 10, 50), &mut backend).unwrap();
+        let b = engine::run(&env, &build(Variant::PaoFedU2, 0.3, 4, 10, 50), &mut backend).unwrap();
+        // U1 and U2 differ only in aggregation weights -> identical
+        // participation, identical traffic.
+        assert_eq!(a.comm.uplink_msgs, b.comm.uplink_msgs);
+        assert_eq!(a.comm.downlink_scalars, b.comm.downlink_scalars);
+    }
+}
+
+#[test]
+fn prop_m_equals_d_uncoordinated_equals_full_traffic() {
+    // m = D partial sharing moves exactly as many scalars as full sharing
+    // for the same participation pattern.
+    let mut rng = Pcg32::new(0xdead, 0);
+    let (env, mut backend, _) = random_case(&mut rng);
+    let d = env.d();
+    let partial = engine::run(&env, &build(Variant::PaoFedU1, 0.3, d, 10, 50), &mut backend).unwrap();
+    let mut full = build(Variant::PaoFedU1, 0.3, d, 10, 50);
+    full.schedule = ScheduleKind::Full;
+    let full_res = engine::run(&env, &full, &mut backend).unwrap();
+    assert_eq!(partial.comm.uplink_scalars, full_res.comm.uplink_scalars);
+}

@@ -1,0 +1,231 @@
+//! Integration: Section-IV theory vs Monte-Carlo simulation.
+//!
+//! The steady-state MSD predicted by eq. (38) must match the simulated
+//! steady-state MSD of the actual engine when the simulation is run under
+//! the analysis model: data exactly linear in the RFF space (y = z'w* + eta),
+//! i.i.d. random m-subset selection matrices (Assumption 4), Bernoulli
+//! participation, geometric delays, every client receiving data each tick.
+//! Theorem 1's step bound is checked behaviourally (convergent below,
+//! divergent above).
+
+use pao_fed::data::stream::{FedStream, StreamConfig};
+use pao_fed::data::{DataSource, Sample};
+use pao_fed::fl::backend::NativeBackend;
+use pao_fed::fl::delay::DelayModel;
+use pao_fed::fl::engine::{self, AlgoConfig, Environment};
+use pao_fed::fl::participation::Participation;
+use pao_fed::fl::selection::ScheduleKind;
+use pao_fed::fl::server::{AggregationMode, AlphaSchedule};
+use pao_fed::linalg::power_iteration;
+use pao_fed::metrics::msd;
+use pao_fed::rff::RffSpace;
+use pao_fed::theory::bounds::{correlation_rff, uniform_input_sampler};
+use pao_fed::theory::extended::TheoryConfig;
+use pao_fed::theory::msd::steady_state_msd;
+use pao_fed::util::rng::Pcg32;
+
+/// Data source that is *exactly* linear in the RFF space: y = z(x)' w* + eta.
+struct LinearRffSource {
+    rff: RffSpace,
+    w_star: Vec<f32>,
+    noise_std: f64,
+    rng: Pcg32,
+}
+
+impl DataSource for LinearRffSource {
+    fn dim(&self) -> usize {
+        self.rff.l
+    }
+
+    fn draw(&mut self) -> Sample {
+        let x: Vec<f32> = (0..self.rff.l)
+            .map(|_| self.rng.uniform_in(-1.0, 1.0) as f32)
+            .collect();
+        let z = self.rff.features(&x);
+        let clean: f32 = z.iter().zip(&self.w_star).map(|(a, b)| a * b).sum();
+        let y = clean + self.rng.normal(0.0, self.noise_std) as f32;
+        Sample { x, y }
+    }
+
+    fn name(&self) -> &str {
+        "linear-rff"
+    }
+}
+
+fn analysis_algo(mu: f32, m: usize, l_max: usize, alphas_decay: Option<f64>) -> AlgoConfig {
+    AlgoConfig {
+        name: "analysis-model".into(),
+        mu,
+        schedule: ScheduleKind::RandomSubset,
+        m,
+        refine_before_share: true, // independent S draw (Assumption 4)
+        autonomous_updates: true,
+        subsample: None,
+        full_downlink: false,
+        aggregation: AggregationMode::DeviationBuckets {
+            alpha: match alphas_decay {
+                None => AlphaSchedule::Ones,
+                Some(a) => AlphaSchedule::Powers(a),
+            },
+            l_max,
+            // The analysis has no conflict-resolution step.
+            most_recent_wins: false,
+        },
+        eval_every: 1000,
+    }
+}
+
+/// Simulated steady-state MSD of the server model under the analysis model.
+fn simulate_msd(
+    cfg: &TheoryConfig,
+    mu: f32,
+    n_iters: usize,
+    mc: usize,
+    alphas_decay: Option<f64>,
+) -> f64 {
+    let (k, d) = (cfg.k, cfg.d);
+    let mut total = 0.0;
+    for run in 0..mc {
+        let seed = 1000 + run as u64;
+        let mut rng = Pcg32::derive(seed, &[0x5eed]);
+        let rff = RffSpace::sample(2, d, 1.0, &mut rng);
+        let w_star: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+        let mut src = LinearRffSource {
+            rff: rff.clone(),
+            w_star: w_star.clone(),
+            noise_std: cfg.noise_var[0].sqrt(),
+            rng: Pcg32::derive(seed, &[0xda7a]),
+        };
+        let stream = FedStream::build(
+            &StreamConfig {
+                n_clients: k,
+                n_iters,
+                // Every client receives data every iteration (analysis model).
+                data_group_samples: vec![n_iters; 4],
+                test_size: 16,
+            },
+            &mut src,
+            seed,
+        );
+        let mut backend = NativeBackend::new(rff.clone());
+        let env = Environment::new(
+            stream,
+            rff,
+            Participation {
+                probs: cfg.probs.clone(),
+            },
+            DelayModel::Geometric { delta: cfg.delta },
+            seed,
+            &mut backend,
+        )
+        .unwrap();
+        let algo = analysis_algo(mu, cfg.m, cfg.l_max, alphas_decay);
+        let res = engine::run(&env, &algo, &mut backend).unwrap();
+        total += msd(&res.final_w, &w_star);
+    }
+    total / mc as f64
+}
+
+fn tiny_cfg() -> TheoryConfig {
+    TheoryConfig {
+        k: 2,
+        d: 4,
+        m: 2,
+        l_max: 1,
+        probs: vec![0.6, 0.3],
+        delta: 0.2,
+        alphas: vec![1.0, 0.2],
+        noise_var: vec![1e-3, 1e-3],
+    }
+}
+
+#[test]
+fn steady_state_msd_matches_simulation() {
+    let cfg = tiny_cfg();
+    let mu = 0.15;
+
+    // Theory: correlation of the same feature distribution.
+    let mut rng = Pcg32::derive(1000, &[0x5eed]);
+    let rff = RffSpace::sample(2, cfg.d, 1.0, &mut rng);
+    let r = correlation_rff(&rff, 6000, uniform_input_sampler(3));
+    let theory = steady_state_msd(&cfg, mu as f64, &r, 800, 11).unwrap();
+    assert!(theory.msd_ss > 0.0);
+    // Spectral radius of F certifies MSD stability (Thm. 2 machinery);
+    // the inf-norm is only an upper bound and may exceed 1.
+    let ext = pao_fed::theory::extended::ExtendedModel::new(&cfg);
+    let q_a = ext.q_a(400, 11);
+    let q_b = ext.q_b(400, 11);
+    let n = cfg.ext_dim();
+    let r_e = ext.r_e(&r);
+    let eye = pao_fed::linalg::Mat::eye(n);
+    let mut mid = pao_fed::linalg::Mat::eye(n * n);
+    mid.axpy(-(mu as f64), &eye.kron(&r_e));
+    mid.axpy(-(mu as f64), &r_e.kron(&eye));
+    let f = q_b.matmul(&mid).matmul(&q_a);
+    let rho = power_iteration(&f, 300, 2);
+    assert!(rho < 1.0 + 1e-6, "rho(F) = {rho} must certify stability");
+
+    // This config mixes slowly (m/D = 1/2 portions, sparse participation):
+    // the simulated MSD must *approach* the theory value as the horizon
+    // grows, landing within an order of magnitude at steady state (the
+    // analysis neglects O(mu^2) terms, so exact agreement is not expected).
+    let mid_sim = simulate_msd(&cfg, mu, 12_000, 6, Some(0.2));
+    let late_sim = simulate_msd(&cfg, mu, 30_000, 6, Some(0.2));
+    let gap_mid = (mid_sim / theory.msd_ss).ln().abs();
+    let gap_late = (late_sim / theory.msd_ss).ln().abs();
+    assert!(
+        gap_late < gap_mid,
+        "simulation must approach theory: mid {mid_sim:.3e}, late {late_sim:.3e}, theory {:.3e}",
+        theory.msd_ss
+    );
+    let ratio = late_sim / theory.msd_ss;
+    assert!(
+        (0.05..20.0).contains(&ratio),
+        "theory {:.3e} vs simulation {:.3e} (ratio {ratio:.2})",
+        theory.msd_ss,
+        late_sim
+    );
+}
+
+#[test]
+fn theorem1_step_bound_is_behavioural() {
+    // Below the Theorem-1 bound the mean error converges; far above it the
+    // recursion diverges. lambda_max for this feature distribution:
+    let mut rng = Pcg32::derive(1000, &[0x5eed]);
+    let rff = RffSpace::sample(2, 4, 1.0, &mut rng);
+    let r = correlation_rff(&rff, 6000, uniform_input_sampler(3));
+    let lam = power_iteration(&r, 300, 1);
+    let bound = 2.0 / lam;
+
+    let cfg = tiny_cfg();
+    let ok = simulate_msd(&cfg, (0.4 * bound) as f32, 3000, 4, None);
+    let diverged = simulate_msd(&cfg, (3.0 * bound) as f32, 3000, 4, None);
+    assert!(
+        ok < 0.5,
+        "mu inside the bound must reach small MSD, got {ok}"
+    );
+    assert!(
+        diverged > 10.0 * ok || !diverged.is_finite(),
+        "mu far beyond the bound must blow up: {diverged} vs {ok}"
+    );
+}
+
+#[test]
+fn weight_decay_beats_flat_weights_under_long_delays() {
+    // The paper's central qualitative claim for the *2 variants: with heavy
+    // delays, alpha_l = 0.2^l yields lower steady-state MSD than alpha = 1.
+    let mut cfg = tiny_cfg();
+    // Staleness must actually bite for the comparison to be robust: fast
+    // model motion (large mu) + heavy delays (delta = 0.9) + a long
+    // admission window, averaged over 10 runs.
+    let mu = 0.45;
+    cfg.delta = 0.9;
+    cfg.l_max = 10;
+    cfg.alphas = vec![1.0; 11];
+    let flat = simulate_msd(&cfg, mu, 30_000, 10, None);
+    let decay = simulate_msd(&cfg, mu, 30_000, 10, Some(0.2));
+    assert!(
+        decay < flat,
+        "weight decay should help under delays: decay {decay} vs flat {flat}"
+    );
+}

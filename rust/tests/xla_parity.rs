@@ -1,0 +1,152 @@
+//! Integration: the AOT-compiled XLA backend must match the native rust
+//! backend bit-tolerance-for-bit on the fused client step, and the full
+//! engine must produce the same learning curves under either backend.
+//!
+//! Requires `artifacts/` (run `make artifacts`); tests are skipped with a
+//! notice otherwise so `cargo test` stays green on a fresh checkout.
+
+use pao_fed::data::stream::{FedStream, StreamConfig};
+use pao_fed::data::synthetic::Eq39Source;
+use pao_fed::fl::algorithms::{self, Variant};
+use pao_fed::fl::backend::{ComputeBackend, NativeBackend, StepArgs};
+use pao_fed::fl::delay::DelayModel;
+use pao_fed::fl::engine::{self, Environment};
+use pao_fed::fl::participation::Participation;
+use pao_fed::rff::RffSpace;
+use pao_fed::runtime::{artifact_dir, XlaBackend};
+use pao_fed::util::rng::Pcg32;
+
+fn artifacts_available() -> bool {
+    artifact_dir().join("manifest.json").exists()
+}
+
+/// The small AOT test config: K=8, D=16, L=4.
+fn small_rff(seed: u64) -> RffSpace {
+    let mut rng = Pcg32::derive(seed, &[0xabc]);
+    RffSpace::sample(4, 16, 1.0, &mut rng)
+}
+
+#[test]
+fn step_parity_native_vs_xla() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        return;
+    }
+    let rff = small_rff(3);
+    let mut native = NativeBackend::new(rff.clone());
+    let mut xla = XlaBackend::new(&artifact_dir(), 8, rff).expect("XlaBackend");
+
+    let mut rng = Pcg32::new(11, 0);
+    let (k, d, l) = (8usize, 16usize, 4usize);
+    for trial in 0..5 {
+        let mut w_a: Vec<f32> = (0..k * d).map(|_| rng.gaussian() as f32).collect();
+        let mut w_b = w_a.clone();
+        let w_g: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+        let mask: Vec<f32> = (0..k * d)
+            .map(|_| if rng.bernoulli(0.25) { 1.0 } else { 0.0 })
+            .collect();
+        let x: Vec<f32> = (0..k * l).map(|_| rng.gaussian() as f32).collect();
+        let y: Vec<f32> = (0..k).map(|_| rng.gaussian() as f32).collect();
+        let gate: Vec<f32> = (0..k)
+            .map(|_| if rng.bernoulli(0.6) { 1.0 } else { 0.0 })
+            .collect();
+
+        let e_a = native
+            .client_step(StepArgs {
+                w_locals: &mut w_a,
+                w_global: &w_g,
+                recv_mask: &mask,
+                x: &x,
+                y: &y,
+                gate: &gate,
+                mu: 0.4,
+                active: None,
+            })
+            .unwrap();
+        let e_b = xla
+            .client_step(StepArgs {
+                w_locals: &mut w_b,
+                w_global: &w_g,
+                recv_mask: &mask,
+                x: &x,
+                y: &y,
+                gate: &gate,
+                mu: 0.4,
+                active: None,
+            })
+            .unwrap();
+
+        for (i, (a, b)) in w_a.iter().zip(&w_b).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-4,
+                "trial {trial}: w[{i}] native {a} vs xla {b}"
+            );
+        }
+        // Errors are only defined where gate == 1 (see ComputeBackend docs).
+        for (i, (a, b)) in e_a.iter().zip(&e_b).enumerate() {
+            if gate[i] != 0.0 {
+                assert!(
+                    (a - b).abs() < 1e-4,
+                    "trial {trial}: e[{i}] native {a} vs xla {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_curve_parity_native_vs_xla() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        return;
+    }
+    let seed = 21u64;
+    let cfg = StreamConfig {
+        n_clients: 8,
+        n_iters: 120,
+        data_group_samples: vec![30, 60, 90, 120],
+        test_size: 64,
+    };
+    let rff = small_rff(seed);
+    let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+    let part = Participation::uniform(8, 0.5);
+    let delay = DelayModel::Geometric { delta: 0.2 };
+
+    let mut native = NativeBackend::new(rff.clone());
+    let env = Environment::new(stream, rff.clone(), part.clone(), delay, seed, &mut native).unwrap();
+    let algo = algorithms::build(Variant::PaoFedU2, 0.4, 4, 10, 20);
+
+    let res_native = engine::run(&env, &algo, &mut native).unwrap();
+    let mut xla = XlaBackend::new(&artifact_dir(), 8, rff).expect("XlaBackend");
+    let res_xla = engine::run(&env, &algo, &mut xla).unwrap();
+
+    assert_eq!(res_native.iters, res_xla.iters);
+    for (a, b) in res_native.mse_db.iter().zip(&res_xla.mse_db) {
+        assert!((a - b).abs() < 0.05, "curves diverge: {a} vs {b}");
+    }
+    // Identical communication pattern regardless of backend.
+    assert_eq!(res_native.comm.uplink_msgs, res_xla.comm.uplink_msgs);
+}
+
+#[test]
+fn xla_eval_and_rff_artifacts_roundtrip() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        return;
+    }
+    let rff = small_rff(5);
+    let mut xla = XlaBackend::new(&artifact_dir(), 8, rff.clone()).unwrap();
+    let mut rng = Pcg32::new(2, 0);
+    // T=64 matches the rff_t64_d16_l4 / eval_t64_d16 artifacts.
+    let x: Vec<f32> = (0..64 * 4).map(|_| rng.gaussian() as f32).collect();
+    let z = xla.rff_features(&x).unwrap();
+    let z_native = rff.features_batch(&x);
+    for (a, b) in z.iter().zip(&z_native) {
+        assert!((a - b).abs() < 1e-4);
+    }
+    let w: Vec<f32> = (0..16).map(|_| rng.gaussian() as f32).collect();
+    let y: Vec<f32> = (0..64).map(|_| rng.gaussian() as f32).collect();
+    let got = xla.eval_mse(&w, &z, &y).unwrap();
+    let want = pao_fed::metrics::mse_test(&w, &z, &y);
+    assert!((got - want).abs() < 1e-3 * want.max(1.0), "{got} vs {want}");
+}
