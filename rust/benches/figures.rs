@@ -9,7 +9,7 @@
 mod bench_harness;
 
 use bench_harness::Bench;
-use pao_fed::experiments::{self, BackendKind, ExperimentCtx};
+use pao_fed::experiments::{self, BackendKind, ExperimentCtx, Parallelism};
 
 fn quick_ctx(id: &str) -> ExperimentCtx {
     ExperimentCtx {
@@ -20,6 +20,7 @@ fn quick_ctx(id: &str) -> ExperimentCtx {
         iters: Some(400),
         clients: Some(64),
         quiet: true,
+        jobs: Parallelism::serial(),
     }
     .tagged(id)
 }

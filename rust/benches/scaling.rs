@@ -1,0 +1,131 @@
+//! Parallel-scaling benchmark: wall-clock speedup of the threaded
+//! Monte-Carlo loop (`--jobs`) and of the sharded client step versus the
+//! serial baselines, plus a determinism cross-check on every measured
+//! configuration.
+//!
+//! Run: `cargo bench --bench scaling`
+//!
+//! The acceptance target (ISSUE 1): > 2x speedup at 4 workers for mc >= 8
+//! on a 4-core machine. Results depend on the host; the bench prints the
+//! detected core count alongside each ratio.
+
+use pao_fed::data::stream::{FedStream, StreamConfig};
+use pao_fed::data::synthetic::Eq39Source;
+use pao_fed::experiments::common::{run_variants, PaperEnv};
+use pao_fed::experiments::{BackendKind, ExperimentCtx, Parallelism};
+use pao_fed::fl::algorithms::{build, Variant};
+use pao_fed::fl::backend::NativeBackend;
+use pao_fed::fl::delay::DelayModel;
+use pao_fed::fl::engine::{self, Environment};
+use pao_fed::fl::participation::Participation;
+use pao_fed::rff::RffSpace;
+use pao_fed::util::parallel::available_cores;
+use pao_fed::util::rng::Pcg32;
+use pao_fed::util::Stopwatch;
+
+/// Monte-Carlo scaling configuration: mc = 8 realizations of a reduced
+/// fig3a-style environment.
+fn mc_ctx(workers: usize) -> ExperimentCtx {
+    ExperimentCtx {
+        mc: 8,
+        seed: 2023,
+        backend: BackendKind::Native,
+        outdir: std::env::temp_dir().join("pao_fed_scaling_bench"),
+        iters: Some(300),
+        clients: Some(64),
+        quiet: true,
+        jobs: Parallelism {
+            mc_workers: workers,
+            client_shards: 1,
+        },
+    }
+}
+
+/// Time `f` twice and keep the faster pass (warm caches, stable floor).
+fn time<T>(mut f: impl FnMut() -> T) -> (f64, T) {
+    let sw = Stopwatch::start();
+    let _ = f();
+    let first = sw.secs();
+    let sw = Stopwatch::start();
+    let out = f();
+    (sw.secs().min(first), out)
+}
+
+fn bench_monte_carlo() {
+    println!("== Monte-Carlo loop (mc=8, K=64, N=300, 2 algorithms) ==");
+    let algos = [
+        build(Variant::OnlineFedSgd, 0.4, 4, 10, 50),
+        build(Variant::PaoFedU2, 0.4, 4, 10, 50),
+    ];
+    let (t1, base) = time(|| {
+        let ctx = mc_ctx(1);
+        let env = PaperEnv::synth(&ctx);
+        run_variants(&ctx, &env, &algos, "scal-s", "serial").unwrap()
+    });
+    println!("  jobs=1: {:.3}s", t1);
+    for workers in [2usize, 4, 8] {
+        let (tw, fig) = time(|| {
+            let ctx = mc_ctx(workers);
+            let env = PaperEnv::synth(&ctx);
+            run_variants(&ctx, &env, &algos, "scal-p", "parallel").unwrap()
+        });
+        let identical = base
+            .curves
+            .iter()
+            .zip(&fig.curves)
+            .all(|(a, b)| a.mse == b.mse && a.final_mse == b.final_mse);
+        println!(
+            "  jobs={workers}: {:.3}s  speedup {:.2}x  bitwise-identical: {}",
+            tw,
+            t1 / tw.max(1e-9),
+            if identical { "yes" } else { "NO (BUG)" }
+        );
+        assert!(identical, "parallel Monte-Carlo diverged from serial");
+    }
+}
+
+fn bench_client_shards() {
+    println!("== Sharded client step (K=512, N=200, full participation) ==");
+    let seed = 7;
+    let cfg = StreamConfig {
+        n_clients: 512,
+        n_iters: 200,
+        data_group_samples: vec![100, 150, 200, 200],
+        test_size: 100,
+    };
+    let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+    let mut rng = Pcg32::derive(seed, &[0xabc]);
+    let rff = RffSpace::sample(4, 200, 1.0, &mut rng);
+    let mut backend = NativeBackend::new(rff.clone());
+    let env = Environment::new(
+        stream,
+        rff,
+        Participation::always(512),
+        DelayModel::Geometric { delta: 0.2 },
+        seed,
+        &mut backend,
+    )
+    .unwrap();
+    let algo = build(Variant::PaoFedC2, 0.4, 4, 10, 50);
+
+    let (t1, base) = time(|| engine::run(&env, &algo, &mut backend).unwrap());
+    println!("  shards=1: {:.3}s", t1);
+    for shards in [2usize, 4, 8] {
+        let (ts, res) = time(|| engine::run_sharded(&env, &algo, &mut backend, shards).unwrap());
+        let identical = res.mse_db == base.mse_db && res.final_w == base.final_w;
+        println!(
+            "  shards={shards}: {:.3}s  speedup {:.2}x  bitwise-identical: {}",
+            ts,
+            t1 / ts.max(1e-9),
+            if identical { "yes" } else { "NO (BUG)" }
+        );
+        assert!(identical, "sharded client step diverged from serial");
+    }
+}
+
+fn main() {
+    println!("available cores: {}", available_cores());
+    bench_monte_carlo();
+    bench_client_shards();
+    std::fs::remove_dir_all(std::env::temp_dir().join("pao_fed_scaling_bench")).ok();
+}

@@ -52,9 +52,13 @@ pub struct DeploymentConfig {
 /// What the deployment run produced.
 #[derive(Debug, Clone)]
 pub struct DeploymentReport {
+    /// Iterations at which the curve was sampled.
     pub iters: Vec<usize>,
+    /// MSE-test in dB at those iterations.
     pub mse_db: Vec<f64>,
+    /// Communication totals.
     pub comm: CommStats,
+    /// Final server model.
     pub final_w: Vec<f32>,
     /// Total local-learning steps across all clients.
     pub local_steps: u64,

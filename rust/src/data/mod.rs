@@ -15,7 +15,9 @@ pub mod synthetic;
 /// A labelled regression sample (raw space, pre-RFF).
 #[derive(Clone, Debug)]
 pub struct Sample {
+    /// Raw input vector [L].
     pub x: Vec<f32>,
+    /// Regression target.
     pub y: f32,
 }
 

@@ -1,30 +1,54 @@
 //! Library-wide error type.
-
-use thiserror::Error;
+//!
+//! Hand-rolled `Display`/`Error` impls (no `thiserror` in the offline
+//! crate set).
 
 /// Errors surfaced by the PAO-Fed library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Underlying XLA/PJRT failure (compile, execute, literal marshalling).
-    #[error("xla runtime error: {0}")]
     Xla(String),
     /// Artifact directory / manifest problems.
-    #[error("artifact error: {0}")]
     Artifact(String),
     /// Configuration is inconsistent (e.g. m > D, K mismatch).
-    #[error("config error: {0}")]
     Config(String),
     /// Data loading / parsing failures.
-    #[error("data error: {0}")]
     Data(String),
     /// I/O wrapper.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
     /// Numerical failure (singular matrix, divergence, ...).
-    #[error("numerical error: {0}")]
     Numerical(String),
 }
 
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Xla(m) => write!(f, "xla runtime error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Data(m) => write!(f, "data error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Numerical(m) => write!(f, "numerical error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
@@ -33,3 +57,25 @@ impl From<xla::Error> for Error {
 
 /// Library-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_previous_format() {
+        assert_eq!(
+            Error::Config("m > D".into()).to_string(),
+            "config error: m > D"
+        );
+        assert_eq!(Error::Xla("boom".into()).to_string(), "xla runtime error: boom");
+    }
+
+    #[test]
+    fn io_source_preserved() {
+        use std::error::Error as _;
+        let e = Error::from(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        assert!(e.source().is_some());
+        assert!(e.to_string().contains("gone"));
+    }
+}

@@ -12,6 +12,7 @@ use crate::fl::participation::Participation;
 use crate::metrics::{to_db, CommStats};
 use crate::rff::RffSpace;
 use crate::util::json::{arr_f64, obj, Json};
+use crate::util::parallel::{parallel_map, Parallelism};
 use crate::util::rng::Pcg32;
 use crate::util::{plot, write_csv};
 use std::path::PathBuf;
@@ -43,6 +44,10 @@ pub struct ExperimentCtx {
     pub clients: Option<usize>,
     /// Suppress ASCII charts.
     pub quiet: bool,
+    /// Parallel execution degree (`--jobs` / `--shards`): Monte-Carlo
+    /// workers and per-iteration client shards. Results are
+    /// bitwise-identical for every setting (see `util::parallel`).
+    pub jobs: Parallelism,
 }
 
 impl Default for ExperimentCtx {
@@ -55,6 +60,7 @@ impl Default for ExperimentCtx {
             iters: None,
             clients: None,
             quiet: false,
+            jobs: Parallelism::serial(),
         }
     }
 }
@@ -62,16 +68,25 @@ impl Default for ExperimentCtx {
 /// The paper's environment description (Section V-A defaults).
 #[derive(Clone, Debug)]
 pub struct PaperEnv {
+    /// Number of clients K.
     pub n_clients: usize,
+    /// Federation iterations N.
     pub n_iters: usize,
+    /// RFF feature dimension D.
     pub d: usize,
+    /// Raw input dimension L.
     pub l: usize,
+    /// Held-out test-set size T.
     pub test_size: usize,
+    /// Gaussian-kernel bandwidth of the RFF space.
     pub sigma: f64,
+    /// Per-data-group total sample budgets over the horizon.
     pub data_group_samples: Vec<usize>,
+    /// Availability probabilities of the four participation groups.
     pub avail_probs: Vec<f64>,
     /// Scale factor applied to every availability probability (Fig. 5(c)).
     pub avail_scale: f64,
+    /// The uplink delay channel.
     pub delay: DelayModel,
     /// Ideal-environment toggle (Fig. 3(c) "0% stragglers"): full
     /// availability and no delays.
@@ -83,11 +98,16 @@ pub struct PaperEnv {
 /// Data-source selector.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum SourceKind {
+    /// The paper's eq.-(39) synthetic benchmark.
     Eq39,
+    /// The CalCOFI bottle-salinity task (Section V-D).
     Calcofi,
     /// Non-stationary eq.-(39) family with an abrupt function switch at
     /// iteration `at` (the `track` extension experiment).
-    DriftSwitch { at: usize },
+    DriftSwitch {
+        /// Switch iteration.
+        at: usize,
+    },
 }
 
 impl PaperEnv {
@@ -174,10 +194,13 @@ impl PaperEnv {
 /// One labelled averaged curve.
 #[derive(Clone, Debug)]
 pub struct Curve {
+    /// Algorithm label (legend entry).
     pub label: String,
+    /// Iterations at which the curve was sampled.
     pub iters: Vec<usize>,
     /// Monte-Carlo-averaged MSE (linear), converted to dB on output.
     pub mse: Vec<f64>,
+    /// Communication totals summed over the Monte-Carlo runs.
     pub comm: CommStats,
     /// Final linear MSE (avg).
     pub final_mse: f64,
@@ -198,14 +221,24 @@ impl Curve {
 /// A figure's worth of curves plus metadata.
 #[derive(Debug)]
 pub struct FigureData {
+    /// Experiment id (also the output-file stem, e.g. "fig3a").
     pub id: String,
+    /// Human-readable figure title.
     pub title: String,
+    /// One averaged curve per algorithm.
     pub curves: Vec<Curve>,
 }
 
 /// Run every algorithm in `algos` over `mc` Monte-Carlo realizations of
 /// `env_of(run)` and average the MSE curves (common random numbers: all
 /// algorithms share each realization).
+///
+/// Realizations execute on up to `ctx.jobs.mc_workers` threads. Each run's
+/// seed derives only from `(ctx.seed, run)` and the accumulation below
+/// folds per-run results in run order, so the averaged curves are
+/// bitwise-identical for every worker count (pinned by
+/// `rust/tests/parallel_determinism.rs`). The XLA backend is forced onto
+/// the serial path: PJRT executables are not shareable across threads.
 pub fn run_variants(
     ctx: &ExperimentCtx,
     env: &PaperEnv,
@@ -213,15 +246,38 @@ pub fn run_variants(
     id: &str,
     title: &str,
 ) -> Result<FigureData> {
-    let mut curves: Vec<Curve> = Vec::new();
-    for run in 0..ctx.mc {
+    let parallel_ok = ctx.backend != BackendKind::Xla;
+    let workers = if parallel_ok { ctx.jobs.mc_workers } else { 1 };
+    // When several realizations actually run concurrently, sharding each
+    // client step on top would oversubscribe the cores; shard only when
+    // the Monte-Carlo level is effectively serial (one worker *or* one
+    // run - `--mc 1 --jobs 8` should still get an 8-way client step).
+    let mc_effective = workers.min(ctx.mc.max(1));
+    let shards = if parallel_ok && mc_effective <= 1 {
+        ctx.jobs.client_shards
+    } else {
+        1
+    };
+
+    // Fan out: one entry per run, each holding every algorithm's result
+    // for that realization (common random numbers within a run).
+    let per_run: Vec<Result<Vec<RunResult>>> = parallel_map(ctx.mc, workers, |run| {
         let seed = ctx.seed.wrapping_add(run as u64 * 0x9e37);
         let (environment, mut backend) = env.build(seed, ctx.backend)?;
-        for (ai, algo) in algos.iter().enumerate() {
-            let res: RunResult = engine::run(&environment, algo, backend.as_mut())?;
+        algos
+            .iter()
+            .map(|algo| engine::run_sharded(&environment, algo, backend.as_mut(), shards))
+            .collect()
+    });
+
+    // Fold in run order - the identical floating-point accumulation
+    // sequence the serial loop used.
+    let mut curves: Vec<Curve> = Vec::new();
+    for (run, results) in per_run.into_iter().enumerate() {
+        for (ai, res) in results?.into_iter().enumerate() {
             if run == 0 {
                 curves.push(Curve {
-                    label: algo.name.clone(),
+                    label: algos[ai].name.clone(),
                     iters: res.iters.clone(),
                     mse: res.mse_db.iter().map(|&db| 10f64.powf(db / 10.0)).collect(),
                     comm: res.comm,
@@ -366,6 +422,7 @@ mod tests {
             iters: Some(200),
             clients: Some(16),
             quiet: true,
+            jobs: Parallelism::serial(),
         }
     }
 

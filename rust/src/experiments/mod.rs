@@ -28,6 +28,7 @@ pub mod fig5;
 pub mod theory_val;
 
 pub use common::{BackendKind, ExperimentCtx, FigureData};
+pub use crate::util::parallel::Parallelism;
 
 use crate::error::{Error, Result};
 

@@ -17,14 +17,29 @@ use crate::fl::engine::AlgoConfig;
 /// The methods of Section V.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Variant {
+    /// Full sharing, every available client, plain averaging (eq. 6).
     OnlineFedSgd,
-    OnlineFed { subsample: usize },
-    PsoFed { subsample: usize },
+    /// Full sharing with server-side scheduling of `subsample` clients.
+    OnlineFed {
+        /// Clients scheduled per iteration.
+        subsample: usize,
+    },
+    /// Partial-sharing online FL with scheduling (Vinay et al. baseline).
+    PsoFed {
+        /// Clients scheduled per iteration.
+        subsample: usize,
+    },
+    /// Coordinated partial sharing, `S = M_n` (single-refinement ablation).
     PaoFedC0,
+    /// Uncoordinated partial sharing, `S = M_n`.
     PaoFedU0,
+    /// Coordinated partial sharing, `S = M_{n+1}` (eq. 8).
     PaoFedC1,
+    /// Uncoordinated partial sharing, `S = M_{n+1}`.
     PaoFedU1,
+    /// PAO-Fed-C1 plus the weight-decreasing schedule alpha_l = 0.2^l.
     PaoFedC2,
+    /// PAO-Fed-U1 plus the weight-decreasing schedule alpha_l = 0.2^l.
     PaoFedU2,
 }
 

@@ -11,9 +11,23 @@
 //!   w_locals [K*D] row-major, w_global [D], recv_mask [K*D] in {0,1},
 //!   x [K*L], y [K], gate [K] in {0,1}, mu scalar -> updates w_locals in
 //!   place, returns the per-client a-priori errors [K].
+//!
+//! **Sharded path.** Client rows are mutually independent within one tick
+//! (each touches only its own `w_locals` row and reads the shared
+//! `w_global`), so the native backend also offers
+//! [`ComputeBackend::client_step_sharded`]: the sorted active list splits
+//! into contiguous chunks that advance on scoped worker threads. Per-row
+//! arithmetic is identical to the serial path, so the results are
+//! bitwise-equal regardless of the shard count. The XLA backend keeps the
+//! default single-threaded implementation (one PJRT device stream).
 
 use crate::error::Result;
 use crate::rff::RffSpace;
+use crate::util::parallel::chunk_indices;
+
+/// Below this many active rows per shard, threading costs more than it
+/// saves; the sharded path folds back to serial.
+const MIN_ROWS_PER_SHARD: usize = 64;
 
 /// Dense batched inputs for one federation tick.
 pub struct StepArgs<'a> {
@@ -32,8 +46,9 @@ pub struct StepArgs<'a> {
     /// Step size.
     pub mu: f32,
     /// Optional list of clients that need any work this tick (receive or
-    /// learn). Backends may use it to skip untouched rows; `None` means
-    /// all rows are live.
+    /// learn), sorted ascending and duplicate-free. Backends may use it to
+    /// skip untouched rows (and the sharded path requires the ordering to
+    /// carve disjoint row windows); `None` means all rows are live.
     pub active: Option<&'a [usize]>,
 }
 
@@ -46,6 +61,16 @@ pub trait ComputeBackend {
     /// clients, while the XLA kernel computes the error unconditionally.
     fn client_step(&mut self, args: StepArgs<'_>) -> Result<Vec<f32>>;
 
+    /// Execute one tick, allowed to split the work over up to `shards`
+    /// threads. Must produce results bitwise-identical to
+    /// [`ComputeBackend::client_step`]. The default implementation ignores
+    /// `shards` and runs serially - backends opt in (the native backend
+    /// does; the XLA backend keeps its single device stream).
+    fn client_step_sharded(&mut self, args: StepArgs<'_>, shards: usize) -> Result<Vec<f32>> {
+        let _ = shards;
+        self.client_step(args)
+    }
+
     /// Featurize a batch of raw inputs [T * L] -> [T * D].
     fn rff_features(&mut self, x: &[f32]) -> Result<Vec<f32>>;
 
@@ -54,6 +79,50 @@ pub trait ComputeBackend {
 
     /// Backend label for logs / results.
     fn name(&self) -> &'static str;
+}
+
+/// One client's tick: masked receive then (if gated) RFF featurization,
+/// a-priori error, rank-1 KLMS update. `z` is caller-provided scratch of
+/// length D so the hot path never allocates; per-row float operations are
+/// identical whichever thread runs them (the sharding determinism
+/// contract).
+fn step_row(
+    rff: &RffSpace,
+    z: &mut [f32],
+    w_row: &mut [f32],
+    w_global: &[f32],
+    mask: &[f32],
+    x: &[f32],
+    y: f32,
+    gate: f32,
+    mu: f32,
+) -> f32 {
+    let d = w_row.len();
+    // Masked receive: w_eff = M w_global + (I - M) w_local.
+    for j in 0..d {
+        let m = mask[j];
+        if m != 0.0 {
+            w_row[j] = m * w_global[j] + (1.0 - m) * w_row[j];
+        }
+    }
+    if gate == 0.0 {
+        return 0.0;
+    }
+    // RFF featurization + a-priori error + rank-1 update.
+    // (A 4-way-accumulator dot was tried and reverted: no measurable
+    // gain, and it breaks bit-exact equality with the per-client
+    // deployment runtime - see EXPERIMENTS.md §Perf.)
+    rff.features_into(x, z);
+    let mut dot = 0.0f32;
+    for j in 0..d {
+        dot += w_row[j] * z[j];
+    }
+    let e = y - dot;
+    let step = mu * e;
+    for j in 0..d {
+        w_row[j] += step * z[j];
+    }
+    e
 }
 
 /// Pure-rust reference backend.
@@ -77,35 +146,6 @@ impl NativeBackend {
     pub fn rff(&self) -> &RffSpace {
         &self.rff
     }
-
-    fn step_one(&mut self, w_row: &mut [f32], args_w_global: &[f32], mask: &[f32], x: &[f32], y: f32, gate: f32, mu: f32) -> f32 {
-        let d = w_row.len();
-        // Masked receive: w_eff = M w_global + (I - M) w_local.
-        for j in 0..d {
-            let m = mask[j];
-            if m != 0.0 {
-                w_row[j] = m * args_w_global[j] + (1.0 - m) * w_row[j];
-            }
-        }
-        if gate == 0.0 {
-            return 0.0;
-        }
-        // RFF featurization + a-priori error + rank-1 update.
-        // (A 4-way-accumulator dot was tried and reverted: no measurable
-        // gain, and it breaks bit-exact equality with the per-client
-        // deployment runtime - see EXPERIMENTS.md §Perf.)
-        self.rff.features_into(x, &mut self.z);
-        let mut dot = 0.0f32;
-        for j in 0..d {
-            dot += w_row[j] * self.z[j];
-        }
-        let e = y - dot;
-        let step = mu * e;
-        for j in 0..d {
-            w_row[j] += step * self.z[j];
-        }
-        e
-    }
 }
 
 impl ComputeBackend for NativeBackend {
@@ -115,24 +155,120 @@ impl ComputeBackend for NativeBackend {
         let k = args.y.len();
         debug_assert_eq!(args.w_locals.len(), k * d);
         let mut errs = vec![0.0f32; k];
-        let mut run = |idx: usize, zelf: &mut Self, w_locals: &mut [f32]| {
+        let rff = &self.rff;
+        let z: &mut [f32] = &mut self.z;
+        let StepArgs {
+            w_locals,
+            w_global,
+            recv_mask,
+            x,
+            y,
+            gate,
+            mu,
+            active,
+        } = args;
+        let mut run = |idx: usize, z: &mut [f32], errs: &mut [f32], w_locals: &mut [f32]| {
             let row = &mut w_locals[idx * d..(idx + 1) * d];
-            let mask = &args.recv_mask[idx * d..(idx + 1) * d];
-            let x = &args.x[idx * l..(idx + 1) * l];
-            errs[idx] = zelf.step_one(row, args.w_global, mask, x, args.y[idx], args.gate[idx], args.mu);
+            let mask = &recv_mask[idx * d..(idx + 1) * d];
+            let xi = &x[idx * l..(idx + 1) * l];
+            errs[idx] = step_row(rff, z, row, w_global, mask, xi, y[idx], gate[idx], mu);
         };
-        match args.active {
+        match active {
             Some(active) => {
                 for &idx in active {
-                    run(idx, self, args.w_locals);
+                    run(idx, z, &mut errs, w_locals);
                 }
             }
             None => {
                 for idx in 0..k {
-                    run(idx, self, args.w_locals);
+                    run(idx, z, &mut errs, w_locals);
                 }
             }
         }
+        Ok(errs)
+    }
+
+    fn client_step_sharded(&mut self, args: StepArgs<'_>, shards: usize) -> Result<Vec<f32>> {
+        // The sharded path needs an explicit (sorted) active list to carve
+        // disjoint row windows; otherwise - or when the work is too small
+        // to amortize thread spawns - fall back to the serial step.
+        let Some(active) = args.active else {
+            return self.client_step(args);
+        };
+        if shards <= 1 || active.len() < 2 * MIN_ROWS_PER_SHARD {
+            return self.client_step(args);
+        }
+        debug_assert!(
+            active.windows(2).all(|w| w[0] < w[1]),
+            "active list must be sorted and duplicate-free"
+        );
+        let chunks = chunk_indices(active, shards, MIN_ROWS_PER_SHARD);
+        if chunks.len() <= 1 {
+            return self.client_step(args);
+        }
+
+        let d = self.rff.d;
+        let l = self.rff.l;
+        let k = args.y.len();
+        debug_assert_eq!(args.w_locals.len(), k * d);
+        let mut errs = vec![0.0f32; k];
+
+        /// One worker's disjoint view: its row indices plus exclusive
+        /// windows of `w_locals` and `errs` covering rows base..=hi.
+        struct Shard<'s> {
+            rows: &'s [usize],
+            base: usize,
+            w: &'s mut [f32],
+            e: &'s mut [f32],
+        }
+
+        // Chunks of the sorted active list cover strictly increasing row
+        // ranges, so repeated split_at_mut hands each worker exclusive
+        // mutable access without unsafe code. The slices are moved out of
+        // the cursor (`mem::take`) before splitting so the carved windows
+        // keep the full lifetime.
+        let mut jobs: Vec<Shard<'_>> = Vec::with_capacity(chunks.len());
+        let mut w_rest: &mut [f32] = args.w_locals;
+        let mut e_rest: &mut [f32] = &mut errs;
+        let mut covered = 0usize; // first row index still inside w_rest
+        for rows in chunks {
+            let lo = rows[0];
+            let hi = *rows.last().unwrap();
+            let (_, tail) = std::mem::take(&mut w_rest).split_at_mut((lo - covered) * d);
+            let (w, tail_w) = tail.split_at_mut((hi - lo + 1) * d);
+            let (_, tail) = std::mem::take(&mut e_rest).split_at_mut(lo - covered);
+            let (e, tail_e) = tail.split_at_mut(hi - lo + 1);
+            w_rest = tail_w;
+            e_rest = tail_e;
+            covered = hi + 1;
+            jobs.push(Shard { rows, base: lo, w, e });
+        }
+
+        let rff = &self.rff;
+        let (w_global, recv_mask, x, y, gate, mu) =
+            (args.w_global, args.recv_mask, args.x, args.y, args.gate, args.mu);
+        std::thread::scope(|s| {
+            for shard in jobs {
+                s.spawn(move || {
+                    let mut z = vec![0.0f32; d];
+                    for &idx in shard.rows {
+                        let off = idx - shard.base;
+                        let row = &mut shard.w[off * d..(off + 1) * d];
+                        shard.e[off] = step_row(
+                            rff,
+                            &mut z,
+                            row,
+                            w_global,
+                            &recv_mask[idx * d..(idx + 1) * d],
+                            &x[idx * l..(idx + 1) * l],
+                            y[idx],
+                            gate[idx],
+                            mu,
+                        );
+                    }
+                });
+            }
+        });
         Ok(errs)
     }
 
@@ -279,5 +415,75 @@ mod tests {
             }
         }
         assert!(last_err < 0.1, "LMS did not converge: |e| = {last_err}");
+    }
+
+    #[test]
+    fn sharded_step_is_bitwise_identical() {
+        // Large enough to clear MIN_ROWS_PER_SHARD with several shards.
+        let k = 512;
+        let (mut be, w0, wg, mask, x, y, gate) = setup(k, 32, 4);
+        let active: Vec<usize> = (0..k).filter(|&c| c % 5 != 0).collect();
+        let run = |be: &mut NativeBackend, shards: usize| {
+            let mut w = w0.clone();
+            let e = be
+                .client_step_sharded(
+                    StepArgs {
+                        w_locals: &mut w,
+                        w_global: &wg,
+                        recv_mask: &mask,
+                        x: &x,
+                        y: &y,
+                        gate: &gate,
+                        mu: 0.3,
+                        active: Some(&active),
+                    },
+                    shards,
+                )
+                .unwrap();
+            (w, e)
+        };
+        let (w1, e1) = run(&mut be, 1);
+        for shards in [2, 3, 4, 7] {
+            let (ws, es) = run(&mut be, shards);
+            assert_eq!(w1, ws, "w_locals diverged at {shards} shards");
+            assert_eq!(e1, es, "errors diverged at {shards} shards");
+        }
+    }
+
+    #[test]
+    fn sharded_step_small_work_falls_back() {
+        // Below the shard threshold nothing should change either.
+        let (mut be, mut w, wg, mask, x, y, gate) = setup(8, 16, 3);
+        let mut w2 = w.clone();
+        let active = [0usize, 2, 5];
+        let e1 = be
+            .client_step(StepArgs {
+                w_locals: &mut w,
+                w_global: &wg,
+                recv_mask: &mask,
+                x: &x,
+                y: &y,
+                gate: &gate,
+                mu: 0.3,
+                active: Some(&active),
+            })
+            .unwrap();
+        let e2 = be
+            .client_step_sharded(
+                StepArgs {
+                    w_locals: &mut w2,
+                    w_global: &wg,
+                    recv_mask: &mask,
+                    x: &x,
+                    y: &y,
+                    gate: &gate,
+                    mu: 0.3,
+                    active: Some(&active),
+                },
+                8,
+            )
+            .unwrap();
+        assert_eq!(w, w2);
+        assert_eq!(e1, e2);
     }
 }

@@ -18,15 +18,38 @@ use crate::util::rng::Pcg32;
 const TAG_DELAY: u64 = 0xde1a7;
 
 /// Channel delay model.
+///
+/// # Example
+///
+/// Draws are keyed on `(seed, client, iteration)` so every algorithm
+/// variant sees the identical channel realization:
+///
+/// ```
+/// use pao_fed::fl::delay::DelayModel;
+///
+/// let channel = DelayModel::Geometric { delta: 0.2 };
+/// let d = channel.sample(42, 3, 100);
+/// assert_eq!(d, channel.sample(42, 3, 100)); // deterministic per key
+/// assert_eq!(DelayModel::None.sample(1, 0, 0), 0);
+/// assert!((channel.mean() - 0.25).abs() < 1e-12); // delta / (1 - delta)
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum DelayModel {
     /// No delays (ideal channels; Fig. 3(c) "0% stragglers").
     None,
     /// Geometric tail: P(delay > l) = delta^l.
-    Geometric { delta: f64 },
+    Geometric {
+        /// Tail parameter in [0, 1).
+        delta: f64,
+    },
     /// Staged decades (Fig. 5(c)): P(delay > step*i) = delta^i; delays come
     /// in multiples of `step`.
-    Staged { delta: f64, step: usize },
+    Staged {
+        /// Tail parameter in [0, 1).
+        delta: f64,
+        /// Delay granularity in iterations.
+        step: usize,
+    },
 }
 
 impl DelayModel {

@@ -12,7 +12,9 @@
 //!   4. selected clients receive `M_{k,n} w_n` (partial or full downlink);
 //!   5. all data-holding clients run the batched RFF/KLMS step through the
 //!      configured `ComputeBackend` (eqs. 10-13) - autonomous local updates
-//!      included when enabled;
+//!      included when enabled; with [`run_sharded`] the batch splits over
+//!      worker threads (client rows are independent within a tick, so the
+//!      result is bitwise-identical to the serial step);
 //!   6. selected clients upload `S_{k,n} w_{k,n+1}`, which enters the delay
 //!      channel;
 //!   7. the server drains arrivals and aggregates (eqs. 14-15 or eq. 6);
@@ -33,10 +35,53 @@ const TAG_SELECT: u64 = 0x5e1ec7;
 
 /// Environment realization shared by every algorithm in a comparison:
 /// the data stream, RFF space, participation probabilities and channel.
+///
+/// # Example
+///
+/// Assemble a tiny federation and run one PAO-Fed variant through it:
+///
+/// ```
+/// use pao_fed::data::stream::{FedStream, StreamConfig};
+/// use pao_fed::data::synthetic::Eq39Source;
+/// use pao_fed::fl::algorithms::{build, Variant};
+/// use pao_fed::fl::backend::NativeBackend;
+/// use pao_fed::fl::delay::DelayModel;
+/// use pao_fed::fl::engine::{self, Environment};
+/// use pao_fed::fl::participation::Participation;
+/// use pao_fed::rff::RffSpace;
+/// use pao_fed::util::rng::Pcg32;
+///
+/// let seed = 1;
+/// let cfg = StreamConfig {
+///     n_clients: 4,
+///     n_iters: 50,
+///     data_group_samples: vec![25, 50],
+///     test_size: 20,
+/// };
+/// let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+/// let rff = RffSpace::sample(4, 16, 1.0, &mut Pcg32::derive(seed, &[1]));
+/// let mut backend = NativeBackend::new(rff.clone());
+/// let env = Environment::new(
+///     stream,
+///     rff,
+///     Participation::always(4),
+///     DelayModel::None,
+///     seed,
+///     &mut backend,
+/// )
+/// .unwrap();
+/// let algo = build(Variant::PaoFedU1, 0.4, 4, 10, 10);
+/// let res = engine::run(&env, &algo, &mut backend).unwrap();
+/// assert!(!res.mse_db.is_empty());
+/// ```
 pub struct Environment {
+    /// Materialized data stream (arrivals + samples + test set).
     pub stream: FedStream,
+    /// The shared RFF realization (defines the model dimension D).
     pub rff: RffSpace,
+    /// Per-client availability probabilities.
     pub participation: Participation,
+    /// The uplink delay channel.
     pub delay: DelayModel,
     /// Seed keying availability/delay/subsample draws.
     pub env_seed: u64,
@@ -122,8 +167,23 @@ impl RunResult {
     }
 }
 
-/// Run `algo` in `env` with the given compute backend.
+/// Run `algo` in `env` with the given compute backend (serial client step).
 pub fn run(env: &Environment, algo: &AlgoConfig, backend: &mut dyn ComputeBackend) -> Result<RunResult> {
+    run_sharded(env, algo, backend, 1)
+}
+
+/// Run `algo` in `env`, splitting each iteration's batched client step over
+/// up to `client_shards` worker threads (see
+/// [`ComputeBackend::client_step_sharded`]). `client_shards <= 1`
+/// reproduces [`run`] exactly; any shard count produces bitwise-identical
+/// curves because client rows are independent within a tick and the
+/// aggregation consumes uploads in client order either way.
+pub fn run_sharded(
+    env: &Environment,
+    algo: &AlgoConfig,
+    backend: &mut dyn ComputeBackend,
+    client_shards: usize,
+) -> Result<RunResult> {
     let k = env.stream.n_clients;
     let n_iters = env.stream.n_iters;
     let d = env.d();
@@ -240,16 +300,19 @@ pub fn run(env: &Environment, algo: &AlgoConfig, backend: &mut dyn ComputeBacken
         // -- 5: batched client compute ------------------------------------
         if !active.is_empty() {
             active.sort_unstable();
-            backend.client_step(StepArgs {
-                w_locals: &mut w_locals,
-                w_global: &server.w,
-                recv_mask: &recv_mask,
-                x: &xbuf,
-                y: &ybuf,
-                gate: &gatebuf,
-                mu: algo.mu,
-                active: Some(&active),
-            })?;
+            backend.client_step_sharded(
+                StepArgs {
+                    w_locals: &mut w_locals,
+                    w_global: &server.w,
+                    recv_mask: &recv_mask,
+                    x: &xbuf,
+                    y: &ybuf,
+                    gate: &gatebuf,
+                    mu: algo.mu,
+                    active: Some(&active),
+                },
+                client_shards,
+            )?;
         }
 
         // -- 6: uplink through the delay channel --------------------------

@@ -84,15 +84,20 @@ impl Coords {
 /// Which portion-selection discipline the federation runs.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum ScheduleKind {
+    /// Every client shares the same circularly-shifting block (eq. 7).
     Coordinated,
+    /// Each client's block is additionally offset by its id (Section V).
     Uncoordinated,
+    /// `M = I`: no communication reduction (Online-Fed(SGD) baselines).
     Full,
+    /// I.i.d. uniform m-subsets (the Assumption-4 analysis model).
     RandomSubset,
 }
 
 /// Deterministic selection-matrix schedule for the whole federation.
 #[derive(Clone, Debug)]
 pub struct SelectionSchedule {
+    /// The selection discipline in force.
     pub kind: ScheduleKind,
     /// Model dimension D.
     pub d: usize,

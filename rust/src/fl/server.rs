@@ -61,8 +61,11 @@ pub enum AggregationMode {
     /// Eqs. (14)-(15) with a weight schedule and most-recent-wins conflict
     /// resolution.
     DeviationBuckets {
+        /// Weight-decreasing schedule alpha_l.
         alpha: AlphaSchedule,
+        /// Updates older than this are discarded (alpha_l = 0 beyond).
         l_max: usize,
+        /// Keep only the most recently sent contribution per coordinate.
         most_recent_wins: bool,
     },
     /// Eq. (6): average the arrived (full) models.

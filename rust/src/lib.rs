@@ -16,7 +16,11 @@
 //!   ([`runtime`]).
 //!
 //! Quickstart: see `examples/quickstart.rs`; the `pao-fed` binary exposes
-//! every experiment (`pao-fed fig3a`, `pao-fed all`, ...).
+//! every experiment (`pao-fed fig3a`, `pao-fed all`, ...). Monte-Carlo
+//! sweeps and the batched client step parallelize over cores via
+//! [`util::parallel`] (`--jobs N`) with bitwise-identical results.
+
+#![warn(missing_docs)]
 
 pub mod async_rt;
 pub mod cli;

@@ -13,8 +13,11 @@ pub use lu::Lu;
 /// Row-major dense matrix of f64.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Mat {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Row-major storage, length `rows * cols`.
     pub data: Vec<f64>,
 }
 

@@ -11,17 +11,25 @@
 //!   --iters N     federation iterations                 (default 2000)
 //!   --clients K   number of clients                     (default 256)
 //!   --out DIR     results directory                     (default results/)
+//!   --jobs N      parallel workers: N Monte-Carlo threads, N client
+//!                 shards when the Monte-Carlo level is serial; 0 = all
+//!                 cores (default 1). Curves are bitwise-identical for
+//!                 every N.
+//!   --shards M    override the client-shard count (0 = all cores); like
+//!                 the --jobs shards, it only applies when Monte-Carlo
+//!                 runs are not already executing concurrently
 //!   --xla         run the client step through the AOT PJRT artifacts
+//!                 (forces serial execution; needs `--features xla`)
 //!   --quiet       suppress ASCII charts
 //! ```
 
 use pao_fed::cli::Args;
-use pao_fed::experiments::{self, BackendKind, ExperimentCtx};
+use pao_fed::experiments::{self, BackendKind, ExperimentCtx, Parallelism};
 
 fn usage() -> ! {
     eprintln!(
         "usage: pao-fed <experiment> [--mc N] [--seed S] [--iters N] [--clients K] \
-         [--out DIR] [--xla] [--quiet]\n\
+         [--out DIR] [--jobs N] [--shards M] [--xla] [--quiet]\n\
          experiments: {} all | extras: {} extras",
         experiments::ALL.join(" "),
         experiments::EXTRAS.join(" ")
@@ -45,6 +53,12 @@ fn main() {
     };
 
     let parse = || -> Result<ExperimentCtx, String> {
+        let mut jobs = Parallelism::from_jobs(args.get_parse("jobs", 1usize)?);
+        if let Some(shards) = args.get("shards") {
+            let n: usize = shards.parse().map_err(|_| "bad --shards".to_string())?;
+            // Same zero semantics as --jobs: 0 = all cores.
+            jobs.client_shards = Parallelism::from_jobs(n).client_shards;
+        }
         Ok(ExperimentCtx {
             mc: args.get_parse("mc", 3usize)?,
             seed: args.get_parse("seed", 2023u64)?,
@@ -57,6 +71,7 @@ fn main() {
             iters: args.get("iters").map(|v| v.parse()).transpose().map_err(|_| "bad --iters".to_string())?,
             clients: args.get("clients").map(|v| v.parse()).transpose().map_err(|_| "bad --clients".to_string())?,
             quiet: args.has("quiet"),
+            jobs,
         })
     };
     let ctx = match parse() {

@@ -41,6 +41,21 @@ pub fn fast_cos(x: f32) -> f32 {
 }
 
 /// One realization of the RFF projection.
+///
+/// # Example
+///
+/// ```
+/// use pao_fed::rff::RffSpace;
+/// use pao_fed::util::rng::Pcg32;
+///
+/// let mut rng = Pcg32::new(7, 0);
+/// let rff = RffSpace::sample(4, 64, 1.0, &mut rng);
+/// let z = rff.features(&[0.1, -0.4, 0.2, 0.9]);
+/// assert_eq!(z.len(), 64);
+/// // RFF features are normalized so E||z||^2 = 1.
+/// let norm2: f32 = z.iter().map(|v| v * v).sum();
+/// assert!((norm2 - 1.0).abs() < 0.5, "norm^2 = {norm2}");
+/// ```
 #[derive(Clone, Debug)]
 pub struct RffSpace {
     /// Raw input dimension L.

@@ -12,7 +12,9 @@ use std::path::{Path, PathBuf};
 /// One named tensor slot (parameter or output).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Slot {
+    /// Slot name as recorded by the AOT step (e.g. "w_locals").
     pub name: String,
+    /// Tensor shape; empty = scalar.
     pub shape: Vec<usize>,
 }
 
@@ -26,6 +28,7 @@ impl Slot {
 /// One AOT artifact.
 #[derive(Clone, Debug)]
 pub struct ArtifactSpec {
+    /// Unique artifact name (e.g. "client_step_k256_d200_l4").
     pub name: String,
     /// "client_step" | "rff" | "eval".
     pub kind: String,
@@ -49,7 +52,9 @@ impl ArtifactSpec {
 /// The parsed manifest.
 #[derive(Debug)]
 pub struct Manifest {
+    /// Directory the manifest (and the HLO files) live in.
     pub dir: PathBuf,
+    /// Every artifact recorded by the AOT step.
     pub artifacts: Vec<ArtifactSpec>,
 }
 

@@ -8,27 +8,49 @@
 //! the 64-bit instruction ids of jax>=0.5 serialized protos.
 //!
 //! Python never runs here: artifacts are produced once by `make artifacts`.
+//!
+//! The PJRT path needs the external `xla` crate, which is not available in
+//! offline builds; it is gated behind the `xla` cargo feature. Without the
+//! feature this module still exposes [`XlaBackend`] and [`PjRtEngine`] as
+//! stubs whose constructors fail with a descriptive error, so every caller
+//! (CLI `--xla`, examples, benches) compiles unchanged and degrades
+//! gracefully at runtime. The manifest parser and artifact discovery are
+//! pure rust and remain available either way.
 
 pub mod manifest;
+
+#[cfg(feature = "xla")]
 mod xla_backend;
+#[cfg(not(feature = "xla"))]
+mod xla_stub;
 
 pub use manifest::{ArtifactSpec, Manifest, Slot};
+#[cfg(feature = "xla")]
 pub use xla_backend::XlaBackend;
+#[cfg(not(feature = "xla"))]
+pub use xla_stub::{PjRtEngine, XlaBackend};
 
-use crate::error::{Error, Result};
+#[cfg(feature = "xla")]
+use crate::error::Error;
+#[cfg(feature = "xla")]
 use std::collections::HashMap;
+#[cfg(feature = "xla")]
 use std::path::Path;
+#[cfg(feature = "xla")]
+use crate::error::Result;
 
 /// Default artifact directory (relative to the repo root).
 pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
 
 /// A PJRT CPU engine holding compiled executables for the artifact set.
+#[cfg(feature = "xla")]
 pub struct PjRtEngine {
     client: xla::PjRtClient,
     manifest: Manifest,
     exes: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "xla")]
 impl PjRtEngine {
     /// Create a CPU engine over the artifact directory.
     pub fn load(dir: &Path) -> Result<Self> {

@@ -1,0 +1,80 @@
+//! Offline stand-ins for the PJRT engine and XLA backend.
+//!
+//! Compiled when the `xla` cargo feature is off (the default in offline
+//! environments, where the external `xla` crate cannot be fetched). The
+//! types mirror the real API surface exactly - construction simply fails
+//! with a descriptive error - so `--xla` callers, examples and benches
+//! compile against either configuration and fall back to the native
+//! backend at runtime.
+
+use crate::error::{Error, Result};
+use crate::fl::backend::{ComputeBackend, StepArgs};
+use crate::rff::RffSpace;
+
+const UNAVAILABLE: &str =
+    "built without the `xla` cargo feature; add the `xla` crate to \
+     rust/Cargo.toml [dependencies] and rebuild with `--features xla` \
+     (see the feature notes in rust/Cargo.toml), or use the native backend";
+
+/// Stub PJRT engine: never constructed; exists so diagnostics such as
+/// `XlaBackend::engine().platform()` compile without the `xla` feature.
+pub struct PjRtEngine {
+    _private: (),
+}
+
+impl PjRtEngine {
+    /// Platform string of the stub (never reachable from a constructed
+    /// backend, provided for API parity).
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+}
+
+/// Stub XLA backend: `new` always fails with a descriptive error.
+pub struct XlaBackend {
+    engine: PjRtEngine,
+}
+
+impl XlaBackend {
+    /// Always fails: the PJRT path needs the `xla` feature.
+    pub fn new(_artifact_dir: &std::path::Path, _k: usize, _rff: RffSpace) -> Result<Self> {
+        Err(Error::Xla(UNAVAILABLE.into()))
+    }
+
+    /// The underlying (stub) engine; unreachable since `new` never succeeds.
+    pub fn engine(&self) -> &PjRtEngine {
+        &self.engine
+    }
+}
+
+impl ComputeBackend for XlaBackend {
+    fn client_step(&mut self, _args: StepArgs<'_>) -> Result<Vec<f32>> {
+        Err(Error::Xla(UNAVAILABLE.into()))
+    }
+
+    fn rff_features(&mut self, _x: &[f32]) -> Result<Vec<f32>> {
+        Err(Error::Xla(UNAVAILABLE.into()))
+    }
+
+    fn eval_mse(&mut self, _w: &[f32], _z_test: &[f32], _y_test: &[f32]) -> Result<f64> {
+        Err(Error::Xla(UNAVAILABLE.into()))
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-unavailable"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn construction_fails_with_guidance() {
+        let mut rng = Pcg32::new(1, 0);
+        let rff = RffSpace::sample(4, 16, 1.0, &mut rng);
+        let err = XlaBackend::new(std::path::Path::new("artifacts"), 8, rff).unwrap_err();
+        assert!(err.to_string().contains("xla"), "{err}");
+    }
+}

@@ -63,6 +63,7 @@ impl TheoryConfig {
 
 /// One sampled realization of the extended matrices.
 pub struct ExtendedModel<'a> {
+    /// The analysis-model configuration being sampled.
     pub cfg: &'a TheoryConfig,
 }
 

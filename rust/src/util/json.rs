@@ -10,11 +10,17 @@ use std::fmt::Write as _;
 /// JSON value. Numbers are kept as f64 (sufficient for manifests/results).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number.
     Num(f64),
+    /// String.
     Str(String),
+    /// Array.
     Arr(Vec<Json>),
+    /// Object (sorted keys for stable output).
     Obj(BTreeMap<String, Json>),
 }
 

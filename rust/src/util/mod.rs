@@ -1,9 +1,12 @@
-//! Self-contained substrates: PRNG, JSON, CSV/plot output, timing.
+//! Self-contained substrates: PRNG, JSON, CSV/plot output, timing, and the
+//! fork-join parallel layer.
 //!
-//! The offline crate set has no `rand`/`serde`/`criterion`, so the library
-//! carries minimal, well-tested implementations of exactly what it needs.
+//! The offline crate set has no `rand`/`serde`/`criterion`/`rayon`, so the
+//! library carries minimal, well-tested implementations of exactly what it
+//! needs.
 
 pub mod json;
+pub mod parallel;
 pub mod plot;
 pub mod rng;
 pub mod table;

@@ -1,0 +1,208 @@
+//! Deterministic fork-join parallelism for the simulation stack.
+//!
+//! No `rayon` exists in the offline crate set, so this module carries a
+//! minimal scoped work-sharing layer on `std::thread::scope`. Two loops in
+//! the stack shard over it:
+//!
+//! * the **Monte-Carlo loop** (`experiments::run_variants`): independent
+//!   environment realizations run on `mc_workers` threads;
+//! * the **per-iteration client step** (`fl::backend::NativeBackend`):
+//!   the active-client list splits into `client_shards` contiguous chunks.
+//!
+//! **Determinism contract.** Parallel execution is bitwise-identical to
+//! serial execution:
+//!
+//! * every per-run seed derives only from `(base_seed, run_index)`, never
+//!   from worker identity or scheduling order;
+//! * [`parallel_map`] returns results indexed by item, so any downstream
+//!   floating-point reduction visits runs in the same order as a `for`
+//!   loop;
+//! * client rows are independent within one engine tick (disjoint slices
+//!   of `w_locals`), so per-row float sequences do not depend on which
+//!   shard executes them.
+//!
+//! The regression test `rust/tests/parallel_determinism.rs` pins the
+//! contract: `--jobs 1` and `--jobs 4` must produce identical curves.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Degree of parallelism for the simulation stack, threaded from the CLI
+/// (`--jobs` / `--shards`) through [`crate::experiments::ExperimentCtx`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Parallelism {
+    /// Worker threads for the Monte-Carlo loop (1 = serial).
+    pub mc_workers: usize,
+    /// Shards for the per-iteration batched client step (1 = serial).
+    /// Only the native backend shards; the XLA/PJRT backend keeps its
+    /// single-threaded device path.
+    pub client_shards: usize,
+}
+
+impl Parallelism {
+    /// Fully serial execution (the default; matches the pre-parallel
+    /// behaviour of the crate exactly).
+    pub fn serial() -> Self {
+        Parallelism {
+            mc_workers: 1,
+            client_shards: 1,
+        }
+    }
+
+    /// `--jobs N` semantics: `N` workers for both loops; `0` means "use
+    /// every available core".
+    pub fn from_jobs(jobs: usize) -> Self {
+        let n = if jobs == 0 { available_cores() } else { jobs };
+        Parallelism {
+            mc_workers: n,
+            client_shards: n,
+        }
+    }
+
+    /// One worker per available core.
+    pub fn auto() -> Self {
+        Self::from_jobs(0)
+    }
+
+    /// True when both loops run on the calling thread.
+    pub fn is_serial(&self) -> bool {
+        self.mc_workers <= 1 && self.client_shards <= 1
+    }
+}
+
+impl Default for Parallelism {
+    fn default() -> Self {
+        Self::serial()
+    }
+}
+
+/// Detected core count (>= 1).
+pub fn available_cores() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Map `f` over `0..n_items` on up to `workers` threads, returning results
+/// in item order.
+///
+/// Items are handed out through a shared counter (dynamic load balancing:
+/// Monte-Carlo runs can differ in cost when delay horizons differ), but the
+/// output `Vec` is indexed by item, so callers that fold the results fold
+/// them in the same order a serial loop would - the basis of the crate's
+/// bitwise determinism guarantee. With `workers <= 1` (or a single item)
+/// no threads spawn at all.
+///
+/// Panics in `f` propagate to the caller once all workers finish.
+pub fn parallel_map<T, F>(n_items: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if workers <= 1 || n_items <= 1 {
+        return (0..n_items).map(f).collect();
+    }
+    let workers = workers.min(n_items);
+    let next = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<T>>> = Mutex::new((0..n_items).map(|_| None).collect());
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n_items {
+                    return;
+                }
+                let v = f(i);
+                slots.lock().unwrap()[i] = Some(v);
+            });
+        }
+    });
+    slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|v| v.expect("every index filled exactly once"))
+        .collect()
+}
+
+/// Split the sorted index list `items` into at most `shards` contiguous
+/// chunks of near-equal length. `min_per_shard` caps the chunk count so
+/// that chunks are *approximately* at least that long (the trailing chunk
+/// holds the remainder and may be slightly shorter). Returns chunk
+/// boundaries as subslices. Used by the sharded client step to keep
+/// per-thread work above the thread-spawn cost.
+pub fn chunk_indices<'a>(
+    items: &'a [usize],
+    shards: usize,
+    min_per_shard: usize,
+) -> Vec<&'a [usize]> {
+    if items.is_empty() {
+        return Vec::new();
+    }
+    let max_shards = (items.len() / min_per_shard.max(1)).max(1);
+    let shards = shards.clamp(1, max_shards);
+    let per = items.len().div_ceil(shards);
+    items.chunks(per).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_serial_in_order() {
+        let f = |i: usize| (i * i) as u64;
+        let serial: Vec<u64> = (0..37).map(f).collect();
+        for workers in [1, 2, 4, 8, 64] {
+            assert_eq!(parallel_map(37, workers, f), serial, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert_eq!(parallel_map(0, 4, |i| i), Vec::<usize>::new());
+        assert_eq!(parallel_map(1, 4, |i| i + 10), vec![10]);
+    }
+
+    #[test]
+    fn results_are_not_scheduling_dependent() {
+        // Uneven work per item; order must still hold.
+        let f = |i: usize| {
+            let mut acc = 0u64;
+            for k in 0..(i % 7) * 10_000 {
+                acc = acc.wrapping_add(k);
+            }
+            (i as u64) << 32 | (acc & 0xffff)
+        };
+        let a = parallel_map(24, 4, f);
+        let b = parallel_map(24, 3, f);
+        let c: Vec<u64> = (0..24).map(f).collect();
+        assert_eq!(a, c);
+        assert_eq!(b, c);
+    }
+
+    #[test]
+    fn jobs_zero_is_auto() {
+        let p = Parallelism::from_jobs(0);
+        assert!(p.mc_workers >= 1);
+        assert_eq!(p.mc_workers, available_cores());
+        assert!(Parallelism::serial().is_serial());
+        assert!(!Parallelism::from_jobs(4).is_serial());
+    }
+
+    #[test]
+    fn chunking_respects_minimum() {
+        let items: Vec<usize> = (0..100).collect();
+        // 100 items, min 64 per shard -> one chunk no matter the request.
+        assert_eq!(chunk_indices(&items, 8, 64).len(), 1);
+        // min 25 -> at most 4 chunks.
+        let chunks = chunk_indices(&items, 8, 25);
+        assert_eq!(chunks.len(), 4);
+        let total: usize = chunks.iter().map(|c| c.len()).sum();
+        assert_eq!(total, 100);
+        // Chunks are contiguous and ordered.
+        let flat: Vec<usize> = chunks.iter().flat_map(|c| c.iter().copied()).collect();
+        assert_eq!(flat, items);
+        assert!(chunk_indices(&[], 4, 1).is_empty());
+    }
+}

@@ -7,8 +7,11 @@
 
 /// One named series of (x, y) points.
 pub struct Series {
+    /// Legend label.
     pub label: String,
+    /// X coordinates.
     pub xs: Vec<f64>,
+    /// Y coordinates (same length as `xs`).
     pub ys: Vec<f64>,
 }
 

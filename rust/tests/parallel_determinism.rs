@@ -1,0 +1,144 @@
+//! The parallel layer's determinism contract: sharded/threaded execution
+//! must be bitwise-identical to serial execution.
+//!
+//! * `run_variants` with `--jobs 4` == `--jobs 1` on a small fig3a-style
+//!   configuration (the ISSUE acceptance regression);
+//! * the engine with 4 client shards == the serial engine;
+//! * the shard threshold leaves tiny configurations untouched.
+
+use pao_fed::data::stream::{FedStream, StreamConfig};
+use pao_fed::data::synthetic::Eq39Source;
+use pao_fed::experiments::{common::PaperEnv, BackendKind, ExperimentCtx, Parallelism};
+use pao_fed::fl::algorithms::{build, Variant};
+use pao_fed::fl::backend::NativeBackend;
+use pao_fed::fl::delay::DelayModel;
+use pao_fed::fl::engine::{self, Environment};
+use pao_fed::fl::participation::Participation;
+use pao_fed::rff::RffSpace;
+use pao_fed::util::rng::Pcg32;
+
+fn small_ctx(jobs: Parallelism) -> ExperimentCtx {
+    ExperimentCtx {
+        mc: 4,
+        seed: 2023,
+        backend: BackendKind::Native,
+        outdir: std::env::temp_dir().join("pao_fed_par_det_test"),
+        iters: Some(200),
+        clients: Some(16),
+        quiet: true,
+        jobs,
+    }
+}
+
+/// Fig. 3(a)'s algorithm roster at reduced scale.
+fn fig3a_algos() -> Vec<pao_fed::fl::engine::AlgoConfig> {
+    vec![
+        build(Variant::OnlineFedSgd, 0.4, 4, 10, 20),
+        build(Variant::OnlineFed { subsample: 4 }, 0.4, 4, 10, 20),
+        build(Variant::PsoFed { subsample: 4 }, 0.4, 4, 10, 20),
+        build(Variant::PaoFedU1, 0.4, 4, 10, 20),
+        build(Variant::PaoFedU2, 0.4, 4, 10, 20),
+    ]
+}
+
+#[test]
+fn monte_carlo_jobs4_matches_jobs1_bitwise() {
+    let serial_ctx = small_ctx(Parallelism::serial());
+    let parallel_ctx = small_ctx(Parallelism::from_jobs(4));
+    let env_s = PaperEnv::synth(&serial_ctx);
+    let env_p = PaperEnv::synth(&parallel_ctx);
+    let algos = fig3a_algos();
+
+    let a = pao_fed::experiments::common::run_variants(&serial_ctx, &env_s, &algos, "det-s", "serial")
+        .unwrap();
+    let b =
+        pao_fed::experiments::common::run_variants(&parallel_ctx, &env_p, &algos, "det-p", "parallel")
+            .unwrap();
+
+    assert_eq!(a.curves.len(), b.curves.len());
+    for (ca, cb) in a.curves.iter().zip(&b.curves) {
+        assert_eq!(ca.label, cb.label);
+        assert_eq!(ca.iters, cb.iters);
+        // Bitwise: f64 equality, no tolerance.
+        assert_eq!(ca.mse, cb.mse, "curve {} diverged across --jobs", ca.label);
+        assert_eq!(ca.final_mse, cb.final_mse);
+        assert_eq!(ca.comm.uplink_scalars, cb.comm.uplink_scalars);
+        assert_eq!(ca.comm.downlink_scalars, cb.comm.downlink_scalars);
+    }
+}
+
+#[test]
+fn monte_carlo_worker_count_does_not_matter() {
+    // 2, 3 and 8 workers (more workers than the 4 runs) all agree.
+    let algos = vec![build(Variant::PaoFedC2, 0.4, 4, 10, 50)];
+    let reference = {
+        let ctx = small_ctx(Parallelism::serial());
+        let env = PaperEnv::synth(&ctx);
+        pao_fed::experiments::common::run_variants(&ctx, &env, &algos, "det-r", "r").unwrap()
+    };
+    for workers in [2usize, 3, 8] {
+        let ctx = small_ctx(Parallelism {
+            mc_workers: workers,
+            client_shards: 1,
+        });
+        let env = PaperEnv::synth(&ctx);
+        let got =
+            pao_fed::experiments::common::run_variants(&ctx, &env, &algos, "det-w", "w").unwrap();
+        assert_eq!(reference.curves[0].mse, got.curves[0].mse, "workers={workers}");
+    }
+}
+
+/// A federation big enough (K = 256, full participation) that the shard
+/// threshold engages.
+fn big_env(seed: u64) -> (Environment, NativeBackend) {
+    let cfg = StreamConfig {
+        n_clients: 256,
+        n_iters: 60,
+        data_group_samples: vec![30, 45, 60, 60],
+        test_size: 64,
+    };
+    let mut src = Eq39Source::new(seed);
+    let stream = FedStream::build(&cfg, &mut src, seed);
+    let mut rng = Pcg32::derive(seed, &[0xabc]);
+    let rff = RffSpace::sample(4, 48, 1.0, &mut rng);
+    let mut backend = NativeBackend::new(rff.clone());
+    let env = Environment::new(
+        stream,
+        rff,
+        Participation::always(256),
+        DelayModel::Geometric { delta: 0.2 },
+        seed,
+        &mut backend,
+    )
+    .unwrap();
+    (env, backend)
+}
+
+#[test]
+fn engine_client_shards_match_serial_bitwise() {
+    let (env, mut be) = big_env(11);
+    let algo = build(Variant::PaoFedU2, 0.4, 4, 10, 10);
+    let serial = engine::run(&env, &algo, &mut be).unwrap();
+    for shards in [2usize, 4, 8] {
+        let sharded = engine::run_sharded(&env, &algo, &mut be, shards).unwrap();
+        assert_eq!(serial.mse_db, sharded.mse_db, "curve diverged at {shards} shards");
+        assert_eq!(serial.final_w, sharded.final_w, "model diverged at {shards} shards");
+        assert_eq!(serial.comm.uplink_scalars, sharded.comm.uplink_scalars);
+    }
+}
+
+#[test]
+fn tiny_runs_unaffected_by_shard_request() {
+    // K = 16 is far below the shard threshold: the request must be a no-op.
+    let ctx = small_ctx(Parallelism {
+        mc_workers: 1,
+        client_shards: 8,
+    });
+    let env = PaperEnv::synth(&ctx);
+    let algos = vec![build(Variant::PaoFedU1, 0.4, 4, 10, 50)];
+    let a = pao_fed::experiments::common::run_variants(&ctx, &env, &algos, "det-t", "t").unwrap();
+    let ctx2 = small_ctx(Parallelism::serial());
+    let env2 = PaperEnv::synth(&ctx2);
+    let b = pao_fed::experiments::common::run_variants(&ctx2, &env2, &algos, "det-t2", "t2").unwrap();
+    assert_eq!(a.curves[0].mse, b.curves[0].mse);
+}

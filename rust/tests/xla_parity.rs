@@ -4,6 +4,9 @@
 //!
 //! Requires `artifacts/` (run `make artifacts`); tests are skipped with a
 //! notice otherwise so `cargo test` stays green on a fresh checkout.
+//! The whole file is gated on the `xla` cargo feature: without it the
+//! backend is a stub that cannot execute artifacts.
+#![cfg(feature = "xla")]
 
 use pao_fed::data::stream::{FedStream, StreamConfig};
 use pao_fed::data::synthetic::Eq39Source;
