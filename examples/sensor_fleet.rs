@@ -10,10 +10,11 @@
 //! ~98% communication cut. The reference run is recorded in EXPERIMENTS.md.
 //!
 //! Part two scales the fleet to **K = 500 devices** on the native backend
-//! and drives the per-iteration client step through the sharded parallel
-//! path (`engine::run_sharded`), demonstrating the headroom the parallel
-//! layer adds: same bitwise results, a multiple of the throughput on a
-//! multi-core host.
+//! and drives the per-iteration client step through the persistent worker
+//! pool (`engine::run_sharded` over a `PoolHandle`), with the curve
+//! evaluation pipelined against the next tick's compute - same bitwise
+//! results, a multiple of the throughput on a multi-core host, and no
+//! per-tick thread spawning.
 //!
 //! Run: `make artifacts && cargo run --release --example sensor_fleet`
 
@@ -27,6 +28,7 @@ use pao_fed::fl::participation::Participation;
 use pao_fed::rff::RffSpace;
 use pao_fed::runtime::{artifact_dir, XlaBackend};
 use pao_fed::util::parallel::available_cores;
+use pao_fed::util::pool::PoolHandle;
 use pao_fed::util::rng::Pcg32;
 use pao_fed::util::Stopwatch;
 
@@ -136,14 +138,17 @@ fn main() -> pao_fed::Result<()> {
     let serial = run(&env2, &algo, &mut native)?;
     let t_serial = sw.secs();
 
+    // One persistent pool serves every sharded tick (and pipelines the
+    // evaluation): workers are spawned once, not per iteration.
     let shards = available_cores();
+    let pool = PoolHandle::global(shards);
     let sw = Stopwatch::start();
-    let sharded = run_sharded(&env2, &algo, &mut native, shards)?;
+    let sharded = run_sharded(&env2, &algo, &mut native, &pool)?;
     let t_sharded = sw.secs();
 
     assert_eq!(serial.final_w, sharded.final_w, "sharding must be bitwise-exact");
     println!(
-        "  serial: {t_serial:.2}s | {shards} shards: {t_sharded:.2}s \
+        "  serial: {t_serial:.2}s | {shards}-way pool: {t_sharded:.2}s \
          (speedup {:.2}x, results bitwise-identical)",
         t_serial / t_sharded.max(1e-9)
     );

@@ -9,7 +9,7 @@
 mod bench_harness;
 
 use bench_harness::Bench;
-use pao_fed::experiments::{self, BackendKind, ExperimentCtx, Parallelism};
+use pao_fed::experiments::{self, BackendKind, ExperimentCtx, Parallelism, PoolHandle};
 
 fn quick_ctx(id: &str) -> ExperimentCtx {
     ExperimentCtx {
@@ -21,6 +21,7 @@ fn quick_ctx(id: &str) -> ExperimentCtx {
         clients: Some(64),
         quiet: true,
         jobs: Parallelism::serial(),
+        pool: PoolHandle::serial(),
     }
     .tagged(id)
 }

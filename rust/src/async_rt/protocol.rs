@@ -1,12 +1,17 @@
 //! Message protocol and thread orchestration for the deployment runtime.
+//!
+//! The scheduling / downlink / uplink / aggregation bookkeeping is the
+//! same set of stage helpers the discrete engine's tick pipeline uses
+//! (`fl::pipeline`), so the two runtimes cannot drift apart.
 
 use crate::data::stream::FedStream;
 use crate::error::{Error, Result};
 use crate::fl::delay::{DelayModel, DelayQueue};
 use crate::fl::engine::AlgoConfig;
 use crate::fl::participation::Participation;
-use crate::fl::selection::{ScheduleKind, SelectionSchedule};
-use crate::fl::server::{AggregationMode, Server, Update};
+use crate::fl::pipeline;
+use crate::fl::selection::SelectionSchedule;
+use crate::fl::server::{AggregateInfo, AggregationMode, Server, Update};
 use crate::metrics::{mse_test, to_db, CommStats};
 use crate::rff::RffSpace;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -60,6 +65,8 @@ pub struct DeploymentReport {
     pub comm: CommStats,
     /// Final server model.
     pub final_w: Vec<f32>,
+    /// Aggregation diagnostics summed over the run.
+    pub agg: AggregateInfo,
     /// Total local-learning steps across all clients.
     pub local_steps: u64,
     /// Threads spawned (K clients).
@@ -116,21 +123,11 @@ fn client_main(ctx: ClientCtx) {
             }
             learned = 1;
         }
-        // Uplink (S_{k,n} w_{k,n+1}) when participating.
+        // Uplink (S_{k,n} w_{k,n+1}) when participating — the same stage
+        // helpers the discrete engine's pipeline uses.
         let upload = participating.then(|| {
-            let coords = if ctx.algo.schedule == ScheduleKind::Full {
-                crate::fl::selection::Coords::Full { d }
-            } else {
-                ctx.schedule.send(ctx.id, iter, ctx.algo.refine_before_share)
-            };
-            let mut values = Vec::with_capacity(coords.len());
-            coords.for_each(|j| values.push(w[j]));
-            Update {
-                client: ctx.id,
-                sent_iter: iter,
-                coords,
-                values,
-            }
+            let coords = pipeline::uplink_coords(&ctx.schedule, &ctx.algo, ctx.id, iter);
+            pipeline::package_update(ctx.id, iter, coords, &w)
         });
         if ctx
             .tx
@@ -199,13 +196,11 @@ pub fn run_deployment(
     drop(up_tx);
 
     let mut server = Server::new(d, algo.aggregation.clone());
-    let horizon = match delay {
-        DelayModel::None => 1,
-        DelayModel::Geometric { .. } => 64,
-        DelayModel::Staged { step, .. } => step * 12,
-    };
-    let mut queue: DelayQueue<Update> = DelayQueue::new(horizon);
+    // Exact delay horizon (bounded by the run length): no in-flight update
+    // that could still be delivered is ever clamped.
+    let mut queue: DelayQueue<Update> = DelayQueue::for_run(&delay, n_iters);
     let mut comm = CommStats::default();
+    let mut agg_total = AggregateInfo::default();
     let mut iters = Vec::new();
     let mut mse_db = Vec::new();
     let mut local_steps = 0u64;
@@ -223,30 +218,16 @@ pub fn run_deployment(
         if let Some(cap) = algo.subsample {
             // Blind server-side scheduling (same streams as the discrete
             // engine): select among all K, keep the reachable intersection.
-            let mut rng = crate::util::rng::Pcg32::derive(cfg.env_seed, &[0x5e1ec7, n as u64]);
-            let selected = rng.sample_indices(k, cap.min(k));
-            let mut sel = vec![false; k];
-            for &c in &selected {
-                sel[c] = true;
-            }
+            let selected = pipeline::blind_schedule(cfg.env_seed, n, k, cap);
+            let sel = pipeline::selection_mask(k, &selected);
             participants.retain(|&c| sel[c]);
         }
-        let is_participant: Vec<bool> = {
-            let mut v = vec![false; k];
-            for &c in &participants {
-                v[c] = true;
-            }
-            v
-        };
+        let is_participant = pipeline::selection_mask(k, &participants);
 
-        // Downlink.
+        // Downlink (stage-4 bookkeeping shared with the tick pipeline).
         for c in 0..k {
             let portion = if is_participant[c] {
-                let coords = if algo.full_downlink || algo.schedule == ScheduleKind::Full {
-                    crate::fl::selection::Coords::Full { d }
-                } else {
-                    schedule.recv(c, n)
-                };
+                let coords = pipeline::downlink_coords(&schedule, algo, c, n);
                 let mut values = Vec::with_capacity(coords.len());
                 coords.for_each(|j| values.push(server.w[j]));
                 comm.downlink_scalars += values.len() as u64;
@@ -276,19 +257,15 @@ pub fn run_deployment(
             }
         }
         acks.sort_by_key(|(c, _, _)| *c);
-        for (client, upload, learned) in acks {
+        for (_, upload, learned) in acks {
             local_steps += learned as u64;
             if let Some(u) = upload {
-                comm.uplink_scalars += u.values.len() as u64;
-                comm.uplink_msgs += 1;
-                let dl = delay.sample(cfg.env_seed, client, n);
-                queue.push(n + dl, u);
+                pipeline::file_update(&mut queue, &delay, cfg.env_seed, &mut comm, n, u);
             }
         }
 
-        // Aggregate arrivals.
-        let arrivals = queue.drain(n);
-        server.aggregate(n, &arrivals);
+        // Aggregate arrivals (stage 7, shared with the tick pipeline).
+        pipeline::aggregate_arrivals(&mut server, &mut queue, n, &mut agg_total);
 
         if n % cfg.eval_every == 0 || n + 1 == n_iters {
             iters.push(n);
@@ -311,6 +288,7 @@ pub fn run_deployment(
         mse_db,
         comm,
         final_w: server.w,
+        agg: agg_total,
         local_steps,
         n_client_threads: k,
     })

@@ -12,7 +12,8 @@ use crate::fl::participation::Participation;
 use crate::metrics::{to_db, CommStats};
 use crate::rff::RffSpace;
 use crate::util::json::{arr_f64, obj, Json};
-use crate::util::parallel::{parallel_map, Parallelism};
+use crate::util::parallel::Parallelism;
+use crate::util::pool::PoolHandle;
 use crate::util::rng::Pcg32;
 use crate::util::{plot, write_csv};
 use std::path::PathBuf;
@@ -48,6 +49,12 @@ pub struct ExperimentCtx {
     /// workers and per-iteration client shards. Results are
     /// bitwise-identical for every setting (see `util::parallel`).
     pub jobs: Parallelism,
+    /// The persistent worker pool serving both loops (and the pipelined
+    /// evaluation); per-loop concurrency limits come from `jobs`, applied
+    /// via `PoolHandle::with_limit`. Tests may substitute a caller-owned
+    /// pool — or a serial handle, which forces fully serial execution
+    /// regardless of `jobs` (a serial handle has no pool to re-limit).
+    pub pool: PoolHandle,
 }
 
 impl Default for ExperimentCtx {
@@ -61,6 +68,7 @@ impl Default for ExperimentCtx {
             clients: None,
             quiet: false,
             jobs: Parallelism::serial(),
+            pool: PoolHandle::shared(),
         }
     }
 }
@@ -160,7 +168,11 @@ impl PaperEnv {
     }
 
     /// Materialize one Monte-Carlo realization (environment + backend).
-    pub fn build(&self, seed: u64, backend_kind: BackendKind) -> Result<(Environment, Box<dyn ComputeBackend>)> {
+    pub fn build(
+        &self,
+        seed: u64,
+        backend_kind: BackendKind,
+    ) -> Result<(Environment, Box<dyn ComputeBackend>)> {
         let mut rng = Pcg32::derive(seed, &[0xe2f]);
         let rff = RffSpace::sample(self.l, self.d, self.sigma, &mut rng);
         let cfg = StreamConfig {
@@ -233,10 +245,10 @@ pub struct FigureData {
 /// `env_of(run)` and average the MSE curves (common random numbers: all
 /// algorithms share each realization).
 ///
-/// Realizations execute on up to `ctx.jobs.mc_workers` threads. Each run's
-/// seed derives only from `(ctx.seed, run)` and the accumulation below
-/// folds per-run results in run order, so the averaged curves are
-/// bitwise-identical for every worker count (pinned by
+/// Realizations execute on up to `ctx.jobs.mc_workers` participants of
+/// `ctx.pool`. Each run's seed derives only from `(ctx.seed, run)` and the
+/// accumulation below folds per-run results in run order, so the averaged
+/// curves are bitwise-identical for every worker count (pinned by
 /// `rust/tests/parallel_determinism.rs`). The XLA backend is forced onto
 /// the serial path: PJRT executables are not shareable across threads.
 pub fn run_variants(
@@ -248,25 +260,27 @@ pub fn run_variants(
 ) -> Result<FigureData> {
     let parallel_ok = ctx.backend != BackendKind::Xla;
     let workers = if parallel_ok { ctx.jobs.mc_workers } else { 1 };
+    let mc_pool = ctx.pool.with_limit(workers);
     // When several realizations actually run concurrently, sharding each
-    // client step on top would oversubscribe the cores; shard only when
-    // the Monte-Carlo level is effectively serial (one worker *or* one
-    // run - `--mc 1 --jobs 8` should still get an 8-way client step).
+    // client step (or pipelining its evaluation) on top would oversubscribe
+    // the cores; hand the engine a live pool only when the Monte-Carlo
+    // level is effectively serial (one worker *or* one run - `--mc 1
+    // --jobs 8` should still get an 8-way client step).
     let mc_effective = workers.min(ctx.mc.max(1));
-    let shards = if parallel_ok && mc_effective <= 1 {
-        ctx.jobs.client_shards
+    let engine_pool = if parallel_ok && mc_effective <= 1 {
+        ctx.pool.with_limit(ctx.jobs.client_shards)
     } else {
-        1
+        PoolHandle::serial()
     };
 
     // Fan out: one entry per run, each holding every algorithm's result
     // for that realization (common random numbers within a run).
-    let per_run: Vec<Result<Vec<RunResult>>> = parallel_map(ctx.mc, workers, |run| {
+    let per_run: Vec<Result<Vec<RunResult>>> = mc_pool.map(ctx.mc, |run| {
         let seed = ctx.seed.wrapping_add(run as u64 * 0x9e37);
         let (environment, mut backend) = env.build(seed, ctx.backend)?;
         algos
             .iter()
-            .map(|algo| engine::run_sharded(&environment, algo, backend.as_mut(), shards))
+            .map(|algo| engine::run_sharded(&environment, algo, backend.as_mut(), &engine_pool))
             .collect()
     });
 
@@ -423,6 +437,7 @@ mod tests {
             clients: Some(16),
             quiet: true,
             jobs: Parallelism::serial(),
+            pool: PoolHandle::serial(),
         }
     }
 

@@ -27,7 +27,8 @@ pub fn panel_a(ctx: &ExperimentCtx) -> Result<()> {
     .iter()
     .map(|&v| build(v, MU, M, L_MAX, EVAL_EVERY))
     .collect();
-    let fig = run_variants(ctx, &env, &algos, "fig2a", "Fig 2(a): local updates & selection-matrix choice (MSE dB vs iter)")?;
+    let title = "Fig 2(a): local updates & selection-matrix choice (MSE dB vs iter)";
+    let fig = run_variants(ctx, &env, &algos, "fig2a", title)?;
     emit(ctx, &fig)
 }
 
@@ -44,7 +45,8 @@ pub fn panel_b(ctx: &ExperimentCtx) -> Result<()> {
             a
         })
         .collect();
-    let fig = run_variants(ctx, &env, &algos, "fig2b", "Fig 2(b): shared parameters m (MSE dB vs iter)")?;
+    let title = "Fig 2(b): shared parameters m (MSE dB vs iter)";
+    let fig = run_variants(ctx, &env, &algos, "fig2b", title)?;
     emit(ctx, &fig)
 }
 
@@ -61,6 +63,7 @@ pub fn panel_c(ctx: &ExperimentCtx) -> Result<()> {
     .iter()
     .map(|&v| build(v, MU, M, L_MAX, EVAL_EVERY))
     .collect();
-    let fig = run_variants(ctx, &env, &algos, "fig2c", "Fig 2(c): weight-decreasing mechanism (MSE dB vs iter)")?;
+    let title = "Fig 2(c): weight-decreasing mechanism (MSE dB vs iter)";
+    let fig = run_variants(ctx, &env, &algos, "fig2c", title)?;
     emit(ctx, &fig)
 }

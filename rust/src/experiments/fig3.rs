@@ -25,7 +25,8 @@ pub fn panel_a(ctx: &ExperimentCtx) -> Result<()> {
         build(Variant::PaoFedU1, MU, M, L_MAX, EVAL_EVERY),
         build(Variant::PaoFedU2, MU, M, L_MAX, EVAL_EVERY),
     ];
-    let fig = run_variants(ctx, &env, &algos, "fig3a", "Fig 3(a): PAO-Fed vs existing methods (MSE dB vs iter)")?;
+    let title = "Fig 3(a): PAO-Fed vs existing methods (MSE dB vs iter)";
+    let fig = run_variants(ctx, &env, &algos, "fig3a", title)?;
     emit(ctx, &fig)
 }
 

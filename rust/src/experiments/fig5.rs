@@ -29,7 +29,8 @@ pub fn panel_a(ctx: &ExperimentCtx) -> Result<()> {
         // Reference: unmodified U1 for contrast.
         build(Variant::PaoFedU1, MU, M, L_MAX, EVAL_EVERY),
     ];
-    let fig = run_variants(ctx, &env, &algos, "fig5a", "Fig 5(a): full server communication ablation (MSE dB vs iter)")?;
+    let title = "Fig 5(a): full server communication ablation (MSE dB vs iter)";
+    let fig = run_variants(ctx, &env, &algos, "fig5a", title)?;
     emit(ctx, &fig)
 }
 
@@ -59,7 +60,8 @@ pub fn panel_b(ctx: &ExperimentCtx) -> Result<()> {
         build(Variant::PaoFedU1, MU, M, l_max, EVAL_EVERY),
         c2,
     ];
-    let fig = run_variants(ctx, &env, &algos, "fig5b", "Fig 5(b): common delays, delta=0.8 l_max=5 (MSE dB vs iter)")?;
+    let title = "Fig 5(b): common delays, delta=0.8 l_max=5 (MSE dB vs iter)";
+    let fig = run_variants(ctx, &env, &algos, "fig5b", title)?;
     emit(ctx, &fig)
 }
 
@@ -78,6 +80,7 @@ pub fn panel_c(ctx: &ExperimentCtx) -> Result<()> {
         build(Variant::PaoFedU1, MU, M, l_max, EVAL_EVERY),
         build(Variant::PaoFedC2, MU, M, l_max, EVAL_EVERY),
     ];
-    let fig = run_variants(ctx, &env, &algos, "fig5c", "Fig 5(c): advanced straggler environment (MSE dB vs iter)")?;
+    let title = "Fig 5(c): advanced straggler environment (MSE dB vs iter)";
+    let fig = run_variants(ctx, &env, &algos, "fig5c", title)?;
     emit(ctx, &fig)
 }

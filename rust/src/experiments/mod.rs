@@ -29,6 +29,7 @@ pub mod theory_val;
 
 pub use common::{BackendKind, ExperimentCtx, FigureData};
 pub use crate::util::parallel::Parallelism;
+pub use crate::util::pool::PoolHandle;
 
 use crate::error::{Error, Result};
 

@@ -16,14 +16,17 @@
 //! (each touches only its own `w_locals` row and reads the shared
 //! `w_global`), so the native backend also offers
 //! [`ComputeBackend::client_step_sharded`]: the sorted active list splits
-//! into contiguous chunks that advance on scoped worker threads. Per-row
-//! arithmetic is identical to the serial path, so the results are
-//! bitwise-equal regardless of the shard count. The XLA backend keeps the
-//! default single-threaded implementation (one PJRT device stream).
+//! into contiguous chunks that advance on the persistent worker pool
+//! (`util::pool`) — no per-call thread spawning. Per-row arithmetic is
+//! identical to the serial path, so the results are bitwise-equal for any
+//! pool handle. The XLA backend keeps the default single-threaded
+//! implementation (one PJRT device stream).
 
 use crate::error::Result;
 use crate::rff::RffSpace;
 use crate::util::parallel::chunk_indices;
+use crate::util::pool::PoolHandle;
+use std::sync::Mutex;
 
 /// Below this many active rows per shard, threading costs more than it
 /// saves; the sharded path folds back to serial.
@@ -61,13 +64,13 @@ pub trait ComputeBackend {
     /// clients, while the XLA kernel computes the error unconditionally.
     fn client_step(&mut self, args: StepArgs<'_>) -> Result<Vec<f32>>;
 
-    /// Execute one tick, allowed to split the work over up to `shards`
-    /// threads. Must produce results bitwise-identical to
+    /// Execute one tick, allowed to split the work over the worker pool
+    /// behind `pool`. Must produce results bitwise-identical to
     /// [`ComputeBackend::client_step`]. The default implementation ignores
-    /// `shards` and runs serially - backends opt in (the native backend
+    /// the pool and runs serially - backends opt in (the native backend
     /// does; the XLA backend keeps its single device stream).
-    fn client_step_sharded(&mut self, args: StepArgs<'_>, shards: usize) -> Result<Vec<f32>> {
-        let _ = shards;
+    fn client_step_sharded(&mut self, args: StepArgs<'_>, pool: &PoolHandle) -> Result<Vec<f32>> {
+        let _ = pool;
         self.client_step(args)
     }
 
@@ -188,13 +191,14 @@ impl ComputeBackend for NativeBackend {
         Ok(errs)
     }
 
-    fn client_step_sharded(&mut self, args: StepArgs<'_>, shards: usize) -> Result<Vec<f32>> {
+    fn client_step_sharded(&mut self, args: StepArgs<'_>, pool: &PoolHandle) -> Result<Vec<f32>> {
         // The sharded path needs an explicit (sorted) active list to carve
         // disjoint row windows; otherwise - or when the work is too small
-        // to amortize thread spawns - fall back to the serial step.
+        // to amortize the dispatch - fall back to the serial step.
         let Some(active) = args.active else {
             return self.client_step(args);
         };
+        let shards = pool.workers();
         if shards <= 1 || active.len() < 2 * MIN_ROWS_PER_SHARD {
             return self.client_step(args);
         }
@@ -226,8 +230,11 @@ impl ComputeBackend for NativeBackend {
         // ranges, so repeated split_at_mut hands each worker exclusive
         // mutable access without unsafe code. The slices are moved out of
         // the cursor (`mem::take`) before splitting so the carved windows
-        // keep the full lifetime.
-        let mut jobs: Vec<Shard<'_>> = Vec::with_capacity(chunks.len());
+        // keep the full lifetime. Each shard sits in a Mutex<Option<..>>
+        // so the pool's shared `Fn(usize)` job can take ownership of
+        // exactly its own window (one uncontended lock per chunk).
+        let n_chunks = chunks.len();
+        let mut jobs: Vec<Mutex<Option<Shard<'_>>>> = Vec::with_capacity(n_chunks);
         let mut w_rest: &mut [f32] = args.w_locals;
         let mut e_rest: &mut [f32] = &mut errs;
         let mut covered = 0usize; // first row index still inside w_rest
@@ -241,34 +248,36 @@ impl ComputeBackend for NativeBackend {
             w_rest = tail_w;
             e_rest = tail_e;
             covered = hi + 1;
-            jobs.push(Shard { rows, base: lo, w, e });
+            jobs.push(Mutex::new(Some(Shard { rows, base: lo, w, e })));
         }
 
         let rff = &self.rff;
         let (w_global, recv_mask, x, y, gate, mu) =
             (args.w_global, args.recv_mask, args.x, args.y, args.gate, args.mu);
-        std::thread::scope(|s| {
-            for shard in jobs {
-                s.spawn(move || {
-                    let mut z = vec![0.0f32; d];
-                    for &idx in shard.rows {
-                        let off = idx - shard.base;
-                        let row = &mut shard.w[off * d..(off + 1) * d];
-                        shard.e[off] = step_row(
-                            rff,
-                            &mut z,
-                            row,
-                            w_global,
-                            &recv_mask[idx * d..(idx + 1) * d],
-                            &x[idx * l..(idx + 1) * l],
-                            y[idx],
-                            gate[idx],
-                            mu,
-                        );
-                    }
-                });
+        let worker = |ji: usize| {
+            let mut shard = jobs[ji]
+                .lock()
+                .unwrap()
+                .take()
+                .expect("each shard is taken exactly once");
+            let mut z = vec![0.0f32; d];
+            for &idx in shard.rows {
+                let off = idx - shard.base;
+                let row = &mut shard.w[off * d..(off + 1) * d];
+                shard.e[off] = step_row(
+                    rff,
+                    &mut z,
+                    row,
+                    w_global,
+                    &recv_mask[idx * d..(idx + 1) * d],
+                    &x[idx * l..(idx + 1) * l],
+                    y[idx],
+                    gate[idx],
+                    mu,
+                );
             }
-        });
+        };
+        pool.run(n_chunks, &worker);
         Ok(errs)
     }
 
@@ -290,13 +299,17 @@ mod tests {
     use super::*;
     use crate::util::rng::Pcg32;
 
-    fn setup(k: usize, d: usize, l: usize) -> (NativeBackend, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    type Setup = (NativeBackend, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>);
+
+    fn setup(k: usize, d: usize, l: usize) -> Setup {
         let mut rng = Pcg32::new(5, 0);
         let rff = RffSpace::sample(l, d, 1.0, &mut rng);
         let be = NativeBackend::new(rff);
         let w_locals: Vec<f32> = (0..k * d).map(|_| rng.gaussian() as f32).collect();
         let w_global: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
-        let mask: Vec<f32> = (0..k * d).map(|_| if rng.bernoulli(0.3) { 1.0 } else { 0.0 }).collect();
+        let mask: Vec<f32> = (0..k * d)
+            .map(|_| if rng.bernoulli(0.3) { 1.0 } else { 0.0 })
+            .collect();
         let x: Vec<f32> = (0..k * l).map(|_| rng.gaussian() as f32).collect();
         let y: Vec<f32> = (0..k).map(|_| rng.gaussian() as f32).collect();
         let gate: Vec<f32> = (0..k).map(|_| if rng.bernoulli(0.7) { 1.0 } else { 0.0 }).collect();
@@ -423,8 +436,10 @@ mod tests {
         let k = 512;
         let (mut be, w0, wg, mask, x, y, gate) = setup(k, 32, 4);
         let active: Vec<usize> = (0..k).filter(|&c| c % 5 != 0).collect();
+        let pool = std::sync::Arc::new(crate::util::pool::WorkerPool::new(3));
         let run = |be: &mut NativeBackend, shards: usize| {
             let mut w = w0.clone();
+            let handle = PoolHandle::with_pool(std::sync::Arc::clone(&pool), shards);
             let e = be
                 .client_step_sharded(
                     StepArgs {
@@ -437,7 +452,7 @@ mod tests {
                         mu: 0.3,
                         active: Some(&active),
                     },
-                    shards,
+                    &handle,
                 )
                 .unwrap();
             (w, e)
@@ -480,7 +495,7 @@ mod tests {
                     mu: 0.3,
                     active: Some(&active),
                 },
-                8,
+                &PoolHandle::global(8),
             )
             .unwrap();
         assert_eq!(w, w2);

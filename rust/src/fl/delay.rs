@@ -17,6 +17,14 @@ use crate::util::rng::Pcg32;
 
 const TAG_DELAY: u64 = 0xde1a7;
 
+/// Hard cap on the geometric sampler's tail walk: `sample` never returns
+/// more than this many iterations of delay.
+const GEOMETRIC_CAP: usize = 10_000;
+
+/// Hard cap on the staged sampler's decade walk: `sample` never returns
+/// more than `STAGED_CAP * step` iterations of delay.
+const STAGED_CAP: usize = 1_000;
+
 /// Channel delay model.
 ///
 /// # Example
@@ -62,7 +70,7 @@ impl DelayModel {
                 let mut rng = Pcg32::derive(env_seed, &[TAG_DELAY, k as u64, n as u64]);
                 let mut l = 0usize;
                 // P(delay > l) = delta^l: count consecutive successes.
-                while l < 10_000 && rng.bernoulli(delta) {
+                while l < GEOMETRIC_CAP && rng.bernoulli(delta) {
                     l += 1;
                 }
                 l
@@ -70,11 +78,23 @@ impl DelayModel {
             DelayModel::Staged { delta, step } => {
                 let mut rng = Pcg32::derive(env_seed, &[TAG_DELAY, k as u64, n as u64]);
                 let mut i = 0usize;
-                while i < 1_000 && rng.bernoulli(delta) {
+                while i < STAGED_CAP && rng.bernoulli(delta) {
                     i += 1;
                 }
                 i * step
             }
+        }
+    }
+
+    /// The largest delay `sample` can ever return: the exact horizon a
+    /// [`DelayQueue`] needs so that no in-flight update is clamped (see
+    /// [`DelayQueue::for_model`]). This replaced the engine's hard-coded
+    /// per-model guesses.
+    pub fn max_delay(&self) -> usize {
+        match *self {
+            DelayModel::None => 0,
+            DelayModel::Geometric { .. } => GEOMETRIC_CAP,
+            DelayModel::Staged { step, .. } => STAGED_CAP * step,
         }
     }
 
@@ -106,6 +126,22 @@ impl<T> DelayQueue<T> {
             slots: (0..max_delay + 1).map(|_| Vec::new()).collect(),
             now: 0,
         }
+    }
+
+    /// Create sized exactly for `model`: capacity [`DelayModel::max_delay`],
+    /// so every delay the sampler can emit is delivered on time instead of
+    /// being clamped to a heuristic horizon.
+    pub fn for_model(model: &DelayModel) -> Self {
+        Self::new(model.max_delay())
+    }
+
+    /// Create sized for `model` inside a run of `n_iters` ticks: capacity
+    /// `min(max_delay, n_iters)`. An arrival at or past the end of the run
+    /// can never be drained, so the cap preserves exact delivery for every
+    /// observable tick while bounding memory for heavy-tailed models (the
+    /// geometric sampler's hard cap alone would be 10,000 slots).
+    pub fn for_run(model: &DelayModel, n_iters: usize) -> Self {
+        Self::new(model.max_delay().min(n_iters))
     }
 
     /// File a message arriving at absolute iteration `arrival`.
@@ -202,6 +238,72 @@ mod tests {
     #[test]
     fn mean_formulas() {
         assert!((DelayModel::Geometric { delta: 0.2 }.mean() - 0.25).abs() < 1e-12);
-        assert!((DelayModel::Staged { delta: 0.4, step: 10 }.mean() - 10.0 * 2.0 / 3.0).abs() < 1e-12);
+        let staged = DelayModel::Staged { delta: 0.4, step: 10 };
+        assert!((staged.mean() - 10.0 * 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_delay_bounds_every_sample() {
+        let models = [
+            DelayModel::None,
+            DelayModel::Geometric { delta: 0.7 },
+            DelayModel::Staged { delta: 0.7, step: 10 },
+        ];
+        for m in models {
+            for i in 0..2_000 {
+                assert!(m.sample(3, 1, i) <= m.max_delay());
+            }
+        }
+        assert_eq!(DelayModel::None.max_delay(), 0);
+    }
+
+    #[test]
+    fn staged_at_cap_is_delivered_not_dropped() {
+        // delta = 1.0 (an adversarial probe past the documented [0, 1)
+        // range) forces the sampler to its stage cap — the worst delay the
+        // model can emit. A queue sized by `for_model` must deliver that
+        // update exactly on time; the old heuristic horizon (step * 12)
+        // silently compressed such tails to an earlier iteration.
+        let m = DelayModel::Staged { delta: 1.0, step: 3 };
+        let d = m.sample(1, 0, 0);
+        assert_eq!(d, m.max_delay(), "cap sample must hit the exact horizon");
+        let mut q: DelayQueue<u32> = DelayQueue::for_model(&m);
+        q.push(d, 7);
+        for t in 0..d {
+            assert!(q.drain(t).is_empty(), "update surfaced early at {t}");
+        }
+        assert_eq!(q.drain(d), vec![7], "update dropped at the horizon");
+    }
+
+    #[test]
+    fn for_run_caps_at_run_length_without_observable_loss() {
+        let m = DelayModel::Geometric { delta: 0.2 };
+        // Run of 50 ticks: capacity is 50, not the sampler's 10,000 cap.
+        let mut q: DelayQueue<u8> = DelayQueue::for_run(&m, 50);
+        // A beyond-the-run arrival is clamped to now + 50, which is at or
+        // past the run end for every `now` — it can never surface inside
+        // the run, exactly like the unclamped arrival.
+        q.push(10_000, 1);
+        for t in 0..50 {
+            assert!(q.drain(t).is_empty(), "phantom delivery at {t}");
+        }
+        // In-run delays are untouched.
+        let mut q: DelayQueue<u8> = DelayQueue::for_run(&m, 50);
+        q.push(49, 2);
+        for t in 0..49 {
+            assert!(q.drain(t).is_empty());
+        }
+        assert_eq!(q.drain(49), vec![2]);
+    }
+
+    #[test]
+    fn for_model_matches_new() {
+        let m = DelayModel::Geometric { delta: 0.2 };
+        let mut q: DelayQueue<u8> = DelayQueue::for_model(&m);
+        q.push(m.max_delay(), 1);
+        for t in 0..m.max_delay() {
+            assert!(q.drain(t).is_empty());
+        }
+        assert_eq!(q.drain(m.max_delay()), vec![1]);
     }
 }

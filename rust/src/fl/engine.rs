@@ -3,7 +3,7 @@
 //! Online-FedSGD, PSO-Fed, all six PAO-Fed variants and the Fig. 5(a)
 //! ablation) is a configuration of the *same* machinery.
 //!
-//! Per iteration n:
+//! Per iteration n (each a named stage of [`super::pipeline::TickPipeline`]):
 //!   1. data arrivals `gate_k` come from the materialized `FedStream`;
 //!   2. availability is Bernoulli(p_k) gated on data (common random numbers
 //!      across algorithm variants);
@@ -13,25 +13,26 @@
 //!   5. all data-holding clients run the batched RFF/KLMS step through the
 //!      configured `ComputeBackend` (eqs. 10-13) - autonomous local updates
 //!      included when enabled; with [`run_sharded`] the batch splits over
-//!      worker threads (client rows are independent within a tick, so the
+//!      the worker pool (client rows are independent within a tick, so the
 //!      result is bitwise-identical to the serial step);
 //!   6. selected clients upload `S_{k,n} w_{k,n+1}`, which enters the delay
 //!      channel;
 //!   7. the server drains arrivals and aggregates (eqs. 14-15 or eq. 6);
-//!   8. the test-MSE curve is sampled every `eval_every` iterations.
+//!   8. the test-MSE curve is sampled every `eval_every` iterations -
+//!      pipelined on the pool with the next tick's compute, reading a
+//!      snapshot of the server model (curves stay bitwise-identical).
 
-use super::backend::{ComputeBackend, StepArgs};
-use super::delay::{DelayModel, DelayQueue};
+use super::backend::ComputeBackend;
+use super::delay::DelayModel;
 use super::participation::Participation;
-use super::selection::{Coords, ScheduleKind, SelectionSchedule};
-use super::server::{AggregateInfo, AggregationMode, Server, Update};
+use super::pipeline::TickPipeline;
+use super::selection::ScheduleKind;
+use super::server::{AggregateInfo, AggregationMode};
 use crate::data::stream::FedStream;
 use crate::error::Result;
-use crate::metrics::{mse_test, to_db, CommStats};
+use crate::metrics::{to_db, CommStats};
 use crate::rff::RffSpace;
-use crate::util::rng::Pcg32;
-
-const TAG_SELECT: u64 = 0x5e1ec7;
+use crate::util::pool::PoolHandle;
 
 /// Environment realization shared by every algorithm in a comparison:
 /// the data stream, RFF space, participation probabilities and channel.
@@ -167,199 +168,35 @@ impl RunResult {
     }
 }
 
-/// Run `algo` in `env` with the given compute backend (serial client step).
-pub fn run(env: &Environment, algo: &AlgoConfig, backend: &mut dyn ComputeBackend) -> Result<RunResult> {
-    run_sharded(env, algo, backend, 1)
+/// Run `algo` in `env` with the given compute backend (serial client step,
+/// inline evaluation).
+pub fn run(
+    env: &Environment,
+    algo: &AlgoConfig,
+    backend: &mut dyn ComputeBackend,
+) -> Result<RunResult> {
+    run_sharded(env, algo, backend, &PoolHandle::serial())
 }
 
-/// Run `algo` in `env`, splitting each iteration's batched client step over
-/// up to `client_shards` worker threads (see
-/// [`ComputeBackend::client_step_sharded`]). `client_shards <= 1`
-/// reproduces [`run`] exactly; any shard count produces bitwise-identical
-/// curves because client rows are independent within a tick and the
-/// aggregation consumes uploads in client order either way.
+/// Run `algo` in `env` on the worker pool: each iteration's batched client
+/// step shards over the pool (see [`ComputeBackend::client_step_sharded`])
+/// and the curve evaluation (stage 8) is pipelined with the next tick's
+/// compute under the eval-snapshot rule. A serial handle reproduces
+/// [`run`] exactly; any handle produces bitwise-identical curves because
+/// client rows are independent within a tick, the aggregation consumes
+/// uploads in client order either way, and evaluation reads a snapshot of
+/// the server model taken at the tick boundary.
 pub fn run_sharded(
     env: &Environment,
     algo: &AlgoConfig,
     backend: &mut dyn ComputeBackend,
-    client_shards: usize,
+    pool: &PoolHandle,
 ) -> Result<RunResult> {
-    let k = env.stream.n_clients;
-    let n_iters = env.stream.n_iters;
-    let d = env.d();
-    let l = env.rff.l;
-    let schedule = SelectionSchedule::new(algo.schedule, d, algo.m, env.env_seed);
-
-    let mut w_locals = vec![0.0f32; k * d];
-    let mut server = Server::new(d, algo.aggregation.clone());
-    // Delay horizon: generous cap; aggregation discards beyond l_max anyway.
-    let horizon = match env.delay {
-        DelayModel::None => 1,
-        DelayModel::Geometric { .. } => 64,
-        DelayModel::Staged { step, .. } => step * 12,
-    };
-    let mut queue: DelayQueue<Update> = DelayQueue::new(horizon);
-
-    // Reused dense buffers for the batched backend call.
-    let mut recv_mask = vec![0.0f32; k * d];
-    let mut xbuf = vec![0.0f32; k * l];
-    let mut ybuf = vec![0.0f32; k];
-    let mut gatebuf = vec![0.0f32; k];
-    let mut active: Vec<usize> = Vec::with_capacity(k);
-    let mut in_active = vec![false; k];
-    let mut participants: Vec<usize> = Vec::with_capacity(k);
-    let mut cleared: Vec<usize> = Vec::with_capacity(k);
-
-    let mut comm = CommStats::default();
-    let mut agg_total = AggregateInfo::default();
-    let mut iters = Vec::new();
-    let mut mse_db = Vec::new();
-
-    for n in 0..n_iters {
-        // -- 1-2: data arrivals and availability -------------------------
-        for &c in &active {
-            in_active[c] = false;
-        }
-        active.clear();
-        participants.clear();
-        for c in 0..k {
-            let has_data = env.stream.has_data(c, n);
-            gatebuf[c] = 0.0;
-            if has_data && env.participation.is_available(env.env_seed, c, n, true) {
-                participants.push(c);
-            }
-            if has_data {
-                // Learning happens for participants always; for everyone
-                // else only when autonomous updates are on.
-                let learns = algo.autonomous_updates || participants.last() == Some(&c);
-                if learns {
-                    gatebuf[c] = 1.0;
-                    let xb = &mut xbuf[c * l..(c + 1) * l];
-                    xb.copy_from_slice(env.stream.x(c, n));
-                    ybuf[c] = env.stream.y(c, n);
-                    active.push(c);
-                    in_active[c] = true;
-                }
-            }
-        }
-
-        // -- 3: server-side scheduling (subsampling) ----------------------
-        // The server selects *blindly* among all K clients (it cannot know
-        // availability in advance - Section III-A); only selected clients
-        // that are actually available with fresh data participate. This is
-        // why "sub-sampling the already reduced pool" hurts in asynchronous
-        // settings (Fig. 3(a)).
-        let mut scheduled: Option<Vec<usize>> = None;
-        if let Some(cap) = algo.subsample {
-            let mut rng = Pcg32::derive(env.env_seed, &[TAG_SELECT, n as u64]);
-            let selected = rng.sample_indices(k, cap.min(k));
-            let chosen: Vec<usize> = {
-                let mut sel = vec![false; k];
-                for &c in &selected {
-                    sel[c] = true;
-                }
-                participants.iter().copied().filter(|&c| sel[c]).collect()
-            };
-            // Deselected clients keep learning only under autonomous
-            // updates; otherwise their gate is cleared.
-            for &c in &participants {
-                if !chosen.contains(&c) && !algo.autonomous_updates {
-                    gatebuf[c] = 0.0;
-                }
-            }
-            participants = chosen;
-            scheduled = Some(selected);
-        }
-
-        // -- 4: downlink --------------------------------------------------
-        // Model payloads flow only to scheduled clients that are actually
-        // reachable (the availability handshake is a control message of
-        // negligible size and is not counted as model traffic).
-        let _ = &scheduled;
-        for &c in &cleared {
-            recv_mask[c * d..(c + 1) * d].fill(0.0);
-        }
-        cleared.clear();
-        for &c in &participants {
-            let row = &mut recv_mask[c * d..(c + 1) * d];
-            if algo.full_downlink || algo.schedule == ScheduleKind::Full {
-                row.fill(1.0);
-                comm.downlink_scalars += d as u64;
-            } else {
-                schedule.recv(c, n).fill_mask(row);
-                comm.downlink_scalars += algo.m as u64;
-            }
-            comm.downlink_msgs += 1;
-            cleared.push(c);
-            if !in_active[c] {
-                active.push(c);
-                in_active[c] = true;
-            }
-        }
-
-        // -- 5: batched client compute ------------------------------------
-        if !active.is_empty() {
-            active.sort_unstable();
-            backend.client_step_sharded(
-                StepArgs {
-                    w_locals: &mut w_locals,
-                    w_global: &server.w,
-                    recv_mask: &recv_mask,
-                    x: &xbuf,
-                    y: &ybuf,
-                    gate: &gatebuf,
-                    mu: algo.mu,
-                    active: Some(&active),
-                },
-                client_shards,
-            )?;
-        }
-
-        // -- 6: uplink through the delay channel --------------------------
-        for &c in &participants {
-            let coords = if algo.schedule == ScheduleKind::Full {
-                Coords::Full { d }
-            } else {
-                schedule.send(c, n, algo.refine_before_share)
-            };
-            let mut values = Vec::with_capacity(coords.len());
-            let row = &w_locals[c * d..(c + 1) * d];
-            coords.for_each(|j| values.push(row[j]));
-            comm.uplink_scalars += values.len() as u64;
-            comm.uplink_msgs += 1;
-            let delay = env.delay.sample(env.env_seed, c, n);
-            queue.push(n + delay, Update {
-                client: c,
-                sent_iter: n,
-                coords,
-                values,
-            });
-        }
-
-        // -- 7: server aggregation ----------------------------------------
-        let arrivals = queue.drain(n);
-        let info = server.aggregate(n, &arrivals);
-        agg_total.applied += info.applied;
-        agg_total.discarded_stale += info.discarded_stale;
-        agg_total.conflicts_resolved += info.conflicts_resolved;
-
-        // -- 8: evaluation --------------------------------------------------
-        if n % algo.eval_every == 0 || n + 1 == n_iters {
-            let mse = mse_test(&server.w, &env.z_test, &env.stream.test_y);
-            iters.push(n);
-            mse_db.push(to_db(mse));
-        }
+    let mut pipeline = TickPipeline::new(env, algo);
+    for n in 0..env.stream.n_iters {
+        pipeline.tick(n, backend, pool)?;
     }
-
-    let final_mse = mse_test(&server.w, &env.z_test, &env.stream.test_y);
-    Ok(RunResult {
-        iters,
-        mse_db,
-        comm,
-        final_w: server.w,
-        agg: agg_total,
-        final_mse,
-    })
+    Ok(pipeline.finish())
 }
 
 #[cfg(test)]
@@ -369,6 +206,7 @@ mod tests {
     use crate::data::synthetic::Eq39Source;
     use crate::fl::algorithms::{self, Variant};
     use crate::fl::backend::NativeBackend;
+    use crate::util::rng::Pcg32;
 
     fn tiny_env(seed: u64, delay: DelayModel, part: Participation) -> (Environment, NativeBackend) {
         let cfg = StreamConfig {
@@ -413,8 +251,10 @@ mod tests {
     #[test]
     fn partial_sharing_cuts_communication() {
         let (env, mut be) = tiny_env(3, DelayModel::None, Participation::always(16));
-        let full = run(&env, &algorithms::build(Variant::OnlineFedSgd, 0.4, 4, 10, 10), &mut be).unwrap();
-        let pao = run(&env, &algorithms::build(Variant::PaoFedU1, 0.4, 4, 10, 10), &mut be).unwrap();
+        let sgd = algorithms::build(Variant::OnlineFedSgd, 0.4, 4, 10, 10);
+        let full = run(&env, &sgd, &mut be).unwrap();
+        let u1 = algorithms::build(Variant::PaoFedU1, 0.4, 4, 10, 10);
+        let pao = run(&env, &u1, &mut be).unwrap();
         // m = 4 of D = 32 -> 87.5% reduction here.
         let red = pao.comm.reduction_vs(&full.comm);
         assert!((red - 0.875).abs() < 0.02, "reduction {red}");
@@ -470,7 +310,8 @@ mod tests {
 
     #[test]
     fn determinism_same_seed_same_curve() {
-        let (env, mut be) = tiny_env(8, DelayModel::Geometric { delta: 0.3 }, Participation::uniform(16, 0.4));
+        let delay = DelayModel::Geometric { delta: 0.3 };
+        let (env, mut be) = tiny_env(8, delay, Participation::uniform(16, 0.4));
         let algo = algorithms::build(Variant::PaoFedC2, 0.4, 4, 10, 10);
         let a = run(&env, &algo, &mut be).unwrap();
         let b = run(&env, &algo, &mut be).unwrap();

@@ -5,7 +5,9 @@
 //! * `delay` — communication-delay channel + delivery queue (Section III-B);
 //! * `server` — the PAO-Fed aggregation (eqs. 14-15) and baselines (eq. 6);
 //! * `backend` — pluggable batched client compute (native rust or AOT XLA);
-//! * `engine` — the per-iteration federation loop (Algorithm 1);
+//! * `pipeline` — Algorithm 1 decomposed into named tick stages (shared
+//!   with the deployment runtime), including the pipelined evaluation;
+//! * `engine` — the per-iteration federation loop driving the pipeline;
 //! * `algorithms` — presets for every compared method.
 
 pub mod algorithms;
@@ -13,5 +15,6 @@ pub mod backend;
 pub mod delay;
 pub mod engine;
 pub mod participation;
+pub mod pipeline;
 pub mod selection;
 pub mod server;

@@ -1,0 +1,447 @@
+//! The tick pipeline: Algorithm 1 decomposed into named stages over a
+//! per-tick [`TickState`], executed by [`TickPipeline`].
+//!
+//! `engine::run_sharded` used to be a 180-line monolithic loop that the
+//! deployment runtime (`async_rt::protocol`) partially re-implemented.
+//! This module splits one federation iteration into its stage boundaries:
+//!
+//! 1-2. **arrivals / availability** — [`TickPipeline`] (engine-side data
+//!      marshalling into the dense backend buffers);
+//! 3.   **scheduling** — [`blind_schedule`] + [`selection_mask`] (shared
+//!      with the deployment runtime);
+//! 4.   **downlink** — [`downlink_coords`] picks `M_{k,n}` (shared);
+//! 5.   **client compute** — the batched [`ComputeBackend`] step, sharded
+//!      over the worker pool;
+//! 6.   **uplink / delay** — [`uplink_coords`] + [`package_update`] +
+//!      [`file_update`] (shared);
+//! 7.   **aggregate** — [`aggregate_arrivals`] (shared);
+//! 8.   **eval** — the `EvalStage`, which may run *pipelined on the pool*:
+//!      the MSE sample is computed from a **snapshot** of `server.w` taken
+//!      at the tick boundary while subsequent ticks proceed, so curves are
+//!      bitwise-identical to inline evaluation (the eval-snapshot rule).
+//!
+//! The free functions are the single home of the downlink/uplink/schedule
+//! bookkeeping; `async_rt::protocol` calls the same ones instead of
+//! duplicating them.
+
+use super::backend::{ComputeBackend, StepArgs};
+use super::delay::{DelayModel, DelayQueue};
+use super::engine::{AlgoConfig, Environment, RunResult};
+use super::selection::{Coords, ScheduleKind, SelectionSchedule};
+use super::server::{AggregateInfo, Server, Update};
+use crate::error::Result;
+use crate::metrics::{mse_test, to_db, CommStats};
+use crate::util::pool::{PoolHandle, TaskHandle};
+use crate::util::rng::Pcg32;
+use std::sync::Arc;
+
+/// Stream tag for the server's blind selection draws (stage 3); shared by
+/// the discrete engine and the deployment runtime so both see the same
+/// schedule realization.
+const TAG_SELECT: u64 = 0x5e1ec7;
+
+/// Stage 3 — blind server-side scheduling: sample `cap` of all `k` client
+/// ids at tick `n`. The server cannot know availability in advance
+/// (Section III-A), so it selects blindly; callers intersect with the
+/// available set.
+pub fn blind_schedule(env_seed: u64, n: usize, k: usize, cap: usize) -> Vec<usize> {
+    let mut rng = Pcg32::derive(env_seed, &[TAG_SELECT, n as u64]);
+    rng.sample_indices(k, cap.min(k))
+}
+
+/// Dense membership mask over `0..k` for a selected id list.
+pub fn selection_mask(k: usize, selected: &[usize]) -> Vec<bool> {
+    let mut sel = vec![false; k];
+    for &c in selected {
+        sel[c] = true;
+    }
+    sel
+}
+
+/// Stage 4 — which coordinates the server downlinks to client `c` at tick
+/// `n`: `M = I` under full downlink (Fig. 5(a)) or a `Full` schedule,
+/// otherwise the schedule's `M_{k,n}` portion.
+pub fn downlink_coords(
+    schedule: &SelectionSchedule,
+    algo: &AlgoConfig,
+    c: usize,
+    n: usize,
+) -> Coords {
+    if algo.full_downlink || algo.schedule == ScheduleKind::Full {
+        Coords::Full { d: schedule.d }
+    } else {
+        schedule.recv(c, n)
+    }
+}
+
+/// Stage 6 — which coordinates client `c` uplinks at tick `n`:
+/// `S_{k,n} = M_{k,n+1}` under eq. (8) refinement, `M_{k,n}` for the
+/// *0-variant ablation, all of `w` under a `Full` schedule.
+pub fn uplink_coords(
+    schedule: &SelectionSchedule,
+    algo: &AlgoConfig,
+    c: usize,
+    n: usize,
+) -> Coords {
+    if algo.schedule == ScheduleKind::Full {
+        Coords::Full { d: schedule.d }
+    } else {
+        schedule.send(c, n, algo.refine_before_share)
+    }
+}
+
+/// Package `S_{k,n} w` into an [`Update`]: gather `w` at `coords` in
+/// `Coords::for_each` order (the order aggregation consumes).
+pub fn package_update(client: usize, sent_iter: usize, coords: Coords, w: &[f32]) -> Update {
+    let mut values = Vec::with_capacity(coords.len());
+    coords.for_each(|j| values.push(w[j]));
+    Update {
+        client,
+        sent_iter,
+        coords,
+        values,
+    }
+}
+
+/// Stage 6 bookkeeping — account the uplink traffic, draw the channel
+/// delay for `(env_seed, client, n)` and file the update for delivery.
+pub fn file_update(
+    queue: &mut DelayQueue<Update>,
+    delay: &DelayModel,
+    env_seed: u64,
+    comm: &mut CommStats,
+    n: usize,
+    update: Update,
+) {
+    comm.uplink_scalars += update.values.len() as u64;
+    comm.uplink_msgs += 1;
+    let l = delay.sample(env_seed, update.client, n);
+    queue.push(n + l, update);
+}
+
+/// Stage 7 — drain the delay channel at `n`, aggregate into the server
+/// (eqs. 14-15 or eq. 6) and fold the diagnostics into `total`.
+pub fn aggregate_arrivals(
+    server: &mut Server,
+    queue: &mut DelayQueue<Update>,
+    n: usize,
+    total: &mut AggregateInfo,
+) {
+    let arrivals = queue.drain(n);
+    let info = server.aggregate(n, &arrivals);
+    total.applied += info.applied;
+    total.discarded_stale += info.discarded_stale;
+    total.conflicts_resolved += info.conflicts_resolved;
+}
+
+/// Dense per-tick working state, allocated once and reused every tick
+/// (the engine's zero-allocation steady state for stages 1-6).
+pub struct TickState {
+    /// Clients doing any work this tick (receive or learn), kept sorted
+    /// before the compute stage so the backend can carve disjoint row
+    /// windows.
+    pub active: Vec<usize>,
+    /// Dense membership mirror of `active`.
+    pub in_active: Vec<bool>,
+    /// Scheduled ∩ available clients exchanging messages this tick.
+    pub participants: Vec<usize>,
+    /// Rows of `recv_mask` dirtied by the last downlink (sparse clear).
+    pub cleared: Vec<usize>,
+    /// Receive mask (diagonal of `M_{k,n}` per client), `[K * D]`.
+    pub recv_mask: Vec<f32>,
+    /// Raw inputs, `[K * L]`.
+    pub x: Vec<f32>,
+    /// Targets, `[K]`.
+    pub y: Vec<f32>,
+    /// Learning gates, `[K]`.
+    pub gate: Vec<f32>,
+}
+
+impl TickState {
+    /// Allocate for `k` clients, model dimension `d`, input length `l`.
+    pub fn new(k: usize, d: usize, l: usize) -> Self {
+        TickState {
+            active: Vec::with_capacity(k),
+            in_active: vec![false; k],
+            participants: Vec::with_capacity(k),
+            cleared: Vec::with_capacity(k),
+            recv_mask: vec![0.0; k * d],
+            x: vec![0.0; k * l],
+            y: vec![0.0; k],
+            gate: vec![0.0; k],
+        }
+    }
+}
+
+/// Stage 8 with the eval-snapshot rule. At most one evaluation is in
+/// flight; it reads a snapshot of `server.w` cloned at the tick boundary,
+/// so overlapping it with later ticks cannot change the curve.
+struct EvalStage<'e> {
+    env: &'e Environment,
+    /// Shared copies of the featurized test set for pool-dispatched
+    /// evaluations (`'static` tasks cannot hold the `env` borrow). Built
+    /// lazily on the first pipelined sample, so serial runs never pay the
+    /// clone.
+    shared: Option<(Arc<Vec<f32>>, Arc<Vec<f32>>)>,
+    pending: Option<TaskHandle<f64>>,
+    iters: Vec<usize>,
+    mse_db: Vec<f64>,
+}
+
+impl<'e> EvalStage<'e> {
+    fn new(env: &'e Environment) -> Self {
+        EvalStage {
+            env,
+            shared: None,
+            pending: None,
+            iters: Vec::new(),
+            mse_db: Vec::new(),
+        }
+    }
+
+    /// Sample the curve at tick `n`. Serial handles evaluate inline; pool
+    /// handles overlap the evaluation with subsequent ticks.
+    fn submit(&mut self, n: usize, w: &[f32], pool: &PoolHandle) {
+        // Join the previous in-flight sample first so `mse_db` stays in
+        // tick order.
+        self.join_pending();
+        self.iters.push(n);
+        if pool.is_serial() {
+            let mse = mse_test(w, &self.env.z_test, &self.env.stream.test_y);
+            self.mse_db.push(to_db(mse));
+            return;
+        }
+        let env = self.env;
+        let (z, y) = self.shared.get_or_insert_with(|| {
+            (
+                Arc::new(env.z_test.clone()),
+                Arc::new(env.stream.test_y.clone()),
+            )
+        });
+        let snapshot = w.to_vec();
+        let z = Arc::clone(z);
+        let y = Arc::clone(y);
+        self.pending = Some(pool.submit(move || mse_test(&snapshot, &z, &y)));
+    }
+
+    fn join_pending(&mut self) {
+        if let Some(h) = self.pending.take() {
+            self.mse_db.push(to_db(h.join()));
+        }
+    }
+}
+
+/// One engine run's full mutable state, advanced one federation iteration
+/// at a time by [`TickPipeline::tick`] and consumed by
+/// [`TickPipeline::finish`].
+pub struct TickPipeline<'e> {
+    env: &'e Environment,
+    algo: &'e AlgoConfig,
+    schedule: SelectionSchedule,
+    state: TickState,
+    /// Per-client local models, `[K * D]`.
+    w_locals: Vec<f32>,
+    server: Server,
+    queue: DelayQueue<Update>,
+    comm: CommStats,
+    agg: AggregateInfo,
+    eval: EvalStage<'e>,
+}
+
+impl<'e> TickPipeline<'e> {
+    /// Assemble the pipeline for one `(environment, algorithm)` run.
+    pub fn new(env: &'e Environment, algo: &'e AlgoConfig) -> Self {
+        let k = env.stream.n_clients;
+        let d = env.d();
+        let l = env.rff.l;
+        TickPipeline {
+            schedule: SelectionSchedule::new(algo.schedule, d, algo.m, env.env_seed),
+            state: TickState::new(k, d, l),
+            w_locals: vec![0.0; k * d],
+            server: Server::new(d, algo.aggregation.clone()),
+            queue: DelayQueue::for_run(&env.delay, env.stream.n_iters),
+            comm: CommStats::default(),
+            agg: AggregateInfo::default(),
+            eval: EvalStage::new(env),
+            env,
+            algo,
+        }
+    }
+
+    /// Advance one federation iteration through all eight stages.
+    pub fn tick(
+        &mut self,
+        n: usize,
+        backend: &mut dyn ComputeBackend,
+        pool: &PoolHandle,
+    ) -> Result<()> {
+        self.stage_arrivals(n);
+        self.stage_schedule(n);
+        self.stage_downlink(n);
+        self.stage_client_compute(backend, pool)?;
+        self.stage_uplink(n);
+        self.stage_aggregate(n);
+        self.stage_eval(n, pool);
+        Ok(())
+    }
+
+    /// Stages 1-2 — data arrivals from the materialized stream and
+    /// Bernoulli availability gated on data (common random numbers across
+    /// algorithm variants).
+    fn stage_arrivals(&mut self, n: usize) {
+        let k = self.env.stream.n_clients;
+        let l = self.env.rff.l;
+        let s = &mut self.state;
+        for &c in &s.active {
+            s.in_active[c] = false;
+        }
+        s.active.clear();
+        s.participants.clear();
+        for c in 0..k {
+            let has_data = self.env.stream.has_data(c, n);
+            s.gate[c] = 0.0;
+            if has_data && self.env.participation.is_available(self.env.env_seed, c, n, true) {
+                s.participants.push(c);
+            }
+            if has_data {
+                // Learning happens for participants always; for everyone
+                // else only when autonomous updates are on.
+                let learns = self.algo.autonomous_updates || s.participants.last() == Some(&c);
+                if learns {
+                    s.gate[c] = 1.0;
+                    s.x[c * l..(c + 1) * l].copy_from_slice(self.env.stream.x(c, n));
+                    s.y[c] = self.env.stream.y(c, n);
+                    s.active.push(c);
+                    s.in_active[c] = true;
+                }
+            }
+        }
+    }
+
+    /// Stage 3 — optional blind subsampling (Online-Fed / PSO-Fed). The
+    /// deselected-participant scan reuses the dense selection mask, so it
+    /// is O(K + P) rather than the old O(P²) `contains` walk.
+    fn stage_schedule(&mut self, n: usize) {
+        let Some(cap) = self.algo.subsample else {
+            return;
+        };
+        let k = self.env.stream.n_clients;
+        let selected = blind_schedule(self.env.env_seed, n, k, cap);
+        let sel = selection_mask(k, &selected);
+        let s = &mut self.state;
+        // Deselected clients keep learning only under autonomous updates;
+        // otherwise their gate is cleared.
+        if !self.algo.autonomous_updates {
+            for &c in &s.participants {
+                if !sel[c] {
+                    s.gate[c] = 0.0;
+                }
+            }
+        }
+        s.participants.retain(|&c| sel[c]);
+    }
+
+    /// Stage 4 — downlink `M_{k,n} w_n` to participants. Model payloads
+    /// flow only to scheduled clients that are actually reachable (the
+    /// availability handshake is a control message of negligible size and
+    /// is not counted as model traffic).
+    fn stage_downlink(&mut self, n: usize) {
+        let d = self.env.d();
+        let s = &mut self.state;
+        for &c in &s.cleared {
+            s.recv_mask[c * d..(c + 1) * d].fill(0.0);
+        }
+        s.cleared.clear();
+        for &c in &s.participants {
+            let coords = downlink_coords(&self.schedule, self.algo, c, n);
+            coords.fill_mask(&mut s.recv_mask[c * d..(c + 1) * d]);
+            self.comm.downlink_scalars += coords.len() as u64;
+            self.comm.downlink_msgs += 1;
+            s.cleared.push(c);
+            if !s.in_active[c] {
+                s.active.push(c);
+                s.in_active[c] = true;
+            }
+        }
+    }
+
+    /// Stage 5 — the batched client compute (eqs. 10-13), sharded over
+    /// the worker pool by the backend.
+    fn stage_client_compute(
+        &mut self,
+        backend: &mut dyn ComputeBackend,
+        pool: &PoolHandle,
+    ) -> Result<()> {
+        let s = &mut self.state;
+        if s.active.is_empty() {
+            return Ok(());
+        }
+        s.active.sort_unstable();
+        backend.client_step_sharded(
+            StepArgs {
+                w_locals: &mut self.w_locals,
+                w_global: &self.server.w,
+                recv_mask: &s.recv_mask,
+                x: &s.x,
+                y: &s.y,
+                gate: &s.gate,
+                mu: self.algo.mu,
+                active: Some(&s.active),
+            },
+            pool,
+        )?;
+        Ok(())
+    }
+
+    /// Stage 6 — participants upload `S_{k,n} w_{k,n+1}` into the delay
+    /// channel.
+    fn stage_uplink(&mut self, n: usize) {
+        let d = self.env.d();
+        for &c in &self.state.participants {
+            let coords = uplink_coords(&self.schedule, self.algo, c, n);
+            let update = package_update(c, n, coords, &self.w_locals[c * d..(c + 1) * d]);
+            file_update(
+                &mut self.queue,
+                &self.env.delay,
+                self.env.env_seed,
+                &mut self.comm,
+                n,
+                update,
+            );
+        }
+    }
+
+    /// Stage 7 — drain arrivals due at `n` and aggregate.
+    fn stage_aggregate(&mut self, n: usize) {
+        aggregate_arrivals(&mut self.server, &mut self.queue, n, &mut self.agg);
+    }
+
+    /// Stage 8 — sample the curve every `eval_every` ticks (and at the
+    /// end), pipelined on the pool under the eval-snapshot rule.
+    fn stage_eval(&mut self, n: usize, pool: &PoolHandle) {
+        if n % self.algo.eval_every == 0 || n + 1 == self.env.stream.n_iters {
+            self.eval.submit(n, &self.server.w, pool);
+        }
+    }
+
+    /// Join any in-flight evaluation and assemble the run result.
+    pub fn finish(self) -> RunResult {
+        let final_mse = mse_test(&self.server.w, &self.env.z_test, &self.env.stream.test_y);
+        let TickPipeline {
+            mut eval,
+            server,
+            comm,
+            agg,
+            ..
+        } = self;
+        eval.join_pending();
+        RunResult {
+            iters: eval.iters,
+            mse_db: eval.mse_db,
+            comm,
+            final_w: server.w,
+            agg,
+            final_mse,
+        }
+    }
+}

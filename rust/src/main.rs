@@ -11,20 +11,23 @@
 //!   --iters N     federation iterations                 (default 2000)
 //!   --clients K   number of clients                     (default 256)
 //!   --out DIR     results directory                     (default results/)
-//!   --jobs N      parallel workers: N Monte-Carlo threads, N client
+//!   --jobs N      parallel workers: N Monte-Carlo participants, N client
 //!                 shards when the Monte-Carlo level is serial; 0 = all
-//!                 cores (default 1). Curves are bitwise-identical for
-//!                 every N.
+//!                 cores (default 1). Work runs on one persistent worker
+//!                 pool (no per-call thread spawning); curves are
+//!                 bitwise-identical for every N.
 //!   --shards M    override the client-shard count (0 = all cores); like
 //!                 the --jobs shards, it only applies when Monte-Carlo
-//!                 runs are not already executing concurrently
+//!                 runs are not already executing concurrently. Both
+//!                 flags are capped at the pool's width (cores), since
+//!                 oversubscribing a fixed pool cannot help
 //!   --xla         run the client step through the AOT PJRT artifacts
 //!                 (forces serial execution; needs `--features xla`)
 //!   --quiet       suppress ASCII charts
 //! ```
 
 use pao_fed::cli::Args;
-use pao_fed::experiments::{self, BackendKind, ExperimentCtx, Parallelism};
+use pao_fed::experiments::{self, BackendKind, ExperimentCtx, Parallelism, PoolHandle};
 
 fn usage() -> ! {
     eprintln!(
@@ -68,10 +71,21 @@ fn main() {
                 BackendKind::Native
             },
             outdir: args.get("out").unwrap_or("results").into(),
-            iters: args.get("iters").map(|v| v.parse()).transpose().map_err(|_| "bad --iters".to_string())?,
-            clients: args.get("clients").map(|v| v.parse()).transpose().map_err(|_| "bad --clients".to_string())?,
+            iters: args
+                .get("iters")
+                .map(|v| v.parse())
+                .transpose()
+                .map_err(|_| "bad --iters".to_string())?,
+            clients: args
+                .get("clients")
+                .map(|v| v.parse())
+                .transpose()
+                .map_err(|_| "bad --clients".to_string())?,
             quiet: args.has("quiet"),
             jobs,
+            // One persistent pool for the whole process; per-loop limits
+            // come from `jobs` inside `run_variants`.
+            pool: PoolHandle::shared(),
         })
     };
     let ctx = match parse() {

@@ -43,7 +43,8 @@ impl XlaBackend {
             .find("client_step", &[("k", k), ("d", d), ("l", l)])
             .ok_or_else(|| {
                 Error::Artifact(format!(
-                    "no client_step artifact for k={k}, d={d}, l={l}; regenerate with `make artifacts`"
+                    "no client_step artifact for k={k}, d={d}, l={l}; \
+                     regenerate with `make artifacts`"
                 ))
             })?
             .name

@@ -1,5 +1,5 @@
-//! Self-contained substrates: PRNG, JSON, CSV/plot output, timing, and the
-//! fork-join parallel layer.
+//! Self-contained substrates: PRNG, JSON, CSV/plot output, timing, the
+//! fork-join parallel layer, and the persistent worker pool behind it.
 //!
 //! The offline crate set has no `rand`/`serde`/`criterion`/`rayon`, so the
 //! library carries minimal, well-tested implementations of exactly what it
@@ -8,6 +8,7 @@
 pub mod json;
 pub mod parallel;
 pub mod plot;
+pub mod pool;
 pub mod rng;
 pub mod table;
 

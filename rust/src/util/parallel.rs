@@ -1,13 +1,18 @@
-//! Deterministic fork-join parallelism for the simulation stack.
+//! `--jobs`/`--shards` semantics ([`Parallelism`]) and fork-join helpers
+//! for the simulation stack.
 //!
-//! No `rayon` exists in the offline crate set, so this module carries a
-//! minimal scoped work-sharing layer on `std::thread::scope`. Two loops in
-//! the stack shard over it:
+//! Since the worker-pool refactor, the production parallel path is
+//! [`crate::util::pool`]: `run_variants` and the sharded client step
+//! dispatch through a `PoolHandle` directly. This module keeps
 //!
-//! * the **Monte-Carlo loop** (`experiments::run_variants`): independent
-//!   environment realizations run on `mc_workers` threads;
-//! * the **per-iteration client step** (`fl::backend::NativeBackend`):
-//!   the active-client list splits into `client_shards` contiguous chunks.
+//! * [`Parallelism`] — how the CLI's `--jobs`/`--shards` map to
+//!   Monte-Carlo workers and client shards;
+//! * [`parallel_map`] — a convenience wrapper that dispatches to the
+//!   persistent process-wide pool (no per-call thread spawning);
+//! * [`scoped_map`] — the original spawn-per-call implementation, kept
+//!   as the baseline `benches/scaling.rs` measures pool reuse against;
+//! * [`chunk_indices`] — the contiguous-chunk splitter the sharded
+//!   client step uses.
 //!
 //! **Determinism contract.** Parallel execution is bitwise-identical to
 //! serial execution:
@@ -83,18 +88,37 @@ pub fn available_cores() -> usize {
         .unwrap_or(1)
 }
 
-/// Map `f` over `0..n_items` on up to `workers` threads, returning results
-/// in item order.
+/// Map `f` over `0..n_items` with up to `workers` concurrent participants,
+/// returning results in item order.
 ///
 /// Items are handed out through a shared counter (dynamic load balancing:
 /// Monte-Carlo runs can differ in cost when delay horizons differ), but the
 /// output `Vec` is indexed by item, so callers that fold the results fold
 /// them in the same order a serial loop would - the basis of the crate's
 /// bitwise determinism guarantee. With `workers <= 1` (or a single item)
-/// no threads spawn at all.
+/// everything runs inline on the caller.
 ///
-/// Panics in `f` propagate to the caller once all workers finish.
+/// Execution happens on the persistent process-wide worker pool
+/// ([`crate::util::pool::global_pool`]); the scoped spawn-per-call
+/// implementation this replaced survives as [`scoped_map`].
+///
+/// Panics in `f` propagate to the caller once the job quiesces.
 pub fn parallel_map<T, F>(n_items: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if workers <= 1 || n_items <= 1 {
+        return (0..n_items).map(f).collect();
+    }
+    crate::util::pool::global_pool().map(n_items, workers, f)
+}
+
+/// The pre-pool [`parallel_map`]: spawn `workers` scoped threads for this
+/// one call and join them before returning. Kept as the baseline the
+/// scaling bench measures pool reuse against (and as a dependency-free
+/// fallback shape).
+pub fn scoped_map<T, F>(n_items: usize, workers: usize, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
@@ -155,6 +179,7 @@ mod tests {
         let serial: Vec<u64> = (0..37).map(f).collect();
         for workers in [1, 2, 4, 8, 64] {
             assert_eq!(parallel_map(37, workers, f), serial, "workers={workers}");
+            assert_eq!(scoped_map(37, workers, f), serial, "scoped workers={workers}");
         }
     }
 
@@ -172,13 +197,15 @@ mod tests {
             for k in 0..(i % 7) * 10_000 {
                 acc = acc.wrapping_add(k);
             }
-            (i as u64) << 32 | (acc & 0xffff)
+            ((i as u64) << 32) | (acc & 0xffff)
         };
         let a = parallel_map(24, 4, f);
         let b = parallel_map(24, 3, f);
+        let s = scoped_map(24, 5, f);
         let c: Vec<u64> = (0..24).map(f).collect();
         assert_eq!(a, c);
         assert_eq!(b, c);
+        assert_eq!(s, c);
     }
 
     #[test]

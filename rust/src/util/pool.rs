@@ -1,0 +1,679 @@
+//! Persistent worker pool for the simulation stack.
+//!
+//! `util::parallel::scoped_map` pays a full thread spawn/join cycle on
+//! every call; at one sharded client step per engine tick that is
+//! thousands of cycles per Monte-Carlo run. [`WorkerPool`] keeps a fixed
+//! set of long-lived workers alive instead and dispatches *jobs* to them:
+//!
+//! * **fork-join jobs** ([`WorkerPool::run`] / [`WorkerPool::map`]): a
+//!   borrowed closure is applied to `0..n_items` with dynamic index
+//!   handout through a shared atomic counter, exactly like the scoped
+//!   baseline. The dispatching thread always participates, so a job
+//!   completes even when every worker is busy elsewhere — dispatch can
+//!   never deadlock, including nested dispatch.
+//! * **one-shot tasks** ([`WorkerPool::submit`]): an owned closure runs
+//!   asynchronously and is joined later through its [`TaskHandle`]. The
+//!   engine uses this to overlap curve evaluation with the next tick.
+//!
+//! **Determinism contract** (same as `parallel_map`): results are indexed
+//! by item, seeds/inputs never depend on worker identity or scheduling
+//! order, so pool execution is bitwise-identical to serial execution.
+//!
+//! **Panic propagation**: a panic inside a job item is caught on the
+//! worker, stops the job's index handout, and is re-raised on the
+//! dispatching thread once the job quiesces. Workers survive panics, so
+//! the pool stays usable afterwards.
+//!
+//! Dispatch from *inside* a pool worker runs inline on that worker (a
+//! job-epoch guard via a thread-local flag): the caller-participates rule
+//! makes nested dispatch correct, and running it inline keeps the queue
+//! free of tickets that could not be served anyway.
+
+use std::any::Any;
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+use super::parallel::available_cores;
+
+thread_local! {
+    /// Set on pool worker threads for their whole lifetime.
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True when the current thread is a pool worker (dispatch runs inline).
+fn in_pool_worker() -> bool {
+    IN_POOL_WORKER.with(|f| f.get())
+}
+
+/// Type-erased fork-join job closure. The `'static` bound is a lie told
+/// through [`erase`]; see the safety comment there.
+type IndexedFn = dyn Fn(usize) + Sync;
+
+/// Erase the lifetime of a borrowed job closure.
+///
+/// # Safety discipline
+///
+/// The pointer is only ever dereferenced for item claims `< n_items`, and
+/// [`WorkerPool::run`] does not return before (a) the index counter is
+/// exhausted, (b) every registered participant has finished, and (c) the
+/// queue holds no leftover tickets for the job. Together these keep every
+/// dereference inside the caller's borrow of `f`.
+fn erase<'a>(f: &'a (dyn Fn(usize) + Sync + 'a)) -> *const IndexedFn {
+    // SAFETY: pure lifetime erasure between identically laid out fat
+    // pointers; validity is enforced by the join protocol above.
+    unsafe {
+        std::mem::transmute::<*const (dyn Fn(usize) + Sync + 'a), *const IndexedFn>(
+            f as *const (dyn Fn(usize) + Sync + 'a),
+        )
+    }
+}
+
+/// Shared state of one fork-join job ("dispatch generation").
+struct IndexedCore {
+    /// Erased borrow of the job closure (see [`erase`]).
+    f: *const IndexedFn,
+    /// Item count; claims at or beyond it are void.
+    n_items: usize,
+    /// Dynamic index handout (the load-balancing counter).
+    next: AtomicUsize,
+    /// Participants currently inside `run_items`.
+    running: Mutex<usize>,
+    /// Signalled when `running` drops to zero.
+    done_cv: Condvar,
+    /// First caught panic payload, re-raised by the dispatcher.
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+// SAFETY: the raw closure pointer is the only non-Sync/Send field; it is
+// dereferenced only under the validity discipline documented on `erase`,
+// and the rest of the struct is ordinary sync primitives.
+unsafe impl Send for IndexedCore {}
+unsafe impl Sync for IndexedCore {}
+
+impl IndexedCore {
+    /// Claim the next unprocessed item, if any.
+    fn claim(&self) -> Option<usize> {
+        let i = self.next.fetch_add(1, Ordering::SeqCst);
+        (i < self.n_items).then_some(i)
+    }
+
+    /// Drain the index counter, catching panics per item.
+    fn run_items(&self) {
+        while let Some(i) = self.claim() {
+            // SAFETY: `i < n_items`, so the borrow is still live (see
+            // `erase`).
+            let f = unsafe { &*self.f };
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(|| f(i))) {
+                let mut slot = self.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+                // Stop handing out further items; claims compare with >=,
+                // so concurrent fetch_adds stay void.
+                self.next.store(self.n_items, Ordering::SeqCst);
+            }
+        }
+    }
+
+    /// One worker's contribution to the job: register, drain, sign off.
+    fn participate(&self) {
+        {
+            let mut running = self.running.lock().unwrap();
+            if self.next.load(Ordering::SeqCst) >= self.n_items {
+                // Stale ticket: the job already quiesced (or is about to);
+                // touching `f` now would be unsound, so decline.
+                return;
+            }
+            *running += 1;
+        }
+        self.run_items();
+        let mut running = self.running.lock().unwrap();
+        *running -= 1;
+        if *running == 0 {
+            self.done_cv.notify_all();
+        }
+    }
+}
+
+/// A unit of work on the queue.
+enum Work {
+    /// Participation ticket for a fork-join job.
+    Ticket(Arc<IndexedCore>),
+    /// Owned one-shot task (already wired to its [`TaskHandle`]).
+    Once(Box<dyn FnOnce() + Send>),
+}
+
+/// Queue shared between the dispatchers and the workers.
+struct WorkQueue {
+    items: VecDeque<Work>,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    queue: Mutex<WorkQueue>,
+    work_cv: Condvar,
+}
+
+/// Worker thread body: pop work until shutdown.
+fn worker_main(shared: Arc<PoolShared>) {
+    IN_POOL_WORKER.with(|f| f.set(true));
+    loop {
+        let work = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(w) = q.items.pop_front() {
+                    break w;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.work_cv.wait(q).unwrap();
+            }
+        };
+        match work {
+            Work::Ticket(core) => core.participate(),
+            Work::Once(task) => task(),
+        }
+    }
+}
+
+/// A fixed set of long-lived worker threads serving fork-join jobs and
+/// one-shot tasks (see the module docs for the dispatch protocol).
+///
+/// # Example
+///
+/// ```
+/// use pao_fed::util::pool::WorkerPool;
+///
+/// let pool = WorkerPool::new(2);
+/// // Two dispatch generations reuse the same workers.
+/// let squares = pool.map(8, 4, |i| i * i);
+/// assert_eq!(squares, vec![0, 1, 4, 9, 16, 25, 36, 49]);
+/// let sums = pool.map(4, 4, |i| i + 1);
+/// assert_eq!(sums, vec![1, 2, 3, 4]);
+/// ```
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `workers` long-lived threads. `workers == 0` is a
+    /// degenerate pool: every dispatch runs inline on the caller.
+    pub fn new(workers: usize) -> Self {
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(WorkQueue {
+                items: VecDeque::new(),
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("pao-pool-{i}"))
+                    .spawn(move || worker_main(shared))
+                    .expect("failed to spawn pool worker")
+            })
+            .collect();
+        WorkerPool {
+            shared,
+            workers: handles,
+        }
+    }
+
+    /// Number of worker threads (the caller adds one more participant to
+    /// every fork-join job it dispatches).
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Apply `f` to `0..n_items` with at most `limit` concurrent
+    /// participants (caller included). Blocks until the job completes;
+    /// panics in `f` propagate to the caller.
+    pub fn run(&self, n_items: usize, limit: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n_items == 0 {
+            return;
+        }
+        if limit <= 1 || n_items == 1 || self.size() == 0 || in_pool_worker() {
+            for i in 0..n_items {
+                f(i);
+            }
+            return;
+        }
+        let core = Arc::new(IndexedCore {
+            f: erase(f),
+            n_items,
+            next: AtomicUsize::new(0),
+            running: Mutex::new(0),
+            done_cv: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        let tickets = limit.min(self.size() + 1).min(n_items) - 1;
+        if tickets > 0 {
+            let mut q = self.shared.queue.lock().unwrap();
+            for _ in 0..tickets {
+                q.items.push_back(Work::Ticket(Arc::clone(&core)));
+            }
+            drop(q);
+            self.shared.work_cv.notify_all();
+        }
+        // The caller is always a participant, so the job completes even
+        // when no worker is free (nested or concurrent dispatch).
+        {
+            let mut running = core.running.lock().unwrap();
+            *running += 1;
+        }
+        core.run_items();
+        {
+            let mut running = core.running.lock().unwrap();
+            *running -= 1;
+            loop {
+                let quiesced =
+                    *running == 0 && core.next.load(Ordering::SeqCst) >= core.n_items;
+                if quiesced {
+                    break;
+                }
+                running = core.done_cv.wait(running).unwrap();
+            }
+        }
+        // Purge unclaimed tickets so no reference to the (about to
+        // expire) closure borrow survives this call.
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.items.retain(|w| match w {
+                Work::Ticket(c) => !Arc::ptr_eq(c, &core),
+                Work::Once(_) => true,
+            });
+        }
+        if let Some(payload) = core.panic.lock().unwrap().take() {
+            resume_unwind(payload);
+        }
+    }
+
+    /// Map `f` over `0..n_items` with at most `limit` concurrent
+    /// participants, returning results **in item order** (the
+    /// determinism-contract shape shared with
+    /// [`super::parallel::parallel_map`]).
+    pub fn map<T, F>(&self, n_items: usize, limit: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if n_items == 0 {
+            return Vec::new();
+        }
+        if limit <= 1 || n_items == 1 || self.size() == 0 || in_pool_worker() {
+            return (0..n_items).map(f).collect();
+        }
+        let slots: Mutex<Vec<Option<T>>> = Mutex::new((0..n_items).map(|_| None).collect());
+        let fill = |i: usize| {
+            let v = f(i);
+            slots.lock().unwrap()[i] = Some(v);
+        };
+        self.run(n_items, limit, &fill);
+        slots
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|v| v.expect("every index filled exactly once"))
+            .collect()
+    }
+
+    /// Run `f` asynchronously on a worker; the result (or panic) is
+    /// surfaced when the returned handle is joined. Runs inline when the
+    /// pool has no workers or the caller itself is a pool worker.
+    pub fn submit<T, F>(&self, f: F) -> TaskHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let slot = Arc::new(OneShot {
+            state: Mutex::new(OneShotState::Pending),
+            cv: Condvar::new(),
+        });
+        let task_slot = Arc::clone(&slot);
+        let run = move || {
+            let result = catch_unwind(AssertUnwindSafe(f));
+            let mut g = task_slot.state.lock().unwrap();
+            *g = match result {
+                Ok(v) => OneShotState::Done(v),
+                Err(p) => OneShotState::Panicked(p),
+            };
+            task_slot.cv.notify_all();
+        };
+        if self.size() == 0 || in_pool_worker() {
+            run();
+        } else {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.items.push_back(Work::Once(Box::new(run)));
+            drop(q);
+            self.shared.work_cv.notify_one();
+        }
+        TaskHandle { slot }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+enum OneShotState<T> {
+    Pending,
+    Done(T),
+    Panicked(Box<dyn Any + Send>),
+    Taken,
+}
+
+struct OneShot<T> {
+    state: Mutex<OneShotState<T>>,
+    cv: Condvar,
+}
+
+/// Join handle of a one-shot task dispatched with [`WorkerPool::submit`]
+/// (or completed inline by a serial [`PoolHandle`]).
+pub struct TaskHandle<T> {
+    slot: Arc<OneShot<T>>,
+}
+
+impl<T> TaskHandle<T> {
+    /// A handle that is already resolved (serial dispatch).
+    pub fn ready(value: T) -> Self {
+        TaskHandle {
+            slot: Arc::new(OneShot {
+                state: Mutex::new(OneShotState::Done(value)),
+                cv: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Block until the task finishes and take its result. Re-raises the
+    /// task's panic, if any.
+    pub fn join(self) -> T {
+        let mut g = self.slot.state.lock().unwrap();
+        loop {
+            match std::mem::replace(&mut *g, OneShotState::Taken) {
+                OneShotState::Pending => {
+                    *g = OneShotState::Pending;
+                    g = self.slot.cv.wait(g).unwrap();
+                }
+                OneShotState::Done(v) => return v,
+                OneShotState::Panicked(p) => resume_unwind(p),
+                OneShotState::Taken => unreachable!("task joined twice"),
+            }
+        }
+    }
+}
+
+static GLOBAL: OnceLock<Arc<WorkerPool>> = OnceLock::new();
+
+/// The process-wide pool shared by the simulation stack: one worker per
+/// available core minus the dispatching thread. Created on first use and
+/// never torn down.
+pub fn global_pool() -> &'static Arc<WorkerPool> {
+    GLOBAL.get_or_init(|| Arc::new(WorkerPool::new(available_cores().saturating_sub(1))))
+}
+
+/// Which pool a non-serial handle dispatches to.
+#[derive(Clone)]
+enum Backing {
+    /// The process-wide pool, resolved lazily at first dispatch so fully
+    /// serial runs never spawn a single worker thread.
+    Global,
+    /// A caller-owned pool (tests, embedders).
+    Owned(Arc<WorkerPool>),
+}
+
+impl Backing {
+    fn resolve(&self) -> &WorkerPool {
+        match self {
+            Backing::Global => global_pool().as_ref(),
+            Backing::Owned(p) => p.as_ref(),
+        }
+    }
+}
+
+/// A cheap, cloneable reference to a [`WorkerPool`] plus a concurrency
+/// limit — the value threaded through `ExperimentCtx`, the engine and the
+/// compute backends. A *serial* handle (no pool) runs everything inline
+/// on the caller, reproducing pre-pool behaviour exactly; handles on the
+/// process-wide pool instantiate it lazily, at first actual dispatch.
+#[derive(Clone)]
+pub struct PoolHandle {
+    pool: Option<Backing>,
+    limit: usize,
+}
+
+impl PoolHandle {
+    /// Fully serial execution (no pool; the default).
+    pub fn serial() -> Self {
+        PoolHandle {
+            pool: None,
+            limit: 1,
+        }
+    }
+
+    /// Handle on the process-wide pool with no limit of its own; combine
+    /// with [`PoolHandle::with_limit`] to set per-loop concurrency. The
+    /// pool itself is not created until something actually dispatches.
+    pub fn shared() -> Self {
+        PoolHandle {
+            pool: Some(Backing::Global),
+            limit: usize::MAX,
+        }
+    }
+
+    /// Handle on the process-wide pool with at most `limit` concurrent
+    /// participants per job (`limit <= 1` degenerates to serial).
+    pub fn global(limit: usize) -> Self {
+        if limit <= 1 {
+            Self::serial()
+        } else {
+            PoolHandle {
+                pool: Some(Backing::Global),
+                limit,
+            }
+        }
+    }
+
+    /// Handle on a caller-owned pool (tests, embedders).
+    pub fn with_pool(pool: Arc<WorkerPool>, limit: usize) -> Self {
+        if limit <= 1 {
+            Self::serial()
+        } else {
+            PoolHandle {
+                pool: Some(Backing::Owned(pool)),
+                limit,
+            }
+        }
+    }
+
+    /// Same backing pool, different concurrency limit (`<= 1` = serial).
+    pub fn with_limit(&self, limit: usize) -> Self {
+        match &self.pool {
+            Some(b) if limit > 1 => PoolHandle {
+                pool: Some(b.clone()),
+                limit,
+            },
+            _ => Self::serial(),
+        }
+    }
+
+    /// Effective concurrent participants per job (caller included).
+    /// Resolves the backing pool, so only call on the dispatch path.
+    pub fn workers(&self) -> usize {
+        match &self.pool {
+            Some(b) => self.limit.min(b.resolve().size() + 1),
+            None => 1,
+        }
+    }
+
+    /// True when every dispatch runs inline on the caller.
+    pub fn is_serial(&self) -> bool {
+        self.workers() <= 1
+    }
+
+    /// Fork-join map, in item order (serial handles loop inline).
+    pub fn map<T, F>(&self, n_items: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        match &self.pool {
+            Some(b) => b.resolve().map(n_items, self.limit, f),
+            None => (0..n_items).map(f).collect(),
+        }
+    }
+
+    /// Fork-join over `0..n_items` without result collection.
+    pub fn run(&self, n_items: usize, f: &(dyn Fn(usize) + Sync)) {
+        match &self.pool {
+            Some(b) => b.resolve().run(n_items, self.limit, f),
+            None => {
+                for i in 0..n_items {
+                    f(i);
+                }
+            }
+        }
+    }
+
+    /// One-shot task; serial handles execute it immediately and return a
+    /// resolved handle.
+    pub fn submit<T, F>(&self, f: F) -> TaskHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        match &self.pool {
+            Some(b) => b.resolve().submit(f),
+            None => TaskHandle::ready(f()),
+        }
+    }
+}
+
+impl std::fmt::Debug for PoolHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // Deliberately avoids `resolve()`: formatting a handle must not
+        // instantiate the global pool.
+        match &self.pool {
+            None => write!(f, "PoolHandle(serial)"),
+            Some(Backing::Global) if self.limit == usize::MAX => {
+                write!(f, "PoolHandle(global)")
+            }
+            Some(Backing::Global) => write!(f, "PoolHandle(global, limit {})", self.limit),
+            Some(Backing::Owned(p)) => {
+                write!(f, "PoolHandle(limit {}, {} workers)", self.limit, p.size())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_matches_serial_across_generations() {
+        let pool = WorkerPool::new(3);
+        let f = |i: usize| (i * 31) as u64 ^ 0x5a;
+        let want: Vec<u64> = (0..97).map(f).collect();
+        // Several dispatch generations on the same long-lived workers.
+        for limit in [2usize, 3, 4, 64] {
+            assert_eq!(pool.map(97, limit, f), want, "limit={limit}");
+        }
+    }
+
+    #[test]
+    fn uneven_work_keeps_item_order() {
+        let pool = WorkerPool::new(4);
+        let f = |i: usize| {
+            let mut acc = 0u64;
+            for k in 0..(i % 5) * 20_000 {
+                acc = acc.wrapping_add(k);
+            }
+            ((i as u64) << 32) | (acc & 0xffff)
+        };
+        let want: Vec<u64> = (0..33).map(f).collect();
+        assert_eq!(pool.map(33, 4, f), want);
+    }
+
+    #[test]
+    fn panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let attempt = catch_unwind(AssertUnwindSafe(|| {
+            pool.map(64, 3, |i| {
+                if i == 17 {
+                    panic!("boom from item 17");
+                }
+                i
+            })
+        }));
+        assert!(attempt.is_err(), "worker panic must reach the dispatcher");
+        // The workers caught the panic and are still serving jobs.
+        let v = pool.map(16, 3, |i| i * 2);
+        assert_eq!(v, (0..16).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn one_shot_tasks_join_with_results_and_panics() {
+        let pool = WorkerPool::new(2);
+        let h = pool.submit(|| 41 + 1);
+        assert_eq!(h.join(), 42);
+        let h = pool.submit(|| -> usize { panic!("task panic") });
+        let attempt = catch_unwind(AssertUnwindSafe(move || h.join()));
+        assert!(attempt.is_err());
+        // Still usable afterwards.
+        assert_eq!(pool.submit(|| 7usize).join(), 7);
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_inline() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.size(), 0);
+        assert_eq!(pool.map(5, 8, |i| i + 1), vec![1, 2, 3, 4, 5]);
+        assert_eq!(pool.submit(|| 3usize).join(), 3);
+    }
+
+    #[test]
+    fn nested_dispatch_completes() {
+        // An outer job whose items dispatch inner jobs: the caller-
+        // participates rule plus the worker-inline rule keep this free of
+        // deadlock regardless of pool size.
+        let pool = Arc::new(WorkerPool::new(2));
+        let inner = Arc::clone(&pool);
+        let got = pool.map(4, 4, move |i| inner.map(3, 4, |j| i * 10 + j));
+        let want: Vec<Vec<usize>> = (0..4).map(|i| (0..3).map(|j| i * 10 + j).collect()).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn handle_limits_and_serial_semantics() {
+        let serial = PoolHandle::serial();
+        assert!(serial.is_serial());
+        assert_eq!(serial.workers(), 1);
+        assert_eq!(serial.map(4, |i| i), vec![0, 1, 2, 3]);
+        assert_eq!(serial.submit(|| 9usize).join(), 9);
+
+        let pool = Arc::new(WorkerPool::new(3));
+        let h = PoolHandle::with_pool(Arc::clone(&pool), 2);
+        assert!(!h.is_serial());
+        assert_eq!(h.workers(), 2);
+        assert_eq!(h.with_limit(1).workers(), 1);
+        assert_eq!(h.with_limit(8).workers(), 4); // 3 workers + caller
+        assert_eq!(h.map(6, |i| i * i), vec![0, 1, 4, 9, 16, 25]);
+    }
+}

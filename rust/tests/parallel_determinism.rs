@@ -1,21 +1,27 @@
-//! The parallel layer's determinism contract: sharded/threaded execution
-//! must be bitwise-identical to serial execution.
+//! The parallel layer's determinism contract: pool-sharded / threaded /
+//! pipelined execution must be bitwise-identical to serial execution.
 //!
 //! * `run_variants` with `--jobs 4` == `--jobs 1` on a small fig3a-style
-//!   configuration (the ISSUE acceptance regression);
-//! * the engine with 4 client shards == the serial engine;
+//!   configuration (the ISSUE 1 acceptance regression);
+//! * a caller-owned `WorkerPool` reused across two full sweep generations
+//!   matches serial on the fig2 mini-sweep (ISSUE 2);
+//! * the engine with pool-sharded client steps == the serial engine;
+//! * pipelined (pool-overlapped) curve evaluation == inline evaluation;
 //! * the shard threshold leaves tiny configurations untouched.
 
 use pao_fed::data::stream::{FedStream, StreamConfig};
 use pao_fed::data::synthetic::Eq39Source;
-use pao_fed::experiments::{common::PaperEnv, BackendKind, ExperimentCtx, Parallelism};
+use pao_fed::experiments::common::{run_variants, PaperEnv};
+use pao_fed::experiments::{BackendKind, ExperimentCtx, Parallelism, PoolHandle};
 use pao_fed::fl::algorithms::{build, Variant};
 use pao_fed::fl::backend::NativeBackend;
 use pao_fed::fl::delay::DelayModel;
 use pao_fed::fl::engine::{self, Environment};
 use pao_fed::fl::participation::Participation;
 use pao_fed::rff::RffSpace;
+use pao_fed::util::pool::WorkerPool;
 use pao_fed::util::rng::Pcg32;
+use std::sync::Arc;
 
 fn small_ctx(jobs: Parallelism) -> ExperimentCtx {
     ExperimentCtx {
@@ -27,6 +33,7 @@ fn small_ctx(jobs: Parallelism) -> ExperimentCtx {
         clients: Some(16),
         quiet: true,
         jobs,
+        pool: PoolHandle::shared(),
     }
 }
 
@@ -41,6 +48,16 @@ fn fig3a_algos() -> Vec<pao_fed::fl::engine::AlgoConfig> {
     ]
 }
 
+/// Fig. 2(a)'s ablation roster at reduced scale (the fig2 mini-sweep).
+fn fig2_algos() -> Vec<pao_fed::fl::engine::AlgoConfig> {
+    vec![
+        build(Variant::PaoFedC0, 0.4, 4, 10, 20),
+        build(Variant::PaoFedU0, 0.4, 4, 10, 20),
+        build(Variant::PaoFedC1, 0.4, 4, 10, 20),
+        build(Variant::PaoFedU1, 0.4, 4, 10, 20),
+    ]
+}
+
 #[test]
 fn monte_carlo_jobs4_matches_jobs1_bitwise() {
     let serial_ctx = small_ctx(Parallelism::serial());
@@ -49,11 +66,8 @@ fn monte_carlo_jobs4_matches_jobs1_bitwise() {
     let env_p = PaperEnv::synth(&parallel_ctx);
     let algos = fig3a_algos();
 
-    let a = pao_fed::experiments::common::run_variants(&serial_ctx, &env_s, &algos, "det-s", "serial")
-        .unwrap();
-    let b =
-        pao_fed::experiments::common::run_variants(&parallel_ctx, &env_p, &algos, "det-p", "parallel")
-            .unwrap();
+    let a = run_variants(&serial_ctx, &env_s, &algos, "det-s", "serial").unwrap();
+    let b = run_variants(&parallel_ctx, &env_p, &algos, "det-p", "parallel").unwrap();
 
     assert_eq!(a.curves.len(), b.curves.len());
     for (ca, cb) in a.curves.iter().zip(&b.curves) {
@@ -74,7 +88,7 @@ fn monte_carlo_worker_count_does_not_matter() {
     let reference = {
         let ctx = small_ctx(Parallelism::serial());
         let env = PaperEnv::synth(&ctx);
-        pao_fed::experiments::common::run_variants(&ctx, &env, &algos, "det-r", "r").unwrap()
+        run_variants(&ctx, &env, &algos, "det-r", "r").unwrap()
     };
     for workers in [2usize, 3, 8] {
         let ctx = small_ctx(Parallelism {
@@ -82,9 +96,40 @@ fn monte_carlo_worker_count_does_not_matter() {
             client_shards: 1,
         });
         let env = PaperEnv::synth(&ctx);
-        let got =
-            pao_fed::experiments::common::run_variants(&ctx, &env, &algos, "det-w", "w").unwrap();
+        let got = run_variants(&ctx, &env, &algos, "det-w", "w").unwrap();
         assert_eq!(reference.curves[0].mse, got.curves[0].mse, "workers={workers}");
+    }
+}
+
+#[test]
+fn fig2_mini_sweep_on_reused_custom_pool_matches_serial() {
+    // A caller-owned pool threaded through ExperimentCtx: two full sweep
+    // generations reuse the same long-lived workers and both match the
+    // serial sweep bitwise.
+    let algos = fig2_algos();
+    let reference = {
+        let mut ctx = small_ctx(Parallelism::serial());
+        ctx.pool = PoolHandle::serial();
+        let env = PaperEnv::synth(&ctx);
+        run_variants(&ctx, &env, &algos, "det-f2s", "serial").unwrap()
+    };
+    let pool = Arc::new(WorkerPool::new(3));
+    let mut ctx = small_ctx(Parallelism::from_jobs(4));
+    ctx.pool = PoolHandle::with_pool(Arc::clone(&pool), 4);
+    for generation in 0..2 {
+        let env = PaperEnv::synth(&ctx);
+        let got = run_variants(&ctx, &env, &algos, "det-f2p", "pool").unwrap();
+        assert_eq!(reference.curves.len(), got.curves.len());
+        for (ca, cb) in reference.curves.iter().zip(&got.curves) {
+            assert_eq!(ca.label, cb.label);
+            assert_eq!(
+                ca.mse, cb.mse,
+                "curve {} diverged on pool generation {generation}",
+                ca.label
+            );
+            assert_eq!(ca.final_mse, cb.final_mse);
+            assert_eq!(ca.comm.uplink_scalars, cb.comm.uplink_scalars);
+        }
     }
 }
 
@@ -120,11 +165,29 @@ fn engine_client_shards_match_serial_bitwise() {
     let algo = build(Variant::PaoFedU2, 0.4, 4, 10, 10);
     let serial = engine::run(&env, &algo, &mut be).unwrap();
     for shards in [2usize, 4, 8] {
-        let sharded = engine::run_sharded(&env, &algo, &mut be, shards).unwrap();
+        let pool = PoolHandle::global(shards);
+        let sharded = engine::run_sharded(&env, &algo, &mut be, &pool).unwrap();
         assert_eq!(serial.mse_db, sharded.mse_db, "curve diverged at {shards} shards");
         assert_eq!(serial.final_w, sharded.final_w, "model diverged at {shards} shards");
         assert_eq!(serial.comm.uplink_scalars, sharded.comm.uplink_scalars);
     }
+}
+
+#[test]
+fn pipelined_eval_curve_is_bitwise_identical() {
+    // With a live pool the eval stage overlaps subsequent ticks, reading a
+    // snapshot of the server model; the sampled curve, its iterations and
+    // the final model must match inline evaluation exactly.
+    let (env, mut be) = big_env(13);
+    let algo = build(Variant::PaoFedC2, 0.4, 4, 10, 7);
+    let inline = engine::run(&env, &algo, &mut be).unwrap();
+    let pool = PoolHandle::with_pool(Arc::new(WorkerPool::new(2)), 3);
+    let piped = engine::run_sharded(&env, &algo, &mut be, &pool).unwrap();
+    assert_eq!(inline.iters, piped.iters);
+    assert_eq!(inline.mse_db, piped.mse_db, "pipelined eval changed the curve");
+    assert_eq!(inline.final_w, piped.final_w);
+    assert_eq!(inline.final_mse, piped.final_mse);
+    assert_eq!(inline.comm.uplink_scalars, piped.comm.uplink_scalars);
 }
 
 #[test]
@@ -136,9 +199,9 @@ fn tiny_runs_unaffected_by_shard_request() {
     });
     let env = PaperEnv::synth(&ctx);
     let algos = vec![build(Variant::PaoFedU1, 0.4, 4, 10, 50)];
-    let a = pao_fed::experiments::common::run_variants(&ctx, &env, &algos, "det-t", "t").unwrap();
+    let a = run_variants(&ctx, &env, &algos, "det-t", "t").unwrap();
     let ctx2 = small_ctx(Parallelism::serial());
     let env2 = PaperEnv::synth(&ctx2);
-    let b = pao_fed::experiments::common::run_variants(&ctx2, &env2, &algos, "det-t2", "t2").unwrap();
+    let b = run_variants(&ctx2, &env2, &algos, "det-t2", "t2").unwrap();
     assert_eq!(a.curves[0].mse, b.curves[0].mse);
 }

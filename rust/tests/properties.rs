@@ -160,7 +160,8 @@ fn prop_m_equals_d_uncoordinated_equals_full_traffic() {
     let mut rng = Pcg32::new(0xdead, 0);
     let (env, mut backend, _) = random_case(&mut rng);
     let d = env.d();
-    let partial = engine::run(&env, &build(Variant::PaoFedU1, 0.3, d, 10, 50), &mut backend).unwrap();
+    let partial =
+        engine::run(&env, &build(Variant::PaoFedU1, 0.3, d, 10, 50), &mut backend).unwrap();
     let mut full = build(Variant::PaoFedU1, 0.3, d, 10, 50);
     full.schedule = ScheduleKind::Full;
     let full_res = engine::run(&env, &full, &mut backend).unwrap();

@@ -116,7 +116,8 @@ fn engine_curve_parity_native_vs_xla() {
     let delay = DelayModel::Geometric { delta: 0.2 };
 
     let mut native = NativeBackend::new(rff.clone());
-    let env = Environment::new(stream, rff.clone(), part.clone(), delay, seed, &mut native).unwrap();
+    let env =
+        Environment::new(stream, rff.clone(), part.clone(), delay, seed, &mut native).unwrap();
     let algo = algorithms::build(Variant::PaoFedU2, 0.4, 4, 10, 20);
 
     let res_native = engine::run(&env, &algo, &mut native).unwrap();
