@@ -16,8 +16,15 @@
 //! results, a multiple of the throughput on a multi-core host, and no
 //! per-tick thread spawning.
 //!
+//! Part three moves the fleet **out of the process**: the example
+//! re-spawns itself twice as socket workers (`sensor_fleet worker ADDR`),
+//! shards the clients across them over loopback TCP
+//! (`async_rt::run_deployment_tcp`) and checks the learning curve is
+//! bit-identical to the in-process deployment.
+//!
 //! Run: `make artifacts && cargo run --release --example sensor_fleet`
 
+use pao_fed::async_rt::{run_deployment, run_deployment_tcp, run_worker, DeploymentConfig};
 use pao_fed::data::stream::{FedStream, StreamConfig};
 use pao_fed::data::synthetic::Eq39Source;
 use pao_fed::fl::algorithms::{build, Variant};
@@ -31,8 +38,26 @@ use pao_fed::util::parallel::available_cores;
 use pao_fed::util::pool::PoolHandle;
 use pao_fed::util::rng::Pcg32;
 use pao_fed::util::Stopwatch;
+use std::net::TcpListener;
+use std::process::Command;
+use std::time::Duration;
 
 fn main() -> pao_fed::Result<()> {
+    // Worker mode: part three re-executes this binary as
+    // `sensor_fleet worker ADDR` to host a shard of the fleet.
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.len() == 2 && argv[0] == "worker" {
+        let rep = run_worker(&argv[1])?;
+        println!(
+            "  [worker pid {}] hosted clients {}..{} ({} ticks)",
+            std::process::id(),
+            rep.client_lo,
+            rep.client_hi,
+            rep.ticks
+        );
+        return Ok(());
+    }
+
     let seed = 7;
     let (k, d, l, n) = (256usize, 200usize, 4usize, 2000usize);
 
@@ -156,6 +181,62 @@ fn main() -> pao_fed::Result<()> {
         "  final MSE {:.2} dB after {} uplink scalars from {k2} devices",
         sharded.final_db(),
         sharded.comm.uplink_scalars
+    );
+
+    // --- Part three: the fleet split across OS processes over TCP ---------
+    let (k3, n3) = (64usize, 400usize);
+    println!("\n=== multi-process fleet: {k3} devices across 2 worker processes ===");
+    let build_stream = || {
+        FedStream::build(
+            &StreamConfig {
+                n_clients: k3,
+                n_iters: n3,
+                data_group_samples: vec![n3 / 4, n3 / 2, 3 * n3 / 4, n3],
+                test_size: 200,
+            },
+            &mut Eq39Source::new(seed + 2),
+            seed + 2,
+        )
+    };
+    let rff3 = RffSpace::sample(l, 64, 1.0, &mut Pcg32::derive(seed + 2, &[1]));
+    let part3 = Participation::grouped(k3, &[0.25, 0.1, 0.025, 0.005], 4);
+    let delay3 = DelayModel::Geometric { delta: 0.2 };
+    let dcfg = || DeploymentConfig {
+        algo: build(Variant::PaoFedC2, 0.4, 4, 10, 100),
+        tick: Duration::ZERO,
+        env_seed: seed + 2,
+        eval_every: 100,
+    };
+
+    let inproc = run_deployment(build_stream(), rff3.clone(), part3.clone(), delay3, dcfg())?;
+
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    let exe = std::env::current_exe()?;
+    let mut children = Vec::new();
+    for _ in 0..2 {
+        children.push(Command::new(&exe).args(["worker", &addr]).spawn()?);
+    }
+    let sw = Stopwatch::start();
+    let over_tcp = run_deployment_tcp(
+        build_stream(),
+        rff3.clone(),
+        part3,
+        delay3,
+        dcfg(),
+        &listener,
+        2,
+    )?;
+    for mut c in children {
+        c.wait()?;
+    }
+    assert_eq!(inproc.mse_db, over_tcp.mse_db, "multi-process run must be bitwise-identical");
+    assert_eq!(inproc.final_w, over_tcp.final_w);
+    println!(
+        "  {:.2}s over loopback TCP; curve and model bitwise-identical to \
+         the in-process deployment (final MSE {:.2} dB)",
+        sw.secs(),
+        over_tcp.mse_db.last().unwrap()
     );
     Ok(())
 }

@@ -19,7 +19,21 @@
 //! results stay deterministic and comparable with the discrete engine;
 //! uplinks still arrive asynchronously through the delay channel, exactly
 //! like the paper's `K_{n,l}` buckets.
+//!
+//! The runtime spans processes, not just threads: the server loop is
+//! generic over a [`transport::Transport`], with the mpsc channels above
+//! as the in-process implementation and a zero-dependency TCP transport
+//! ([`wire`]: length-prefixed frames, hand-rolled binary codec) sharding
+//! the fleet across worker processes ([`run_deployment_tcp`] on the
+//! server, [`run_worker`] in each worker — `pao-fed deploy --serve` /
+//! `--connect` on the CLI). Acks are collected per tick and sorted by
+//! client id before aggregation, so a loopback multi-process run
+//! reproduces the in-process deployment (and the discrete engine) bit
+//! for bit.
 
 mod protocol;
+pub mod transport;
+pub mod wire;
 
-pub use protocol::{run_deployment, DeploymentConfig, DeploymentReport};
+pub use protocol::{run_deployment, run_deployment_tcp, DeploymentConfig, DeploymentReport};
+pub use transport::{run_worker, WorkerReport};

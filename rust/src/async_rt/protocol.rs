@@ -1,9 +1,20 @@
-//! Message protocol and thread orchestration for the deployment runtime.
+//! The deployment server loop, generic over the [`Transport`] that
+//! reaches the fleet.
 //!
 //! The scheduling / downlink / uplink / aggregation bookkeeping is the
 //! same set of stage helpers the discrete engine's tick pipeline uses
-//! (`fl::pipeline`), so the two runtimes cannot drift apart.
+//! (`fl::pipeline`), so the runtimes cannot drift apart; the client-side
+//! compute is the single `transport::ClientState` implementation shared by
+//! the in-process threads and the socket workers. One server loop
+//! therefore serves both deployment shapes:
+//!
+//! * [`run_deployment`] — one OS thread per client in this process
+//!   ([`ChannelTransport`]);
+//! * [`run_deployment_tcp`] — the fleet sharded across worker *processes*
+//!   over TCP ([`TcpFleet`] + `transport::run_worker`), bit-identical to
+//!   the in-process run.
 
+use super::transport::{ChannelTransport, TcpFleet, Transport};
 use crate::data::stream::FedStream;
 use crate::error::{Error, Result};
 use crate::fl::delay::{DelayModel, DelayQueue};
@@ -14,33 +25,10 @@ use crate::fl::selection::SelectionSchedule;
 use crate::fl::server::{AggregateInfo, AggregationMode, Server, Update};
 use crate::metrics::{mse_test, to_db, CommStats};
 use crate::rff::RffSpace;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::net::TcpListener;
 use std::sync::Arc;
 use std::thread;
 use std::time::Duration;
-
-/// Server -> client message.
-enum Downlink {
-    /// Start of iteration `iter`; `portion` is `Some((coords order, values))`
-    /// when the client was selected to participate.
-    Tick {
-        iter: usize,
-        portion: Option<(crate::fl::selection::Coords, Vec<f32>)>,
-    },
-    /// End of run.
-    Shutdown,
-}
-
-/// Client -> server message.
-enum UplinkMsg {
-    /// Tick processed; `upload` is `Some` when the client participated.
-    Ack {
-        client: usize,
-        upload: Option<Update>,
-        /// Local-learning steps the client performed this tick (0 or 1).
-        learned: u32,
-    },
-}
 
 /// Deployment parameters.
 pub struct DeploymentConfig {
@@ -69,82 +57,28 @@ pub struct DeploymentReport {
     pub agg: AggregateInfo,
     /// Total local-learning steps across all clients.
     pub local_steps: u64,
-    /// Threads spawned (K clients).
+    /// Client threads spawned in this process (K for the in-process
+    /// transport, 0 when the fleet lives in worker processes).
     pub n_client_threads: usize,
+    /// Worker processes hosting the fleet (0 for the in-process shape).
+    pub n_workers: usize,
 }
 
-struct ClientCtx {
-    id: usize,
-    rff: Arc<RffSpace>,
-    stream: Arc<FedStream>,
-    schedule: SelectionSchedule,
-    algo: AlgoConfig,
-    rx: Receiver<Downlink>,
-    tx: Sender<UplinkMsg>,
-}
-
-/// Client thread: owns its local model, learns on its stream, exchanges
-/// portions with the server (eqs. 10-13 on the client side).
-fn client_main(ctx: ClientCtx) {
-    let d = ctx.rff.d;
-    let mut w = vec![0.0f32; d];
-    let mut z = vec![0.0f32; d];
-    loop {
-        let msg = match ctx.rx.recv() {
-            Ok(m) => m,
-            Err(_) => return, // server gone
-        };
-        let (iter, portion) = match msg {
-            Downlink::Shutdown => return,
-            Downlink::Tick { iter, portion } => (iter, portion),
-        };
-        let participating = portion.is_some();
-        // Masked receive (eq. 10 first term / full overwrite for M = I).
-        if let Some((coords, values)) = portion {
-            let mut vi = 0;
-            coords.for_each(|j| {
-                w[j] = values[vi];
-                vi += 1;
-            });
-        }
-        // Local learning on this tick's sample (eq. 10 / 12).
-        let mut learned = 0u32;
-        if ctx.stream.has_data(ctx.id, iter)
-            && (participating || ctx.algo.autonomous_updates)
-        {
-            let x = ctx.stream.x(ctx.id, iter);
-            let y = ctx.stream.y(ctx.id, iter);
-            ctx.rff.features_into(x, &mut z);
-            let dot: f32 = w.iter().zip(&z).map(|(a, b)| a * b).sum();
-            let e = y - dot;
-            let step = ctx.algo.mu * e;
-            for (wj, zj) in w.iter_mut().zip(&z) {
-                *wj += step * zj;
-            }
-            learned = 1;
-        }
-        // Uplink (S_{k,n} w_{k,n+1}) when participating — the same stage
-        // helpers the discrete engine's pipeline uses.
-        let upload = participating.then(|| {
-            let coords = pipeline::uplink_coords(&ctx.schedule, &ctx.algo, ctx.id, iter);
-            pipeline::package_update(ctx.id, iter, coords, &w)
-        });
-        if ctx
-            .tx
-            .send(UplinkMsg::Ack {
-                client: ctx.id,
-                upload,
-                learned,
-            })
-            .is_err()
-        {
-            return;
-        }
+fn validate(cfg: &DeploymentConfig) -> Result<()> {
+    if !matches!(cfg.algo.aggregation, AggregationMode::DeviationBuckets { .. })
+        && !matches!(cfg.algo.aggregation, AggregationMode::PlainAverage)
+    {
+        return Err(Error::Config("unsupported aggregation".into()));
     }
+    if cfg.eval_every == 0 {
+        return Err(Error::Config("eval_every must be >= 1".into()));
+    }
+    Ok(())
 }
 
-/// Run a full deployment: spawns K client threads + the delay network, runs
-/// `stream.n_iters` ticks, returns the learning curve and traffic stats.
+/// Run a full deployment with one OS thread per client in this process:
+/// spawns K client threads over mpsc channels, runs `stream.n_iters`
+/// ticks, returns the learning curve and traffic stats.
 pub fn run_deployment(
     stream: FedStream,
     rff: RffSpace,
@@ -152,53 +86,87 @@ pub fn run_deployment(
     delay: DelayModel,
     cfg: DeploymentConfig,
 ) -> Result<DeploymentReport> {
+    validate(&cfg)?;
+    let k = stream.n_clients;
+    let schedule = SelectionSchedule::new(cfg.algo.schedule, rff.d, cfg.algo.m, cfg.env_seed);
+    let stream = Arc::new(stream);
+    let rff = Arc::new(rff);
+    let mut transport = ChannelTransport::spawn(&stream, &rff, &schedule, &cfg.algo)?;
+    let result = serve_loop(
+        &stream,
+        &rff,
+        &participation,
+        &delay,
+        &cfg,
+        &schedule,
+        &mut transport,
+    );
+    transport.shutdown()?;
+    let mut report = result?;
+    report.n_client_threads = k;
+    Ok(report)
+}
+
+/// Run a full deployment with the fleet sharded across `n_workers` worker
+/// *processes*: accepts their connections on `listener`, hands each a
+/// client-id range plus its shard of the stream (see
+/// `transport::run_worker` for the other end), then drives the identical
+/// server loop. Produces a report bit-identical to [`run_deployment`] on
+/// the same configuration — the cross-process determinism contract,
+/// pinned by `rust/tests/multiprocess.rs`.
+pub fn run_deployment_tcp(
+    stream: FedStream,
+    rff: RffSpace,
+    participation: Participation,
+    delay: DelayModel,
+    cfg: DeploymentConfig,
+    listener: &TcpListener,
+    n_workers: usize,
+) -> Result<DeploymentReport> {
+    validate(&cfg)?;
+    let schedule = SelectionSchedule::new(cfg.algo.schedule, rff.d, cfg.algo.m, cfg.env_seed);
+    let mut transport =
+        TcpFleet::serve(listener, n_workers, &stream, &rff, &cfg.algo, cfg.env_seed)?;
+    let result = serve_loop(
+        &stream,
+        &rff,
+        &participation,
+        &delay,
+        &cfg,
+        &schedule,
+        &mut transport,
+    );
+    transport.shutdown()?;
+    let mut report = result?;
+    report.n_workers = n_workers;
+    Ok(report)
+}
+
+/// The transport-agnostic server loop: participation/scheduling decisions,
+/// downlink, sorted-ack collection, delay filing, aggregation, curve
+/// sampling — every floating-point operation in the same order regardless
+/// of transport, which is the whole determinism argument.
+fn serve_loop<T: Transport>(
+    stream: &FedStream,
+    rff: &RffSpace,
+    participation: &Participation,
+    delay: &DelayModel,
+    cfg: &DeploymentConfig,
+    schedule: &SelectionSchedule,
+    transport: &mut T,
+) -> Result<DeploymentReport> {
     let k = stream.n_clients;
     let n_iters = stream.n_iters;
-    let d = rff.d;
     let algo = &cfg.algo;
-    if !matches!(algo.aggregation, AggregationMode::DeviationBuckets { .. })
-        && !matches!(algo.aggregation, AggregationMode::PlainAverage)
-    {
-        return Err(Error::Config("unsupported aggregation".into()));
-    }
-    let schedule = SelectionSchedule::new(algo.schedule, d, algo.m, cfg.env_seed);
 
     // Test set featurized once (server side).
     let z_test = rff.features_batch(&stream.test_x);
-    let test_y = stream.test_y.clone();
+    let test_y = &stream.test_y;
 
-    let stream = Arc::new(stream);
-    let rff = Arc::new(rff);
-    let participation = Arc::new(participation);
-
-    let (up_tx, up_rx) = channel::<UplinkMsg>();
-    let mut down_tx: Vec<Sender<Downlink>> = Vec::with_capacity(k);
-    let mut handles = Vec::with_capacity(k);
-    for id in 0..k {
-        let (tx, rx) = channel::<Downlink>();
-        down_tx.push(tx);
-        let ctx = ClientCtx {
-            id,
-            rff: rff.clone(),
-            stream: stream.clone(),
-            schedule: schedule.clone(),
-            algo: algo.clone(),
-            rx,
-            tx: up_tx.clone(),
-        };
-        handles.push(
-            thread::Builder::new()
-                .name(format!("pao-fed-client-{id}"))
-                .spawn(move || client_main(ctx))
-                .map_err(|e| Error::Config(format!("spawn failed: {e}")))?,
-        );
-    }
-    drop(up_tx);
-
-    let mut server = Server::new(d, algo.aggregation.clone());
+    let mut server = Server::new(rff.d, algo.aggregation.clone());
     // Exact delay horizon (bounded by the run length): no in-flight update
     // that could still be delivered is ever clamped.
-    let mut queue: DelayQueue<Update> = DelayQueue::for_run(&delay, n_iters);
+    let mut queue: DelayQueue<Update> = DelayQueue::for_run(delay, n_iters);
     let mut comm = CommStats::default();
     let mut agg_total = AggregateInfo::default();
     let mut iters = Vec::new();
@@ -227,7 +195,7 @@ pub fn run_deployment(
         // Downlink (stage-4 bookkeeping shared with the tick pipeline).
         for c in 0..k {
             let portion = if is_participant[c] {
-                let coords = pipeline::downlink_coords(&schedule, algo, c, n);
+                let coords = pipeline::downlink_coords(schedule, algo, c, n);
                 let mut values = Vec::with_capacity(coords.len());
                 coords.for_each(|j| values.push(server.w[j]));
                 comm.downlink_scalars += values.len() as u64;
@@ -236,31 +204,23 @@ pub fn run_deployment(
             } else {
                 None
             };
-            down_tx[c]
-                .send(Downlink::Tick { iter: n, portion })
-                .map_err(|_| Error::Config(format!("client {c} died")))?;
+            transport.send_tick(c, n, portion)?;
         }
 
         // Collect acks; sort by client id before filing uploads so the
         // aggregation's floating-point accumulation order is independent
-        // of OS thread scheduling (the deployment must reproduce the
-        // discrete engine bit for bit).
+        // of thread scheduling *and* of which worker process answers
+        // first (the deployment must reproduce the discrete engine bit
+        // for bit).
         let mut acks = Vec::with_capacity(k);
         for _ in 0..k {
-            match up_rx.recv() {
-                Ok(UplinkMsg::Ack {
-                    client,
-                    upload,
-                    learned,
-                }) => acks.push((client, upload, learned)),
-                Err(_) => return Err(Error::Config("client channel closed".into())),
-            }
+            acks.push(transport.recv_ack()?);
         }
-        acks.sort_by_key(|(c, _, _)| *c);
-        for (_, upload, learned) in acks {
-            local_steps += learned as u64;
-            if let Some(u) = upload {
-                pipeline::file_update(&mut queue, &delay, cfg.env_seed, &mut comm, n, u);
+        acks.sort_by_key(|a| a.client);
+        for ack in acks {
+            local_steps += ack.learned as u64;
+            if let Some(u) = ack.upload {
+                pipeline::file_update(&mut queue, delay, cfg.env_seed, &mut comm, n, u);
             }
         }
 
@@ -269,18 +229,11 @@ pub fn run_deployment(
 
         if n % cfg.eval_every == 0 || n + 1 == n_iters {
             iters.push(n);
-            mse_db.push(to_db(mse_test(&server.w, &z_test, &test_y)));
+            mse_db.push(to_db(mse_test(&server.w, &z_test, test_y)));
         }
         if !cfg.tick.is_zero() {
             thread::sleep(cfg.tick);
         }
-    }
-
-    for tx in &down_tx {
-        let _ = tx.send(Downlink::Shutdown);
-    }
-    for h in handles {
-        let _ = h.join();
     }
 
     Ok(DeploymentReport {
@@ -290,7 +243,8 @@ pub fn run_deployment(
         final_w: server.w,
         agg: agg_total,
         local_steps,
-        n_client_threads: k,
+        n_client_threads: 0,
+        n_workers: 0,
     })
 }
 
@@ -328,10 +282,39 @@ mod tests {
         )
         .unwrap();
         assert_eq!(report.n_client_threads, 8);
+        assert_eq!(report.n_workers, 0);
         let first = report.mse_db[0];
         let last = *report.mse_db.last().unwrap();
         assert!(last < first - 5.0, "no learning: {first} -> {last}");
         assert_eq!(report.comm.uplink_scalars, 4 * report.comm.uplink_msgs);
         assert!(report.local_steps > 0);
+    }
+
+    #[test]
+    fn zero_eval_every_is_an_error_not_a_panic() {
+        // `deploy --eval-every 0` reaches this constructor; it must fail
+        // with a config error instead of panicking on `n % 0`.
+        let cfg = StreamConfig {
+            n_clients: 2,
+            n_iters: 10,
+            data_group_samples: vec![5, 10],
+            test_size: 8,
+        };
+        let seed = 1;
+        let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+        let rff = RffSpace::sample(4, 8, 1.0, &mut Pcg32::derive(seed, &[2]));
+        let res = run_deployment(
+            stream,
+            rff,
+            Participation::always(2),
+            DelayModel::None,
+            DeploymentConfig {
+                algo: algorithms::build(Variant::PaoFedU1, 0.4, 2, 5, 5),
+                tick: Duration::ZERO,
+                env_seed: seed,
+                eval_every: 0,
+            },
+        );
+        assert!(res.is_err(), "eval_every = 0 must be rejected");
     }
 }

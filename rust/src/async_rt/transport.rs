@@ -1,0 +1,555 @@
+//! Transport abstraction for the deployment runtime: the server loop in
+//! `protocol` is generic over [`Transport`], so the *same* tick loop runs
+//! the fleet as in-process threads ([`ChannelTransport`], the original
+//! mpsc shape) or as remote worker processes over TCP ([`TcpFleet`] on the
+//! server side, [`run_worker`] in each worker process).
+//!
+//! Both transports deliver the same messages; the client-side compute is
+//! the single [`ClientState::handle_tick`] implementation either way, and
+//! the server sorts acks by client id before filing uploads — which is why
+//! a loopback multi-process run reproduces the in-process deployment (and
+//! therefore the discrete engine) bit for bit. See `docs/ARCHITECTURE.md`
+//! for the wire format and the determinism contract.
+
+use super::wire::{self, ClientShard, WireMsg, WorkerAssignment};
+use crate::data::stream::FedStream;
+use crate::error::{Error, Result};
+use crate::fl::engine::AlgoConfig;
+use crate::fl::pipeline;
+use crate::fl::selection::{Coords, SelectionSchedule};
+use crate::fl::server::Update;
+use crate::rff::RffSpace;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+
+/// One client's per-tick acknowledgement (stage-6 uplink).
+#[derive(Clone, Debug)]
+pub struct Ack {
+    /// Acknowledging client.
+    pub client: usize,
+    /// `Some(S_{k,n} w_{k,n+1})` when the client participated.
+    pub upload: Option<Update>,
+    /// Local-learning steps performed this tick (0 or 1).
+    pub learned: u32,
+}
+
+/// How the server reaches its fleet. One tick of the protocol is: one
+/// [`Transport::send_tick`] per client (in client-id order), then exactly
+/// as many [`Transport::recv_ack`] calls; acks may come back in any order
+/// (the caller sorts them). [`Transport::shutdown`] ends the run.
+pub trait Transport {
+    /// Downlink the tick-`iter` message to `client`; `portion` carries
+    /// `M_{k,n} w_n` when the client participates.
+    fn send_tick(
+        &mut self,
+        client: usize,
+        iter: usize,
+        portion: Option<(Coords, Vec<f32>)>,
+    ) -> Result<()>;
+
+    /// Block for the next acknowledgement from any client.
+    fn recv_ack(&mut self) -> Result<Ack>;
+
+    /// Broadcast end-of-run and release the fleet.
+    fn shutdown(&mut self) -> Result<()>;
+}
+
+/// A client's whole local state: model, feature scratch, identity. The
+/// one implementation of the protocol's client side (eqs. 10-13 plus
+/// uplink packaging), used verbatim by the in-process threads and the
+/// socket workers — which is what keeps the two deployments bit-identical.
+pub struct ClientState {
+    /// The client's id in the federation.
+    pub id: usize,
+    w: Vec<f32>,
+    z: Vec<f32>,
+}
+
+impl ClientState {
+    /// Fresh client with a zero model of dimension `d`.
+    pub fn new(id: usize, d: usize) -> Self {
+        ClientState {
+            id,
+            w: vec![0.0; d],
+            z: vec![0.0; d],
+        }
+    }
+
+    /// Process one tick: masked receive (eq. 10 first term), local
+    /// learning on this tick's sample when participating or autonomous
+    /// (eq. 10 / 12), and uplink packaging via the same stage helpers the
+    /// discrete engine's pipeline uses.
+    pub fn handle_tick(
+        &mut self,
+        rff: &RffSpace,
+        schedule: &SelectionSchedule,
+        algo: &AlgoConfig,
+        iter: usize,
+        portion: Option<(Coords, Vec<f32>)>,
+        sample: Option<(&[f32], f32)>,
+    ) -> Ack {
+        let participating = portion.is_some();
+        if let Some((coords, values)) = portion {
+            let mut vi = 0;
+            coords.for_each(|j| {
+                self.w[j] = values[vi];
+                vi += 1;
+            });
+        }
+        let mut learned = 0u32;
+        if let Some((x, y)) = sample {
+            if participating || algo.autonomous_updates {
+                rff.features_into(x, &mut self.z);
+                let dot: f32 = self.w.iter().zip(&self.z).map(|(a, b)| a * b).sum();
+                let e = y - dot;
+                let step = algo.mu * e;
+                for (wj, zj) in self.w.iter_mut().zip(&self.z) {
+                    *wj += step * zj;
+                }
+                learned = 1;
+            }
+        }
+        let upload = participating.then(|| {
+            let coords = pipeline::uplink_coords(schedule, algo, self.id, iter);
+            pipeline::package_update(self.id, iter, coords, &self.w)
+        });
+        Ack { client: self.id, upload, learned }
+    }
+}
+
+// ----------------------------------------------------- in-process fleet
+
+enum ClientDown {
+    Tick {
+        iter: usize,
+        portion: Option<(Coords, Vec<f32>)>,
+    },
+    Shutdown,
+}
+
+/// Client-thread body: serve ticks from the server until shutdown.
+fn client_main(
+    id: usize,
+    stream: Arc<FedStream>,
+    rff: Arc<RffSpace>,
+    schedule: SelectionSchedule,
+    algo: AlgoConfig,
+    rx: Receiver<ClientDown>,
+    tx: Sender<Ack>,
+) {
+    let mut state = ClientState::new(id, rff.d);
+    loop {
+        let msg = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => return, // server gone
+        };
+        let (iter, portion) = match msg {
+            ClientDown::Shutdown => return,
+            ClientDown::Tick { iter, portion } => (iter, portion),
+        };
+        let sample = if stream.has_data(id, iter) {
+            Some((stream.x(id, iter), stream.y(id, iter)))
+        } else {
+            None
+        };
+        let ack = state.handle_tick(&rff, &schedule, &algo, iter, portion, sample);
+        if tx.send(ack).is_err() {
+            return;
+        }
+    }
+}
+
+/// The in-process transport: one OS thread per client, mpsc channels both
+/// ways — the original deployment shape, now one implementation of
+/// [`Transport`].
+pub struct ChannelTransport {
+    down: Vec<Sender<ClientDown>>,
+    up: Receiver<Ack>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ChannelTransport {
+    /// Spawn one thread per client of `stream`, each owning a
+    /// [`ClientState`] and serving ticks until shutdown.
+    pub fn spawn(
+        stream: &Arc<FedStream>,
+        rff: &Arc<RffSpace>,
+        schedule: &SelectionSchedule,
+        algo: &AlgoConfig,
+    ) -> Result<Self> {
+        let k = stream.n_clients;
+        let (up_tx, up_rx) = channel::<Ack>();
+        let mut down = Vec::with_capacity(k);
+        let mut handles = Vec::with_capacity(k);
+        for id in 0..k {
+            let (tx, rx) = channel::<ClientDown>();
+            down.push(tx);
+            let (stream, rff) = (Arc::clone(stream), Arc::clone(rff));
+            let (schedule, algo, up_tx) = (schedule.clone(), algo.clone(), up_tx.clone());
+            let builder = thread::Builder::new().name(format!("pao-fed-client-{id}"));
+            handles.push(
+                builder
+                    .spawn(move || client_main(id, stream, rff, schedule, algo, rx, up_tx))
+                    .map_err(|e| Error::Config(format!("spawn failed: {e}")))?,
+            );
+        }
+        Ok(ChannelTransport { down, up: up_rx, handles })
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn send_tick(
+        &mut self,
+        client: usize,
+        iter: usize,
+        portion: Option<(Coords, Vec<f32>)>,
+    ) -> Result<()> {
+        self.down[client]
+            .send(ClientDown::Tick { iter, portion })
+            .map_err(|_| Error::Protocol(format!("client {client} died")))
+    }
+
+    fn recv_ack(&mut self) -> Result<Ack> {
+        self.up
+            .recv()
+            .map_err(|_| Error::Protocol("client channel closed".into()))
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        for tx in &self.down {
+            let _ = tx.send(ClientDown::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------ TCP fleet
+
+struct WorkerLink {
+    writer: BufWriter<TcpStream>,
+    reader: Option<JoinHandle<()>>,
+    dirty: bool,
+}
+
+/// The server side of the socket transport: accepts worker connections,
+/// hands each a contiguous client-id range plus its shard of the
+/// materialized stream, then routes tick messages by client id. Acks from
+/// all workers funnel through one channel (a reader thread per
+/// connection); tick frames are buffered per worker and flushed before the
+/// loop blocks on acks, so a tick costs one write syscall per worker.
+pub struct TcpFleet {
+    links: Vec<WorkerLink>,
+    /// Client id -> hosting worker index.
+    owner: Vec<usize>,
+    acks: Receiver<Result<Ack>>,
+}
+
+impl TcpFleet {
+    /// Accept `n_workers` connections on `listener` and run the handshake:
+    /// worker `i` (in accept order) is assigned clients
+    /// `i*K/n .. (i+1)*K/n` and receives everything it needs to host them
+    /// deterministically. Returns once every worker has acknowledged.
+    pub fn serve(
+        listener: &TcpListener,
+        n_workers: usize,
+        stream: &FedStream,
+        rff: &RffSpace,
+        algo: &AlgoConfig,
+        env_seed: u64,
+    ) -> Result<Self> {
+        let k = stream.n_clients;
+        if n_workers == 0 || n_workers > k {
+            return Err(Error::Config(format!(
+                "need 1..={k} workers for {k} clients, got {n_workers}"
+            )));
+        }
+        let (ack_tx, ack_rx) = channel::<Result<Ack>>();
+        let mut links = Vec::with_capacity(n_workers);
+        let mut owner = vec![0usize; k];
+        for i in 0..n_workers {
+            let (sock, peer) = listener.accept()?;
+            sock.set_nodelay(true)?;
+            let (lo, hi) = (i * k / n_workers, (i + 1) * k / n_workers);
+            owner[lo..hi].fill(i);
+            let assignment = WorkerAssignment {
+                client_lo: lo,
+                client_hi: hi,
+                env_seed,
+                n_iters: stream.n_iters,
+                algo: algo.clone(),
+                rff: rff.clone(),
+                clients: (lo..hi).map(|c| extract_shard(stream, c)).collect(),
+            };
+            let mut writer = BufWriter::new(sock.try_clone()?);
+            wire::send_msg(&mut writer, &WireMsg::Hello(assignment))?;
+            writer.flush()?;
+            let mut reader = BufReader::new(sock);
+            match wire::recv_msg(&mut reader)? {
+                WireMsg::HelloAck { client_lo } if client_lo == lo => {}
+                other => {
+                    return Err(Error::Protocol(format!(
+                        "worker {peer} answered the handshake with {other:?}"
+                    )))
+                }
+            }
+            let tx = ack_tx.clone();
+            let handle = thread::Builder::new()
+                .name(format!("pao-fed-worker-rx-{i}"))
+                .spawn(move || pump_acks(reader, tx))
+                .map_err(|e| Error::Config(format!("spawn failed: {e}")))?;
+            links.push(WorkerLink { writer, reader: Some(handle), dirty: false });
+        }
+        Ok(TcpFleet { links, owner, acks: ack_rx })
+    }
+}
+
+/// Reader-thread body: decode acks off one worker connection and funnel
+/// them into the fleet's shared channel. Any read failure (including EOF)
+/// forwards an error so a worker dying mid-run fails the server loop's
+/// next `recv_ack` instead of hanging it; after a clean shutdown nobody
+/// reads the channel anymore, so the forwarded error is inert.
+fn pump_acks(mut reader: BufReader<TcpStream>, tx: Sender<Result<Ack>>) {
+    loop {
+        match wire::recv_msg(&mut reader) {
+            Ok(WireMsg::Ack { client, upload, learned }) => {
+                let ack = Ack { client, upload, learned };
+                if tx.send(Ok(ack)).is_err() {
+                    return;
+                }
+            }
+            Ok(other) => {
+                let msg = format!("unexpected uplink message {other:?}");
+                let _ = tx.send(Err(Error::Protocol(msg)));
+                return;
+            }
+            Err(e) => {
+                let msg = format!("worker disconnected: {e}");
+                let _ = tx.send(Err(Error::Protocol(msg)));
+                return;
+            }
+        }
+    }
+}
+
+impl Transport for TcpFleet {
+    fn send_tick(
+        &mut self,
+        client: usize,
+        iter: usize,
+        portion: Option<(Coords, Vec<f32>)>,
+    ) -> Result<()> {
+        let link = &mut self.links[self.owner[client]];
+        wire::send_msg(&mut link.writer, &WireMsg::Tick { client, iter, portion })?;
+        link.dirty = true;
+        Ok(())
+    }
+
+    fn recv_ack(&mut self) -> Result<Ack> {
+        for link in &mut self.links {
+            if link.dirty {
+                link.writer.flush()?;
+                link.dirty = false;
+            }
+        }
+        match self.acks.recv() {
+            Ok(res) => res,
+            Err(_) => Err(Error::Protocol("worker connection lost".into())),
+        }
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        for link in &mut self.links {
+            let _ = wire::send_msg(&mut link.writer, &WireMsg::Shutdown);
+            let _ = link.writer.flush();
+        }
+        for link in &mut self.links {
+            if let Some(h) = link.reader.take() {
+                let _ = h.join();
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Copy client `c`'s slice of the materialized stream into wire form
+/// (dense over the run; absent slots stay zero).
+fn extract_shard(stream: &FedStream, c: usize) -> ClientShard {
+    let (n, l) = (stream.n_iters, stream.dim);
+    let mut shard = ClientShard {
+        present: vec![false; n],
+        xs: vec![0.0; n * l],
+        ys: vec![0.0; n],
+    };
+    for it in 0..n {
+        if stream.has_data(c, it) {
+            shard.present[it] = true;
+            shard.xs[it * l..(it + 1) * l].copy_from_slice(stream.x(c, it));
+            shard.ys[it] = stream.y(c, it);
+        }
+    }
+    shard
+}
+
+// ---------------------------------------------------------------- worker
+
+/// What a worker process did, for logging at exit.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerReport {
+    /// First hosted client id (inclusive).
+    pub client_lo: usize,
+    /// Last hosted client id (exclusive).
+    pub client_hi: usize,
+    /// Tick messages served.
+    pub ticks: u64,
+    /// Local-learning steps across the hosted clients.
+    pub local_steps: u64,
+}
+
+/// Worker-process entry point: connect to a [`TcpFleet`] server at `addr`,
+/// receive the shard assignment, host those clients until shutdown.
+/// Blocks for the whole run.
+pub fn run_worker(addr: &str) -> Result<WorkerReport> {
+    let sock = TcpStream::connect(addr)?;
+    sock.set_nodelay(true)?;
+    let mut reader = BufReader::new(sock.try_clone()?);
+    let mut writer = BufWriter::new(sock);
+
+    let assignment = match wire::recv_msg(&mut reader)? {
+        WireMsg::Hello(a) => a,
+        other => {
+            return Err(Error::Protocol(format!(
+                "expected handshake, got {other:?}"
+            )))
+        }
+    };
+    let (lo, hi) = (assignment.client_lo, assignment.client_hi);
+    if hi <= lo || assignment.clients.len() != hi - lo {
+        return Err(Error::Protocol(format!(
+            "inconsistent shard: clients {lo}..{hi} with {} data entries",
+            assignment.clients.len()
+        )));
+    }
+    let n = assignment.n_iters;
+    for (i, c) in assignment.clients.iter().enumerate() {
+        if c.present.len() != n || c.ys.len() != n || c.xs.len() != n * assignment.rff.l {
+            return Err(Error::Protocol(format!(
+                "client {} shard arrays disagree with n_iters {n}",
+                lo + i
+            )));
+        }
+    }
+    let rff = &assignment.rff;
+    let algo = &assignment.algo;
+    let l = rff.l;
+    // The same construction the server (and the discrete engine) uses, so
+    // both ends see one schedule realization.
+    let schedule = SelectionSchedule::new(algo.schedule, rff.d, algo.m, assignment.env_seed);
+    let mut states: Vec<ClientState> = (lo..hi).map(|id| ClientState::new(id, rff.d)).collect();
+    wire::send_msg(&mut writer, &WireMsg::HelloAck { client_lo: lo })?;
+    writer.flush()?;
+
+    let mut report = WorkerReport { client_lo: lo, client_hi: hi, ticks: 0, local_steps: 0 };
+    loop {
+        match wire::recv_msg(&mut reader)? {
+            WireMsg::Tick { client, iter, portion } => {
+                if !(lo..hi).contains(&client) || iter >= n {
+                    return Err(Error::Protocol(format!(
+                        "tick for client {client} iter {iter} outside shard {lo}..{hi}"
+                    )));
+                }
+                let shard = &assignment.clients[client - lo];
+                let sample = if shard.present[iter] {
+                    Some((&shard.xs[iter * l..(iter + 1) * l], shard.ys[iter]))
+                } else {
+                    None
+                };
+                let ack =
+                    states[client - lo].handle_tick(rff, &schedule, algo, iter, portion, sample);
+                report.ticks += 1;
+                report.local_steps += ack.learned as u64;
+                let reply = WireMsg::Ack {
+                    client: ack.client,
+                    upload: ack.upload,
+                    learned: ack.learned,
+                };
+                wire::send_msg(&mut writer, &reply)?;
+                // The server downlinks in client-id order and blocks on
+                // acks only after a full tick, so one flush per tick (at
+                // our last hosted client) is enough — and keeps the
+                // syscall count per tick constant.
+                if client + 1 == hi {
+                    writer.flush()?;
+                }
+            }
+            WireMsg::Shutdown => break,
+            other => {
+                return Err(Error::Protocol(format!(
+                    "unexpected downlink message {other:?}"
+                )))
+            }
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::algorithms::{self, Variant};
+    use crate::fl::selection::ScheduleKind;
+    use crate::util::rng::Pcg32;
+
+    /// The shared client step must be pure in its inputs: same portion +
+    /// sample -> same ack, regardless of which transport hosts it.
+    #[test]
+    fn handle_tick_deterministic_and_gated() {
+        let mut rng = Pcg32::new(8, 0);
+        let rff = RffSpace::sample(4, 16, 1.0, &mut rng);
+        let algo = algorithms::build(Variant::PaoFedU2, 0.4, 4, 10, 5);
+        let schedule = SelectionSchedule::new(ScheduleKind::Uncoordinated, 16, 4, 3);
+        let x = [0.4f32, -0.2, 1.0, 0.3];
+
+        let run = || {
+            let mut st = ClientState::new(2, 16);
+            let portion = Some((schedule.recv(2, 0), vec![0.5; 4]));
+            let a0 = st.handle_tick(&rff, &schedule, &algo, 0, portion, Some((&x, 1.5)));
+            let a1 = st.handle_tick(&rff, &schedule, &algo, 1, None, None);
+            (a0, a1)
+        };
+        let (a0, b0) = (run().0, run().0);
+        assert_eq!(a0.learned, 1);
+        assert!(a0.upload.is_some());
+        assert_eq!(a0.upload, b0.upload);
+        let (_, a1) = run();
+        // No portion, no sample: nothing learned, nothing uploaded.
+        assert_eq!(a1.learned, 0);
+        assert!(a1.upload.is_none());
+    }
+
+    /// Non-participants with data still learn under autonomous updates,
+    /// and never upload.
+    #[test]
+    fn autonomous_learning_without_participation() {
+        let mut rng = Pcg32::new(9, 0);
+        let rff = RffSpace::sample(4, 8, 1.0, &mut rng);
+        let algo = algorithms::build(Variant::PaoFedU1, 0.4, 2, 10, 5);
+        assert!(algo.autonomous_updates);
+        let schedule = SelectionSchedule::new(ScheduleKind::Uncoordinated, 8, 2, 3);
+        let mut st = ClientState::new(0, 8);
+        let x = [1.0f32, 0.0, 0.0, 0.0];
+        let ack = st.handle_tick(&rff, &schedule, &algo, 0, None, Some((&x, 2.0)));
+        assert_eq!(ack.learned, 1);
+        assert!(ack.upload.is_none());
+
+        let sgd = algorithms::build(Variant::OnlineFedSgd, 0.4, 2, 10, 5);
+        let mut st = ClientState::new(0, 8);
+        let ack = st.handle_tick(&rff, &schedule, &sgd, 0, None, Some((&x, 2.0)));
+        assert_eq!(ack.learned, 0, "no autonomous updates for FedSGD");
+    }
+}

@@ -1,0 +1,668 @@
+//! Hand-rolled wire codec for the deployment runtime (zero dependencies).
+//!
+//! Framing: every message is one frame, `u32` little-endian payload length
+//! followed by the payload. The payload is a tag byte selecting the
+//! [`WireMsg`] variant, then the variant's fields in declaration order.
+//! Scalar encodings: integers little-endian (`usize` as `u64`), `bool` as
+//! one byte, `f32`/`f64` as their IEEE-754 little-endian bit patterns —
+//! which makes the transfer of model values **bit-exact**, the property the
+//! cross-process determinism contract rests on (see
+//! `docs/ARCHITECTURE.md`). Vectors are a `u64` element count followed by
+//! the elements.
+//!
+//! Nothing here depends on the socket: encoding targets a `Vec<u8>` and
+//! decoding reads from a byte slice, so the codec is unit-testable without
+//! I/O and reusable over any ordered byte transport.
+
+use crate::error::{Error, Result};
+use crate::fl::engine::AlgoConfig;
+use crate::fl::selection::{Coords, ScheduleKind};
+use crate::fl::server::{AggregationMode, AlphaSchedule, Update};
+use crate::rff::RffSpace;
+use std::io::{Read, Write};
+
+/// Refuse frames larger than this (corrupt-length guard): 256 MiB covers
+/// any realistic shard handshake while bounding a bad peer's allocation.
+pub const MAX_FRAME: usize = 1 << 28;
+
+/// Everything that crosses a deployment connection, in both directions.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireMsg {
+    /// Server -> worker: the handshake assigning a shard of clients.
+    Hello(WorkerAssignment),
+    /// Worker -> server: shard accepted, client threads ready.
+    HelloAck {
+        /// First client id the worker hosts (echo of the assignment).
+        client_lo: usize,
+    },
+    /// Server -> worker: one client's tick message (stage-4 downlink).
+    Tick {
+        /// Addressed client.
+        client: usize,
+        /// Federation iteration.
+        iter: usize,
+        /// `Some((coords, values))` when the client participates.
+        portion: Option<(Coords, Vec<f32>)>,
+    },
+    /// Worker -> server: tick processed for one client (stage-6 uplink).
+    Ack {
+        /// Acknowledging client.
+        client: usize,
+        /// `Some` when the client participated.
+        upload: Option<Update>,
+        /// Local-learning steps the client performed this tick (0 or 1).
+        learned: u32,
+    },
+    /// Server -> worker: end of run.
+    Shutdown,
+}
+
+/// The handshake payload: which clients a worker hosts and everything it
+/// needs to run them deterministically (the RFF realization, the algorithm
+/// preset, and each client's materialized sample stream).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkerAssignment {
+    /// First hosted client id (inclusive).
+    pub client_lo: usize,
+    /// Last hosted client id (exclusive).
+    pub client_hi: usize,
+    /// Environment seed (keys the shared selection schedule).
+    pub env_seed: u64,
+    /// Run length in iterations.
+    pub n_iters: usize,
+    /// Algorithm preset (identical to the server's copy).
+    pub algo: AlgoConfig,
+    /// The shared RFF realization.
+    pub rff: RffSpace,
+    /// Per hosted client, `client_hi - client_lo` entries in id order.
+    pub clients: Vec<ClientShard>,
+}
+
+/// One client's slice of the materialized stream, dense over the run.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct ClientShard {
+    /// Arrival indicator, `[n_iters]`.
+    pub present: Vec<bool>,
+    /// Inputs, `[n_iters * L]` (slot `n` meaningful iff `present[n]`).
+    pub xs: Vec<f32>,
+    /// Targets, `[n_iters]`.
+    pub ys: Vec<f32>,
+}
+
+// ---------------------------------------------------------------- encode
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_usize(buf: &mut Vec<u8>, v: usize) {
+    put_u64(buf, v as u64);
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_bool(buf: &mut Vec<u8>, v: bool) {
+    buf.push(v as u8);
+}
+
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(buf: &mut Vec<u8>, vs: &[f32]) {
+    put_usize(buf, vs.len());
+    for &v in vs {
+        put_f32(buf, v);
+    }
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_usize(buf, s.len());
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_coords(buf: &mut Vec<u8>, c: &Coords) {
+    match c {
+        Coords::Range { start, len, d } => {
+            buf.push(0);
+            put_usize(buf, *start);
+            put_usize(buf, *len);
+            put_usize(buf, *d);
+        }
+        Coords::List { idx, d } => {
+            buf.push(1);
+            put_usize(buf, idx.len());
+            for &i in idx {
+                put_u32(buf, i);
+            }
+            put_usize(buf, *d);
+        }
+        Coords::Full { d } => {
+            buf.push(2);
+            put_usize(buf, *d);
+        }
+    }
+}
+
+fn put_update(buf: &mut Vec<u8>, u: &Update) {
+    put_usize(buf, u.client);
+    put_usize(buf, u.sent_iter);
+    put_coords(buf, &u.coords);
+    put_f32s(buf, &u.values);
+}
+
+fn put_portion(buf: &mut Vec<u8>, p: &Option<(Coords, Vec<f32>)>) {
+    match p {
+        None => put_bool(buf, false),
+        Some((coords, values)) => {
+            put_bool(buf, true);
+            put_coords(buf, coords);
+            put_f32s(buf, values);
+        }
+    }
+}
+
+fn schedule_kind_tag(k: ScheduleKind) -> u8 {
+    match k {
+        ScheduleKind::Coordinated => 0,
+        ScheduleKind::Uncoordinated => 1,
+        ScheduleKind::Full => 2,
+        ScheduleKind::RandomSubset => 3,
+    }
+}
+
+fn put_algo(buf: &mut Vec<u8>, a: &AlgoConfig) {
+    put_str(buf, &a.name);
+    put_f32(buf, a.mu);
+    buf.push(schedule_kind_tag(a.schedule));
+    put_usize(buf, a.m);
+    put_bool(buf, a.refine_before_share);
+    put_bool(buf, a.autonomous_updates);
+    match a.subsample {
+        None => put_bool(buf, false),
+        Some(s) => {
+            put_bool(buf, true);
+            put_usize(buf, s);
+        }
+    }
+    put_bool(buf, a.full_downlink);
+    match &a.aggregation {
+        AggregationMode::DeviationBuckets {
+            alpha,
+            l_max,
+            most_recent_wins,
+        } => {
+            buf.push(0);
+            match alpha {
+                AlphaSchedule::Ones => buf.push(0),
+                AlphaSchedule::Powers(p) => {
+                    buf.push(1);
+                    put_f64(buf, *p);
+                }
+            }
+            put_usize(buf, *l_max);
+            put_bool(buf, *most_recent_wins);
+        }
+        AggregationMode::PlainAverage => buf.push(1),
+    }
+    put_usize(buf, a.eval_every);
+}
+
+/// Encode a message into a standalone payload (no frame header).
+pub fn encode(msg: &WireMsg) -> Vec<u8> {
+    let mut buf = Vec::new();
+    match msg {
+        WireMsg::Hello(h) => {
+            buf.push(0);
+            put_usize(&mut buf, h.client_lo);
+            put_usize(&mut buf, h.client_hi);
+            put_u64(&mut buf, h.env_seed);
+            put_usize(&mut buf, h.n_iters);
+            put_algo(&mut buf, &h.algo);
+            put_usize(&mut buf, h.rff.l);
+            put_usize(&mut buf, h.rff.d);
+            put_f32s(&mut buf, &h.rff.omega);
+            put_f32s(&mut buf, &h.rff.b);
+            put_usize(&mut buf, h.clients.len());
+            for c in &h.clients {
+                put_usize(&mut buf, c.present.len());
+                for &p in &c.present {
+                    put_bool(&mut buf, p);
+                }
+                put_f32s(&mut buf, &c.xs);
+                put_f32s(&mut buf, &c.ys);
+            }
+        }
+        WireMsg::HelloAck { client_lo } => {
+            buf.push(1);
+            put_usize(&mut buf, *client_lo);
+        }
+        WireMsg::Tick { client, iter, portion } => {
+            buf.push(2);
+            put_usize(&mut buf, *client);
+            put_usize(&mut buf, *iter);
+            put_portion(&mut buf, portion);
+        }
+        WireMsg::Ack { client, upload, learned } => {
+            buf.push(3);
+            put_usize(&mut buf, *client);
+            match upload {
+                None => put_bool(&mut buf, false),
+                Some(u) => {
+                    put_bool(&mut buf, true);
+                    put_update(&mut buf, u);
+                }
+            }
+            put_u32(&mut buf, *learned);
+        }
+        WireMsg::Shutdown => buf.push(4),
+    }
+    buf
+}
+
+// ---------------------------------------------------------------- decode
+
+/// Byte-slice cursor for decoding one payload.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(Error::Protocol(format!(
+                "truncated frame: need {n} bytes at offset {} of {}",
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn bool(&mut self) -> Result<bool> {
+        Ok(self.u8()? != 0)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn usize(&mut self) -> Result<usize> {
+        Ok(self.u64()? as usize)
+    }
+
+    /// A `usize` that will size an allocation of `elem`-byte-minimum
+    /// items: bounded by the bytes remaining in the frame, so a corrupt
+    /// count cannot trigger a reservation larger than the frame itself.
+    fn len(&mut self, elem: usize) -> Result<usize> {
+        let n = self.usize()?;
+        let remaining = self.buf.len() - self.pos;
+        if n > remaining / elem.max(1) {
+            return Err(Error::Protocol(format!(
+                "corrupt count {n} (x{elem}B) exceeds {remaining} remaining frame bytes"
+            )));
+        }
+        Ok(n)
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.len(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f32()?);
+        }
+        Ok(v)
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let n = self.len(1)?;
+        String::from_utf8(self.take(n)?.to_vec())
+            .map_err(|_| Error::Protocol("non-utf8 string field".into()))
+    }
+
+    fn coords(&mut self) -> Result<Coords> {
+        match self.u8()? {
+            0 => Ok(Coords::Range { start: self.usize()?, len: self.usize()?, d: self.usize()? }),
+            1 => {
+                let n = self.len(4)?;
+                let mut idx = Vec::with_capacity(n);
+                for _ in 0..n {
+                    idx.push(self.u32()?);
+                }
+                Ok(Coords::List { idx, d: self.usize()? })
+            }
+            2 => Ok(Coords::Full { d: self.usize()? }),
+            t => Err(Error::Protocol(format!("bad coords tag {t}"))),
+        }
+    }
+
+    fn update(&mut self) -> Result<Update> {
+        Ok(Update {
+            client: self.usize()?,
+            sent_iter: self.usize()?,
+            coords: self.coords()?,
+            values: self.f32s()?,
+        })
+    }
+
+    fn portion(&mut self) -> Result<Option<(Coords, Vec<f32>)>> {
+        if self.bool()? {
+            Ok(Some((self.coords()?, self.f32s()?)))
+        } else {
+            Ok(None)
+        }
+    }
+
+    fn schedule_kind(&mut self) -> Result<ScheduleKind> {
+        match self.u8()? {
+            0 => Ok(ScheduleKind::Coordinated),
+            1 => Ok(ScheduleKind::Uncoordinated),
+            2 => Ok(ScheduleKind::Full),
+            3 => Ok(ScheduleKind::RandomSubset),
+            t => Err(Error::Protocol(format!("bad schedule tag {t}"))),
+        }
+    }
+
+    fn algo(&mut self) -> Result<AlgoConfig> {
+        let name = self.string()?;
+        let mu = self.f32()?;
+        let schedule = self.schedule_kind()?;
+        let m = self.usize()?;
+        let refine_before_share = self.bool()?;
+        let autonomous_updates = self.bool()?;
+        let subsample = if self.bool()? {
+            Some(self.usize()?)
+        } else {
+            None
+        };
+        let full_downlink = self.bool()?;
+        let aggregation = match self.u8()? {
+            0 => {
+                let alpha = match self.u8()? {
+                    0 => AlphaSchedule::Ones,
+                    1 => AlphaSchedule::Powers(self.f64()?),
+                    t => return Err(Error::Protocol(format!("bad alpha tag {t}"))),
+                };
+                AggregationMode::DeviationBuckets {
+                    alpha,
+                    l_max: self.usize()?,
+                    most_recent_wins: self.bool()?,
+                }
+            }
+            1 => AggregationMode::PlainAverage,
+            t => return Err(Error::Protocol(format!("bad aggregation tag {t}"))),
+        };
+        let eval_every = self.usize()?;
+        Ok(AlgoConfig {
+            name,
+            mu,
+            schedule,
+            m,
+            refine_before_share,
+            autonomous_updates,
+            subsample,
+            full_downlink,
+            aggregation,
+            eval_every,
+        })
+    }
+}
+
+/// Decode one payload produced by [`encode`].
+pub fn decode(payload: &[u8]) -> Result<WireMsg> {
+    let mut c = Cur {
+        buf: payload,
+        pos: 0,
+    };
+    let msg = match c.u8()? {
+        0 => {
+            let client_lo = c.usize()?;
+            let client_hi = c.usize()?;
+            let env_seed = c.u64()?;
+            let n_iters = c.usize()?;
+            let algo = c.algo()?;
+            let l = c.usize()?;
+            let d = c.usize()?;
+            let omega = c.f32s()?;
+            let b = c.f32s()?;
+            if l.checked_mul(d) != Some(omega.len()) || b.len() != d {
+                return Err(Error::Protocol("rff dimensions disagree".into()));
+            }
+            let rff = RffSpace::from_parts(l, d, omega, b);
+            // Each encoded ClientShard carries at least its three length
+            // prefixes (24 bytes), which bounds the client-vec reservation.
+            let n_clients = c.len(24)?;
+            let mut clients = Vec::with_capacity(n_clients);
+            for _ in 0..n_clients {
+                let np = c.len(1)?;
+                let mut present = Vec::with_capacity(np);
+                for _ in 0..np {
+                    present.push(c.bool()?);
+                }
+                clients.push(ClientShard {
+                    present,
+                    xs: c.f32s()?,
+                    ys: c.f32s()?,
+                });
+            }
+            WireMsg::Hello(WorkerAssignment {
+                client_lo,
+                client_hi,
+                env_seed,
+                n_iters,
+                algo,
+                rff,
+                clients,
+            })
+        }
+        1 => WireMsg::HelloAck { client_lo: c.usize()? },
+        2 => WireMsg::Tick { client: c.usize()?, iter: c.usize()?, portion: c.portion()? },
+        3 => WireMsg::Ack {
+            client: c.usize()?,
+            upload: if c.bool()? { Some(c.update()?) } else { None },
+            learned: c.u32()?,
+        },
+        4 => WireMsg::Shutdown,
+        t => return Err(Error::Protocol(format!("bad message tag {t}"))),
+    };
+    if c.pos != payload.len() {
+        return Err(Error::Protocol(format!(
+            "{} trailing bytes after message",
+            payload.len() - c.pos
+        )));
+    }
+    Ok(msg)
+}
+
+// --------------------------------------------------------------- framing
+
+/// Write one length-prefixed frame. Does not flush: callers batch frames
+/// on a buffered writer and flush at the protocol's synchronization points.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_FRAME {
+        return Err(Error::Protocol(format!(
+            "frame of {} bytes exceeds MAX_FRAME",
+            payload.len()
+        )));
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame.
+pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let len = u32::from_le_bytes(len) as usize;
+    if len > MAX_FRAME {
+        return Err(Error::Protocol(format!(
+            "incoming frame of {len} bytes exceeds MAX_FRAME"
+        )));
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+/// Encode + frame + write one message.
+pub fn send_msg(w: &mut impl Write, msg: &WireMsg) -> Result<()> {
+    write_frame(w, &encode(msg))
+}
+
+/// Read + decode one message.
+pub fn recv_msg(r: &mut impl Read) -> Result<WireMsg> {
+    decode(&read_frame(r)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::algorithms::{self, Variant};
+    use crate::util::rng::Pcg32;
+
+    fn roundtrip(msg: &WireMsg) {
+        let enc = encode(msg);
+        let dec = decode(&enc).unwrap();
+        assert_eq!(*msg, dec);
+        // And through the frame layer.
+        let mut pipe = Vec::new();
+        send_msg(&mut pipe, msg).unwrap();
+        let back = recv_msg(&mut pipe.as_slice()).unwrap();
+        assert_eq!(*msg, back);
+    }
+
+    #[test]
+    fn roundtrip_every_variant() {
+        let update = Update {
+            client: 3,
+            sent_iter: 41,
+            coords: Coords::Range {
+                start: 30,
+                len: 4,
+                d: 32,
+            },
+            values: vec![1.0, -0.0, f32::MIN_POSITIVE, f32::from_bits(0x7f7f_fffe)],
+        };
+        roundtrip(&WireMsg::Shutdown);
+        roundtrip(&WireMsg::HelloAck { client_lo: 9 });
+        roundtrip(&WireMsg::Tick { client: 7, iter: 123, portion: None });
+        let coords = Coords::List { idx: vec![0, 5, 31], d: 32 };
+        roundtrip(&WireMsg::Tick {
+            client: 0,
+            iter: 0,
+            portion: Some((coords, vec![0.25, -3.5, 1e-20])),
+        });
+        roundtrip(&WireMsg::Ack { client: 5, upload: None, learned: 1 });
+        roundtrip(&WireMsg::Ack { client: 5, upload: Some(update), learned: 0 });
+    }
+
+    #[test]
+    fn roundtrip_hello_with_algo_and_rff() {
+        let mut rng = Pcg32::new(3, 1);
+        let rff = RffSpace::sample(4, 16, 1.0, &mut rng);
+        for variant in [
+            Variant::PaoFedU2,
+            Variant::OnlineFedSgd,
+            Variant::OnlineFed { subsample: 8 },
+            Variant::PaoFedC0,
+        ] {
+            let algo = algorithms::build(variant, 0.4, 4, 10, 25);
+            let hello = WireMsg::Hello(WorkerAssignment {
+                client_lo: 4,
+                client_hi: 8,
+                env_seed: 99,
+                n_iters: 3,
+                algo: algo.clone(),
+                rff: rff.clone(),
+                clients: vec![
+                    ClientShard {
+                        present: vec![true, false, true],
+                        xs: vec![0.5; 12],
+                        ys: vec![1.0, 0.0, -2.0],
+                    },
+                    ClientShard::default(),
+                    ClientShard::default(),
+                    ClientShard::default(),
+                ],
+            });
+            let dec = decode(&encode(&hello)).unwrap();
+            let (WireMsg::Hello(a), WireMsg::Hello(b)) = (&hello, &dec) else {
+                panic!("variant changed");
+            };
+            assert_eq!(a.algo.name, b.algo.name);
+            assert_eq!(format!("{:?}", a.algo), format!("{:?}", b.algo));
+            assert_eq!(a.rff.omega, b.rff.omega);
+            assert_eq!(a.clients, b.clients);
+            // The reconstructed space featurizes bit-identically.
+            let x = [0.1f32, 0.2, -0.3, 0.4];
+            assert_eq!(a.rff.features(&x), b.rff.features(&x));
+        }
+    }
+
+    #[test]
+    fn f32_transfer_is_bit_exact() {
+        for bits in [0u32, 0x8000_0000, 0x7f7f_ffff, 0x0000_0001, 0x3f80_0001] {
+            let v = f32::from_bits(bits);
+            let msg = WireMsg::Tick {
+                client: 0,
+                iter: 0,
+                portion: Some((Coords::Full { d: 1 }, vec![v])),
+            };
+            let values = match decode(&encode(&msg)).unwrap() {
+                WireMsg::Tick { portion: Some((_, values)), .. } => values,
+                other => panic!("shape changed: {other:?}"),
+            };
+            assert_eq!(values[0].to_bits(), bits);
+        }
+    }
+
+    #[test]
+    fn corrupt_frames_error_cleanly() {
+        assert!(decode(&[]).is_err());
+        assert!(decode(&[9]).is_err()); // bad tag
+        assert!(decode(&[2, 1]).is_err()); // truncated Tick
+        let mut good = encode(&WireMsg::HelloAck { client_lo: 1 });
+        good.push(0); // trailing garbage
+        assert!(decode(&good).is_err());
+        // Oversized length prefix is rejected before allocation.
+        let huge = (u32::MAX).to_le_bytes();
+        assert!(read_frame(&mut huge.as_slice()).is_err());
+        // An absurd element count inside a small frame is rejected before
+        // any reservation happens (count bounded by remaining bytes).
+        let mut evil = vec![3u8]; // Ack tag
+        evil.extend_from_slice(&0u64.to_le_bytes()); // client
+        evil.push(1); // upload present
+        evil.extend_from_slice(&0u64.to_le_bytes()); // update.client
+        evil.extend_from_slice(&0u64.to_le_bytes()); // update.sent_iter
+        evil.push(2); // Coords::Full
+        evil.extend_from_slice(&1u64.to_le_bytes()); // d = 1
+        evil.extend_from_slice(&u64::MAX.to_le_bytes()); // values count
+        assert!(decode(&evil).is_err());
+    }
+}

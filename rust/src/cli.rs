@@ -2,6 +2,12 @@
 //!
 //! Grammar: `pao-fed <command> [--flag value] [--switch]`. Flags may appear
 //! in any order; unknown flags are an error so typos fail loudly.
+//!
+//! Besides the experiment ids, the binary understands the `deploy`
+//! command (the socket-backed multi-process runtime): `deploy --serve
+//! ADDR --workers N` runs the federation server, `deploy --connect ADDR`
+//! runs a worker process hosting a shard of clients, and plain `deploy`
+//! runs the in-process thread-per-client shape.
 
 use std::collections::BTreeMap;
 
@@ -105,5 +111,13 @@ mod tests {
     fn bad_parse_is_error() {
         let a = p("x --mc abc").unwrap();
         assert!(a.get_parse("mc", 0usize).is_err());
+    }
+
+    #[test]
+    fn deploy_flags_parse() {
+        let a = p("deploy --connect 127.0.0.1:7000").unwrap();
+        assert_eq!(a.command.as_deref(), Some("deploy"));
+        assert_eq!(a.get("connect"), Some("127.0.0.1:7000"));
+        assert_eq!(a.get("serve"), None);
     }
 }

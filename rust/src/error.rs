@@ -16,6 +16,8 @@ pub enum Error {
     Data(String),
     /// I/O wrapper.
     Io(std::io::Error),
+    /// Deployment wire-protocol failure (framing, codec, handshake).
+    Protocol(String),
     /// Numerical failure (singular matrix, divergence, ...).
     Numerical(String),
 }
@@ -28,6 +30,7 @@ impl std::fmt::Display for Error {
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Data(m) => write!(f, "data error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Protocol(m) => write!(f, "protocol error: {m}"),
             Error::Numerical(m) => write!(f, "numerical error: {m}"),
         }
     }

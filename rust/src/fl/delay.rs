@@ -113,10 +113,13 @@ impl DelayModel {
 /// `push(arrival_iter, msg)` files a message; `drain(now)` returns
 /// everything arriving exactly at `now`. Capacity covers the maximum delay
 /// horizon; anything beyond is clamped to the horizon (it would be
-/// discarded by the aggregation anyway, but still counts as traffic).
+/// discarded by the aggregation anyway, but still counts as traffic) and
+/// counted in [`DelayQueue::clamped_arrivals`] so the compression is
+/// observable instead of silent.
 pub struct DelayQueue<T> {
     slots: Vec<Vec<T>>,
     now: usize,
+    clamped: u64,
 }
 
 impl<T> DelayQueue<T> {
@@ -125,6 +128,7 @@ impl<T> DelayQueue<T> {
         DelayQueue {
             slots: (0..max_delay + 1).map(|_| Vec::new()).collect(),
             now: 0,
+            clamped: 0,
         }
     }
 
@@ -144,13 +148,27 @@ impl<T> DelayQueue<T> {
         Self::new(model.max_delay().min(n_iters))
     }
 
-    /// File a message arriving at absolute iteration `arrival`.
+    /// File a message arriving at absolute iteration `arrival`. Arrivals
+    /// past the horizon are compressed onto the last slot and counted (see
+    /// [`DelayQueue::clamped_arrivals`]).
     pub fn push(&mut self, arrival: usize, msg: T) {
         let h = self.slots.len();
-        let eff = arrival.max(self.now);
-        let eff = eff.min(self.now + h - 1);
+        let horizon = self.now + h - 1;
+        if arrival > horizon {
+            self.clamped += 1;
+        }
+        let eff = arrival.max(self.now).min(horizon);
         let slot = eff % h;
         self.slots[slot].push(msg);
+    }
+
+    /// How many pushed messages had their arrival compressed onto the
+    /// horizon. A queue sized by [`DelayQueue::for_model`] never clamps; a
+    /// [`DelayQueue::for_run`] queue clamps only arrivals that fall at or
+    /// past the end of the run (unobservable inside it). A nonzero count on
+    /// any other sizing is a diagnostic that the horizon is too small.
+    pub fn clamped_arrivals(&self) -> u64 {
+        self.clamped
     }
 
     /// Advance to iteration `now` and take everything arriving then.
@@ -233,6 +251,28 @@ mod tests {
         assert!(q.drain(1).is_empty());
         assert!(q.drain(2).is_empty());
         assert_eq!(q.drain(3), vec![1]);
+    }
+
+    #[test]
+    fn clamped_arrivals_are_counted_not_silent() {
+        let mut q: DelayQueue<u32> = DelayQueue::new(3);
+        assert_eq!(q.clamped_arrivals(), 0);
+        q.push(2, 1); // in horizon
+        assert_eq!(q.clamped_arrivals(), 0);
+        q.push(100, 2); // compressed onto now + 3
+        q.push(4, 3); // one past the horizon: also compressed
+        assert_eq!(q.clamped_arrivals(), 2);
+        // Exactly-at-horizon is a clean delivery, not a clamp.
+        q.drain(0);
+        q.push(3, 4);
+        assert_eq!(q.clamped_arrivals(), 2);
+        // A for_model queue never clamps anything the sampler can emit.
+        let m = DelayModel::Staged { delta: 0.9, step: 5 };
+        let mut q: DelayQueue<u32> = DelayQueue::for_model(&m);
+        for i in 0..500 {
+            q.push(m.sample(11, 0, i), i as u32);
+        }
+        assert_eq!(q.clamped_arrivals(), 0);
     }
 
     #[test]

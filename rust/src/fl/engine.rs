@@ -118,7 +118,7 @@ impl Environment {
 }
 
 /// Algorithm definition: everything that distinguishes the compared methods.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct AlgoConfig {
     /// Display name ("PAO-Fed-C2", "Online-FedSGD", ...).
     pub name: String,

@@ -10,6 +10,7 @@
 //! iteration), so every algorithm variant sees the *same* availability
 //! realization within a Monte-Carlo run (common random numbers).
 
+use crate::data::stream::data_group_of;
 use crate::util::rng::Pcg32;
 
 const TAG_AVAIL: u64 = 0xa7a11;
@@ -28,13 +29,21 @@ impl Participation {
     /// `group_probs.len()` contiguous availability sub-blocks.
     pub fn grouped(n_clients: usize, group_probs: &[f64], data_groups: usize) -> Self {
         let a = group_probs.len().max(1);
+        let g_count = data_groups.max(1);
         let probs = (0..n_clients)
             .map(|k| {
-                // Position within the data-group block decides the
-                // availability group.
-                let block = n_clients.div_ceil(data_groups.max(1));
-                let pos_in_block = k % block;
-                let sub = (pos_in_block * a) / block.max(1);
+                // Position within the client's *actual* data-group block
+                // (the same floor mapping `data::stream::data_group_of`
+                // uses) decides the availability group. Mapping by a
+                // div_ceil block width drifted out of alignment whenever
+                // K was not divisible by the group count, skewing the
+                // sub-blocks and leaving some availability groups
+                // unassigned inside the short final block.
+                let g = data_group_of(k, n_clients, g_count);
+                let start = (g * n_clients).div_ceil(g_count);
+                let end = ((g + 1) * n_clients).div_ceil(g_count);
+                let extent = end.saturating_sub(start).max(1);
+                let sub = ((k - start) * a) / extent;
                 group_probs[sub.min(a - 1)]
             })
             .collect();
@@ -92,6 +101,51 @@ mod tests {
         assert_eq!(p.probs[48], 0.005);
         assert_eq!(p.probs[64], 0.25); // data group 1 restarts the pattern
         assert_eq!(p.probs[255], 0.005);
+    }
+
+    #[test]
+    fn grouped_nondivisible_blocks_align_and_cover() {
+        // Regression: with K not divisible by the data-group count, the old
+        // div_ceil block width misaligned the availability sub-blocks with
+        // the actual data groups (e.g. K=250: the client *opening* data
+        // block 2 landed in the last availability group) and could leave
+        // availability groups unassigned within a block. Property, for any
+        // K: inside every actual data block (as `data_group_of` assigns
+        // them) the availability-group index starts at 0, is
+        // non-decreasing, and covers every group when the block is large
+        // enough.
+        let gp = [0.25, 0.1, 0.025, 0.005];
+        for k_total in [250usize, 10, 13, 61, 97, 255, 256, 500] {
+            let p = Participation::grouped(k_total, &gp, 4);
+            let idx_of = |prob: f64| gp.iter().position(|&g| g == prob).unwrap();
+            for g in 0..4 {
+                let members: Vec<usize> = (0..k_total)
+                    .filter(|&c| data_group_of(c, k_total, 4) == g)
+                    .collect();
+                assert!(!members.is_empty(), "K={k_total} g={g} empty");
+                // The block opens with the first availability group.
+                assert_eq!(
+                    idx_of(p.probs[members[0]]),
+                    0,
+                    "K={k_total} g={g}: block must start at availability group 0"
+                );
+                // Non-decreasing sub-group index within the block.
+                let subs: Vec<usize> = members.iter().map(|&c| idx_of(p.probs[c])).collect();
+                assert!(
+                    subs.windows(2).all(|w| w[0] <= w[1]),
+                    "K={k_total} g={g}: sub-groups out of order: {subs:?}"
+                );
+                // Full coverage whenever the block can hold all groups.
+                if members.len() >= gp.len() {
+                    for want in 0..gp.len() {
+                        assert!(
+                            subs.contains(&want),
+                            "K={k_total} g={g}: availability group {want} never assigned"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

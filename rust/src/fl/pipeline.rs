@@ -132,6 +132,7 @@ pub fn aggregate_arrivals(
     total.applied += info.applied;
     total.discarded_stale += info.discarded_stale;
     total.conflicts_resolved += info.conflicts_resolved;
+    total.touched_coords += info.touched_coords;
 }
 
 /// Dense per-tick working state, allocated once and reused every tick

@@ -109,18 +109,24 @@ pub struct SelectionSchedule {
 }
 
 impl SelectionSchedule {
-    /// Construct; clamps `m` into [1, d] (`Full` ignores m).
+    /// Construct; clamps `m` into [1, d] (`Full` ignores m). A
+    /// zero-dimensional space is degenerate but constructible: `m` is
+    /// forced to 0 and every selection comes back empty instead of
+    /// panicking on a `% 0` deep inside [`SelectionSchedule::recv`].
     pub fn new(kind: ScheduleKind, d: usize, m: usize, seed: u64) -> Self {
         SelectionSchedule {
             kind,
             d,
-            m: m.clamp(1, d.max(1)),
+            m: if d == 0 { 0 } else { m.clamp(1, d) },
             seed,
         }
     }
 
     /// Server->client selection `M_{k,n}`.
     pub fn recv(&self, k: usize, n: usize) -> Coords {
+        if self.d == 0 {
+            return Coords::Full { d: 0 };
+        }
         match self.kind {
             ScheduleKind::Full => Coords::Full { d: self.d },
             ScheduleKind::Coordinated => Coords::Range {
@@ -160,9 +166,14 @@ impl SelectionSchedule {
     }
 
     /// Overlap m > D/len never truncates a full cycle: number of iterations
-    /// to cover all coordinates for one client.
+    /// to cover all coordinates for one client (0 for a degenerate d = 0
+    /// space).
     pub fn cycle_len(&self) -> usize {
-        self.d.div_ceil(self.m)
+        if self.m == 0 {
+            0
+        } else {
+            self.d.div_ceil(self.m)
+        }
     }
 }
 
@@ -234,6 +245,28 @@ mod tests {
                 s.recv(k, n).for_each(|i| seen[i] = true);
             }
             assert!(seen.iter().all(|&b| b), "client {k} missed coords");
+        }
+    }
+
+    #[test]
+    fn zero_dimension_is_empty_not_a_panic() {
+        // Regression: `new` clamped m to [1, max(d, 1)], so d = 0 kept
+        // m = 1 and `recv` panicked on `% self.d`.
+        for kind in [
+            ScheduleKind::Coordinated,
+            ScheduleKind::Uncoordinated,
+            ScheduleKind::Full,
+            ScheduleKind::RandomSubset,
+        ] {
+            let s = SelectionSchedule::new(kind, 0, 4, 7);
+            assert_eq!(s.m, 0);
+            assert_eq!(s.cycle_len(), 0);
+            for n in 0..3 {
+                assert!(s.recv(1, n).is_empty(), "{kind:?}");
+                assert!(s.send(1, n, true).is_empty(), "{kind:?}");
+                let mut row: [f32; 0] = [];
+                s.recv(1, n).fill_mask(&mut row); // no out-of-bounds write
+            }
         }
     }
 

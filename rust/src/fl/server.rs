@@ -21,7 +21,7 @@
 use super::selection::Coords;
 
 /// One client->server message: the masked model portion `S_{k,n} w_{k,n+1}`.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Update {
     /// Sender.
     pub client: usize,
@@ -34,7 +34,7 @@ pub struct Update {
 }
 
 /// Weight-decreasing schedule for delayed updates.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum AlphaSchedule {
     /// alpha_l = 1 for l <= l_max (PAO-Fed-*1 and *0 variants).
     Ones,
@@ -56,7 +56,7 @@ impl AlphaSchedule {
 }
 
 /// Aggregation discipline.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum AggregationMode {
     /// Eqs. (14)-(15) with a weight schedule and most-recent-wins conflict
     /// resolution.
@@ -81,6 +81,8 @@ pub struct AggregateInfo {
     pub discarded_stale: usize,
     /// Coordinate contributions dropped by conflict resolution.
     pub conflicts_resolved: usize,
+    /// Distinct coordinates written by this aggregation (bucket mode).
+    pub touched_coords: usize,
 }
 
 /// The federation server: owns the global model and applies aggregation.
@@ -95,6 +97,11 @@ pub struct Server {
     /// Scratch: per-coordinate winning sent_iter + 1 (0 = untouched),
     /// epoch-tagged to avoid clearing.
     best_sent: Vec<u64>,
+    /// Scratch: epoch at which a coordinate last entered `touched`.
+    /// Membership must not be inferred from `delta[c] == 0.0` — a
+    /// contribution that exactly cancels (v == w[c]) leaves the
+    /// accumulator at zero while the coordinate is already listed.
+    touched_epoch: Vec<u64>,
     epoch: u64,
 }
 
@@ -107,6 +114,7 @@ impl Server {
             delta: vec![0.0; d],
             touched: Vec::new(),
             best_sent: vec![0; d],
+            touched_epoch: vec![0; d],
             epoch: 0,
         }
     }
@@ -215,9 +223,15 @@ impl Server {
             }
             let scale = a / bucket_size[l] as f64;
             let stamp = epoch_base | (u.sent_iter as u64 + 1);
+            let epoch = self.epoch;
             let mut vi = 0;
-            let (delta, touched, best, w) =
-                (&mut self.delta, &mut self.touched, &self.best_sent, &self.w);
+            let (delta, touched, best, tep, w) = (
+                &mut self.delta,
+                &mut self.touched,
+                &self.best_sent,
+                &mut self.touched_epoch,
+                &self.w,
+            );
             u.coords.for_each(|c| {
                 let v = u.values[vi];
                 vi += 1;
@@ -225,13 +239,18 @@ impl Server {
                     info.conflicts_resolved += 1;
                     return;
                 }
-                if delta[c] == 0.0 {
+                // Epoch-stamped membership: a `delta[c] == 0.0` sentinel
+                // conflates "untouched" with "contribution exactly
+                // cancelled" and double-pushes the coordinate.
+                if tep[c] != epoch {
+                    tep[c] = epoch;
                     touched.push(c as u32);
                 }
                 delta[c] += scale * (v - w[c]) as f64;
             });
             info.applied += 1;
         }
+        info.touched_coords = self.touched.len();
 
         // Apply and clear scratch.
         for &c in &self.touched {
@@ -329,6 +348,32 @@ mod tests {
         assert!((s.w[0] - 2.0).abs() < 1e-6, "{}", s.w[0]);
         // Coord 1 only touched by the older update: still applied.
         assert!((s.w[1] - 7.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn exact_cancellation_touches_coordinate_once() {
+        // Regression: the scratch used `delta[c] == 0.0` as "untouched". A
+        // contribution whose deviation is exactly zero (v == w[c]) left the
+        // accumulator at 0.0 after being listed, so a second contribution
+        // to the same coordinate pushed it into `touched` again. The
+        // epoch-stamp dedup must count the coordinate exactly once and
+        // still apply the combined deviation.
+        let mut s = Server::new(2, buckets(5, AlphaSchedule::Ones));
+        s.w[0] = 2.0;
+        let ups = vec![
+            upd(0, 10, vec![0], vec![2.0], 2), // v == w[0]: cancels exactly
+            upd(1, 10, vec![0], vec![4.0], 2), // second hit, same coord
+        ];
+        let info = s.aggregate(10, &ups);
+        assert_eq!(info.applied, 2);
+        assert_eq!(info.touched_coords, 1, "coordinate 0 double-listed");
+        // Delta = mean(2-2, 4-2) = 1 -> w[0] = 3.
+        assert!((s.w[0] - 3.0).abs() < 1e-6, "{}", s.w[0]);
+        // Scratch state must stay coherent for the next aggregation.
+        let info = s.aggregate(11, &[upd(0, 11, vec![0, 1], vec![3.0, 1.0], 2)]);
+        assert_eq!(info.touched_coords, 2);
+        assert!((s.w[0] - 3.0).abs() < 1e-6);
+        assert!((s.w[1] - 1.0).abs() < 1e-6);
     }
 
     #[test]

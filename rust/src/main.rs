@@ -5,6 +5,14 @@
 //!
 //! experiments: fig2a fig2b fig2c fig3a fig3b fig3c fig4 fig5a fig5b fig5c
 //!              theory all
+//!
+//! deployment (the socket-backed multi-process runtime):
+//!   pao-fed deploy                          in-process thread-per-client
+//!   pao-fed deploy --serve ADDR --workers N federation server over TCP
+//!   pao-fed deploy --connect ADDR           worker process (a client shard)
+//!   deploy flags: --clients K --iters N --seed S --dim D --delta F
+//!                 --eval-every E (server-side scenario shape)
+//!
 //! flags:
 //!   --mc N        Monte-Carlo runs per curve            (default 3)
 //!   --seed S      base seed                             (default 2023)
@@ -26,18 +34,113 @@
 //!   --quiet       suppress ASCII charts
 //! ```
 
+use pao_fed::async_rt::{
+    run_deployment, run_deployment_tcp, run_worker, DeploymentConfig, DeploymentReport,
+};
 use pao_fed::cli::Args;
+use pao_fed::data::stream::{FedStream, StreamConfig};
+use pao_fed::data::synthetic::Eq39Source;
 use pao_fed::experiments::{self, BackendKind, ExperimentCtx, Parallelism, PoolHandle};
+use pao_fed::fl::algorithms::{build, Variant};
+use pao_fed::fl::delay::DelayModel;
+use pao_fed::fl::participation::Participation;
+use pao_fed::rff::RffSpace;
+use pao_fed::util::rng::Pcg32;
+use std::net::TcpListener;
+use std::time::Duration;
 
 fn usage() -> ! {
     eprintln!(
         "usage: pao-fed <experiment> [--mc N] [--seed S] [--iters N] [--clients K] \
          [--out DIR] [--jobs N] [--shards M] [--xla] [--quiet]\n\
-         experiments: {} all | extras: {} extras",
+         experiments: {} all | extras: {} extras\n\
+         deployment:  pao-fed deploy [--serve ADDR --workers N | --connect ADDR]\n  \
+         [--clients K] [--iters N] [--seed S] [--dim D] [--delta F] [--eval-every E]",
         experiments::ALL.join(" "),
         experiments::EXTRAS.join(" ")
     );
     std::process::exit(2);
+}
+
+/// The `deploy` scenario: the paper's Section V-A shape scaled by the
+/// flags, shared by the server and in-process modes so a loopback
+/// multi-process run is comparable against `deploy` with no flags.
+fn deploy_scenario(
+    args: &Args,
+) -> Result<(FedStream, RffSpace, Participation, DelayModel, DeploymentConfig), String> {
+    let k: usize = args.get_parse("clients", 64usize)?;
+    let n: usize = args.get_parse("iters", 500usize)?;
+    let d: usize = args.get_parse("dim", 64usize)?;
+    let seed: u64 = args.get_parse("seed", 2023u64)?;
+    let delta: f64 = args.get_parse("delta", 0.2f64)?;
+    let eval_every: usize = args.get_parse("eval-every", 50usize)?;
+    let stream = FedStream::build(
+        &StreamConfig {
+            n_clients: k,
+            n_iters: n,
+            data_group_samples: vec![n / 4, n / 2, 3 * n / 4, n],
+            test_size: 200,
+        },
+        &mut Eq39Source::new(seed),
+        seed,
+    );
+    let rff = RffSpace::sample(4, d, 1.0, &mut Pcg32::derive(seed, &[1]));
+    Ok((
+        stream,
+        rff,
+        Participation::grouped(k, &[0.25, 0.1, 0.025, 0.005], 4),
+        DelayModel::Geometric { delta },
+        DeploymentConfig {
+            algo: build(Variant::PaoFedC2, 0.4, 4, 10, eval_every),
+            tick: Duration::ZERO,
+            env_seed: seed,
+            eval_every,
+        },
+    ))
+}
+
+fn print_deployment(report: &DeploymentReport) {
+    for (it, db) in report.iters.iter().zip(&report.mse_db) {
+        println!("  tick {it:>5}  MSE {db:>7.2} dB");
+    }
+    println!(
+        "  traffic: {} scalars up / {} down; local steps: {}; \
+         {} client threads, {} workers",
+        report.comm.uplink_scalars,
+        report.comm.downlink_scalars,
+        report.local_steps,
+        report.n_client_threads,
+        report.n_workers
+    );
+}
+
+fn run_deploy(args: &Args) -> Result<(), String> {
+    if let Some(addr) = args.get("connect") {
+        println!("worker: connecting to {addr}");
+        let rep = run_worker(addr).map_err(|e| e.to_string())?;
+        println!(
+            "worker done: hosted clients {}..{}, {} ticks, {} local steps",
+            rep.client_lo, rep.client_hi, rep.ticks, rep.local_steps
+        );
+        return Ok(());
+    }
+    let (stream, rff, part, delay, cfg) = deploy_scenario(args)?;
+    let report = if let Some(bind) = args.get("serve") {
+        let workers: usize = args.get_parse("workers", 2usize)?;
+        let listener = TcpListener::bind(bind).map_err(|e| format!("bind {bind}: {e}"))?;
+        let addr = listener.local_addr().map_err(|e| e.to_string())?;
+        println!(
+            "server: listening on {addr}; waiting for {workers} worker(s) \
+             (`pao-fed deploy --connect {addr}`)"
+        );
+        run_deployment_tcp(stream, rff, part, delay, cfg, &listener, workers)
+            .map_err(|e| e.to_string())?
+    } else {
+        println!("in-process deployment ({} client threads)", stream.n_clients);
+        run_deployment(stream, rff, part, delay, cfg).map_err(|e| e.to_string())?
+    };
+    print_deployment(&report);
+    Ok(())
 }
 
 fn main() {
@@ -54,6 +157,14 @@ fn main() {
     let Some(cmd) = args.command.clone() else {
         usage();
     };
+
+    if cmd == "deploy" {
+        if let Err(e) = run_deploy(&args) {
+            eprintln!("deploy failed: {e}");
+            std::process::exit(1);
+        }
+        return;
+    }
 
     let parse = || -> Result<ExperimentCtx, String> {
         let mut jobs = Parallelism::from_jobs(args.get_parse("jobs", 1usize)?);

@@ -26,8 +26,19 @@ pub fn fast_cos(x: f32) -> f32 {
     const P1: f32 = 1.570_796_4;
     const P2: f32 = -4.371_139e-8;
     let q = (x * FRAC_2_PI).round();
-    let r = (x - q * P1) - q * P2;
-    let qi = unsafe { q.to_int_unchecked::<i32>() } & 3;
+    // Saturating cast (`as`, defined for every float unlike
+    // `to_int_unchecked`, which is UB once |x| > ~3.4e9): only the low two
+    // bits select the quadrant, and beyond f32's exact-integer range the
+    // reduction has no accuracy left to lose. Still a single vectorizable
+    // convert instruction per lane.
+    let qi = (q as i32) & 3;
+    // Clamp the reduced argument near its nominal interval [-pi/4, pi/4]:
+    // for phases past ~2e9 the Cody-Waite subtraction can leave |r| huge
+    // (up to inf at f32::MAX) and the polynomials would overflow. The bound
+    // sits above pi/4 + the worst in-range reduction rounding, so ordinary
+    // values are untouched; degenerate tails pin into [-1, 1]-ish. Two
+    // branchless min/max lanes, auto-vectorization intact.
+    let r = ((x - q * P1) - q * P2).clamp(-0.79, 0.79);
     let r2 = r * r;
     // cos(r) and sin(r) on [-pi/4, pi/4] (minimax-adjusted Taylor).
     let c = 1.0 + r2 * (-0.499_999_997
@@ -56,7 +67,7 @@ pub fn fast_cos(x: f32) -> f32 {
 /// let norm2: f32 = z.iter().map(|v| v * v).sum();
 /// assert!((norm2 - 1.0).abs() < 0.5, "norm^2 = {norm2}");
 /// ```
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RffSpace {
     /// Raw input dimension L.
     pub l: usize,
@@ -78,6 +89,23 @@ impl RffSpace {
         let b = (0..d)
             .map(|_| rng.uniform_in(0.0, 2.0 * std::f64::consts::PI) as f32)
             .collect();
+        RffSpace {
+            l,
+            d,
+            omega,
+            b,
+            scale: (2.0 / d as f64).sqrt() as f32,
+        }
+    }
+
+    /// Reassemble a realization from its raw parts (wire transfer between
+    /// deployment processes). The normalization `scale = sqrt(2/D)` is
+    /// recomputed exactly as [`RffSpace::sample`] computes it, so a space
+    /// that round-trips through [`crate::async_rt`]'s codec featurizes
+    /// bit-identically to the original.
+    pub fn from_parts(l: usize, d: usize, omega: Vec<f32>, b: Vec<f32>) -> Self {
+        assert_eq!(omega.len(), l * d);
+        assert_eq!(b.len(), d);
         RffSpace {
             l,
             d,
@@ -163,6 +191,33 @@ mod tests {
             let err = (fast_cos(x) as f64 - (x as f64).cos()).abs();
             assert!(err < 1e-4, "tail x={x}: err {err}");
         }
+    }
+
+    #[test]
+    fn fast_cos_extreme_phase_is_finite_and_bounded() {
+        // Regression: the quadrant fold used `to_int_unchecked::<i32>`,
+        // which is UB once round(x * 2/pi) leaves i32 range (|x| > ~3.4e9)
+        // — reachable through `features_into` on unnormalized real-data
+        // inputs. The safe saturating cast plus the reduced-argument clamp
+        // must yield a finite, in-range value for any input.
+        let extremes = [1e10f32, -1e10, 4e9, -4e9, 1e20, f32::MAX, f32::MIN, f32::MAX / 2.0];
+        for x in extremes {
+            let v = fast_cos(x);
+            assert!(v.is_finite(), "fast_cos({x}) not finite: {v}");
+            assert!(v.abs() <= 1.01, "fast_cos({x}) out of range: {v}");
+        }
+        // The guard rails must not disturb the accurate range.
+        assert!((fast_cos(1.0) - 1.0f32.cos()).abs() < 4e-6);
+        assert!((fast_cos(-58.5) - (-58.5f32).cos()).abs() < 4e-6);
+    }
+
+    #[test]
+    fn from_parts_reproduces_sampled_space() {
+        let mut rng = Pcg32::new(5, 0);
+        let a = RffSpace::sample(4, 32, 1.0, &mut rng);
+        let b = RffSpace::from_parts(a.l, a.d, a.omega.clone(), a.b.clone());
+        let x = [0.3f32, -1.2, 0.7, 2.5];
+        assert_eq!(a.features(&x), b.features(&x));
     }
 
     #[test]

@@ -1,0 +1,133 @@
+//! Integration: the socket-backed multi-process deployment (1 server
+//! process + worker child processes over loopback TCP) must reproduce the
+//! in-process thread-per-client deployment **bit for bit** — same learning
+//! curve, same final model, same traffic counters — on the same
+//! `(stream, rff, participation, delay, algo)` configuration. Workers are
+//! real child processes of the `pao-fed` binary (`deploy --connect`),
+//! spawned via `std::process::Command`.
+
+use pao_fed::async_rt::{run_deployment, run_deployment_tcp, DeploymentConfig};
+use pao_fed::data::stream::{FedStream, StreamConfig};
+use pao_fed::data::synthetic::Eq39Source;
+use pao_fed::fl::algorithms::{self, Variant};
+use pao_fed::fl::delay::DelayModel;
+use pao_fed::fl::participation::Participation;
+use pao_fed::rff::RffSpace;
+use pao_fed::util::rng::Pcg32;
+use std::net::TcpListener;
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+fn build_env(seed: u64, k: usize, n: usize) -> (StreamConfig, RffSpace, Participation, DelayModel) {
+    let cfg = StreamConfig {
+        n_clients: k,
+        n_iters: n,
+        data_group_samples: vec![n / 4, n / 2, 3 * n / 4, n],
+        test_size: 80,
+    };
+    let mut rng = Pcg32::derive(seed, &[0xabc]);
+    let rff = RffSpace::sample(4, 32, 1.0, &mut rng);
+    let part = Participation::grouped(k, &[0.5, 0.25, 0.1, 0.05], 4);
+    let delay = DelayModel::Geometric { delta: 0.3 };
+    (cfg, rff, part, delay)
+}
+
+fn spawn_workers(addr: &str, count: usize) -> Vec<Child> {
+    (0..count)
+        .map(|i| {
+            Command::new(env!("CARGO_BIN_EXE_pao-fed"))
+                .args(["deploy", "--connect", addr])
+                .stdout(Stdio::null())
+                .stderr(Stdio::inherit())
+                .spawn()
+                .unwrap_or_else(|e| panic!("spawn worker {i}: {e}"))
+        })
+        .collect()
+}
+
+#[test]
+fn tcp_loopback_matches_in_process_deployment_bitwise() {
+    for (variant, n_workers) in [
+        (Variant::PaoFedU2, 2),
+        (Variant::PaoFedC1, 3),
+        (Variant::OnlineFedSgd, 2),
+    ] {
+        let seed = 17;
+        let (cfg, rff, part, delay) = build_env(seed, 12, 200);
+        let algo = algorithms::build(variant, 0.4, 4, 10, 25);
+        let dcfg = || DeploymentConfig {
+            algo: algo.clone(),
+            tick: Duration::ZERO,
+            env_seed: seed,
+            eval_every: 25,
+        };
+
+        // In-process thread-per-client deployment.
+        let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+        let inproc = run_deployment(stream, rff.clone(), part.clone(), delay, dcfg()).unwrap();
+
+        // Same environment realization, fleet sharded across worker
+        // *processes* over loopback TCP.
+        let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let children = spawn_workers(&addr, n_workers);
+        let tcp = run_deployment_tcp(
+            stream,
+            rff.clone(),
+            part.clone(),
+            delay,
+            dcfg(),
+            &listener,
+            n_workers,
+        )
+        .unwrap();
+        for mut c in children {
+            let status = c.wait().unwrap();
+            assert!(status.success(), "{variant:?}: worker exited with {status}");
+        }
+
+        // Bitwise contract: identical curve, model, counters.
+        assert_eq!(inproc.iters, tcp.iters, "{variant:?}");
+        assert_eq!(inproc.mse_db, tcp.mse_db, "{variant:?}: curves diverge");
+        assert_eq!(inproc.final_w, tcp.final_w, "{variant:?}: models diverge");
+        assert_eq!(inproc.comm.uplink_scalars, tcp.comm.uplink_scalars, "{variant:?}");
+        assert_eq!(inproc.comm.uplink_msgs, tcp.comm.uplink_msgs, "{variant:?}");
+        assert_eq!(inproc.comm.downlink_scalars, tcp.comm.downlink_scalars, "{variant:?}");
+        assert_eq!(inproc.comm.downlink_msgs, tcp.comm.downlink_msgs, "{variant:?}");
+        assert_eq!(inproc.agg, tcp.agg, "{variant:?}: aggregation diverges");
+        assert_eq!(inproc.local_steps, tcp.local_steps, "{variant:?}");
+        assert_eq!(tcp.n_client_threads, 0);
+        assert_eq!(tcp.n_workers, n_workers);
+    }
+}
+
+#[test]
+fn tcp_deployment_survives_zero_participation() {
+    let seed = 5;
+    let (cfg, rff, _, delay) = build_env(seed, 8, 120);
+    let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let children = spawn_workers(&addr, 2);
+    let report = run_deployment_tcp(
+        stream,
+        rff,
+        Participation::uniform(8, 0.0),
+        delay,
+        DeploymentConfig {
+            algo: algorithms::build(Variant::PaoFedU1, 0.4, 4, 10, 40),
+            tick: Duration::ZERO,
+            env_seed: seed,
+            eval_every: 40,
+        },
+        &listener,
+        2,
+    )
+    .unwrap();
+    for mut c in children {
+        assert!(c.wait().unwrap().success());
+    }
+    assert_eq!(report.comm.uplink_msgs, 0);
+    assert!(report.final_w.iter().all(|&v| v == 0.0));
+}
