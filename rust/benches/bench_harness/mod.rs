@@ -3,7 +3,7 @@
 //! Usage inside a `harness = false` bench target:
 //!
 //! ```ignore
-//! let mut b = Bench::from_args();
+//! let mut b = Bench::from_args("hotpath");
 //! b.bench("native_step_k256", || { ... });
 //! b.finish();
 //! ```
@@ -11,12 +11,31 @@
 //! Each benchmark is warmed up, then timed over enough iterations to pass a
 //! minimum measurement window; mean / min / p50 are reported. A positional
 //! CLI filter (e.g. `cargo bench --bench hotpath native`) selects a subset.
+//!
+//! Besides the console table, [`Bench::finish`] persists every result as
+//! machine-readable JSON (the perf trajectory file read by
+//! `EXPERIMENTS.md` §Perf): results merge under the bench target's name
+//! into `BENCH_4.json` at the workspace root, or into the path named by
+//! `PAO_FED_BENCH_JSON`. Setting `PAO_FED_BENCH_FAST=1` collapses the
+//! measurement window to a single iteration per benchmark — the CI smoke
+//! mode that validates the plumbing without paying for real measurements.
 
+// The module compiles once per bench target, and no single target uses
+// every entry point (`scaling` self-times via `record_secs` and never
+// calls `bench`; the others never call `record_secs`).
+#![allow(dead_code)]
+
+use pao_fed::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::time::Instant;
 
-/// Bench runner with a name filter.
+/// Bench runner with a name filter and a JSON trajectory sink.
 pub struct Bench {
+    /// Bench-target name (`hotpath`, `scaling`, ...): the JSON section key.
+    target: String,
     filter: Option<String>,
+    fast: bool,
     results: Vec<(String, Stats)>,
 }
 
@@ -30,14 +49,19 @@ pub struct Stats {
 }
 
 impl Bench {
-    /// Parse the filter from argv (ignores cargo's --bench flag etc.).
-    pub fn from_args() -> Self {
+    /// Parse the filter from argv (ignores cargo's --bench flag etc.);
+    /// `target` names this bench binary's section in the JSON output.
+    pub fn from_args(target: &str) -> Self {
         let filter = std::env::args()
             .skip(1)
             .find(|a| !a.starts_with('-'))
             .filter(|a| !a.is_empty());
+        let fast = std::env::var_os("PAO_FED_BENCH_FAST")
+            .is_some_and(|v| !v.is_empty() && v != "0");
         Bench {
+            target: target.to_string(),
             filter,
+            fast,
             results: Vec::new(),
         }
     }
@@ -47,7 +71,8 @@ impl Bench {
         self.filter.as_deref().is_none_or(|f| name.contains(f))
     }
 
-    /// Time `f`, auto-scaling iteration count to a ~0.5s window.
+    /// Time `f`, auto-scaling iteration count to a ~0.5s window (one
+    /// iteration in `PAO_FED_BENCH_FAST` smoke mode).
     pub fn bench(&mut self, name: &str, mut f: impl FnMut()) {
         if !self.enabled(name) {
             return;
@@ -56,8 +81,12 @@ impl Bench {
         let t0 = Instant::now();
         f();
         let once = t0.elapsed().as_secs_f64().max(1e-9);
-        let target = 0.5f64;
-        let iters = ((target / once) as usize).clamp(3, 10_000);
+        let iters = if self.fast {
+            1
+        } else {
+            let target = 0.5f64;
+            ((target / once) as usize).clamp(3, 10_000)
+        };
         let mut samples = Vec::with_capacity(iters);
         for _ in 0..iters {
             let t = Instant::now();
@@ -81,11 +110,74 @@ impl Bench {
         self.results.push((name.to_string(), stats));
     }
 
-    /// Print the footer; returns collected results for further use.
+    /// File an externally measured wall-clock figure (used by bench
+    /// targets that run their own timing loops, e.g. `scaling`).
+    pub fn record_secs(&mut self, name: &str, secs: f64) {
+        let ns = secs * 1e9;
+        self.results.push((
+            name.to_string(),
+            Stats { mean_ns: ns, min_ns: ns, p50_ns: ns, iters: 1 },
+        ));
+    }
+
+    /// Print the footer, persist the JSON trajectory, and return the
+    /// collected results for further use.
     pub fn finish(self) -> Vec<(String, Stats)> {
         println!("{} benchmark(s) run", self.results.len());
+        match write_json(&self.target, &self.results) {
+            Ok(path) => println!("(bench trajectory -> {})", path.display()),
+            Err(e) => eprintln!("(bench trajectory not written: {e})"),
+        }
         self.results
     }
+}
+
+/// Where the trajectory lands: `PAO_FED_BENCH_JSON` if set, else
+/// `BENCH_4.json` at the workspace root (one level above the crate
+/// manifest), else the current directory.
+fn json_path() -> PathBuf {
+    if let Some(p) = std::env::var_os("PAO_FED_BENCH_JSON") {
+        return PathBuf::from(p);
+    }
+    match std::env::var_os("CARGO_MANIFEST_DIR") {
+        Some(dir) => PathBuf::from(dir).join("..").join("BENCH_4.json"),
+        None => PathBuf::from("BENCH_4.json"),
+    }
+}
+
+/// Merge this target's results into the trajectory file: other targets'
+/// sections are preserved, this target's section is replaced wholesale.
+fn write_json(target: &str, results: &[(String, Stats)]) -> std::io::Result<PathBuf> {
+    let path = json_path();
+    let mut root = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+        .filter(|j| matches!(j, Json::Obj(_)))
+        .unwrap_or_else(|| Json::Obj(BTreeMap::new()));
+    let Json::Obj(map) = &mut root else { unreachable!() };
+    map.insert(
+        "schema".to_string(),
+        Json::Str("pao-fed-bench-v1".to_string()),
+    );
+    let targets = map
+        .entry("targets".to_string())
+        .or_insert_with(|| Json::Obj(BTreeMap::new()));
+    if !matches!(targets, Json::Obj(_)) {
+        *targets = Json::Obj(BTreeMap::new());
+    }
+    let Json::Obj(tmap) = targets else { unreachable!() };
+    let mut section = BTreeMap::new();
+    for (name, s) in results {
+        let mut entry = BTreeMap::new();
+        entry.insert("mean_ns".to_string(), Json::Num(s.mean_ns));
+        entry.insert("min_ns".to_string(), Json::Num(s.min_ns));
+        entry.insert("p50_ns".to_string(), Json::Num(s.p50_ns));
+        entry.insert("iters".to_string(), Json::Num(s.iters as f64));
+        section.insert(name.clone(), Json::Obj(entry));
+    }
+    tmap.insert(target.to_string(), Json::Obj(section));
+    std::fs::write(&path, root.to_string_compact())?;
+    Ok(path)
 }
 
 /// Human-readable nanoseconds.

@@ -38,7 +38,7 @@ impl Tag for ExperimentCtx {
 }
 
 fn main() {
-    let mut b = Bench::from_args();
+    let mut b = Bench::from_args("figures");
     for &id in experiments::ALL {
         let name = format!("figure/{id}");
         if !b.enabled(&name) {

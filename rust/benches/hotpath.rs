@@ -13,6 +13,7 @@ use pao_fed::fl::server::{AggregationMode, AlphaSchedule, Server, Update};
 use pao_fed::metrics::mse_test;
 use pao_fed::rff::RffSpace;
 use pao_fed::runtime::{artifact_dir, XlaBackend};
+use pao_fed::simd;
 use pao_fed::util::rng::Pcg32;
 
 const K: usize = 256;
@@ -53,7 +54,8 @@ fn fixture(rng: &mut Pcg32) -> Fixture {
 }
 
 fn main() {
-    let mut b = Bench::from_args();
+    let mut b = Bench::from_args("hotpath");
+    println!("simd dispatch level: {:?}", simd::active_level());
     let mut rng = Pcg32::new(99, 0);
     let rff = RffSpace::sample(L, D, 1.0, &mut rng);
     let mut native = NativeBackend::new(rff.clone());
@@ -103,6 +105,49 @@ fn main() {
     let xt: Vec<f32> = (0..T * L).map(|_| rng.gaussian() as f32).collect();
     b.bench("rff/featurize_t500", || {
         std::hint::black_box(rff.features_batch(&xt));
+    });
+
+    // Dispatched-vs-scalar featurization twins over one reused row
+    // buffer, so both sides measure exactly the same work (no allocation
+    // or T*D store bandwidth on either) — their ratio is the kernel
+    // layer's headline number in EXPERIMENTS.md §Perf.
+    {
+        let (o0, rest) = rff.omega.split_at(D);
+        let (o1, rest) = rest.split_at(D);
+        let (o2, o3) = rest.split_at(D);
+        let scale = rff.scale();
+        let mut zrow = vec![0.0f32; D];
+        b.bench("rff/featurize_t500_into", || {
+            for x in xt.chunks(L) {
+                rff.features_into(x, &mut zrow);
+                std::hint::black_box(&zrow);
+            }
+        });
+        b.bench("rff/featurize_t500_scalar", || {
+            for x in xt.chunks(L) {
+                simd::scalar::featurize4(
+                    &rff.b,
+                    o0,
+                    o1,
+                    o2,
+                    o3,
+                    [x[0], x[1], x[2], x[3]],
+                    scale,
+                    &mut zrow,
+                );
+                std::hint::black_box(&zrow);
+            }
+        });
+    }
+
+    // --- Kernel-layer microbenches (dispatched vs scalar reference) -------
+    let ka: Vec<f32> = (0..D).map(|_| rng.gaussian() as f32).collect();
+    let kb: Vec<f32> = (0..D).map(|_| rng.gaussian() as f32).collect();
+    b.bench("simd/dot_d200", || {
+        std::hint::black_box(simd::dot(&ka, &kb));
+    });
+    b.bench("simd/dot_d200_scalar", || {
+        std::hint::black_box(simd::scalar::dot(&ka, &kb));
     });
 
     // --- Evaluation -----------------------------------------------------------

@@ -6,11 +6,17 @@
 //!
 //! Run: `cargo bench --bench scaling`
 //!
+//! Wall-clock figures are also filed into the machine-readable bench
+//! trajectory (`BENCH_4.json`) through the shared harness.
+//!
 //! Acceptance targets: > 2x speedup at 4 workers for mc >= 8 on a 4-core
 //! machine (ISSUE 1), and the pool beating scoped spawn-per-call dispatch
 //! on client-step-shaped jobs (ISSUE 2). Results depend on the host; the
 //! bench prints the detected core count alongside each ratio.
 
+mod bench_harness;
+
+use bench_harness::Bench;
 use pao_fed::data::stream::{FedStream, StreamConfig};
 use pao_fed::data::synthetic::Eq39Source;
 use pao_fed::experiments::common::{run_variants, PaperEnv};
@@ -55,7 +61,7 @@ fn time<T>(mut f: impl FnMut() -> T) -> (f64, T) {
     (sw.secs().min(first), out)
 }
 
-fn bench_monte_carlo() {
+fn bench_monte_carlo(b: &mut Bench) {
     println!("== Monte-Carlo loop (mc=8, K=64, N=300, 2 algorithms) ==");
     let algos = [
         build(Variant::OnlineFedSgd, 0.4, 4, 10, 50),
@@ -67,6 +73,7 @@ fn bench_monte_carlo() {
         run_variants(&ctx, &env, &algos, "scal-s", "serial").unwrap()
     });
     println!("  jobs=1: {:.3}s", t1);
+    b.record_secs("mc/jobs1", t1);
     for workers in [2usize, 4, 8] {
         let (tw, fig) = time(|| {
             let ctx = mc_ctx(workers);
@@ -85,10 +92,11 @@ fn bench_monte_carlo() {
             if identical { "yes" } else { "NO (BUG)" }
         );
         assert!(identical, "parallel Monte-Carlo diverged from serial");
+        b.record_secs(&format!("mc/jobs{workers}"), tw);
     }
 }
 
-fn bench_client_shards() {
+fn bench_client_shards(b: &mut Bench) {
     println!("== Sharded client step (K=512, N=200, full participation) ==");
     let seed = 7;
     let cfg = StreamConfig {
@@ -114,6 +122,7 @@ fn bench_client_shards() {
 
     let (t1, base) = time(|| engine::run(&env, &algo, &mut backend).unwrap());
     println!("  shards=1: {:.3}s", t1);
+    b.record_secs("client_step/shards1", t1);
     for shards in [2usize, 4, 8] {
         let pool = PoolHandle::global(shards);
         // The pool caps participation at its worker count + the caller, so
@@ -129,6 +138,7 @@ fn bench_client_shards() {
             if identical { "yes" } else { "NO (BUG)" }
         );
         assert!(identical, "sharded client step diverged from serial");
+        b.record_secs(&format!("client_step/shards{shards}"), ts);
     }
 }
 
@@ -137,7 +147,7 @@ fn bench_client_shards() {
 /// once per "tick". The persistent pool pays no spawn/join per dispatch;
 /// the scoped baseline pays it every time — exactly the cost profile of
 /// `client_step_sharded` inside the engine loop.
-fn bench_pool_vs_scoped() {
+fn bench_pool_vs_scoped(b: &mut Bench) {
     const ROWS: usize = 512;
     const D: usize = 200;
     const CHUNKS: usize = 4;
@@ -191,12 +201,16 @@ fn bench_pool_vs_scoped() {
         t_pool * 1e6 / TICKS as f64,
         t_scoped / t_pool.max(1e-9)
     );
+    b.record_secs("dispatch/scoped", t_scoped);
+    b.record_secs("dispatch/pool", t_pool);
 }
 
 fn main() {
+    let mut b = Bench::from_args("scaling");
     println!("available cores: {}", available_cores());
-    bench_monte_carlo();
-    bench_client_shards();
-    bench_pool_vs_scoped();
+    bench_monte_carlo(&mut b);
+    bench_client_shards(&mut b);
+    bench_pool_vs_scoped(&mut b);
+    b.finish();
     std::fs::remove_dir_all(std::env::temp_dir().join("pao_fed_scaling_bench")).ok();
 }

@@ -14,7 +14,7 @@ use pao_fed::theory::msd::steady_state_msd;
 use pao_fed::util::rng::Pcg32;
 
 fn main() {
-    let mut b = Bench::from_args();
+    let mut b = Bench::from_args("theory");
     let cfg = TheoryConfig {
         k: 2,
         d: 4,

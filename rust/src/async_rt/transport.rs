@@ -19,6 +19,7 @@ use crate::fl::pipeline;
 use crate::fl::selection::{Coords, SelectionSchedule};
 use crate::fl::server::Update;
 use crate::rff::RffSpace;
+use crate::simd;
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -102,13 +103,13 @@ impl ClientState {
         let mut learned = 0u32;
         if let Some((x, y)) = sample {
             if participating || algo.autonomous_updates {
+                // The same canonical kernels the engine's `step_row` uses
+                // (`crate::simd`): the 8-lane dot's fixed reduction order
+                // is what keeps the per-client deployment step bit-equal
+                // to the batched engine on every dispatch arm.
                 rff.features_into(x, &mut self.z);
-                let dot: f32 = self.w.iter().zip(&self.z).map(|(a, b)| a * b).sum();
-                let e = y - dot;
-                let step = algo.mu * e;
-                for (wj, zj) in self.w.iter_mut().zip(&self.z) {
-                    *wj += step * zj;
-                }
+                let e = y - simd::dot(&self.w, &self.z);
+                simd::axpy(&mut self.w, algo.mu * e, &self.z);
                 learned = 1;
             }
         }
@@ -234,20 +235,28 @@ impl Transport for ChannelTransport {
 struct WorkerLink {
     writer: BufWriter<TcpStream>,
     reader: Option<JoinHandle<()>>,
-    dirty: bool,
+    /// Downlinks of the current tick, coalesced into one `TickBatch`
+    /// frame when the server loop turns to collect acks.
+    pending: Vec<(usize, Option<(Coords, Vec<f32>)>)>,
 }
 
 /// The server side of the socket transport: accepts worker connections,
 /// hands each a contiguous client-id range plus its shard of the
 /// materialized stream, then routes tick messages by client id. Acks from
 /// all workers funnel through one channel (a reader thread per
-/// connection); tick frames are buffered per worker and flushed before the
-/// loop blocks on acks, so a tick costs one write syscall per worker.
+/// connection). Per-client downlinks are buffered and coalesced into a
+/// single `TickBatch` *frame* per worker per tick (flushed before the
+/// loop blocks on acks), and each worker answers with a single `AckBatch`
+/// frame — so a tick costs one frame and one write syscall each way per
+/// worker, independent of how many clients it hosts.
 pub struct TcpFleet {
     links: Vec<WorkerLink>,
     /// Client id -> hosting worker index.
     owner: Vec<usize>,
     acks: Receiver<Result<Ack>>,
+    /// Iteration of the downlinks currently buffered in `pending` (the
+    /// protocol keeps at most one iteration in flight).
+    pending_iter: usize,
 }
 
 impl TcpFleet {
@@ -303,9 +312,26 @@ impl TcpFleet {
                 .name(format!("pao-fed-worker-rx-{i}"))
                 .spawn(move || pump_acks(reader, tx))
                 .map_err(|e| Error::Config(format!("spawn failed: {e}")))?;
-            links.push(WorkerLink { writer, reader: Some(handle), dirty: false });
+            links.push(WorkerLink { writer, reader: Some(handle), pending: Vec::new() });
         }
-        Ok(TcpFleet { links, owner, acks: ack_rx })
+        Ok(TcpFleet { links, owner, acks: ack_rx, pending_iter: 0 })
+    }
+
+    /// Coalesce and send every buffered downlink: one `TickBatch` frame
+    /// and one flush per worker with pending ticks.
+    fn flush_pending(&mut self) -> Result<()> {
+        for link in &mut self.links {
+            if link.pending.is_empty() {
+                continue;
+            }
+            let batch = WireMsg::TickBatch {
+                iter: self.pending_iter,
+                ticks: std::mem::take(&mut link.pending),
+            };
+            wire::send_msg(&mut link.writer, &batch)?;
+            link.writer.flush()?;
+        }
+        Ok(())
     }
 }
 
@@ -321,6 +347,16 @@ fn pump_acks(mut reader: BufReader<TcpStream>, tx: Sender<Result<Ack>>) {
                 let ack = Ack { client, upload, learned };
                 if tx.send(Ok(ack)).is_err() {
                     return;
+                }
+            }
+            Ok(WireMsg::AckBatch { acks }) => {
+                // One frame per worker per tick; the server loop still
+                // consumes (and then sorts) individual acks.
+                for (client, upload, learned) in acks {
+                    let ack = Ack { client, upload, learned };
+                    if tx.send(Ok(ack)).is_err() {
+                        return;
+                    }
                 }
             }
             Ok(other) => {
@@ -344,19 +380,17 @@ impl Transport for TcpFleet {
         iter: usize,
         portion: Option<(Coords, Vec<f32>)>,
     ) -> Result<()> {
-        let link = &mut self.links[self.owner[client]];
-        wire::send_msg(&mut link.writer, &WireMsg::Tick { client, iter, portion })?;
-        link.dirty = true;
+        debug_assert!(
+            self.links.iter().all(|l| l.pending.is_empty()) || self.pending_iter == iter,
+            "at most one iteration may be in flight"
+        );
+        self.pending_iter = iter;
+        self.links[self.owner[client]].pending.push((client, portion));
         Ok(())
     }
 
     fn recv_ack(&mut self) -> Result<Ack> {
-        for link in &mut self.links {
-            if link.dirty {
-                link.writer.flush()?;
-                link.dirty = false;
-            }
-        }
+        self.flush_pending()?;
         match self.acks.recv() {
             Ok(res) => res,
             Err(_) => Err(Error::Protocol("worker connection lost".into())),
@@ -364,6 +398,9 @@ impl Transport for TcpFleet {
     }
 
     fn shutdown(&mut self) -> Result<()> {
+        // Defensive: nothing should be buffered at shutdown (every tick
+        // blocks on its acks), but never strand a downlink.
+        let _ = self.flush_pending();
         for link in &mut self.links {
             let _ = wire::send_msg(&mut link.writer, &WireMsg::Shutdown);
             let _ = link.writer.flush();
@@ -446,7 +483,6 @@ pub fn run_worker(addr: &str) -> Result<WorkerReport> {
     }
     let rff = &assignment.rff;
     let algo = &assignment.algo;
-    let l = rff.l;
     // The same construction the server (and the discrete engine) uses, so
     // both ends see one schedule realization.
     let schedule = SelectionSchedule::new(algo.schedule, rff.d, algo.m, assignment.env_seed);
@@ -458,34 +494,40 @@ pub fn run_worker(addr: &str) -> Result<WorkerReport> {
     loop {
         match wire::recv_msg(&mut reader)? {
             WireMsg::Tick { client, iter, portion } => {
-                if !(lo..hi).contains(&client) || iter >= n {
-                    return Err(Error::Protocol(format!(
-                        "tick for client {client} iter {iter} outside shard {lo}..{hi}"
-                    )));
-                }
-                let shard = &assignment.clients[client - lo];
-                let sample = if shard.present[iter] {
-                    Some((&shard.xs[iter * l..(iter + 1) * l], shard.ys[iter]))
-                } else {
-                    None
-                };
-                let ack =
-                    states[client - lo].handle_tick(rff, &schedule, algo, iter, portion, sample);
-                report.ticks += 1;
-                report.local_steps += ack.learned as u64;
-                let reply = WireMsg::Ack {
-                    client: ack.client,
-                    upload: ack.upload,
-                    learned: ack.learned,
-                };
-                wire::send_msg(&mut writer, &reply)?;
-                // The server downlinks in client-id order and blocks on
-                // acks only after a full tick, so one flush per tick (at
-                // our last hosted client) is enough — and keeps the
-                // syscall count per tick constant.
+                let (client, upload, learned) = serve_one(
+                    &assignment,
+                    &schedule,
+                    &mut states,
+                    &mut report,
+                    client,
+                    iter,
+                    portion,
+                )?;
+                wire::send_msg(&mut writer, &WireMsg::Ack { client, upload, learned })?;
+                // Single-tick frames carry no batch boundary; flush at our
+                // last hosted client (the server downlinks in id order),
+                // keeping the legacy per-client shape correct.
                 if client + 1 == hi {
                     writer.flush()?;
                 }
+            }
+            WireMsg::TickBatch { iter, ticks } => {
+                // The whole tick for this worker in one frame; answer
+                // with the whole tick's acks in one frame.
+                let mut acks = Vec::with_capacity(ticks.len());
+                for (client, portion) in ticks {
+                    acks.push(serve_one(
+                        &assignment,
+                        &schedule,
+                        &mut states,
+                        &mut report,
+                        client,
+                        iter,
+                        portion,
+                    )?);
+                }
+                wire::send_msg(&mut writer, &WireMsg::AckBatch { acks })?;
+                writer.flush()?;
             }
             WireMsg::Shutdown => break,
             other => {
@@ -496,6 +538,45 @@ pub fn run_worker(addr: &str) -> Result<WorkerReport> {
         }
     }
     Ok(report)
+}
+
+/// Process one client's downlink on a worker: validate it against the
+/// shard, run the shared [`ClientState::handle_tick`], and return the ack
+/// fields (used by both the legacy per-client `Tick` frames and the
+/// coalesced `TickBatch` frames).
+fn serve_one(
+    assignment: &WorkerAssignment,
+    schedule: &SelectionSchedule,
+    states: &mut [ClientState],
+    report: &mut WorkerReport,
+    client: usize,
+    iter: usize,
+    portion: Option<(Coords, Vec<f32>)>,
+) -> Result<(usize, Option<Update>, u32)> {
+    let (lo, hi, n) = (assignment.client_lo, assignment.client_hi, assignment.n_iters);
+    if !(lo..hi).contains(&client) || iter >= n {
+        return Err(Error::Protocol(format!(
+            "tick for client {client} iter {iter} outside shard {lo}..{hi}"
+        )));
+    }
+    let l = assignment.rff.l;
+    let shard = &assignment.clients[client - lo];
+    let sample = if shard.present[iter] {
+        Some((&shard.xs[iter * l..(iter + 1) * l], shard.ys[iter]))
+    } else {
+        None
+    };
+    let ack = states[client - lo].handle_tick(
+        &assignment.rff,
+        schedule,
+        &assignment.algo,
+        iter,
+        portion,
+        sample,
+    );
+    report.ticks += 1;
+    report.local_steps += ack.learned as u64;
+    Ok((ack.client, ack.upload, ack.learned))
 }
 
 #[cfg(test)]

@@ -53,6 +53,24 @@ pub enum WireMsg {
         /// Local-learning steps the client performed this tick (0 or 1).
         learned: u32,
     },
+    /// Server -> worker: every downlink of one federation iteration for
+    /// the clients this worker hosts, coalesced into a single frame
+    /// (items in ascending client-id order — the order the server
+    /// downlinks and the worker processes).
+    TickBatch {
+        /// Federation iteration shared by every item.
+        iter: usize,
+        /// Per addressed client: `(client, portion)` with `portion`
+        /// carrying `M_{k,n} w_n` when that client participates.
+        ticks: Vec<(usize, Option<(Coords, Vec<f32>)>)>,
+    },
+    /// Worker -> server: every acknowledgement for one [`WireMsg::TickBatch`],
+    /// coalesced into a single frame (same order as the batch).
+    AckBatch {
+        /// Per processed client: `(client, upload, learned)` — the same
+        /// fields as [`WireMsg::Ack`].
+        acks: Vec<(usize, Option<Update>, u32)>,
+    },
     /// Server -> worker: end of run.
     Shutdown,
 }
@@ -262,6 +280,30 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
             put_u32(&mut buf, *learned);
         }
         WireMsg::Shutdown => buf.push(4),
+        WireMsg::TickBatch { iter, ticks } => {
+            buf.push(5);
+            put_usize(&mut buf, *iter);
+            put_usize(&mut buf, ticks.len());
+            for (client, portion) in ticks {
+                put_usize(&mut buf, *client);
+                put_portion(&mut buf, portion);
+            }
+        }
+        WireMsg::AckBatch { acks } => {
+            buf.push(6);
+            put_usize(&mut buf, acks.len());
+            for (client, upload, learned) in acks {
+                put_usize(&mut buf, *client);
+                match upload {
+                    None => put_bool(&mut buf, false),
+                    Some(u) => {
+                        put_bool(&mut buf, true);
+                        put_update(&mut buf, u);
+                    }
+                }
+                put_u32(&mut buf, *learned);
+            }
+        }
     }
     buf
 }
@@ -488,6 +530,27 @@ pub fn decode(payload: &[u8]) -> Result<WireMsg> {
             learned: c.u32()?,
         },
         4 => WireMsg::Shutdown,
+        5 => {
+            let iter = c.usize()?;
+            // Each item carries at least a client id and a portion flag.
+            let n = c.len(9)?;
+            let mut ticks = Vec::with_capacity(n);
+            for _ in 0..n {
+                ticks.push((c.usize()?, c.portion()?));
+            }
+            WireMsg::TickBatch { iter, ticks }
+        }
+        6 => {
+            // Each item carries at least client id + flag + learned count.
+            let n = c.len(13)?;
+            let mut acks = Vec::with_capacity(n);
+            for _ in 0..n {
+                let client = c.usize()?;
+                let upload = if c.bool()? { Some(c.update()?) } else { None };
+                acks.push((client, upload, c.u32()?));
+            }
+            WireMsg::AckBatch { acks }
+        }
         t => return Err(Error::Protocol(format!("bad message tag {t}"))),
     };
     if c.pos != payload.len() {
@@ -623,6 +686,92 @@ mod tests {
             let x = [0.1f32, 0.2, -0.3, 0.4];
             assert_eq!(a.rff.features(&x), b.rff.features(&x));
         }
+    }
+
+    #[test]
+    fn roundtrip_batched_variants() {
+        let coords = Coords::List { idx: vec![1, 9, 30], d: 32 };
+        roundtrip(&WireMsg::TickBatch { iter: 7, ticks: vec![] });
+        roundtrip(&WireMsg::TickBatch {
+            iter: 41,
+            ticks: vec![
+                (3, None),
+                (4, Some((coords.clone(), vec![0.5, -1.5, 1e-20]))),
+                (5, Some((Coords::Full { d: 4 }, vec![1.0, 2.0, 3.0, 4.0]))),
+            ],
+        });
+        let update = Update {
+            client: 4,
+            sent_iter: 41,
+            coords,
+            values: vec![0.5, -0.0, f32::MIN_POSITIVE],
+        };
+        roundtrip(&WireMsg::AckBatch { acks: vec![] });
+        roundtrip(&WireMsg::AckBatch {
+            acks: vec![(3, None, 1), (4, Some(update), 0), (5, None, 0)],
+        });
+    }
+
+    /// The coalescing contract: one `TickBatch` frame carries what used
+    /// to take one `Tick` frame per client, with identical logical
+    /// content — so a K-client tick costs 1 downlink frame per worker
+    /// instead of K/worker, and symmetrically for acks.
+    #[test]
+    fn batched_tick_uses_one_frame_for_many_clients() {
+        let k = 12;
+        let per_client: Vec<(usize, Option<(Coords, Vec<f32>)>)> = (0..k)
+            .map(|c| {
+                let portion = (c % 3 != 0).then(|| {
+                    (Coords::Range { start: c, len: 4, d: 32 }, vec![c as f32 * 0.5; 4])
+                });
+                (c, portion)
+            })
+            .collect();
+
+        // Unbatched: one frame per client.
+        let mut unbatched = Vec::new();
+        for (client, portion) in &per_client {
+            send_msg(
+                &mut unbatched,
+                &WireMsg::Tick { client: *client, iter: 9, portion: portion.clone() },
+            )
+            .unwrap();
+        }
+        // Batched: one frame for the whole tick.
+        let mut batched = Vec::new();
+        send_msg(
+            &mut batched,
+            &WireMsg::TickBatch { iter: 9, ticks: per_client.clone() },
+        )
+        .unwrap();
+
+        let count_frames = |mut bytes: &[u8]| {
+            let mut n = 0;
+            while !bytes.is_empty() {
+                read_frame(&mut bytes).unwrap();
+                n += 1;
+            }
+            n
+        };
+        assert_eq!(count_frames(&unbatched), k);
+        assert_eq!(count_frames(&batched), 1);
+        assert!(batched.len() < unbatched.len(), "batching must also shrink bytes");
+
+        // Identical logical content: the batch decodes to the same
+        // (client, iter, portion) triples the individual frames carry.
+        let WireMsg::TickBatch { iter, ticks } = recv_msg(&mut batched.as_slice()).unwrap() else {
+            panic!("batch shape changed");
+        };
+        assert_eq!(iter, 9);
+        let mut rest: &[u8] = &unbatched;
+        for (client, portion) in ticks {
+            let WireMsg::Tick { client: c, iter: i, portion: p } = recv_msg(&mut rest).unwrap()
+            else {
+                panic!("tick shape changed");
+            };
+            assert_eq!((client, 9, &portion), (c, i, &p));
+        }
+        assert!(rest.is_empty(), "batch dropped ticks");
     }
 
     #[test]

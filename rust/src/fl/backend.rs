@@ -24,6 +24,7 @@
 
 use crate::error::Result;
 use crate::rff::RffSpace;
+use crate::simd;
 use crate::util::parallel::chunk_indices;
 use crate::util::pool::PoolHandle;
 use std::sync::Mutex;
@@ -100,31 +101,19 @@ fn step_row(
     gate: f32,
     mu: f32,
 ) -> f32 {
-    let d = w_row.len();
     // Masked receive: w_eff = M w_global + (I - M) w_local.
-    for j in 0..d {
-        let m = mask[j];
-        if m != 0.0 {
-            w_row[j] = m * w_global[j] + (1.0 - m) * w_row[j];
-        }
-    }
+    simd::masked_blend(w_row, w_global, mask);
     if gate == 0.0 {
         return 0.0;
     }
-    // RFF featurization + a-priori error + rank-1 update.
-    // (A 4-way-accumulator dot was tried and reverted: no measurable
-    // gain, and it breaks bit-exact equality with the per-client
-    // deployment runtime - see EXPERIMENTS.md §Perf.)
+    // RFF featurization + a-priori error + rank-1 update, all on the
+    // canonical kernel layer (`crate::simd`): the 8-lane dot's reduction
+    // order is part of the contract, so the deployment runtime's
+    // per-client step (`async_rt::transport::ClientState`) lands on the
+    // same bits whichever ISA path dispatch picks.
     rff.features_into(x, z);
-    let mut dot = 0.0f32;
-    for j in 0..d {
-        dot += w_row[j] * z[j];
-    }
-    let e = y - dot;
-    let step = mu * e;
-    for j in 0..d {
-        w_row[j] += step * z[j];
-    }
+    let e = y - simd::dot(w_row, z);
+    simd::axpy(w_row, mu * e, z);
     e
 }
 
@@ -395,6 +384,45 @@ mod tests {
         assert_eq!(&w[0..8], &w_before[0..8]);
         assert_eq!(&w[16..24], &w_before[16..24]);
         assert_ne!(&w[8..16], &w_before[8..16]);
+    }
+
+    #[test]
+    fn empty_active_set_is_a_no_op() {
+        // An all-quiet tick (no receives, no data) must leave every model
+        // untouched and report zero errors, on both entry points.
+        let (mut be, mut w, wg, mask, x, y, gate) = setup(4, 8, 2);
+        let w_before = w.clone();
+        let errs = be
+            .client_step(StepArgs {
+                w_locals: &mut w,
+                w_global: &wg,
+                recv_mask: &mask,
+                x: &x,
+                y: &y,
+                gate: &gate,
+                mu: 0.4,
+                active: Some(&[]),
+            })
+            .unwrap();
+        assert_eq!(w, w_before);
+        assert!(errs.iter().all(|&e| e == 0.0));
+        let errs2 = be
+            .client_step_sharded(
+                StepArgs {
+                    w_locals: &mut w,
+                    w_global: &wg,
+                    recv_mask: &mask,
+                    x: &x,
+                    y: &y,
+                    gate: &gate,
+                    mu: 0.4,
+                    active: Some(&[]),
+                },
+                &PoolHandle::global(4),
+            )
+            .unwrap();
+        assert_eq!(w, w_before);
+        assert_eq!(errs, errs2);
     }
 
     #[test]

@@ -176,7 +176,10 @@ impl TickState {
 
 /// Stage 8 with the eval-snapshot rule. At most one evaluation is in
 /// flight; it reads a snapshot of `server.w` cloned at the tick boundary,
-/// so overlapping it with later ticks cannot change the curve.
+/// so overlapping it with later ticks cannot change the curve. The MSE
+/// sample itself runs on the canonical kernel layer (`metrics::mse_test`
+/// -> `crate::simd::mse_batch`), so pipelined, inline and deployment
+/// evaluations agree bit for bit on every dispatch arm.
 struct EvalStage<'e> {
     env: &'e Environment,
     /// Shared copies of the featurized test set for pool-dispatched

@@ -38,6 +38,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod rff;
 pub mod runtime;
+pub mod simd;
 pub mod theory;
 pub mod util;
 

@@ -3,16 +3,14 @@
 
 /// Test-set mean squared error of a model `w [D]` against a featurized test
 /// set `z_test [T, D]` (row-major), `y_test [T]` — the inner term of eq. 40.
+///
+/// Per-row predictions use the canonical 8-lane dot of the kernel layer
+/// ([`crate::simd::mse_batch`]), so the curve is bit-identical across the
+/// scalar/AVX2/SSE2/NEON dispatch arms — and therefore across the serial
+/// engine, the pipelined eval stage and the deployment runtimes.
 pub fn mse_test(w: &[f32], z_test: &[f32], y_test: &[f32]) -> f64 {
-    let d = w.len();
-    assert_eq!(z_test.len(), y_test.len() * d);
-    let mut acc = 0.0f64;
-    for (row, &y) in z_test.chunks(d).zip(y_test) {
-        let pred: f32 = row.iter().zip(w).map(|(a, b)| a * b).sum();
-        let r = (y - pred) as f64;
-        acc += r * r;
-    }
-    acc / y_test.len() as f64
+    assert_eq!(z_test.len(), y_test.len() * w.len());
+    crate::simd::mse_batch(w, z_test, y_test)
 }
 
 /// Convert a linear MSE to decibels: 10 log10(mse).

@@ -8,47 +8,22 @@
 //! the AOT-compiled XLA executables as inputs, keeping the rust and python
 //! sides numerically identical.
 
+use crate::simd;
 use crate::util::rng::Pcg32;
 
-/// Fast cosine with Cody-Waite range reduction: |error| < 2e-6 for
+/// Fast cosine with Cody-Waite range reduction: |error| < 4e-6 for
 /// |x| < 60 (the range RFF phases occupy) and < 1e-4 out to |x| ~ 2e3
 /// (f32 reduction error grows ~3e-8 |x| beyond that).
 /// The parity budget between the native and XLA backends is 1e-4, so the
 /// approximation is invisible to every correctness check.
 ///
-/// Fully branchless so the compiler auto-vectorizes the featurization
-/// loop: fold into quarter turns, evaluate cos and sin polynomials on
-/// [-pi/4, pi/4], select by quadrant with arithmetic masks.
+/// This is the canonical kernel-layer cosine ([`crate::simd::fast_cos`]):
+/// a branchless straight-line float program whose AVX2/SSE2/NEON
+/// transliterations are bit-identical by construction, so featurization
+/// produces the same bits on every dispatch arm and every machine.
 #[inline]
 pub fn fast_cos(x: f32) -> f32 {
-    const FRAC_2_PI: f32 = std::f32::consts::FRAC_2_PI;
-    // pi/2 split for two-step Cody-Waite reduction.
-    const P1: f32 = 1.570_796_4;
-    const P2: f32 = -4.371_139e-8;
-    let q = (x * FRAC_2_PI).round();
-    // Saturating cast (`as`, defined for every float unlike
-    // `to_int_unchecked`, which is UB once |x| > ~3.4e9): only the low two
-    // bits select the quadrant, and beyond f32's exact-integer range the
-    // reduction has no accuracy left to lose. Still a single vectorizable
-    // convert instruction per lane.
-    let qi = (q as i32) & 3;
-    // Clamp the reduced argument near its nominal interval [-pi/4, pi/4]:
-    // for phases past ~2e9 the Cody-Waite subtraction can leave |r| huge
-    // (up to inf at f32::MAX) and the polynomials would overflow. The bound
-    // sits above pi/4 + the worst in-range reduction rounding, so ordinary
-    // values are untouched; degenerate tails pin into [-1, 1]-ish. Two
-    // branchless min/max lanes, auto-vectorization intact.
-    let r = ((x - q * P1) - q * P2).clamp(-0.79, 0.79);
-    let r2 = r * r;
-    // cos(r) and sin(r) on [-pi/4, pi/4] (minimax-adjusted Taylor).
-    let c = 1.0 + r2 * (-0.499_999_997
-        + r2 * (0.041_666_61 + r2 * (-0.001_388_78 + r2 * 2.439_04e-5)));
-    let s = r * (1.0 + r2 * (-0.166_666_55
-        + r2 * (0.008_333_22 + r2 * (-1.951_78e-4 + r2 * 2.55e-6))));
-    // Quadrant select: 0 -> c, 1 -> -s, 2 -> -c, 3 -> s (branchless).
-    let swap = (qi & 1) as f32; // use s instead of c
-    let neg = 1.0 - (((qi + 1) >> 1) & 1) as f32 * 2.0; // -1 for q in {1,2}
-    neg * (c * (1.0 - swap) + s * swap)
+    simd::fast_cos(x)
 }
 
 /// One realization of the RFF projection.
@@ -115,6 +90,13 @@ impl RffSpace {
         }
     }
 
+    /// The normalization factor `sqrt(2/D)` applied after the cosine
+    /// (exposed so benches/tests can drive the scalar reference kernels
+    /// with the exact factor this space uses, instead of re-deriving it).
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+
     /// Featurize one input `x [L]` into `z [D]`.
     pub fn features(&self, x: &[f32]) -> Vec<f32> {
         let mut z = vec![0.0f32; self.d];
@@ -130,30 +112,25 @@ impl RffSpace {
         if self.l == 4 {
             // Specialized single-pass accumulation for the paper's L = 4:
             // one streaming read of the four Omega rows, one write of z,
-            // cos fused in - instead of 5 read-modify-write passes.
-            let (x0, x1, x2, x3) = (x[0], x[1], x[2], x[3]);
+            // cos fused in - instead of 5 read-modify-write passes. The
+            // kernel layer vectorizes the whole fused pass.
             let (o0, rest) = self.omega.split_at(d);
             let (o1, rest) = rest.split_at(d);
             let (o2, o3) = rest.split_at(d);
-            for j in 0..d {
-                let phase = self.b[j] + x0 * o0[j] + x1 * o1[j] + x2 * o2[j] + x3 * o3[j];
-                z[j] = self.scale * fast_cos(phase);
-            }
+            simd::featurize4(&self.b, o0, o1, o2, o3, [x[0], x[1], x[2], x[3]], self.scale, z);
             return;
         }
         z.copy_from_slice(&self.b);
         for (i, &xi) in x.iter().enumerate() {
+            // Skipping zero inputs is not just an optimization: adding
+            // `0.0 * o[j]` would flip a `-0.0` phase to `+0.0`, so the
+            // skip is part of the canonical semantics.
             if xi == 0.0 {
                 continue;
             }
-            let orow = &self.omega[i * d..(i + 1) * d];
-            for (zj, &oj) in z.iter_mut().zip(orow) {
-                *zj += xi * oj;
-            }
+            simd::axpy(z, xi, &self.omega[i * d..(i + 1) * d]);
         }
-        for zj in z.iter_mut() {
-            *zj = self.scale * fast_cos(*zj);
-        }
+        simd::cos_scale(z, self.scale);
     }
 
     /// Featurize a batch `xs [T, L]` row-major into `[T, D]` row-major.
@@ -195,11 +172,12 @@ mod tests {
 
     #[test]
     fn fast_cos_extreme_phase_is_finite_and_bounded() {
-        // Regression: the quadrant fold used `to_int_unchecked::<i32>`,
+        // Regression: the quadrant fold once used `to_int_unchecked::<i32>`,
         // which is UB once round(x * 2/pi) leaves i32 range (|x| > ~3.4e9)
         // — reachable through `features_into` on unnormalized real-data
-        // inputs. The safe saturating cast plus the reduced-argument clamp
-        // must yield a finite, in-range value for any input.
+        // inputs. The canonical kernel's floor-based quadrant arithmetic
+        // plus the reduced-argument clamp must yield a finite, in-range
+        // value for any finite input.
         let extremes = [1e10f32, -1e10, 4e9, -4e9, 1e20, f32::MAX, f32::MIN, f32::MAX / 2.0];
         for x in extremes {
             let v = fast_cos(x);

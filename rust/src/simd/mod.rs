@@ -1,0 +1,272 @@
+//! The SIMD kernel layer: fused per-tick hot-path kernels under a
+//! **canonical fixed-width lane-reduction contract**, implemented three
+//! times — portable scalar (the reference), x86_64 AVX2/SSE2, aarch64
+//! NEON — with runtime dispatch, so every path produces **bit-identical**
+//! results by construction.
+//!
+//! # The canonical contract
+//!
+//! Floating-point addition is not associative, so "vectorize the dot
+//! product" is normally a behavioral change — the first 4-way-accumulator
+//! attempt in the client step was reverted for exactly that reason: it
+//! broke bit-exact equality between the batched engine and the per-client
+//! deployment runtime. This layer resolves the tension by making the lane
+//! structure *part of the semantics* instead of an optimization detail:
+//!
+//! * **Reductions** ([`dot`], and [`mse_batch`] through it) are defined
+//!   with [`LANES`] = 8 independent accumulators over full 8-element
+//!   blocks in ascending order, a fixed reduction tree
+//!   `((l0+l4) + (l2+l6)) + ((l1+l5) + (l3+l7))`, and a sequential scalar
+//!   tail — on *every* implementation, including the scalar reference.
+//! * **Elementwise kernels** ([`fast_cos`], [`featurize4`], [`cos_scale`],
+//!   [`axpy`], [`masked_blend`]) are straight-line float programs built
+//!   only from operations with exactly-specified IEEE-754 results that
+//!   every ISA implements identically (add/sub/mul, min/max,
+//!   round-ties-even, floor, multiplication by powers of two). No FMA —
+//!   fused rounding differs from mul-then-add. No `f32 as i32` — integer
+//!   conversion saturation differs across ISAs; quadrant extraction in
+//!   [`fast_cos`] uses exact floor-based modular arithmetic instead.
+//!
+//! The contract is defined for finite inputs (data streams and models are
+//! finite; NaN propagation is ISA-specific only through `min`/`max`).
+//!
+//! # Dispatch
+//!
+//! [`active_level`] picks the widest available implementation once per
+//! process: AVX2 when detected at runtime, the SSE2 baseline otherwise on
+//! x86_64, NEON on aarch64, scalar everywhere else. Setting the
+//! environment variable `PAO_FED_FORCE_SCALAR` (to anything but `0` or
+//! the empty string) pins dispatch to the scalar reference — CI runs the
+//! whole test suite once per dispatch arm this way, and the property
+//! tests in `rust/tests/simd_kernels.rs` additionally compare the
+//! dispatched kernels against [`scalar`] directly on one machine.
+//!
+//! Because every path is bit-identical, this layer composes silently with
+//! the other determinism contracts (the eval-snapshot rule, sorted-ack
+//! aggregation, pool sharding): curves from the serial engine, the
+//! sharded engine, the thread deployment and the multi-process deployment
+//! stay equal bit for bit whichever machine each of them runs on.
+
+pub mod scalar;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+pub use scalar::LANES;
+
+use std::sync::OnceLock;
+
+/// Which kernel implementation dispatch selected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Portable scalar reference (also the forced-`PAO_FED_FORCE_SCALAR`
+    /// arm and the fallback for non-x86_64/aarch64 targets).
+    Scalar,
+    /// x86_64 SSE2 baseline (always available on x86_64).
+    Sse2,
+    /// x86_64 AVX2 (runtime-detected).
+    Avx2,
+    /// aarch64 NEON (baseline on aarch64).
+    Neon,
+}
+
+/// Decide the dispatch level. Split from [`active_level`]'s cache so the
+/// force-scalar rule is unit-testable.
+fn detect(force_scalar: bool) -> SimdLevel {
+    if force_scalar {
+        SimdLevel::Scalar
+    } else {
+        pick_widest()
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn pick_widest() -> SimdLevel {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        SimdLevel::Avx2
+    } else {
+        // SSE2 is part of the x86_64 baseline; no detection needed.
+        SimdLevel::Sse2
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn pick_widest() -> SimdLevel {
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        SimdLevel::Neon
+    } else {
+        SimdLevel::Scalar
+    }
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn pick_widest() -> SimdLevel {
+    SimdLevel::Scalar
+}
+
+/// The dispatch level in effect for this process (detected once; honors
+/// `PAO_FED_FORCE_SCALAR`).
+pub fn active_level() -> SimdLevel {
+    static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
+    *LEVEL.get_or_init(|| {
+        let force = std::env::var_os("PAO_FED_FORCE_SCALAR")
+            .is_some_and(|v| !v.is_empty() && v != "0");
+        detect(force)
+    })
+}
+
+/// Canonical fast cosine (see [`scalar::fast_cos`]). Single-element
+/// calls always run the scalar program — the vector backends inline the
+/// same transliterated program eight (or four) lanes at a time.
+#[inline]
+pub fn fast_cos(x: f32) -> f32 {
+    scalar::fast_cos(x)
+}
+
+/// Fused paper-scale featurization (L = 4): see [`scalar::featurize4`].
+#[inline]
+pub fn featurize4(
+    b: &[f32],
+    o0: &[f32],
+    o1: &[f32],
+    o2: &[f32],
+    o3: &[f32],
+    x: [f32; 4],
+    scale: f32,
+    z: &mut [f32],
+) {
+    let d = z.len();
+    // Unconditional: the vector arms read these slices through raw
+    // pointers at `z`-derived offsets, so a length mismatch from safe
+    // code must panic here, not read out of bounds in release builds.
+    assert!(b.len() == d && o0.len() == d && o1.len() == d && o2.len() == d && o3.len() == d);
+    match active_level() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::featurize4_avx2(b, o0, o1, o2, o3, x, scale, z) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 => unsafe { x86::featurize4_sse2(b, o0, o1, o2, o3, x, scale, z) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { neon::featurize4_neon(b, o0, o1, o2, o3, x, scale, z) },
+        _ => scalar::featurize4(b, o0, o1, o2, o3, x, scale, z),
+    }
+}
+
+/// In-place fused cosine + normalization: see [`scalar::cos_scale`].
+#[inline]
+pub fn cos_scale(z: &mut [f32], scale: f32) {
+    match active_level() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::cos_scale_avx2(z, scale) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 => unsafe { x86::cos_scale_sse2(z, scale) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { neon::cos_scale_neon(z, scale) },
+        _ => scalar::cos_scale(z, scale),
+    }
+}
+
+/// Rank-1 update `w += s * z`: see [`scalar::axpy`].
+#[inline]
+pub fn axpy(w: &mut [f32], s: f32, z: &[f32]) {
+    // Unconditional (raw-pointer loads of `z` at `w`-derived offsets).
+    assert_eq!(w.len(), z.len());
+    match active_level() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::axpy_avx2(w, s, z) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 => unsafe { x86::axpy_sse2(w, s, z) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { neon::axpy_neon(w, s, z) },
+        _ => scalar::axpy(w, s, z),
+    }
+}
+
+/// Masked receive blend `w = M w_g + (I - M) w`: see
+/// [`scalar::masked_blend`].
+#[inline]
+pub fn masked_blend(w: &mut [f32], w_global: &[f32], mask: &[f32]) {
+    // Unconditional (raw-pointer loads at `w`-derived offsets).
+    assert_eq!(w.len(), w_global.len());
+    assert_eq!(w.len(), mask.len());
+    match active_level() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::masked_blend_avx2(w, w_global, mask) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 => unsafe { x86::masked_blend_sse2(w, w_global, mask) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { neon::masked_blend_neon(w, w_global, mask) },
+        _ => scalar::masked_blend(w, w_global, mask),
+    }
+}
+
+/// Canonical 8-lane dot product: see [`scalar::dot`].
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    // Unconditional (raw-pointer loads of `b` at `a`-derived offsets).
+    assert_eq!(a.len(), b.len());
+    match active_level() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::dot_avx2(a, b) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 => unsafe { x86::dot_sse2(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { neon::dot_neon(a, b) },
+        _ => scalar::dot(a, b),
+    }
+}
+
+/// Batched test MSE over featurized rows: see [`scalar::mse_batch`].
+#[inline]
+pub fn mse_batch(w: &[f32], z_rows: &[f32], y: &[f32]) -> f64 {
+    // Unconditional: guarantees every row handed to the arch dot has
+    // exactly `w.len()` elements.
+    assert_eq!(z_rows.len(), y.len() * w.len());
+    match active_level() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::mse_batch_avx2(w, z_rows, y) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 => unsafe { x86::mse_batch_sse2(w, z_rows, y) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { neon::mse_batch_neon(w, z_rows, y) },
+        _ => scalar::mse_batch(w, z_rows, y),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn force_scalar_pins_dispatch() {
+        assert_eq!(detect(true), SimdLevel::Scalar);
+        // Without forcing, x86_64/aarch64 hosts must pick a vector level.
+        #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+        assert_ne!(detect(false), SimdLevel::Scalar);
+    }
+
+    #[test]
+    fn dispatched_dot_matches_scalar_smoke() {
+        // The heavy cross-shape property tests live in
+        // tests/simd_kernels.rs; this is the in-crate smoke check.
+        let a: Vec<f32> = (0..37).map(|i| (i as f32 * 0.37).sin()).collect();
+        let b: Vec<f32> = (0..37).map(|i| (i as f32 * 0.11).cos()).collect();
+        assert_eq!(dot(&a, &b).to_bits(), scalar::dot(&a, &b).to_bits());
+    }
+
+    #[test]
+    fn canonical_fast_cos_is_accurate_and_bounded() {
+        let mut worst = 0.0f32;
+        let mut x = -60.0f32;
+        while x < 60.0 {
+            worst = worst.max((fast_cos(x) - (x as f64).cos() as f32).abs());
+            x += 0.001;
+        }
+        assert!(worst < 4e-6, "max |fast_cos - cos| = {worst}");
+        for x in [1e10f32, -1e10, f32::MAX, f32::MIN] {
+            let v = fast_cos(x);
+            assert!(v.is_finite() && v.abs() <= 1.01, "fast_cos({x}) = {v}");
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! aarch64 NEON backend: 4-lane registers, with the canonical 8-lane
+//! reduction emulated by a register pair exactly like the SSE2 path.
+//!
+//! The same transliteration rules as [`super::x86`] apply: multiplies and
+//! adds stay separate (explicit intrinsics are never FMA-contracted),
+//! `vrndnq_f32`/`vrndmq_f32` are the exact ties-to-even round and floor
+//! the scalar reference uses, and the max-then-min clamp order matches.
+//! NEON's `vmaxq`/`vminq` propagate NaN where the scalar `f32::max`
+//! returns the non-NaN operand — unreachable for the finite inputs the
+//! contract covers (see [`crate::simd`]).
+
+use super::scalar::{self, C2, C4, C6, C8, FRAC_2_PI, P1, P2, R_CLAMP, S2, S4, S6, S8};
+use core::arch::aarch64::*;
+
+/// Vector transliteration of [`scalar::fast_cos`] (4 lanes).
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn fast_cos_f32x4(x: float32x4_t) -> float32x4_t {
+    let one = vdupq_n_f32(1.0);
+    let two = vdupq_n_f32(2.0);
+    let four = vdupq_n_f32(4.0);
+    let half = vdupq_n_f32(0.5);
+    let quarter = vdupq_n_f32(0.25);
+    let q = vrndnq_f32(vmulq_f32(x, vdupq_n_f32(FRAC_2_PI)));
+    let r = vsubq_f32(vsubq_f32(x, vmulq_f32(q, vdupq_n_f32(P1))), vmulq_f32(q, vdupq_n_f32(P2)));
+    let r = vminq_f32(vmaxq_f32(r, vdupq_n_f32(-R_CLAMP)), vdupq_n_f32(R_CLAMP));
+    let qq = vsubq_f32(q, vmulq_f32(four, vrndmq_f32(vmulq_f32(q, quarter))));
+    let swap = vsubq_f32(qq, vmulq_f32(two, vrndmq_f32(vmulq_f32(qq, half))));
+    let qn = vaddq_f32(qq, one);
+    let negbit = vsubq_f32(
+        vrndmq_f32(vmulq_f32(qn, half)),
+        vmulq_f32(two, vrndmq_f32(vmulq_f32(qn, quarter))),
+    );
+    let neg = vsubq_f32(one, vmulq_f32(two, negbit));
+    let r2 = vmulq_f32(r, r);
+    let t3 = vaddq_f32(vdupq_n_f32(C6), vmulq_f32(r2, vdupq_n_f32(C8)));
+    let t2 = vaddq_f32(vdupq_n_f32(C4), vmulq_f32(r2, t3));
+    let t1 = vaddq_f32(vdupq_n_f32(C2), vmulq_f32(r2, t2));
+    let c = vaddq_f32(one, vmulq_f32(r2, t1));
+    let u3 = vaddq_f32(vdupq_n_f32(S6), vmulq_f32(r2, vdupq_n_f32(S8)));
+    let u2 = vaddq_f32(vdupq_n_f32(S4), vmulq_f32(r2, u3));
+    let u1 = vaddq_f32(vdupq_n_f32(S2), vmulq_f32(r2, u2));
+    let s = vmulq_f32(r, vaddq_f32(one, vmulq_f32(r2, u1)));
+    let sel = vaddq_f32(vmulq_f32(c, vsubq_f32(one, swap)), vmulq_f32(s, swap));
+    vmulq_f32(neg, sel)
+}
+
+/// NEON [`scalar::featurize4`].
+#[target_feature(enable = "neon")]
+pub unsafe fn featurize4_neon(
+    b: &[f32],
+    o0: &[f32],
+    o1: &[f32],
+    o2: &[f32],
+    o3: &[f32],
+    x: [f32; 4],
+    scale: f32,
+    z: &mut [f32],
+) {
+    let d = z.len();
+    let blocks = d / 4;
+    let (x0, x1) = (vdupq_n_f32(x[0]), vdupq_n_f32(x[1]));
+    let (x2, x3) = (vdupq_n_f32(x[2]), vdupq_n_f32(x[3]));
+    let vs = vdupq_n_f32(scale);
+    for i in 0..blocks {
+        let off = i * 4;
+        let mut p = vld1q_f32(b.as_ptr().add(off));
+        p = vaddq_f32(p, vmulq_f32(x0, vld1q_f32(o0.as_ptr().add(off))));
+        p = vaddq_f32(p, vmulq_f32(x1, vld1q_f32(o1.as_ptr().add(off))));
+        p = vaddq_f32(p, vmulq_f32(x2, vld1q_f32(o2.as_ptr().add(off))));
+        p = vaddq_f32(p, vmulq_f32(x3, vld1q_f32(o3.as_ptr().add(off))));
+        vst1q_f32(z.as_mut_ptr().add(off), vmulq_f32(vs, fast_cos_f32x4(p)));
+    }
+    for j in blocks * 4..d {
+        let phase = b[j] + x[0] * o0[j] + x[1] * o1[j] + x[2] * o2[j] + x[3] * o3[j];
+        z[j] = scale * scalar::fast_cos(phase);
+    }
+}
+
+/// NEON [`scalar::cos_scale`].
+#[target_feature(enable = "neon")]
+pub unsafe fn cos_scale_neon(z: &mut [f32], scale: f32) {
+    let d = z.len();
+    let blocks = d / 4;
+    let vs = vdupq_n_f32(scale);
+    for i in 0..blocks {
+        let p = z.as_mut_ptr().add(i * 4);
+        vst1q_f32(p, vmulq_f32(vs, fast_cos_f32x4(vld1q_f32(p))));
+    }
+    for zj in z[blocks * 4..].iter_mut() {
+        *zj = scale * scalar::fast_cos(*zj);
+    }
+}
+
+/// NEON [`scalar::axpy`].
+#[target_feature(enable = "neon")]
+pub unsafe fn axpy_neon(w: &mut [f32], s: f32, z: &[f32]) {
+    let n = w.len();
+    let blocks = n / 4;
+    let vs = vdupq_n_f32(s);
+    for i in 0..blocks {
+        let pw = w.as_mut_ptr().add(i * 4);
+        let vz = vld1q_f32(z.as_ptr().add(i * 4));
+        vst1q_f32(pw, vaddq_f32(vld1q_f32(pw), vmulq_f32(vs, vz)));
+    }
+    for j in blocks * 4..n {
+        w[j] += s * z[j];
+    }
+}
+
+/// NEON [`scalar::masked_blend`].
+#[target_feature(enable = "neon")]
+pub unsafe fn masked_blend_neon(w: &mut [f32], w_global: &[f32], mask: &[f32]) {
+    let n = w.len();
+    let blocks = n / 4;
+    let one = vdupq_n_f32(1.0);
+    let zero = vdupq_n_f32(0.0);
+    for i in 0..blocks {
+        let pw = w.as_mut_ptr().add(i * 4);
+        let wv = vld1q_f32(pw);
+        let gv = vld1q_f32(w_global.as_ptr().add(i * 4));
+        let mv = vld1q_f32(mask.as_ptr().add(i * 4));
+        // not(m == 0) matches the scalar `m != 0.0` (true for NaN).
+        let live = vmvnq_u32(vceqq_f32(mv, zero));
+        let blended = vaddq_f32(vmulq_f32(mv, gv), vmulq_f32(vsubq_f32(one, mv), wv));
+        vst1q_f32(pw, vbslq_f32(live, blended, wv));
+    }
+    for j in blocks * 4..n {
+        let m = mask[j];
+        if m != 0.0 {
+            w[j] = m * w_global[j] + (1.0 - m) * w[j];
+        }
+    }
+}
+
+/// NEON [`scalar::dot`]: lanes 0..4 in `acc_lo`, lanes 4..8 in `acc_hi`;
+/// `acc_lo + acc_hi` is the canonical first fold, then
+/// `(p0+p2) + (p1+p3)` via the low/high halves — the same tree as the
+/// scalar reference and both x86 paths.
+#[target_feature(enable = "neon")]
+pub unsafe fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let blocks = n / 8;
+    let mut acc_lo = vdupq_n_f32(0.0);
+    let mut acc_hi = vdupq_n_f32(0.0);
+    for i in 0..blocks {
+        let pa = a.as_ptr().add(i * 8);
+        let pb = b.as_ptr().add(i * 8);
+        acc_lo = vaddq_f32(acc_lo, vmulq_f32(vld1q_f32(pa), vld1q_f32(pb)));
+        acc_hi = vaddq_f32(acc_hi, vmulq_f32(vld1q_f32(pa.add(4)), vld1q_f32(pb.add(4))));
+    }
+    let v4 = vaddq_f32(acc_lo, acc_hi);
+    let v2 = vadd_f32(vget_low_f32(v4), vget_high_f32(v4));
+    let mut sum = vget_lane_f32::<0>(v2) + vget_lane_f32::<1>(v2);
+    for j in blocks * 8..n {
+        sum += a[j] * b[j];
+    }
+    sum
+}
+
+/// NEON [`scalar::mse_batch`].
+#[target_feature(enable = "neon")]
+pub unsafe fn mse_batch_neon(w: &[f32], z_rows: &[f32], y: &[f32]) -> f64 {
+    let d = w.len();
+    let mut acc = 0.0f64;
+    for (row, &yt) in z_rows.chunks(d).zip(y) {
+        let r = (yt - dot_neon(row, w)) as f64;
+        acc += r * r;
+    }
+    acc / y.len() as f64
+}

@@ -1,0 +1,184 @@
+//! Portable scalar implementations of every kernel — the **canonical
+//! reference**. The numeric program written here *is* the contract: the
+//! `x86`/`neon` backends reproduce these exact IEEE-754 single-precision
+//! operations in the exact same order, so their results are bit-identical
+//! by construction (see the module docs in [`crate::simd`]).
+//!
+//! Two rules keep that possible:
+//!
+//! * **Elementwise kernels** ([`fast_cos`], [`featurize4`], [`cos_scale`],
+//!   [`axpy`], [`masked_blend`]) are written as one straight-line float
+//!   program per element, using only operations with exact vector
+//!   equivalents on every ISA: add/sub/mul, min/max, floor,
+//!   round-ties-even, and multiplication by powers of two (always exact).
+//!   No integer conversions — `f32 as i32` saturates differently from
+//!   every SIMD convert instruction at the extremes, which is exactly the
+//!   kind of divergence that sank the earlier 4-way-accumulator attempt.
+//! * **Reductions** ([`dot`], and [`mse_batch`] through it) fix the lane
+//!   structure explicitly: [`LANES`] independent accumulators over full
+//!   blocks in ascending order, one specified reduction tree, then a
+//!   scalar tail in ascending index order.
+
+/// Lane count of the canonical reduction contract. Chosen to match one
+/// AVX2 register (8 × f32); SSE2 and NEON emulate it with register pairs.
+pub const LANES: usize = 8;
+
+/// `2/pi`, the quarter-turn fold factor.
+pub(super) const FRAC_2_PI: f32 = std::f32::consts::FRAC_2_PI;
+/// High part of the two-step Cody-Waite `pi/2` split.
+pub(super) const P1: f32 = 1.570_796_4;
+/// Low part of the two-step Cody-Waite `pi/2` split.
+pub(super) const P2: f32 = -4.371_139e-8;
+/// Reduced-argument guard rail: sits above `pi/4` plus the worst in-range
+/// reduction rounding, so ordinary values are untouched while degenerate
+/// tails (phases past ~2e9, where f32 reduction has no accuracy left)
+/// stay bounded instead of overflowing the polynomials.
+pub(super) const R_CLAMP: f32 = 0.79;
+
+/// cos-polynomial coefficients on `[-pi/4, pi/4]` (minimax-adjusted
+/// Taylor), highest degree last.
+pub(super) const C2: f32 = -0.499_999_997;
+pub(super) const C4: f32 = 0.041_666_61;
+pub(super) const C6: f32 = -0.001_388_78;
+pub(super) const C8: f32 = 2.439_04e-5;
+/// sin-polynomial coefficients on `[-pi/4, pi/4]`.
+pub(super) const S2: f32 = -0.166_666_55;
+pub(super) const S4: f32 = 0.008_333_22;
+pub(super) const S6: f32 = -1.951_78e-4;
+pub(super) const S8: f32 = 2.55e-6;
+
+/// Fast cosine with Cody-Waite range reduction: |error| < 4e-6 for
+/// |x| < 60 (the range RFF phases occupy) and < 1e-4 out to |x| ~ 2e3
+/// (f32 reduction error grows ~3e-8 |x| beyond that). The parity budget
+/// between the native and XLA backends is 1e-4, so the approximation is
+/// invisible to every correctness check.
+///
+/// The whole program is branchless straight-line float arithmetic —
+/// including the quadrant selection, which is derived with exact
+/// `floor`-based modular arithmetic instead of an `as i32` cast (integer
+/// conversions saturate differently across ISAs; `floor`/`round`/mul-by-
+/// power-of-two are exact and identical everywhere). Defined for finite
+/// inputs; NaN propagates.
+#[inline]
+pub fn fast_cos(x: f32) -> f32 {
+    // Quarter-turn fold. Ties-to-even is the one rounding mode every ISA
+    // implements identically (roundps / frintn / round_ties_even).
+    let q = (x * FRAC_2_PI).round_ties_even();
+    // Two-step Cody-Waite reduction, then the guard-rail clamp. The
+    // max-then-min order is part of the contract (it fixes the result for
+    // ±inf intermediates from |x| near f32::MAX).
+    let r = ((x - q * P1) - q * P2).max(-R_CLAMP).min(R_CLAMP);
+    // Quadrant bits via exact float arithmetic: qq = q mod 4 in {0,1,2,3},
+    // computed exactly for every finite q (f32 spacing makes q even once
+    // |q| >= 2^24 and a multiple of 4 once |q| >= 2^25, where reduction
+    // accuracy is long gone anyway), swap = qq mod 2, neg = -1 for qq in
+    // {1, 2}.
+    let qq = q - 4.0 * (q * 0.25).floor();
+    let swap = qq - 2.0 * (qq * 0.5).floor();
+    let qn = qq + 1.0;
+    let neg = 1.0 - 2.0 * ((qn * 0.5).floor() - 2.0 * (qn * 0.25).floor());
+    // cos(r) and sin(r) on [-pi/4, pi/4]; select by quadrant with
+    // arithmetic masks (swap and neg are exact 0/1/±1 factors).
+    let r2 = r * r;
+    let c = 1.0 + r2 * (C2 + r2 * (C4 + r2 * (C6 + r2 * C8)));
+    let s = r * (1.0 + r2 * (S2 + r2 * (S4 + r2 * (S6 + r2 * S8))));
+    neg * (c * (1.0 - swap) + s * swap)
+}
+
+/// Fused paper-scale featurization (L = 4): for every `j`,
+/// `z[j] = scale * fast_cos(b[j] + x0*o0[j] + x1*o1[j] + x2*o2[j] + x3*o3[j])`
+/// with the phase accumulated left to right. One streaming read of the
+/// four `Omega` rows, one write of `z`, cosine fused in.
+#[inline]
+pub fn featurize4(
+    b: &[f32],
+    o0: &[f32],
+    o1: &[f32],
+    o2: &[f32],
+    o3: &[f32],
+    x: [f32; 4],
+    scale: f32,
+    z: &mut [f32],
+) {
+    for j in 0..z.len() {
+        let phase = b[j] + x[0] * o0[j] + x[1] * o1[j] + x[2] * o2[j] + x[3] * o3[j];
+        z[j] = scale * fast_cos(phase);
+    }
+}
+
+/// In-place fused cosine + normalization: `z[j] = scale * fast_cos(z[j])`
+/// (the closing pass of general-L featurization).
+#[inline]
+pub fn cos_scale(z: &mut [f32], scale: f32) {
+    for zj in z.iter_mut() {
+        *zj = scale * fast_cos(*zj);
+    }
+}
+
+/// Rank-1 update `w[j] += s * z[j]` (the KLMS step, and the general-L
+/// phase accumulation with `s = x_i` over an `Omega` row).
+#[inline]
+pub fn axpy(w: &mut [f32], s: f32, z: &[f32]) {
+    debug_assert_eq!(w.len(), z.len());
+    for (wj, &zj) in w.iter_mut().zip(z) {
+        *wj += s * zj;
+    }
+}
+
+/// Masked receive `w = M w_g + (I - M) w` (eq. 10 first term): entries
+/// with `mask[j] == 0` are left untouched (not recomputed — `0 * w_g[j]`
+/// would turn a `-0.0` weight into `+0.0` and NaN-pollute from infinite
+/// `w_g`), everything else becomes `m*w_g[j] + (1-m)*w[j]`.
+#[inline]
+pub fn masked_blend(w: &mut [f32], w_global: &[f32], mask: &[f32]) {
+    debug_assert_eq!(w.len(), w_global.len());
+    debug_assert_eq!(w.len(), mask.len());
+    for j in 0..w.len() {
+        let m = mask[j];
+        if m != 0.0 {
+            w[j] = m * w_global[j] + (1.0 - m) * w[j];
+        }
+    }
+}
+
+/// Canonical [`LANES`]-lane dot product. Lane `l` accumulates elements
+/// `j = 8*i + l` over full blocks in ascending block order; the lanes
+/// collapse through the fixed tree
+/// `((l0+l4) + (l2+l6)) + ((l1+l5) + (l3+l7))` (one 256→128 fold, then
+/// two in-register folds); the `d mod 8` tail is added one element at a
+/// time in ascending order.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let blocks = n / LANES;
+    let mut acc = [0.0f32; LANES];
+    for i in 0..blocks {
+        let a8 = &a[i * LANES..(i + 1) * LANES];
+        let b8 = &b[i * LANES..(i + 1) * LANES];
+        for l in 0..LANES {
+            acc[l] += a8[l] * b8[l];
+        }
+    }
+    let mut sum = ((acc[0] + acc[4]) + (acc[2] + acc[6])) + ((acc[1] + acc[5]) + (acc[3] + acc[7]));
+    for j in blocks * LANES..n {
+        sum += a[j] * b[j];
+    }
+    sum
+}
+
+/// Batched test MSE: per row `t` of `z_rows [T, D]`, the prediction is
+/// the canonical [`dot`] of the row with `w`, and the squared residual
+/// `(y[t] - pred)^2` accumulates in f64 sequentially over rows (the f64
+/// accumulation order is row order on every path).
+#[inline]
+pub fn mse_batch(w: &[f32], z_rows: &[f32], y: &[f32]) -> f64 {
+    let d = w.len();
+    debug_assert_eq!(z_rows.len(), y.len() * d);
+    let mut acc = 0.0f64;
+    for (row, &yt) in z_rows.chunks(d).zip(y) {
+        let r = (yt - dot(row, w)) as f64;
+        acc += r * r;
+    }
+    acc / y.len() as f64
+}

@@ -1,0 +1,382 @@
+//! x86_64 backends: AVX2 (one 8-lane register per canonical block) and
+//! the SSE2 baseline (a 128-bit register pair per block — x86_64 always
+//! has SSE2, so this path needs no runtime detection).
+//!
+//! Every function transliterates the scalar reference in
+//! [`super::scalar`] operation for operation: multiplies and adds are
+//! kept separate (no FMA contraction — explicit intrinsics are never
+//! fused), min/max argument order matches the scalar `max(..).min(..)`
+//! chain, and the quadrant arithmetic uses the same floor/round program.
+//! AVX2 gets `vroundps`/`vfloorps` directly; SSE2 reproduces
+//! round-ties-even and floor exactly with the sign-split magic-number
+//! trick (`(|x| + 2^23) - 2^23` is exact ties-to-even integer rounding
+//! for `|x| < 2^23`, and values at or beyond `2^23` are already
+//! integral).
+//!
+//! Safety: all functions are `unsafe fn` because they use raw-pointer
+//! loads/stores over slice bounds the callers guarantee, and the AVX2
+//! set additionally requires the `avx2` target feature, which the
+//! dispatcher in [`super`] checks at runtime before routing here.
+
+use super::scalar::{self, C2, C4, C6, C8, FRAC_2_PI, P1, P2, R_CLAMP, S2, S4, S6, S8};
+use core::arch::x86_64::*;
+
+const RN: i32 = _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC;
+
+// ------------------------------------------------------------------ AVX2
+
+/// Vector transliteration of [`scalar::fast_cos`] (8 lanes).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn fast_cos_ps256(x: __m256) -> __m256 {
+    let one = _mm256_set1_ps(1.0);
+    let two = _mm256_set1_ps(2.0);
+    let four = _mm256_set1_ps(4.0);
+    let half = _mm256_set1_ps(0.5);
+    let quarter = _mm256_set1_ps(0.25);
+    let q = _mm256_round_ps::<RN>(_mm256_mul_ps(x, _mm256_set1_ps(FRAC_2_PI)));
+    let r = _mm256_sub_ps(
+        _mm256_sub_ps(x, _mm256_mul_ps(q, _mm256_set1_ps(P1))),
+        _mm256_mul_ps(q, _mm256_set1_ps(P2)),
+    );
+    let r = _mm256_min_ps(
+        _mm256_max_ps(r, _mm256_set1_ps(-R_CLAMP)),
+        _mm256_set1_ps(R_CLAMP),
+    );
+    let qq = _mm256_sub_ps(q, _mm256_mul_ps(four, _mm256_floor_ps(_mm256_mul_ps(q, quarter))));
+    let swap = _mm256_sub_ps(qq, _mm256_mul_ps(two, _mm256_floor_ps(_mm256_mul_ps(qq, half))));
+    let qn = _mm256_add_ps(qq, one);
+    let negbit = _mm256_sub_ps(
+        _mm256_floor_ps(_mm256_mul_ps(qn, half)),
+        _mm256_mul_ps(two, _mm256_floor_ps(_mm256_mul_ps(qn, quarter))),
+    );
+    let neg = _mm256_sub_ps(one, _mm256_mul_ps(two, negbit));
+    let r2 = _mm256_mul_ps(r, r);
+    let t3 = _mm256_add_ps(_mm256_set1_ps(C6), _mm256_mul_ps(r2, _mm256_set1_ps(C8)));
+    let t2 = _mm256_add_ps(_mm256_set1_ps(C4), _mm256_mul_ps(r2, t3));
+    let t1 = _mm256_add_ps(_mm256_set1_ps(C2), _mm256_mul_ps(r2, t2));
+    let c = _mm256_add_ps(one, _mm256_mul_ps(r2, t1));
+    let u3 = _mm256_add_ps(_mm256_set1_ps(S6), _mm256_mul_ps(r2, _mm256_set1_ps(S8)));
+    let u2 = _mm256_add_ps(_mm256_set1_ps(S4), _mm256_mul_ps(r2, u3));
+    let u1 = _mm256_add_ps(_mm256_set1_ps(S2), _mm256_mul_ps(r2, u2));
+    let s = _mm256_mul_ps(r, _mm256_add_ps(one, _mm256_mul_ps(r2, u1)));
+    let sel = _mm256_add_ps(_mm256_mul_ps(c, _mm256_sub_ps(one, swap)), _mm256_mul_ps(s, swap));
+    _mm256_mul_ps(neg, sel)
+}
+
+/// AVX2 [`scalar::featurize4`].
+#[target_feature(enable = "avx2")]
+pub unsafe fn featurize4_avx2(
+    b: &[f32],
+    o0: &[f32],
+    o1: &[f32],
+    o2: &[f32],
+    o3: &[f32],
+    x: [f32; 4],
+    scale: f32,
+    z: &mut [f32],
+) {
+    let d = z.len();
+    let blocks = d / 8;
+    let (x0, x1) = (_mm256_set1_ps(x[0]), _mm256_set1_ps(x[1]));
+    let (x2, x3) = (_mm256_set1_ps(x[2]), _mm256_set1_ps(x[3]));
+    let vs = _mm256_set1_ps(scale);
+    for i in 0..blocks {
+        let off = i * 8;
+        let mut p = _mm256_loadu_ps(b.as_ptr().add(off));
+        p = _mm256_add_ps(p, _mm256_mul_ps(x0, _mm256_loadu_ps(o0.as_ptr().add(off))));
+        p = _mm256_add_ps(p, _mm256_mul_ps(x1, _mm256_loadu_ps(o1.as_ptr().add(off))));
+        p = _mm256_add_ps(p, _mm256_mul_ps(x2, _mm256_loadu_ps(o2.as_ptr().add(off))));
+        p = _mm256_add_ps(p, _mm256_mul_ps(x3, _mm256_loadu_ps(o3.as_ptr().add(off))));
+        let cz = _mm256_mul_ps(vs, fast_cos_ps256(p));
+        _mm256_storeu_ps(z.as_mut_ptr().add(off), cz);
+    }
+    for j in blocks * 8..d {
+        let phase = b[j] + x[0] * o0[j] + x[1] * o1[j] + x[2] * o2[j] + x[3] * o3[j];
+        z[j] = scale * scalar::fast_cos(phase);
+    }
+}
+
+/// AVX2 [`scalar::cos_scale`].
+#[target_feature(enable = "avx2")]
+pub unsafe fn cos_scale_avx2(z: &mut [f32], scale: f32) {
+    let d = z.len();
+    let blocks = d / 8;
+    let vs = _mm256_set1_ps(scale);
+    for i in 0..blocks {
+        let p = z.as_mut_ptr().add(i * 8);
+        _mm256_storeu_ps(p, _mm256_mul_ps(vs, fast_cos_ps256(_mm256_loadu_ps(p))));
+    }
+    for zj in z[blocks * 8..].iter_mut() {
+        *zj = scale * scalar::fast_cos(*zj);
+    }
+}
+
+/// AVX2 [`scalar::axpy`].
+#[target_feature(enable = "avx2")]
+pub unsafe fn axpy_avx2(w: &mut [f32], s: f32, z: &[f32]) {
+    let n = w.len();
+    let blocks = n / 8;
+    let vs = _mm256_set1_ps(s);
+    for i in 0..blocks {
+        let pw = w.as_mut_ptr().add(i * 8);
+        let vz = _mm256_loadu_ps(z.as_ptr().add(i * 8));
+        _mm256_storeu_ps(pw, _mm256_add_ps(_mm256_loadu_ps(pw), _mm256_mul_ps(vs, vz)));
+    }
+    for j in blocks * 8..n {
+        w[j] += s * z[j];
+    }
+}
+
+/// AVX2 [`scalar::masked_blend`].
+#[target_feature(enable = "avx2")]
+pub unsafe fn masked_blend_avx2(w: &mut [f32], w_global: &[f32], mask: &[f32]) {
+    let n = w.len();
+    let blocks = n / 8;
+    let one = _mm256_set1_ps(1.0);
+    let zero = _mm256_setzero_ps();
+    for i in 0..blocks {
+        let pw = w.as_mut_ptr().add(i * 8);
+        let wv = _mm256_loadu_ps(pw);
+        let gv = _mm256_loadu_ps(w_global.as_ptr().add(i * 8));
+        let mv = _mm256_loadu_ps(mask.as_ptr().add(i * 8));
+        // `_CMP_NEQ_UQ` matches the scalar `m != 0.0` (true for NaN).
+        let live = _mm256_cmp_ps::<_CMP_NEQ_UQ>(mv, zero);
+        let blended = _mm256_add_ps(
+            _mm256_mul_ps(mv, gv),
+            _mm256_mul_ps(_mm256_sub_ps(one, mv), wv),
+        );
+        _mm256_storeu_ps(pw, _mm256_blendv_ps(wv, blended, live));
+    }
+    for j in blocks * 8..n {
+        let m = mask[j];
+        if m != 0.0 {
+            w[j] = m * w_global[j] + (1.0 - m) * w[j];
+        }
+    }
+}
+
+/// AVX2 [`scalar::dot`]: the lane accumulators live in one register; the
+/// canonical tree is the 256→128 fold followed by the two in-register
+/// folds, exactly the reduction order the scalar reference spells out.
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let blocks = n / 8;
+    let mut acc = _mm256_setzero_ps();
+    for i in 0..blocks {
+        let va = _mm256_loadu_ps(a.as_ptr().add(i * 8));
+        let vb = _mm256_loadu_ps(b.as_ptr().add(i * 8));
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+    }
+    let lo = _mm256_castps256_ps128(acc);
+    let hi = _mm256_extractf128_ps::<1>(acc);
+    let v4 = _mm_add_ps(lo, hi);
+    let v2 = _mm_add_ps(v4, _mm_movehl_ps(v4, v4));
+    let v1 = _mm_add_ss(v2, _mm_shuffle_ps::<0b01>(v2, v2));
+    let mut sum = _mm_cvtss_f32(v1);
+    for j in blocks * 8..n {
+        sum += a[j] * b[j];
+    }
+    sum
+}
+
+/// AVX2 [`scalar::mse_batch`] (per-row [`dot_avx2`], sequential f64
+/// accumulation).
+#[target_feature(enable = "avx2")]
+pub unsafe fn mse_batch_avx2(w: &[f32], z_rows: &[f32], y: &[f32]) -> f64 {
+    let d = w.len();
+    let mut acc = 0.0f64;
+    for (row, &yt) in z_rows.chunks(d).zip(y) {
+        let r = (yt - dot_avx2(row, w)) as f64;
+        acc += r * r;
+    }
+    acc / y.len() as f64
+}
+
+// ------------------------------------------------------------------ SSE2
+
+/// Exact round-ties-even on 4 lanes without SSE4.1 `roundps`: split the
+/// sign off, push `|x|` through `(|x| + 2^23) - 2^23` (exact ties-even
+/// for `|x| < 2^23`), restore the sign (preserving `-0.0`), and keep `x`
+/// itself where `|x| >= 2^23` (already integral).
+#[inline]
+unsafe fn round_te_ps128(x: __m128) -> __m128 {
+    let signbit = _mm_set1_ps(-0.0);
+    let magic = _mm_set1_ps(8_388_608.0); // 2^23
+    let sign = _mm_and_ps(x, signbit);
+    let absx = _mm_andnot_ps(signbit, x);
+    let t = _mm_sub_ps(_mm_add_ps(absx, magic), magic);
+    let rounded = _mm_or_ps(t, sign);
+    let big = _mm_cmpge_ps(absx, magic);
+    _mm_or_ps(_mm_and_ps(big, x), _mm_andnot_ps(big, rounded))
+}
+
+/// Exact floor from [`round_te_ps128`]: subtract 1 where rounding went up.
+#[inline]
+unsafe fn floor_ps128(x: __m128) -> __m128 {
+    let t = round_te_ps128(x);
+    _mm_sub_ps(t, _mm_and_ps(_mm_cmpgt_ps(t, x), _mm_set1_ps(1.0)))
+}
+
+/// Bitwise select (SSE2 has no `blendvps`): `mask ? b : a`.
+#[inline]
+unsafe fn select128(a: __m128, b: __m128, mask: __m128) -> __m128 {
+    _mm_or_ps(_mm_and_ps(mask, b), _mm_andnot_ps(mask, a))
+}
+
+/// Vector transliteration of [`scalar::fast_cos`] (4 lanes, SSE2).
+#[inline]
+unsafe fn fast_cos_ps128(x: __m128) -> __m128 {
+    let one = _mm_set1_ps(1.0);
+    let two = _mm_set1_ps(2.0);
+    let four = _mm_set1_ps(4.0);
+    let half = _mm_set1_ps(0.5);
+    let quarter = _mm_set1_ps(0.25);
+    let q = round_te_ps128(_mm_mul_ps(x, _mm_set1_ps(FRAC_2_PI)));
+    let r = _mm_sub_ps(
+        _mm_sub_ps(x, _mm_mul_ps(q, _mm_set1_ps(P1))),
+        _mm_mul_ps(q, _mm_set1_ps(P2)),
+    );
+    let r = _mm_min_ps(_mm_max_ps(r, _mm_set1_ps(-R_CLAMP)), _mm_set1_ps(R_CLAMP));
+    let qq = _mm_sub_ps(q, _mm_mul_ps(four, floor_ps128(_mm_mul_ps(q, quarter))));
+    let swap = _mm_sub_ps(qq, _mm_mul_ps(two, floor_ps128(_mm_mul_ps(qq, half))));
+    let qn = _mm_add_ps(qq, one);
+    let negbit = _mm_sub_ps(
+        floor_ps128(_mm_mul_ps(qn, half)),
+        _mm_mul_ps(two, floor_ps128(_mm_mul_ps(qn, quarter))),
+    );
+    let neg = _mm_sub_ps(one, _mm_mul_ps(two, negbit));
+    let r2 = _mm_mul_ps(r, r);
+    let t3 = _mm_add_ps(_mm_set1_ps(C6), _mm_mul_ps(r2, _mm_set1_ps(C8)));
+    let t2 = _mm_add_ps(_mm_set1_ps(C4), _mm_mul_ps(r2, t3));
+    let t1 = _mm_add_ps(_mm_set1_ps(C2), _mm_mul_ps(r2, t2));
+    let c = _mm_add_ps(one, _mm_mul_ps(r2, t1));
+    let u3 = _mm_add_ps(_mm_set1_ps(S6), _mm_mul_ps(r2, _mm_set1_ps(S8)));
+    let u2 = _mm_add_ps(_mm_set1_ps(S4), _mm_mul_ps(r2, u3));
+    let u1 = _mm_add_ps(_mm_set1_ps(S2), _mm_mul_ps(r2, u2));
+    let s = _mm_mul_ps(r, _mm_add_ps(one, _mm_mul_ps(r2, u1)));
+    let sel = _mm_add_ps(_mm_mul_ps(c, _mm_sub_ps(one, swap)), _mm_mul_ps(s, swap));
+    _mm_mul_ps(neg, sel)
+}
+
+/// SSE2 [`scalar::featurize4`] (4-wide blocks; elementwise kernels are
+/// block-size-agnostic — only reductions pin the 8-lane structure).
+pub unsafe fn featurize4_sse2(
+    b: &[f32],
+    o0: &[f32],
+    o1: &[f32],
+    o2: &[f32],
+    o3: &[f32],
+    x: [f32; 4],
+    scale: f32,
+    z: &mut [f32],
+) {
+    let d = z.len();
+    let blocks = d / 4;
+    let (x0, x1) = (_mm_set1_ps(x[0]), _mm_set1_ps(x[1]));
+    let (x2, x3) = (_mm_set1_ps(x[2]), _mm_set1_ps(x[3]));
+    let vs = _mm_set1_ps(scale);
+    for i in 0..blocks {
+        let off = i * 4;
+        let mut p = _mm_loadu_ps(b.as_ptr().add(off));
+        p = _mm_add_ps(p, _mm_mul_ps(x0, _mm_loadu_ps(o0.as_ptr().add(off))));
+        p = _mm_add_ps(p, _mm_mul_ps(x1, _mm_loadu_ps(o1.as_ptr().add(off))));
+        p = _mm_add_ps(p, _mm_mul_ps(x2, _mm_loadu_ps(o2.as_ptr().add(off))));
+        p = _mm_add_ps(p, _mm_mul_ps(x3, _mm_loadu_ps(o3.as_ptr().add(off))));
+        _mm_storeu_ps(z.as_mut_ptr().add(off), _mm_mul_ps(vs, fast_cos_ps128(p)));
+    }
+    for j in blocks * 4..d {
+        let phase = b[j] + x[0] * o0[j] + x[1] * o1[j] + x[2] * o2[j] + x[3] * o3[j];
+        z[j] = scale * scalar::fast_cos(phase);
+    }
+}
+
+/// SSE2 [`scalar::cos_scale`].
+pub unsafe fn cos_scale_sse2(z: &mut [f32], scale: f32) {
+    let d = z.len();
+    let blocks = d / 4;
+    let vs = _mm_set1_ps(scale);
+    for i in 0..blocks {
+        let p = z.as_mut_ptr().add(i * 4);
+        _mm_storeu_ps(p, _mm_mul_ps(vs, fast_cos_ps128(_mm_loadu_ps(p))));
+    }
+    for zj in z[blocks * 4..].iter_mut() {
+        *zj = scale * scalar::fast_cos(*zj);
+    }
+}
+
+/// SSE2 [`scalar::axpy`].
+pub unsafe fn axpy_sse2(w: &mut [f32], s: f32, z: &[f32]) {
+    let n = w.len();
+    let blocks = n / 4;
+    let vs = _mm_set1_ps(s);
+    for i in 0..blocks {
+        let pw = w.as_mut_ptr().add(i * 4);
+        let vz = _mm_loadu_ps(z.as_ptr().add(i * 4));
+        _mm_storeu_ps(pw, _mm_add_ps(_mm_loadu_ps(pw), _mm_mul_ps(vs, vz)));
+    }
+    for j in blocks * 4..n {
+        w[j] += s * z[j];
+    }
+}
+
+/// SSE2 [`scalar::masked_blend`].
+pub unsafe fn masked_blend_sse2(w: &mut [f32], w_global: &[f32], mask: &[f32]) {
+    let n = w.len();
+    let blocks = n / 4;
+    let one = _mm_set1_ps(1.0);
+    let zero = _mm_setzero_ps();
+    for i in 0..blocks {
+        let pw = w.as_mut_ptr().add(i * 4);
+        let wv = _mm_loadu_ps(pw);
+        let gv = _mm_loadu_ps(w_global.as_ptr().add(i * 4));
+        let mv = _mm_loadu_ps(mask.as_ptr().add(i * 4));
+        // `cmpneqps` is unordered-or-unequal — matches scalar `!=`.
+        let live = _mm_cmpneq_ps(mv, zero);
+        let blended = _mm_add_ps(_mm_mul_ps(mv, gv), _mm_mul_ps(_mm_sub_ps(one, mv), wv));
+        _mm_storeu_ps(pw, select128(wv, blended, live));
+    }
+    for j in blocks * 4..n {
+        let m = mask[j];
+        if m != 0.0 {
+            w[j] = m * w_global[j] + (1.0 - m) * w[j];
+        }
+    }
+}
+
+/// SSE2 [`scalar::dot`]: the 8 canonical lanes live in a register pair
+/// (`acc_lo` = lanes 0..4, `acc_hi` = lanes 4..8); `acc_lo + acc_hi` is
+/// the same first fold AVX2's 256→128 extraction performs, and the rest
+/// of the tree is identical.
+pub unsafe fn dot_sse2(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let blocks = n / 8;
+    let mut acc_lo = _mm_setzero_ps();
+    let mut acc_hi = _mm_setzero_ps();
+    for i in 0..blocks {
+        let pa = a.as_ptr().add(i * 8);
+        let pb = b.as_ptr().add(i * 8);
+        acc_lo = _mm_add_ps(acc_lo, _mm_mul_ps(_mm_loadu_ps(pa), _mm_loadu_ps(pb)));
+        acc_hi = _mm_add_ps(acc_hi, _mm_mul_ps(_mm_loadu_ps(pa.add(4)), _mm_loadu_ps(pb.add(4))));
+    }
+    let v4 = _mm_add_ps(acc_lo, acc_hi);
+    let v2 = _mm_add_ps(v4, _mm_movehl_ps(v4, v4));
+    let v1 = _mm_add_ss(v2, _mm_shuffle_ps::<0b01>(v2, v2));
+    let mut sum = _mm_cvtss_f32(v1);
+    for j in blocks * 8..n {
+        sum += a[j] * b[j];
+    }
+    sum
+}
+
+/// SSE2 [`scalar::mse_batch`].
+pub unsafe fn mse_batch_sse2(w: &[f32], z_rows: &[f32], y: &[f32]) -> f64 {
+    let d = w.len();
+    let mut acc = 0.0f64;
+    for (row, &yt) in z_rows.chunks(d).zip(y) {
+        let r = (yt - dot_sse2(row, w)) as f64;
+        acc += r * r;
+    }
+    acc / y.len() as f64
+}

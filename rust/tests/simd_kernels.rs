@@ -1,0 +1,237 @@
+//! The kernel layer's dispatch contract: on this machine, whatever
+//! implementation `simd::active_level()` selected must be **bit-identical**
+//! to the portable scalar reference (`simd::scalar`) for every kernel,
+//! across awkward shapes — dimensions around the 8-lane block boundary,
+//! empty inputs, all-zero masks, signed zeros, subnormals and huge
+//! magnitudes.
+//!
+//! Under `PAO_FED_FORCE_SCALAR=1` (the CI forced-scalar job) the
+//! dispatched side *is* the scalar reference and these tests pin the
+//! flag; on a vector-capable host they pin the AVX2/SSE2/NEON
+//! transliterations. Together with the determinism suite
+//! (`parallel_determinism.rs`, `multiprocess.rs`) this is what lets the
+//! engine, the deployment runtime and the multi-process fleet mix
+//! machines freely without bit drift.
+
+use pao_fed::rff::RffSpace;
+use pao_fed::simd;
+use pao_fed::util::rng::Pcg32;
+
+/// Shapes straddling the canonical block boundaries: empty, sub-block,
+/// exactly one block, one past, the paper's D = 200, and one past it.
+const SHAPES: &[usize] = &[0, 1, 7, 8, 9, 16, 31, 200, 201];
+
+/// A vector mixing the values float kernels get wrong first: both signed
+/// zeros, subnormal-range tinies, huge magnitudes, and ordinary draws.
+fn awkward_vec(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| match i % 7 {
+            0 => 0.0,
+            1 => -0.0,
+            2 => (rng.gaussian() as f32) * 1e-20,
+            3 => (rng.gaussian() as f32) * 1e20,
+            4 => (rng.gaussian() as f32) * 30.0,
+            5 => -(rng.gaussian() as f32).abs(),
+            _ => rng.gaussian() as f32,
+        })
+        .collect()
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "{what}[{i}] diverged: {g} vs {w} (level {:?})",
+            simd::active_level()
+        );
+    }
+}
+
+#[test]
+fn dot_matches_scalar_bitwise_across_shapes() {
+    let mut rng = Pcg32::new(41, 0);
+    for &d in SHAPES {
+        for rep in 0..8 {
+            let a = awkward_vec(&mut rng, d);
+            let b = awkward_vec(&mut rng, d);
+            let got = simd::dot(&a, &b);
+            let want = simd::scalar::dot(&a, &b);
+            assert_eq!(got.to_bits(), want.to_bits(), "dot d={d} rep={rep}: {got} vs {want}");
+        }
+    }
+}
+
+#[test]
+fn axpy_matches_scalar_bitwise_across_shapes() {
+    let mut rng = Pcg32::new(42, 0);
+    for &d in SHAPES {
+        for s in [0.0f32, -0.0, 0.4, -1.7e-3, 3.0e4] {
+            let z = awkward_vec(&mut rng, d);
+            let w0 = awkward_vec(&mut rng, d);
+            let mut got = w0.clone();
+            let mut want = w0;
+            simd::axpy(&mut got, s, &z);
+            simd::scalar::axpy(&mut want, s, &z);
+            assert_bits_eq(&got, &want, &format!("axpy d={d} s={s}"));
+        }
+    }
+}
+
+#[test]
+fn cos_scale_matches_scalar_bitwise_across_shapes() {
+    let mut rng = Pcg32::new(43, 0);
+    for &d in SHAPES {
+        let z0 = awkward_vec(&mut rng, d);
+        let mut got = z0.clone();
+        let mut want = z0;
+        simd::cos_scale(&mut got, 0.1);
+        simd::scalar::cos_scale(&mut want, 0.1);
+        assert_bits_eq(&got, &want, &format!("cos_scale d={d}"));
+    }
+}
+
+#[test]
+fn fast_cos_vector_paths_match_scalar_on_extremes() {
+    // Phase extremes route through every guard in the canonical program:
+    // huge reductions, the clamp, signed zero, subnormals. cos_scale
+    // exercises the dispatched vector fast_cos lane-for-lane.
+    let mut z: Vec<f32> = vec![
+        0.0,
+        -0.0,
+        1e-30,
+        -1e-30,
+        0.5,
+        -0.5,
+        1.0,
+        std::f32::consts::FRAC_PI_2,
+        std::f32::consts::PI,
+        -std::f32::consts::PI,
+        59.9,
+        -58.5,
+        2e3,
+        -2e3,
+        4e9,
+        -4e9,
+        1e10,
+        -1e10,
+        1e20,
+        f32::MAX,
+        f32::MIN,
+        f32::MAX / 2.0,
+    ];
+    // Pad past a block boundary so the vector body (not just the scalar
+    // tail) sees the extremes.
+    while z.len() % 8 != 0 {
+        z.push(7.77);
+    }
+    let mut got = z.clone();
+    let mut want = z;
+    simd::cos_scale(&mut got, 1.0);
+    simd::scalar::cos_scale(&mut want, 1.0);
+    assert_bits_eq(&got, &want, "fast_cos extremes");
+    for (i, v) in got.iter().enumerate() {
+        assert!(v.is_finite() && v.abs() <= 1.01, "fast_cos[{i}] = {v}");
+    }
+}
+
+#[test]
+fn featurize4_matches_scalar_bitwise_across_shapes() {
+    let mut rng = Pcg32::new(44, 0);
+    let inputs = [
+        [0.3f32, -1.2, 0.7, 2.5],
+        [0.0, 0.0, 0.0, 0.0],
+        [-0.0, 1e20, -1e-20, 0.5],
+    ];
+    for &d in SHAPES {
+        let b = awkward_vec(&mut rng, d);
+        let o0 = awkward_vec(&mut rng, d);
+        let o1 = awkward_vec(&mut rng, d);
+        let o2 = awkward_vec(&mut rng, d);
+        let o3 = awkward_vec(&mut rng, d);
+        for x in inputs {
+            let mut got = vec![0.0f32; d];
+            let mut want = vec![0.0f32; d];
+            simd::featurize4(&b, &o0, &o1, &o2, &o3, x, 0.1, &mut got);
+            simd::scalar::featurize4(&b, &o0, &o1, &o2, &o3, x, 0.1, &mut want);
+            assert_bits_eq(&got, &want, &format!("featurize4 d={d}"));
+        }
+    }
+}
+
+#[test]
+fn masked_blend_matches_scalar_bitwise_across_shapes() {
+    let mut rng = Pcg32::new(45, 0);
+    for &d in SHAPES {
+        let masks: Vec<Vec<f32>> = vec![
+            vec![0.0; d],
+            vec![1.0; d],
+            (0..d).map(|_| if rng.bernoulli(0.3) { 1.0 } else { 0.0 }).collect(),
+        ];
+        for (mi, mask) in masks.iter().enumerate() {
+            let wg = awkward_vec(&mut rng, d);
+            let w0 = awkward_vec(&mut rng, d);
+            let mut got = w0.clone();
+            let mut want = w0.clone();
+            simd::masked_blend(&mut got, &wg, mask);
+            simd::scalar::masked_blend(&mut want, &wg, mask);
+            assert_bits_eq(&got, &want, &format!("masked_blend d={d} mask#{mi}"));
+            if mi == 0 {
+                // All-zero mask: a no-op, bit for bit (signed zeros kept).
+                assert_bits_eq(&got, &w0, &format!("masked_blend d={d} zero-mask no-op"));
+            }
+        }
+    }
+}
+
+#[test]
+fn mse_batch_matches_scalar_bitwise_across_shapes() {
+    let mut rng = Pcg32::new(46, 0);
+    for &d in SHAPES {
+        if d == 0 {
+            continue; // chunks(0) is out of domain, as it always was
+        }
+        for t in [1usize, 3, 17] {
+            let w = awkward_vec(&mut rng, d);
+            let z = awkward_vec(&mut rng, t * d);
+            let y = awkward_vec(&mut rng, t);
+            let got = simd::mse_batch(&w, &z, &y);
+            let want = simd::scalar::mse_batch(&w, &z, &y);
+            assert_eq!(got.to_bits(), want.to_bits(), "mse_batch d={d} t={t}: {got} vs {want}");
+        }
+    }
+}
+
+#[test]
+fn featurization_through_rff_space_matches_scalar_kernels() {
+    // End-to-end: RffSpace::features_into (the dispatched path) against a
+    // hand-run of the scalar kernels, for the fused L = 4 shape and the
+    // general-L shape (including a zero input coordinate, whose skip is
+    // part of the canonical semantics).
+    let mut rng = Pcg32::new(47, 0);
+    for d in [7usize, 8, 200, 201] {
+        let rff = RffSpace::sample(4, d, 1.0, &mut rng);
+        let x = [0.3f32, 0.0, -2.5, 1e-4];
+        let got = rff.features(&x);
+        let (o0, rest) = rff.omega.split_at(d);
+        let (o1, rest) = rest.split_at(d);
+        let (o2, o3) = rest.split_at(d);
+        let mut want = vec![0.0f32; d];
+        simd::scalar::featurize4(&rff.b, o0, o1, o2, o3, x, rff.scale(), &mut want);
+        assert_bits_eq(&got, &want, &format!("rff l=4 d={d}"));
+    }
+    for d in [8usize, 31] {
+        let rff = RffSpace::sample(3, d, 0.7, &mut rng);
+        let x = [0.9f32, 0.0, -0.4]; // zero coordinate exercises the skip
+        let got = rff.features(&x);
+        let mut want = rff.b.clone();
+        for (i, &xi) in x.iter().enumerate() {
+            if xi != 0.0 {
+                simd::scalar::axpy(&mut want, xi, &rff.omega[i * d..(i + 1) * d]);
+            }
+        }
+        simd::scalar::cos_scale(&mut want, rff.scale());
+        assert_bits_eq(&got, &want, &format!("rff general-l d={d}"));
+    }
+}
