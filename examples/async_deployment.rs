@@ -46,6 +46,8 @@ fn main() -> pao_fed::Result<()> {
             tick: Duration::from_millis(1),
             env_seed: seed,
             eval_every: 50,
+            persist: None,
+            run_until: None,
         },
     )?;
     println!(

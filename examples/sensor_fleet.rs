@@ -206,6 +206,8 @@ fn main() -> pao_fed::Result<()> {
         tick: Duration::ZERO,
         env_seed: seed + 2,
         eval_every: 100,
+        persist: None,
+        run_until: None,
     };
 
     let inproc = run_deployment(build_stream(), rff3.clone(), part3.clone(), delay3, dcfg())?;

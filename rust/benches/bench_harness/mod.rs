@@ -36,6 +36,9 @@ pub struct Bench {
     target: String,
     filter: Option<String>,
     fast: bool,
+    /// Workspace-root trajectory file name (`BENCH_4.json` unless the
+    /// target overrides it; `PAO_FED_BENCH_JSON` always wins).
+    sink: &'static str,
     results: Vec<(String, Stats)>,
 }
 
@@ -62,8 +65,17 @@ impl Bench {
             target: target.to_string(),
             filter,
             fast,
+            sink: "BENCH_4.json",
             results: Vec::new(),
         }
+    }
+
+    /// Redirect the trajectory to another workspace-root file (e.g. the
+    /// persistence target files into `BENCH_5.json`). The
+    /// `PAO_FED_BENCH_JSON` environment override still takes precedence.
+    pub fn with_sink(mut self, file: &'static str) -> Self {
+        self.sink = file;
+        self
     }
 
     /// Should this benchmark run under the current filter?
@@ -124,7 +136,7 @@ impl Bench {
     /// collected results for further use.
     pub fn finish(self) -> Vec<(String, Stats)> {
         println!("{} benchmark(s) run", self.results.len());
-        match write_json(&self.target, &self.results) {
+        match write_json(&self.target, self.sink, &self.results) {
             Ok(path) => println!("(bench trajectory -> {})", path.display()),
             Err(e) => eprintln!("(bench trajectory not written: {e})"),
         }
@@ -132,23 +144,23 @@ impl Bench {
     }
 }
 
-/// Where the trajectory lands: `PAO_FED_BENCH_JSON` if set, else
-/// `BENCH_4.json` at the workspace root (one level above the crate
-/// manifest), else the current directory.
-fn json_path() -> PathBuf {
+/// Where the trajectory lands: `PAO_FED_BENCH_JSON` if set, else `sink`
+/// at the workspace root (one level above the crate manifest), else the
+/// current directory.
+fn json_path(sink: &str) -> PathBuf {
     if let Some(p) = std::env::var_os("PAO_FED_BENCH_JSON") {
         return PathBuf::from(p);
     }
     match std::env::var_os("CARGO_MANIFEST_DIR") {
-        Some(dir) => PathBuf::from(dir).join("..").join("BENCH_4.json"),
-        None => PathBuf::from("BENCH_4.json"),
+        Some(dir) => PathBuf::from(dir).join("..").join(sink),
+        None => PathBuf::from(sink),
     }
 }
 
 /// Merge this target's results into the trajectory file: other targets'
 /// sections are preserved, this target's section is replaced wholesale.
-fn write_json(target: &str, results: &[(String, Stats)]) -> std::io::Result<PathBuf> {
-    let path = json_path();
+fn write_json(target: &str, sink: &str, results: &[(String, Stats)]) -> std::io::Result<PathBuf> {
+    let path = json_path(sink);
     let mut root = std::fs::read_to_string(&path)
         .ok()
         .and_then(|text| Json::parse(&text).ok())

@@ -22,6 +22,8 @@ fn quick_ctx(id: &str) -> ExperimentCtx {
         quiet: true,
         jobs: Parallelism::serial(),
         pool: PoolHandle::serial(),
+        checkpoint_every: 0,
+        resume_from: None,
     }
     .tagged(id)
 }

@@ -1,0 +1,136 @@
+//! Checkpoint write / restore latency benchmarks: what a `--checkpoint-every`
+//! tick boundary costs at the paper's scale (K = 256, D = 200), and the
+//! per-tick journal overhead. Files its trajectory into `BENCH_5.json`
+//! (schema `pao-fed-bench-v1`) so the persistence numbers live beside the
+//! compute numbers of `BENCH_4.json` without clobbering them.
+//!
+//! Run: `cargo bench --bench persist [filter]`
+
+mod bench_harness;
+
+use bench_harness::Bench;
+use pao_fed::fl::algorithms::{self, Variant};
+use pao_fed::fl::delay::DelayModel;
+use pao_fed::fl::selection::{Coords, SelectionSchedule};
+use pao_fed::fl::server::{AggregateInfo, Update};
+use pao_fed::metrics::CommStats;
+use pao_fed::persist::journal::{self, Journal, TickRecord};
+use pao_fed::persist::snapshot::{self, QueueState, RunSnapshot, ServerState};
+use pao_fed::util::rng::Pcg32;
+
+const K: usize = 256;
+const D: usize = 200;
+
+/// A paper-scale snapshot: K=256 local models of D=200, a server model,
+/// and ~512 in-flight updates of m=4 scalars each.
+fn paper_scale_snapshot() -> RunSnapshot {
+    let mut rng = Pcg32::new(0xc4e, 2);
+    let seed = 2023;
+    let algo = algorithms::build(Variant::PaoFedC2, 0.4, 4, 10, 50);
+    let delay = DelayModel::Geometric { delta: 0.2 };
+    let n_iters = 2000;
+    let horizon = delay.max_delay().min(n_iters);
+    let now = 999;
+    let entries = (0..512)
+        .map(|i| {
+            (
+                now + 1 + (i % 40),
+                Update {
+                    client: i % K,
+                    sent_iter: now - (i % 7),
+                    coords: Coords::Range { start: (4 * i) % D, len: 4, d: D },
+                    values: (0..4).map(|_| rng.gaussian() as f32).collect(),
+                },
+            )
+        })
+        .collect();
+    RunSnapshot {
+        tick: now + 1,
+        env_seed: seed,
+        k: K,
+        d: D,
+        n_iters,
+        avail_probs: (0..K).map(|c| [0.25, 0.1, 0.025, 0.005][c % 4]).collect(),
+        eval_every: 50,
+        schedule: SelectionSchedule::new(algo.schedule, D, algo.m, seed),
+        algo,
+        delay,
+        server: ServerState {
+            w: (0..D).map(|_| rng.gaussian() as f32).collect(),
+            epoch: 1000,
+        },
+        queue: QueueState { horizon, now, clamped: 0, entries },
+        client_w: (0..K * D).map(|_| rng.gaussian() as f32).collect(),
+        rng: Vec::new(),
+        comm: CommStats {
+            downlink_scalars: 4_000_000,
+            uplink_scalars: 3_900_000,
+            downlink_msgs: 1_000_000,
+            uplink_msgs: 975_000,
+        },
+        agg: AggregateInfo {
+            applied: 900_000,
+            discarded_stale: 1_000,
+            conflicts_resolved: 40_000,
+            touched_coords: 3_000_000,
+        },
+        curve_iters: (0..20).map(|i| i * 50).collect(),
+        curve_db: (0..20).map(|i| -(i as f64) * 0.7).collect(),
+        local_steps: 1 << 20,
+    }
+}
+
+fn main() {
+    let mut b = Bench::from_args("persist").with_sink("BENCH_5.json");
+    let dir = std::env::temp_dir().join("pao_fed_persist_bench");
+    std::fs::create_dir_all(&dir).expect("bench scratch dir");
+    let snap = paper_scale_snapshot();
+    let bytes = snapshot::to_bytes(&snap);
+    println!(
+        "snapshot: K={K} D={D}, {} in-flight updates, {} bytes on disk",
+        snap.queue.entries.len(),
+        bytes.len()
+    );
+
+    b.bench("snapshot_encode_k256_d200", || {
+        let out = snapshot::to_bytes(&snap);
+        assert!(!out.is_empty());
+    });
+    b.bench("snapshot_decode_k256_d200", || {
+        let back = snapshot::from_bytes(&bytes).expect("decode");
+        assert_eq!(back.k, K);
+    });
+    let ckpt = dir.join("bench.ckpt");
+    b.bench("checkpoint_write_atomic", || {
+        snapshot::write_file(&ckpt, &snap).expect("write");
+    });
+    b.bench("checkpoint_restore", || {
+        let back = snapshot::read_file(&ckpt).expect("read");
+        assert_eq!(back.tick, snap.tick);
+    });
+    // The full tick-boundary round trip an operator pays for
+    // `--checkpoint-every 1` (upper bound on per-tick overhead).
+    b.bench("checkpoint_write_restore_roundtrip", || {
+        snapshot::write_file(&ckpt, &snap).expect("write");
+        let back = snapshot::read_file(&ckpt).expect("read");
+        assert_eq!(back.client_w.len(), K * D);
+    });
+    let jpath = dir.join("bench.journal");
+    b.bench("journal_append_100_ticks", || {
+        let mut j = Journal::create(&jpath, 42).expect("journal");
+        for t in 0..100 {
+            j.append(&TickRecord {
+                tick: t,
+                w_hash: snapshot::hash_model(&snap.server.w),
+                uplink_msgs: t as u64 * 37,
+            })
+            .expect("append");
+        }
+    });
+    b.bench("journal_replay_100_ticks", || {
+        let r = journal::replay(&jpath).expect("replay");
+        assert_eq!(r.records.len(), 100);
+    });
+    b.finish();
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -48,6 +48,8 @@ fn mc_ctx(workers: usize) -> ExperimentCtx {
             client_shards: 1,
         },
         pool: PoolHandle::shared(),
+        checkpoint_every: 0,
+        resume_from: None,
     }
 }
 

@@ -30,6 +30,13 @@
 //! client id before aggregation, so a loopback multi-process run
 //! reproduces the in-process deployment (and the discrete engine) bit
 //! for bit.
+//!
+//! The runtime is also **crash-safe**: the TCP fleet supervises its
+//! workers (session-token handshake, reconnect-and-replay recovery for
+//! dropped connections instead of aborting the run), and the server loop
+//! checkpoints/resumes whole runs through the `persist` subsystem
+//! ([`crate::persist::PersistPolicy`] — `deploy --checkpoint-every / --resume / --run-until`
+//! on the CLI) with bit-identical continuation.
 
 mod protocol;
 pub mod transport;

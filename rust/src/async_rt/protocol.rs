@@ -13,6 +13,16 @@
 //! * [`run_deployment_tcp`] — the fleet sharded across worker *processes*
 //!   over TCP ([`TcpFleet`] + `transport::run_worker`), bit-identical to
 //!   the in-process run.
+//!
+//! **Persistence.** With [`DeploymentConfig::persist`] set, the loop
+//! journals every tick and writes an atomic [`RunSnapshot`] every
+//! `checkpoint_every` ticks (client states captured through
+//! [`Transport::dump_states`]); `resume` restores the whole run state —
+//! server, delay channel, client models, counters, curve — and continues
+//! **bit-identically** to an uninterrupted run (pinned by
+//! `rust/tests/persistence.rs`). [`DeploymentConfig::run_until`] stops a
+//! run early at a tick boundary after writing a final checkpoint — the
+//! graceful-handoff path.
 
 use super::transport::{ChannelTransport, TcpFleet, Transport};
 use crate::data::stream::FedStream;
@@ -24,6 +34,9 @@ use crate::fl::pipeline;
 use crate::fl::selection::SelectionSchedule;
 use crate::fl::server::{AggregateInfo, AggregationMode, Server, Update};
 use crate::metrics::{mse_test, to_db, CommStats};
+use crate::persist::journal::{self, TickRecord};
+use crate::persist::snapshot::{self, QueueState, RunSnapshot, ServerState};
+use crate::persist::PersistPolicy;
 use crate::rff::RffSpace;
 use std::net::TcpListener;
 use std::sync::Arc;
@@ -40,6 +53,12 @@ pub struct DeploymentConfig {
     pub env_seed: u64,
     /// Curve sampling period.
     pub eval_every: usize,
+    /// Checkpoint/resume policy (`None` = ephemeral run; resuming a
+    /// deployment requires the snapshot file to exist).
+    pub persist: Option<PersistPolicy>,
+    /// Stop after this tick boundary (graceful handoff), writing a final
+    /// checkpoint when `persist` is set. `None` = run to completion.
+    pub run_until: Option<usize>,
 }
 
 /// What the deployment run produced.
@@ -62,6 +81,10 @@ pub struct DeploymentReport {
     pub n_client_threads: usize,
     /// Worker processes hosting the fleet (0 for the in-process shape).
     pub n_workers: usize,
+    /// Workers the supervisor recovered after connection loss.
+    pub recovered_workers: u64,
+    /// Tick this run resumed from (`None` = started fresh).
+    pub resumed_at: Option<usize>,
 }
 
 fn validate(cfg: &DeploymentConfig) -> Result<()> {
@@ -73,7 +96,55 @@ fn validate(cfg: &DeploymentConfig) -> Result<()> {
     if cfg.eval_every == 0 {
         return Err(Error::Config("eval_every must be >= 1".into()));
     }
+    if cfg.run_until == Some(0) {
+        return Err(Error::Config("run_until must cover at least one tick".into()));
+    }
+    if cfg.run_until.is_some() && cfg.persist.is_none() {
+        return Err(Error::Config(
+            "run_until without persist would strand the run (nothing to resume from)".into(),
+        ));
+    }
     Ok(())
+}
+
+/// Load and validate the resume snapshot named by `cfg`, if any. Unlike
+/// the engine's sweep-friendly policy (missing file = fresh run), a
+/// deployment resume names one specific run: a missing file is an error.
+fn load_resume(
+    cfg: &DeploymentConfig,
+    stream: &FedStream,
+    rff: &RffSpace,
+    participation: &Participation,
+    delay: &DelayModel,
+) -> Result<Option<RunSnapshot>> {
+    let Some(p) = &cfg.persist else { return Ok(None) };
+    if !p.resume {
+        return Ok(None);
+    }
+    if !p.path.exists() {
+        return Err(Error::Config(format!(
+            "resume checkpoint {} does not exist",
+            p.path.display()
+        )));
+    }
+    let snap = snapshot::read_file(&p.path)?;
+    snap.validate(
+        stream.n_clients,
+        rff.d,
+        stream.n_iters,
+        cfg.env_seed,
+        &participation.probs,
+        cfg.eval_every,
+        &cfg.algo,
+        delay,
+    )?;
+    Ok(Some(snap))
+}
+
+/// Split a snapshot's flat `[K * D]` client-model block into per-client
+/// vectors for transport construction.
+fn per_client_states(snap: &RunSnapshot) -> Vec<Vec<f32>> {
+    snap.client_w.chunks(snap.d).map(|c| c.to_vec()).collect()
 }
 
 /// Run a full deployment with one OS thread per client in this process:
@@ -87,11 +158,14 @@ pub fn run_deployment(
     cfg: DeploymentConfig,
 ) -> Result<DeploymentReport> {
     validate(&cfg)?;
+    let resume = load_resume(&cfg, &stream, &rff, &participation, &delay)?;
     let k = stream.n_clients;
     let schedule = SelectionSchedule::new(cfg.algo.schedule, rff.d, cfg.algo.m, cfg.env_seed);
     let stream = Arc::new(stream);
     let rff = Arc::new(rff);
-    let mut transport = ChannelTransport::spawn(&stream, &rff, &schedule, &cfg.algo)?;
+    let init = resume.as_ref().map(per_client_states);
+    let mut transport =
+        ChannelTransport::spawn(&stream, &rff, &schedule, &cfg.algo, init.as_deref())?;
     let result = serve_loop(
         &stream,
         &rff,
@@ -100,6 +174,7 @@ pub fn run_deployment(
         &cfg,
         &schedule,
         &mut transport,
+        resume.as_ref(),
     );
     transport.shutdown()?;
     let mut report = result?;
@@ -113,7 +188,9 @@ pub fn run_deployment(
 /// `transport::run_worker` for the other end), then drives the identical
 /// server loop. Produces a report bit-identical to [`run_deployment`] on
 /// the same configuration — the cross-process determinism contract,
-/// pinned by `rust/tests/multiprocess.rs`.
+/// pinned by `rust/tests/multiprocess.rs` — and keeps producing it when
+/// workers die mid-run: the fleet supervisor recovers replacements
+/// instead of aborting.
 pub fn run_deployment_tcp(
     stream: FedStream,
     rff: RffSpace,
@@ -124,9 +201,19 @@ pub fn run_deployment_tcp(
     n_workers: usize,
 ) -> Result<DeploymentReport> {
     validate(&cfg)?;
+    let resume = load_resume(&cfg, &stream, &rff, &participation, &delay)?;
     let schedule = SelectionSchedule::new(cfg.algo.schedule, rff.d, cfg.algo.m, cfg.env_seed);
-    let mut transport =
-        TcpFleet::serve(listener, n_workers, &stream, &rff, &cfg.algo, cfg.env_seed)?;
+    let init = resume.as_ref().map(per_client_states);
+    let mut transport = TcpFleet::serve(
+        listener,
+        n_workers,
+        &stream,
+        &rff,
+        &cfg.algo,
+        &participation,
+        cfg.env_seed,
+        resume.as_ref().map(|s| (s.tick, init.as_deref().unwrap())),
+    )?;
     let result = serve_loop(
         &stream,
         &rff,
@@ -135,6 +222,7 @@ pub fn run_deployment_tcp(
         &cfg,
         &schedule,
         &mut transport,
+        resume.as_ref(),
     );
     transport.shutdown()?;
     let mut report = result?;
@@ -145,7 +233,9 @@ pub fn run_deployment_tcp(
 /// The transport-agnostic server loop: participation/scheduling decisions,
 /// downlink, sorted-ack collection, delay filing, aggregation, curve
 /// sampling — every floating-point operation in the same order regardless
-/// of transport, which is the whole determinism argument.
+/// of transport, which is the whole determinism argument. Checkpoints and
+/// resume slot in at tick boundaries, so they compose with the sorted-ack
+/// rule without touching it.
 fn serve_loop<T: Transport>(
     stream: &FedStream,
     rff: &RffSpace,
@@ -154,6 +244,7 @@ fn serve_loop<T: Transport>(
     cfg: &DeploymentConfig,
     schedule: &SelectionSchedule,
     transport: &mut T,
+    resume: Option<&RunSnapshot>,
 ) -> Result<DeploymentReport> {
     let k = stream.n_clients;
     let n_iters = stream.n_iters;
@@ -172,8 +263,42 @@ fn serve_loop<T: Transport>(
     let mut iters = Vec::new();
     let mut mse_db = Vec::new();
     let mut local_steps = 0u64;
+    let mut start = 0usize;
 
-    for n in 0..n_iters {
+    if let Some(snap) = resume {
+        server = snap.server.rebuild(algo.aggregation.clone());
+        queue = snap.queue.rebuild()?;
+        comm = snap.comm;
+        agg_total = snap.agg;
+        iters = snap.curve_iters.clone();
+        mse_db = snap.curve_db.clone();
+        local_steps = snap.local_steps;
+        start = snap.tick;
+    }
+    let stop = cfg.run_until.map_or(n_iters, |u| u.min(n_iters));
+
+    let mut journal = match &cfg.persist {
+        Some(p) => {
+            let meta = snapshot::fingerprint(
+                k,
+                rff.d,
+                n_iters,
+                cfg.env_seed,
+                &participation.probs,
+                algo,
+                delay,
+            );
+            Some(journal::for_run(
+                &crate::persist::journal_path_for(&p.path)?,
+                meta,
+                start,
+            )?)
+        }
+        None => None,
+    };
+
+    for n in start..stop {
+        transport.begin_tick(n, &server.w)?;
         // Participation decisions live on the server side of the protocol
         // (it must know whom to downlink to); the trials are the same
         // common-random-number streams the discrete engine uses.
@@ -231,6 +356,50 @@ fn serve_loop<T: Transport>(
             iters.push(n);
             mse_db.push(to_db(mse_test(&server.w, &z_test, test_y)));
         }
+
+        if let Some(j) = journal.as_mut() {
+            j.append(&TickRecord {
+                tick: n,
+                w_hash: snapshot::hash_model(&server.w),
+                uplink_msgs: comm.uplink_msgs,
+            })?;
+        }
+        if let Some(p) = &cfg.persist {
+            let boundary = n + 1;
+            let periodic = p.checkpoint_every > 0
+                && boundary % p.checkpoint_every == 0
+                && boundary < n_iters;
+            let handoff = boundary == stop && stop < n_iters;
+            if periodic || handoff {
+                let states = transport.dump_states(boundary)?;
+                let mut client_w = Vec::with_capacity(k * rff.d);
+                for w in &states {
+                    client_w.extend_from_slice(w);
+                }
+                let snap = RunSnapshot {
+                    tick: boundary,
+                    env_seed: cfg.env_seed,
+                    k,
+                    d: rff.d,
+                    n_iters,
+                    avail_probs: participation.probs.clone(),
+                    eval_every: cfg.eval_every,
+                    algo: algo.clone(),
+                    delay: *delay,
+                    schedule: schedule.clone(),
+                    server: ServerState::capture(&server),
+                    queue: QueueState::capture(&queue),
+                    client_w,
+                    rng: Vec::new(),
+                    comm,
+                    agg: agg_total,
+                    curve_iters: iters.clone(),
+                    curve_db: mse_db.clone(),
+                    local_steps,
+                };
+                snapshot::write_file(&p.path, &snap)?;
+            }
+        }
         if !cfg.tick.is_zero() {
             thread::sleep(cfg.tick);
         }
@@ -245,6 +414,8 @@ fn serve_loop<T: Transport>(
         local_steps,
         n_client_threads: 0,
         n_workers: 0,
+        recovered_workers: transport.recovered_workers(),
+        resumed_at: resume.map(|s| s.tick),
     })
 }
 
@@ -278,11 +449,15 @@ mod tests {
                 tick: Duration::ZERO,
                 env_seed: seed,
                 eval_every: 20,
+                persist: None,
+                run_until: None,
             },
         )
         .unwrap();
         assert_eq!(report.n_client_threads, 8);
         assert_eq!(report.n_workers, 0);
+        assert_eq!(report.recovered_workers, 0);
+        assert_eq!(report.resumed_at, None);
         let first = report.mse_db[0];
         let last = *report.mse_db.last().unwrap();
         assert!(last < first - 5.0, "no learning: {first} -> {last}");
@@ -313,8 +488,56 @@ mod tests {
                 tick: Duration::ZERO,
                 env_seed: seed,
                 eval_every: 0,
+                persist: None,
+                run_until: None,
             },
         );
         assert!(res.is_err(), "eval_every = 0 must be rejected");
+    }
+
+    #[test]
+    fn misconfigured_persistence_is_rejected() {
+        let cfg = StreamConfig {
+            n_clients: 2,
+            n_iters: 10,
+            data_group_samples: vec![5, 10],
+            test_size: 8,
+        };
+        let seed = 2;
+        let make = || FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+        let rff = RffSpace::sample(4, 8, 1.0, &mut Pcg32::derive(seed, &[2]));
+        let dcfg = |persist, run_until| DeploymentConfig {
+            algo: algorithms::build(Variant::PaoFedU1, 0.4, 2, 5, 5),
+            tick: Duration::ZERO,
+            env_seed: seed,
+            eval_every: 5,
+            persist,
+            run_until,
+        };
+        // run_until without persist strands the run.
+        let res = run_deployment(
+            make(),
+            rff.clone(),
+            Participation::always(2),
+            DelayModel::None,
+            dcfg(None, Some(5)),
+        );
+        assert!(res.is_err());
+        // Resuming from a missing checkpoint is an explicit error.
+        let res = run_deployment(
+            make(),
+            rff,
+            Participation::always(2),
+            DelayModel::None,
+            dcfg(
+                Some(PersistPolicy {
+                    path: std::env::temp_dir().join("pao_fed_missing_ckpt_test.ckpt"),
+                    checkpoint_every: 0,
+                    resume: true,
+                }),
+                None,
+            ),
+        );
+        assert!(res.is_err());
     }
 }

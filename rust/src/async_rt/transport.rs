@@ -10,18 +10,36 @@
 //! a loopback multi-process run reproduces the in-process deployment (and
 //! therefore the discrete engine) bit for bit. See `docs/ARCHITECTURE.md`
 //! for the wire format and the determinism contract.
+//!
+//! **Fleet supervision.** The TCP fleet no longer dies with the first
+//! worker: every handshake carries a session token, and when a connection
+//! drops the server keeps an in-memory log of per-tick server models (plus
+//! the client states of the last checkpoint, when checkpointing is on)
+//! from which a replacement process — accepted on the same listener — can
+//! rebuild the lost shard **bit-exactly** by deterministic replay
+//! ([`wire::ResumePlan`]): participation, blind scheduling and selection
+//! coords are pure functions of `(env_seed, client, tick)`, and the
+//! replayed client step is the same [`ClientState::handle_tick`]. The
+//! supervisor then re-sends the in-flight tick's outstanding downlinks and
+//! the run continues as if nothing happened (pinned by
+//! `rust/tests/multiprocess.rs`). [`Transport::dump_states`] is the
+//! checkpoint hook: it captures every client's local model at a tick
+//! boundary (and prunes the replay log to that boundary).
 
-use super::wire::{self, ClientShard, WireMsg, WorkerAssignment};
+use super::wire::{self, ClientShard, ResumePlan, WireMsg, WorkerAssignment};
 use crate::data::stream::FedStream;
 use crate::error::{Error, Result};
 use crate::fl::engine::AlgoConfig;
+use crate::fl::participation::Participation;
 use crate::fl::pipeline;
 use crate::fl::selection::{Coords, SelectionSchedule};
 use crate::fl::server::Update;
 use crate::rff::RffSpace;
 use crate::simd;
+use crate::util::rng::splitmix64;
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::{self, JoinHandle};
@@ -38,10 +56,20 @@ pub struct Ack {
 }
 
 /// How the server reaches its fleet. One tick of the protocol is: one
-/// [`Transport::send_tick`] per client (in client-id order), then exactly
-/// as many [`Transport::recv_ack`] calls; acks may come back in any order
-/// (the caller sorts them). [`Transport::shutdown`] ends the run.
+/// [`Transport::begin_tick`], one [`Transport::send_tick`] per client (in
+/// client-id order), then exactly as many [`Transport::recv_ack`] calls;
+/// acks may come back in any order (the caller sorts them).
+/// [`Transport::dump_states`] captures client state at a tick boundary
+/// for checkpointing; [`Transport::shutdown`] ends the run.
 pub trait Transport {
+    /// Announce tick `iter` with the server model `w` it will downlink
+    /// from. Fault-tolerant transports log `w` here (the recovery replay
+    /// source); the default is a no-op.
+    fn begin_tick(&mut self, iter: usize, w: &[f32]) -> Result<()> {
+        let _ = (iter, w);
+        Ok(())
+    }
+
     /// Downlink the tick-`iter` message to `client`; `portion` carries
     /// `M_{k,n} w_n` when the client participates.
     fn send_tick(
@@ -53,6 +81,21 @@ pub trait Transport {
 
     /// Block for the next acknowledgement from any client.
     fn recv_ack(&mut self) -> Result<Ack>;
+
+    /// Capture every client's local model (client-id order, bit-exact) at
+    /// the boundary before tick `next_tick` — the checkpoint state dump.
+    fn dump_states(&mut self, next_tick: usize) -> Result<Vec<Vec<f32>>> {
+        let _ = next_tick;
+        Err(Error::Config(
+            "this transport cannot capture client state".into(),
+        ))
+    }
+
+    /// Workers recovered after connection loss (0 for transports without
+    /// a supervisor).
+    fn recovered_workers(&self) -> u64 {
+        0
+    }
 
     /// Broadcast end-of-run and release the fleet.
     fn shutdown(&mut self) -> Result<()>;
@@ -128,6 +171,8 @@ enum ClientDown {
         iter: usize,
         portion: Option<(Coords, Vec<f32>)>,
     },
+    /// Upload the local model for a checkpoint.
+    Dump,
     Shutdown,
 }
 
@@ -138,10 +183,15 @@ fn client_main(
     rff: Arc<RffSpace>,
     schedule: SelectionSchedule,
     algo: AlgoConfig,
+    init_w: Option<Vec<f32>>,
     rx: Receiver<ClientDown>,
     tx: Sender<Ack>,
+    dump_tx: Sender<(usize, Vec<f32>)>,
 ) {
     let mut state = ClientState::new(id, rff.d);
+    if let Some(w) = init_w {
+        state.w = w;
+    }
     loop {
         let msg = match rx.recv() {
             Ok(m) => m,
@@ -149,6 +199,12 @@ fn client_main(
         };
         let (iter, portion) = match msg {
             ClientDown::Shutdown => return,
+            ClientDown::Dump => {
+                if dump_tx.send((id, state.w.clone())).is_err() {
+                    return;
+                }
+                continue;
+            }
             ClientDown::Tick { iter, portion } => (iter, portion),
         };
         let sample = if stream.has_data(id, iter) {
@@ -169,20 +225,32 @@ fn client_main(
 pub struct ChannelTransport {
     down: Vec<Sender<ClientDown>>,
     up: Receiver<Ack>,
+    dumps: Receiver<(usize, Vec<f32>)>,
     handles: Vec<JoinHandle<()>>,
 }
 
 impl ChannelTransport {
     /// Spawn one thread per client of `stream`, each owning a
-    /// [`ClientState`] and serving ticks until shutdown.
+    /// [`ClientState`] and serving ticks until shutdown. `init` seeds each
+    /// client's local model (a resumed run); `None` starts at zeros.
     pub fn spawn(
         stream: &Arc<FedStream>,
         rff: &Arc<RffSpace>,
         schedule: &SelectionSchedule,
         algo: &AlgoConfig,
+        init: Option<&[Vec<f32>]>,
     ) -> Result<Self> {
         let k = stream.n_clients;
+        if let Some(states) = init {
+            if states.len() != k || states.iter().any(|w| w.len() != rff.d) {
+                return Err(Error::Config(format!(
+                    "restored client states disagree with K={k}, D={}",
+                    rff.d
+                )));
+            }
+        }
         let (up_tx, up_rx) = channel::<Ack>();
+        let (dump_tx, dump_rx) = channel::<(usize, Vec<f32>)>();
         let mut down = Vec::with_capacity(k);
         let mut handles = Vec::with_capacity(k);
         for id in 0..k {
@@ -190,14 +258,18 @@ impl ChannelTransport {
             down.push(tx);
             let (stream, rff) = (Arc::clone(stream), Arc::clone(rff));
             let (schedule, algo, up_tx) = (schedule.clone(), algo.clone(), up_tx.clone());
+            let dump_tx = dump_tx.clone();
+            let init_w = init.map(|states| states[id].clone());
             let builder = thread::Builder::new().name(format!("pao-fed-client-{id}"));
             handles.push(
                 builder
-                    .spawn(move || client_main(id, stream, rff, schedule, algo, rx, up_tx))
+                    .spawn(move || {
+                        client_main(id, stream, rff, schedule, algo, init_w, rx, up_tx, dump_tx)
+                    })
                     .map_err(|e| Error::Config(format!("spawn failed: {e}")))?,
             );
         }
-        Ok(ChannelTransport { down, up: up_rx, handles })
+        Ok(ChannelTransport { down, up: up_rx, dumps: dump_rx, handles })
     }
 }
 
@@ -219,6 +291,26 @@ impl Transport for ChannelTransport {
             .map_err(|_| Error::Protocol("client channel closed".into()))
     }
 
+    fn dump_states(&mut self, _next_tick: usize) -> Result<Vec<Vec<f32>>> {
+        let k = self.down.len();
+        for (c, tx) in self.down.iter().enumerate() {
+            tx.send(ClientDown::Dump)
+                .map_err(|_| Error::Protocol(format!("client {c} died")))?;
+        }
+        let mut states: Vec<Option<Vec<f32>>> = vec![None; k];
+        for _ in 0..k {
+            let (id, w) = self
+                .dumps
+                .recv()
+                .map_err(|_| Error::Protocol("client channel closed".into()))?;
+            states[id] = Some(w);
+        }
+        Ok(states
+            .into_iter()
+            .map(|s| s.expect("every client answers exactly one dump"))
+            .collect())
+    }
+
     fn shutdown(&mut self) -> Result<()> {
         for tx in &self.down {
             let _ = tx.send(ClientDown::Shutdown);
@@ -232,12 +324,72 @@ impl Transport for ChannelTransport {
 
 // ------------------------------------------------------------ TCP fleet
 
+/// Everything a worker connection sends upstream.
+enum Uplink {
+    Ack(Ack),
+    State(usize, Vec<Vec<f32>>),
+}
+
+/// `(worker index, connection generation, event)` — the generation lets
+/// the supervisor discard stragglers from a connection it already
+/// replaced.
+type FleetEvent = (usize, u64, Result<Uplink>);
+
 struct WorkerLink {
     writer: BufWriter<TcpStream>,
     reader: Option<JoinHandle<()>>,
     /// Downlinks of the current tick, coalesced into one `TickBatch`
     /// frame when the server loop turns to collect acks.
     pending: Vec<(usize, Option<(Coords, Vec<f32>)>)>,
+    /// The current tick's already-flushed downlinks, retained until the
+    /// next `begin_tick` so a replacement worker can be re-sent exactly
+    /// the outstanding ones.
+    sent: Vec<(usize, Option<(Coords, Vec<f32>)>)>,
+}
+
+/// Replay-log bound: when a run goes this many ticks without a
+/// checkpoint state dump, the supervisor requests one itself (discarding
+/// the snapshot) purely to re-anchor the log — so an uncheckpointed
+/// multi-hour fleet holds at most this many per-tick model copies.
+const LOG_SELF_ANCHOR: usize = 1024;
+
+/// A process-unique session token stamped into every handshake: the
+/// server rejects a `HelloAck` that does not echo it (a peer that never
+/// parsed *this* run's `Hello` — a stale worker, a foreign client, a
+/// half-open connection), and log lines can attribute connections to
+/// runs. Note the worker simply echoes what it was handed — the token
+/// authenticates the handshake exchange, not the worker's intent.
+fn session_token(env_seed: u64) -> u64 {
+    static COUNTER: AtomicU64 = AtomicU64::new(1);
+    let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+    splitmix64(env_seed ^ (n << 32) ^ 0x5e55_10ae)
+}
+
+/// Assemble the handshake payload for the worker hosting `lo..hi`.
+fn make_assignment(
+    stream: &FedStream,
+    rff: &RffSpace,
+    algo: &AlgoConfig,
+    env_seed: u64,
+    session: u64,
+    avail_probs: &[f64],
+    lo: usize,
+    hi: usize,
+    resume: Option<ResumePlan>,
+) -> WorkerAssignment {
+    WorkerAssignment {
+        client_lo: lo,
+        client_hi: hi,
+        env_seed,
+        n_iters: stream.n_iters,
+        algo: algo.clone(),
+        rff: rff.clone(),
+        clients: (lo..hi).map(|c| extract_shard(stream, c)).collect(),
+        session,
+        k_total: stream.n_clients,
+        avail_probs: avail_probs.to_vec(),
+        resume,
+    }
 }
 
 /// The server side of the socket transport: accepts worker connections,
@@ -249,28 +401,60 @@ struct WorkerLink {
 /// loop blocks on acks), and each worker answers with a single `AckBatch`
 /// frame — so a tick costs one frame and one write syscall each way per
 /// worker, independent of how many clients it hosts.
-pub struct TcpFleet {
+///
+/// The fleet is also the **supervisor**: a lost connection triggers
+/// recovery (accept a replacement on the retained listener, replay the
+/// shard from `base_states` + the per-tick model `log`, re-send the
+/// in-flight tick's outstanding downlinks) instead of failing the run.
+pub struct TcpFleet<'e> {
+    listener: TcpListener,
+    session: u64,
+    stream: &'e FedStream,
+    rff: &'e RffSpace,
+    algo: AlgoConfig,
+    env_seed: u64,
+    avail_probs: Vec<f64>,
     links: Vec<WorkerLink>,
+    /// Per worker, the hosted client-id range `[lo, hi)`.
+    ranges: Vec<(usize, usize)>,
+    /// Per worker, the connection generation (bumped on every adoption).
+    gens: Vec<u64>,
     /// Client id -> hosting worker index.
     owner: Vec<usize>,
-    acks: Receiver<Result<Ack>>,
-    /// Iteration of the downlinks currently buffered in `pending` (the
+    events: Receiver<FleetEvent>,
+    event_tx: Sender<FleetEvent>,
+    /// Iteration of the downlinks currently buffered / in flight (the
     /// protocol keeps at most one iteration in flight).
     pending_iter: usize,
+    /// Which clients have acked the in-flight iteration.
+    tick_acked: Vec<bool>,
+    /// Tick at which the replay log starts (`base_states` capture point).
+    log_base: usize,
+    /// Server models for ticks `log_base..`, one per executed tick — the
+    /// recovery replay source. Pruned at every checkpoint state dump.
+    log: Vec<Vec<f32>>,
+    /// Client states at `log_base` (`None` = zeros, a fresh run).
+    base_states: Option<Vec<Vec<f32>>>,
+    recovered: u64,
 }
 
-impl TcpFleet {
+impl<'e> TcpFleet<'e> {
     /// Accept `n_workers` connections on `listener` and run the handshake:
     /// worker `i` (in accept order) is assigned clients
     /// `i*K/n .. (i+1)*K/n` and receives everything it needs to host them
-    /// deterministically. Returns once every worker has acknowledged.
+    /// deterministically. `resume` (from a checkpoint: the boundary tick
+    /// and every client's local model) makes each worker rebuild state
+    /// before serving. Returns once every worker has acknowledged. The
+    /// listener stays retained for supervisor recovery accepts.
     pub fn serve(
         listener: &TcpListener,
         n_workers: usize,
-        stream: &FedStream,
-        rff: &RffSpace,
+        stream: &'e FedStream,
+        rff: &'e RffSpace,
         algo: &AlgoConfig,
+        participation: &Participation,
         env_seed: u64,
+        resume: Option<(usize, &[Vec<f32>])>,
     ) -> Result<Self> {
         let k = stream.n_clients;
         if n_workers == 0 || n_workers > k {
@@ -278,74 +462,239 @@ impl TcpFleet {
                 "need 1..={k} workers for {k} clients, got {n_workers}"
             )));
         }
-        let (ack_tx, ack_rx) = channel::<Result<Ack>>();
+        if participation.probs.len() != k {
+            return Err(Error::Config(format!(
+                "participation has {} probabilities for {k} clients",
+                participation.probs.len()
+            )));
+        }
+        if let Some((_, states)) = resume {
+            if states.len() != k || states.iter().any(|w| w.len() != rff.d) {
+                return Err(Error::Config(format!(
+                    "restored client states disagree with K={k}, D={}",
+                    rff.d
+                )));
+            }
+        }
+        let session = session_token(env_seed);
+        let (event_tx, event_rx) = channel::<FleetEvent>();
         let mut links = Vec::with_capacity(n_workers);
+        let mut ranges = Vec::with_capacity(n_workers);
         let mut owner = vec![0usize; k];
         for i in 0..n_workers {
             let (sock, peer) = listener.accept()?;
             sock.set_nodelay(true)?;
             let (lo, hi) = (i * k / n_workers, (i + 1) * k / n_workers);
             owner[lo..hi].fill(i);
-            let assignment = WorkerAssignment {
-                client_lo: lo,
-                client_hi: hi,
+            let plan = resume.map(|(tick, states)| ResumePlan {
+                base_tick: tick,
+                states: states[lo..hi].to_vec(),
+                log: Vec::new(),
+            });
+            let assignment = make_assignment(
+                stream,
+                rff,
+                algo,
                 env_seed,
-                n_iters: stream.n_iters,
-                algo: algo.clone(),
-                rff: rff.clone(),
-                clients: (lo..hi).map(|c| extract_shard(stream, c)).collect(),
-            };
+                session,
+                &participation.probs,
+                lo,
+                hi,
+                plan,
+            );
             let mut writer = BufWriter::new(sock.try_clone()?);
             wire::send_msg(&mut writer, &WireMsg::Hello(assignment))?;
             writer.flush()?;
             let mut reader = BufReader::new(sock);
             match wire::recv_msg(&mut reader)? {
-                WireMsg::HelloAck { client_lo } if client_lo == lo => {}
+                WireMsg::HelloAck { client_lo, session: s }
+                    if client_lo == lo && s == session => {}
                 other => {
                     return Err(Error::Protocol(format!(
                         "worker {peer} answered the handshake with {other:?}"
                     )))
                 }
             }
-            let tx = ack_tx.clone();
+            let tx = event_tx.clone();
             let handle = thread::Builder::new()
                 .name(format!("pao-fed-worker-rx-{i}"))
-                .spawn(move || pump_acks(reader, tx))
+                .spawn(move || pump_acks(reader, tx, i, 0))
                 .map_err(|e| Error::Config(format!("spawn failed: {e}")))?;
-            links.push(WorkerLink { writer, reader: Some(handle), pending: Vec::new() });
+            links.push(WorkerLink {
+                writer,
+                reader: Some(handle),
+                pending: Vec::new(),
+                sent: Vec::new(),
+            });
+            ranges.push((lo, hi));
         }
-        Ok(TcpFleet { links, owner, acks: ack_rx, pending_iter: 0 })
+        let (log_base, base_states) = match resume {
+            Some((tick, states)) => (tick, Some(states.to_vec())),
+            None => (0, None),
+        };
+        Ok(TcpFleet {
+            listener: listener.try_clone()?,
+            session,
+            stream,
+            rff,
+            algo: algo.clone(),
+            env_seed,
+            avail_probs: participation.probs.clone(),
+            links,
+            ranges,
+            gens: vec![0; n_workers],
+            owner,
+            events: event_rx,
+            event_tx,
+            pending_iter: log_base,
+            tick_acked: vec![false; k],
+            log_base,
+            log: Vec::new(),
+            base_states,
+            recovered: 0,
+        })
     }
 
     /// Coalesce and send every buffered downlink: one `TickBatch` frame
-    /// and one flush per worker with pending ticks.
+    /// and one flush per worker with pending ticks. A failed worker is
+    /// recovered in place (its batch is re-sent to the replacement).
     fn flush_pending(&mut self) -> Result<()> {
-        for link in &mut self.links {
-            if link.pending.is_empty() {
+        for i in 0..self.links.len() {
+            if self.links[i].pending.is_empty() {
                 continue;
             }
-            let batch = WireMsg::TickBatch {
-                iter: self.pending_iter,
-                ticks: std::mem::take(&mut link.pending),
+            let ticks = std::mem::take(&mut self.links[i].pending);
+            let batch = WireMsg::TickBatch { iter: self.pending_iter, ticks };
+            let res = wire::send_msg(&mut self.links[i].writer, &batch)
+                .and_then(|_| self.links[i].writer.flush().map_err(Error::from));
+            let WireMsg::TickBatch { ticks, .. } = batch else {
+                unreachable!("batch shape fixed above");
             };
-            wire::send_msg(&mut link.writer, &batch)?;
-            link.writer.flush()?;
+            // Retain the flushed items either way: the recovery path
+            // re-sends outstanding ones to the replacement.
+            self.links[i].sent.extend(ticks);
+            if let Err(e) = res {
+                eprintln!("supervisor: downlink to worker {i} failed: {e}");
+                self.recover_worker(i, self.pending_iter)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Replace the connection of worker `i`: wait for a new process on
+    /// the retained listener, hand it the shard plus the replay plan that
+    /// rebuilds client state through `resume_tick`, and — when recovering
+    /// mid-tick — re-send the outstanding downlinks of the in-flight
+    /// iteration. Blocks until a replacement completes the handshake.
+    fn recover_worker(&mut self, i: usize, resume_tick: usize) -> Result<()> {
+        self.recovered += 1;
+        if let Some(h) = self.links[i].reader.take() {
+            let _ = h.join();
+        }
+        let (lo, hi) = self.ranges[i];
+        eprintln!(
+            "supervisor: worker {i} (clients {lo}..{hi}) lost at tick {resume_tick}; \
+             waiting for a replacement on {:?}",
+            self.listener.local_addr().ok()
+        );
+        loop {
+            let (sock, peer) = self.listener.accept()?;
+            match self.adopt(i, resume_tick, sock) {
+                Ok(()) => {
+                    eprintln!(
+                        "supervisor: worker {i} recovered by {peer} \
+                         (replayed {} ticks)",
+                        resume_tick - self.log_base
+                    );
+                    return Ok(());
+                }
+                Err(e) => {
+                    eprintln!(
+                        "supervisor: replacement {peer} failed the handshake: {e}; \
+                         still waiting"
+                    );
+                }
+            }
+        }
+    }
+
+    /// One adoption attempt on a fresh connection.
+    fn adopt(&mut self, i: usize, resume_tick: usize, sock: TcpStream) -> Result<()> {
+        self.gens[i] += 1;
+        sock.set_nodelay(true)?;
+        let (lo, hi) = self.ranges[i];
+        let plan = ResumePlan {
+            base_tick: self.log_base,
+            states: self
+                .base_states
+                .as_ref()
+                .map(|s| s[lo..hi].to_vec())
+                .unwrap_or_default(),
+            log: self.log[..resume_tick - self.log_base].to_vec(),
+        };
+        let assignment = make_assignment(
+            self.stream,
+            self.rff,
+            &self.algo,
+            self.env_seed,
+            self.session,
+            &self.avail_probs,
+            lo,
+            hi,
+            Some(plan),
+        );
+        let mut writer = BufWriter::new(sock.try_clone()?);
+        wire::send_msg(&mut writer, &WireMsg::Hello(assignment))?;
+        writer.flush()?;
+        let mut reader = BufReader::new(sock);
+        match wire::recv_msg(&mut reader)? {
+            WireMsg::HelloAck { client_lo, session }
+                if client_lo == lo && session == self.session => {}
+            other => {
+                return Err(Error::Protocol(format!(
+                    "replacement answered the handshake with {other:?}"
+                )))
+            }
+        }
+        let gen = self.gens[i];
+        let tx = self.event_tx.clone();
+        let handle = thread::Builder::new()
+            .name(format!("pao-fed-worker-rx-{i}-g{gen}"))
+            .spawn(move || pump_acks(reader, tx, i, gen))
+            .map_err(|e| Error::Config(format!("spawn failed: {e}")))?;
+        self.links[i].writer = writer;
+        self.links[i].reader = Some(handle);
+        if resume_tick == self.pending_iter {
+            let items: Vec<(usize, Option<(Coords, Vec<f32>)>)> = self.links[i]
+                .sent
+                .iter()
+                .filter(|(c, _)| !self.tick_acked[*c])
+                .cloned()
+                .collect();
+            if !items.is_empty() {
+                wire::send_msg(
+                    &mut self.links[i].writer,
+                    &WireMsg::TickBatch { iter: self.pending_iter, ticks: items },
+                )?;
+                self.links[i].writer.flush()?;
+            }
         }
         Ok(())
     }
 }
 
-/// Reader-thread body: decode acks off one worker connection and funnel
-/// them into the fleet's shared channel. Any read failure (including EOF)
-/// forwards an error so a worker dying mid-run fails the server loop's
-/// next `recv_ack` instead of hanging it; after a clean shutdown nobody
-/// reads the channel anymore, so the forwarded error is inert.
-fn pump_acks(mut reader: BufReader<TcpStream>, tx: Sender<Result<Ack>>) {
+/// Reader-thread body: decode uplink messages off one worker connection
+/// and funnel them into the fleet's shared channel, tagged with the
+/// worker index and connection generation. Any read failure (including
+/// EOF) forwards an error — the supervisor's recovery trigger — and ends
+/// the thread; after a clean shutdown nobody reads the channel anymore,
+/// so the forwarded error is inert.
+fn pump_acks(mut reader: BufReader<TcpStream>, tx: Sender<FleetEvent>, worker: usize, gen: u64) {
     loop {
         match wire::recv_msg(&mut reader) {
             Ok(WireMsg::Ack { client, upload, learned }) => {
                 let ack = Ack { client, upload, learned };
-                if tx.send(Ok(ack)).is_err() {
+                if tx.send((worker, gen, Ok(Uplink::Ack(ack)))).is_err() {
                     return;
                 }
             }
@@ -354,47 +703,189 @@ fn pump_acks(mut reader: BufReader<TcpStream>, tx: Sender<Result<Ack>>) {
                 // consumes (and then sorts) individual acks.
                 for (client, upload, learned) in acks {
                     let ack = Ack { client, upload, learned };
-                    if tx.send(Ok(ack)).is_err() {
+                    if tx.send((worker, gen, Ok(Uplink::Ack(ack)))).is_err() {
                         return;
                     }
                 }
             }
+            Ok(WireMsg::StateDump { client_lo, states }) => {
+                if tx
+                    .send((worker, gen, Ok(Uplink::State(client_lo, states))))
+                    .is_err()
+                {
+                    return;
+                }
+            }
             Ok(other) => {
                 let msg = format!("unexpected uplink message {other:?}");
-                let _ = tx.send(Err(Error::Protocol(msg)));
+                let _ = tx.send((worker, gen, Err(Error::Protocol(msg))));
                 return;
             }
             Err(e) => {
                 let msg = format!("worker disconnected: {e}");
-                let _ = tx.send(Err(Error::Protocol(msg)));
+                let _ = tx.send((worker, gen, Err(Error::Protocol(msg))));
                 return;
             }
         }
     }
 }
 
-impl Transport for TcpFleet {
+impl Transport for TcpFleet<'_> {
+    fn begin_tick(&mut self, iter: usize, w: &[f32]) -> Result<()> {
+        debug_assert_eq!(
+            self.log_base + self.log.len(),
+            iter,
+            "replay log out of step with the tick clock"
+        );
+        if self.log.len() >= LOG_SELF_ANCHOR {
+            // Bound the log on uncheckpointed runs: capture the fleet's
+            // client states (workers are idle at a tick boundary) and
+            // re-anchor the replay base there. `dump_states` prunes.
+            let _ = self.dump_states(iter)?;
+        }
+        self.log.push(w.to_vec());
+        self.pending_iter = iter;
+        self.tick_acked.fill(false);
+        for link in &mut self.links {
+            link.sent.clear();
+        }
+        Ok(())
+    }
+
     fn send_tick(
         &mut self,
         client: usize,
         iter: usize,
         portion: Option<(Coords, Vec<f32>)>,
     ) -> Result<()> {
-        debug_assert!(
-            self.links.iter().all(|l| l.pending.is_empty()) || self.pending_iter == iter,
-            "at most one iteration may be in flight"
-        );
-        self.pending_iter = iter;
+        debug_assert_eq!(self.pending_iter, iter, "at most one iteration may be in flight");
         self.links[self.owner[client]].pending.push((client, portion));
         Ok(())
     }
 
     fn recv_ack(&mut self) -> Result<Ack> {
         self.flush_pending()?;
-        match self.acks.recv() {
-            Ok(res) => res,
-            Err(_) => Err(Error::Protocol("worker connection lost".into())),
+        loop {
+            let (wi, gen, ev) = self
+                .events
+                .recv()
+                .map_err(|_| Error::Protocol("fleet event channel closed".into()))?;
+            if gen != self.gens[wi] {
+                continue; // straggler from a replaced connection
+            }
+            match ev {
+                Ok(Uplink::Ack(ack)) => {
+                    // Never index with a wire-supplied id: a malformed ack
+                    // is a protocol error, not a panic — and it must come
+                    // from the worker that actually hosts the client.
+                    if self.owner.get(ack.client) != Some(&wi) {
+                        return Err(Error::Protocol(format!(
+                            "worker {wi} acked client {} outside its shard",
+                            ack.client
+                        )));
+                    }
+                    self.tick_acked[ack.client] = true;
+                    return Ok(ack);
+                }
+                Ok(Uplink::State(..)) => {
+                    return Err(Error::Protocol(
+                        "state dump outside a checkpoint boundary".into(),
+                    ))
+                }
+                Err(e) => {
+                    eprintln!("supervisor: worker {wi} failed mid-tick: {e}");
+                    // The whole tick travels in one frame, so this worker
+                    // either served the in-flight tick completely (its
+                    // acks were queued before the failure — the
+                    // replacement must replay *through* the tick) or not
+                    // at all (replay stops before it; the batch is
+                    // re-sent by the adoption).
+                    let served = {
+                        let link = &self.links[wi];
+                        !link.sent.is_empty()
+                            && link.sent.iter().all(|(c, _)| self.tick_acked[*c])
+                    };
+                    let resume_tick = if served {
+                        self.pending_iter + 1
+                    } else {
+                        self.pending_iter
+                    };
+                    self.recover_worker(wi, resume_tick)?;
+                }
+            }
         }
+    }
+
+    fn dump_states(&mut self, next_tick: usize) -> Result<Vec<Vec<f32>>> {
+        let mut dumped = vec![false; self.links.len()];
+        for i in 0..self.links.len() {
+            let res = wire::send_msg(&mut self.links[i].writer, &WireMsg::StateRequest)
+                .and_then(|_| self.links[i].writer.flush().map_err(Error::from));
+            if let Err(e) = res {
+                eprintln!("supervisor: state request to worker {i} failed: {e}");
+                self.recover_worker(i, next_tick)?;
+                wire::send_msg(&mut self.links[i].writer, &WireMsg::StateRequest)?;
+                self.links[i].writer.flush()?;
+            }
+        }
+        let d = self.rff.d;
+        let mut states: Vec<Option<Vec<f32>>> = vec![None; self.owner.len()];
+        let mut remaining = self.links.len();
+        while remaining > 0 {
+            let (wi, gen, ev) = self
+                .events
+                .recv()
+                .map_err(|_| Error::Protocol("fleet event channel closed".into()))?;
+            if gen != self.gens[wi] {
+                continue;
+            }
+            match ev {
+                Ok(Uplink::State(client_lo, ws)) => {
+                    let (lo, hi) = self.ranges[wi];
+                    if dumped[wi]
+                        || client_lo != lo
+                        || ws.len() != hi - lo
+                        || ws.iter().any(|w| w.len() != d)
+                    {
+                        return Err(Error::Protocol(format!(
+                            "worker {wi} answered the checkpoint with a mismatched shard"
+                        )));
+                    }
+                    dumped[wi] = true;
+                    for (off, w) in ws.into_iter().enumerate() {
+                        states[lo + off] = Some(w);
+                    }
+                    remaining -= 1;
+                }
+                Ok(Uplink::Ack(_)) => {
+                    return Err(Error::Protocol(
+                        "unexpected ack at a checkpoint boundary".into(),
+                    ))
+                }
+                Err(e) => {
+                    eprintln!("supervisor: worker {wi} lost during checkpoint: {e}");
+                    self.recover_worker(wi, next_tick)?;
+                    if !dumped[wi] {
+                        wire::send_msg(&mut self.links[wi].writer, &WireMsg::StateRequest)?;
+                        self.links[wi].writer.flush()?;
+                    }
+                }
+            }
+        }
+        let states: Vec<Vec<f32>> = states
+            .into_iter()
+            .map(|s| s.expect("every shard dumped exactly once"))
+            .collect();
+        // Future recoveries replay from this boundary instead of tick
+        // `log_base`: prune the model log and re-anchor the base states.
+        self.base_states = Some(states.clone());
+        self.log_base = next_tick;
+        self.log.clear();
+        Ok(states)
+    }
+
+    fn recovered_workers(&self) -> u64 {
+        self.recovered
     }
 
     fn shutdown(&mut self) -> Result<()> {
@@ -446,11 +937,89 @@ pub struct WorkerReport {
     pub ticks: u64,
     /// Local-learning steps across the hosted clients.
     pub local_steps: u64,
+    /// Ticks reconstructed by recovery replay before live serving began.
+    pub replayed_ticks: u64,
+}
+
+/// Rebuild the hosted clients' state by deterministic replay: initialize
+/// at the plan's base states (zeros when empty), then re-run every logged
+/// tick through the shared [`ClientState::handle_tick`]. Participation,
+/// blind scheduling and downlink coords are recomputed from the same pure
+/// functions the server used, and portion *values* are gathered from the
+/// logged server models — so the rebuilt state is bit-identical to what
+/// an uninterrupted worker would hold. Replayed uplinks are discarded
+/// (the server already consumed the originals).
+fn replay_shard(
+    assignment: &WorkerAssignment,
+    schedule: &SelectionSchedule,
+    states: &mut [ClientState],
+    plan: &ResumePlan,
+) -> Result<usize> {
+    let (lo, hi) = (assignment.client_lo, assignment.client_hi);
+    let d = assignment.rff.d;
+    let l = assignment.rff.l;
+    if plan.base_tick + plan.log.len() > assignment.n_iters {
+        return Err(Error::Protocol(format!(
+            "replay log of {} ticks from {} overruns the {}-iteration run",
+            plan.log.len(),
+            plan.base_tick,
+            assignment.n_iters
+        )));
+    }
+    if !plan.states.is_empty() {
+        if plan.states.len() != hi - lo || plan.states.iter().any(|w| w.len() != d) {
+            return Err(Error::Protocol(
+                "resume states disagree with the assigned shard".into(),
+            ));
+        }
+        for (state, w) in states.iter_mut().zip(&plan.states) {
+            state.w = w.clone();
+        }
+    }
+    let participation = Participation { probs: assignment.avail_probs.clone() };
+    for (off, w_n) in plan.log.iter().enumerate() {
+        if w_n.len() != d {
+            return Err(Error::Protocol("replay log entry of the wrong dimension".into()));
+        }
+        let tick = plan.base_tick + off;
+        // Server stage 3, recomputed: the blind subsample mask over all K.
+        let sel = assignment.algo.subsample.map(|cap| {
+            let picked =
+                pipeline::blind_schedule(assignment.env_seed, tick, assignment.k_total, cap);
+            pipeline::selection_mask(assignment.k_total, &picked)
+        });
+        for (si, state) in states.iter_mut().enumerate() {
+            let c = lo + si;
+            let shard = &assignment.clients[si];
+            let has = shard.present[tick];
+            let mut participating =
+                participation.is_available(assignment.env_seed, c, tick, has);
+            if let Some(sel) = &sel {
+                participating = participating && sel[c];
+            }
+            let portion = participating.then(|| {
+                let coords = pipeline::downlink_coords(schedule, &assignment.algo, c, tick);
+                let mut values = Vec::with_capacity(coords.len());
+                coords.for_each(|j| values.push(w_n[j]));
+                (coords, values)
+            });
+            let sample = has.then(|| (&shard.xs[tick * l..(tick + 1) * l], shard.ys[tick]));
+            let algo = &assignment.algo;
+            let _ = state.handle_tick(&assignment.rff, schedule, algo, tick, portion, sample);
+        }
+    }
+    Ok(plan.log.len())
 }
 
 /// Worker-process entry point: connect to a [`TcpFleet`] server at `addr`,
-/// receive the shard assignment, host those clients until shutdown.
-/// Blocks for the whole run.
+/// receive the shard assignment (replaying state first when the
+/// assignment carries a resume plan — a reconnect or a resumed run), host
+/// those clients until shutdown. Blocks for the whole run.
+///
+/// Test hook: `PAO_FED_CRASH_AT_TICK=N` makes the process exit abruptly
+/// (code 3, sockets unflushed) on the first downlink for iteration >= N —
+/// the deterministic "kill a worker mid-run" used by the supervisor
+/// recovery tests.
 pub fn run_worker(addr: &str) -> Result<WorkerReport> {
     let sock = TcpStream::connect(addr)?;
     sock.set_nodelay(true)?;
@@ -472,6 +1041,13 @@ pub fn run_worker(addr: &str) -> Result<WorkerReport> {
             assignment.clients.len()
         )));
     }
+    if hi > assignment.k_total || assignment.avail_probs.len() != assignment.k_total {
+        return Err(Error::Protocol(format!(
+            "fleet of {} with {} availability probabilities cannot host {lo}..{hi}",
+            assignment.k_total,
+            assignment.avail_probs.len()
+        )));
+    }
     let n = assignment.n_iters;
     for (i, c) in assignment.clients.iter().enumerate() {
         if c.present.len() != n || c.ys.len() != n || c.xs.len() != n * assignment.rff.l {
@@ -487,13 +1063,40 @@ pub fn run_worker(addr: &str) -> Result<WorkerReport> {
     // both ends see one schedule realization.
     let schedule = SelectionSchedule::new(algo.schedule, rff.d, algo.m, assignment.env_seed);
     let mut states: Vec<ClientState> = (lo..hi).map(|id| ClientState::new(id, rff.d)).collect();
-    wire::send_msg(&mut writer, &WireMsg::HelloAck { client_lo: lo })?;
+    let mut replayed = 0usize;
+    if let Some(plan) = &assignment.resume {
+        replayed = replay_shard(&assignment, &schedule, &mut states, plan)?;
+    }
+    wire::send_msg(
+        &mut writer,
+        &WireMsg::HelloAck { client_lo: lo, session: assignment.session },
+    )?;
     writer.flush()?;
 
-    let mut report = WorkerReport { client_lo: lo, client_hi: hi, ticks: 0, local_steps: 0 };
+    let crash_at: Option<usize> = std::env::var("PAO_FED_CRASH_AT_TICK")
+        .ok()
+        .and_then(|v| v.parse().ok());
+    let crash_check = |iter: usize| {
+        if crash_at.is_some_and(|t| iter >= t) {
+            eprintln!(
+                "worker: PAO_FED_CRASH_AT_TICK={} hit at iter {iter}; dying",
+                crash_at.unwrap()
+            );
+            std::process::exit(3);
+        }
+    };
+
+    let mut report = WorkerReport {
+        client_lo: lo,
+        client_hi: hi,
+        ticks: 0,
+        local_steps: 0,
+        replayed_ticks: replayed as u64,
+    };
     loop {
         match wire::recv_msg(&mut reader)? {
             WireMsg::Tick { client, iter, portion } => {
+                crash_check(iter);
                 let (client, upload, learned) = serve_one(
                     &assignment,
                     &schedule,
@@ -512,6 +1115,7 @@ pub fn run_worker(addr: &str) -> Result<WorkerReport> {
                 }
             }
             WireMsg::TickBatch { iter, ticks } => {
+                crash_check(iter);
                 // The whole tick for this worker in one frame; answer
                 // with the whole tick's acks in one frame.
                 let mut acks = Vec::with_capacity(ticks.len());
@@ -527,6 +1131,14 @@ pub fn run_worker(addr: &str) -> Result<WorkerReport> {
                     )?);
                 }
                 wire::send_msg(&mut writer, &WireMsg::AckBatch { acks })?;
+                writer.flush()?;
+            }
+            WireMsg::StateRequest => {
+                let dump: Vec<Vec<f32>> = states.iter().map(|s| s.w.clone()).collect();
+                wire::send_msg(
+                    &mut writer,
+                    &WireMsg::StateDump { client_lo: lo, states: dump },
+                )?;
                 writer.flush()?;
             }
             WireMsg::Shutdown => break,
@@ -632,5 +1244,104 @@ mod tests {
         let mut st = ClientState::new(0, 8);
         let ack = st.handle_tick(&rff, &schedule, &sgd, 0, None, Some((&x, 2.0)));
         assert_eq!(ack.learned, 0, "no autonomous updates for FedSGD");
+    }
+
+    /// The recovery replay rebuilds client state bit-identically: run a
+    /// shard live against a synthetic per-tick model log, then rebuild a
+    /// fresh shard from the same log via `replay_shard` and compare every
+    /// model.
+    #[test]
+    fn replay_rebuilds_client_state_bit_exactly() {
+        use crate::data::stream::StreamConfig;
+        use crate::data::synthetic::Eq39Source;
+
+        let seed = 23;
+        let (k, n, d) = (6usize, 40usize, 16usize);
+        let cfg = StreamConfig {
+            n_clients: k,
+            n_iters: n,
+            data_group_samples: vec![n / 2, n],
+            test_size: 8,
+        };
+        let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+        let mut rng = Pcg32::derive(seed, &[0xabc]);
+        let rff = RffSpace::sample(4, d, 1.0, &mut rng);
+        for variant in [Variant::PaoFedU2, Variant::OnlineFed { subsample: 3 }] {
+            let algo = algorithms::build(variant, 0.4, 4, 10, 5);
+            let schedule = SelectionSchedule::new(algo.schedule, d, algo.m, seed);
+            let participation = Participation::grouped(k, &[0.8, 0.4], 2);
+            let (lo, hi) = (1usize, 4usize);
+            let assignment = make_assignment(
+                &stream,
+                &rff,
+                &algo,
+                seed,
+                7,
+                &participation.probs,
+                lo,
+                hi,
+                None,
+            );
+            // A synthetic but deterministic per-tick server-model log.
+            let log: Vec<Vec<f32>> = (0..n)
+                .map(|t| (0..d).map(|j| ((t * 31 + j * 7) % 13) as f32 * 0.125 - 0.5).collect())
+                .collect();
+
+            // Live pass: serve every tick the way `run_worker` would.
+            let mut live: Vec<ClientState> =
+                (lo..hi).map(|id| ClientState::new(id, d)).collect();
+            let live_plan = ResumePlan { base_tick: 0, states: vec![], log: log.clone() };
+            replay_shard(&assignment, &schedule, &mut live, &live_plan).unwrap();
+
+            // Interrupted pass: replay the first 25 ticks from the log,
+            // then the rest — crossing a (states, log) re-anchor like a
+            // checkpoint prune would.
+            let mut rebuilt: Vec<ClientState> =
+                (lo..hi).map(|id| ClientState::new(id, d)).collect();
+            let first = ResumePlan { base_tick: 0, states: vec![], log: log[..25].to_vec() };
+            replay_shard(&assignment, &schedule, &mut rebuilt, &first).unwrap();
+            let mid_states: Vec<Vec<f32>> = rebuilt.iter().map(|s| s.w.clone()).collect();
+            let mut rebuilt: Vec<ClientState> =
+                (lo..hi).map(|id| ClientState::new(id, d)).collect();
+            let second = ResumePlan { base_tick: 25, states: mid_states, log: log[25..].to_vec() };
+            replay_shard(&assignment, &schedule, &mut rebuilt, &second).unwrap();
+
+            for (a, b) in live.iter().zip(&rebuilt) {
+                assert_eq!(a.w, b.w, "{variant:?}: client {} state diverged", a.id);
+            }
+        }
+    }
+
+    /// Hostile resume plans are rejected cleanly.
+    #[test]
+    fn replay_rejects_mismatched_plans() {
+        use crate::data::stream::StreamConfig;
+        use crate::data::synthetic::Eq39Source;
+
+        let seed = 3;
+        let cfg = StreamConfig {
+            n_clients: 4,
+            n_iters: 10,
+            data_group_samples: vec![5, 10],
+            test_size: 4,
+        };
+        let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+        let rff = RffSpace::sample(4, 8, 1.0, &mut Pcg32::derive(seed, &[1]));
+        let algo = algorithms::build(Variant::PaoFedU1, 0.4, 2, 10, 5);
+        let schedule = SelectionSchedule::new(algo.schedule, 8, algo.m, seed);
+        let probs = vec![0.5; 4];
+        let assignment = make_assignment(&stream, &rff, &algo, seed, 1, &probs, 0, 2, None);
+        let mut states: Vec<ClientState> = (0..2).map(|id| ClientState::new(id, 8)).collect();
+        // Log overrunning the run.
+        let plan = ResumePlan { base_tick: 8, states: vec![], log: vec![vec![0.0; 8]; 3] };
+        assert!(replay_shard(&assignment, &schedule, &mut states, &plan).is_err());
+        // Wrong state count / dimension.
+        let plan = ResumePlan { base_tick: 0, states: vec![vec![0.0; 8]], log: vec![] };
+        assert!(replay_shard(&assignment, &schedule, &mut states, &plan).is_err());
+        let plan = ResumePlan { base_tick: 0, states: vec![vec![0.0; 7]; 2], log: vec![] };
+        assert!(replay_shard(&assignment, &schedule, &mut states, &plan).is_err());
+        // Wrong log dimension.
+        let plan = ResumePlan { base_tick: 0, states: vec![], log: vec![vec![0.0; 7]] };
+        assert!(replay_shard(&assignment, &schedule, &mut states, &plan).is_err());
     }
 }

@@ -3,9 +3,11 @@
 //! Framing: every message is one frame, `u32` little-endian payload length
 //! followed by the payload. The payload is a tag byte selecting the
 //! [`WireMsg`] variant, then the variant's fields in declaration order.
-//! Scalar encodings: integers little-endian (`usize` as `u64`), `bool` as
-//! one byte, `f32`/`f64` as their IEEE-754 little-endian bit patterns —
-//! which makes the transfer of model values **bit-exact**, the property the
+//! The scalar encodings come from the shared binary substrate
+//! (`crate::persist::codec`, also used by the checkpoint/journal files):
+//! integers little-endian (`usize` as `u64`), `bool` as one byte,
+//! `f32`/`f64` as their IEEE-754 little-endian bit patterns — which makes
+//! the transfer of model values **bit-exact**, the property the
 //! cross-process determinism contract rests on (see
 //! `docs/ARCHITECTURE.md`). Vectors are a `u64` element count followed by
 //! the elements.
@@ -16,8 +18,9 @@
 
 use crate::error::{Error, Result};
 use crate::fl::engine::AlgoConfig;
-use crate::fl::selection::{Coords, ScheduleKind};
-use crate::fl::server::{AggregationMode, AlphaSchedule, Update};
+use crate::fl::selection::Coords;
+use crate::fl::server::Update;
+use crate::persist::codec::{self, Cur};
 use crate::rff::RffSpace;
 use std::io::{Read, Write};
 
@@ -30,10 +33,14 @@ pub const MAX_FRAME: usize = 1 << 28;
 pub enum WireMsg {
     /// Server -> worker: the handshake assigning a shard of clients.
     Hello(WorkerAssignment),
-    /// Worker -> server: shard accepted, client threads ready.
+    /// Worker -> server: shard accepted (and replayed, when the
+    /// assignment carried a resume plan), client states ready.
     HelloAck {
         /// First client id the worker hosts (echo of the assignment).
         client_lo: usize,
+        /// Echo of the assignment's session token; a mismatch means the
+        /// worker answered some other run's handshake.
+        session: u64,
     },
     /// Server -> worker: one client's tick message (stage-4 downlink).
     Tick {
@@ -71,13 +78,47 @@ pub enum WireMsg {
         /// fields as [`WireMsg::Ack`].
         acks: Vec<(usize, Option<Update>, u32)>,
     },
+    /// Server -> worker: upload every hosted client's local model (the
+    /// checkpoint state-capture request; answered by
+    /// [`WireMsg::StateDump`]).
+    StateRequest,
+    /// Worker -> server: the hosted clients' local models, in client-id
+    /// order, bit-exact.
+    StateDump {
+        /// First hosted client id (identifies the shard).
+        client_lo: usize,
+        /// One model of length D per hosted client.
+        states: Vec<Vec<f32>>,
+    },
     /// Server -> worker: end of run.
     Shutdown,
 }
 
+/// How a (re)connecting worker reconstructs its clients' state before
+/// serving live ticks. The worker initializes each hosted client at
+/// `states` (zeros when empty — a fresh run), then deterministically
+/// replays ticks `base_tick .. base_tick + log.len()` against the logged
+/// server models: participation, blind scheduling and selection coords
+/// are all pure functions of `(env_seed, client, tick)`, and the client
+/// step itself is the shared `ClientState::handle_tick` — so the rebuilt
+/// state is bit-identical to what an uninterrupted worker would hold.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResumePlan {
+    /// Tick at which `states` was captured.
+    pub base_tick: usize,
+    /// Per hosted client, the local model at `base_tick`; empty means
+    /// every client starts at zeros (base_tick at a fresh run's origin).
+    pub states: Vec<Vec<f32>>,
+    /// Server models `w_n` for ticks `base_tick ..`, one entry per tick
+    /// to replay.
+    pub log: Vec<Vec<f32>>,
+}
+
 /// The handshake payload: which clients a worker hosts and everything it
 /// needs to run them deterministically (the RFF realization, the algorithm
-/// preset, and each client's materialized sample stream).
+/// preset, each client's materialized sample stream, the participation
+/// probabilities for recovery replay, and — for a reconnecting or resumed
+/// worker — the [`ResumePlan`] that rebuilds client state).
 #[derive(Clone, Debug, PartialEq)]
 pub struct WorkerAssignment {
     /// First hosted client id (inclusive).
@@ -94,6 +135,15 @@ pub struct WorkerAssignment {
     pub rff: RffSpace,
     /// Per hosted client, `client_hi - client_lo` entries in id order.
     pub clients: Vec<ClientShard>,
+    /// Session token binding the connection to one server run.
+    pub session: u64,
+    /// Total fleet size K (the blind scheduler samples over all of it).
+    pub k_total: usize,
+    /// Every client's availability probability, `[k_total]` (recovery
+    /// replay re-draws participation server-side decisions).
+    pub avail_probs: Vec<f64>,
+    /// `Some` when the worker must rebuild state before serving.
+    pub resume: Option<ResumePlan>,
 }
 
 /// One client's slice of the materialized stream, dense over the run.
@@ -109,127 +159,22 @@ pub struct ClientShard {
 
 // ---------------------------------------------------------------- encode
 
-fn put_u64(buf: &mut Vec<u8>, v: u64) {
-    buf.extend_from_slice(&v.to_le_bytes());
-}
-
-fn put_usize(buf: &mut Vec<u8>, v: usize) {
-    put_u64(buf, v as u64);
-}
-
-fn put_u32(buf: &mut Vec<u8>, v: u32) {
-    buf.extend_from_slice(&v.to_le_bytes());
-}
-
-fn put_bool(buf: &mut Vec<u8>, v: bool) {
-    buf.push(v as u8);
-}
-
-fn put_f32(buf: &mut Vec<u8>, v: f32) {
-    buf.extend_from_slice(&v.to_le_bytes());
-}
-
-fn put_f64(buf: &mut Vec<u8>, v: f64) {
-    buf.extend_from_slice(&v.to_le_bytes());
-}
-
-fn put_f32s(buf: &mut Vec<u8>, vs: &[f32]) {
-    put_usize(buf, vs.len());
-    for &v in vs {
-        put_f32(buf, v);
-    }
-}
-
-fn put_str(buf: &mut Vec<u8>, s: &str) {
-    put_usize(buf, s.len());
-    buf.extend_from_slice(s.as_bytes());
-}
-
-fn put_coords(buf: &mut Vec<u8>, c: &Coords) {
-    match c {
-        Coords::Range { start, len, d } => {
-            buf.push(0);
-            put_usize(buf, *start);
-            put_usize(buf, *len);
-            put_usize(buf, *d);
-        }
-        Coords::List { idx, d } => {
-            buf.push(1);
-            put_usize(buf, idx.len());
-            for &i in idx {
-                put_u32(buf, i);
-            }
-            put_usize(buf, *d);
-        }
-        Coords::Full { d } => {
-            buf.push(2);
-            put_usize(buf, *d);
-        }
-    }
-}
-
-fn put_update(buf: &mut Vec<u8>, u: &Update) {
-    put_usize(buf, u.client);
-    put_usize(buf, u.sent_iter);
-    put_coords(buf, &u.coords);
-    put_f32s(buf, &u.values);
-}
-
 fn put_portion(buf: &mut Vec<u8>, p: &Option<(Coords, Vec<f32>)>) {
     match p {
-        None => put_bool(buf, false),
+        None => codec::put_bool(buf, false),
         Some((coords, values)) => {
-            put_bool(buf, true);
-            put_coords(buf, coords);
-            put_f32s(buf, values);
+            codec::put_bool(buf, true);
+            codec::put_coords(buf, coords);
+            codec::put_f32s(buf, values);
         }
     }
 }
 
-fn schedule_kind_tag(k: ScheduleKind) -> u8 {
-    match k {
-        ScheduleKind::Coordinated => 0,
-        ScheduleKind::Uncoordinated => 1,
-        ScheduleKind::Full => 2,
-        ScheduleKind::RandomSubset => 3,
+fn put_f32_rows(buf: &mut Vec<u8>, rows: &[Vec<f32>]) {
+    codec::put_usize(buf, rows.len());
+    for r in rows {
+        codec::put_f32s(buf, r);
     }
-}
-
-fn put_algo(buf: &mut Vec<u8>, a: &AlgoConfig) {
-    put_str(buf, &a.name);
-    put_f32(buf, a.mu);
-    buf.push(schedule_kind_tag(a.schedule));
-    put_usize(buf, a.m);
-    put_bool(buf, a.refine_before_share);
-    put_bool(buf, a.autonomous_updates);
-    match a.subsample {
-        None => put_bool(buf, false),
-        Some(s) => {
-            put_bool(buf, true);
-            put_usize(buf, s);
-        }
-    }
-    put_bool(buf, a.full_downlink);
-    match &a.aggregation {
-        AggregationMode::DeviationBuckets {
-            alpha,
-            l_max,
-            most_recent_wins,
-        } => {
-            buf.push(0);
-            match alpha {
-                AlphaSchedule::Ones => buf.push(0),
-                AlphaSchedule::Powers(p) => {
-                    buf.push(1);
-                    put_f64(buf, *p);
-                }
-            }
-            put_usize(buf, *l_max);
-            put_bool(buf, *most_recent_wins);
-        }
-        AggregationMode::PlainAverage => buf.push(1),
-    }
-    put_usize(buf, a.eval_every);
 }
 
 /// Encode a message into a standalone payload (no frame header).
@@ -238,71 +183,90 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
     match msg {
         WireMsg::Hello(h) => {
             buf.push(0);
-            put_usize(&mut buf, h.client_lo);
-            put_usize(&mut buf, h.client_hi);
-            put_u64(&mut buf, h.env_seed);
-            put_usize(&mut buf, h.n_iters);
-            put_algo(&mut buf, &h.algo);
-            put_usize(&mut buf, h.rff.l);
-            put_usize(&mut buf, h.rff.d);
-            put_f32s(&mut buf, &h.rff.omega);
-            put_f32s(&mut buf, &h.rff.b);
-            put_usize(&mut buf, h.clients.len());
+            codec::put_usize(&mut buf, h.client_lo);
+            codec::put_usize(&mut buf, h.client_hi);
+            codec::put_u64(&mut buf, h.env_seed);
+            codec::put_usize(&mut buf, h.n_iters);
+            codec::put_algo(&mut buf, &h.algo);
+            codec::put_usize(&mut buf, h.rff.l);
+            codec::put_usize(&mut buf, h.rff.d);
+            codec::put_f32s(&mut buf, &h.rff.omega);
+            codec::put_f32s(&mut buf, &h.rff.b);
+            codec::put_usize(&mut buf, h.clients.len());
             for c in &h.clients {
-                put_usize(&mut buf, c.present.len());
+                codec::put_usize(&mut buf, c.present.len());
                 for &p in &c.present {
-                    put_bool(&mut buf, p);
+                    codec::put_bool(&mut buf, p);
                 }
-                put_f32s(&mut buf, &c.xs);
-                put_f32s(&mut buf, &c.ys);
+                codec::put_f32s(&mut buf, &c.xs);
+                codec::put_f32s(&mut buf, &c.ys);
+            }
+            codec::put_u64(&mut buf, h.session);
+            codec::put_usize(&mut buf, h.k_total);
+            codec::put_f64s(&mut buf, &h.avail_probs);
+            match &h.resume {
+                None => codec::put_bool(&mut buf, false),
+                Some(plan) => {
+                    codec::put_bool(&mut buf, true);
+                    codec::put_usize(&mut buf, plan.base_tick);
+                    put_f32_rows(&mut buf, &plan.states);
+                    put_f32_rows(&mut buf, &plan.log);
+                }
             }
         }
-        WireMsg::HelloAck { client_lo } => {
+        WireMsg::HelloAck { client_lo, session } => {
             buf.push(1);
-            put_usize(&mut buf, *client_lo);
+            codec::put_usize(&mut buf, *client_lo);
+            codec::put_u64(&mut buf, *session);
         }
         WireMsg::Tick { client, iter, portion } => {
             buf.push(2);
-            put_usize(&mut buf, *client);
-            put_usize(&mut buf, *iter);
+            codec::put_usize(&mut buf, *client);
+            codec::put_usize(&mut buf, *iter);
             put_portion(&mut buf, portion);
         }
         WireMsg::Ack { client, upload, learned } => {
             buf.push(3);
-            put_usize(&mut buf, *client);
+            codec::put_usize(&mut buf, *client);
             match upload {
-                None => put_bool(&mut buf, false),
+                None => codec::put_bool(&mut buf, false),
                 Some(u) => {
-                    put_bool(&mut buf, true);
-                    put_update(&mut buf, u);
+                    codec::put_bool(&mut buf, true);
+                    codec::put_update(&mut buf, u);
                 }
             }
-            put_u32(&mut buf, *learned);
+            codec::put_u32(&mut buf, *learned);
         }
         WireMsg::Shutdown => buf.push(4),
         WireMsg::TickBatch { iter, ticks } => {
             buf.push(5);
-            put_usize(&mut buf, *iter);
-            put_usize(&mut buf, ticks.len());
+            codec::put_usize(&mut buf, *iter);
+            codec::put_usize(&mut buf, ticks.len());
             for (client, portion) in ticks {
-                put_usize(&mut buf, *client);
+                codec::put_usize(&mut buf, *client);
                 put_portion(&mut buf, portion);
             }
         }
         WireMsg::AckBatch { acks } => {
             buf.push(6);
-            put_usize(&mut buf, acks.len());
+            codec::put_usize(&mut buf, acks.len());
             for (client, upload, learned) in acks {
-                put_usize(&mut buf, *client);
+                codec::put_usize(&mut buf, *client);
                 match upload {
-                    None => put_bool(&mut buf, false),
+                    None => codec::put_bool(&mut buf, false),
                     Some(u) => {
-                        put_bool(&mut buf, true);
-                        put_update(&mut buf, u);
+                        codec::put_bool(&mut buf, true);
+                        codec::put_update(&mut buf, u);
                     }
                 }
-                put_u32(&mut buf, *learned);
+                codec::put_u32(&mut buf, *learned);
             }
+        }
+        WireMsg::StateRequest => buf.push(7),
+        WireMsg::StateDump { client_lo, states } => {
+            buf.push(8);
+            codec::put_usize(&mut buf, *client_lo);
+            put_f32_rows(&mut buf, states);
         }
     }
     buf
@@ -310,177 +274,27 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
 
 // ---------------------------------------------------------------- decode
 
-/// Byte-slice cursor for decoding one payload.
-struct Cur<'a> {
-    buf: &'a [u8],
-    pos: usize,
+fn portion(c: &mut Cur<'_>) -> Result<Option<(Coords, Vec<f32>)>> {
+    if c.bool()? {
+        Ok(Some((c.coords()?, c.f32s()?)))
+    } else {
+        Ok(None)
+    }
 }
 
-impl<'a> Cur<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.pos + n > self.buf.len() {
-            return Err(Error::Protocol(format!(
-                "truncated frame: need {n} bytes at offset {} of {}",
-                self.pos,
-                self.buf.len()
-            )));
-        }
-        let s = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
-        Ok(s)
+fn f32_rows(c: &mut Cur<'_>) -> Result<Vec<Vec<f32>>> {
+    // Each row carries at least its length prefix.
+    let n = c.len(8)?;
+    let mut rows = Vec::with_capacity(n);
+    for _ in 0..n {
+        rows.push(c.f32s()?);
     }
-
-    fn u8(&mut self) -> Result<u8> {
-        Ok(self.take(1)?[0])
-    }
-
-    fn bool(&mut self) -> Result<bool> {
-        Ok(self.u8()? != 0)
-    }
-
-    fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
-    }
-
-    fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
-    }
-
-    fn usize(&mut self) -> Result<usize> {
-        Ok(self.u64()? as usize)
-    }
-
-    /// A `usize` that will size an allocation of `elem`-byte-minimum
-    /// items: bounded by the bytes remaining in the frame, so a corrupt
-    /// count cannot trigger a reservation larger than the frame itself.
-    fn len(&mut self, elem: usize) -> Result<usize> {
-        let n = self.usize()?;
-        let remaining = self.buf.len() - self.pos;
-        if n > remaining / elem.max(1) {
-            return Err(Error::Protocol(format!(
-                "corrupt count {n} (x{elem}B) exceeds {remaining} remaining frame bytes"
-            )));
-        }
-        Ok(n)
-    }
-
-    fn f32(&mut self) -> Result<f32> {
-        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
-    }
-
-    fn f64(&mut self) -> Result<f64> {
-        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
-    }
-
-    fn f32s(&mut self) -> Result<Vec<f32>> {
-        let n = self.len(4)?;
-        let mut v = Vec::with_capacity(n);
-        for _ in 0..n {
-            v.push(self.f32()?);
-        }
-        Ok(v)
-    }
-
-    fn string(&mut self) -> Result<String> {
-        let n = self.len(1)?;
-        String::from_utf8(self.take(n)?.to_vec())
-            .map_err(|_| Error::Protocol("non-utf8 string field".into()))
-    }
-
-    fn coords(&mut self) -> Result<Coords> {
-        match self.u8()? {
-            0 => Ok(Coords::Range { start: self.usize()?, len: self.usize()?, d: self.usize()? }),
-            1 => {
-                let n = self.len(4)?;
-                let mut idx = Vec::with_capacity(n);
-                for _ in 0..n {
-                    idx.push(self.u32()?);
-                }
-                Ok(Coords::List { idx, d: self.usize()? })
-            }
-            2 => Ok(Coords::Full { d: self.usize()? }),
-            t => Err(Error::Protocol(format!("bad coords tag {t}"))),
-        }
-    }
-
-    fn update(&mut self) -> Result<Update> {
-        Ok(Update {
-            client: self.usize()?,
-            sent_iter: self.usize()?,
-            coords: self.coords()?,
-            values: self.f32s()?,
-        })
-    }
-
-    fn portion(&mut self) -> Result<Option<(Coords, Vec<f32>)>> {
-        if self.bool()? {
-            Ok(Some((self.coords()?, self.f32s()?)))
-        } else {
-            Ok(None)
-        }
-    }
-
-    fn schedule_kind(&mut self) -> Result<ScheduleKind> {
-        match self.u8()? {
-            0 => Ok(ScheduleKind::Coordinated),
-            1 => Ok(ScheduleKind::Uncoordinated),
-            2 => Ok(ScheduleKind::Full),
-            3 => Ok(ScheduleKind::RandomSubset),
-            t => Err(Error::Protocol(format!("bad schedule tag {t}"))),
-        }
-    }
-
-    fn algo(&mut self) -> Result<AlgoConfig> {
-        let name = self.string()?;
-        let mu = self.f32()?;
-        let schedule = self.schedule_kind()?;
-        let m = self.usize()?;
-        let refine_before_share = self.bool()?;
-        let autonomous_updates = self.bool()?;
-        let subsample = if self.bool()? {
-            Some(self.usize()?)
-        } else {
-            None
-        };
-        let full_downlink = self.bool()?;
-        let aggregation = match self.u8()? {
-            0 => {
-                let alpha = match self.u8()? {
-                    0 => AlphaSchedule::Ones,
-                    1 => AlphaSchedule::Powers(self.f64()?),
-                    t => return Err(Error::Protocol(format!("bad alpha tag {t}"))),
-                };
-                AggregationMode::DeviationBuckets {
-                    alpha,
-                    l_max: self.usize()?,
-                    most_recent_wins: self.bool()?,
-                }
-            }
-            1 => AggregationMode::PlainAverage,
-            t => return Err(Error::Protocol(format!("bad aggregation tag {t}"))),
-        };
-        let eval_every = self.usize()?;
-        Ok(AlgoConfig {
-            name,
-            mu,
-            schedule,
-            m,
-            refine_before_share,
-            autonomous_updates,
-            subsample,
-            full_downlink,
-            aggregation,
-            eval_every,
-        })
-    }
+    Ok(rows)
 }
 
 /// Decode one payload produced by [`encode`].
 pub fn decode(payload: &[u8]) -> Result<WireMsg> {
-    let mut c = Cur {
-        buf: payload,
-        pos: 0,
-    };
+    let mut c = Cur::new(payload);
     let msg = match c.u8()? {
         0 => {
             let client_lo = c.usize()?;
@@ -512,6 +326,18 @@ pub fn decode(payload: &[u8]) -> Result<WireMsg> {
                     ys: c.f32s()?,
                 });
             }
+            let session = c.u64()?;
+            let k_total = c.usize()?;
+            let avail_probs = c.f64s()?;
+            let resume = if c.bool()? {
+                Some(ResumePlan {
+                    base_tick: c.usize()?,
+                    states: f32_rows(&mut c)?,
+                    log: f32_rows(&mut c)?,
+                })
+            } else {
+                None
+            };
             WireMsg::Hello(WorkerAssignment {
                 client_lo,
                 client_hi,
@@ -520,10 +346,14 @@ pub fn decode(payload: &[u8]) -> Result<WireMsg> {
                 algo,
                 rff,
                 clients,
+                session,
+                k_total,
+                avail_probs,
+                resume,
             })
         }
-        1 => WireMsg::HelloAck { client_lo: c.usize()? },
-        2 => WireMsg::Tick { client: c.usize()?, iter: c.usize()?, portion: c.portion()? },
+        1 => WireMsg::HelloAck { client_lo: c.usize()?, session: c.u64()? },
+        2 => WireMsg::Tick { client: c.usize()?, iter: c.usize()?, portion: portion(&mut c)? },
         3 => WireMsg::Ack {
             client: c.usize()?,
             upload: if c.bool()? { Some(c.update()?) } else { None },
@@ -536,7 +366,7 @@ pub fn decode(payload: &[u8]) -> Result<WireMsg> {
             let n = c.len(9)?;
             let mut ticks = Vec::with_capacity(n);
             for _ in 0..n {
-                ticks.push((c.usize()?, c.portion()?));
+                ticks.push((c.usize()?, portion(&mut c)?));
             }
             WireMsg::TickBatch { iter, ticks }
         }
@@ -551,12 +381,14 @@ pub fn decode(payload: &[u8]) -> Result<WireMsg> {
             }
             WireMsg::AckBatch { acks }
         }
+        7 => WireMsg::StateRequest,
+        8 => WireMsg::StateDump { client_lo: c.usize()?, states: f32_rows(&mut c)? },
         t => return Err(Error::Protocol(format!("bad message tag {t}"))),
     };
-    if c.pos != payload.len() {
+    if c.remaining() != 0 {
         return Err(Error::Protocol(format!(
             "{} trailing bytes after message",
-            payload.len() - c.pos
+            c.remaining()
         )));
     }
     Ok(msg)
@@ -633,7 +465,7 @@ mod tests {
             values: vec![1.0, -0.0, f32::MIN_POSITIVE, f32::from_bits(0x7f7f_fffe)],
         };
         roundtrip(&WireMsg::Shutdown);
-        roundtrip(&WireMsg::HelloAck { client_lo: 9 });
+        roundtrip(&WireMsg::HelloAck { client_lo: 9, session: 0xdead_beef });
         roundtrip(&WireMsg::Tick { client: 7, iter: 123, portion: None });
         let coords = Coords::List { idx: vec![0, 5, 31], d: 32 };
         roundtrip(&WireMsg::Tick {
@@ -643,17 +475,30 @@ mod tests {
         });
         roundtrip(&WireMsg::Ack { client: 5, upload: None, learned: 1 });
         roundtrip(&WireMsg::Ack { client: 5, upload: Some(update), learned: 0 });
+        roundtrip(&WireMsg::StateRequest);
+        roundtrip(&WireMsg::StateDump { client_lo: 4, states: vec![] });
+        roundtrip(&WireMsg::StateDump {
+            client_lo: 4,
+            states: vec![vec![0.5, -0.0, 2.5], vec![], vec![f32::MIN_POSITIVE]],
+        });
     }
 
     #[test]
     fn roundtrip_hello_with_algo_and_rff() {
         let mut rng = Pcg32::new(3, 1);
         let rff = RffSpace::sample(4, 16, 1.0, &mut rng);
-        for variant in [
-            Variant::PaoFedU2,
-            Variant::OnlineFedSgd,
-            Variant::OnlineFed { subsample: 8 },
-            Variant::PaoFedC0,
+        for (variant, resume) in [
+            (Variant::PaoFedU2, None),
+            (Variant::OnlineFedSgd, Some(ResumePlan { base_tick: 0, states: vec![], log: vec![] })),
+            (
+                Variant::OnlineFed { subsample: 8 },
+                Some(ResumePlan {
+                    base_tick: 2,
+                    states: vec![vec![0.5; 16], vec![-0.25; 16], vec![0.0; 16], vec![1.0; 16]],
+                    log: vec![vec![0.125; 16]],
+                }),
+            ),
+            (Variant::PaoFedC0, None),
         ] {
             let algo = algorithms::build(variant, 0.4, 4, 10, 25);
             let hello = WireMsg::Hello(WorkerAssignment {
@@ -673,8 +518,13 @@ mod tests {
                     ClientShard::default(),
                     ClientShard::default(),
                 ],
+                session: 0x5e55_1034,
+                k_total: 12,
+                avail_probs: vec![0.25; 12],
+                resume,
             });
             let dec = decode(&encode(&hello)).unwrap();
+            assert_eq!(hello, dec);
             let (WireMsg::Hello(a), WireMsg::Hello(b)) = (&hello, &dec) else {
                 panic!("variant changed");
             };
@@ -796,7 +646,7 @@ mod tests {
         assert!(decode(&[]).is_err());
         assert!(decode(&[9]).is_err()); // bad tag
         assert!(decode(&[2, 1]).is_err()); // truncated Tick
-        let mut good = encode(&WireMsg::HelloAck { client_lo: 1 });
+        let mut good = encode(&WireMsg::HelloAck { client_lo: 1, session: 2 });
         good.push(0); // trailing garbage
         assert!(decode(&good).is_err());
         // Oversized length prefix is rejected before allocation.
@@ -813,5 +663,86 @@ mod tests {
         evil.extend_from_slice(&1u64.to_le_bytes()); // d = 1
         evil.extend_from_slice(&u64::MAX.to_le_bytes()); // values count
         assert!(decode(&evil).is_err());
+    }
+
+    /// Hardening sweep over the batched paths: truncation at every byte
+    /// boundary and hostile item counts must produce `Error::Protocol`,
+    /// never a panic or a silent partial decode.
+    #[test]
+    fn corrupt_batched_frames_error_cleanly() {
+        let update = Update {
+            client: 1,
+            sent_iter: 9,
+            coords: Coords::List { idx: vec![2, 5], d: 8 },
+            values: vec![0.5, -1.0],
+        };
+        let msgs = [
+            WireMsg::TickBatch {
+                iter: 3,
+                ticks: vec![
+                    (0, None),
+                    (1, Some((Coords::Range { start: 2, len: 3, d: 8 }, vec![1.0, 2.0, 3.0]))),
+                ],
+            },
+            WireMsg::AckBatch { acks: vec![(0, None, 1), (1, Some(update), 0)] },
+            WireMsg::StateDump { client_lo: 2, states: vec![vec![1.0, 2.0], vec![3.0]] },
+        ];
+        for msg in &msgs {
+            let good = encode(msg);
+            assert_eq!(decode(&good).unwrap(), *msg);
+            // Every proper prefix must fail cleanly (tag-only prefixes of
+            // variants with no fields are the one legitimate decode).
+            for cut in 2..good.len() {
+                assert!(decode(&good[..cut]).is_err(), "prefix {cut} of {msg:?} accepted");
+            }
+            // Hostile item count: patch the count field to u64::MAX.
+            let mut evil = good.clone();
+            let count_at = match msg {
+                WireMsg::TickBatch { .. } => 9, // tag + iter
+                _ => 1,                         // tag
+            };
+            if matches!(msg, WireMsg::StateDump { .. }) {
+                // tag + client_lo, then the row count.
+                evil[9..17].copy_from_slice(&u64::MAX.to_le_bytes());
+            } else {
+                evil[count_at..count_at + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+            }
+            assert!(decode(&evil).is_err(), "hostile count in {msg:?} accepted");
+        }
+    }
+
+    /// A corrupt resume plan inside a Hello (hostile row counts, truncated
+    /// log) errors instead of panicking.
+    #[test]
+    fn corrupt_resume_plan_errors_cleanly() {
+        let mut rng = Pcg32::new(5, 2);
+        let rff = RffSpace::sample(2, 4, 1.0, &mut rng);
+        let algo = algorithms::build(Variant::PaoFedU1, 0.4, 2, 10, 5);
+        let hello = WireMsg::Hello(WorkerAssignment {
+            client_lo: 0,
+            client_hi: 1,
+            env_seed: 1,
+            n_iters: 2,
+            algo,
+            rff,
+            clients: vec![ClientShard {
+                present: vec![false, false],
+                xs: vec![0.0; 4],
+                ys: vec![0.0; 2],
+            }],
+            session: 7,
+            k_total: 1,
+            avail_probs: vec![0.5],
+            resume: Some(ResumePlan {
+                base_tick: 1,
+                states: vec![vec![0.5; 4]],
+                log: vec![vec![0.25; 4]],
+            }),
+        });
+        let good = encode(&hello);
+        assert_eq!(decode(&good).unwrap(), hello);
+        for cut in (good.len() - 60)..good.len() {
+            assert!(decode(&good[..cut]).is_err(), "prefix {cut} accepted");
+        }
     }
 }

@@ -8,6 +8,12 @@
 //! ADDR --workers N` runs the federation server, `deploy --connect ADDR`
 //! runs a worker process hosting a shard of clients, and plain `deploy`
 //! runs the in-process thread-per-client shape.
+//!
+//! Persistence flags (both the experiment runner and `deploy`):
+//! `--checkpoint-every N` writes a rolling atomic snapshot every N ticks,
+//! `--resume PATH|DIR` restores and continues bit-identically; `deploy`
+//! adds `--checkpoint PATH` (snapshot location) and `--run-until T`
+//! (graceful stop at a tick boundary).
 
 use std::collections::BTreeMap;
 
@@ -119,5 +125,18 @@ mod tests {
         assert_eq!(a.command.as_deref(), Some("deploy"));
         assert_eq!(a.get("connect"), Some("127.0.0.1:7000"));
         assert_eq!(a.get("serve"), None);
+    }
+
+    #[test]
+    fn persistence_flags_parse() {
+        let a = p("deploy --checkpoint-every 50 --checkpoint run.ckpt --run-until 200").unwrap();
+        assert_eq!(a.get_parse("checkpoint-every", 0usize).unwrap(), 50);
+        assert_eq!(a.get("checkpoint"), Some("run.ckpt"));
+        assert_eq!(a.get_parse("run-until", 0usize).unwrap(), 200);
+        let b = p("fig3a --checkpoint-every 100 --resume results/checkpoints").unwrap();
+        assert_eq!(b.get_parse("checkpoint-every", 0usize).unwrap(), 100);
+        assert_eq!(b.get("resume"), Some("results/checkpoints"));
+        // --resume always takes a value; a bare switch is an error.
+        assert!(p("deploy --resume").is_err());
     }
 }

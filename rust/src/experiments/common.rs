@@ -10,6 +10,7 @@ use crate::fl::delay::DelayModel;
 use crate::fl::engine::{self, AlgoConfig, Environment, RunResult};
 use crate::fl::participation::Participation;
 use crate::metrics::{to_db, CommStats};
+use crate::persist::PersistPolicy;
 use crate::rff::RffSpace;
 use crate::util::json::{arr_f64, obj, Json};
 use crate::util::parallel::Parallelism;
@@ -55,6 +56,13 @@ pub struct ExperimentCtx {
     /// pool — or a serial handle, which forces fully serial execution
     /// regardless of `jobs` (a serial handle has no pool to re-limit).
     pub pool: PoolHandle,
+    /// Write a rolling per-run checkpoint every this many engine ticks
+    /// (`--checkpoint-every`; 0 = off). Checkpoints land under
+    /// `outdir/checkpoints/` unless `resume_from` names a directory.
+    pub checkpoint_every: usize,
+    /// Resume every Monte-Carlo run from the checkpoints in this
+    /// directory (`--resume DIR`); runs without a checkpoint start fresh.
+    pub resume_from: Option<PathBuf>,
 }
 
 impl Default for ExperimentCtx {
@@ -69,6 +77,8 @@ impl Default for ExperimentCtx {
             quiet: false,
             jobs: Parallelism::serial(),
             pool: PoolHandle::shared(),
+            checkpoint_every: 0,
+            resume_from: None,
         }
     }
 }
@@ -259,6 +269,18 @@ pub fn run_variants(
     title: &str,
 ) -> Result<FigureData> {
     let parallel_ok = ctx.backend != BackendKind::Xla;
+    if !parallel_ok && (ctx.jobs.mc_workers > 1 || ctx.jobs.client_shards > 1) {
+        // One warning per process, not per figure: `--xla --jobs N` would
+        // otherwise degrade to serial silently.
+        static XLA_SERIAL_WARNING: std::sync::Once = std::sync::Once::new();
+        XLA_SERIAL_WARNING.call_once(|| {
+            eprintln!(
+                "warning: the XLA backend is pinned to the serial engine; \
+                 --jobs/--shards are ignored for this run \
+                 (ROADMAP: \"XLA-backend parallel path\")"
+            );
+        });
+    }
     let workers = if parallel_ok { ctx.jobs.mc_workers } else { 1 };
     let mc_pool = ctx.pool.with_limit(workers);
     // When several realizations actually run concurrently, sharding each
@@ -273,6 +295,31 @@ pub fn run_variants(
         PoolHandle::serial()
     };
 
+    // Crash-safety: with `--checkpoint-every` / `--resume`, every
+    // (run, algorithm) pair gets its own rolling checkpoint file, so an
+    // interrupted sweep resumes mid-run instead of recomputing.
+    if let Some(dir) = &ctx.resume_from {
+        if !dir.exists() {
+            // Missing checkpoints start fresh by design (a sweep may be
+            // partially complete), but a missing *directory* is almost
+            // certainly a typo — say so instead of silently recomputing.
+            eprintln!(
+                "warning: --resume directory {} does not exist; \
+                 every Monte-Carlo run starts from tick 0",
+                dir.display()
+            );
+        }
+    }
+    let persist_dir = if ctx.checkpoint_every > 0 || ctx.resume_from.is_some() {
+        Some(
+            ctx.resume_from
+                .clone()
+                .unwrap_or_else(|| ctx.outdir.join("checkpoints")),
+        )
+    } else {
+        None
+    };
+
     // Fan out: one entry per run, each holding every algorithm's result
     // for that realization (common random numbers within a run).
     let per_run: Vec<Result<Vec<RunResult>>> = mc_pool.map(ctx.mc, |run| {
@@ -280,7 +327,24 @@ pub fn run_variants(
         let (environment, mut backend) = env.build(seed, ctx.backend)?;
         algos
             .iter()
-            .map(|algo| engine::run_sharded(&environment, algo, backend.as_mut(), &engine_pool))
+            .enumerate()
+            .map(|(ai, algo)| match &persist_dir {
+                Some(dir) => {
+                    let persist = PersistPolicy {
+                        path: dir.join(format!("{id}-run{run}-algo{ai}.ckpt")),
+                        checkpoint_every: ctx.checkpoint_every,
+                        resume: ctx.resume_from.is_some(),
+                    };
+                    engine::run_resumable(
+                        &environment,
+                        algo,
+                        backend.as_mut(),
+                        &engine_pool,
+                        &persist,
+                    )
+                }
+                None => engine::run_sharded(&environment, algo, backend.as_mut(), &engine_pool),
+            })
             .collect()
     });
 
@@ -438,6 +502,8 @@ mod tests {
             quiet: true,
             jobs: Parallelism::serial(),
             pool: PoolHandle::serial(),
+            checkpoint_every: 0,
+            resume_from: None,
         }
     }
 

@@ -178,6 +178,67 @@ impl<T> DelayQueue<T> {
         let h = self.slots.len();
         std::mem::take(&mut self.slots[now % h])
     }
+
+    /// Horizon in iterations: the farthest future arrival the queue can
+    /// hold beyond `now` (checkpointing metadata).
+    pub fn horizon(&self) -> usize {
+        self.slots.len() - 1
+    }
+
+    /// The current clock (the last iteration passed to
+    /// [`DelayQueue::drain`]; checkpointing metadata).
+    pub fn now(&self) -> usize {
+        self.now
+    }
+
+    /// Every undelivered message paired with its absolute arrival
+    /// iteration, ordered by arrival and — within one arrival — by
+    /// insertion. The ordering is part of the checkpoint contract: the
+    /// aggregation consumes a drained slot in insertion order, so a
+    /// restore must reproduce it exactly.
+    pub fn pending(&self) -> Vec<(usize, &T)> {
+        let h = self.slots.len();
+        let mut out = Vec::new();
+        for off in 0..h {
+            let arrival = self.now + off;
+            for msg in &self.slots[arrival % h] {
+                out.push((arrival, msg));
+            }
+        }
+        out
+    }
+
+    /// Rebuild a queue from checkpointed state. `entries` must come in
+    /// [`DelayQueue::pending`] order with every arrival inside
+    /// `(now, now + horizon]` — the window a tick-boundary capture can
+    /// produce (messages are always filed *before* `drain(now)`, so the
+    /// `now` slot is empty at a boundary). Anything else means the
+    /// checkpoint disagrees with the channel model and is rejected rather
+    /// than silently delivered at the wrong tick.
+    pub fn restore(
+        horizon: usize,
+        now: usize,
+        clamped: u64,
+        entries: Vec<(usize, T)>,
+    ) -> crate::error::Result<Self> {
+        let mut q = DelayQueue {
+            slots: (0..horizon + 1).map(|_| Vec::new()).collect(),
+            now,
+            clamped,
+        };
+        let h = horizon + 1;
+        for (arrival, msg) in entries {
+            if arrival <= now || arrival > now + horizon {
+                return Err(crate::error::Error::Protocol(format!(
+                    "checkpointed arrival {arrival} outside delay window \
+                     ({now}, {}]",
+                    now + horizon
+                )));
+            }
+            q.slots[arrival % h].push(msg);
+        }
+        Ok(q)
+    }
 }
 
 #[cfg(test)]
@@ -273,6 +334,36 @@ mod tests {
             q.push(m.sample(11, 0, i), i as u32);
         }
         assert_eq!(q.clamped_arrivals(), 0);
+    }
+
+    #[test]
+    fn pending_restore_roundtrip_preserves_delivery() {
+        let m = DelayModel::Geometric { delta: 0.5 };
+        let mut a: DelayQueue<u32> = DelayQueue::for_run(&m, 60);
+        // File-then-drain, the runtimes' per-tick order: at every
+        // boundary the `now` slot is empty.
+        for t in 0..30 {
+            a.push(t + m.sample(3, 0, t), t as u32);
+            a.push(t + m.sample(3, 1, t), 1000 + t as u32);
+            let _ = a.drain(t);
+        }
+        // Snapshot after the tick-29 drain, rebuild, and compare the
+        // remaining deliveries slot for slot (order included).
+        let entries: Vec<(usize, u32)> = a.pending().into_iter().map(|(t, &v)| (t, v)).collect();
+        assert!(entries.iter().all(|&(t, _)| t > a.now()));
+        let mut b =
+            DelayQueue::restore(a.horizon(), a.now(), a.clamped_arrivals(), entries).unwrap();
+        assert_eq!(a.horizon(), b.horizon());
+        assert_eq!(a.now(), b.now());
+        assert_eq!(a.clamped_arrivals(), b.clamped_arrivals());
+        for t in 30..95 {
+            assert_eq!(a.drain(t), b.drain(t), "deliveries diverge at {t}");
+        }
+        // Out-of-window arrivals are rejected, not clamped — including
+        // `arrival == now`, which no boundary capture can produce.
+        assert!(DelayQueue::restore(3, 10, 0, vec![(14usize, 1u32)]).is_err());
+        assert!(DelayQueue::restore(3, 10, 0, vec![(10usize, 1u32)]).is_err());
+        assert!(DelayQueue::restore(3, 10, 0, vec![(9usize, 1u32)]).is_err());
     }
 
     #[test]

@@ -29,8 +29,9 @@ use super::delay::{DelayModel, DelayQueue};
 use super::engine::{AlgoConfig, Environment, RunResult};
 use super::selection::{Coords, ScheduleKind, SelectionSchedule};
 use super::server::{AggregateInfo, Server, Update};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::metrics::{mse_test, to_db, CommStats};
+use crate::persist::snapshot::{QueueState, RunSnapshot, ServerState};
 use crate::util::pool::{PoolHandle, TaskHandle};
 use crate::util::rng::Pcg32;
 use std::sync::Arc;
@@ -270,6 +271,78 @@ impl<'e> TickPipeline<'e> {
             env,
             algo,
         }
+    }
+
+    /// Rebuild a pipeline mid-run from a checkpoint: validate the
+    /// snapshot against `(env, algo)`, restore every piece of cross-tick
+    /// state (local models, server + scratch epoch, delay channel,
+    /// counters, curve), and return a pipeline ready for
+    /// `tick(snap.tick..)`. The continuation is bit-identical to the
+    /// uninterrupted run (pinned by `rust/tests/persistence.rs`).
+    pub fn resume(env: &'e Environment, algo: &'e AlgoConfig, snap: &RunSnapshot) -> Result<Self> {
+        snap.validate(
+            env.stream.n_clients,
+            env.d(),
+            env.stream.n_iters,
+            env.env_seed,
+            &env.participation.probs,
+            algo.eval_every,
+            algo,
+            &env.delay,
+        )?;
+        if !snap.rng.is_empty() {
+            return Err(Error::Config(
+                "engine snapshots carry no PRNG streams; this one does".into(),
+            ));
+        }
+        let mut p = TickPipeline::new(env, algo);
+        p.w_locals = snap.client_w.clone();
+        p.server = snap.server.rebuild(algo.aggregation.clone());
+        p.queue = snap.queue.rebuild()?;
+        p.comm = snap.comm;
+        p.agg = snap.agg;
+        p.eval.iters = snap.curve_iters.clone();
+        p.eval.mse_db = snap.curve_db.clone();
+        Ok(p)
+    }
+
+    /// Capture the complete run state at the boundary before `next_tick`.
+    /// Joins any in-flight pipelined evaluation first — the eval-snapshot
+    /// rule makes that reordering invisible in the curve.
+    pub fn snapshot(&mut self, next_tick: usize) -> RunSnapshot {
+        self.eval.join_pending();
+        RunSnapshot {
+            tick: next_tick,
+            env_seed: self.env.env_seed,
+            k: self.env.stream.n_clients,
+            d: self.env.d(),
+            n_iters: self.env.stream.n_iters,
+            avail_probs: self.env.participation.probs.clone(),
+            eval_every: self.algo.eval_every,
+            algo: self.algo.clone(),
+            delay: self.env.delay,
+            schedule: self.schedule.clone(),
+            server: ServerState::capture(&self.server),
+            queue: QueueState::capture(&self.queue),
+            client_w: self.w_locals.clone(),
+            rng: Vec::new(),
+            comm: self.comm,
+            agg: self.agg,
+            curve_iters: self.eval.iters.clone(),
+            curve_db: self.eval.mse_db.clone(),
+            local_steps: 0,
+        }
+    }
+
+    /// The server model at the current tick boundary (the journal's
+    /// per-tick digest source).
+    pub fn server_model(&self) -> &[f32] {
+        &self.server.w
+    }
+
+    /// Communication totals so far (journaling).
+    pub fn comm_stats(&self) -> &CommStats {
+        &self.comm
     }
 
     /// Advance one federation iteration through all eight stages.

@@ -82,7 +82,7 @@ impl Coords {
 }
 
 /// Which portion-selection discipline the federation runs.
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ScheduleKind {
     /// Every client shares the same circularly-shifting block (eq. 7).
     Coordinated,
@@ -95,7 +95,7 @@ pub enum ScheduleKind {
 }
 
 /// Deterministic selection-matrix schedule for the whole federation.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SelectionSchedule {
     /// The selection discipline in force.
     pub kind: ScheduleKind,

@@ -124,6 +124,30 @@ impl Server {
         &self.mode
     }
 
+    /// The scratch-epoch counter (one increment per bucket aggregation),
+    /// exposed for checkpointing.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Rebuild a server from checkpointed state: the model `w` and the
+    /// scratch epoch. The conflict/membership scratch itself is rebuilt
+    /// empty — stamps are only ever compared within a single aggregation's
+    /// epoch, so zeroed scratch plus the saved epoch reproduces the
+    /// uninterrupted run bit for bit (pinned by `rust/tests/persistence.rs`).
+    pub fn restore(w: Vec<f32>, mode: AggregationMode, epoch: u64) -> Self {
+        let d = w.len();
+        Server {
+            w,
+            mode,
+            delta: vec![0.0; d],
+            touched: Vec::new(),
+            best_sent: vec![0; d],
+            touched_epoch: vec![0; d],
+            epoch,
+        }
+    }
+
     /// Apply the updates arriving at iteration `now`; returns statistics.
     pub fn aggregate(&mut self, now: usize, updates: &[Update]) -> AggregateInfo {
         match &self.mode {
@@ -435,6 +459,32 @@ mod tests {
         s2.aggregate(4, &ups);
         for (a, b) in s1.w.iter().zip(&s2.w) {
             assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn restore_matches_uninterrupted_server() {
+        // Checkpoint (w + epoch) mid-run, rebuild via `restore`, and keep
+        // aggregating: every subsequent model must be bit-identical to the
+        // uninterrupted server's, conflict resolution included.
+        let mode = buckets(5, AlphaSchedule::Powers(0.2));
+        let mut a = Server::new(3, mode.clone());
+        let step = |s: &mut Server, it: usize| {
+            let ups = vec![
+                upd(0, it, vec![it % 3], vec![1.0 + it as f32], 3),
+                upd(1, it.saturating_sub(1), vec![it % 3, (it + 1) % 3], vec![-0.5, 2.0], 3),
+            ];
+            s.aggregate(it, &ups)
+        };
+        for it in 0..40 {
+            step(&mut a, it);
+        }
+        let mut b = Server::restore(a.w.clone(), mode, a.epoch());
+        for it in 40..80 {
+            let ia = step(&mut a, it);
+            let ib = step(&mut b, it);
+            assert_eq!(ia, ib, "diverging diagnostics at {it}");
+            assert_eq!(a.w, b.w, "diverging model at {it}");
         }
     }
 

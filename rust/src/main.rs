@@ -12,6 +12,11 @@
 //!   pao-fed deploy --connect ADDR           worker process (a client shard)
 //!   deploy flags: --clients K --iters N --seed S --dim D --delta F
 //!                 --eval-every E (server-side scenario shape)
+//!   persistence:  --checkpoint-every N (atomic snapshot every N ticks)
+//!                 --checkpoint PATH (snapshot file, default
+//!                 pao-fed-deploy.ckpt) --resume PATH (restore and
+//!                 continue bit-identically) --run-until T (graceful
+//!                 stop at tick T after a final checkpoint)
 //!
 //! flags:
 //!   --mc N        Monte-Carlo runs per curve            (default 3)
@@ -30,7 +35,12 @@
 //!                 flags are capped at the pool's width (cores), since
 //!                 oversubscribing a fixed pool cannot help
 //!   --xla         run the client step through the AOT PJRT artifacts
-//!                 (forces serial execution; needs `--features xla`)
+//!                 (forces serial execution — a warning names the ROADMAP
+//!                 item when combined with --jobs; needs `--features xla`)
+//!   --checkpoint-every N  write a rolling per-run checkpoint every N
+//!                 engine ticks (under OUT/checkpoints/)
+//!   --resume DIR  resume every Monte-Carlo run from the checkpoints in
+//!                 DIR; runs without a checkpoint start fresh
 //!   --quiet       suppress ASCII charts
 //! ```
 
@@ -44,18 +54,22 @@ use pao_fed::experiments::{self, BackendKind, ExperimentCtx, Parallelism, PoolHa
 use pao_fed::fl::algorithms::{build, Variant};
 use pao_fed::fl::delay::DelayModel;
 use pao_fed::fl::participation::Participation;
+use pao_fed::persist::PersistPolicy;
 use pao_fed::rff::RffSpace;
 use pao_fed::util::rng::Pcg32;
 use std::net::TcpListener;
+use std::path::PathBuf;
 use std::time::Duration;
 
 fn usage() -> ! {
     eprintln!(
         "usage: pao-fed <experiment> [--mc N] [--seed S] [--iters N] [--clients K] \
-         [--out DIR] [--jobs N] [--shards M] [--xla] [--quiet]\n\
+         [--out DIR] [--jobs N] [--shards M] [--xla] [--quiet] \
+         [--checkpoint-every N] [--resume DIR]\n\
          experiments: {} all | extras: {} extras\n\
          deployment:  pao-fed deploy [--serve ADDR --workers N | --connect ADDR]\n  \
-         [--clients K] [--iters N] [--seed S] [--dim D] [--delta F] [--eval-every E]",
+         [--clients K] [--iters N] [--seed S] [--dim D] [--delta F] [--eval-every E]\n  \
+         [--checkpoint-every N] [--checkpoint PATH] [--resume PATH] [--run-until T]",
         experiments::ALL.join(" "),
         experiments::EXTRAS.join(" ")
     );
@@ -74,6 +88,39 @@ fn deploy_scenario(
     let seed: u64 = args.get_parse("seed", 2023u64)?;
     let delta: f64 = args.get_parse("delta", 0.2f64)?;
     let eval_every: usize = args.get_parse("eval-every", 50usize)?;
+    let checkpoint_every: usize = args.get_parse("checkpoint-every", 0usize)?;
+    let resume = args.get("resume").map(PathBuf::from);
+    let checkpoint = args.get("checkpoint").map(PathBuf::from);
+    let run_until: Option<usize> = args
+        .get("run-until")
+        .map(|v| v.parse().map_err(|_| "bad --run-until".to_string()))
+        .transpose()?;
+    // A resumed run keeps checkpointing into the file it resumed from —
+    // there is one snapshot path per run, so a *different* --checkpoint
+    // alongside --resume would silently resume from the wrong file.
+    // Refuse the ambiguity instead.
+    if let (Some(r), Some(c)) = (&resume, &checkpoint) {
+        if r != c {
+            return Err(format!(
+                "--resume {} and --checkpoint {} disagree; a resumed run \
+                 checkpoints into the file it resumed from (drop one flag)",
+                r.display(),
+                c.display()
+            ));
+        }
+    }
+    let persist = if checkpoint_every > 0 || resume.is_some() || checkpoint.is_some() {
+        Some(PersistPolicy {
+            path: resume
+                .clone()
+                .or(checkpoint)
+                .unwrap_or_else(|| PathBuf::from("pao-fed-deploy.ckpt")),
+            checkpoint_every,
+            resume: resume.is_some(),
+        })
+    } else {
+        None
+    };
     let stream = FedStream::build(
         &StreamConfig {
             n_clients: k,
@@ -95,6 +142,8 @@ fn deploy_scenario(
             tick: Duration::ZERO,
             env_seed: seed,
             eval_every,
+            persist,
+            run_until,
         },
     ))
 }
@@ -112,6 +161,12 @@ fn print_deployment(report: &DeploymentReport) {
         report.n_client_threads,
         report.n_workers
     );
+    if let Some(t) = report.resumed_at {
+        println!("  resumed from checkpoint at tick {t}");
+    }
+    if report.recovered_workers > 0 {
+        println!("  supervisor recovered {} worker(s) mid-run", report.recovered_workers);
+    }
 }
 
 fn run_deploy(args: &Args) -> Result<(), String> {
@@ -119,8 +174,8 @@ fn run_deploy(args: &Args) -> Result<(), String> {
         println!("worker: connecting to {addr}");
         let rep = run_worker(addr).map_err(|e| e.to_string())?;
         println!(
-            "worker done: hosted clients {}..{}, {} ticks, {} local steps",
-            rep.client_lo, rep.client_hi, rep.ticks, rep.local_steps
+            "worker done: hosted clients {}..{}, {} ticks ({} replayed), {} local steps",
+            rep.client_lo, rep.client_hi, rep.ticks, rep.replayed_ticks, rep.local_steps
         );
         return Ok(());
     }
@@ -197,6 +252,8 @@ fn main() {
             // One persistent pool for the whole process; per-loop limits
             // come from `jobs` inside `run_variants`.
             pool: PoolHandle::shared(),
+            checkpoint_every: args.get_parse("checkpoint-every", 0usize)?,
+            resume_from: args.get("resume").map(PathBuf::from),
         })
     };
     let ctx = match parse() {

@@ -33,7 +33,7 @@ pub fn msd(w: &[f32], w_star: &[f32]) -> f64 {
 ///
 /// Partial sharing sends `m` of `D` model entries per message; the counters
 /// let every experiment report the paper's "98% reduction" claim exactly.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CommStats {
     /// Scalars sent server -> clients.
     pub downlink_scalars: u64,

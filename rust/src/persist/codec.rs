@@ -1,0 +1,382 @@
+//! Shared binary-codec substrate: the primitive encoders/decoders behind
+//! both the deployment wire protocol (`async_rt::wire`) and the
+//! checkpoint/journal records (`persist::snapshot`, `persist::journal`).
+//!
+//! Scalar encodings: integers little-endian (`usize` as `u64`), `bool` as
+//! one byte, `f32`/`f64` as their IEEE-754 little-endian bit patterns —
+//! which makes every transfer of model values **bit-exact**, the property
+//! both the cross-process determinism contract and the
+//! snapshot-then-resume contract rest on. Vectors are a `u64` element
+//! count followed by the elements.
+//!
+//! Decoding reads from a byte slice through [`Cur`], whose length reads
+//! are bounded by the bytes remaining in the frame, so a corrupt count can
+//! never trigger a reservation larger than the frame itself. Every decode
+//! failure is an [`Error::Protocol`]; nothing here panics on hostile input.
+
+use crate::error::{Error, Result};
+use crate::fl::delay::DelayModel;
+use crate::fl::engine::AlgoConfig;
+use crate::fl::selection::{Coords, ScheduleKind};
+use crate::fl::server::{AggregationMode, AlphaSchedule, Update};
+
+// ---------------------------------------------------------------- encode
+
+pub(crate) fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_usize(buf: &mut Vec<u8>, v: usize) {
+    put_u64(buf, v as u64);
+}
+
+pub(crate) fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_bool(buf: &mut Vec<u8>, v: bool) {
+    buf.push(v as u8);
+}
+
+pub(crate) fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_f32s(buf: &mut Vec<u8>, vs: &[f32]) {
+    put_usize(buf, vs.len());
+    for &v in vs {
+        put_f32(buf, v);
+    }
+}
+
+pub(crate) fn put_f64s(buf: &mut Vec<u8>, vs: &[f64]) {
+    put_usize(buf, vs.len());
+    for &v in vs {
+        put_f64(buf, v);
+    }
+}
+
+pub(crate) fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_usize(buf, s.len());
+    buf.extend_from_slice(s.as_bytes());
+}
+
+pub(crate) fn put_coords(buf: &mut Vec<u8>, c: &Coords) {
+    match c {
+        Coords::Range { start, len, d } => {
+            buf.push(0);
+            put_usize(buf, *start);
+            put_usize(buf, *len);
+            put_usize(buf, *d);
+        }
+        Coords::List { idx, d } => {
+            buf.push(1);
+            put_usize(buf, idx.len());
+            for &i in idx {
+                put_u32(buf, i);
+            }
+            put_usize(buf, *d);
+        }
+        Coords::Full { d } => {
+            buf.push(2);
+            put_usize(buf, *d);
+        }
+    }
+}
+
+pub(crate) fn put_update(buf: &mut Vec<u8>, u: &Update) {
+    put_usize(buf, u.client);
+    put_usize(buf, u.sent_iter);
+    put_coords(buf, &u.coords);
+    put_f32s(buf, &u.values);
+}
+
+pub(crate) fn schedule_kind_tag(k: ScheduleKind) -> u8 {
+    match k {
+        ScheduleKind::Coordinated => 0,
+        ScheduleKind::Uncoordinated => 1,
+        ScheduleKind::Full => 2,
+        ScheduleKind::RandomSubset => 3,
+    }
+}
+
+pub(crate) fn put_algo(buf: &mut Vec<u8>, a: &AlgoConfig) {
+    put_str(buf, &a.name);
+    put_f32(buf, a.mu);
+    buf.push(schedule_kind_tag(a.schedule));
+    put_usize(buf, a.m);
+    put_bool(buf, a.refine_before_share);
+    put_bool(buf, a.autonomous_updates);
+    match a.subsample {
+        None => put_bool(buf, false),
+        Some(s) => {
+            put_bool(buf, true);
+            put_usize(buf, s);
+        }
+    }
+    put_bool(buf, a.full_downlink);
+    match &a.aggregation {
+        AggregationMode::DeviationBuckets {
+            alpha,
+            l_max,
+            most_recent_wins,
+        } => {
+            buf.push(0);
+            match alpha {
+                AlphaSchedule::Ones => buf.push(0),
+                AlphaSchedule::Powers(p) => {
+                    buf.push(1);
+                    put_f64(buf, *p);
+                }
+            }
+            put_usize(buf, *l_max);
+            put_bool(buf, *most_recent_wins);
+        }
+        AggregationMode::PlainAverage => buf.push(1),
+    }
+    put_usize(buf, a.eval_every);
+}
+
+pub(crate) fn put_delay(buf: &mut Vec<u8>, d: &DelayModel) {
+    match *d {
+        DelayModel::None => buf.push(0),
+        DelayModel::Geometric { delta } => {
+            buf.push(1);
+            put_f64(buf, delta);
+        }
+        DelayModel::Staged { delta, step } => {
+            buf.push(2);
+            put_f64(buf, delta);
+            put_usize(buf, step);
+        }
+    }
+}
+
+/// FNV-1a 64-bit hash: the checksum of snapshot payloads and journal
+/// records (and the model fingerprint in journal headers).
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------- decode
+
+/// Byte-slice cursor for decoding one payload.
+pub(crate) struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
+        Cur { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed (trailing-garbage checks).
+    pub(crate) fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(Error::Protocol(format!(
+                "truncated frame: need {n} bytes at offset {} of {}",
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub(crate) fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub(crate) fn bool(&mut self) -> Result<bool> {
+        Ok(self.u8()? != 0)
+    }
+
+    pub(crate) fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn usize(&mut self) -> Result<usize> {
+        Ok(self.u64()? as usize)
+    }
+
+    /// A `usize` that will size an allocation of `elem`-byte-minimum
+    /// items: bounded by the bytes remaining in the frame, so a corrupt
+    /// count cannot trigger a reservation larger than the frame itself.
+    pub(crate) fn len(&mut self, elem: usize) -> Result<usize> {
+        let n = self.usize()?;
+        let remaining = self.buf.len() - self.pos;
+        if n > remaining / elem.max(1) {
+            return Err(Error::Protocol(format!(
+                "corrupt count {n} (x{elem}B) exceeds {remaining} remaining frame bytes"
+            )));
+        }
+        Ok(n)
+    }
+
+    pub(crate) fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.len(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f32()?);
+        }
+        Ok(v)
+    }
+
+    pub(crate) fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.len(8)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f64()?);
+        }
+        Ok(v)
+    }
+
+    pub(crate) fn string(&mut self) -> Result<String> {
+        let n = self.len(1)?;
+        String::from_utf8(self.take(n)?.to_vec())
+            .map_err(|_| Error::Protocol("non-utf8 string field".into()))
+    }
+
+    pub(crate) fn coords(&mut self) -> Result<Coords> {
+        match self.u8()? {
+            0 => Ok(Coords::Range { start: self.usize()?, len: self.usize()?, d: self.usize()? }),
+            1 => {
+                let n = self.len(4)?;
+                let mut idx = Vec::with_capacity(n);
+                for _ in 0..n {
+                    idx.push(self.u32()?);
+                }
+                Ok(Coords::List { idx, d: self.usize()? })
+            }
+            2 => Ok(Coords::Full { d: self.usize()? }),
+            t => Err(Error::Protocol(format!("bad coords tag {t}"))),
+        }
+    }
+
+    pub(crate) fn update(&mut self) -> Result<Update> {
+        Ok(Update {
+            client: self.usize()?,
+            sent_iter: self.usize()?,
+            coords: self.coords()?,
+            values: self.f32s()?,
+        })
+    }
+
+    pub(crate) fn schedule_kind(&mut self) -> Result<ScheduleKind> {
+        match self.u8()? {
+            0 => Ok(ScheduleKind::Coordinated),
+            1 => Ok(ScheduleKind::Uncoordinated),
+            2 => Ok(ScheduleKind::Full),
+            3 => Ok(ScheduleKind::RandomSubset),
+            t => Err(Error::Protocol(format!("bad schedule tag {t}"))),
+        }
+    }
+
+    pub(crate) fn algo(&mut self) -> Result<AlgoConfig> {
+        let name = self.string()?;
+        let mu = self.f32()?;
+        let schedule = self.schedule_kind()?;
+        let m = self.usize()?;
+        let refine_before_share = self.bool()?;
+        let autonomous_updates = self.bool()?;
+        let subsample = if self.bool()? {
+            Some(self.usize()?)
+        } else {
+            None
+        };
+        let full_downlink = self.bool()?;
+        let aggregation = match self.u8()? {
+            0 => {
+                let alpha = match self.u8()? {
+                    0 => AlphaSchedule::Ones,
+                    1 => AlphaSchedule::Powers(self.f64()?),
+                    t => return Err(Error::Protocol(format!("bad alpha tag {t}"))),
+                };
+                AggregationMode::DeviationBuckets {
+                    alpha,
+                    l_max: self.usize()?,
+                    most_recent_wins: self.bool()?,
+                }
+            }
+            1 => AggregationMode::PlainAverage,
+            t => return Err(Error::Protocol(format!("bad aggregation tag {t}"))),
+        };
+        let eval_every = self.usize()?;
+        Ok(AlgoConfig {
+            name,
+            mu,
+            schedule,
+            m,
+            refine_before_share,
+            autonomous_updates,
+            subsample,
+            full_downlink,
+            aggregation,
+            eval_every,
+        })
+    }
+
+    pub(crate) fn delay(&mut self) -> Result<DelayModel> {
+        match self.u8()? {
+            0 => Ok(DelayModel::None),
+            1 => Ok(DelayModel::Geometric { delta: self.f64()? }),
+            2 => Ok(DelayModel::Staged { delta: self.f64()?, step: self.usize()? }),
+            t => Err(Error::Protocol(format!("bad delay-model tag {t}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delay_model_roundtrip() {
+        for m in [
+            DelayModel::None,
+            DelayModel::Geometric { delta: 0.25 },
+            DelayModel::Staged { delta: 0.4, step: 10 },
+        ] {
+            let mut buf = Vec::new();
+            put_delay(&mut buf, &m);
+            let mut c = Cur::new(&buf);
+            assert_eq!(c.delay().unwrap(), m);
+            assert_eq!(c.remaining(), 0);
+        }
+        assert!(Cur::new(&[9]).delay().is_err());
+    }
+
+    #[test]
+    fn fnv_is_stable_and_order_sensitive() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_ne!(fnv1a64(b"ab"), fnv1a64(b"ba"));
+        assert_eq!(fnv1a64(b"pao-fed"), fnv1a64(b"pao-fed"));
+    }
+}

@@ -1,0 +1,374 @@
+//! Append-only per-tick run journal.
+//!
+//! Alongside the rolling snapshot (`persist::snapshot`), a checkpointed
+//! run appends one small record per federation tick: the tick index, an
+//! FNV-1a digest of the server model's bit patterns, and the cumulative
+//! uplink-message counter. The journal is the run's audit trail: the
+//! resume tests prove bit-exactness by comparing the *journals* of an
+//! interrupted-and-resumed run against an undisturbed one, record for
+//! record, and an operator can diff two journals to find the first tick
+//! at which runs diverged.
+//!
+//! Format: a header (`MAGIC ("PAOFJRNL") | version u32 | config
+//! fingerprint u64`) followed by framed records — `len u32 | payload |
+//! FNV-1a-64 checksum` each, flushed per append. [`replay`] tolerates
+//! exactly one failure shape: an incomplete **final** record (the crash
+//! happened mid-append), which is reported via
+//! [`ReplayedJournal::truncated_bytes`] instead of an error. A corrupt
+//! record anywhere else — bad checksum, hostile length, bad tag — is
+//! [`Error::Protocol`], never a panic and never silent data loss.
+
+use super::codec::{self, Cur};
+use crate::error::{Error, Result};
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+/// Leading bytes of every journal file.
+pub const MAGIC: [u8; 8] = *b"PAOFJRNL";
+
+/// Current journal format version.
+pub const VERSION: u32 = 1;
+
+/// Upper bound on one record's payload (sanity guard against a corrupt
+/// length prefix; real records are 25 bytes).
+const MAX_RECORD: usize = 1 << 16;
+
+/// One per-tick journal record.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TickRecord {
+    /// Federation iteration the record describes (state *after* the tick).
+    pub tick: usize,
+    /// FNV-1a 64 digest of the server model's IEEE-754 bit patterns
+    /// (`persist::snapshot::hash_model`).
+    pub w_hash: u64,
+    /// Cumulative uplink messages at the end of the tick.
+    pub uplink_msgs: u64,
+}
+
+impl TickRecord {
+    fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(25);
+        buf.push(1); // record tag: tick record
+        codec::put_usize(&mut buf, self.tick);
+        codec::put_u64(&mut buf, self.w_hash);
+        codec::put_u64(&mut buf, self.uplink_msgs);
+        buf
+    }
+
+    fn decode(payload: &[u8]) -> Result<Self> {
+        let mut c = Cur::new(payload);
+        match c.u8()? {
+            1 => {}
+            t => return Err(Error::Protocol(format!("bad journal record tag {t}"))),
+        }
+        let rec = TickRecord {
+            tick: c.usize()?,
+            w_hash: c.u64()?,
+            uplink_msgs: c.u64()?,
+        };
+        if c.remaining() != 0 {
+            return Err(Error::Protocol(format!(
+                "{} trailing bytes in journal record",
+                c.remaining()
+            )));
+        }
+        Ok(rec)
+    }
+}
+
+/// An open journal being appended to.
+pub struct Journal {
+    w: BufWriter<File>,
+    path: PathBuf,
+}
+
+impl Journal {
+    /// Create (truncating any existing file) and write the header for a
+    /// run keyed by `fingerprint` (`persist::snapshot::fingerprint`).
+    pub fn create(path: &Path, fingerprint: u64) -> Result<Self> {
+        super::ensure_parent_dir(path)?;
+        let mut w = BufWriter::new(File::create(path)?);
+        w.write_all(&MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&fingerprint.to_le_bytes())?;
+        w.flush()?;
+        Ok(Journal { w, path: path.to_path_buf() })
+    }
+
+    /// Append one record (framed, checksummed, flushed).
+    pub fn append(&mut self, rec: &TickRecord) -> Result<()> {
+        let payload = rec.encode();
+        self.w.write_all(&(payload.len() as u32).to_le_bytes())?;
+        self.w.write_all(&payload)?;
+        self.w.write_all(&codec::fnv1a64(&payload).to_le_bytes())?;
+        self.w.flush()?;
+        Ok(())
+    }
+
+    /// The file this journal appends to.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// The result of replaying a journal file.
+#[derive(Debug)]
+pub struct ReplayedJournal {
+    /// Config fingerprint from the header.
+    pub fingerprint: u64,
+    /// Every complete, checksum-verified record in file order.
+    pub records: Vec<TickRecord>,
+    /// Bytes of an incomplete final record (a crash mid-append); 0 for a
+    /// cleanly closed journal.
+    pub truncated_bytes: usize,
+}
+
+/// Read a journal back. A short final record is tolerated (and counted);
+/// any other corruption is an error.
+pub fn replay(path: &Path) -> Result<ReplayedJournal> {
+    let bytes = std::fs::read(path)?;
+    if bytes.len() < MAGIC.len() + 4 + 8 {
+        return Err(Error::Protocol("journal file too short for its header".into()));
+    }
+    if bytes[..8] != MAGIC {
+        return Err(Error::Protocol("not a pao-fed journal (bad magic)".into()));
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    if version != VERSION {
+        return Err(Error::Protocol(format!(
+            "unsupported journal version {version} (this build reads {VERSION})"
+        )));
+    }
+    let fingerprint = u64::from_le_bytes(bytes[12..20].try_into().unwrap());
+    let mut records = Vec::new();
+    let mut pos = 20usize;
+    let mut truncated_bytes = 0usize;
+    while pos < bytes.len() {
+        let rest = &bytes[pos..];
+        if rest.len() < 4 {
+            truncated_bytes = rest.len();
+            break;
+        }
+        let len = u32::from_le_bytes(rest[..4].try_into().unwrap()) as usize;
+        if len > MAX_RECORD {
+            return Err(Error::Protocol(format!(
+                "journal record of {len} bytes exceeds the {MAX_RECORD}-byte bound"
+            )));
+        }
+        if rest.len() < 4 + len + 8 {
+            truncated_bytes = rest.len();
+            break;
+        }
+        let payload = &rest[4..4 + len];
+        let want = u64::from_le_bytes(rest[4 + len..4 + len + 8].try_into().unwrap());
+        let got = codec::fnv1a64(payload);
+        if want != got {
+            return Err(Error::Protocol(format!(
+                "journal record at byte {pos} fails its checksum"
+            )));
+        }
+        records.push(TickRecord::decode(payload)?);
+        pos += 4 + len + 8;
+    }
+    Ok(ReplayedJournal { fingerprint, records, truncated_bytes })
+}
+
+/// Open the journal for a run that starts (or resumes) at `start_tick`.
+///
+/// * `start_tick == 0`: a fresh journal is created, replacing anything at
+///   `path`.
+/// * `start_tick > 0` with an existing journal covering ticks
+///   `0..start_tick` contiguously: the file is validated against
+///   `fingerprint`, records from `start_tick` onward (re-executed ticks
+///   after a crash past the last checkpoint) are dropped, and the kept
+///   prefix is rewritten (atomically) so appends continue seamlessly.
+/// * `start_tick > 0` without an existing journal, or with one that does
+///   **not** cover `0..start_tick` contiguously (copied without its
+///   journal; a tail lost to power loss — appends are OS-flushed, not
+///   fsynced): a fresh journal covering only the resumed suffix is
+///   created, with a stderr warning in the gap case — never a silently
+///   gapped audit trail.
+pub fn for_run(path: &Path, fingerprint: u64, start_tick: usize) -> Result<Journal> {
+    if start_tick == 0 || !path.exists() {
+        return Journal::create(path, fingerprint);
+    }
+    let old = replay(path)?;
+    if old.fingerprint != fingerprint {
+        return Err(Error::Config(
+            "existing journal belongs to a different run configuration".into(),
+        ));
+    }
+    let kept = old.records.iter().filter(|r| r.tick < start_tick);
+    let contiguous = kept.clone().count() == start_tick
+        && kept.clone().enumerate().all(|(i, r)| r.tick == i);
+    if !contiguous {
+        eprintln!(
+            "warning: journal {} does not cover ticks 0..{start_tick} contiguously \
+             (crash-shortened tail?); starting a fresh journal for the resumed suffix",
+            path.display()
+        );
+        return Journal::create(path, fingerprint);
+    }
+    // Rewrite the kept prefix into a sibling temp file and rename it into
+    // place — the same atomicity discipline as the snapshot writer, so a
+    // crash mid-trim cannot destroy the journal. The open handle stays
+    // valid across the rename (it follows the inode), so appends continue
+    // into the final path.
+    let tmp = super::tmp_sibling(path);
+    let mut j = Journal::create(&tmp, fingerprint)?;
+    for rec in old.records.iter().filter(|r| r.tick < start_tick) {
+        j.append(rec)?;
+    }
+    j.w.get_ref().sync_all()?;
+    std::fs::rename(&tmp, path)?;
+    super::sync_parent_dir(path)?;
+    j.path = path.to_path_buf();
+    Ok(j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("pao_fed_journal_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn rec(tick: usize) -> TickRecord {
+        TickRecord {
+            tick,
+            w_hash: 0x1234_5678_9abc_def0 ^ tick as u64,
+            uplink_msgs: 3 * tick as u64,
+        }
+    }
+
+    #[test]
+    fn append_replay_roundtrip() {
+        let path = tmp("roundtrip.journal");
+        let mut j = Journal::create(&path, 42).unwrap();
+        for t in 0..50 {
+            j.append(&rec(t)).unwrap();
+        }
+        drop(j);
+        let r = replay(&path).unwrap();
+        assert_eq!(r.fingerprint, 42);
+        assert_eq!(r.truncated_bytes, 0);
+        assert_eq!(r.records.len(), 50);
+        assert_eq!(r.records[49], rec(49));
+    }
+
+    #[test]
+    fn truncated_tail_is_tolerated_not_fatal() {
+        let path = tmp("truncated.journal");
+        let mut j = Journal::create(&path, 7).unwrap();
+        for t in 0..10 {
+            j.append(&rec(t)).unwrap();
+        }
+        drop(j);
+        let full = std::fs::read(&path).unwrap();
+        // Chop into the last record (simulating a crash mid-append).
+        std::fs::write(&path, &full[..full.len() - 5]).unwrap();
+        let r = replay(&path).unwrap();
+        assert_eq!(r.records.len(), 9);
+        assert!(r.truncated_bytes > 0);
+    }
+
+    #[test]
+    fn corrupt_records_error_cleanly() {
+        let path = tmp("corrupt.journal");
+        let mut j = Journal::create(&path, 7).unwrap();
+        for t in 0..5 {
+            j.append(&rec(t)).unwrap();
+        }
+        drop(j);
+        let good = std::fs::read(&path).unwrap();
+        // Flip a payload byte of a middle record: checksum failure.
+        let mut bad = good.clone();
+        bad[20 + (4 + 25 + 8) + 6] ^= 1;
+        assert!(replay(&path_of(&bad)).is_err());
+        // Hostile record length.
+        let mut bad = good[..20].to_vec();
+        bad.extend_from_slice(&u32::MAX.to_le_bytes());
+        bad.extend_from_slice(&[0; 16]);
+        assert!(replay(&path_of(&bad)).is_err());
+        // Bad magic / version.
+        let mut bad = good.clone();
+        bad[0] ^= 0xff;
+        assert!(replay(&path_of(&bad)).is_err());
+        let mut bad = good.clone();
+        bad[8] = 9;
+        assert!(replay(&path_of(&bad)).is_err());
+    }
+
+    fn path_of(bytes: &[u8]) -> PathBuf {
+        let p = tmp("scratch.journal");
+        std::fs::write(&p, bytes).unwrap();
+        p
+    }
+
+    #[test]
+    fn for_run_trims_reexecuted_ticks() {
+        let path = tmp("trim.journal");
+        let mut j = Journal::create(&path, 11).unwrap();
+        for t in 0..30 {
+            j.append(&rec(t)).unwrap();
+        }
+        drop(j);
+        // Resume from tick 20: records 20..30 (past the checkpoint) are
+        // dropped; the re-executed ticks append fresh.
+        let mut j = for_run(&path, 11, 20).unwrap();
+        for t in 20..25 {
+            j.append(&rec(t)).unwrap();
+        }
+        drop(j);
+        let r = replay(&path).unwrap();
+        assert_eq!(r.records.len(), 25);
+        assert!(r.records.iter().enumerate().all(|(i, r)| r.tick == i));
+        // The trim went through a sibling temp file (atomic rename), and
+        // nothing was left behind.
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(".tmp");
+        assert!(!std::path::Path::new(&tmp).exists());
+        // A fingerprint mismatch refuses to touch the journal.
+        assert!(for_run(&path, 12, 20).is_err());
+        // start_tick == 0 starts the journal over.
+        let j = for_run(&path, 99, 0).unwrap();
+        drop(j);
+        assert_eq!(replay(&path).unwrap().records.len(), 0);
+    }
+
+    #[test]
+    fn gapped_journal_restarts_instead_of_hiding_the_gap() {
+        // A journal whose tail was lost (appends are OS-flushed, not
+        // fsynced) no longer covers 0..start_tick; resuming against it
+        // must start a fresh suffix journal, not splice a silent gap.
+        let path = tmp("gapped.journal");
+        let mut j = Journal::create(&path, 5).unwrap();
+        for t in 0..12 {
+            if t != 6 {
+                j.append(&rec(t)).unwrap();
+            }
+        }
+        drop(j);
+        let mut j = for_run(&path, 5, 12).unwrap();
+        j.append(&rec(12)).unwrap();
+        drop(j);
+        let r = replay(&path).unwrap();
+        assert_eq!(r.records.len(), 1, "gapped prefix must not be kept");
+        assert_eq!(r.records[0], rec(12));
+        // Same when the surviving records simply stop short of the
+        // checkpoint tick.
+        let path = tmp("short.journal");
+        let mut j = Journal::create(&path, 5).unwrap();
+        for t in 0..8 {
+            j.append(&rec(t)).unwrap();
+        }
+        drop(j);
+        let j = for_run(&path, 5, 12).unwrap();
+        drop(j);
+        assert_eq!(replay(&path).unwrap().records.len(), 0);
+    }
+}

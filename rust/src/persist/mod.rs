@@ -1,0 +1,123 @@
+//! Deterministic checkpoint/restore: the crash-safety subsystem.
+//!
+//! Long federation runs — multi-hour Monte-Carlo sweeps and live fleets
+//! alike — need to survive process restarts without perturbing results.
+//! This module provides the two durable artifacts both runtimes share:
+//!
+//! * [`snapshot`] — a versioned, checksummed binary image of the complete
+//!   run state at a tick boundary (server model + aggregation epoch,
+//!   in-flight delay-channel contents, per-client local models, PRNG
+//!   stream states, comm counters, the eval curve), written atomically
+//!   (temp file + rename). `run → snapshot at tick T → restore → continue`
+//!   is **bit-identical** to an uninterrupted run on every backend and
+//!   dispatch path — the same contract the engine, pipeline, SIMD and
+//!   transport layers already obey.
+//! * [`journal`] — an append-only per-tick record (tick index, model
+//!   digest, uplink counter) with per-record checksums and tolerance for
+//!   a crash-truncated tail; the audit trail resume tests diff.
+//!
+//! The crate-private `codec` submodule is the shared binary substrate
+//! (also used by the deployment wire protocol in `async_rt::wire`), so
+//! snapshot files, journal records and wire frames all speak one
+//! encoding and share one hardening discipline: corrupt input decodes to
+//! [`Error::Protocol`](crate::error::Error::Protocol), never a panic.
+//!
+//! Consumers: `fl::engine::run_resumable` (discrete engine), the
+//! deployment server loop in `async_rt::protocol` (`--checkpoint-every` /
+//! `--resume` on the CLI), and the fleet supervisor in
+//! `async_rt::transport`, which re-ships a reconnecting worker its shard
+//! plus the replay log it needs to rebuild client state bit-exactly. See
+//! `docs/ARCHITECTURE.md` § "Persistence & recovery".
+
+pub(crate) mod codec;
+pub mod journal;
+pub mod snapshot;
+
+pub use journal::{Journal, TickRecord};
+pub use snapshot::RunSnapshot;
+
+use std::path::{Path, PathBuf};
+
+/// The sibling `<path>.tmp` a durable write stages into before the
+/// atomic rename (one definition, so snapshot and journal cannot drift
+/// in their crash-safety discipline).
+pub(crate) fn tmp_sibling(path: &Path) -> PathBuf {
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    PathBuf::from(tmp)
+}
+
+/// Create the parent directory of a persistence file if it has one.
+pub(crate) fn ensure_parent_dir(path: &Path) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    Ok(())
+}
+
+/// The journal that lives beside a snapshot file (`<stem>.journal`). A
+/// snapshot path that itself ends in `.journal` would be clobbered by
+/// its own journal (and vice versa), so it is refused up front instead
+/// of corrupting both artifacts at the first checkpoint.
+pub fn journal_path_for(snapshot_path: &Path) -> crate::error::Result<PathBuf> {
+    if snapshot_path.extension().is_some_and(|e| e == "journal") {
+        return Err(crate::error::Error::Config(format!(
+            "checkpoint path {} ends in .journal and would collide with its own journal \
+             (pick another extension)",
+            snapshot_path.display()
+        )));
+    }
+    Ok(snapshot_path.with_extension("journal"))
+}
+
+/// Sync the directory entry after an atomic rename: without an fsync of
+/// the *parent*, power loss can revert the rename and resurrect the
+/// pre-checkpoint state even though the file contents were synced.
+pub(crate) fn sync_parent_dir(path: &Path) -> std::io::Result<()> {
+    let dir = match path.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d,
+        _ => Path::new("."),
+    };
+    std::fs::File::open(dir)?.sync_all()
+}
+
+/// Where and how often a run persists itself — the one policy struct both
+/// runtimes consume (`fl::engine::run_resumable` and the deployment
+/// loop's `DeploymentConfig::persist`).
+///
+/// The missing-file-on-resume behavior is per runtime: the engine starts
+/// fresh (so a partially-completed Monte-Carlo sweep resumes whatever
+/// checkpoints it has), while a deployment refuses loudly (resuming a
+/// fleet names one specific run).
+#[derive(Clone, Debug)]
+pub struct PersistPolicy {
+    /// Snapshot file (the journal lands beside it with a `.journal`
+    /// extension).
+    pub path: PathBuf,
+    /// Write a rolling checkpoint every this many ticks (0 = never; the
+    /// run still journals, and a deployment still checkpoints at a
+    /// `run_until` stop).
+    pub checkpoint_every: usize,
+    /// Restore from `path` before running.
+    pub resume: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn journal_path_collides_only_on_journal_extension() {
+        assert!(journal_path_for(Path::new("run.journal")).is_err());
+        assert_eq!(
+            journal_path_for(Path::new("run.ckpt")).unwrap(),
+            PathBuf::from("run.journal")
+        );
+        assert_eq!(
+            journal_path_for(Path::new("dir/run")).unwrap(),
+            PathBuf::from("dir/run.journal")
+        );
+    }
+}

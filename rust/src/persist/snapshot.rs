@@ -1,0 +1,716 @@
+//! Versioned, checksummed run snapshots: the complete state of a
+//! federation run at a tick boundary, as one self-describing binary blob.
+//!
+//! A [`RunSnapshot`] captures everything the tick loop carries across
+//! iterations — server model + aggregation scratch epoch, the in-flight
+//! [`DelayQueue`](crate::fl::delay::DelayQueue) contents, every client's
+//! local model, any stateful PRNG streams, the communication counters,
+//! aggregation diagnostics, and the evaluation curve sampled so far — such
+//! that `run → snapshot at tick T → restore → continue` reproduces an
+//! uninterrupted run **bit for bit** (pinned by `rust/tests/persistence.rs`
+//! for the discrete engine and the deployment runtime alike). Everything
+//! *not* captured is a pure function of `(config, env_seed, tick)`:
+//! participation and delay draws, selection schedules and blind
+//! subsampling all come from counter-keyed PRNG streams, which is what
+//! keeps the snapshot this small.
+//!
+//! On disk a snapshot is `MAGIC ("PAOFSNAP") | version u32 | payload-len
+//! u64 | payload | FNV-1a-64 checksum` — the `wire.rs` framing idiom with
+//! an integrity tail. [`write_file`] writes to a sibling temporary file
+//! and atomically renames it into place, so a crash mid-checkpoint leaves
+//! the previous checkpoint intact. Corrupt input of any kind (bad magic,
+//! unknown version, truncated payload, checksum mismatch, hostile counts)
+//! decodes to [`Error::Protocol`], never a panic.
+
+use super::codec::{self, Cur};
+use crate::error::{Error, Result};
+use crate::fl::delay::{DelayModel, DelayQueue};
+use crate::fl::engine::AlgoConfig;
+use crate::fl::selection::{Coords, SelectionSchedule};
+use crate::fl::server::{AggregateInfo, AggregationMode, Server, Update};
+use crate::metrics::CommStats;
+use std::io::Write;
+use std::path::Path;
+
+/// Leading bytes of every snapshot file.
+pub const MAGIC: [u8; 8] = *b"PAOFSNAP";
+
+/// Current snapshot format version.
+pub const VERSION: u32 = 1;
+
+/// One checkpointed PRNG stream (`util::rng::Pcg32::to_parts`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PcgStream {
+    /// Generator state word.
+    pub state: u64,
+    /// Stream selector (odd).
+    pub inc: u64,
+    /// Cached Box-Muller spare, if a Gaussian draw is buffered.
+    pub gauss_spare: Option<f64>,
+}
+
+/// Checkpointed server state (`fl::server::Server`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServerState {
+    /// Global model `w_n`.
+    pub w: Vec<f32>,
+    /// Aggregation scratch epoch.
+    pub epoch: u64,
+}
+
+impl ServerState {
+    /// Capture a server's checkpointable state — the single definition
+    /// both the engine pipeline and the deployment loop use, so the two
+    /// runtimes cannot drift in what a checkpoint means.
+    pub fn capture(server: &Server) -> Self {
+        ServerState { w: server.w.clone(), epoch: server.epoch() }
+    }
+
+    /// Rebuild the server under `mode` (scratch rebuilt empty — bit-exact,
+    /// see `Server::restore`).
+    pub fn rebuild(&self, mode: AggregationMode) -> Server {
+        Server::restore(self.w.clone(), mode, self.epoch)
+    }
+}
+
+/// Checkpointed delay-channel state (`fl::delay::DelayQueue`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct QueueState {
+    /// Queue horizon in iterations.
+    pub horizon: usize,
+    /// Queue clock (last drained iteration).
+    pub now: usize,
+    /// Clamped-arrival diagnostic counter.
+    pub clamped: u64,
+    /// Undelivered updates with their absolute arrival iterations, in
+    /// `DelayQueue::pending` order (the order aggregation will consume).
+    pub entries: Vec<(usize, Update)>,
+}
+
+impl QueueState {
+    /// Capture a delay queue's checkpointable state (shared by both
+    /// runtimes — see [`ServerState::capture`]).
+    pub fn capture(queue: &DelayQueue<Update>) -> Self {
+        QueueState {
+            horizon: queue.horizon(),
+            now: queue.now(),
+            clamped: queue.clamped_arrivals(),
+            entries: queue
+                .pending()
+                .into_iter()
+                .map(|(arrival, u)| (arrival, u.clone()))
+                .collect(),
+        }
+    }
+
+    /// Rebuild the delay queue, rejecting out-of-window arrivals.
+    pub fn rebuild(&self) -> Result<DelayQueue<Update>> {
+        DelayQueue::restore(self.horizon, self.now, self.clamped, self.entries.clone())
+    }
+}
+
+/// The complete state of a federation run at a tick boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunSnapshot {
+    /// Next tick to execute (the run completed ticks `0..tick`).
+    pub tick: usize,
+    /// Environment seed keying every stochastic draw.
+    pub env_seed: u64,
+    /// Number of clients K.
+    pub k: usize,
+    /// Model dimension D.
+    pub d: usize,
+    /// Total run length in iterations.
+    pub n_iters: usize,
+    /// Every client's availability probability, `[K]` (part of the run
+    /// identity: different probabilities mean different availability
+    /// draws, so a resume under them would silently diverge).
+    pub avail_probs: Vec<f64>,
+    /// The curve-sampling cadence actually in force (the deployment's
+    /// `eval_every` may differ from `algo.eval_every`, which only the
+    /// engine consumes — both are part of the run identity).
+    pub eval_every: usize,
+    /// The algorithm preset in force (validated on restore).
+    pub algo: AlgoConfig,
+    /// The delay-channel model (validated on restore).
+    pub delay: DelayModel,
+    /// The selection schedule realization (validated on restore).
+    pub schedule: SelectionSchedule,
+    /// Server model + aggregation epoch.
+    pub server: ServerState,
+    /// In-flight delay-channel contents.
+    pub queue: QueueState,
+    /// Per-client local models, `[K * D]` row-major.
+    pub client_w: Vec<f32>,
+    /// Stateful PRNG streams, if the run carries any (the engine and
+    /// deployment derive every draw from counters, so this is empty for
+    /// them; the field exists so stateful extensions checkpoint cleanly).
+    pub rng: Vec<PcgStream>,
+    /// Communication totals so far.
+    pub comm: CommStats,
+    /// Aggregation diagnostics summed so far.
+    pub agg: AggregateInfo,
+    /// Iterations at which the curve was sampled so far.
+    pub curve_iters: Vec<usize>,
+    /// MSE-test in dB at those iterations.
+    pub curve_db: Vec<f64>,
+    /// Total local-learning steps so far (deployment runtime; the engine
+    /// does not track this and stores 0).
+    pub local_steps: u64,
+}
+
+impl RunSnapshot {
+    /// Encode the snapshot payload (no file header / checksum).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        codec::put_usize(&mut buf, self.tick);
+        codec::put_u64(&mut buf, self.env_seed);
+        codec::put_usize(&mut buf, self.k);
+        codec::put_usize(&mut buf, self.d);
+        codec::put_usize(&mut buf, self.n_iters);
+        codec::put_f64s(&mut buf, &self.avail_probs);
+        codec::put_usize(&mut buf, self.eval_every);
+        codec::put_algo(&mut buf, &self.algo);
+        codec::put_delay(&mut buf, &self.delay);
+        buf.push(codec::schedule_kind_tag(self.schedule.kind));
+        codec::put_usize(&mut buf, self.schedule.d);
+        codec::put_usize(&mut buf, self.schedule.m);
+        codec::put_u64(&mut buf, self.schedule.seed);
+        codec::put_f32s(&mut buf, &self.server.w);
+        codec::put_u64(&mut buf, self.server.epoch);
+        codec::put_usize(&mut buf, self.queue.horizon);
+        codec::put_usize(&mut buf, self.queue.now);
+        codec::put_u64(&mut buf, self.queue.clamped);
+        codec::put_usize(&mut buf, self.queue.entries.len());
+        for (arrival, update) in &self.queue.entries {
+            codec::put_usize(&mut buf, *arrival);
+            codec::put_update(&mut buf, update);
+        }
+        codec::put_f32s(&mut buf, &self.client_w);
+        codec::put_usize(&mut buf, self.rng.len());
+        for s in &self.rng {
+            codec::put_u64(&mut buf, s.state);
+            codec::put_u64(&mut buf, s.inc);
+            match s.gauss_spare {
+                None => codec::put_bool(&mut buf, false),
+                Some(g) => {
+                    codec::put_bool(&mut buf, true);
+                    codec::put_f64(&mut buf, g);
+                }
+            }
+        }
+        codec::put_u64(&mut buf, self.comm.downlink_scalars);
+        codec::put_u64(&mut buf, self.comm.uplink_scalars);
+        codec::put_u64(&mut buf, self.comm.downlink_msgs);
+        codec::put_u64(&mut buf, self.comm.uplink_msgs);
+        codec::put_usize(&mut buf, self.agg.applied);
+        codec::put_usize(&mut buf, self.agg.discarded_stale);
+        codec::put_usize(&mut buf, self.agg.conflicts_resolved);
+        codec::put_usize(&mut buf, self.agg.touched_coords);
+        codec::put_usize(&mut buf, self.curve_iters.len());
+        for &it in &self.curve_iters {
+            codec::put_usize(&mut buf, it);
+        }
+        for &v in &self.curve_db {
+            codec::put_f64(&mut buf, v);
+        }
+        codec::put_u64(&mut buf, self.local_steps);
+        buf
+    }
+
+    /// Decode one payload produced by [`RunSnapshot::encode`].
+    pub fn decode(payload: &[u8]) -> Result<Self> {
+        let mut c = Cur::new(payload);
+        let tick = c.usize()?;
+        let env_seed = c.u64()?;
+        let k = c.usize()?;
+        let d = c.usize()?;
+        let n_iters = c.usize()?;
+        let avail_probs = c.f64s()?;
+        let eval_every = c.usize()?;
+        let algo = c.algo()?;
+        let delay = c.delay()?;
+        let schedule = SelectionSchedule {
+            kind: c.schedule_kind()?,
+            d: c.usize()?,
+            m: c.usize()?,
+            seed: c.u64()?,
+        };
+        let server = ServerState { w: c.f32s()?, epoch: c.u64()? };
+        let horizon = c.usize()?;
+        let now = c.usize()?;
+        let clamped = c.u64()?;
+        // Each queue entry carries at least an arrival, the fixed update
+        // header and a `Coords::Full` tag (41 bytes).
+        let n_entries = c.len(41)?;
+        let mut entries = Vec::with_capacity(n_entries);
+        for _ in 0..n_entries {
+            let arrival = c.usize()?;
+            let u = c.update()?;
+            // The checksum only detects accidents; a crafted-but-valid
+            // file must still never panic downstream. Aggregation indexes
+            // by these coords, so pin them to this snapshot's D here.
+            let shape_ok = u.values.len() == u.coords.len()
+                && match &u.coords {
+                    Coords::Range { d: cd, .. } => *cd == d && d > 0,
+                    Coords::List { idx, d: cd } => {
+                        *cd == d && idx.iter().all(|&i| (i as usize) < d)
+                    }
+                    Coords::Full { d: cd } => *cd == d,
+                };
+            if !shape_ok {
+                return Err(Error::Protocol(format!(
+                    "queue entry coords/values disagree with model dimension {d}"
+                )));
+            }
+            entries.push((arrival, u));
+        }
+        let queue = QueueState { horizon, now, clamped, entries };
+        let client_w = c.f32s()?;
+        if k.checked_mul(d) != Some(client_w.len())
+            || server.w.len() != d
+            || avail_probs.len() != k
+        {
+            return Err(Error::Protocol(format!(
+                "snapshot dimensions disagree: K={k} D={d} but {} client scalars, \
+                 {} server scalars, {} availability probabilities",
+                client_w.len(),
+                server.w.len(),
+                avail_probs.len()
+            )));
+        }
+        let n_rng = c.len(17)?;
+        let mut rng = Vec::with_capacity(n_rng);
+        for _ in 0..n_rng {
+            rng.push(PcgStream {
+                state: c.u64()?,
+                inc: c.u64()?,
+                gauss_spare: if c.bool()? { Some(c.f64()?) } else { None },
+            });
+        }
+        let comm = CommStats {
+            downlink_scalars: c.u64()?,
+            uplink_scalars: c.u64()?,
+            downlink_msgs: c.u64()?,
+            uplink_msgs: c.u64()?,
+        };
+        let agg = AggregateInfo {
+            applied: c.usize()?,
+            discarded_stale: c.usize()?,
+            conflicts_resolved: c.usize()?,
+            touched_coords: c.usize()?,
+        };
+        // Each curve point carries an iteration and a dB sample.
+        let n_curve = c.len(16)?;
+        let mut curve_iters = Vec::with_capacity(n_curve);
+        for _ in 0..n_curve {
+            curve_iters.push(c.usize()?);
+        }
+        let mut curve_db = Vec::with_capacity(n_curve);
+        for _ in 0..n_curve {
+            curve_db.push(c.f64()?);
+        }
+        let local_steps = c.u64()?;
+        if c.remaining() != 0 {
+            return Err(Error::Protocol(format!(
+                "{} trailing bytes after snapshot",
+                c.remaining()
+            )));
+        }
+        Ok(RunSnapshot {
+            tick,
+            env_seed,
+            k,
+            d,
+            n_iters,
+            avail_probs,
+            eval_every,
+            algo,
+            delay,
+            schedule,
+            server,
+            queue,
+            client_w,
+            rng,
+            comm,
+            agg,
+            curve_iters,
+            curve_db,
+            local_steps,
+        })
+    }
+
+    /// Reject a snapshot that was not taken from this exact run
+    /// configuration: a resumed run must continue the *same* stochastic
+    /// realization or the bit-exactness contract is meaningless.
+    pub fn validate(
+        &self,
+        k: usize,
+        d: usize,
+        n_iters: usize,
+        env_seed: u64,
+        avail_probs: &[f64],
+        eval_every: usize,
+        algo: &AlgoConfig,
+        delay: &DelayModel,
+    ) -> Result<()> {
+        if self.k != k || self.d != d || self.n_iters != n_iters || self.env_seed != env_seed {
+            return Err(Error::Config(format!(
+                "snapshot was taken from a different environment: \
+                 K={} D={} N={} seed={} vs K={k} D={d} N={n_iters} seed={env_seed}",
+                self.k, self.d, self.n_iters, self.env_seed
+            )));
+        }
+        if self.avail_probs != avail_probs {
+            return Err(Error::Config(
+                "snapshot participation probabilities do not match".into(),
+            ));
+        }
+        if self.eval_every != eval_every {
+            return Err(Error::Config(format!(
+                "snapshot curve cadence {} does not match the configured {eval_every}",
+                self.eval_every
+            )));
+        }
+        if &self.algo != algo {
+            return Err(Error::Config(format!(
+                "snapshot algorithm {:?} does not match the configured {:?}",
+                self.algo.name, algo.name
+            )));
+        }
+        if &self.delay != delay {
+            return Err(Error::Config("snapshot delay model does not match".into()));
+        }
+        let want = SelectionSchedule::new(algo.schedule, d, algo.m, env_seed);
+        if self.schedule != want {
+            return Err(Error::Config("snapshot selection schedule does not match".into()));
+        }
+        if self.tick > n_iters {
+            return Err(Error::Config(format!(
+                "snapshot tick {} past the end of the {n_iters}-iteration run",
+                self.tick
+            )));
+        }
+        if self.queue.horizon != delay.max_delay().min(n_iters) {
+            return Err(Error::Config("snapshot delay horizon does not match".into()));
+        }
+        // At a tick-T boundary the channel was last drained at T-1; any
+        // other clock means the capture point is not one this runtime
+        // produces (and a hostile clock could deliver updates early/late).
+        if self.queue.now != self.tick.saturating_sub(1) {
+            return Err(Error::Config(format!(
+                "snapshot delay-queue clock {} disagrees with tick {}",
+                self.queue.now, self.tick
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Parse snapshot file bytes (header + payload + checksum).
+pub fn from_bytes(bytes: &[u8]) -> Result<RunSnapshot> {
+    if bytes.len() < MAGIC.len() + 4 + 8 + 8 {
+        return Err(Error::Protocol("snapshot file too short for its header".into()));
+    }
+    if bytes[..8] != MAGIC {
+        return Err(Error::Protocol("not a pao-fed snapshot (bad magic)".into()));
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    if version != VERSION {
+        return Err(Error::Protocol(format!(
+            "unsupported snapshot version {version} (this build reads {VERSION})"
+        )));
+    }
+    let len = u64::from_le_bytes(bytes[12..20].try_into().unwrap());
+    let body = &bytes[20..];
+    if (body.len() as u64) < 8 || len != body.len() as u64 - 8 {
+        return Err(Error::Protocol(format!(
+            "snapshot payload length {len} disagrees with {} file bytes",
+            bytes.len()
+        )));
+    }
+    let (payload, tail) = body.split_at(len as usize);
+    let want = u64::from_le_bytes(tail.try_into().unwrap());
+    let got = codec::fnv1a64(payload);
+    if want != got {
+        return Err(Error::Protocol(format!(
+            "snapshot checksum mismatch: file says {want:#018x}, payload hashes to {got:#018x}"
+        )));
+    }
+    RunSnapshot::decode(payload)
+}
+
+/// Serialize a snapshot to file bytes (header + payload + checksum).
+pub fn to_bytes(snap: &RunSnapshot) -> Vec<u8> {
+    let payload = snap.encode();
+    let mut out = Vec::with_capacity(20 + payload.len() + 8);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    let sum = codec::fnv1a64(&payload);
+    out.extend_from_slice(&payload);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+/// Write a snapshot atomically: the bytes land in a sibling `*.tmp` file,
+/// are synced, and replace `path` via rename — a crash mid-write leaves
+/// the previous checkpoint intact.
+pub fn write_file(path: &Path, snap: &RunSnapshot) -> Result<()> {
+    super::ensure_parent_dir(path)?;
+    let tmp = super::tmp_sibling(path);
+    let mut f = std::fs::File::create(&tmp)?;
+    f.write_all(&to_bytes(snap))?;
+    f.sync_all()?;
+    drop(f);
+    std::fs::rename(&tmp, path)?;
+    super::sync_parent_dir(path)?;
+    Ok(())
+}
+
+/// Read and verify a snapshot file.
+pub fn read_file(path: &Path) -> Result<RunSnapshot> {
+    from_bytes(&std::fs::read(path)?)
+}
+
+/// FNV-1a 64 over a model's IEEE-754 bit patterns: the per-tick model
+/// digest journal records carry (bit-exactness evidence for resume tests).
+pub fn hash_model(w: &[f32]) -> u64 {
+    let mut bytes = Vec::with_capacity(w.len() * 4);
+    for &v in w {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    codec::fnv1a64(&bytes)
+}
+
+/// Fingerprint of a run configuration (keys journal headers so a journal
+/// cannot be replayed against the wrong run).
+pub fn fingerprint(
+    k: usize,
+    d: usize,
+    n_iters: usize,
+    env_seed: u64,
+    avail_probs: &[f64],
+    algo: &AlgoConfig,
+    delay: &DelayModel,
+) -> u64 {
+    let mut buf = Vec::new();
+    codec::put_usize(&mut buf, k);
+    codec::put_usize(&mut buf, d);
+    codec::put_usize(&mut buf, n_iters);
+    codec::put_u64(&mut buf, env_seed);
+    codec::put_f64s(&mut buf, avail_probs);
+    codec::put_algo(&mut buf, algo);
+    codec::put_delay(&mut buf, delay);
+    codec::fnv1a64(&buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::algorithms::{self, Variant};
+    use crate::fl::selection::{Coords, ScheduleKind};
+
+    fn sample_snapshot() -> RunSnapshot {
+        let algo = algorithms::build(Variant::PaoFedU2, 0.4, 4, 10, 25);
+        RunSnapshot {
+            tick: 120,
+            env_seed: 17,
+            k: 3,
+            d: 8,
+            n_iters: 200,
+            avail_probs: vec![0.25, 0.1, 0.05],
+            eval_every: 25,
+            delay: DelayModel::Geometric { delta: 0.3 },
+            schedule: SelectionSchedule::new(algo.schedule, 8, algo.m, 17),
+            algo,
+            server: ServerState {
+                w: vec![0.5, -0.0, f32::MIN_POSITIVE, 3.25, 0.0, 1.0, -2.5, 9.0],
+                epoch: 120,
+            },
+            queue: QueueState {
+                horizon: 200,
+                now: 119,
+                clamped: 2,
+                entries: vec![
+                    (
+                        121,
+                        Update {
+                            client: 1,
+                            sent_iter: 118,
+                            coords: Coords::Range { start: 6, len: 4, d: 8 },
+                            values: vec![1.0, 2.0, -0.0, 4.0],
+                        },
+                    ),
+                    (
+                        125,
+                        Update {
+                            client: 2,
+                            sent_iter: 119,
+                            coords: Coords::List { idx: vec![0, 7], d: 8 },
+                            values: vec![-1.5, 2.5],
+                        },
+                    ),
+                ],
+            },
+            client_w: (0..24).map(|i| i as f32 * 0.5).collect(),
+            rng: vec![
+                PcgStream { state: 99, inc: 7, gauss_spare: None },
+                PcgStream { state: 1, inc: 3, gauss_spare: Some(-0.75) },
+            ],
+            comm: CommStats {
+                downlink_scalars: 400,
+                uplink_scalars: 380,
+                downlink_msgs: 100,
+                uplink_msgs: 95,
+            },
+            agg: AggregateInfo {
+                applied: 90,
+                discarded_stale: 5,
+                conflicts_resolved: 12,
+                touched_coords: 300,
+            },
+            curve_iters: vec![0, 25, 50, 75, 100],
+            curve_db: vec![0.0, -3.5, -7.25, -9.0, -10.125],
+            local_steps: 4096,
+        }
+    }
+
+    #[test]
+    fn payload_roundtrip_is_exact() {
+        let snap = sample_snapshot();
+        let dec = RunSnapshot::decode(&snap.encode()).unwrap();
+        assert_eq!(snap, dec);
+        // Bit-exact floats, signed zeros included.
+        assert_eq!(dec.server.w[1].to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn file_roundtrip_and_atomic_write() {
+        let dir = std::env::temp_dir().join("pao_fed_snapshot_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.ckpt");
+        let snap = sample_snapshot();
+        write_file(&path, &snap).unwrap();
+        assert_eq!(read_file(&path).unwrap(), snap);
+        // Overwrite goes through the same rename; the tmp file is gone.
+        write_file(&path, &snap).unwrap();
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(".tmp");
+        assert!(!std::path::Path::new(&tmp).exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_snapshots_error_cleanly() {
+        let snap = sample_snapshot();
+        let good = to_bytes(&snap);
+        // Too short / bad magic / bad version.
+        assert!(from_bytes(&[]).is_err());
+        assert!(from_bytes(&good[..19]).is_err());
+        let mut bad = good.clone();
+        bad[0] ^= 0xff;
+        assert!(from_bytes(&bad).is_err());
+        let mut bad = good.clone();
+        bad[8] = 99;
+        assert!(from_bytes(&bad).is_err());
+        // Any flipped payload bit fails the checksum.
+        for at in [20usize, 60, good.len() - 9] {
+            let mut bad = good.clone();
+            bad[at] ^= 1;
+            assert!(from_bytes(&bad).is_err(), "flip at {at} accepted");
+        }
+        // Truncated payload disagrees with the declared length.
+        assert!(from_bytes(&good[..good.len() - 1]).is_err());
+        // Trailing garbage likewise.
+        let mut bad = good.clone();
+        bad.push(0);
+        assert!(from_bytes(&bad).is_err());
+        // Hostile entry count inside an otherwise small payload is
+        // rejected before any reservation happens.
+        let mut payload = snap.encode();
+        // The queue entry count sits after tick/env_seed/k/d/n_iters +
+        // algo + delay + schedule + server + horizon/now/clamped; rather
+        // than hand-compute the offset, corrupt via decode of a crafted
+        // short buffer: a bare count with no bytes behind it.
+        payload.truncate(8);
+        assert!(RunSnapshot::decode(&payload).is_err());
+    }
+
+    /// A crafted (checksum-valid) snapshot with queue entries whose
+    /// coords disagree with the model dimension must be refused at
+    /// decode — aggregation would index out of bounds otherwise.
+    #[test]
+    fn decode_rejects_malformed_queue_entries() {
+        let mut bad = sample_snapshot();
+        bad.queue.entries[0].1.coords = Coords::Full { d: 10_000 };
+        bad.queue.entries[0].1.values = vec![0.0; 10_000];
+        assert!(RunSnapshot::decode(&bad.encode()).is_err());
+        let mut bad = sample_snapshot();
+        bad.queue.entries[0].1.values.pop(); // shorter than coords.len()
+        assert!(RunSnapshot::decode(&bad.encode()).is_err());
+        let mut bad = sample_snapshot();
+        bad.queue.entries[1].1.coords = Coords::List { idx: vec![0, 8], d: 8 }; // idx == d
+        assert!(RunSnapshot::decode(&bad.encode()).is_err());
+        // A hostile queue clock is caught by validate.
+        let mut bad = sample_snapshot();
+        bad.queue.now = 50;
+        let probs = bad.avail_probs.clone();
+        assert!(bad.validate(3, 8, 200, 17, &probs, 25, &bad.algo, &bad.delay).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_mismatched_runs() {
+        let snap = sample_snapshot();
+        let probs = snap.avail_probs.clone();
+        let ok = snap.validate(3, 8, 200, 17, &probs, 25, &snap.algo.clone(), &snap.delay.clone());
+        assert!(ok.is_ok());
+        assert!(snap.validate(4, 8, 200, 17, &probs, 25, &snap.algo, &snap.delay).is_err());
+        assert!(snap.validate(3, 8, 200, 18, &probs, 25, &snap.algo, &snap.delay).is_err());
+        let other = algorithms::build(Variant::OnlineFedSgd, 0.4, 4, 10, 25);
+        assert!(snap.validate(3, 8, 200, 17, &probs, 25, &other, &snap.delay).is_err());
+        assert!(snap
+            .validate(3, 8, 200, 17, &probs, 25, &snap.algo, &DelayModel::None)
+            .is_err());
+        // Different participation probabilities change every availability
+        // draw: refused.
+        assert!(snap
+            .validate(3, 8, 200, 17, &[1.0, 1.0, 1.0], 25, &snap.algo, &snap.delay)
+            .is_err());
+        // A different curve-sampling cadence changes which ticks are
+        // sampled: refused.
+        assert!(snap.validate(3, 8, 200, 17, &probs, 50, &snap.algo, &snap.delay).is_err());
+        // A schedule that disagrees with (algo, d, m, seed) is rejected.
+        let mut bad = snap.clone();
+        bad.schedule = SelectionSchedule::new(ScheduleKind::Coordinated, 8, 2, 5);
+        assert!(bad.validate(3, 8, 200, 17, &probs, 25, &snap.algo, &snap.delay).is_err());
+    }
+
+    #[test]
+    fn fingerprint_separates_configs() {
+        let a = algorithms::build(Variant::PaoFedU2, 0.4, 4, 10, 25);
+        let b = algorithms::build(Variant::PaoFedU1, 0.4, 4, 10, 25);
+        let d = DelayModel::Geometric { delta: 0.2 };
+        let p = [0.25f64; 8];
+        let q = [0.5f64; 8];
+        assert_eq!(fingerprint(8, 16, 100, 1, &p, &a, &d), fingerprint(8, 16, 100, 1, &p, &a, &d));
+        assert_ne!(fingerprint(8, 16, 100, 1, &p, &a, &d), fingerprint(8, 16, 100, 1, &p, &b, &d));
+        assert_ne!(fingerprint(8, 16, 100, 1, &p, &a, &d), fingerprint(8, 16, 100, 2, &p, &a, &d));
+        assert_ne!(fingerprint(8, 16, 100, 1, &p, &a, &d), fingerprint(8, 16, 100, 1, &q, &a, &d));
+        assert_ne!(
+            fingerprint(8, 16, 100, 1, &p, &a, &d),
+            fingerprint(8, 16, 100, 1, &p, &a, &DelayModel::None)
+        );
+    }
+
+    #[test]
+    fn hash_model_is_bit_sensitive() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        let mut b = a.clone();
+        assert_eq!(hash_model(&a), hash_model(&b));
+        b[1] = f32::from_bits(b[1].to_bits() ^ 1);
+        assert_ne!(hash_model(&a), hash_model(&b));
+        // Signed zero is a distinct model.
+        assert_ne!(hash_model(&[0.0]), hash_model(&[-0.0]));
+    }
+}

@@ -54,6 +54,8 @@ fn deployment_matches_discrete_engine() {
                 tick: Duration::ZERO,
                 env_seed: seed,
                 eval_every: 25,
+                persist: None,
+                run_until: None,
             },
         )
         .unwrap();
@@ -85,6 +87,8 @@ fn deployment_survives_zero_participation() {
             tick: Duration::ZERO,
             env_seed: seed,
             eval_every: 50,
+            persist: None,
+            run_until: None,
         },
     )
     .unwrap();

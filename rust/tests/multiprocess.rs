@@ -5,11 +5,17 @@
 //! `(stream, rff, participation, delay, algo)` configuration. Workers are
 //! real child processes of the `pao-fed` binary (`deploy --connect`),
 //! spawned via `std::process::Command`.
+//!
+//! Also: fleet supervision. A worker killed mid-run must be replaced by a
+//! fresh process that reconnects, replays its shard from the supervisor's
+//! model log, and finishes the run — with the final curve still
+//! bit-identical to an undisturbed run.
 
 use pao_fed::async_rt::{run_deployment, run_deployment_tcp, DeploymentConfig};
 use pao_fed::data::stream::{FedStream, StreamConfig};
 use pao_fed::data::synthetic::Eq39Source;
 use pao_fed::fl::algorithms::{self, Variant};
+use pao_fed::persist::PersistPolicy;
 use pao_fed::fl::delay::DelayModel;
 use pao_fed::fl::participation::Participation;
 use pao_fed::rff::RffSpace;
@@ -45,6 +51,83 @@ fn spawn_workers(addr: &str, count: usize) -> Vec<Child> {
         .collect()
 }
 
+/// A worker that will crash (abrupt `exit(3)`, sockets unflushed) on its
+/// first downlink for an iteration >= `crash_at`.
+fn spawn_doomed_worker(addr: &str, crash_at: usize) -> Child {
+    Command::new(env!("CARGO_BIN_EXE_pao-fed"))
+        .args(["deploy", "--connect", addr])
+        .env("PAO_FED_CRASH_AT_TICK", crash_at.to_string())
+        .stdout(Stdio::null())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawn doomed worker")
+}
+
+/// Kill one worker mid-run and let the supervisor adopt a replacement:
+/// the run must complete via reconnect + deterministic shard replay, and
+/// the final curve must be **bit-identical** to an undisturbed loopback
+/// run (which itself is pinned bit-identical to the in-process shape).
+#[test]
+fn killed_worker_is_replaced_and_curve_stays_bit_identical() {
+    let seed = 29;
+    let crash_at = 50;
+    let (cfg, rff, part, delay) = build_env(seed, 10, 160);
+    let algo = algorithms::build(Variant::PaoFedC2, 0.4, 4, 10, 20);
+    let dcfg = || DeploymentConfig {
+        algo: algo.clone(),
+        tick: Duration::ZERO,
+        env_seed: seed,
+        eval_every: 20,
+        persist: None,
+        run_until: None,
+    };
+
+    // Baseline: in-process deployment (the bitwise reference).
+    let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+    let inproc = run_deployment(stream, rff.clone(), part.clone(), delay, dcfg()).unwrap();
+
+    // Fleet of two: one healthy worker and one that dies at tick 50. A
+    // monitor thread waits for the death and only then spawns the
+    // replacement, which the supervisor accepts off the same listener.
+    let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let healthy = spawn_workers(&addr, 1);
+    let mut doomed = spawn_doomed_worker(&addr, crash_at);
+    let replacement_addr = addr.clone();
+    let monitor = std::thread::spawn(move || {
+        let status = doomed.wait().expect("wait for doomed worker");
+        assert_eq!(status.code(), Some(3), "doomed worker exited with {status}");
+        spawn_workers(&replacement_addr, 1).remove(0)
+    });
+
+    let tcp = run_deployment_tcp(
+        stream,
+        rff.clone(),
+        part.clone(),
+        delay,
+        dcfg(),
+        &listener,
+        2,
+    )
+    .unwrap();
+    let mut replacement = monitor.join().unwrap();
+    for mut c in healthy {
+        assert!(c.wait().unwrap().success(), "healthy worker failed");
+    }
+    assert!(replacement.wait().unwrap().success(), "replacement failed");
+
+    assert_eq!(tcp.recovered_workers, 1, "exactly one recovery expected");
+    assert_eq!(inproc.iters, tcp.iters);
+    assert_eq!(inproc.mse_db, tcp.mse_db, "curves diverge after recovery");
+    assert_eq!(inproc.final_w, tcp.final_w, "models diverge after recovery");
+    assert_eq!(inproc.comm.uplink_scalars, tcp.comm.uplink_scalars);
+    assert_eq!(inproc.comm.uplink_msgs, tcp.comm.uplink_msgs);
+    assert_eq!(inproc.comm.downlink_scalars, tcp.comm.downlink_scalars);
+    assert_eq!(inproc.agg, tcp.agg, "aggregation diverges after recovery");
+    assert_eq!(inproc.local_steps, tcp.local_steps);
+}
+
 #[test]
 fn tcp_loopback_matches_in_process_deployment_bitwise() {
     for (variant, n_workers) in [
@@ -60,6 +143,8 @@ fn tcp_loopback_matches_in_process_deployment_bitwise() {
             tick: Duration::ZERO,
             env_seed: seed,
             eval_every: 25,
+            persist: None,
+            run_until: None,
         };
 
         // In-process thread-per-client deployment.
@@ -102,6 +187,83 @@ fn tcp_loopback_matches_in_process_deployment_bitwise() {
     }
 }
 
+/// Checkpoint/resume across the TCP fleet: stop a socket-sharded run at a
+/// tick boundary (final checkpoint incl. worker state dumps), then resume
+/// it with a *fresh* fleet of worker processes — each rebuilt from the
+/// snapshot's client states via the handshake resume plan — and pin the
+/// completed run bit-identical to an undisturbed in-process run.
+#[test]
+fn tcp_fleet_checkpoint_resume_is_bit_identical() {
+    let seed = 41;
+    let (cfg, rff, part, delay) = build_env(seed, 8, 120);
+    let algo = algorithms::build(Variant::PaoFedU2, 0.4, 4, 10, 30);
+    let dir = std::env::temp_dir().join("pao_fed_multiprocess_resume");
+    std::fs::create_dir_all(&dir).unwrap();
+    let persist = PersistPolicy {
+        path: dir.join("fleet.ckpt"),
+        checkpoint_every: 0,
+        resume: false,
+    };
+    let dcfg = |persist, run_until| DeploymentConfig {
+        algo: algo.clone(),
+        tick: Duration::ZERO,
+        env_seed: seed,
+        eval_every: 30,
+        persist,
+        run_until,
+    };
+    let make_stream = || FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+
+    // Undisturbed in-process reference.
+    let full = run_deployment(make_stream(), rff.clone(), part.clone(), delay, dcfg(None, None))
+        .unwrap();
+
+    // Phase one over TCP: graceful stop at tick 70 with a final checkpoint.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let children = spawn_workers(&addr, 2);
+    let partial = run_deployment_tcp(
+        make_stream(),
+        rff.clone(),
+        part.clone(),
+        delay,
+        dcfg(Some(persist.clone()), Some(70)),
+        &listener,
+        2,
+    )
+    .unwrap();
+    for mut c in children {
+        assert!(c.wait().unwrap().success(), "phase-one worker failed");
+    }
+    assert!(partial.iters.len() < full.iters.len());
+
+    // Phase two: a brand-new fleet resumes from the checkpoint (the
+    // handshake ships each worker its clients' restored models).
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let children = spawn_workers(&addr, 2);
+    let resumed = run_deployment_tcp(
+        make_stream(),
+        rff.clone(),
+        part.clone(),
+        delay,
+        dcfg(Some(PersistPolicy { resume: true, ..persist }), None),
+        &listener,
+        2,
+    )
+    .unwrap();
+    for mut c in children {
+        assert!(c.wait().unwrap().success(), "phase-two worker failed");
+    }
+    assert_eq!(resumed.resumed_at, Some(70));
+    assert_eq!(full.iters, resumed.iters, "resumed fleet sample points diverge");
+    assert_eq!(full.mse_db, resumed.mse_db, "resumed fleet curve diverges");
+    assert_eq!(full.final_w, resumed.final_w, "resumed fleet model diverges");
+    assert_eq!(full.comm, resumed.comm, "resumed fleet traffic diverges");
+    assert_eq!(full.agg, resumed.agg);
+    assert_eq!(full.local_steps, resumed.local_steps);
+}
+
 #[test]
 fn tcp_deployment_survives_zero_participation() {
     let seed = 5;
@@ -120,6 +282,8 @@ fn tcp_deployment_survives_zero_participation() {
             tick: Duration::ZERO,
             env_seed: seed,
             eval_every: 40,
+            persist: None,
+            run_until: None,
         },
         &listener,
         2,

@@ -34,6 +34,8 @@ fn small_ctx(jobs: Parallelism) -> ExperimentCtx {
         quiet: true,
         jobs,
         pool: PoolHandle::shared(),
+        checkpoint_every: 0,
+        resume_from: None,
     }
 }
 

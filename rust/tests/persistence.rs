@@ -1,0 +1,409 @@
+//! Integration: the `persist` subsystem's bit-exactness contract.
+//!
+//! * `run → snapshot at tick T → restore → continue` must be bitwise
+//!   identical to an uninterrupted run — for the discrete engine (serial
+//!   and pool-sharded dispatch) and for the deployment runtime — and the
+//!   per-tick journals of interrupted-and-resumed runs must match the
+//!   undisturbed journals record for record.
+//! * Snapshot round-trips must be exact over randomized `{Server,
+//!   DelayQueue, Pcg32, SelectionSchedule}` states, and any corruption
+//!   must surface as a clean error.
+
+use pao_fed::async_rt::{run_deployment, DeploymentConfig};
+use pao_fed::data::stream::{FedStream, StreamConfig};
+use pao_fed::data::synthetic::Eq39Source;
+use pao_fed::fl::algorithms::{self, Variant};
+use pao_fed::fl::backend::NativeBackend;
+use pao_fed::fl::delay::{DelayModel, DelayQueue};
+use pao_fed::fl::engine::{self, Environment};
+use pao_fed::fl::participation::Participation;
+use pao_fed::fl::pipeline::TickPipeline;
+use pao_fed::fl::selection::{Coords, SelectionSchedule};
+use pao_fed::fl::server::{AggregateInfo, Update};
+use pao_fed::metrics::CommStats;
+use pao_fed::persist::journal;
+use pao_fed::persist::PersistPolicy;
+use pao_fed::persist::snapshot::{
+    self, PcgStream, QueueState, RunSnapshot, ServerState,
+};
+use pao_fed::rff::RffSpace;
+use pao_fed::util::pool::PoolHandle;
+use pao_fed::util::rng::Pcg32;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("pao_fed_persistence_tests").join(name);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn tiny_env(seed: u64) -> (Environment, NativeBackend) {
+    let cfg = StreamConfig {
+        n_clients: 12,
+        n_iters: 200,
+        data_group_samples: vec![50, 100, 150, 200],
+        test_size: 80,
+    };
+    let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+    let mut rng = Pcg32::derive(seed, &[0xabc]);
+    let rff = RffSpace::sample(4, 32, 1.0, &mut rng);
+    let mut backend = NativeBackend::new(rff.clone());
+    let env = Environment::new(
+        stream,
+        rff,
+        Participation::grouped(12, &[0.5, 0.25, 0.1, 0.05], 4),
+        DelayModel::Geometric { delta: 0.3 },
+        seed,
+        &mut backend,
+    )
+    .unwrap();
+    (env, backend)
+}
+
+fn assert_results_equal(a: &engine::RunResult, b: &engine::RunResult, label: &str) {
+    assert_eq!(a.iters, b.iters, "{label}: sample points diverge");
+    assert_eq!(a.mse_db, b.mse_db, "{label}: curves diverge");
+    assert_eq!(a.final_w, b.final_w, "{label}: final models diverge");
+    assert_eq!(a.comm, b.comm, "{label}: comm counters diverge");
+    assert_eq!(a.agg, b.agg, "{label}: aggregation diagnostics diverge");
+    assert!(
+        a.final_mse.to_bits() == b.final_mse.to_bits(),
+        "{label}: final mse diverges"
+    );
+}
+
+/// The engine contract: checkpointing doesn't perturb a run, and resuming
+/// from the rolling checkpoint (the exact state a crash leaves on disk)
+/// finishes with a bit-identical result and a record-identical journal.
+#[test]
+fn engine_checkpoint_resume_is_bit_identical() {
+    let dir = tmp_dir("engine");
+    let (env, mut be) = tiny_env(11);
+    let algo = algorithms::build(Variant::PaoFedU2, 0.4, 4, 10, 20);
+    let serial = PoolHandle::serial();
+
+    let reference = engine::run(&env, &algo, &mut be).unwrap();
+
+    // Fresh journaled run, no checkpoints: the journal reference.
+    let p1 = PersistPolicy { path: dir.join("a.ckpt"), checkpoint_every: 0, resume: false };
+    let r1 = engine::run_resumable(&env, &algo, &mut be, &serial, &p1).unwrap();
+    assert_results_equal(&reference, &r1, "journaled run");
+
+    // Fresh run with rolling checkpoints: same result, and it leaves the
+    // tick-175 checkpoint plus a full journal on disk — exactly what a
+    // crash after the last checkpoint would leave.
+    let p2 = PersistPolicy { path: dir.join("b.ckpt"), checkpoint_every: 35, resume: false };
+    let r2 = engine::run_resumable(&env, &algo, &mut be, &serial, &p2).unwrap();
+    assert_results_equal(&reference, &r2, "checkpointing run");
+    let snap = snapshot::read_file(&p2.path).unwrap();
+    assert_eq!(snap.tick, 175, "rolling checkpoint should be the last boundary");
+
+    // Resume from that state: re-executes 175..200 (trimming the journal
+    // back first) and must land on the same bits.
+    let p3 = PersistPolicy { resume: true, ..p2.clone() };
+    let r3 = engine::run_resumable(&env, &algo, &mut be, &serial, &p3).unwrap();
+    assert_results_equal(&reference, &r3, "resumed run");
+
+    let j1 = journal::replay(&p1.path.with_extension("journal")).unwrap();
+    let j3 = journal::replay(&p2.path.with_extension("journal")).unwrap();
+    assert_eq!(j1.records.len(), 200);
+    assert_eq!(j1.records, j3.records, "resumed journal diverges from undisturbed");
+    assert_eq!(j1.fingerprint, j3.fingerprint);
+}
+
+/// Cross-dispatch-path resume: a snapshot taken from a serial run must
+/// resume bit-identically on the pool-sharded path (and vice versa) —
+/// persistence composes with the sharding determinism contract.
+#[test]
+fn snapshot_resumes_bit_identically_across_dispatch_paths() {
+    let dir = tmp_dir("dispatch");
+    let (env, mut be) = tiny_env(19);
+    let algo = algorithms::build(Variant::PaoFedC2, 0.4, 4, 10, 25);
+    let serial = PoolHandle::serial();
+    let pooled = PoolHandle::global(3);
+
+    let reference = engine::run_sharded(&env, &algo, &mut be, &pooled).unwrap();
+
+    // Serial prefix to tick 80, snapshot, then resume on the pool.
+    let path = dir.join("cross.ckpt");
+    let mut p = TickPipeline::new(&env, &algo);
+    for n in 0..80 {
+        p.tick(n, &mut be, &serial).unwrap();
+    }
+    snapshot::write_file(&path, &p.snapshot(80)).unwrap();
+    drop(p);
+
+    let persist = PersistPolicy { path, checkpoint_every: 0, resume: true };
+    let resumed = engine::run_resumable(&env, &algo, &mut be, &pooled, &persist).unwrap();
+    assert_results_equal(&reference, &resumed, "serial snapshot -> pooled resume");
+}
+
+/// The deployment contract: a run stopped gracefully at a tick boundary
+/// (`run_until` + final checkpoint) and resumed finishes bit-identically
+/// — curve, model, counters, local steps and journal.
+#[test]
+fn deployment_stop_and_resume_is_bit_identical() {
+    let dir = tmp_dir("deploy");
+    let seed = 7;
+    let cfg = StreamConfig {
+        n_clients: 10,
+        n_iters: 150,
+        data_group_samples: vec![40, 75, 110, 150],
+        test_size: 64,
+    };
+    let rff = RffSpace::sample(4, 32, 1.0, &mut Pcg32::derive(seed, &[0xabc]));
+    let part = Participation::grouped(10, &[0.5, 0.25, 0.1, 0.05], 4);
+    let delay = DelayModel::Geometric { delta: 0.3 };
+    let algo = algorithms::build(Variant::PaoFedU2, 0.4, 4, 10, 25);
+    let make_stream = || FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+    let dcfg = |persist, run_until| DeploymentConfig {
+        algo: algo.clone(),
+        tick: Duration::ZERO,
+        env_seed: seed,
+        eval_every: 25,
+        persist,
+        run_until,
+    };
+
+    // Uninterrupted references: bare, and journaled-with-periodic
+    // checkpoints (which must not perturb anything).
+    let full = run_deployment(make_stream(), rff.clone(), part.clone(), delay, dcfg(None, None))
+        .unwrap();
+    let ref_persist = PersistPolicy {
+        path: dir.join("reference.ckpt"),
+        checkpoint_every: 30,
+        resume: false,
+    };
+    let full2 = run_deployment(
+        make_stream(),
+        rff.clone(),
+        part.clone(),
+        delay,
+        dcfg(Some(ref_persist.clone()), None),
+    )
+    .unwrap();
+    assert_eq!(full.mse_db, full2.mse_db, "checkpointing perturbed the run");
+    assert_eq!(full.final_w, full2.final_w);
+
+    // Graceful stop at tick 90, then resume to the end.
+    let persist = PersistPolicy {
+        path: dir.join("handoff.ckpt"),
+        checkpoint_every: 0,
+        resume: false,
+    };
+    let partial = run_deployment(
+        make_stream(),
+        rff.clone(),
+        part.clone(),
+        delay,
+        dcfg(Some(persist.clone()), Some(90)),
+    )
+    .unwrap();
+    assert_eq!(partial.iters.last(), Some(&75), "stopped run sampled past the stop");
+    let resumed = run_deployment(
+        make_stream(),
+        rff.clone(),
+        part.clone(),
+        delay,
+        dcfg(Some(PersistPolicy { resume: true, ..persist.clone() }), None),
+    )
+    .unwrap();
+    assert_eq!(resumed.resumed_at, Some(90));
+    assert_eq!(full.iters, resumed.iters);
+    assert_eq!(full.mse_db, resumed.mse_db, "resumed deployment curve diverges");
+    assert_eq!(full.final_w, resumed.final_w, "resumed deployment model diverges");
+    assert_eq!(full.comm, resumed.comm, "resumed deployment traffic diverges");
+    assert_eq!(full.agg, resumed.agg);
+    assert_eq!(full.local_steps, resumed.local_steps);
+
+    // The stitched journal equals the uninterrupted one.
+    let j_ref = journal::replay(&ref_persist.path.with_extension("journal")).unwrap();
+    let j_res = journal::replay(&persist.path.with_extension("journal")).unwrap();
+    assert_eq!(j_ref.records.len(), 150);
+    assert_eq!(j_ref.records, j_res.records, "deployment journals diverge");
+}
+
+/// Resuming against a different configuration must be refused.
+#[test]
+fn resume_with_mismatched_config_is_refused() {
+    let dir = tmp_dir("mismatch");
+    let (env, mut be) = tiny_env(31);
+    let algo = algorithms::build(Variant::PaoFedU1, 0.4, 4, 10, 20);
+    let path = dir.join("run.ckpt");
+    let serial = PoolHandle::serial();
+    let mut p = TickPipeline::new(&env, &algo);
+    for n in 0..40 {
+        p.tick(n, &mut be, &serial).unwrap();
+    }
+    snapshot::write_file(&path, &p.snapshot(40)).unwrap();
+    drop(p);
+
+    // Same environment, different algorithm: refused.
+    let other = algorithms::build(Variant::OnlineFedSgd, 0.4, 4, 10, 20);
+    let persist = PersistPolicy { path: path.clone(), checkpoint_every: 0, resume: true };
+    assert!(engine::run_resumable(&env, &other, &mut be, &serial, &persist).is_err());
+    // Different environment seed: refused.
+    let (env2, mut be2) = tiny_env(32);
+    assert!(engine::run_resumable(&env2, &algo, &mut be2, &serial, &persist).is_err());
+    // Different participation probabilities (same everything else):
+    // refused — they change every availability draw.
+    let (mut env3, mut be3) = tiny_env(31);
+    env3.participation = Participation::always(12);
+    assert!(engine::run_resumable(&env3, &algo, &mut be3, &serial, &persist).is_err());
+}
+
+// ---------------------------------------------------------------- codec
+
+/// Build a randomized-but-valid snapshot exercising every component the
+/// issue names: Server state, DelayQueue contents, Pcg32 streams and the
+/// SelectionSchedule, plus ragged curve/comm data.
+fn random_snapshot(rng: &mut Pcg32) -> RunSnapshot {
+    let d = 1 + rng.below(24);
+    let k = 1 + rng.below(9);
+    let n_iters = 50 + rng.below(100);
+    let env_seed = rng.next_u64();
+    let variants = [
+        Variant::PaoFedU2,
+        Variant::PaoFedC1,
+        Variant::OnlineFedSgd,
+        Variant::OnlineFed { subsample: 1 + rng.below(4) },
+    ];
+    let algo = algorithms::build(variants[rng.below(4)], 0.4, 1 + rng.below(d), 10, 25);
+    let delay = match rng.below(3) {
+        0 => DelayModel::None,
+        1 => DelayModel::Geometric { delta: rng.uniform() * 0.9 },
+        _ => DelayModel::Staged { delta: rng.uniform() * 0.9, step: 1 + rng.below(10) },
+    };
+    let schedule = SelectionSchedule::new(algo.schedule, d, algo.m, env_seed);
+    let horizon = delay.max_delay().min(n_iters);
+    let tick = rng.below(n_iters);
+    let now = tick.saturating_sub(1);
+    // Arrivals live strictly inside `(now, now + horizon]` (the window a
+    // tick-boundary capture can produce); a zero-horizon channel holds
+    // nothing in flight.
+    let n_entries = if horizon == 0 { 0 } else { rng.below(12) };
+    let entries = (0..n_entries)
+        .map(|_| {
+            let arrival = now + 1 + rng.below(horizon);
+            let m = 1 + rng.below(d);
+            let coords = match rng.below(3) {
+                0 => Coords::Range { start: rng.below(d), len: m, d },
+                1 => {
+                    let mut idx: Vec<u32> =
+                        rng.sample_indices(d, m).into_iter().map(|i| i as u32).collect();
+                    idx.sort_unstable();
+                    Coords::List { idx, d }
+                }
+                _ => Coords::Full { d },
+            };
+            let len = coords.len();
+            (
+                arrival,
+                Update {
+                    client: rng.below(k),
+                    sent_iter: now.saturating_sub(rng.below(5)),
+                    coords,
+                    values: (0..len).map(|_| rng.gaussian() as f32).collect(),
+                },
+            )
+        })
+        .collect();
+    RunSnapshot {
+        tick,
+        env_seed,
+        k,
+        d,
+        n_iters,
+        avail_probs: (0..k).map(|_| rng.uniform()).collect(),
+        eval_every: algo.eval_every,
+        algo,
+        delay,
+        schedule,
+        server: ServerState {
+            w: (0..d).map(|_| rng.gaussian() as f32).collect(),
+            epoch: rng.next_u64() >> 32,
+        },
+        queue: QueueState { horizon, now, clamped: rng.below(3) as u64, entries },
+        client_w: (0..k * d).map(|_| rng.gaussian() as f32).collect(),
+        rng: (0..rng.below(4))
+            .map(|_| PcgStream {
+                state: rng.next_u64(),
+                inc: rng.next_u64() | 1,
+                gauss_spare: rng.bernoulli(0.5).then(|| rng.gaussian()),
+            })
+            .collect(),
+        comm: CommStats {
+            downlink_scalars: rng.next_u64() >> 30,
+            uplink_scalars: rng.next_u64() >> 30,
+            downlink_msgs: rng.next_u64() >> 40,
+            uplink_msgs: rng.next_u64() >> 40,
+        },
+        agg: AggregateInfo {
+            applied: rng.below(1000),
+            discarded_stale: rng.below(100),
+            conflicts_resolved: rng.below(100),
+            touched_coords: rng.below(10_000),
+        },
+        curve_iters: (0..(tick / 25 + 1)).map(|i| i * 25).collect(),
+        curve_db: (0..(tick / 25 + 1)).map(|_| rng.gaussian()).collect(),
+        local_steps: rng.next_u64() >> 30,
+    }
+}
+
+/// Property: snapshot round-trips are exact over randomized component
+/// states, and every single-byte corruption is a clean error.
+#[test]
+fn snapshot_roundtrip_property_over_components() {
+    let mut rng = Pcg32::new(0x5eed, 9);
+    for trial in 0..40 {
+        let snap = random_snapshot(&mut rng);
+        let bytes = snapshot::to_bytes(&snap);
+        let back = snapshot::from_bytes(&bytes).unwrap();
+        assert_eq!(snap, back, "trial {trial} round-trip diverged");
+
+        // Semantic restore of each component:
+        // Pcg32 streams resume their exact sequences.
+        for s in &snap.rng {
+            let mut a = Pcg32::from_parts(s.state, s.inc, s.gauss_spare);
+            let mut b = Pcg32::from_parts(s.state, s.inc, s.gauss_spare);
+            for _ in 0..8 {
+                assert_eq!(a.next_u64(), b.next_u64());
+                assert_eq!(a.gaussian().to_bits(), b.gaussian().to_bits());
+            }
+        }
+        // The schedule reproduces its selections.
+        let sched = &back.schedule;
+        assert_eq!(sched, &snap.schedule);
+        for n in 0..4 {
+            assert_eq!(sched.recv(1, n), snap.schedule.recv(1, n));
+        }
+        // The queue restores to the same delivery stream.
+        let mut q = DelayQueue::restore(
+            back.queue.horizon,
+            back.queue.now,
+            back.queue.clamped,
+            back.queue.entries.clone(),
+        )
+        .unwrap();
+        let mut q2 = DelayQueue::restore(
+            snap.queue.horizon,
+            snap.queue.now,
+            snap.queue.clamped,
+            snap.queue.entries.clone(),
+        )
+        .unwrap();
+        for t in snap.queue.now..snap.queue.now + 30 {
+            assert_eq!(q.drain(t), q2.drain(t), "trial {trial}: queue diverged at {t}");
+        }
+
+        // Corruption: flip one random byte -> must error, never panic.
+        let mut bad = bytes.clone();
+        let at = rng.below(bad.len());
+        bad[at] ^= 1 << rng.below(8);
+        assert!(
+            snapshot::from_bytes(&bad).is_err(),
+            "trial {trial}: flip at {at} accepted"
+        );
+    }
+}
