@@ -1,0 +1,50 @@
+#!/usr/bin/env python3
+"""Validate a pao-fed bench trajectory file (schema pao-fed-bench-v1).
+
+Beyond parsing, this asserts the file actually carries results: a
+non-empty `targets` object whose sections each hold at least one entry
+with finite numeric stats. An empty `"targets": {}` file once shipped
+and passed the json.tool-only smoke check unnoticed.
+
+Usage: check_bench_json.py BENCH_N.json [expected_target ...]
+"""
+
+import json
+import math
+import sys
+
+
+def fail(msg: str) -> None:
+    print(f"{sys.argv[1]}: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main() -> None:
+    if len(sys.argv) < 2:
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    path, expected = sys.argv[1], sys.argv[2:]
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != "pao-fed-bench-v1":
+        fail(f"unexpected schema {doc.get('schema')!r}")
+    targets = doc.get("targets")
+    if not isinstance(targets, dict) or not targets:
+        fail("empty or missing 'targets' — the bench ran but recorded nothing")
+    for name, section in targets.items():
+        if not isinstance(section, dict) or not section:
+            fail(f"target {name!r} has no benchmark entries")
+        for bench, stats in section.items():
+            for key in ("mean_ns", "min_ns", "p50_ns", "iters"):
+                v = stats.get(key)
+                if not isinstance(v, (int, float)) or not math.isfinite(v):
+                    fail(f"{name}/{bench}: bad {key} = {v!r}")
+    missing = [t for t in expected if t not in targets]
+    if missing:
+        fail(f"expected target section(s) missing: {', '.join(missing)}")
+    n = sum(len(s) for s in targets.values())
+    print(f"{path}: ok ({len(targets)} target(s), {n} entries)")
+
+
+if __name__ == "__main__":
+    main()

@@ -48,6 +48,7 @@ fn main() -> pao_fed::Result<()> {
             eval_every: 50,
             persist: None,
             run_until: None,
+            wire: Default::default(),
         },
     )?;
     println!(

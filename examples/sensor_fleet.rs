@@ -208,6 +208,7 @@ fn main() -> pao_fed::Result<()> {
         eval_every: 100,
         persist: None,
         run_until: None,
+        wire: Default::default(),
     };
 
     let inproc = run_deployment(build_stream(), rff3.clone(), part3.clone(), delay3, dcfg())?;

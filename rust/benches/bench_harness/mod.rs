@@ -132,6 +132,27 @@ impl Bench {
         ));
     }
 
+    /// File a dimensionless figure (a compression ratio, a byte count, a
+    /// derived per-element cost) into the trajectory. The value is stored
+    /// verbatim in the `*_ns` fields with `iters = 1`; the entry name
+    /// carries the unit (e.g. `..._ratio_pct`, `..._bytes`).
+    pub fn record_value(&mut self, name: &str, value: f64) {
+        if !self.enabled(name) {
+            return;
+        }
+        println!("{name:<42} value {value:.3}");
+        self.results.push((
+            name.to_string(),
+            Stats { mean_ns: value, min_ns: value, p50_ns: value, iters: 1 },
+        ));
+    }
+
+    /// Stats of the most recently filed result, for deriving secondary
+    /// metrics (per-coordinate cost from a whole-stream timing, say).
+    pub fn last_stats(&self) -> Option<Stats> {
+        self.results.last().map(|(_, s)| *s)
+    }
+
     /// Print the footer, persist the JSON trajectory, and return the
     /// collected results for further use.
     pub fn finish(self) -> Vec<(String, Stats)> {

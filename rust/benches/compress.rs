@@ -1,0 +1,232 @@
+//! Compressed-codec benchmarks: what the gorilla/varint layer costs and
+//! saves at the paper's scale (K = 256, D = 200) — encode/decode cost per
+//! coordinate, compression ratio on model-shaped streams and on the wire
+//! batch frames, and the snapshot v1 -> v2 size change. Files its
+//! trajectory into `BENCH_6.json` (schema `pao-fed-bench-v1`) beside the
+//! compute (`BENCH_4.json`) and persistence (`BENCH_5.json`) numbers.
+//!
+//! Ratio entries are dimensionless (`*_ratio_pct`: compressed size as a
+//! percentage of the raw size — lower is better); `*_bytes` entries are
+//! absolute sizes. Run: `cargo bench --bench compress [filter]`
+
+mod bench_harness;
+
+use bench_harness::Bench;
+use pao_fed::async_rt::wire::{self, WireMsg};
+use pao_fed::fl::algorithms::{self, Variant};
+use pao_fed::fl::delay::DelayModel;
+use pao_fed::fl::selection::{Coords, SelectionSchedule};
+use pao_fed::fl::server::{AggregateInfo, Update};
+use pao_fed::metrics::CommStats;
+use pao_fed::persist::compress;
+use pao_fed::persist::snapshot::{self, QueueState, RunSnapshot, ServerState};
+use pao_fed::util::rng::Pcg32;
+
+const K: usize = 256;
+const D: usize = 200;
+const M: usize = 4;
+
+/// A model-shaped f32 stream: K concatenated local models, each a
+/// correlated walk (adjacent coordinates share high-order bits — the
+/// case the XOR-delta codec is built for).
+fn model_stream() -> Vec<f32> {
+    let mut rng = Pcg32::new(0x60211a, 7);
+    let mut out = Vec::with_capacity(K * D);
+    for _ in 0..K {
+        let mut w = rng.gaussian() as f32;
+        for _ in 0..D {
+            out.push(w);
+            w += 0.01 * rng.gaussian() as f32;
+        }
+    }
+    out
+}
+
+/// A full-fleet tick batch: every client addressed, M of D coordinates
+/// each — the densest downlink frame a deployment tick produces.
+fn tick_batch(rng: &mut Pcg32) -> WireMsg {
+    let ticks = (0..K)
+        .map(|c| {
+            let coords = Coords::Range { start: (M * c) % D, len: M, d: D };
+            let vals = (0..M).map(|_| rng.gaussian() as f32).collect();
+            (c, Some((coords, vals)))
+        })
+        .collect();
+    WireMsg::TickBatch { iter: 1234, ticks }
+}
+
+/// The matching uplink: every client acks with an M-coordinate upload.
+fn ack_batch(rng: &mut Pcg32) -> WireMsg {
+    let acks = (0..K)
+        .map(|c| {
+            let u = Update {
+                client: c,
+                sent_iter: 1234,
+                coords: Coords::Range { start: (M * c) % D, len: M, d: D },
+                values: (0..M).map(|_| rng.gaussian() as f32).collect(),
+            };
+            (c, Some(u), 1u32)
+        })
+        .collect();
+    WireMsg::AckBatch { acks }
+}
+
+/// Same paper-scale snapshot fixture as `benches/persist.rs`: K=256
+/// local models of D=200, a server model, ~512 in-flight updates.
+fn paper_scale_snapshot() -> RunSnapshot {
+    let mut rng = Pcg32::new(0xc4e, 2);
+    let seed = 2023;
+    let algo = algorithms::build(Variant::PaoFedC2, 0.4, 4, 10, 50);
+    let delay = DelayModel::Geometric { delta: 0.2 };
+    let n_iters = 2000;
+    let horizon = delay.max_delay().min(n_iters);
+    let now = 999;
+    let entries = (0..512)
+        .map(|i| {
+            (
+                now + 1 + (i % 40),
+                Update {
+                    client: i % K,
+                    sent_iter: now - (i % 7),
+                    coords: Coords::Range { start: (4 * i) % D, len: 4, d: D },
+                    values: (0..4).map(|_| rng.gaussian() as f32).collect(),
+                },
+            )
+        })
+        .collect();
+    RunSnapshot {
+        tick: now + 1,
+        env_seed: seed,
+        k: K,
+        d: D,
+        n_iters,
+        avail_probs: (0..K).map(|c| [0.25, 0.1, 0.025, 0.005][c % 4]).collect(),
+        eval_every: 50,
+        schedule: SelectionSchedule::new(algo.schedule, D, algo.m, seed),
+        algo,
+        delay,
+        server: ServerState {
+            w: (0..D).map(|_| rng.gaussian() as f32).collect(),
+            epoch: 1000,
+        },
+        queue: QueueState { horizon, now, clamped: 0, entries },
+        client_w: (0..K * D).map(|_| rng.gaussian() as f32).collect(),
+        rng: Vec::new(),
+        comm: CommStats {
+            downlink_scalars: 4_000_000,
+            uplink_scalars: 3_900_000,
+            downlink_msgs: 1_000_000,
+            uplink_msgs: 975_000,
+        },
+        agg: AggregateInfo {
+            applied: 900_000,
+            discarded_stale: 1_000,
+            conflicts_resolved: 40_000,
+            touched_coords: 3_000_000,
+        },
+        curve_iters: (0..20).map(|i| i * 50).collect(),
+        curve_db: (0..20).map(|i| -(i as f64) * 0.7).collect(),
+        local_steps: 1 << 20,
+    }
+}
+
+fn main() {
+    let mut b = Bench::from_args("compress").with_sink("BENCH_6.json");
+    let mut rng = Pcg32::new(0xbe9c4, 11);
+
+    // ---- float streams --------------------------------------------------
+    let stream = model_stream();
+    let n_coords = stream.len() as f64;
+    let enc = compress::encode_f32s(&stream);
+    println!(
+        "model stream: {} f32 ({} raw bytes) -> {} compressed bytes",
+        stream.len(),
+        stream.len() * 4,
+        enc.len()
+    );
+    b.record_value(
+        "f32_model_stream_ratio_pct",
+        enc.len() as f64 * 100.0 / (stream.len() * 4) as f64,
+    );
+    b.bench("f32_encode_model_stream_k256_d200", || {
+        let out = compress::encode_f32s(&stream);
+        assert!(!out.is_empty());
+    });
+    if b.enabled("f32_encode_model_stream_k256_d200") {
+        let s = b.last_stats().expect("just recorded");
+        b.record_value("f32_encode_ns_per_coordinate", s.mean_ns / n_coords);
+    }
+    b.bench("f32_decode_model_stream_k256_d200", || {
+        let back = compress::decode_f32s(&enc).expect("decode");
+        assert_eq!(back.len(), stream.len());
+    });
+    if b.enabled("f32_decode_model_stream_k256_d200") {
+        let s = b.last_stats().expect("just recorded");
+        b.record_value("f32_decode_ns_per_coordinate", s.mean_ns / n_coords);
+    }
+
+    // ---- index streams --------------------------------------------------
+    let idx: Vec<u32> = (0..(K * M) as u32).map(|i| (i * 7) % D as u32).collect();
+    let idx_enc = compress::encode_indices(&idx);
+    b.record_value(
+        "index_stream_ratio_pct",
+        idx_enc.len() as f64 * 100.0 / (idx.len() * 4) as f64,
+    );
+    b.bench("index_encode_1k", || {
+        let out = compress::encode_indices(&idx);
+        assert!(!out.is_empty());
+    });
+    b.bench("index_decode_1k", || {
+        let back = compress::decode_indices(&idx_enc).expect("decode");
+        assert_eq!(back.len(), idx.len());
+    });
+
+    // ---- wire batch frames ----------------------------------------------
+    let tick = tick_batch(&mut rng);
+    let ack = ack_batch(&mut rng);
+    for (name, msg) in [("tick_batch", &tick), ("ack_batch", &ack)] {
+        let raw = wire::encode(msg);
+        let comp = wire::encode_compressed(msg);
+        println!("{name}: {} raw bytes -> {} compressed bytes", raw.len(), comp.len());
+        b.record_value(
+            &format!("wire_{name}_ratio_pct"),
+            comp.len() as f64 * 100.0 / raw.len() as f64,
+        );
+        b.bench(&format!("wire_{name}_encode_compressed_k256"), || {
+            let out = wire::encode_compressed(msg);
+            assert!(!out.is_empty());
+        });
+        b.bench(&format!("wire_{name}_decode_compressed_k256"), || {
+            let back = wire::decode(&comp).expect("decode");
+            assert!(matches!(
+                back,
+                WireMsg::TickBatch { .. } | WireMsg::AckBatch { .. }
+            ));
+        });
+    }
+
+    // ---- snapshot v1 vs v2 ----------------------------------------------
+    let snap = paper_scale_snapshot();
+    let v1 = snapshot::to_bytes_v1(&snap);
+    let v2 = snapshot::to_bytes(&snap);
+    println!("snapshot: v1 {} bytes, v2 {} bytes", v1.len(), v2.len());
+    b.record_value("snapshot_v1_bytes", v1.len() as f64);
+    b.record_value("snapshot_v2_bytes", v2.len() as f64);
+    b.record_value(
+        "snapshot_v2_vs_v1_ratio_pct",
+        v2.len() as f64 * 100.0 / v1.len() as f64,
+    );
+    b.bench("snapshot_encode_v1_k256_d200", || {
+        let out = snapshot::to_bytes_v1(&snap);
+        assert!(!out.is_empty());
+    });
+    b.bench("snapshot_encode_v2_k256_d200", || {
+        let out = snapshot::to_bytes(&snap);
+        assert!(!out.is_empty());
+    });
+    b.bench("snapshot_decode_v2_k256_d200", || {
+        let back = snapshot::from_bytes(&v2).expect("decode");
+        assert_eq!(back.k, K);
+    });
+    b.finish();
+}

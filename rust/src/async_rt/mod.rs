@@ -37,10 +37,19 @@
 //! checkpoints/resumes whole runs through the `persist` subsystem
 //! ([`crate::persist::PersistPolicy`] — `deploy --checkpoint-every / --resume / --run-until`
 //! on the CLI) with bit-identical continuation.
+//!
+//! Real-host deployments can additionally turn on the compressed batch
+//! frames and the keyed handshake ([`wire::WireConfig`], `deploy
+//! --compress / --secret` on the CLI): compression is negotiated per
+//! worker link in the Hello/HelloAck exchange (legacy binaries keep
+//! speaking raw frames on the same fleet), and a non-empty shared secret
+//! makes both ends prove knowledge of it over a per-connection challenge
+//! before any state is exchanged.
 
 mod protocol;
 pub mod transport;
 pub mod wire;
 
 pub use protocol::{run_deployment, run_deployment_tcp, DeploymentConfig, DeploymentReport};
-pub use transport::{run_worker, WorkerReport};
+pub use transport::{run_worker, run_worker_with, WorkerOptions, WorkerReport};
+pub use wire::WireConfig;

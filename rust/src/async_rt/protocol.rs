@@ -25,6 +25,7 @@
 //! graceful-handoff path.
 
 use super::transport::{ChannelTransport, TcpFleet, Transport};
+use super::wire::WireConfig;
 use crate::data::stream::FedStream;
 use crate::error::{Error, Result};
 use crate::fl::delay::{DelayModel, DelayQueue};
@@ -36,7 +37,7 @@ use crate::fl::server::{AggregateInfo, AggregationMode, Server, Update};
 use crate::metrics::{mse_test, to_db, CommStats};
 use crate::persist::journal::{self, TickRecord};
 use crate::persist::snapshot::{self, QueueState, RunSnapshot, ServerState};
-use crate::persist::PersistPolicy;
+use crate::persist::{curve, curve_path_for, PersistPolicy};
 use crate::rff::RffSpace;
 use std::net::TcpListener;
 use std::sync::Arc;
@@ -59,6 +60,10 @@ pub struct DeploymentConfig {
     /// Stop after this tick boundary (graceful handoff), writing a final
     /// checkpoint when `persist` is set. `None` = run to completion.
     pub run_until: Option<usize>,
+    /// Wire policy for the TCP fleet: batch-frame compression offer and
+    /// the shared handshake secret. Ignored by the in-process transport
+    /// (no wire). Defaults to raw frames, no secret.
+    pub wire: WireConfig,
 }
 
 /// What the deployment run produced.
@@ -213,6 +218,7 @@ pub fn run_deployment_tcp(
         &participation,
         cfg.env_seed,
         resume.as_ref().map(|s| (s.tick, init.as_deref().unwrap())),
+        &cfg.wire,
     )?;
     let result = serve_loop(
         &stream,
@@ -277,6 +283,14 @@ fn serve_loop<T: Transport>(
     }
     let stop = cfg.run_until.map_or(n_iters, |u| u.min(n_iters));
 
+    // The durable eval curve (`<ckpt>.curve`, compressed binary) lands
+    // beside the snapshot; resolve its path up front so a colliding
+    // persist path fails before the run starts, not at the first
+    // checkpoint.
+    let curve_path = match &cfg.persist {
+        Some(p) => Some(curve_path_for(&p.path)?),
+        None => None,
+    };
     let mut journal = match &cfg.persist {
         Some(p) => {
             let meta = snapshot::fingerprint(
@@ -398,11 +412,21 @@ fn serve_loop<T: Transport>(
                     local_steps,
                 };
                 snapshot::write_file(&p.path, &snap)?;
+                if let Some(cp) = &curve_path {
+                    curve::write_file(cp, &iters, &mse_db)?;
+                }
             }
         }
         if !cfg.tick.is_zero() {
             thread::sleep(cfg.tick);
         }
+    }
+
+    // Leave the durable curve current at the end of a persisted run (a
+    // graceful `run_until` handoff already wrote it at the boundary, but
+    // a run-to-completion only checkpointed periodically).
+    if let Some(cp) = &curve_path {
+        curve::write_file(cp, &iters, &mse_db)?;
     }
 
     Ok(DeploymentReport {
@@ -451,6 +475,7 @@ mod tests {
                 eval_every: 20,
                 persist: None,
                 run_until: None,
+                wire: Default::default(),
             },
         )
         .unwrap();
@@ -490,6 +515,7 @@ mod tests {
                 eval_every: 0,
                 persist: None,
                 run_until: None,
+                wire: Default::default(),
             },
         );
         assert!(res.is_err(), "eval_every = 0 must be rejected");
@@ -513,6 +539,7 @@ mod tests {
             eval_every: 5,
             persist,
             run_until,
+            wire: Default::default(),
         };
         // run_until without persist strands the run.
         let res = run_deployment(

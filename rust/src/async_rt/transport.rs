@@ -345,6 +345,11 @@ struct WorkerLink {
     /// next `begin_tick` so a replacement worker can be re-sent exactly
     /// the outstanding ones.
     sent: Vec<(usize, Option<(Coords, Vec<f32>)>)>,
+    /// Negotiated per link in the handshake: batch frames to this worker
+    /// go compressed only when the server offered it *and* the worker's
+    /// `HelloAck` accepted (a legacy worker leaves this false, so mixed
+    /// fleets interoperate frame-for-frame).
+    compress: bool,
 }
 
 /// Replay-log bound: when a run goes this many ticks without a
@@ -365,7 +370,16 @@ fn session_token(env_seed: u64) -> u64 {
     splitmix64(env_seed ^ (n << 32) ^ 0x5e55_10ae)
 }
 
+/// Per-connection authentication challenge. The generation index makes a
+/// replacement connection's challenge differ from the one its predecessor
+/// answered, so a captured `HelloAck` cannot be replayed at the
+/// supervisor's recovery accept.
+fn challenge_token(session: u64, worker: usize, gen: u64) -> u64 {
+    splitmix64(session ^ ((worker as u64) << 1) ^ (gen << 40) ^ 0xc4a1_1e4e)
+}
+
 /// Assemble the handshake payload for the worker hosting `lo..hi`.
+#[allow(clippy::too_many_arguments)]
 fn make_assignment(
     stream: &FedStream,
     rff: &RffSpace,
@@ -376,6 +390,8 @@ fn make_assignment(
     lo: usize,
     hi: usize,
     resume: Option<ResumePlan>,
+    wire_cfg: &wire::WireConfig,
+    challenge: u64,
 ) -> WorkerAssignment {
     WorkerAssignment {
         client_lo: lo,
@@ -389,6 +405,9 @@ fn make_assignment(
         k_total: stream.n_clients,
         avail_probs: avail_probs.to_vec(),
         resume,
+        compress: wire_cfg.compress,
+        challenge,
+        hello_tag: wire::hello_tag(&wire_cfg.secret, challenge, session, lo),
     }
 }
 
@@ -414,6 +433,10 @@ pub struct TcpFleet<'e> {
     algo: AlgoConfig,
     env_seed: u64,
     avail_probs: Vec<f64>,
+    /// Wire negotiation policy: whether batch compression is offered, and
+    /// the shared secret (empty = unauthenticated) every handshake must
+    /// prove knowledge of.
+    wire_cfg: wire::WireConfig,
     links: Vec<WorkerLink>,
     /// Per worker, the hosted client-id range `[lo, hi)`.
     ranges: Vec<(usize, usize)>,
@@ -446,6 +469,13 @@ impl<'e> TcpFleet<'e> {
     /// and every client's local model) makes each worker rebuild state
     /// before serving. Returns once every worker has acknowledged. The
     /// listener stays retained for supervisor recovery accepts.
+    ///
+    /// `wire_cfg` governs the handshake extensions: when its secret is
+    /// non-empty every `HelloAck` must carry a valid keyed proof of the
+    /// challenge (a wrong-secret peer is a clean [`Error::Protocol`]),
+    /// and when compression is offered each link uses it only if that
+    /// worker accepted.
+    #[allow(clippy::too_many_arguments)]
     pub fn serve(
         listener: &TcpListener,
         n_workers: usize,
@@ -455,6 +485,7 @@ impl<'e> TcpFleet<'e> {
         participation: &Participation,
         env_seed: u64,
         resume: Option<(usize, &[Vec<f32>])>,
+        wire_cfg: &wire::WireConfig,
     ) -> Result<Self> {
         let k = stream.n_clients;
         if n_workers == 0 || n_workers > k {
@@ -491,6 +522,7 @@ impl<'e> TcpFleet<'e> {
                 states: states[lo..hi].to_vec(),
                 log: Vec::new(),
             });
+            let challenge = challenge_token(session, i, 0);
             let assignment = make_assignment(
                 stream,
                 rff,
@@ -501,20 +533,33 @@ impl<'e> TcpFleet<'e> {
                 lo,
                 hi,
                 plan,
+                wire_cfg,
+                challenge,
             );
             let mut writer = BufWriter::new(sock.try_clone()?);
             wire::send_msg(&mut writer, &WireMsg::Hello(assignment))?;
             writer.flush()?;
             let mut reader = BufReader::new(sock);
-            match wire::recv_msg(&mut reader)? {
-                WireMsg::HelloAck { client_lo, session: s }
-                    if client_lo == lo && s == session => {}
+            let link_compress = match wire::recv_msg(&mut reader)? {
+                WireMsg::HelloAck { client_lo, session: s, compress, proof }
+                    if client_lo == lo && s == session =>
+                {
+                    if !wire_cfg.secret.is_empty()
+                        && proof != wire::ack_proof(&wire_cfg.secret, challenge, session, lo)
+                    {
+                        return Err(Error::Protocol(format!(
+                            "worker {peer} failed handshake authentication \
+                             (bad shared-secret proof)"
+                        )));
+                    }
+                    wire_cfg.compress && compress
+                }
                 other => {
                     return Err(Error::Protocol(format!(
                         "worker {peer} answered the handshake with {other:?}"
                     )))
                 }
-            }
+            };
             let tx = event_tx.clone();
             let handle = thread::Builder::new()
                 .name(format!("pao-fed-worker-rx-{i}"))
@@ -525,6 +570,7 @@ impl<'e> TcpFleet<'e> {
                 reader: Some(handle),
                 pending: Vec::new(),
                 sent: Vec::new(),
+                compress: link_compress,
             });
             ranges.push((lo, hi));
         }
@@ -540,6 +586,7 @@ impl<'e> TcpFleet<'e> {
             algo: algo.clone(),
             env_seed,
             avail_probs: participation.probs.clone(),
+            wire_cfg: wire_cfg.clone(),
             links,
             ranges,
             gens: vec![0; n_workers],
@@ -565,7 +612,8 @@ impl<'e> TcpFleet<'e> {
             }
             let ticks = std::mem::take(&mut self.links[i].pending);
             let batch = WireMsg::TickBatch { iter: self.pending_iter, ticks };
-            let res = wire::send_msg(&mut self.links[i].writer, &batch)
+            let compress = self.links[i].compress;
+            let res = wire::send_msg_c(&mut self.links[i].writer, &batch, compress)
                 .and_then(|_| self.links[i].writer.flush().map_err(Error::from));
             let WireMsg::TickBatch { ticks, .. } = batch else {
                 unreachable!("batch shape fixed above");
@@ -632,6 +680,7 @@ impl<'e> TcpFleet<'e> {
                 .unwrap_or_default(),
             log: self.log[..resume_tick - self.log_base].to_vec(),
         };
+        let challenge = challenge_token(self.session, i, self.gens[i]);
         let assignment = make_assignment(
             self.stream,
             self.rff,
@@ -642,20 +691,37 @@ impl<'e> TcpFleet<'e> {
             lo,
             hi,
             Some(plan),
+            &self.wire_cfg,
+            challenge,
         );
         let mut writer = BufWriter::new(sock.try_clone()?);
         wire::send_msg(&mut writer, &WireMsg::Hello(assignment))?;
         writer.flush()?;
         let mut reader = BufReader::new(sock);
-        match wire::recv_msg(&mut reader)? {
-            WireMsg::HelloAck { client_lo, session }
-                if client_lo == lo && session == self.session => {}
+        let link_compress = match wire::recv_msg(&mut reader)? {
+            WireMsg::HelloAck { client_lo, session, compress, proof }
+                if client_lo == lo && session == self.session =>
+            {
+                if !self.wire_cfg.secret.is_empty()
+                    && proof
+                        != wire::ack_proof(&self.wire_cfg.secret, challenge, self.session, lo)
+                {
+                    // An Err here keeps the supervisor waiting for another
+                    // replacement — a wrong-secret peer cannot end the run.
+                    return Err(Error::Protocol(
+                        "replacement failed handshake authentication \
+                         (bad shared-secret proof)"
+                            .into(),
+                    ));
+                }
+                self.wire_cfg.compress && compress
+            }
             other => {
                 return Err(Error::Protocol(format!(
                     "replacement answered the handshake with {other:?}"
                 )))
             }
-        }
+        };
         let gen = self.gens[i];
         let tx = self.event_tx.clone();
         let handle = thread::Builder::new()
@@ -664,6 +730,7 @@ impl<'e> TcpFleet<'e> {
             .map_err(|e| Error::Config(format!("spawn failed: {e}")))?;
         self.links[i].writer = writer;
         self.links[i].reader = Some(handle);
+        self.links[i].compress = link_compress;
         if resume_tick == self.pending_iter {
             let items: Vec<(usize, Option<(Coords, Vec<f32>)>)> = self.links[i]
                 .sent
@@ -672,9 +739,10 @@ impl<'e> TcpFleet<'e> {
                 .cloned()
                 .collect();
             if !items.is_empty() {
-                wire::send_msg(
+                wire::send_msg_c(
                     &mut self.links[i].writer,
                     &WireMsg::TickBatch { iter: self.pending_iter, ticks: items },
+                    link_compress,
                 )?;
                 self.links[i].writer.flush()?;
             }
@@ -1011,16 +1079,47 @@ fn replay_shard(
     Ok(plan.log.len())
 }
 
+/// Worker-side wire policy: the shared secret it authenticates the
+/// server's `Hello` with (empty = trust any server), and whether it is
+/// willing to speak the compressed batch frames when offered. A worker
+/// started with `allow_compress: false` behaves exactly like a pre-codec
+/// binary on the wire, which is how mixed-fleet interop is tested.
+#[derive(Clone, Debug)]
+pub struct WorkerOptions {
+    /// Shared secret for the keyed handshake (empty disables the check).
+    pub secret: String,
+    /// Accept the server's compression offer.
+    pub allow_compress: bool,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> Self {
+        WorkerOptions { secret: String::new(), allow_compress: true }
+    }
+}
+
+/// Worker-process entry point with default [`WorkerOptions`] (no secret,
+/// compression accepted when offered). See [`run_worker_with`].
+pub fn run_worker(addr: &str) -> Result<WorkerReport> {
+    run_worker_with(addr, &WorkerOptions::default())
+}
+
 /// Worker-process entry point: connect to a [`TcpFleet`] server at `addr`,
 /// receive the shard assignment (replaying state first when the
 /// assignment carries a resume plan — a reconnect or a resumed run), host
 /// those clients until shutdown. Blocks for the whole run.
 ///
+/// When `opts.secret` is non-empty the server's `Hello` must carry a
+/// valid keyed tag over this connection's challenge; on a mismatch the
+/// worker still answers with its own (necessarily wrong, to that server)
+/// proof before erroring, so an authenticating server observes a clean
+/// proof failure rather than a dropped connection.
+///
 /// Test hook: `PAO_FED_CRASH_AT_TICK=N` makes the process exit abruptly
 /// (code 3, sockets unflushed) on the first downlink for iteration >= N —
 /// the deterministic "kill a worker mid-run" used by the supervisor
 /// recovery tests.
-pub fn run_worker(addr: &str) -> Result<WorkerReport> {
+pub fn run_worker_with(addr: &str, opts: &WorkerOptions) -> Result<WorkerReport> {
     let sock = TcpStream::connect(addr)?;
     sock.set_nodelay(true)?;
     let mut reader = BufReader::new(sock.try_clone()?);
@@ -1059,6 +1158,29 @@ pub fn run_worker(addr: &str) -> Result<WorkerReport> {
     }
     let rff = &assignment.rff;
     let algo = &assignment.algo;
+    let proof = wire::ack_proof(&opts.secret, assignment.challenge, assignment.session, lo);
+    if !opts.secret.is_empty()
+        && assignment.hello_tag
+            != wire::hello_tag(&opts.secret, assignment.challenge, assignment.session, lo)
+    {
+        // Courtesy ack before erroring: flushing our (to that server,
+        // wrong) proof lets an authenticating server report a clean
+        // proof mismatch instead of an EOF.
+        let _ = wire::send_msg(
+            &mut writer,
+            &WireMsg::HelloAck {
+                client_lo: lo,
+                session: assignment.session,
+                compress: false,
+                proof,
+            },
+        );
+        let _ = writer.flush();
+        return Err(Error::Protocol(
+            "server failed handshake authentication (bad shared-secret hello tag)".into(),
+        ));
+    }
+    let compress = assignment.compress && opts.allow_compress;
     // The same construction the server (and the discrete engine) uses, so
     // both ends see one schedule realization.
     let schedule = SelectionSchedule::new(algo.schedule, rff.d, algo.m, assignment.env_seed);
@@ -1069,7 +1191,7 @@ pub fn run_worker(addr: &str) -> Result<WorkerReport> {
     }
     wire::send_msg(
         &mut writer,
-        &WireMsg::HelloAck { client_lo: lo, session: assignment.session },
+        &WireMsg::HelloAck { client_lo: lo, session: assignment.session, compress, proof },
     )?;
     writer.flush()?;
 
@@ -1130,7 +1252,7 @@ pub fn run_worker(addr: &str) -> Result<WorkerReport> {
                         portion,
                     )?);
                 }
-                wire::send_msg(&mut writer, &WireMsg::AckBatch { acks })?;
+                wire::send_msg_c(&mut writer, &WireMsg::AckBatch { acks }, compress)?;
                 writer.flush()?;
             }
             WireMsg::StateRequest => {
@@ -1281,6 +1403,8 @@ mod tests {
                 lo,
                 hi,
                 None,
+                &wire::WireConfig::default(),
+                0,
             );
             // A synthetic but deterministic per-tick server-model log.
             let log: Vec<Vec<f32>> = (0..n)
@@ -1330,7 +1454,19 @@ mod tests {
         let algo = algorithms::build(Variant::PaoFedU1, 0.4, 2, 10, 5);
         let schedule = SelectionSchedule::new(algo.schedule, 8, algo.m, seed);
         let probs = vec![0.5; 4];
-        let assignment = make_assignment(&stream, &rff, &algo, seed, 1, &probs, 0, 2, None);
+        let assignment = make_assignment(
+            &stream,
+            &rff,
+            &algo,
+            seed,
+            1,
+            &probs,
+            0,
+            2,
+            None,
+            &wire::WireConfig::default(),
+            0,
+        );
         let mut states: Vec<ClientState> = (0..2).map(|id| ClientState::new(id, 8)).collect();
         // Log overrunning the run.
         let plan = ResumePlan { base_tick: 8, states: vec![], log: vec![vec![0.0; 8]; 3] };

@@ -15,12 +15,36 @@
 //! Nothing here depends on the socket: encoding targets a `Vec<u8>` and
 //! decoding reads from a byte slice, so the codec is unit-testable without
 //! I/O and reusable over any ordered byte transport.
+//!
+//! ## Compressed frames and negotiation
+//!
+//! The per-tick batch messages have a second encoding: tags 9/10 carry
+//! [`WireMsg::TickBatch`]/[`WireMsg::AckBatch`] in the compressed codec
+//! (`persist::compress`) — zigzag-varint client ids and coordinate
+//! indices, one gorilla XOR-delta stream for all portion values, and a
+//! trailing FNV-1a-64 checksum verified *before* the payload is parsed.
+//! Decoding is unconditional (both tags always decode, into the same
+//! enum variants), so compression is purely an encoding choice per link:
+//! the server offers it in the Hello (`WorkerAssignment::compress`), the
+//! worker accepts or declines in its [`WireMsg::HelloAck`], and a mixed
+//! fleet of compressed and legacy workers interoperates frame for frame.
+//! Because the codec is lossless on IEEE-754 bit patterns, a compressed
+//! link reproduces the uncompressed curve bit for bit.
+//!
+//! The same appended Hello/HelloAck fields carry the authenticated
+//! handshake: the server proves knowledge of the shared secret with
+//! [`hello_tag`] over a fresh challenge, the worker answers with
+//! [`ack_proof`], and either side rejects a mismatch as
+//! [`Error::Protocol`] before any state is exchanged. Legacy frames
+//! (without the appended fields) still decode — they default to
+//! "no compression, no proof", which an authenticating server rejects.
 
 use crate::error::{Error, Result};
 use crate::fl::engine::AlgoConfig;
 use crate::fl::selection::Coords;
 use crate::fl::server::Update;
 use crate::persist::codec::{self, Cur};
+use crate::persist::compress;
 use crate::rff::RffSpace;
 use std::io::{Read, Write};
 
@@ -41,6 +65,13 @@ pub enum WireMsg {
         /// Echo of the assignment's session token; a mismatch means the
         /// worker answered some other run's handshake.
         session: u64,
+        /// Worker accepts compressed batched frames (tags 9/10) on this
+        /// link. Only meaningful when the assignment offered them.
+        compress: bool,
+        /// Keyed-FNV response to the assignment's challenge
+        /// ([`ack_proof`]); 0 from a legacy worker, which an
+        /// authenticating server rejects.
+        proof: u64,
     },
     /// Server -> worker: one client's tick message (stage-4 downlink).
     Tick {
@@ -144,6 +175,39 @@ pub struct WorkerAssignment {
     pub avail_probs: Vec<f64>,
     /// `Some` when the worker must rebuild state before serving.
     pub resume: Option<ResumePlan>,
+    /// Server offers compressed batched frames (tags 9/10) on this link;
+    /// in force only if the worker's HelloAck accepts.
+    pub compress: bool,
+    /// Fresh challenge for the authenticated handshake (echoed into both
+    /// [`hello_tag`] and [`ack_proof`]).
+    pub challenge: u64,
+    /// Keyed-FNV proof that the server knows the shared secret
+    /// ([`hello_tag`]); 0 when the fleet runs without one.
+    pub hello_tag: u64,
+}
+
+/// Per-link wire options a deployment threads down to the transport: the
+/// `--compress` / `--secret` CLI flags in struct form.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WireConfig {
+    /// Offer (server) / accept (worker) compressed batched frames.
+    pub compress: bool,
+    /// Shared handshake secret; empty runs unauthenticated.
+    pub secret: String,
+}
+
+/// The server-side proof in a [`WireMsg::Hello`]: keyed FNV over the
+/// link's `(challenge, session, client_lo)` under the shared secret. The
+/// worker recomputes and compares, so a rogue server cannot feed a
+/// secreted worker bogus shards.
+pub fn hello_tag(secret: &str, challenge: u64, session: u64, client_lo: usize) -> u64 {
+    codec::fnv1a64_keyed(secret.as_bytes(), &[0x48454c4c4f, challenge, session, client_lo as u64])
+}
+
+/// The worker-side response in a [`WireMsg::HelloAck`]: same inputs,
+/// distinct domain constant, so a proof can never be replayed as a tag.
+pub fn ack_proof(secret: &str, challenge: u64, session: u64, client_lo: usize) -> u64 {
+    codec::fnv1a64_keyed(secret.as_bytes(), &[0x41434b5f, challenge, session, client_lo as u64])
 }
 
 /// One client's slice of the materialized stream, dense over the run.
@@ -213,11 +277,19 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
                     put_f32_rows(&mut buf, &plan.log);
                 }
             }
+            // Negotiation/auth fields ride after the legacy layout; a
+            // legacy decoder never reads this far, a current decoder
+            // detects their absence by the frame ending early.
+            codec::put_bool(&mut buf, h.compress);
+            codec::put_u64(&mut buf, h.challenge);
+            codec::put_u64(&mut buf, h.hello_tag);
         }
-        WireMsg::HelloAck { client_lo, session } => {
+        WireMsg::HelloAck { client_lo, session, compress, proof } => {
             buf.push(1);
             codec::put_usize(&mut buf, *client_lo);
             codec::put_u64(&mut buf, *session);
+            codec::put_bool(&mut buf, *compress);
+            codec::put_u64(&mut buf, *proof);
         }
         WireMsg::Tick { client, iter, portion } => {
             buf.push(2);
@@ -272,6 +344,285 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
     buf
 }
 
+// ----------------------------------------------------- compressed encode
+
+/// Compressed-frame tags (`TickBatchC` / `AckBatchC`). Same in-memory
+/// messages, alternate encoding: the per-tick hot path in the compressed
+/// codec, checksummed because bit flips in a bitstream can decode to
+/// *valid wrong values* rather than a framing error.
+pub const TAG_TICK_BATCH_C: u8 = 9;
+/// See [`TAG_TICK_BATCH_C`].
+pub const TAG_ACK_BATCH_C: u8 = 10;
+
+fn put_client_deltas(buf: &mut Vec<u8>, clients: impl Iterator<Item = usize>) {
+    let mut prev = 0i64;
+    for c in clients {
+        let v = c as i64;
+        codec::put_varint(buf, compress::zigzag(v - prev));
+        prev = v;
+    }
+}
+
+fn get_client_deltas(c: &mut Cur<'_>, n: usize) -> Result<Vec<usize>> {
+    let mut out = Vec::with_capacity(n);
+    let mut prev = 0i64;
+    for _ in 0..n {
+        let cur = prev
+            .checked_add(compress::unzigzag(c.varint()?))
+            .ok_or_else(|| Error::Protocol("client-id delta overflows".into()))?;
+        if cur < 0 {
+            return Err(Error::Protocol(format!("negative client id {cur}")));
+        }
+        out.push(cur as usize);
+        prev = cur;
+    }
+    Ok(out)
+}
+
+fn put_bitset(buf: &mut Vec<u8>, flags: impl ExactSizeIterator<Item = bool>) {
+    let mut byte = 0u8;
+    let mut used = 0u32;
+    for f in flags {
+        byte |= (f as u8) << (7 - used);
+        used += 1;
+        if used == 8 {
+            buf.push(byte);
+            byte = 0;
+            used = 0;
+        }
+    }
+    if used > 0 {
+        buf.push(byte);
+    }
+}
+
+fn get_bitset(c: &mut Cur<'_>, n: usize) -> Result<Vec<bool>> {
+    let bytes = c.take(n.div_ceil(8))?;
+    Ok((0..n).map(|i| (bytes[i / 8] >> (7 - (i % 8))) & 1 == 1).collect())
+}
+
+/// Compact coords: varint fields, delta-coded index lists.
+fn put_coords_c(buf: &mut Vec<u8>, coords: &Coords) {
+    match coords {
+        Coords::Range { start, len, d } => {
+            buf.push(0);
+            codec::put_varint(buf, *start as u64);
+            codec::put_varint(buf, *len as u64);
+            codec::put_varint(buf, *d as u64);
+        }
+        Coords::List { idx, d } => {
+            buf.push(1);
+            compress::put_indices(buf, idx);
+            codec::put_varint(buf, *d as u64);
+        }
+        Coords::Full { d } => {
+            buf.push(2);
+            codec::put_varint(buf, *d as u64);
+        }
+    }
+}
+
+fn varint_usize(c: &mut Cur<'_>) -> Result<usize> {
+    usize::try_from(c.varint()?).map_err(|_| Error::Protocol("varint exceeds usize".into()))
+}
+
+fn get_coords_c(c: &mut Cur<'_>) -> Result<Coords> {
+    match c.u8()? {
+        0 => Ok(Coords::Range {
+            start: varint_usize(c)?,
+            len: varint_usize(c)?,
+            d: varint_usize(c)?,
+        }),
+        1 => Ok(Coords::List { idx: compress::get_indices(c)?, d: varint_usize(c)? }),
+        2 => Ok(Coords::Full { d: varint_usize(c)? }),
+        t => Err(Error::Protocol(format!("bad compact coords tag {t}"))),
+    }
+}
+
+fn seal(mut buf: Vec<u8>) -> Vec<u8> {
+    let sum = codec::fnv1a64(&buf);
+    buf.extend_from_slice(&sum.to_le_bytes());
+    buf
+}
+
+/// Encode with the compressed codec where one exists: the per-tick batch
+/// messages become tags 9/10; everything else falls through to the raw
+/// [`encode`]. Both encodings [`decode`] to identical messages, so this
+/// is safe to apply per link after Hello/HelloAck negotiation.
+pub fn encode_compressed(msg: &WireMsg) -> Vec<u8> {
+    match msg {
+        WireMsg::TickBatch { iter, ticks } => {
+            let mut buf = vec![TAG_TICK_BATCH_C];
+            codec::put_varint(&mut buf, *iter as u64);
+            codec::put_varint(&mut buf, ticks.len() as u64);
+            put_client_deltas(&mut buf, ticks.iter().map(|(c, _)| *c));
+            put_bitset(&mut buf, ticks.iter().map(|(_, p)| p.is_some()));
+            let mut values: Vec<f32> = Vec::new();
+            for (_, portion) in ticks {
+                if let Some((coords, vals)) = portion {
+                    put_coords_c(&mut buf, coords);
+                    codec::put_varint(&mut buf, vals.len() as u64);
+                    values.extend_from_slice(vals);
+                }
+            }
+            compress::put_f32_stream(&mut buf, &values);
+            seal(buf)
+        }
+        WireMsg::AckBatch { acks } => {
+            let mut buf = vec![TAG_ACK_BATCH_C];
+            codec::put_varint(&mut buf, acks.len() as u64);
+            put_client_deltas(&mut buf, acks.iter().map(|(c, _, _)| *c));
+            put_bitset(&mut buf, acks.iter().map(|(_, u, _)| u.is_some()));
+            for (_, _, learned) in acks {
+                codec::put_varint(&mut buf, *learned as u64);
+            }
+            let mut values: Vec<f32> = Vec::new();
+            for (client, upload, _) in acks {
+                if let Some(u) = upload {
+                    codec::put_varint(
+                        &mut buf,
+                        compress::zigzag(u.client as i64 - *client as i64),
+                    );
+                    codec::put_varint(&mut buf, u.sent_iter as u64);
+                    put_coords_c(&mut buf, &u.coords);
+                    codec::put_varint(&mut buf, u.values.len() as u64);
+                    values.extend_from_slice(&u.values);
+                }
+            }
+            compress::put_f32_stream(&mut buf, &values);
+            seal(buf)
+        }
+        other => encode(other),
+    }
+}
+
+/// Decode one compressed (tag 9/10) payload. The trailing checksum is
+/// verified before anything is parsed, so corruption anywhere — header,
+/// bitstream, padding — is one clean [`Error::Protocol`].
+fn decode_compressed(payload: &[u8]) -> Result<WireMsg> {
+    if payload.len() < 9 {
+        return Err(Error::Protocol(
+            "compressed frame too short for its checksum".into(),
+        ));
+    }
+    let (body, tail) = payload.split_at(payload.len() - 8);
+    let want = u64::from_le_bytes(tail.try_into().unwrap());
+    let got = codec::fnv1a64(body);
+    if want != got {
+        return Err(Error::Protocol(format!(
+            "compressed frame checksum mismatch: frame says {want:#018x}, body hashes to {got:#018x}"
+        )));
+    }
+    let mut c = Cur::new(&body[1..]);
+    let msg = match body[0] {
+        TAG_TICK_BATCH_C => {
+            let iter = varint_usize(&mut c)?;
+            let n = varint_usize(&mut c)?;
+            if n > c.remaining() {
+                return Err(Error::Protocol(format!(
+                    "corrupt batch count {n} exceeds {} remaining bytes",
+                    c.remaining()
+                )));
+            }
+            let clients = get_client_deltas(&mut c, n)?;
+            let present = get_bitset(&mut c, n)?;
+            let mut metas: Vec<Option<(Coords, usize)>> = Vec::with_capacity(n);
+            let mut total = 0usize;
+            for &p in &present {
+                if p {
+                    let coords = get_coords_c(&mut c)?;
+                    let count = varint_usize(&mut c)?;
+                    total = total
+                        .checked_add(count)
+                        .ok_or_else(|| Error::Protocol("portion counts overflow".into()))?;
+                    metas.push(Some((coords, count)));
+                } else {
+                    metas.push(None);
+                }
+            }
+            let values = compress::get_f32_stream(&mut c, total)?;
+            let mut off = 0usize;
+            let ticks = clients
+                .into_iter()
+                .zip(metas)
+                .map(|(client, meta)| {
+                    let portion = meta.map(|(coords, count)| {
+                        let vals = values[off..off + count].to_vec();
+                        off += count;
+                        (coords, vals)
+                    });
+                    (client, portion)
+                })
+                .collect();
+            WireMsg::TickBatch { iter, ticks }
+        }
+        TAG_ACK_BATCH_C => {
+            let n = varint_usize(&mut c)?;
+            if n > c.remaining() {
+                return Err(Error::Protocol(format!(
+                    "corrupt batch count {n} exceeds {} remaining bytes",
+                    c.remaining()
+                )));
+            }
+            let clients = get_client_deltas(&mut c, n)?;
+            let uploaded = get_bitset(&mut c, n)?;
+            let mut learned = Vec::with_capacity(n);
+            for _ in 0..n {
+                let l = c.varint()?;
+                learned.push(
+                    u32::try_from(l)
+                        .map_err(|_| Error::Protocol("learned count exceeds u32".into()))?,
+                );
+            }
+            let mut metas: Vec<Option<(usize, usize, Coords, usize)>> = Vec::with_capacity(n);
+            let mut total = 0usize;
+            for (i, &up) in uploaded.iter().enumerate() {
+                if up {
+                    let delta = compress::unzigzag(c.varint()?);
+                    let uclient = (clients[i] as i64)
+                        .checked_add(delta)
+                        .filter(|&v| v >= 0)
+                        .ok_or_else(|| Error::Protocol("update client id out of range".into()))?
+                        as usize;
+                    let sent_iter = varint_usize(&mut c)?;
+                    let coords = get_coords_c(&mut c)?;
+                    let count = varint_usize(&mut c)?;
+                    total = total
+                        .checked_add(count)
+                        .ok_or_else(|| Error::Protocol("upload counts overflow".into()))?;
+                    metas.push(Some((uclient, sent_iter, coords, count)));
+                } else {
+                    metas.push(None);
+                }
+            }
+            let values = compress::get_f32_stream(&mut c, total)?;
+            let mut off = 0usize;
+            let acks = clients
+                .into_iter()
+                .zip(metas)
+                .zip(learned)
+                .map(|((client, meta), l)| {
+                    let upload = meta.map(|(uclient, sent_iter, coords, count)| {
+                        let vals = values[off..off + count].to_vec();
+                        off += count;
+                        Update { client: uclient, sent_iter, coords, values: vals }
+                    });
+                    (client, upload, l)
+                })
+                .collect();
+            WireMsg::AckBatch { acks }
+        }
+        t => return Err(Error::Protocol(format!("bad compressed message tag {t}"))),
+    };
+    if c.remaining() != 0 {
+        return Err(Error::Protocol(format!(
+            "{} trailing bytes inside compressed frame",
+            c.remaining()
+        )));
+    }
+    Ok(msg)
+}
+
 // ---------------------------------------------------------------- decode
 
 fn portion(c: &mut Cur<'_>) -> Result<Option<(Coords, Vec<f32>)>> {
@@ -292,8 +643,13 @@ fn f32_rows(c: &mut Cur<'_>) -> Result<Vec<Vec<f32>>> {
     Ok(rows)
 }
 
-/// Decode one payload produced by [`encode`].
+/// Decode one payload produced by [`encode`] or [`encode_compressed`]:
+/// every decoder accepts both the raw and the compressed tags, which is
+/// what lets a mixed fleet interoperate.
 pub fn decode(payload: &[u8]) -> Result<WireMsg> {
+    if matches!(payload.first(), Some(&TAG_TICK_BATCH_C) | Some(&TAG_ACK_BATCH_C)) {
+        return decode_compressed(payload);
+    }
     let mut c = Cur::new(payload);
     let msg = match c.u8()? {
         0 => {
@@ -338,6 +694,13 @@ pub fn decode(payload: &[u8]) -> Result<WireMsg> {
             } else {
                 None
             };
+            // A legacy Hello ends here; current peers append the
+            // negotiation/auth fields (defaults: raw frames, no proof).
+            let (compress, challenge, hello_tag) = if c.remaining() > 0 {
+                (c.bool()?, c.u64()?, c.u64()?)
+            } else {
+                (false, 0, 0)
+            };
             WireMsg::Hello(WorkerAssignment {
                 client_lo,
                 client_hi,
@@ -350,9 +713,18 @@ pub fn decode(payload: &[u8]) -> Result<WireMsg> {
                 k_total,
                 avail_probs,
                 resume,
+                compress,
+                challenge,
+                hello_tag,
             })
         }
-        1 => WireMsg::HelloAck { client_lo: c.usize()?, session: c.u64()? },
+        1 => {
+            let client_lo = c.usize()?;
+            let session = c.u64()?;
+            let (compress, proof) =
+                if c.remaining() > 0 { (c.bool()?, c.u64()?) } else { (false, 0) };
+            WireMsg::HelloAck { client_lo, session, compress, proof }
+        }
         2 => WireMsg::Tick { client: c.usize()?, iter: c.usize()?, portion: portion(&mut c)? },
         3 => WireMsg::Ack {
             client: c.usize()?,
@@ -430,6 +802,16 @@ pub fn send_msg(w: &mut impl Write, msg: &WireMsg) -> Result<()> {
     write_frame(w, &encode(msg))
 }
 
+/// [`send_msg`] with a per-link encoding choice: the transport calls
+/// this with the link's negotiated `compress` flag.
+pub fn send_msg_c(w: &mut impl Write, msg: &WireMsg, compress: bool) -> Result<()> {
+    if compress {
+        write_frame(w, &encode_compressed(msg))
+    } else {
+        write_frame(w, &encode(msg))
+    }
+}
+
 /// Read + decode one message.
 pub fn recv_msg(r: &mut impl Read) -> Result<WireMsg> {
     decode(&read_frame(r)?)
@@ -465,7 +847,12 @@ mod tests {
             values: vec![1.0, -0.0, f32::MIN_POSITIVE, f32::from_bits(0x7f7f_fffe)],
         };
         roundtrip(&WireMsg::Shutdown);
-        roundtrip(&WireMsg::HelloAck { client_lo: 9, session: 0xdead_beef });
+        roundtrip(&WireMsg::HelloAck {
+            client_lo: 9,
+            session: 0xdead_beef,
+            compress: true,
+            proof: 0x1234_5678_9abc_def0,
+        });
         roundtrip(&WireMsg::Tick { client: 7, iter: 123, portion: None });
         let coords = Coords::List { idx: vec![0, 5, 31], d: 32 };
         roundtrip(&WireMsg::Tick {
@@ -522,6 +909,9 @@ mod tests {
                 k_total: 12,
                 avail_probs: vec![0.25; 12],
                 resume,
+                compress: true,
+                challenge: 0xc4a1_1e5e,
+                hello_tag: hello_tag("s3cret", 0xc4a1_1e5e, 0x5e55_1034, 4),
             });
             let dec = decode(&encode(&hello)).unwrap();
             assert_eq!(hello, dec);
@@ -644,9 +1034,15 @@ mod tests {
     #[test]
     fn corrupt_frames_error_cleanly() {
         assert!(decode(&[]).is_err());
-        assert!(decode(&[9]).is_err()); // bad tag
+        assert!(decode(&[11]).is_err()); // bad tag
+        assert!(decode(&[9]).is_err()); // compressed tag, no checksum
         assert!(decode(&[2, 1]).is_err()); // truncated Tick
-        let mut good = encode(&WireMsg::HelloAck { client_lo: 1, session: 2 });
+        let mut good = encode(&WireMsg::HelloAck {
+            client_lo: 1,
+            session: 2,
+            compress: false,
+            proof: 0,
+        });
         good.push(0); // trailing garbage
         assert!(decode(&good).is_err());
         // Oversized length prefix is rejected before allocation.
@@ -738,11 +1134,193 @@ mod tests {
                 states: vec![vec![0.5; 4]],
                 log: vec![vec![0.25; 4]],
             }),
+            compress: false,
+            challenge: 3,
+            hello_tag: 4,
         });
         let good = encode(&hello);
         assert_eq!(decode(&good).unwrap(), hello);
+        // One prefix is legitimate: stripping exactly the appended
+        // negotiation/auth fields yields the legacy Hello layout, which
+        // must keep decoding (with defaults) for mixed-fleet compat.
+        let legacy_cut = good.len() - 17;
         for cut in (good.len() - 60)..good.len() {
+            if cut == legacy_cut {
+                continue;
+            }
             assert!(decode(&good[..cut]).is_err(), "prefix {cut} accepted");
         }
+        let WireMsg::Hello(legacy) = decode(&good[..legacy_cut]).unwrap() else {
+            panic!("legacy prefix changed shape");
+        };
+        assert!(!legacy.compress);
+        assert_eq!((legacy.challenge, legacy.hello_tag), (0, 0));
+        assert_eq!(legacy.resume, match &hello {
+            WireMsg::Hello(h) => h.resume.clone(),
+            _ => unreachable!(),
+        });
+    }
+
+    /// Legacy handshake frames — encoded without the appended
+    /// negotiation/auth fields — decode with safe defaults: raw frames,
+    /// no proof (which an authenticating server then rejects).
+    #[test]
+    fn legacy_handshake_frames_decode_with_defaults() {
+        let ack = WireMsg::HelloAck { client_lo: 3, session: 9, compress: true, proof: 77 };
+        let enc = encode(&ack);
+        let legacy = &enc[..enc.len() - 9]; // strip bool + u64
+        assert_eq!(
+            decode(legacy).unwrap(),
+            WireMsg::HelloAck { client_lo: 3, session: 9, compress: false, proof: 0 }
+        );
+        // Partial trailing fields are corruption, not a legacy frame.
+        for cut in (enc.len() - 8)..enc.len() {
+            assert!(decode(&enc[..cut]).is_err(), "partial trailing fields at {cut} accepted");
+        }
+    }
+
+    #[test]
+    fn handshake_tags_separate_secrets_and_directions() {
+        let t = hello_tag("alpha", 1, 2, 3);
+        assert_eq!(t, hello_tag("alpha", 1, 2, 3));
+        assert_ne!(t, hello_tag("beta", 1, 2, 3));
+        assert_ne!(t, hello_tag("alpha", 2, 2, 3));
+        assert_ne!(t, hello_tag("alpha", 1, 3, 3));
+        assert_ne!(t, hello_tag("alpha", 1, 2, 4));
+        // A server tag can never double as a worker proof.
+        assert_ne!(t, ack_proof("alpha", 1, 2, 3));
+        // Empty secret still produces a deterministic (ignored) value.
+        assert_eq!(ack_proof("", 1, 2, 3), ack_proof("", 1, 2, 3));
+    }
+
+    fn batch_fixtures() -> Vec<WireMsg> {
+        let update = |client: usize, idx: Vec<u32>| Update {
+            client,
+            sent_iter: 41,
+            coords: Coords::List { idx, d: 32 },
+            values: vec![0.5, -0.0, f32::MIN_POSITIVE],
+        };
+        vec![
+            WireMsg::TickBatch { iter: 7, ticks: vec![] },
+            WireMsg::TickBatch {
+                iter: 41,
+                ticks: vec![
+                    (3, None),
+                    (
+                        4,
+                        Some((
+                            Coords::List { idx: vec![1, 9, 30], d: 32 },
+                            vec![0.5, -1.5, 1e-20],
+                        )),
+                    ),
+                    (5, Some((Coords::Full { d: 4 }, vec![1.0, 2.0, 3.0, 4.0]))),
+                    (
+                        9,
+                        Some((
+                            Coords::Range { start: 8, len: 2, d: 32 },
+                            vec![f32::from_bits(0x7fc0_0001), -0.0],
+                        )),
+                    ),
+                ],
+            },
+            WireMsg::AckBatch { acks: vec![] },
+            WireMsg::AckBatch {
+                acks: vec![
+                    (3, None, 1),
+                    (4, Some(update(4, vec![0, 5, 31])), 0),
+                    (5, None, 0),
+                    (8, Some(update(8, vec![2, 3, 4])), 1),
+                ],
+            },
+        ]
+    }
+
+    /// The compressed tags decode to the exact messages the raw tags
+    /// carry — same enum variants, bit-identical floats — and the
+    /// per-tick hot path (correlated values over shared coords) shrinks.
+    #[test]
+    fn compressed_batches_roundtrip_bit_exact() {
+        for msg in batch_fixtures() {
+            let enc = encode_compressed(&msg);
+            assert!(matches!(enc[0], TAG_TICK_BATCH_C | TAG_ACK_BATCH_C));
+            assert_eq!(decode(&enc).unwrap(), msg, "compressed roundtrip drifted");
+            // The raw encoding still decodes right beside it.
+            assert_eq!(decode(&encode(&msg)).unwrap(), msg);
+            // send_msg_c picks the encoding per link.
+            for compress in [false, true] {
+                let mut pipe = Vec::new();
+                send_msg_c(&mut pipe, &msg, compress).unwrap();
+                assert_eq!(recv_msg(&mut pipe.as_slice()).unwrap(), msg);
+            }
+        }
+        // Non-batch messages fall through to the raw encoding untouched.
+        let enc = encode_compressed(&WireMsg::Shutdown);
+        assert_eq!(enc, encode(&WireMsg::Shutdown));
+    }
+
+    /// A realistic downlink — many clients sharing one coordinated
+    /// schedule, values drifting slowly — must shrink under compression.
+    #[test]
+    fn compressed_downlink_is_smaller_at_scale() {
+        let coords = Coords::Range { start: 40, len: 16, d: 200 };
+        let vals: Vec<f32> = (0..16).map(|i| 0.5 + i as f32 * 1e-4).collect();
+        let ticks: Vec<(usize, Option<(Coords, Vec<f32>)>)> = (0..64)
+            .map(|c| (c, Some((coords.clone(), vals.clone()))))
+            .collect();
+        let msg = WireMsg::TickBatch { iter: 1000, ticks };
+        let raw = encode(&msg).len();
+        let comp = encode_compressed(&msg).len();
+        assert!(
+            comp * 2 < raw,
+            "compressed downlink {comp} B not < half of raw {raw} B"
+        );
+        assert_eq!(decode(&encode_compressed(&msg)).unwrap(), msg);
+    }
+
+    /// Adversarial sweep over compressed frames: every single-bit flip
+    /// and every truncation is a clean protocol error (the checksum is
+    /// verified before parsing), and hostile counts cannot reserve.
+    #[test]
+    fn corrupt_compressed_frames_error_cleanly() {
+        for msg in batch_fixtures() {
+            let good = encode_compressed(&msg);
+            for byte in 0..good.len() {
+                for bit in 0..8 {
+                    let mut bad = good.clone();
+                    bad[byte] ^= 1 << bit;
+                    match decode(&bad) {
+                        Err(Error::Protocol(_)) => {}
+                        Ok(m) => {
+                            // Flipping tag bits may turn the frame into a
+                            // raw-tag message; it must then fail — a
+                            // checksummed frame can't silently become a
+                            // valid raw one of this shape.
+                            panic!("bit flip {byte}:{bit} of {msg:?} decoded to {m:?}")
+                        }
+                        Err(e) => panic!("bit flip {byte}:{bit} gave non-protocol error {e:?}"),
+                    }
+                }
+            }
+            for cut in 0..good.len() {
+                assert!(decode(&good[..cut]).is_err(), "truncation at {cut} accepted");
+            }
+        }
+        // Hostile item count behind a valid checksum: rebuild the seal
+        // around a poisoned body so only the count check can refuse it.
+        let mut body = vec![TAG_TICK_BATCH_C];
+        codec::put_varint(&mut body, 0); // iter
+        codec::put_varint(&mut body, u64::MAX); // item count
+        assert!(matches!(decode(&seal(body)), Err(Error::Protocol(_))));
+        // Portion counts that overflow the value stream likewise.
+        let mut body = vec![TAG_TICK_BATCH_C];
+        codec::put_varint(&mut body, 0); // iter
+        codec::put_varint(&mut body, 1); // one item
+        codec::put_varint(&mut body, 0); // client 0
+        body.push(0x80); // presence bitset: item 0 present
+        body.push(2); // Coords::Full
+        codec::put_varint(&mut body, 4); // d
+        codec::put_varint(&mut body, 1 << 40); // hostile value count
+        codec::put_varint(&mut body, 0); // empty stream
+        assert!(matches!(decode(&seal(body)), Err(Error::Protocol(_))));
     }
 }

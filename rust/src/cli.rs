@@ -14,6 +14,11 @@
 //! `--resume PATH|DIR` restores and continues bit-identically; `deploy`
 //! adds `--checkpoint PATH` (snapshot location) and `--run-until T`
 //! (graceful stop at a tick boundary).
+//!
+//! Wire flags (`deploy` only): `--compress` offers the compressed batch
+//! frames to the fleet, `--secret S` turns on the keyed handshake (both
+//! ends must agree), and `--legacy-wire` makes a worker decline
+//! compression (a stand-in for a pre-codec binary in a mixed fleet).
 
 use std::collections::BTreeMap;
 
@@ -27,7 +32,7 @@ pub struct Args {
 }
 
 /// Known boolean switches (take no value).
-const SWITCHES: &[&str] = &["help", "xla", "quiet", "no-plot"];
+const SWITCHES: &[&str] = &["help", "xla", "quiet", "no-plot", "compress", "legacy-wire"];
 
 impl Args {
     /// Parse from an iterator of arguments (without argv[0]).
@@ -125,6 +130,18 @@ mod tests {
         assert_eq!(a.command.as_deref(), Some("deploy"));
         assert_eq!(a.get("connect"), Some("127.0.0.1:7000"));
         assert_eq!(a.get("serve"), None);
+    }
+
+    #[test]
+    fn wire_flags_parse() {
+        // --compress / --legacy-wire are switches; --secret takes a value.
+        let a = p("deploy --serve 0.0.0.0:7000 --compress --secret hunter2").unwrap();
+        assert!(a.has("compress"));
+        assert_eq!(a.get("secret"), Some("hunter2"));
+        let b = p("deploy --connect 127.0.0.1:7000 --legacy-wire").unwrap();
+        assert!(b.has("legacy-wire"));
+        assert!(!b.has("compress"));
+        assert!(p("deploy --secret").is_err());
     }
 
     #[test]

@@ -17,6 +17,11 @@
 //!                 pao-fed-deploy.ckpt) --resume PATH (restore and
 //!                 continue bit-identically) --run-until T (graceful
 //!                 stop at tick T after a final checkpoint)
+//!   wire:         --compress (offer compressed batch frames; each worker
+//!                 link negotiates in the handshake) --secret S (keyed
+//!                 handshake authentication; both ends must pass the same
+//!                 secret) --legacy-wire (worker only: decline
+//!                 compression, emulating a pre-codec binary)
 //!
 //! flags:
 //!   --mc N        Monte-Carlo runs per curve            (default 3)
@@ -45,7 +50,8 @@
 //! ```
 
 use pao_fed::async_rt::{
-    run_deployment, run_deployment_tcp, run_worker, DeploymentConfig, DeploymentReport,
+    run_deployment, run_deployment_tcp, run_worker_with, DeploymentConfig, DeploymentReport,
+    WireConfig, WorkerOptions,
 };
 use pao_fed::cli::Args;
 use pao_fed::data::stream::{FedStream, StreamConfig};
@@ -69,7 +75,8 @@ fn usage() -> ! {
          experiments: {} all | extras: {} extras\n\
          deployment:  pao-fed deploy [--serve ADDR --workers N | --connect ADDR]\n  \
          [--clients K] [--iters N] [--seed S] [--dim D] [--delta F] [--eval-every E]\n  \
-         [--checkpoint-every N] [--checkpoint PATH] [--resume PATH] [--run-until T]",
+         [--checkpoint-every N] [--checkpoint PATH] [--resume PATH] [--run-until T]\n  \
+         [--compress] [--secret S] [--legacy-wire]",
         experiments::ALL.join(" "),
         experiments::EXTRAS.join(" ")
     );
@@ -144,6 +151,10 @@ fn deploy_scenario(
             eval_every,
             persist,
             run_until,
+            wire: WireConfig {
+                compress: args.has("compress"),
+                secret: args.get("secret").unwrap_or("").to_string(),
+            },
         },
     ))
 }
@@ -172,7 +183,11 @@ fn print_deployment(report: &DeploymentReport) {
 fn run_deploy(args: &Args) -> Result<(), String> {
     if let Some(addr) = args.get("connect") {
         println!("worker: connecting to {addr}");
-        let rep = run_worker(addr).map_err(|e| e.to_string())?;
+        let opts = WorkerOptions {
+            secret: args.get("secret").unwrap_or("").to_string(),
+            allow_compress: !args.has("legacy-wire"),
+        };
+        let rep = run_worker_with(addr, &opts).map_err(|e| e.to_string())?;
         println!(
             "worker done: hosted clients {}..{}, {} ticks ({} replayed), {} local steps",
             rep.client_lo, rep.client_hi, rep.ticks, rep.replayed_ticks, rep.local_steps

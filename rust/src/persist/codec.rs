@@ -156,6 +156,21 @@ pub(crate) fn put_delay(buf: &mut Vec<u8>, d: &DelayModel) {
     }
 }
 
+/// LEB128 varint: 7 value bits per byte, high bit = continuation. The
+/// compact integer encoding of the compressed codec (`persist::compress`)
+/// and the v2 journal records.
+pub(crate) fn put_varint(buf: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            buf.push(byte);
+            return;
+        }
+        buf.push(byte | 0x80);
+    }
+}
+
 /// FNV-1a 64-bit hash: the checksum of snapshot payloads and journal
 /// records (and the model fingerprint in journal headers).
 pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
@@ -165,6 +180,29 @@ pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
         h = h.wrapping_mul(0x100_0000_01b3);
     }
     h
+}
+
+/// Keyed FNV-1a-64 over `secret || 0x1f || parts`, finalized through a
+/// splitmix64 avalanche: the authenticated-handshake tag of the TCP
+/// fleet (`async_rt::wire::{hello_tag, ack_proof}`). The 0x1f separator
+/// keeps `("ab", [..])` and `("a", [..])`-style boundary shifts from
+/// colliding trivially.
+pub(crate) fn fnv1a64_keyed(secret: &[u8], parts: &[u64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |b: u8| {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    };
+    for &b in secret {
+        eat(b);
+    }
+    eat(0x1f);
+    for &p in parts {
+        for b in p.to_le_bytes() {
+            eat(b);
+        }
+    }
+    crate::util::rng::splitmix64(h)
 }
 
 // ---------------------------------------------------------------- decode
@@ -216,6 +254,26 @@ impl<'a> Cur<'a> {
 
     pub(crate) fn usize(&mut self) -> Result<usize> {
         Ok(self.u64()? as usize)
+    }
+
+    /// LEB128 varint (`put_varint` inverse). At most 10 bytes; the tenth
+    /// byte may only contribute the final value bit, so every `u64` has
+    /// exactly one accepted encoding length and overflow is `Protocol`,
+    /// not silent truncation.
+    pub(crate) fn varint(&mut self) -> Result<u64> {
+        let mut v: u64 = 0;
+        for i in 0..10 {
+            let b = self.u8()?;
+            let payload = (b & 0x7f) as u64;
+            if i == 9 && payload > 1 {
+                return Err(Error::Protocol("varint overflows u64".into()));
+            }
+            v |= payload << (7 * i);
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+        }
+        Err(Error::Protocol("varint longer than 10 bytes".into()))
     }
 
     /// A `usize` that will size an allocation of `elem`-byte-minimum

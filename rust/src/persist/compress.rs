@@ -1,0 +1,693 @@
+//! Compressed stream codec: gorilla-style XOR-delta coding for float
+//! streams plus zigzag-varint delta coding for integer/index streams.
+//!
+//! Partial sharing cuts the *number* of coordinates that cross the wire
+//! or hit disk (the paper's 98% reduction); this module cuts the *bytes
+//! per surviving coordinate*, exploiting the same structure — model
+//! coordinates evolve by small steps per tick, so consecutive IEEE-754
+//! bit patterns share long prefixes and XOR to values with many leading
+//! and trailing zeros. The two axes compound: coordinate count ×
+//! bytes-per-coordinate.
+//!
+//! Everything here is **lossless on bit patterns**: values round-trip
+//! as their exact `to_bits()` images (NaN payloads, signed zeros,
+//! subnormals included), which is what lets the compressed wire and the
+//! v2 snapshot keep the crate's bit-exact determinism contract.
+//!
+//! ## Bitstream layout (per float stream)
+//!
+//! Bits are packed MSB-first. The first value is emitted raw (32 or 64
+//! bits); each subsequent value XORs against its predecessor:
+//!
+//! * `0` — XOR is zero (value repeats).
+//! * `1 0` — XOR fits the previous leading-zeros/length window; emit
+//!   the window's significant bits only.
+//! * `1 1` — new window: leading-zero count (5 bits for f32, 6 for
+//!   f64), significant-bit count minus one (5/6 bits), then the
+//!   significant bits.
+//!
+//! A stream is embedded in a byte payload as `varint n | varint nbytes |
+//! bitstream`, so an outer [`Cur`] can bound it without parsing bits.
+//! Integer streams (`u64` sequences, `u32` coordinate indices) are
+//! first-value + zigzag-varint deltas, exact for arbitrary (not just
+//! sorted) inputs via wrapping arithmetic.
+//!
+//! ## Hardening
+//!
+//! The [`BitReader`] is bounds-checked: every over-read, impossible
+//! window, count/byte-length mismatch, or non-zero padding bit decodes
+//! to [`Error::Protocol`] — never a panic. Pre-allocation is capped by
+//! the declared byte length (a stream of `nbytes` bytes can hold at
+//! most `8 * nbytes` values), so a hostile count cannot reserve more
+//! than a bounded multiple of bytes actually received.
+
+use super::codec::{put_varint, Cur};
+use crate::error::{Error, Result};
+
+// ------------------------------------------------------------ bit packing
+
+/// MSB-first bit accumulator backing the XOR-delta encoders.
+pub(crate) struct BitWriter {
+    buf: Vec<u8>,
+    /// Pending byte being filled, high bits first.
+    cur: u8,
+    /// Bits already placed in `cur` (0..8).
+    nbits: u32,
+}
+
+impl BitWriter {
+    pub(crate) fn new() -> Self {
+        BitWriter { buf: Vec::new(), cur: 0, nbits: 0 }
+    }
+
+    pub(crate) fn push_bit(&mut self, b: bool) {
+        self.cur |= (b as u8) << (7 - self.nbits);
+        self.nbits += 1;
+        if self.nbits == 8 {
+            self.buf.push(self.cur);
+            self.cur = 0;
+            self.nbits = 0;
+        }
+    }
+
+    /// Append the low `n` bits of `v`, most significant first (`n <= 64`).
+    pub(crate) fn push_bits(&mut self, v: u64, n: u32) {
+        for i in (0..n).rev() {
+            self.push_bit((v >> i) & 1 == 1);
+        }
+    }
+
+    /// Flush the partial byte (zero-padded) and return the stream.
+    pub(crate) fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.buf.push(self.cur);
+        }
+        self.buf
+    }
+}
+
+/// Bounds-checked MSB-first bit cursor: over-reads are [`Error::Protocol`].
+pub(crate) struct BitReader<'a> {
+    buf: &'a [u8],
+    bit: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, bit: 0 }
+    }
+
+    pub(crate) fn bit(&mut self) -> Result<bool> {
+        if self.bit >= self.buf.len() * 8 {
+            return Err(Error::Protocol(format!(
+                "truncated bitstream: need bit {} of {}",
+                self.bit,
+                self.buf.len() * 8
+            )));
+        }
+        let byte = self.buf[self.bit / 8];
+        let b = (byte >> (7 - (self.bit % 8))) & 1 == 1;
+        self.bit += 1;
+        Ok(b)
+    }
+
+    /// Read `n` bits (`n <= 64`), most significant first.
+    pub(crate) fn bits(&mut self, n: u32) -> Result<u64> {
+        let mut v = 0u64;
+        for _ in 0..n {
+            v = (v << 1) | self.bit()? as u64;
+        }
+        Ok(v)
+    }
+
+    /// Enforce the canonical framing: the stream's byte length matches
+    /// the bits consumed exactly (no whole trailing byte of slack) and
+    /// every padding bit in the final partial byte is zero. A bit flip
+    /// in the padding is corruption like any other.
+    pub(crate) fn finish(mut self) -> Result<()> {
+        if self.bit.div_ceil(8) != self.buf.len() {
+            return Err(Error::Protocol(format!(
+                "bitstream length {} bytes but only {} bits consumed",
+                self.buf.len(),
+                self.bit
+            )));
+        }
+        while self.bit % 8 != 0 {
+            if self.bit()? {
+                return Err(Error::Protocol("non-zero bitstream padding".into()));
+            }
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------- zigzag
+
+pub(crate) fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+pub(crate) fn unzigzag(z: u64) -> i64 {
+    ((z >> 1) as i64) ^ -((z & 1) as i64)
+}
+
+fn varint_usize(c: &mut Cur) -> Result<usize> {
+    usize::try_from(c.varint()?)
+        .map_err(|_| Error::Protocol("varint count exceeds usize".into()))
+}
+
+// ------------------------------------------------------- f32 XOR streams
+
+/// f32 window state shared by encode and the window-reuse arm of decode.
+struct XorWin {
+    lead: u32,
+    sig: u32,
+}
+
+fn write_f32_xor(w: &mut BitWriter, vals: &[f32]) {
+    let mut prev = 0u32;
+    let mut win: Option<XorWin> = None;
+    for (i, &v) in vals.iter().enumerate() {
+        let bits = v.to_bits();
+        if i == 0 {
+            w.push_bits(bits as u64, 32);
+            prev = bits;
+            continue;
+        }
+        let xor = prev ^ bits;
+        prev = bits;
+        if xor == 0 {
+            w.push_bit(false);
+            continue;
+        }
+        w.push_bit(true);
+        let lead = xor.leading_zeros();
+        let trail = xor.trailing_zeros();
+        if let Some(ref wn) = win {
+            let wtrail = 32 - wn.lead - wn.sig;
+            if lead >= wn.lead && trail >= wtrail {
+                w.push_bit(false);
+                w.push_bits((xor >> wtrail) as u64, wn.sig);
+                continue;
+            }
+        }
+        let sig = 32 - lead - trail;
+        w.push_bit(true);
+        w.push_bits(lead as u64, 5);
+        w.push_bits((sig - 1) as u64, 5);
+        w.push_bits((xor >> trail) as u64, sig);
+        win = Some(XorWin { lead, sig });
+    }
+}
+
+fn read_f32_xor(r: &mut BitReader, n: usize) -> Result<Vec<f32>> {
+    let mut out = Vec::with_capacity(n);
+    if n == 0 {
+        return Ok(out);
+    }
+    let mut prev = r.bits(32)? as u32;
+    out.push(f32::from_bits(prev));
+    let mut win: Option<XorWin> = None;
+    for _ in 1..n {
+        if !r.bit()? {
+            out.push(f32::from_bits(prev));
+            continue;
+        }
+        let xor = if !r.bit()? {
+            let wn = win
+                .as_ref()
+                .ok_or_else(|| Error::Protocol("xor window reuse before any window".into()))?;
+            let wtrail = 32 - wn.lead - wn.sig;
+            (r.bits(wn.sig)? as u32) << wtrail
+        } else {
+            let lead = r.bits(5)? as u32;
+            let sig = r.bits(5)? as u32 + 1;
+            if lead + sig > 32 {
+                return Err(Error::Protocol(format!(
+                    "impossible f32 xor window: {lead} leading + {sig} significant bits"
+                )));
+            }
+            let trail = 32 - lead - sig;
+            let x = (r.bits(sig)? as u32) << trail;
+            win = Some(XorWin { lead, sig });
+            x
+        };
+        prev ^= xor;
+        out.push(f32::from_bits(prev));
+    }
+    Ok(out)
+}
+
+// ------------------------------------------------------- f64 XOR streams
+
+fn write_f64_xor(w: &mut BitWriter, vals: &[f64]) {
+    let mut prev = 0u64;
+    let mut win: Option<XorWin> = None; // lead/sig in 0..=64
+    for (i, &v) in vals.iter().enumerate() {
+        let bits = v.to_bits();
+        if i == 0 {
+            w.push_bits(bits, 64);
+            prev = bits;
+            continue;
+        }
+        let xor = prev ^ bits;
+        prev = bits;
+        if xor == 0 {
+            w.push_bit(false);
+            continue;
+        }
+        w.push_bit(true);
+        let lead = xor.leading_zeros();
+        let trail = xor.trailing_zeros();
+        if let Some(ref wn) = win {
+            let wtrail = 64 - wn.lead - wn.sig;
+            if lead >= wn.lead && trail >= wtrail {
+                w.push_bit(false);
+                w.push_bits(xor >> wtrail, wn.sig);
+                continue;
+            }
+        }
+        let sig = 64 - lead - trail;
+        w.push_bit(true);
+        w.push_bits(lead as u64, 6);
+        w.push_bits((sig - 1) as u64, 6);
+        w.push_bits(xor >> trail, sig);
+        win = Some(XorWin { lead, sig });
+    }
+}
+
+fn read_f64_xor(r: &mut BitReader, n: usize) -> Result<Vec<f64>> {
+    let mut out = Vec::with_capacity(n);
+    if n == 0 {
+        return Ok(out);
+    }
+    let mut prev = r.bits(64)?;
+    out.push(f64::from_bits(prev));
+    let mut win: Option<XorWin> = None;
+    for _ in 1..n {
+        if !r.bit()? {
+            out.push(f64::from_bits(prev));
+            continue;
+        }
+        let xor = if !r.bit()? {
+            let wn = win
+                .as_ref()
+                .ok_or_else(|| Error::Protocol("xor window reuse before any window".into()))?;
+            let wtrail = 64 - wn.lead - wn.sig;
+            r.bits(wn.sig)? << wtrail
+        } else {
+            let lead = r.bits(6)? as u32;
+            let sig = r.bits(6)? as u32 + 1;
+            if lead + sig > 64 {
+                return Err(Error::Protocol(format!(
+                    "impossible f64 xor window: {lead} leading + {sig} significant bits"
+                )));
+            }
+            let trail = 64 - lead - sig;
+            let x = r.bits(sig)? << trail;
+            win = Some(XorWin { lead, sig });
+            x
+        };
+        prev ^= xor;
+        out.push(f64::from_bits(prev));
+    }
+    Ok(out)
+}
+
+// ------------------------------------------------- framed stream helpers
+
+/// Count-then-bytes framing shared by the f32 and f64 block codecs: the
+/// declared count must be achievable within the declared byte length
+/// (first value `first_bits`, every later value at least one bit)
+/// *before* anything is allocated.
+fn check_stream_budget(n: usize, nbytes: usize, first_bits: u64) -> Result<()> {
+    if n == 0 {
+        if nbytes != 0 {
+            return Err(Error::Protocol("empty stream with non-empty payload".into()));
+        }
+        return Ok(());
+    }
+    let need = first_bits + (n as u64 - 1);
+    let avail = nbytes as u64 * 8;
+    if need > avail {
+        return Err(Error::Protocol(format!(
+            "stream count {n} needs at least {need} bits but payload has {avail}"
+        )));
+    }
+    Ok(())
+}
+
+fn f32_stream_bytes(vals: &[f32]) -> Vec<u8> {
+    let mut w = BitWriter::new();
+    write_f32_xor(&mut w, vals);
+    w.finish()
+}
+
+fn f32s_from_stream(stream: &[u8], n: usize) -> Result<Vec<f32>> {
+    check_stream_budget(n, stream.len(), 32)?;
+    let mut r = BitReader::new(stream);
+    let out = read_f32_xor(&mut r, n)?;
+    r.finish()?;
+    Ok(out)
+}
+
+fn f64_stream_bytes(vals: &[f64]) -> Vec<u8> {
+    let mut w = BitWriter::new();
+    write_f64_xor(&mut w, vals);
+    w.finish()
+}
+
+fn f64s_from_stream(stream: &[u8], n: usize) -> Result<Vec<f64>> {
+    check_stream_budget(n, stream.len(), 64)?;
+    let mut r = BitReader::new(stream);
+    let out = read_f64_xor(&mut r, n)?;
+    r.finish()?;
+    Ok(out)
+}
+
+// ------------------------------------------------------ cursor block API
+//
+// Block layout: `varint n | varint nbytes | bitstream` for floats;
+// `varint n | n zigzag varints` for integers. These embed inside wire
+// frames and snapshot payloads via the shared `Cur`.
+
+/// Append a compressed f32 block (`varint n | varint nbytes | stream`).
+pub(crate) fn put_f32s(buf: &mut Vec<u8>, vals: &[f32]) {
+    put_varint(buf, vals.len() as u64);
+    let stream = f32_stream_bytes(vals);
+    put_varint(buf, stream.len() as u64);
+    buf.extend_from_slice(&stream);
+}
+
+/// Decode a compressed f32 block written by [`put_f32s`].
+pub(crate) fn get_f32s(c: &mut Cur) -> Result<Vec<f32>> {
+    let n = varint_usize(c)?;
+    let nbytes = varint_usize(c)?;
+    f32s_from_stream(c.take(nbytes)?, n)
+}
+
+/// Append a compressed f64 block.
+pub(crate) fn put_f64s(buf: &mut Vec<u8>, vals: &[f64]) {
+    put_varint(buf, vals.len() as u64);
+    let stream = f64_stream_bytes(vals);
+    put_varint(buf, stream.len() as u64);
+    buf.extend_from_slice(&stream);
+}
+
+/// Decode a compressed f64 block written by [`put_f64s`].
+pub(crate) fn get_f64s(c: &mut Cur) -> Result<Vec<f64>> {
+    let n = varint_usize(c)?;
+    let nbytes = varint_usize(c)?;
+    f64s_from_stream(c.take(nbytes)?, n)
+}
+
+/// Append an f32 stream whose count the surrounding format already
+/// carries (`varint nbytes | stream`) — the wire batch value block.
+pub(crate) fn put_f32_stream(buf: &mut Vec<u8>, vals: &[f32]) {
+    let stream = f32_stream_bytes(vals);
+    put_varint(buf, stream.len() as u64);
+    buf.extend_from_slice(&stream);
+}
+
+/// Decode an f32 stream of externally-known count `n`.
+pub(crate) fn get_f32_stream(c: &mut Cur, n: usize) -> Result<Vec<f32>> {
+    let nbytes = varint_usize(c)?;
+    f32s_from_stream(c.take(nbytes)?, n)
+}
+
+/// Append a `u64` sequence as first value + wrapping zigzag deltas
+/// (exact for arbitrary inputs; near-constant steps shrink to one byte).
+pub(crate) fn put_u64s_delta(buf: &mut Vec<u8>, vals: &[u64]) {
+    put_varint(buf, vals.len() as u64);
+    let mut prev = 0u64;
+    for &v in vals {
+        put_varint(buf, zigzag(v.wrapping_sub(prev) as i64));
+        prev = v;
+    }
+}
+
+/// Decode a delta-coded `u64` sequence written by [`put_u64s_delta`].
+pub(crate) fn get_u64s_delta(c: &mut Cur) -> Result<Vec<u64>> {
+    let n = varint_usize(c)?;
+    if n > c.remaining() {
+        return Err(Error::Protocol(format!(
+            "corrupt delta count {n} exceeds {} remaining bytes",
+            c.remaining()
+        )));
+    }
+    let mut out = Vec::with_capacity(n);
+    let mut prev = 0u64;
+    for _ in 0..n {
+        prev = prev.wrapping_add(unzigzag(c.varint()?) as u64);
+        out.push(prev);
+    }
+    Ok(out)
+}
+
+/// Append a `u32` coordinate-index list as zigzag deltas. Sorted lists
+/// (the partial-sharing schedules) collapse to ~1 byte per index;
+/// arbitrary order still round-trips exactly.
+pub(crate) fn put_indices(buf: &mut Vec<u8>, idx: &[u32]) {
+    put_varint(buf, idx.len() as u64);
+    let mut prev = 0i64;
+    for &i in idx {
+        let v = i as i64;
+        put_varint(buf, zigzag(v - prev));
+        prev = v;
+    }
+}
+
+/// Decode a delta-coded index list written by [`put_indices`]; every
+/// reconstructed index must fit `u32`.
+pub(crate) fn get_indices(c: &mut Cur) -> Result<Vec<u32>> {
+    let n = varint_usize(c)?;
+    if n > c.remaining() {
+        return Err(Error::Protocol(format!(
+            "corrupt index count {n} exceeds {} remaining bytes",
+            c.remaining()
+        )));
+    }
+    let mut out = Vec::with_capacity(n);
+    let mut prev = 0i64;
+    for _ in 0..n {
+        let cur = prev
+            .checked_add(unzigzag(c.varint()?))
+            .ok_or_else(|| Error::Protocol("index delta overflows".into()))?;
+        if !(0..=u32::MAX as i64).contains(&cur) {
+            return Err(Error::Protocol(format!("index {cur} out of u32 range")));
+        }
+        out.push(cur as u32);
+        prev = cur;
+    }
+    Ok(out)
+}
+
+// ------------------------------------------------------- standalone API
+//
+// Self-contained byte-slice encode/decode pairs for the property-test
+// harness and benches: decode consumes the whole slice or fails.
+
+fn whole_slice<T>(bytes: &[u8], f: impl FnOnce(&mut Cur) -> Result<T>) -> Result<T> {
+    let mut c = Cur::new(bytes);
+    let v = f(&mut c)?;
+    if c.remaining() != 0 {
+        return Err(Error::Protocol(format!(
+            "{} trailing bytes after compressed block",
+            c.remaining()
+        )));
+    }
+    Ok(v)
+}
+
+/// Encode an f32 stream as a self-contained block.
+pub fn encode_f32s(vals: &[f32]) -> Vec<u8> {
+    let mut buf = Vec::new();
+    put_f32s(&mut buf, vals);
+    buf
+}
+
+/// Decode a block from [`encode_f32s`]; trailing bytes are `Protocol`.
+pub fn decode_f32s(bytes: &[u8]) -> Result<Vec<f32>> {
+    whole_slice(bytes, get_f32s)
+}
+
+/// Encode an f64 stream as a self-contained block.
+pub fn encode_f64s(vals: &[f64]) -> Vec<u8> {
+    let mut buf = Vec::new();
+    put_f64s(&mut buf, vals);
+    buf
+}
+
+/// Decode a block from [`encode_f64s`]; trailing bytes are `Protocol`.
+pub fn decode_f64s(bytes: &[u8]) -> Result<Vec<f64>> {
+    whole_slice(bytes, get_f64s)
+}
+
+/// Encode a `u32` index list as a self-contained block.
+pub fn encode_indices(idx: &[u32]) -> Vec<u8> {
+    let mut buf = Vec::new();
+    put_indices(&mut buf, idx);
+    buf
+}
+
+/// Decode a block from [`encode_indices`]; trailing bytes are `Protocol`.
+pub fn decode_indices(bytes: &[u8]) -> Result<Vec<u32>> {
+    whole_slice(bytes, get_indices)
+}
+
+/// Encode a `u64` sequence as a self-contained delta block.
+pub fn encode_u64s_delta(vals: &[u64]) -> Vec<u8> {
+    let mut buf = Vec::new();
+    put_u64s_delta(&mut buf, vals);
+    buf
+}
+
+/// Decode a block from [`encode_u64s_delta`]; trailing bytes are `Protocol`.
+pub fn decode_u64s_delta(bytes: &[u8]) -> Result<Vec<u64>> {
+    whole_slice(bytes, get_u64s_delta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt_f32(vals: &[f32]) {
+        let enc = encode_f32s(vals);
+        let dec = decode_f32s(&enc).unwrap();
+        assert_eq!(dec.len(), vals.len());
+        for (a, b) in vals.iter().zip(&dec) {
+            assert_eq!(a.to_bits(), b.to_bits(), "f32 bit pattern drift");
+        }
+    }
+
+    #[test]
+    fn f32_special_values_roundtrip_bitexact() {
+        rt_f32(&[]);
+        rt_f32(&[0.0]);
+        rt_f32(&[
+            0.0,
+            -0.0,
+            1.0,
+            -1.0,
+            f32::MAX,
+            f32::MIN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::from_bits(0x7fc0_dead), // NaN with payload
+            f32::from_bits(0x0000_0001), // smallest subnormal
+            f32::from_bits(0x007f_ffff), // largest subnormal
+        ]);
+        rt_f32(&[3.25; 100]); // constant run: 1 bit per repeat
+    }
+
+    #[test]
+    fn constant_run_compresses_to_about_a_bit_per_value() {
+        let enc = encode_f32s(&[1.5f32; 1024]);
+        // varint n (2B) + varint nbytes + 4B first + ~1023 bits.
+        assert!(enc.len() < 140, "constant run took {} bytes", enc.len());
+    }
+
+    #[test]
+    fn f64_roundtrip_and_specials() {
+        let vals = [
+            0.0,
+            -0.0,
+            std::f64::consts::PI,
+            f64::from_bits(0x7ff8_0000_0000_beef),
+            f64::MIN_POSITIVE / 8.0,
+            f64::MAX,
+        ];
+        let dec = decode_f64s(&encode_f64s(&vals)).unwrap();
+        for (a, b) in vals.iter().zip(&dec) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn index_streams_roundtrip_sorted_and_not() {
+        for idx in [
+            vec![],
+            vec![0],
+            vec![u32::MAX],
+            vec![3, 1, 4, 1, 5, 9, 2, 6],
+            (0..200u32).step_by(3).collect::<Vec<_>>(),
+            vec![u32::MAX, 0, u32::MAX, 1],
+        ] {
+            assert_eq!(decode_indices(&encode_indices(&idx)).unwrap(), idx);
+        }
+    }
+
+    #[test]
+    fn u64_delta_roundtrips_extremes() {
+        for vals in [
+            vec![],
+            vec![0, u64::MAX, 0, 1, u64::MAX - 1],
+            (0..50u64).map(|i| i * 7).collect::<Vec<_>>(),
+        ] {
+            assert_eq!(decode_u64s_delta(&encode_u64s_delta(&vals)).unwrap(), vals);
+        }
+    }
+
+    #[test]
+    fn sorted_indices_take_about_a_byte_each() {
+        let idx: Vec<u32> = (0..1000u32).collect();
+        let enc = encode_indices(&idx);
+        assert!(enc.len() < 1010, "sorted indices took {} bytes", enc.len());
+    }
+
+    #[test]
+    fn truncation_and_garbage_are_protocol_errors() {
+        let enc = encode_f32s(&[1.0, 1.5, 2.25, -7.0, 1e-40]);
+        for cut in 0..enc.len() {
+            assert!(
+                matches!(decode_f32s(&enc[..cut]), Err(Error::Protocol(_))),
+                "truncation at {cut} did not fail cleanly"
+            );
+        }
+        let mut trailing = enc.clone();
+        trailing.push(0);
+        assert!(matches!(decode_f32s(&trailing), Err(Error::Protocol(_))));
+    }
+
+    #[test]
+    fn hostile_counts_cannot_reserve_memory() {
+        // Huge declared count with a tiny stream must fail before any
+        // allocation sized by the count.
+        let mut buf = Vec::new();
+        put_varint(&mut buf, u64::MAX); // n
+        put_varint(&mut buf, 4); // nbytes
+        buf.extend_from_slice(&[0u8; 4]);
+        assert!(matches!(decode_f32s(&buf), Err(Error::Protocol(_))));
+
+        let mut buf = Vec::new();
+        put_varint(&mut buf, 1 << 40); // index count with no bytes behind it
+        assert!(matches!(decode_indices(&buf), Err(Error::Protocol(_))));
+    }
+
+    #[test]
+    fn nonzero_padding_rejected() {
+        // A single raw value leaves no padding (exactly 32 bits); two
+        // identical values leave 7 pad bits. Flip one.
+        let enc = encode_f32s(&[1.0, 1.0]);
+        let mut bad = enc.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x01; // lowest pad bit
+        assert!(matches!(decode_f32s(&bad), Err(Error::Protocol(_))));
+    }
+
+    #[test]
+    fn window_reuse_before_window_rejected() {
+        // Hand-build a stream: first value 32 bits of zero, then control
+        // bits `1 0` (reuse) with no window ever defined.
+        let mut w = BitWriter::new();
+        w.push_bits(0, 32);
+        w.push_bit(true);
+        w.push_bit(false);
+        let stream = w.finish();
+        let mut buf = Vec::new();
+        put_varint(&mut buf, 2);
+        put_varint(&mut buf, stream.len() as u64);
+        buf.extend_from_slice(&stream);
+        assert!(matches!(decode_f32s(&buf), Err(Error::Protocol(_))));
+    }
+}

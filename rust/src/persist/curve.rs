@@ -1,0 +1,214 @@
+//! Compressed eval-curve files: the per-tick `(iteration, MSE dB)`
+//! series a run produces, persisted in the compressed codec.
+//!
+//! The curve is the artifact the determinism contract is stated over
+//! (bit-for-bit equality across backends, transports and resume), so it
+//! gets the same durable treatment as snapshots: a magic header, a
+//! version, a checksummed payload, and an atomic temp-file + rename
+//! write. Iterations are delta-varint coded (a fixed eval cadence
+//! collapses to one byte per point); dB values are gorilla-coded f64
+//! ([`compress`](super::compress)).
+//!
+//! Writers: the deployment loop (`async_rt::protocol`) drops a `.curve`
+//! beside every checkpoint, and the experiment harness
+//! (`experiments::common::emit`) drops one beside each figure's CSV.
+//! Corrupt input decodes to [`Error::Protocol`], never a panic.
+
+use super::codec::{fnv1a64, put_u64, Cur};
+use super::compress;
+use crate::error::{Error, Result};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+const MAGIC: &[u8; 8] = b"PAOFCURV";
+const VERSION: u32 = 1;
+
+/// Serialize a curve (`iters` strictly parallel to `db`) to bytes.
+pub fn to_bytes(iters: &[usize], db: &[f64]) -> Result<Vec<u8>> {
+    if iters.len() != db.len() {
+        return Err(Error::Config(format!(
+            "curve arrays disagree: {} iterations vs {} dB points",
+            iters.len(),
+            db.len()
+        )));
+    }
+    let mut payload = Vec::new();
+    let as_u64: Vec<u64> = iters.iter().map(|&i| i as u64).collect();
+    compress::put_u64s_delta(&mut payload, &as_u64);
+    compress::put_f64s(&mut payload, db);
+
+    let mut buf = Vec::with_capacity(MAGIC.len() + 4 + 8 + payload.len() + 8);
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    put_u64(&mut buf, payload.len() as u64);
+    buf.extend_from_slice(&payload);
+    put_u64(&mut buf, fnv1a64(&payload));
+    Ok(buf)
+}
+
+/// Parse bytes written by [`to_bytes`]. Checksum is verified before the
+/// payload is interpreted, so any corruption — header, body, padding —
+/// is a clean [`Error::Protocol`].
+pub fn from_bytes(bytes: &[u8]) -> Result<(Vec<usize>, Vec<f64>)> {
+    let mut c = Cur::new(bytes);
+    if c.take(MAGIC.len())? != MAGIC {
+        return Err(Error::Protocol("bad curve-file magic".into()));
+    }
+    let version = c.u32()?;
+    if version != VERSION {
+        return Err(Error::Protocol(format!(
+            "unsupported curve-file version {version} (supported: {VERSION})"
+        )));
+    }
+    let plen = c.len(1)?;
+    let payload = c.take(plen)?;
+    let want = c.u64()?;
+    if c.remaining() != 0 {
+        return Err(Error::Protocol(format!(
+            "{} trailing bytes after curve checksum",
+            c.remaining()
+        )));
+    }
+    if fnv1a64(payload) != want {
+        return Err(Error::Protocol("curve-file checksum mismatch".into()));
+    }
+
+    let mut p = Cur::new(payload);
+    let iters_u64 = compress::get_u64s_delta(&mut p)?;
+    let db = compress::get_f64s(&mut p)?;
+    if p.remaining() != 0 {
+        return Err(Error::Protocol(format!(
+            "{} trailing bytes inside curve payload",
+            p.remaining()
+        )));
+    }
+    if iters_u64.len() != db.len() {
+        return Err(Error::Protocol(format!(
+            "curve arrays disagree: {} iterations vs {} dB points",
+            iters_u64.len(),
+            db.len()
+        )));
+    }
+    let iters = iters_u64.iter().map(|&i| i as usize).collect();
+    Ok((iters, db))
+}
+
+/// The `.curve` sibling of a checkpoint path. A checkpoint that itself
+/// ends in `.curve` would be clobbered by its own curve file, so it is
+/// refused up front (mirrors [`journal_path_for`](super::journal_path_for)).
+pub fn curve_path_for(snapshot_path: &Path) -> Result<PathBuf> {
+    if snapshot_path.extension().is_some_and(|e| e == "curve") {
+        return Err(Error::Config(format!(
+            "checkpoint path {} ends in .curve and would collide with its own curve file \
+             (pick another extension)",
+            snapshot_path.display()
+        )));
+    }
+    Ok(snapshot_path.with_extension("curve"))
+}
+
+/// Atomically write a curve file (temp sibling + rename + parent fsync,
+/// the same crash-safety discipline as snapshots).
+pub fn write_file(path: &Path, iters: &[usize], db: &[f64]) -> Result<()> {
+    let bytes = to_bytes(iters, db)?;
+    super::ensure_parent_dir(path)?;
+    let tmp = super::tmp_sibling(path);
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    super::sync_parent_dir(path)?;
+    Ok(())
+}
+
+/// Read a curve file back as `(iterations, MSE dB)`.
+pub fn read_file(path: &Path) -> Result<(Vec<usize>, Vec<f64>)> {
+    from_bytes(&std::fs::read(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> (Vec<usize>, Vec<f64>) {
+        let iters: Vec<usize> = (0..300).map(|i| i * 10).collect();
+        let db: Vec<f64> = (0..300).map(|i| -(i as f64) * 0.07 - 3.0).collect();
+        (iters, db)
+    }
+
+    #[test]
+    fn roundtrips_bit_exact() {
+        let (iters, db) = sample();
+        let bytes = to_bytes(&iters, &db).unwrap();
+        let (ri, rd) = from_bytes(&bytes).unwrap();
+        assert_eq!(ri, iters);
+        for (a, b) in db.iter().zip(&rd) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // A fixed cadence + smooth curve should land well under raw size
+        // (300 * (8 + 8) = 4800 raw payload bytes).
+        assert!(bytes.len() < 3600, "curve file took {} bytes", bytes.len());
+    }
+
+    #[test]
+    fn empty_curve_roundtrips() {
+        let bytes = to_bytes(&[], &[]).unwrap();
+        let (i, d) = from_bytes(&bytes).unwrap();
+        assert!(i.is_empty() && d.is_empty());
+    }
+
+    #[test]
+    fn mismatched_arrays_refused() {
+        assert!(to_bytes(&[1, 2], &[0.5]).is_err());
+    }
+
+    #[test]
+    fn every_single_bit_flip_is_a_protocol_error() {
+        let iters: Vec<usize> = (0..40).map(|i| i * 5).collect();
+        let db: Vec<f64> = (0..40).map(|i| -0.3 * i as f64).collect();
+        let bytes = to_bytes(&iters, &db).unwrap();
+        for byte in 0..bytes.len() {
+            for bit in 0..8 {
+                let mut bad = bytes.clone();
+                bad[byte] ^= 1 << bit;
+                match from_bytes(&bad) {
+                    Err(Error::Protocol(_)) => {}
+                    Ok(_) => panic!("bit flip {byte}:{bit} decoded successfully"),
+                    Err(e) => panic!("bit flip {byte}:{bit} gave non-protocol error {e:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_truncation_is_a_protocol_error() {
+        let (iters, db) = sample();
+        let bytes = to_bytes(&iters, &db).unwrap();
+        for cut in 0..bytes.len() {
+            assert!(
+                matches!(from_bytes(&bytes[..cut]), Err(Error::Protocol(_))),
+                "truncation at {cut} did not fail cleanly"
+            );
+        }
+    }
+
+    #[test]
+    fn write_read_file_roundtrip_and_path_guard() {
+        let dir = std::env::temp_dir().join(format!("pao-fed-curve-{}", std::process::id()));
+        let path = dir.join("run.curve");
+        let (iters, db) = sample();
+        write_file(&path, &iters, &db).unwrap();
+        let (ri, rd) = read_file(&path).unwrap();
+        assert_eq!(ri, iters);
+        assert_eq!(rd.len(), db.len());
+        std::fs::remove_dir_all(&dir).ok();
+
+        assert!(curve_path_for(Path::new("run.curve")).is_err());
+        assert_eq!(
+            curve_path_for(Path::new("run.ckpt")).unwrap(),
+            PathBuf::from("run.curve")
+        );
+    }
+}

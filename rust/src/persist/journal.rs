@@ -31,7 +31,7 @@ pub const MAGIC: [u8; 8] = *b"PAOFJRNL";
 pub const VERSION: u32 = 1;
 
 /// Upper bound on one record's payload (sanity guard against a corrupt
-/// length prefix; real records are 25 bytes).
+/// length prefix; real records are ≤ 25 bytes).
 const MAX_RECORD: usize = 1 << 16;
 
 /// One per-tick journal record.
@@ -47,25 +47,47 @@ pub struct TickRecord {
 }
 
 impl TickRecord {
+    /// Current (tag-2) compact framing: varint tick and uplink counter
+    /// (1–3 bytes each at realistic scales), raw 8-byte model digest (a
+    /// hash is incompressible by construction). Typically 11–13 bytes
+    /// against tag-1's fixed 25.
     fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(13);
+        buf.push(2); // record tag: compact tick record
+        codec::put_varint(&mut buf, self.tick as u64);
+        codec::put_u64(&mut buf, self.w_hash);
+        codec::put_varint(&mut buf, self.uplink_msgs);
+        buf
+    }
+
+    /// Legacy fixed-width (tag-1) framing, kept as a writer so the
+    /// mixed-journal compat test can produce genuine old records.
+    fn encode_v1(&self) -> Vec<u8> {
         let mut buf = Vec::with_capacity(25);
-        buf.push(1); // record tag: tick record
+        buf.push(1); // record tag: tick record (fixed-width)
         codec::put_usize(&mut buf, self.tick);
         codec::put_u64(&mut buf, self.w_hash);
         codec::put_u64(&mut buf, self.uplink_msgs);
         buf
     }
 
+    /// Records self-describe through their tag, so one journal may hold
+    /// both framings (a pre-compression run resumed by this build).
     fn decode(payload: &[u8]) -> Result<Self> {
         let mut c = Cur::new(payload);
-        match c.u8()? {
-            1 => {}
+        let rec = match c.u8()? {
+            1 => TickRecord {
+                tick: c.usize()?,
+                w_hash: c.u64()?,
+                uplink_msgs: c.u64()?,
+            },
+            2 => TickRecord {
+                tick: usize::try_from(c.varint()?)
+                    .map_err(|_| Error::Protocol("journal tick exceeds usize".into()))?,
+                w_hash: c.u64()?,
+                uplink_msgs: c.varint()?,
+            },
             t => return Err(Error::Protocol(format!("bad journal record tag {t}"))),
-        }
-        let rec = TickRecord {
-            tick: c.usize()?,
-            w_hash: c.u64()?,
-            uplink_msgs: c.u64()?,
         };
         if c.remaining() != 0 {
             return Err(Error::Protocol(format!(
@@ -285,9 +307,11 @@ mod tests {
         }
         drop(j);
         let good = std::fs::read(&path).unwrap();
-        // Flip a payload byte of a middle record: checksum failure.
+        // Flip a payload byte of the second record (its offset follows
+        // from the first record's length prefix): checksum failure.
+        let first_len = u32::from_le_bytes(good[20..24].try_into().unwrap()) as usize;
         let mut bad = good.clone();
-        bad[20 + (4 + 25 + 8) + 6] ^= 1;
+        bad[20 + (4 + first_len + 8) + 6] ^= 1;
         assert!(replay(&path_of(&bad)).is_err());
         // Hostile record length.
         let mut bad = good[..20].to_vec();
@@ -307,6 +331,37 @@ mod tests {
         let p = tmp("scratch.journal");
         std::fs::write(&p, bytes).unwrap();
         p
+    }
+
+    #[test]
+    fn compact_records_shrink_and_legacy_records_still_replay() {
+        // New appends use the compact tag-2 framing.
+        let r = rec(1000);
+        assert!(r.encode().len() < r.encode_v1().len());
+        assert_eq!(TickRecord::decode(&r.encode()).unwrap(), r);
+        assert_eq!(TickRecord::decode(&r.encode_v1()).unwrap(), r);
+
+        // A journal holding both framings (a pre-compression run resumed
+        // by this build) replays every record.
+        let path = tmp("mixed.journal");
+        let mut j = Journal::create(&path, 3).unwrap();
+        j.append(&rec(0)).unwrap();
+        drop(j);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let legacy = rec(1).encode_v1();
+        bytes.extend_from_slice(&(legacy.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(&legacy);
+        bytes.extend_from_slice(&codec::fnv1a64(&legacy).to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let r = replay(&path).unwrap();
+        assert_eq!(r.records, vec![rec(0), rec(1)]);
+        assert_eq!(r.truncated_bytes, 0);
+
+        // Hostile varint tick (overflow) in a checksum-valid record is
+        // still a clean protocol error.
+        let mut payload = vec![2u8];
+        payload.extend_from_slice(&[0xff; 10]); // varint > 10 bytes
+        assert!(TickRecord::decode(&payload).is_err());
     }
 
     #[test]

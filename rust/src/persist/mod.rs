@@ -15,6 +15,13 @@
 //! * [`journal`] — an append-only per-tick record (tick index, model
 //!   digest, uplink counter) with per-record checksums and tolerance for
 //!   a crash-truncated tail; the audit trail resume tests diff.
+//! * [`curve`] — the compressed eval-curve file (`<ckpt>.curve`), the
+//!   bit-exactness artifact in durable form.
+//!
+//! The [`compress`] submodule is the compressed codec both of the above
+//! (and the wire protocol's batched frames) ride: gorilla-style
+//! XOR-delta float streams and zigzag-varint delta integer streams,
+//! bit-exact on IEEE-754 patterns and hardened like the raw codec.
 //!
 //! The crate-private `codec` submodule is the shared binary substrate
 //! (also used by the deployment wire protocol in `async_rt::wire`), so
@@ -30,9 +37,12 @@
 //! `docs/ARCHITECTURE.md` § "Persistence & recovery".
 
 pub(crate) mod codec;
+pub mod compress;
+pub mod curve;
 pub mod journal;
 pub mod snapshot;
 
+pub use curve::curve_path_for;
 pub use journal::{Journal, TickRecord};
 pub use snapshot::RunSnapshot;
 

@@ -23,6 +23,7 @@
 //! decodes to [`Error::Protocol`], never a panic.
 
 use super::codec::{self, Cur};
+use super::compress;
 use crate::error::{Error, Result};
 use crate::fl::delay::{DelayModel, DelayQueue};
 use crate::fl::engine::AlgoConfig;
@@ -35,8 +36,15 @@ use std::path::Path;
 /// Leading bytes of every snapshot file.
 pub const MAGIC: [u8; 8] = *b"PAOFSNAP";
 
-/// Current snapshot format version.
-pub const VERSION: u32 = 1;
+/// Current snapshot format version. v2 stores the large arrays — the
+/// `[K*D]` client-model block, the server model, the availability
+/// probabilities and the eval curve — in the compressed codec
+/// ([`compress`]); v1 stored everything raw. Writers emit v2; readers
+/// accept both, so pre-compression checkpoints still resume.
+pub const VERSION: u32 = 2;
+
+/// The legacy raw-array snapshot version (still readable).
+pub const VERSION_V1: u32 = 1;
 
 /// One checkpointed PRNG stream (`util::rng::Pcg32::to_parts`).
 #[derive(Clone, Debug, PartialEq)]
@@ -160,15 +168,31 @@ pub struct RunSnapshot {
 }
 
 impl RunSnapshot {
-    /// Encode the snapshot payload (no file header / checksum).
+    /// Encode the snapshot payload in the current (v2, compressed)
+    /// format (no file header / checksum).
     pub fn encode(&self) -> Vec<u8> {
+        self.encode_with(true)
+    }
+
+    /// Encode the snapshot payload in the legacy v1 raw-array format.
+    /// Kept as a writer so compatibility tests and benches can produce
+    /// genuine v1 bytes without an old binary.
+    pub fn encode_v1(&self) -> Vec<u8> {
+        self.encode_with(false)
+    }
+
+    fn encode_with(&self, compressed: bool) -> Vec<u8> {
         let mut buf = Vec::new();
         codec::put_usize(&mut buf, self.tick);
         codec::put_u64(&mut buf, self.env_seed);
         codec::put_usize(&mut buf, self.k);
         codec::put_usize(&mut buf, self.d);
         codec::put_usize(&mut buf, self.n_iters);
-        codec::put_f64s(&mut buf, &self.avail_probs);
+        if compressed {
+            compress::put_f64s(&mut buf, &self.avail_probs);
+        } else {
+            codec::put_f64s(&mut buf, &self.avail_probs);
+        }
         codec::put_usize(&mut buf, self.eval_every);
         codec::put_algo(&mut buf, &self.algo);
         codec::put_delay(&mut buf, &self.delay);
@@ -176,7 +200,11 @@ impl RunSnapshot {
         codec::put_usize(&mut buf, self.schedule.d);
         codec::put_usize(&mut buf, self.schedule.m);
         codec::put_u64(&mut buf, self.schedule.seed);
-        codec::put_f32s(&mut buf, &self.server.w);
+        if compressed {
+            compress::put_f32s(&mut buf, &self.server.w);
+        } else {
+            codec::put_f32s(&mut buf, &self.server.w);
+        }
         codec::put_u64(&mut buf, self.server.epoch);
         codec::put_usize(&mut buf, self.queue.horizon);
         codec::put_usize(&mut buf, self.queue.now);
@@ -186,7 +214,11 @@ impl RunSnapshot {
             codec::put_usize(&mut buf, *arrival);
             codec::put_update(&mut buf, update);
         }
-        codec::put_f32s(&mut buf, &self.client_w);
+        if compressed {
+            compress::put_f32s(&mut buf, &self.client_w);
+        } else {
+            codec::put_f32s(&mut buf, &self.client_w);
+        }
         codec::put_usize(&mut buf, self.rng.len());
         for s in &self.rng {
             codec::put_u64(&mut buf, s.state);
@@ -207,26 +239,41 @@ impl RunSnapshot {
         codec::put_usize(&mut buf, self.agg.discarded_stale);
         codec::put_usize(&mut buf, self.agg.conflicts_resolved);
         codec::put_usize(&mut buf, self.agg.touched_coords);
-        codec::put_usize(&mut buf, self.curve_iters.len());
-        for &it in &self.curve_iters {
-            codec::put_usize(&mut buf, it);
-        }
-        for &v in &self.curve_db {
-            codec::put_f64(&mut buf, v);
+        if compressed {
+            let iters_u64: Vec<u64> = self.curve_iters.iter().map(|&i| i as u64).collect();
+            compress::put_u64s_delta(&mut buf, &iters_u64);
+            compress::put_f64s(&mut buf, &self.curve_db);
+        } else {
+            codec::put_usize(&mut buf, self.curve_iters.len());
+            for &it in &self.curve_iters {
+                codec::put_usize(&mut buf, it);
+            }
+            for &v in &self.curve_db {
+                codec::put_f64(&mut buf, v);
+            }
         }
         codec::put_u64(&mut buf, self.local_steps);
         buf
     }
 
-    /// Decode one payload produced by [`RunSnapshot::encode`].
+    /// Decode one payload produced by [`RunSnapshot::encode`] (v2).
     pub fn decode(payload: &[u8]) -> Result<Self> {
+        Self::decode_with(payload, true)
+    }
+
+    /// Decode one legacy v1 payload ([`RunSnapshot::encode_v1`]).
+    pub fn decode_v1(payload: &[u8]) -> Result<Self> {
+        Self::decode_with(payload, false)
+    }
+
+    fn decode_with(payload: &[u8], compressed: bool) -> Result<Self> {
         let mut c = Cur::new(payload);
         let tick = c.usize()?;
         let env_seed = c.u64()?;
         let k = c.usize()?;
         let d = c.usize()?;
         let n_iters = c.usize()?;
-        let avail_probs = c.f64s()?;
+        let avail_probs = if compressed { compress::get_f64s(&mut c)? } else { c.f64s()? };
         let eval_every = c.usize()?;
         let algo = c.algo()?;
         let delay = c.delay()?;
@@ -236,7 +283,10 @@ impl RunSnapshot {
             m: c.usize()?,
             seed: c.u64()?,
         };
-        let server = ServerState { w: c.f32s()?, epoch: c.u64()? };
+        let server = ServerState {
+            w: if compressed { compress::get_f32s(&mut c)? } else { c.f32s()? },
+            epoch: c.u64()?,
+        };
         let horizon = c.usize()?;
         let now = c.usize()?;
         let clamped = c.u64()?;
@@ -266,7 +316,7 @@ impl RunSnapshot {
             entries.push((arrival, u));
         }
         let queue = QueueState { horizon, now, clamped, entries };
-        let client_w = c.f32s()?;
+        let client_w = if compressed { compress::get_f32s(&mut c)? } else { c.f32s()? };
         if k.checked_mul(d) != Some(client_w.len())
             || server.w.len() != d
             || avail_probs.len() != k
@@ -300,16 +350,30 @@ impl RunSnapshot {
             conflicts_resolved: c.usize()?,
             touched_coords: c.usize()?,
         };
-        // Each curve point carries an iteration and a dB sample.
-        let n_curve = c.len(16)?;
-        let mut curve_iters = Vec::with_capacity(n_curve);
-        for _ in 0..n_curve {
-            curve_iters.push(c.usize()?);
-        }
-        let mut curve_db = Vec::with_capacity(n_curve);
-        for _ in 0..n_curve {
-            curve_db.push(c.f64()?);
-        }
+        let (curve_iters, curve_db) = if compressed {
+            let iters_u64 = compress::get_u64s_delta(&mut c)?;
+            let db = compress::get_f64s(&mut c)?;
+            if iters_u64.len() != db.len() {
+                return Err(Error::Protocol(format!(
+                    "snapshot curve arrays disagree: {} iterations vs {} dB points",
+                    iters_u64.len(),
+                    db.len()
+                )));
+            }
+            (iters_u64.iter().map(|&i| i as usize).collect(), db)
+        } else {
+            // Each curve point carries an iteration and a dB sample.
+            let n_curve = c.len(16)?;
+            let mut iters = Vec::with_capacity(n_curve);
+            for _ in 0..n_curve {
+                iters.push(c.usize()?);
+            }
+            let mut db = Vec::with_capacity(n_curve);
+            for _ in 0..n_curve {
+                db.push(c.f64()?);
+            }
+            (iters, db)
+        };
         let local_steps = c.u64()?;
         if c.remaining() != 0 {
             return Err(Error::Protocol(format!(
@@ -416,9 +480,9 @@ pub fn from_bytes(bytes: &[u8]) -> Result<RunSnapshot> {
         return Err(Error::Protocol("not a pao-fed snapshot (bad magic)".into()));
     }
     let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
-    if version != VERSION {
+    if version != VERSION && version != VERSION_V1 {
         return Err(Error::Protocol(format!(
-            "unsupported snapshot version {version} (this build reads {VERSION})"
+            "unsupported snapshot version {version} (this build reads {VERSION_V1} and {VERSION})"
         )));
     }
     let len = u64::from_le_bytes(bytes[12..20].try_into().unwrap());
@@ -437,20 +501,34 @@ pub fn from_bytes(bytes: &[u8]) -> Result<RunSnapshot> {
             "snapshot checksum mismatch: file says {want:#018x}, payload hashes to {got:#018x}"
         )));
     }
-    RunSnapshot::decode(payload)
+    if version == VERSION_V1 {
+        RunSnapshot::decode_v1(payload)
+    } else {
+        RunSnapshot::decode(payload)
+    }
 }
 
-/// Serialize a snapshot to file bytes (header + payload + checksum).
-pub fn to_bytes(snap: &RunSnapshot) -> Vec<u8> {
-    let payload = snap.encode();
+fn frame(version: u32, payload: Vec<u8>) -> Vec<u8> {
     let mut out = Vec::with_capacity(20 + payload.len() + 8);
     out.extend_from_slice(&MAGIC);
-    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&version.to_le_bytes());
     out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
     let sum = codec::fnv1a64(&payload);
     out.extend_from_slice(&payload);
     out.extend_from_slice(&sum.to_le_bytes());
     out
+}
+
+/// Serialize a snapshot to file bytes (header + payload + checksum) in
+/// the current v2 compressed format.
+pub fn to_bytes(snap: &RunSnapshot) -> Vec<u8> {
+    frame(VERSION, snap.encode())
+}
+
+/// Serialize a snapshot as a legacy v1 file — the fixture producer for
+/// read-compat tests and the "before" size in the compression bench.
+pub fn to_bytes_v1(snap: &RunSnapshot) -> Vec<u8> {
+    frame(VERSION_V1, snap.encode_v1())
 }
 
 /// Write a snapshot atomically: the bytes land in a sibling `*.tmp` file,
@@ -583,6 +661,40 @@ mod tests {
         assert_eq!(snap, dec);
         // Bit-exact floats, signed zeros included.
         assert_eq!(dec.server.w[1].to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn legacy_v1_files_still_read() {
+        let snap = sample_snapshot();
+        // Payload-level v1 roundtrip.
+        assert_eq!(RunSnapshot::decode_v1(&snap.encode_v1()).unwrap(), snap);
+        // File-level: a v1-framed file decodes through the same entry
+        // point as v2 — pre-compression checkpoints still resume.
+        let v1 = to_bytes_v1(&snap);
+        assert_eq!(u32::from_le_bytes(v1[8..12].try_into().unwrap()), VERSION_V1);
+        assert_eq!(from_bytes(&v1).unwrap(), snap);
+        let v2 = to_bytes(&snap);
+        assert_eq!(u32::from_le_bytes(v2[8..12].try_into().unwrap()), VERSION);
+        assert_eq!(from_bytes(&v2).unwrap(), snap);
+        // A v1 payload does not accidentally parse as v2 or vice versa:
+        // mixing framings must fail cleanly, not mis-decode.
+        assert!(RunSnapshot::decode(&snap.encode_v1()).is_err());
+    }
+
+    #[test]
+    fn v2_is_no_larger_than_v1_at_model_scale() {
+        // A smooth [K*D] model block is exactly the shape the XOR codec
+        // targets; at any nontrivial scale v2 must win.
+        let mut snap = sample_snapshot();
+        snap.k = 32;
+        snap.d = 64;
+        snap.client_w = (0..32 * 64).map(|i| (i as f32 * 0.01).sin()).collect();
+        snap.server.w = (0..64).map(|i| (i as f32 * 0.1).cos()).collect();
+        snap.queue.entries.clear();
+        snap.avail_probs = vec![0.25; 32];
+        let v1 = to_bytes_v1(&snap).len();
+        let v2 = to_bytes(&snap).len();
+        assert!(v2 < v1, "v2 snapshot ({v2} B) not smaller than v1 ({v1} B)");
     }
 
     #[test]

@@ -56,6 +56,7 @@ fn deployment_matches_discrete_engine() {
                 eval_every: 25,
                 persist: None,
                 run_until: None,
+                wire: Default::default(),
             },
         )
         .unwrap();
@@ -89,6 +90,7 @@ fn deployment_survives_zero_participation() {
             eval_every: 50,
             persist: None,
             run_until: None,
+            wire: Default::default(),
         },
     )
     .unwrap();

@@ -1,0 +1,577 @@
+//! Integration: the compressed codec's bit-exactness and hardening
+//! contracts, pinned by a deterministic property-test harness.
+//!
+//! * Every compressed stream kind (gorilla XOR f32/f64, delta-varint
+//!   index and counter sequences) must round-trip **bit-exactly** over
+//!   adversarially chosen value classes — correlated walks, signed
+//!   zeros, subnormals, NaN payloads, infinities, `f32::MAX`/`MIN`,
+//!   constant runs, full-entropy bit patterns — at dimensions spanning
+//!   the bit-packing boundaries (`D ∈ {0, 1, 7, 8, 9, 200, 201}`).
+//! * Every byte surface that carries compressed data (wire batch
+//!   frames, snapshot v2, journal, curve file) must map arbitrary
+//!   mutation — bit flips, truncation, hostile length fields — to a
+//!   clean `Error::Protocol` (or, where the format tolerates a
+//!   crash-truncated tail, a strictly-smaller replay), never a panic
+//!   or an unbounded allocation.
+//!
+//! The harness is seeded (`Pcg32`), so every failure reproduces; case
+//! count scales with `PAO_FED_PROP_CASES` (default 200, CI soaks at
+//! 10000).
+
+use pao_fed::async_rt::wire::{self, WireMsg};
+use pao_fed::error::Error;
+use pao_fed::fl::algorithms::{self, Variant};
+use pao_fed::fl::delay::DelayModel;
+use pao_fed::fl::selection::{Coords, SelectionSchedule};
+use pao_fed::fl::server::{AggregateInfo, Update};
+use pao_fed::metrics::CommStats;
+use pao_fed::persist::compress;
+use pao_fed::persist::curve;
+use pao_fed::persist::journal::{self, TickRecord};
+use pao_fed::persist::snapshot::{self, QueueState, RunSnapshot, ServerState};
+use pao_fed::util::rng::Pcg32;
+use std::path::PathBuf;
+
+/// Dimensions crossing the interesting packing boundaries: empty,
+/// singleton, either side of a byte boundary, and two "model-sized"
+/// lengths straddling an 8-multiple.
+const DIMS: &[usize] = &[0, 1, 7, 8, 9, 200, 201];
+
+fn prop_cases() -> usize {
+    std::env::var("PAO_FED_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200)
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("pao_fed_compress_tests").join(name);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+// ------------------------------------------------------------ generators
+
+/// Special f32 values a lossless float codec must not normalize away:
+/// both zero signs, subnormals, NaNs with distinct payloads, infinities
+/// and the finite extremes.
+const SPECIAL_F32: &[u32] = &[
+    0x0000_0000, // +0.0
+    0x8000_0000, // -0.0
+    0x0000_0001, // smallest subnormal
+    0x8000_0001, // smallest negative subnormal
+    0x007f_ffff, // largest subnormal
+    0x7f80_0000, // +inf
+    0xff80_0000, // -inf
+    0x7fc0_0000, // quiet NaN
+    0x7fc0_0001, // NaN, payload 1
+    0xffc0_dead, // negative NaN, distinct payload
+    0x7f7f_ffff, // f32::MAX
+    0xff7f_ffff, // f32::MIN
+    0x3f80_0000, // 1.0
+];
+
+const SPECIAL_F64: &[u64] = &[
+    0x0000_0000_0000_0000, // +0.0
+    0x8000_0000_0000_0000, // -0.0
+    0x0000_0000_0000_0001, // smallest subnormal
+    0x7ff0_0000_0000_0000, // +inf
+    0xfff0_0000_0000_0000, // -inf
+    0x7ff8_0000_0000_0000, // quiet NaN
+    0x7ff8_0000_0000_beef, // NaN with payload
+    0x7fef_ffff_ffff_ffff, // f64::MAX
+    0xffef_ffff_ffff_ffff, // f64::MIN
+];
+
+/// One of five value classes, chosen per case: the codec must be exact
+/// on all of them, fast only on the correlated ones.
+fn gen_f32s(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+    match rng.below(5) {
+        // Correlated random walk — the model-sync shape gorilla targets.
+        0 => {
+            let mut v = rng.uniform_in(-2.0, 2.0) as f32;
+            (0..n)
+                .map(|_| {
+                    v += rng.uniform_in(-1e-3, 1e-3) as f32;
+                    v
+                })
+                .collect()
+        }
+        // Constant run (best case: one control bit per repeat).
+        1 => {
+            let v = f32::from_bits(SPECIAL_F32[rng.below(SPECIAL_F32.len())]);
+            vec![v; n]
+        }
+        // Specials sprinkled into a walk.
+        2 => (0..n)
+            .map(|i| {
+                if rng.bernoulli(0.3) {
+                    f32::from_bits(SPECIAL_F32[rng.below(SPECIAL_F32.len())])
+                } else {
+                    i as f32 * 0.25
+                }
+            })
+            .collect(),
+        // Full-entropy bit patterns (worst case: ~37 bits/value).
+        3 => (0..n).map(|_| f32::from_bits(rng.next_u32())).collect(),
+        // Alternating signed zeros (sign-bit-only XORs).
+        _ => (0..n)
+            .map(|i| if i % 2 == 0 { 0.0f32 } else { -0.0f32 })
+            .collect(),
+    }
+}
+
+fn gen_f64s(rng: &mut Pcg32, n: usize) -> Vec<f64> {
+    match rng.below(4) {
+        0 => {
+            // A decaying dB curve — the eval-curve shape.
+            let mut v = rng.uniform_in(-1.0, 1.0);
+            (0..n)
+                .map(|_| {
+                    v -= rng.uniform_in(0.0, 0.05);
+                    v
+                })
+                .collect()
+        }
+        1 => {
+            let v = f64::from_bits(SPECIAL_F64[rng.below(SPECIAL_F64.len())]);
+            vec![v; n]
+        }
+        2 => (0..n)
+            .map(|_| {
+                if rng.bernoulli(0.25) {
+                    f64::from_bits(SPECIAL_F64[rng.below(SPECIAL_F64.len())])
+                } else {
+                    rng.gaussian()
+                }
+            })
+            .collect(),
+        _ => (0..n).map(|_| f64::from_bits(rng.next_u64())).collect(),
+    }
+}
+
+fn gen_indices(rng: &mut Pcg32, n: usize) -> Vec<u32> {
+    match rng.below(3) {
+        // Sorted strided — the partial-sharing schedule shape.
+        0 => {
+            let start = rng.below(1000) as u32;
+            let stride = 1 + rng.below(7) as u32;
+            (0..n as u32).map(|i| start + i * stride).collect()
+        }
+        // Arbitrary order, full u32 range (zigzag must cover negatives).
+        1 => (0..n).map(|_| rng.next_u32()).collect(),
+        // Boundary values.
+        _ => (0..n)
+            .map(|i| if i % 2 == 0 { 0 } else { u32::MAX })
+            .collect(),
+    }
+}
+
+fn gen_u64s(rng: &mut Pcg32, n: usize) -> Vec<u64> {
+    match rng.below(3) {
+        // Monotone counter with small steps (the curve-iters shape).
+        0 => {
+            let mut v = rng.next_u32() as u64;
+            (0..n)
+                .map(|_| {
+                    v += rng.below(100) as u64;
+                    v
+                })
+                .collect()
+        }
+        // Full-entropy (wrapping deltas must still round-trip).
+        1 => (0..n).map(|_| rng.next_u64()).collect(),
+        // Extremes.
+        _ => (0..n)
+            .map(|i| if i % 2 == 0 { 0 } else { u64::MAX })
+            .collect(),
+    }
+}
+
+// ---------------------------------------------------------- round-trips
+
+#[test]
+fn f32_streams_roundtrip_bit_exact_over_generator_classes() {
+    let mut rng = Pcg32::new(0xf32f_32f3, 1);
+    for case in 0..prop_cases() {
+        let n = DIMS[case % DIMS.len()];
+        let vals = gen_f32s(&mut rng, n);
+        let enc = compress::encode_f32s(&vals);
+        let dec = compress::decode_f32s(&enc)
+            .unwrap_or_else(|e| panic!("case {case}: decode failed: {e}"));
+        assert_eq!(dec.len(), vals.len(), "case {case}: length drift");
+        for (i, (a, b)) in vals.iter().zip(&dec).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "case {case}: f32 bit pattern drift at {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn f64_streams_roundtrip_bit_exact_over_generator_classes() {
+    let mut rng = Pcg32::new(0xf64f_64f6, 2);
+    for case in 0..prop_cases() {
+        let n = DIMS[case % DIMS.len()];
+        let vals = gen_f64s(&mut rng, n);
+        let enc = compress::encode_f64s(&vals);
+        let dec = compress::decode_f64s(&enc)
+            .unwrap_or_else(|e| panic!("case {case}: decode failed: {e}"));
+        assert_eq!(dec.len(), vals.len(), "case {case}: length drift");
+        for (i, (a, b)) in vals.iter().zip(&dec).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "case {case}: f64 bit pattern drift at {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn index_and_counter_streams_roundtrip_exactly() {
+    let mut rng = Pcg32::new(0x1d5_1d51, 3);
+    for case in 0..prop_cases() {
+        let n = DIMS[case % DIMS.len()];
+        let idx = gen_indices(&mut rng, n);
+        assert_eq!(
+            compress::decode_indices(&compress::encode_indices(&idx)).unwrap(),
+            idx,
+            "case {case}: index drift"
+        );
+        let vals = gen_u64s(&mut rng, n);
+        assert_eq!(
+            compress::decode_u64s_delta(&compress::encode_u64s_delta(&vals)).unwrap(),
+            vals,
+            "case {case}: u64 delta drift"
+        );
+    }
+}
+
+/// The compressed codec pays for itself on the streams it was built for:
+/// a correlated model-sync walk must shrink well below the raw encoding.
+#[test]
+fn correlated_walks_actually_compress() {
+    let mut rng = Pcg32::new(77, 4);
+    let mut v = 1.0f32;
+    let vals: Vec<f32> = (0..4096)
+        .map(|_| {
+            v += rng.uniform_in(-1e-4, 1e-4) as f32;
+            v
+        })
+        .collect();
+    let enc = compress::encode_f32s(&vals);
+    assert!(
+        enc.len() * 2 < vals.len() * 4,
+        "4096-value walk compressed to {} bytes (raw {})",
+        enc.len(),
+        vals.len() * 4
+    );
+}
+
+// ------------------------------------------------------------- hardening
+
+/// Mutated compressed blocks must never panic or allocate unboundedly.
+/// (Bare blocks carry no checksum — the framed surfaces add one — so a
+/// flip may decode to *different values*; the contract here is clean
+/// control flow, with `Protocol` on every malformed rejection.)
+#[test]
+fn mutated_blocks_never_panic() {
+    let mut rng = Pcg32::new(0xbadc_0de, 5);
+    for case in 0..prop_cases().min(60) {
+        let n = DIMS[case % DIMS.len()].min(16);
+        let blocks = [
+            compress::encode_f32s(&gen_f32s(&mut rng, n)),
+            compress::encode_f64s(&gen_f64s(&mut rng, n)),
+            compress::encode_indices(&gen_indices(&mut rng, n)),
+            compress::encode_u64s_delta(&gen_u64s(&mut rng, n)),
+        ];
+        for (bi, block) in blocks.iter().enumerate() {
+            for bit in 0..block.len() * 8 {
+                let mut bad = block.clone();
+                bad[bit / 8] ^= 1 << (bit % 8);
+                let _ = compress::decode_f32s(&bad);
+                let _ = compress::decode_f64s(&bad);
+                let _ = compress::decode_indices(&bad);
+                let _ = compress::decode_u64s_delta(&bad);
+            }
+            // `bi` names the block kind in a failure backtrace only.
+            let _ = bi;
+            for cut in 0..block.len() {
+                let _ = compress::decode_f32s(&block[..cut]);
+                let _ = compress::decode_f64s(&block[..cut]);
+                let _ = compress::decode_indices(&block[..cut]);
+                let _ = compress::decode_u64s_delta(&block[..cut]);
+            }
+        }
+    }
+}
+
+/// Hostile length fields must be rejected *before* allocation: a count
+/// of 2^50 in a 3-byte buffer errors immediately instead of reserving
+/// petabytes.
+#[test]
+fn hostile_length_fields_error_without_allocating() {
+    // varint(2^50) | varint(0): huge count, empty stream.
+    let mut huge_count = Vec::new();
+    let mut v = 1u64 << 50;
+    while v >= 0x80 {
+        huge_count.push((v as u8 & 0x7f) | 0x80);
+        v >>= 7;
+    }
+    huge_count.push(v as u8);
+    huge_count.push(0);
+    for res in [
+        compress::decode_f32s(&huge_count).err(),
+        compress::decode_f64s(&huge_count).err(),
+        compress::decode_indices(&huge_count).err(),
+        compress::decode_u64s_delta(&huge_count).err(),
+    ] {
+        match res {
+            Some(Error::Protocol(_)) => {}
+            other => panic!("hostile count must be Protocol, got {other:?}"),
+        }
+    }
+    // A 10-byte varint whose final byte overflows 64 bits.
+    let overflow = vec![0xffu8; 10];
+    assert!(matches!(
+        compress::decode_indices(&overflow),
+        Err(Error::Protocol(_))
+    ));
+}
+
+/// Random batch messages for the wire sweep.
+fn gen_batch(rng: &mut Pcg32, d: usize) -> WireMsg {
+    let k = 1 + rng.below(6);
+    if rng.bernoulli(0.5) {
+        let ticks = (0..k)
+            .map(|c| {
+                let portion = rng.bernoulli(0.7).then(|| {
+                    let coords = gen_coords(rng, d);
+                    let values = gen_f32s(rng, coords.len());
+                    (coords, values)
+                });
+                (c, portion)
+            })
+            .collect();
+        WireMsg::TickBatch { iter: rng.below(1000), ticks }
+    } else {
+        let acks = (0..k)
+            .map(|c| {
+                let upload = rng.bernoulli(0.6).then(|| {
+                    let coords = gen_coords(rng, d);
+                    let values = gen_f32s(rng, coords.len());
+                    Update { client: c, sent_iter: rng.below(1000), coords, values }
+                });
+                (c, upload, rng.below(2) as u32)
+            })
+            .collect();
+        WireMsg::AckBatch { acks }
+    }
+}
+
+fn gen_coords(rng: &mut Pcg32, d: usize) -> Coords {
+    match rng.below(3) {
+        0 => {
+            let len = 1 + rng.below(d.max(1));
+            Coords::Range { start: rng.below(d.max(1)), len, d }
+        }
+        1 => {
+            let m = 1 + rng.below(d.max(1));
+            let mut idx: Vec<u32> = (0..d as u32).collect();
+            rng.shuffle(&mut idx);
+            idx.truncate(m);
+            idx.sort_unstable();
+            Coords::List { idx, d }
+        }
+        _ => Coords::Full { d },
+    }
+}
+
+/// Compressed wire frames: random batches round-trip to the *same*
+/// `WireMsg`, and every single-bit flip / truncation of the frame is a
+/// clean `Protocol` error (the trailing checksum is verified before any
+/// parsing).
+#[test]
+fn compressed_wire_frames_roundtrip_and_reject_mutation() {
+    let mut rng = Pcg32::new(0x77ee, 6);
+    let cases = prop_cases();
+    for case in 0..cases {
+        let d = [1, 8, 33][case % 3];
+        let msg = gen_batch(&mut rng, d);
+        let frame = wire::encode_compressed(&msg);
+        let back = wire::decode(&frame)
+            .unwrap_or_else(|e| panic!("case {case}: compressed decode failed: {e}"));
+        assert_eq!(back, msg, "case {case}: compressed frame drift");
+        // The mutation sweep is quadratic in frame size; keep it to a
+        // subset of cases so the default run stays fast.
+        if case >= 8 {
+            continue;
+        }
+        for bit in 0..frame.len() * 8 {
+            let mut bad = frame.clone();
+            bad[bit / 8] ^= 1 << (bit % 8);
+            match wire::decode(&bad) {
+                Err(Error::Protocol(_)) => {}
+                Err(other) => panic!("case {case} bit {bit}: non-Protocol error {other}"),
+                Ok(m) => {
+                    // A tag-byte flip can land on a *raw* frame tag whose
+                    // body happens to parse; compressed tags themselves
+                    // are checksummed, so a surviving decode must not be
+                    // a batch message.
+                    assert!(
+                        !matches!(m, WireMsg::TickBatch { .. } | WireMsg::AckBatch { .. }),
+                        "case {case} bit {bit}: corrupted frame decoded as a batch"
+                    );
+                }
+            }
+        }
+        for cut in 0..frame.len() {
+            assert!(
+                wire::decode(&frame[..cut]).is_err(),
+                "case {case}: truncation to {cut} bytes must fail"
+            );
+        }
+    }
+}
+
+/// A small but fully-populated snapshot for the framed-surface sweeps.
+fn sample_snapshot(rng: &mut Pcg32) -> RunSnapshot {
+    let algo = algorithms::build(Variant::PaoFedU2, 0.4, 4, 10, 25);
+    let (k, d) = (3usize, 8usize);
+    RunSnapshot {
+        tick: 60,
+        env_seed: 17,
+        k,
+        d,
+        n_iters: 200,
+        avail_probs: vec![0.25, 0.1, 0.05],
+        eval_every: 25,
+        delay: DelayModel::Geometric { delta: 0.3 },
+        schedule: SelectionSchedule::new(algo.schedule, d, algo.m, 17),
+        algo,
+        server: ServerState { w: gen_f32s(rng, d), epoch: 60 },
+        queue: QueueState {
+            horizon: 200,
+            now: 59,
+            clamped: 0,
+            entries: vec![(
+                61,
+                Update {
+                    client: 1,
+                    sent_iter: 58,
+                    coords: Coords::Range { start: 6, len: 4, d },
+                    values: gen_f32s(rng, 4),
+                },
+            )],
+        },
+        client_w: gen_f32s(rng, k * d),
+        rng: Vec::new(),
+        comm: CommStats {
+            downlink_scalars: 400,
+            uplink_scalars: 380,
+            downlink_msgs: 100,
+            uplink_msgs: 95,
+        },
+        agg: AggregateInfo {
+            applied: 90,
+            discarded_stale: 5,
+            conflicts_resolved: 12,
+            touched_coords: 300,
+        },
+        curve_iters: (0..12).map(|i| i * 25).collect(),
+        curve_db: gen_f64s(rng, 12),
+        local_steps: 4096,
+    }
+}
+
+/// Snapshot v2 files: randomized round-trips, and a full single-bit-flip
+/// sweep that must always surface as `Protocol` (magic, version, length,
+/// payload and checksum are each load-bearing).
+#[test]
+fn snapshot_v2_roundtrips_and_rejects_every_bit_flip() {
+    let mut rng = Pcg32::new(0x5a45, 7);
+    for case in 0..prop_cases().min(40) {
+        let snap = sample_snapshot(&mut rng);
+        let bytes = snapshot::to_bytes(&snap);
+        let back = snapshot::from_bytes(&bytes)
+            .unwrap_or_else(|e| panic!("case {case}: v2 decode failed: {e}"));
+        assert_eq!(back, snap, "case {case}: snapshot drift");
+        if case > 0 {
+            continue; // one full sweep is enough; round-trips stay cheap
+        }
+        for bit in 0..bytes.len() * 8 {
+            let mut bad = bytes.clone();
+            bad[bit / 8] ^= 1 << (bit % 8);
+            match snapshot::from_bytes(&bad) {
+                Err(Error::Protocol(_)) => {}
+                other => panic!("bit {bit}: flip must be Protocol, got {other:?}"),
+            }
+        }
+        for cut in 0..bytes.len() {
+            assert!(snapshot::from_bytes(&bytes[..cut]).is_err());
+        }
+    }
+}
+
+/// Curve files: randomized round-trips through the public file API.
+#[test]
+fn curve_files_roundtrip_randomized() {
+    let mut rng = Pcg32::new(0xc04e, 8);
+    let dir = tmp_dir("curve_prop");
+    for case in 0..prop_cases().min(50) {
+        let n = DIMS[case % DIMS.len()];
+        let iters: Vec<usize> = (0..n).map(|i| i * (1 + rng.below(50))).collect();
+        let db = gen_f64s(&mut rng, n);
+        let path = dir.join(format!("case_{case}.curve"));
+        curve::write_file(&path, &iters, &db).unwrap();
+        let (ri, rd) = curve::read_file(&path).unwrap();
+        assert_eq!(ri, iters, "case {case}: iters drift");
+        assert_eq!(rd.len(), db.len());
+        for (a, b) in db.iter().zip(&rd) {
+            assert_eq!(a.to_bits(), b.to_bits(), "case {case}: dB drift");
+        }
+    }
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// Journal files with compact records: every single-bit flip of a
+/// multi-record journal either errors cleanly or replays a *smaller*
+/// journal (the format tolerates a crash-truncated tail) — never a
+/// panic, never extra records.
+#[test]
+fn journal_bit_flips_never_panic_or_invent_records() {
+    let dir = tmp_dir("journal_flips");
+    let path = dir.join("run.journal");
+    {
+        let mut j = journal::Journal::create(&path, 0xfee1).unwrap();
+        for t in 0..4usize {
+            j.append(&TickRecord {
+                tick: t,
+                w_hash: 0x1234_5678_9abc_def0 ^ t as u64,
+                uplink_msgs: 10 * t as u64,
+            })
+            .unwrap();
+        }
+    }
+    let good = std::fs::read(&path).unwrap();
+    let n_good = journal::replay(&path).unwrap().records.len();
+    assert_eq!(n_good, 4);
+    for bit in 0..good.len() * 8 {
+        let mut bad = good.clone();
+        bad[bit / 8] ^= 1 << (bit % 8);
+        let bad_path = dir.join("bad.journal");
+        std::fs::write(&bad_path, &bad).unwrap();
+        match journal::replay(&bad_path) {
+            Err(Error::Protocol(_)) => {}
+            Err(e) => panic!("bit {bit}: non-Protocol error {e}"),
+            Ok(r) => assert!(
+                r.records.len() <= n_good,
+                "bit {bit}: flip invented records"
+            ),
+        }
+    }
+    let _ = std::fs::remove_dir_all(dir);
+}

@@ -10,8 +10,13 @@
 //! fresh process that reconnects, replays its shard from the supervisor's
 //! model log, and finishes the run — with the final curve still
 //! bit-identical to an undisturbed run.
+//!
+//! Also: the wire codec negotiation. A mixed fleet (one worker on
+//! compressed batch frames, one declining them via `--legacy-wire`)
+//! must stay bit-identical to the in-process run, and a worker with the
+//! wrong `--secret` must be rejected as a clean protocol error.
 
-use pao_fed::async_rt::{run_deployment, run_deployment_tcp, DeploymentConfig};
+use pao_fed::async_rt::{run_deployment, run_deployment_tcp, DeploymentConfig, WireConfig};
 use pao_fed::data::stream::{FedStream, StreamConfig};
 use pao_fed::data::synthetic::Eq39Source;
 use pao_fed::fl::algorithms::{self, Variant};
@@ -39,10 +44,16 @@ fn build_env(seed: u64, k: usize, n: usize) -> (StreamConfig, RffSpace, Particip
 }
 
 fn spawn_workers(addr: &str, count: usize) -> Vec<Child> {
+    spawn_workers_with(addr, count, &[])
+}
+
+/// Spawn workers with extra CLI flags (`--secret`, `--legacy-wire`, …).
+fn spawn_workers_with(addr: &str, count: usize, extra: &[&str]) -> Vec<Child> {
     (0..count)
         .map(|i| {
             Command::new(env!("CARGO_BIN_EXE_pao-fed"))
                 .args(["deploy", "--connect", addr])
+                .args(extra)
                 .stdout(Stdio::null())
                 .stderr(Stdio::inherit())
                 .spawn()
@@ -80,6 +91,7 @@ fn killed_worker_is_replaced_and_curve_stays_bit_identical() {
         eval_every: 20,
         persist: None,
         run_until: None,
+        wire: Default::default(),
     };
 
     // Baseline: in-process deployment (the bitwise reference).
@@ -145,6 +157,7 @@ fn tcp_loopback_matches_in_process_deployment_bitwise() {
             eval_every: 25,
             persist: None,
             run_until: None,
+            wire: Default::default(),
         };
 
         // In-process thread-per-client deployment.
@@ -211,6 +224,7 @@ fn tcp_fleet_checkpoint_resume_is_bit_identical() {
         eval_every: 30,
         persist,
         run_until,
+        wire: Default::default(),
     };
     let make_stream = || FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
 
@@ -264,6 +278,104 @@ fn tcp_fleet_checkpoint_resume_is_bit_identical() {
     assert_eq!(full.local_steps, resumed.local_steps);
 }
 
+/// The compressed wire codec is an *encoding* choice, not a protocol
+/// change: a fleet where one worker negotiates compressed batch frames
+/// and the other declines them (`--legacy-wire`, standing in for a
+/// pre-codec binary) must reproduce the in-process deployment — and
+/// therefore the all-raw fleet — bit for bit, under an authenticated
+/// handshake on every link.
+#[test]
+fn compressed_mixed_fleet_matches_in_process_bitwise() {
+    let seed = 53;
+    let secret = "mixed-fleet-secret";
+    let (cfg, rff, part, delay) = build_env(seed, 10, 160);
+    let algo = algorithms::build(Variant::PaoFedC2, 0.4, 4, 10, 20);
+    let dcfg = |wire| DeploymentConfig {
+        algo: algo.clone(),
+        tick: Duration::ZERO,
+        env_seed: seed,
+        eval_every: 20,
+        persist: None,
+        run_until: None,
+        wire,
+    };
+
+    // In-process reference (no wire at all).
+    let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+    let inproc =
+        run_deployment(stream, rff.clone(), part.clone(), delay, dcfg(Default::default()))
+            .unwrap();
+
+    // Mixed fleet: the server offers compression to both; worker 0
+    // accepts, worker 1 declines. Both prove the shared secret.
+    let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let mut children = spawn_workers_with(&addr, 1, &["--secret", secret]);
+    children.extend(spawn_workers_with(&addr, 1, &["--secret", secret, "--legacy-wire"]));
+    let tcp = run_deployment_tcp(
+        stream,
+        rff.clone(),
+        part.clone(),
+        delay,
+        dcfg(WireConfig { compress: true, secret: secret.into() }),
+        &listener,
+        2,
+    )
+    .unwrap();
+    for mut c in children {
+        let status = c.wait().unwrap();
+        assert!(status.success(), "mixed-fleet worker exited with {status}");
+    }
+
+    assert_eq!(inproc.iters, tcp.iters);
+    assert_eq!(inproc.mse_db, tcp.mse_db, "mixed-fleet curve diverges");
+    assert_eq!(inproc.final_w, tcp.final_w, "mixed-fleet model diverges");
+    assert_eq!(inproc.comm, tcp.comm, "mixed-fleet traffic counters diverge");
+    assert_eq!(inproc.agg, tcp.agg);
+    assert_eq!(inproc.local_steps, tcp.local_steps);
+}
+
+/// A worker dialing in with the wrong shared secret must be rejected as
+/// a clean protocol error on the server (no panic, no hang: the worker
+/// sends a courtesy ack carrying its — necessarily wrong — proof before
+/// erroring out, so the server observes a proof mismatch rather than an
+/// EOF), and the worker process itself must exit nonzero.
+#[test]
+fn wrong_secret_worker_is_rejected_cleanly() {
+    let seed = 7;
+    let (cfg, rff, part, delay) = build_env(seed, 8, 120);
+    let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let mut children = spawn_workers_with(&addr, 1, &["--secret", "the-wrong-one"]);
+    let res = run_deployment_tcp(
+        stream,
+        rff,
+        part,
+        delay,
+        DeploymentConfig {
+            algo: algorithms::build(Variant::PaoFedU2, 0.4, 4, 10, 30),
+            tick: Duration::ZERO,
+            env_seed: seed,
+            eval_every: 30,
+            persist: None,
+            run_until: None,
+            wire: WireConfig { compress: false, secret: "the-right-one".into() },
+        },
+        &listener,
+        1,
+    );
+    let err = res.expect_err("wrong-secret handshake must fail the serve");
+    let msg = err.to_string();
+    assert!(
+        msg.contains("authentication"),
+        "error should name the auth failure, got: {msg}"
+    );
+    let status = children.remove(0).wait().unwrap();
+    assert!(!status.success(), "wrong-secret worker must exit nonzero");
+}
+
 #[test]
 fn tcp_deployment_survives_zero_participation() {
     let seed = 5;
@@ -284,6 +396,7 @@ fn tcp_deployment_survives_zero_participation() {
             eval_every: 40,
             persist: None,
             run_until: None,
+            wire: Default::default(),
         },
         &listener,
         2,

@@ -164,6 +164,7 @@ fn deployment_stop_and_resume_is_bit_identical() {
         eval_every: 25,
         persist,
         run_until,
+        wire: Default::default(),
     };
 
     // Uninterrupted references: bare, and journaled-with-periodic
