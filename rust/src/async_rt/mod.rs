@@ -39,12 +39,17 @@
 //! on the CLI) with bit-identical continuation.
 //!
 //! Real-host deployments can additionally turn on the compressed batch
-//! frames and the keyed handshake ([`wire::WireConfig`], `deploy
+//! frames and the authenticated handshake ([`wire::WireConfig`], `deploy
 //! --compress / --secret` on the CLI): compression is negotiated per
-//! worker link in the Hello/HelloAck exchange (legacy binaries keep
-//! speaking raw frames on the same fleet), and a non-empty shared secret
-//! makes both ends prove knowledge of it over a per-connection challenge
-//! before any state is exchanged.
+//! worker link in the Hello/HelloAck exchange (a worker that declines it
+//! keeps speaking raw frames on the same fleet), and a non-empty shared
+//! secret makes both ends prove knowledge of it — truncated HMAC-SHA256
+//! over a per-connection challenge — before any state is exchanged.
+//! Interop with genuinely pre-codec binaries is asymmetric: current
+//! decoders accept the old handshake layout automatically, but a current
+//! server must opt in with `--legacy-hello` to *emit* it (old decoders
+//! reject the appended fields as trailing bytes); workers mirror the
+//! layout of the `Hello` they received. See [`wire`]'s module docs.
 
 mod protocol;
 pub mod transport;

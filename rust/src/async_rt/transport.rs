@@ -358,24 +358,52 @@ struct WorkerLink {
 /// multi-hour fleet holds at most this many per-tick model copies.
 const LOG_SELF_ANCHOR: usize = 1024;
 
+/// Per-process entropy for the handshake tokens: the OS-seeded keys of a
+/// [`std::collections::hash_map::RandomState`] (fresh per instance) mixed
+/// with the wall clock. Sampled once, so tokens within a process stay
+/// cheap and ordered by the counter; nothing in the determinism contract
+/// reads these values (they only bind the handshake), so the randomness
+/// cannot perturb a run's results.
+fn process_entropy() -> u64 {
+    use std::hash::{BuildHasher, Hasher};
+    static ENTROPY: std::sync::OnceLock<u64> = std::sync::OnceLock::new();
+    *ENTROPY.get_or_init(|| {
+        let mut h = std::collections::hash_map::RandomState::new().build_hasher();
+        let t = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap_or_default();
+        h.write_u128(t.as_nanos());
+        splitmix64(h.finish())
+    })
+}
+
 /// A process-unique session token stamped into every handshake: the
 /// server rejects a `HelloAck` that does not echo it (a peer that never
 /// parsed *this* run's `Hello` — a stale worker, a foreign client, a
 /// half-open connection), and log lines can attribute connections to
 /// runs. Note the worker simply echoes what it was handed — the token
 /// authenticates the handshake exchange, not the worker's intent.
+///
+/// Real entropy is mixed in so a restarted server never reissues a past
+/// run's sessions (the counter alone restarts at 1): challenges derive
+/// from the session, so this is also what makes a captured `HelloAck`
+/// proof worthless against any later server process.
 fn session_token(env_seed: u64) -> u64 {
     static COUNTER: AtomicU64 = AtomicU64::new(1);
     let n = COUNTER.fetch_add(1, Ordering::Relaxed);
-    splitmix64(env_seed ^ (n << 32) ^ 0x5e55_10ae)
+    splitmix64(splitmix64(env_seed ^ (n << 32) ^ 0x5e55_10ae) ^ process_entropy())
 }
 
 /// Per-connection authentication challenge. The generation index makes a
 /// replacement connection's challenge differ from the one its predecessor
 /// answered, so a captured `HelloAck` cannot be replayed at the
-/// supervisor's recovery accept.
+/// supervisor's recovery accept; the session it derives from carries the
+/// per-process entropy that keeps challenges fresh across restarts.
+/// Never returns 0 — a zero challenge is the wire-level marker of a
+/// legacy `Hello` ([`wire::hello_is_legacy`]).
 fn challenge_token(session: u64, worker: usize, gen: u64) -> u64 {
-    splitmix64(session ^ ((worker as u64) << 1) ^ (gen << 40) ^ 0xc4a1_1e4e)
+    let t = splitmix64(session ^ ((worker as u64) << 1) ^ (gen << 40) ^ 0xc4a1_1e4e);
+    if t == 0 { 0x9e37_79b9_7f4a_7c15 } else { t }
 }
 
 /// Assemble the handshake payload for the worker hosting `lo..hi`.
@@ -471,10 +499,12 @@ impl<'e> TcpFleet<'e> {
     /// listener stays retained for supervisor recovery accepts.
     ///
     /// `wire_cfg` governs the handshake extensions: when its secret is
-    /// non-empty every `HelloAck` must carry a valid keyed proof of the
-    /// challenge (a wrong-secret peer is a clean [`Error::Protocol`]),
-    /// and when compression is offered each link uses it only if that
-    /// worker accepted.
+    /// non-empty every `HelloAck` must carry a valid truncated-HMAC proof
+    /// of the challenge (a wrong-secret peer is a clean
+    /// [`Error::Protocol`]), when compression is offered each link uses
+    /// it only if that worker accepted, and `legacy_hello` (incompatible
+    /// with both) emits the pre-codec handshake layout so genuinely old
+    /// worker binaries can join.
     #[allow(clippy::too_many_arguments)]
     pub fn serve(
         listener: &TcpListener,
@@ -507,6 +537,14 @@ impl<'e> TcpFleet<'e> {
                 )));
             }
         }
+        if wire_cfg.legacy_hello && (wire_cfg.compress || !wire_cfg.secret.is_empty()) {
+            // A pre-codec worker can neither negotiate compression nor
+            // answer a challenge, so combining the flags would silently
+            // drop the very guarantees they ask for.
+            return Err(Error::Config(
+                "--legacy-hello is incompatible with --compress and --secret".into(),
+            ));
+        }
         let session = session_token(env_seed);
         let (event_tx, event_rx) = channel::<FleetEvent>();
         let mut links = Vec::with_capacity(n_workers);
@@ -537,7 +575,13 @@ impl<'e> TcpFleet<'e> {
                 challenge,
             );
             let mut writer = BufWriter::new(sock.try_clone()?);
-            wire::send_msg(&mut writer, &WireMsg::Hello(assignment))?;
+            let hello = WireMsg::Hello(assignment);
+            let payload = if wire_cfg.legacy_hello {
+                wire::encode_legacy_handshake(&hello)
+            } else {
+                wire::encode(&hello)
+            };
+            wire::write_frame(&mut writer, &payload)?;
             writer.flush()?;
             let mut reader = BufReader::new(sock);
             let link_compress = match wire::recv_msg(&mut reader)? {
@@ -695,7 +739,13 @@ impl<'e> TcpFleet<'e> {
             challenge,
         );
         let mut writer = BufWriter::new(sock.try_clone()?);
-        wire::send_msg(&mut writer, &WireMsg::Hello(assignment))?;
+        let hello = WireMsg::Hello(assignment);
+        let payload = if self.wire_cfg.legacy_hello {
+            wire::encode_legacy_handshake(&hello)
+        } else {
+            wire::encode(&hello)
+        };
+        wire::write_frame(&mut writer, &payload)?;
         writer.flush()?;
         let mut reader = BufReader::new(sock);
         let link_compress = match wire::recv_msg(&mut reader)? {
@@ -1082,11 +1132,13 @@ fn replay_shard(
 /// Worker-side wire policy: the shared secret it authenticates the
 /// server's `Hello` with (empty = trust any server), and whether it is
 /// willing to speak the compressed batch frames when offered. A worker
-/// started with `allow_compress: false` behaves exactly like a pre-codec
-/// binary on the wire, which is how mixed-fleet interop is tested.
+/// started with `allow_compress: false` declines compression the way a
+/// pre-codec binary would; genuine pre-codec *handshake* layout is the
+/// server-side `--legacy-hello`, which workers mirror automatically.
 #[derive(Clone, Debug)]
 pub struct WorkerOptions {
-    /// Shared secret for the keyed handshake (empty disables the check).
+    /// Shared secret for the authenticated handshake (empty disables the
+    /// check).
     pub secret: String,
     /// Accept the server's compression offer.
     pub allow_compress: bool,
@@ -1110,10 +1162,13 @@ pub fn run_worker(addr: &str) -> Result<WorkerReport> {
 /// those clients until shutdown. Blocks for the whole run.
 ///
 /// When `opts.secret` is non-empty the server's `Hello` must carry a
-/// valid keyed tag over this connection's challenge; on a mismatch the
-/// worker still answers with its own (necessarily wrong, to that server)
-/// proof before erroring, so an authenticating server observes a clean
-/// proof failure rather than a dropped connection.
+/// valid truncated-HMAC tag over this connection's challenge; on a
+/// mismatch the worker still answers with its own (necessarily wrong, to
+/// that server) proof before erroring, so an authenticating server
+/// observes a clean proof failure rather than a dropped connection. A
+/// legacy-shaped `Hello` (a pre-codec server) is answered in the legacy
+/// layout — and refused outright when a secret is configured, since no
+/// challenge was issued.
 ///
 /// Test hook: `PAO_FED_CRASH_AT_TICK=N` makes the process exit abruptly
 /// (code 3, sockets unflushed) on the first downlink for iteration >= N —
@@ -1158,6 +1213,17 @@ pub fn run_worker_with(addr: &str, opts: &WorkerOptions) -> Result<WorkerReport>
     }
     let rff = &assignment.rff;
     let algo = &assignment.algo;
+    // A legacy-shaped Hello (no appended negotiation/auth fields) means
+    // the server may be a pre-codec binary whose decoder rejects trailing
+    // bytes — so the ack must mirror that layout. It also means no
+    // challenge was issued: a worker configured to authenticate refuses
+    // rather than silently running unauthenticated.
+    let legacy_hello = wire::hello_is_legacy(&assignment);
+    if legacy_hello && !opts.secret.is_empty() {
+        return Err(Error::Protocol(
+            "server sent an unauthenticated legacy handshake but --secret is set".into(),
+        ));
+    }
     let proof = wire::ack_proof(&opts.secret, assignment.challenge, assignment.session, lo);
     if !opts.secret.is_empty()
         && assignment.hello_tag
@@ -1189,10 +1255,13 @@ pub fn run_worker_with(addr: &str, opts: &WorkerOptions) -> Result<WorkerReport>
     if let Some(plan) = &assignment.resume {
         replayed = replay_shard(&assignment, &schedule, &mut states, plan)?;
     }
-    wire::send_msg(
-        &mut writer,
-        &WireMsg::HelloAck { client_lo: lo, session: assignment.session, compress, proof },
-    )?;
+    let ack = WireMsg::HelloAck { client_lo: lo, session: assignment.session, compress, proof };
+    let ack_payload = if legacy_hello {
+        wire::encode_legacy_handshake(&ack)
+    } else {
+        wire::encode(&ack)
+    };
+    wire::write_frame(&mut writer, &ack_payload)?;
     writer.flush()?;
 
     let crash_at: Option<usize> = std::env::var("PAO_FED_CRASH_AT_TICK")

@@ -27,17 +27,32 @@
 //! enum variants), so compression is purely an encoding choice per link:
 //! the server offers it in the Hello (`WorkerAssignment::compress`), the
 //! worker accepts or declines in its [`WireMsg::HelloAck`], and a mixed
-//! fleet of compressed and legacy workers interoperates frame for frame.
+//! fleet of compressed and raw workers interoperates frame for frame.
 //! Because the codec is lossless on IEEE-754 bit patterns, a compressed
 //! link reproduces the uncompressed curve bit for bit.
 //!
 //! The same appended Hello/HelloAck fields carry the authenticated
 //! handshake: the server proves knowledge of the shared secret with
-//! [`hello_tag`] over a fresh challenge, the worker answers with
-//! [`ack_proof`], and either side rejects a mismatch as
-//! [`Error::Protocol`] before any state is exchanged. Legacy frames
-//! (without the appended fields) still decode — they default to
-//! "no compression, no proof", which an authenticating server rejects.
+//! [`hello_tag`] (a 64-bit truncation of HMAC-SHA256) over a fresh
+//! challenge, the worker answers with [`ack_proof`] in a distinct
+//! domain, and either side rejects a mismatch as [`Error::Protocol`]
+//! before any state is exchanged.
+//!
+//! ## Cross-version compatibility
+//!
+//! Current *decoders* accept the pre-codec handshake layout: when the
+//! appended fields are absent the frame decodes with safe defaults (raw
+//! frames, no proof — which an authenticating server rejects). The
+//! reverse direction is not automatic: a pre-codec decoder rejects the
+//! appended fields as trailing bytes, so a current binary that must be
+//! *understood* by an old one has to emit the old layout
+//! ([`encode_legacy_handshake`]). The server does so under
+//! [`WireConfig::legacy_hello`] (valid only without compression or a
+//! secret); a worker does so automatically whenever the `Hello` it
+//! received was legacy-shaped ([`hello_is_legacy`]). Interop is
+//! therefore: current ↔ current always (any mix of per-link settings);
+//! old server ↔ current worker automatically; old worker ↔ current
+//! server only under `legacy_hello`.
 
 use crate::error::{Error, Result};
 use crate::fl::engine::AlgoConfig;
@@ -46,6 +61,7 @@ use crate::fl::server::Update;
 use crate::persist::codec::{self, Cur};
 use crate::persist::compress;
 use crate::rff::RffSpace;
+use crate::util::sha256;
 use std::io::{Read, Write};
 
 /// Refuse frames larger than this (corrupt-length guard): 256 MiB covers
@@ -68,7 +84,7 @@ pub enum WireMsg {
         /// Worker accepts compressed batched frames (tags 9/10) on this
         /// link. Only meaningful when the assignment offered them.
         compress: bool,
-        /// Keyed-FNV response to the assignment's challenge
+        /// Truncated-HMAC response to the assignment's challenge
         /// ([`ack_proof`]); 0 from a legacy worker, which an
         /// authenticating server rejects.
         proof: u64,
@@ -179,35 +195,59 @@ pub struct WorkerAssignment {
     /// in force only if the worker's HelloAck accepts.
     pub compress: bool,
     /// Fresh challenge for the authenticated handshake (echoed into both
-    /// [`hello_tag`] and [`ack_proof`]).
+    /// [`hello_tag`] and [`ack_proof`]). Never 0 from a current server —
+    /// a zero challenge alongside the other defaults is how a worker
+    /// recognizes a legacy `Hello` ([`hello_is_legacy`]).
     pub challenge: u64,
-    /// Keyed-FNV proof that the server knows the shared secret
+    /// Truncated-HMAC proof that the server knows the shared secret
     /// ([`hello_tag`]); 0 when the fleet runs without one.
     pub hello_tag: u64,
 }
 
 /// Per-link wire options a deployment threads down to the transport: the
-/// `--compress` / `--secret` CLI flags in struct form.
+/// `--compress` / `--secret` / `--legacy-hello` CLI flags in struct form.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct WireConfig {
     /// Offer (server) / accept (worker) compressed batched frames.
     pub compress: bool,
     /// Shared handshake secret; empty runs unauthenticated.
     pub secret: String,
+    /// Emit the handshake in the pre-codec layout (no appended
+    /// negotiation/auth fields) so genuinely old worker binaries — whose
+    /// decoder rejects trailing bytes — can join the fleet. Requires
+    /// `compress` off and an empty `secret`; workers need no flag, they
+    /// mirror the layout of the `Hello` they received.
+    pub legacy_hello: bool,
 }
 
-/// The server-side proof in a [`WireMsg::Hello`]: keyed FNV over the
-/// link's `(challenge, session, client_lo)` under the shared secret. The
-/// worker recomputes and compares, so a rogue server cannot feed a
+/// Truncated HMAC-SHA256 over the handshake transcript: the first 8
+/// bytes (little-endian) of `HMAC-SHA256(secret, domain || challenge ||
+/// session || client_lo)`. A real MAC — unlike a keyed hash with an
+/// invertible finalizer, observing any number of (challenge, tag) pairs
+/// yields no key-equivalent state, so forging a proof for a fresh
+/// challenge is a 2^-64-per-guess affair.
+fn handshake_mac(domain: &[u8; 8], secret: &str, challenge: u64, session: u64, lo: usize) -> u64 {
+    let mut msg = [0u8; 32];
+    msg[..8].copy_from_slice(domain);
+    msg[8..16].copy_from_slice(&challenge.to_le_bytes());
+    msg[16..24].copy_from_slice(&session.to_le_bytes());
+    msg[24..32].copy_from_slice(&(lo as u64).to_le_bytes());
+    let mac = sha256::hmac_sha256(secret.as_bytes(), &msg);
+    u64::from_le_bytes(mac[..8].try_into().unwrap())
+}
+
+/// The server-side proof in a [`WireMsg::Hello`]: [`handshake_mac`] over
+/// the link's `(challenge, session, client_lo)` under the shared secret.
+/// The worker recomputes and compares, so a rogue server cannot feed a
 /// secreted worker bogus shards.
 pub fn hello_tag(secret: &str, challenge: u64, session: u64, client_lo: usize) -> u64 {
-    codec::fnv1a64_keyed(secret.as_bytes(), &[0x48454c4c4f, challenge, session, client_lo as u64])
+    handshake_mac(b"PAOHELLO", secret, challenge, session, client_lo)
 }
 
 /// The worker-side response in a [`WireMsg::HelloAck`]: same inputs,
-/// distinct domain constant, so a proof can never be replayed as a tag.
+/// distinct HMAC domain, so a tag can never be replayed as a proof.
 pub fn ack_proof(secret: &str, challenge: u64, session: u64, client_lo: usize) -> u64 {
-    codec::fnv1a64_keyed(secret.as_bytes(), &[0x41434b5f, challenge, session, client_lo as u64])
+    handshake_mac(b"PAOACK\x00\x00", secret, challenge, session, client_lo)
 }
 
 /// One client's slice of the materialized stream, dense over the run.
@@ -277,9 +317,11 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
                     put_f32_rows(&mut buf, &plan.log);
                 }
             }
-            // Negotiation/auth fields ride after the legacy layout; a
-            // legacy decoder never reads this far, a current decoder
-            // detects their absence by the frame ending early.
+            // Negotiation/auth fields ride after the legacy layout. A
+            // current decoder detects their absence by the frame ending
+            // early; a pre-codec decoder REJECTS them as trailing bytes,
+            // so peers that must be understood by an old binary emit via
+            // `encode_legacy_handshake` instead.
             codec::put_bool(&mut buf, h.compress);
             codec::put_u64(&mut buf, h.challenge);
             codec::put_u64(&mut buf, h.hello_tag);
@@ -344,6 +386,38 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
     buf
 }
 
+/// Appended negotiation/auth bytes on a `Hello`: compress flag,
+/// challenge, tag.
+const HELLO_EXT_BYTES: usize = 1 + 8 + 8;
+/// Appended negotiation/auth bytes on a `HelloAck`: compress flag, proof.
+const ACK_EXT_BYTES: usize = 1 + 8;
+
+/// Encode a handshake message in the pre-codec layout — the appended
+/// negotiation/auth fields stripped — for peers whose decoder rejects
+/// trailing bytes. The fields sit at the very end of the frame by
+/// construction, so truncating [`encode`]'s output is exact. Non-handshake
+/// messages pass through unchanged (their layout never grew).
+pub fn encode_legacy_handshake(msg: &WireMsg) -> Vec<u8> {
+    let mut buf = encode(msg);
+    let strip = match msg {
+        WireMsg::Hello(_) => HELLO_EXT_BYTES,
+        WireMsg::HelloAck { .. } => ACK_EXT_BYTES,
+        _ => 0,
+    };
+    buf.truncate(buf.len() - strip);
+    buf
+}
+
+/// Whether a decoded assignment came off the wire in the pre-codec
+/// layout. Exact, not heuristic: a current server always sends a nonzero
+/// challenge (`transport::challenge_token` guarantees it), so the
+/// all-defaults triple can only mean the appended fields were absent. A
+/// worker that sees this mirrors the layout in its `HelloAck` so an old
+/// server can read the reply.
+pub fn hello_is_legacy(a: &WorkerAssignment) -> bool {
+    !a.compress && a.challenge == 0 && a.hello_tag == 0
+}
+
 // ----------------------------------------------------- compressed encode
 
 /// Compressed-frame tags (`TickBatchC` / `AckBatchC`). Same in-memory
@@ -398,6 +472,12 @@ fn put_bitset(buf: &mut Vec<u8>, flags: impl ExactSizeIterator<Item = bool>) {
 
 fn get_bitset(c: &mut Cur<'_>, n: usize) -> Result<Vec<bool>> {
     let bytes = c.take(n.div_ceil(8))?;
+    // The encoder leaves the unused low bits of the final byte zero;
+    // anything else is corruption (mirrors `BitReader::finish`, keeping
+    // the every-malformed-input-errors contract airtight).
+    if n % 8 != 0 && bytes[n / 8] & ((1u8 << (8 - n % 8)) - 1) != 0 {
+        return Err(Error::Protocol("nonzero padding bits in bitset".into()));
+    }
     Ok((0..n).map(|i| (bytes[i / 8] >> (7 - (i % 8))) & 1 == 1).collect())
 }
 
@@ -1142,8 +1222,10 @@ mod tests {
         assert_eq!(decode(&good).unwrap(), hello);
         // One prefix is legitimate: stripping exactly the appended
         // negotiation/auth fields yields the legacy Hello layout, which
-        // must keep decoding (with defaults) for mixed-fleet compat.
-        let legacy_cut = good.len() - 17;
+        // must keep decoding (with defaults) for mixed-fleet compat —
+        // and is exactly what `encode_legacy_handshake` emits.
+        let legacy_cut = good.len() - HELLO_EXT_BYTES;
+        assert_eq!(encode_legacy_handshake(&hello), &good[..legacy_cut]);
         for cut in (good.len() - 60)..good.len() {
             if cut == legacy_cut {
                 continue;
@@ -1153,30 +1235,42 @@ mod tests {
         let WireMsg::Hello(legacy) = decode(&good[..legacy_cut]).unwrap() else {
             panic!("legacy prefix changed shape");
         };
+        assert!(hello_is_legacy(&legacy));
         assert!(!legacy.compress);
         assert_eq!((legacy.challenge, legacy.hello_tag), (0, 0));
         assert_eq!(legacy.resume, match &hello {
             WireMsg::Hello(h) => h.resume.clone(),
             _ => unreachable!(),
         });
+        // The original (nonzero challenge, as a live server would send)
+        // is not mistaken for legacy.
+        match &hello {
+            WireMsg::Hello(h) => assert!(!hello_is_legacy(h)),
+            _ => unreachable!(),
+        }
     }
 
     /// Legacy handshake frames — encoded without the appended
     /// negotiation/auth fields — decode with safe defaults: raw frames,
-    /// no proof (which an authenticating server then rejects).
+    /// no proof (which an authenticating server then rejects). And
+    /// [`encode_legacy_handshake`] produces exactly that layout, which is
+    /// how a current binary stays readable by a pre-codec one.
     #[test]
     fn legacy_handshake_frames_decode_with_defaults() {
         let ack = WireMsg::HelloAck { client_lo: 3, session: 9, compress: true, proof: 77 };
         let enc = encode(&ack);
-        let legacy = &enc[..enc.len() - 9]; // strip bool + u64
+        let legacy = encode_legacy_handshake(&ack);
+        assert_eq!(legacy, &enc[..enc.len() - ACK_EXT_BYTES]);
         assert_eq!(
-            decode(legacy).unwrap(),
+            decode(&legacy).unwrap(),
             WireMsg::HelloAck { client_lo: 3, session: 9, compress: false, proof: 0 }
         );
         // Partial trailing fields are corruption, not a legacy frame.
         for cut in (enc.len() - 8)..enc.len() {
             assert!(decode(&enc[..cut]).is_err(), "partial trailing fields at {cut} accepted");
         }
+        // Non-handshake messages pass through the legacy encoder untouched.
+        assert_eq!(encode_legacy_handshake(&WireMsg::Shutdown), encode(&WireMsg::Shutdown));
     }
 
     #[test]
@@ -1321,6 +1415,23 @@ mod tests {
         codec::put_varint(&mut body, 4); // d
         codec::put_varint(&mut body, 1 << 40); // hostile value count
         codec::put_varint(&mut body, 0); // empty stream
+        assert!(matches!(decode(&seal(body)), Err(Error::Protocol(_))));
+    }
+
+    /// The unused low bits of the final bitset byte must be zero — a
+    /// checksum-valid crafted frame with padding garbage is a protocol
+    /// error, matching `BitReader::finish` on the value stream.
+    #[test]
+    fn nonzero_bitset_padding_rejected() {
+        let mut body = vec![TAG_TICK_BATCH_C];
+        codec::put_varint(&mut body, 0); // iter
+        codec::put_varint(&mut body, 1); // one item
+        codec::put_varint(&mut body, 0); // client 0
+        let bitset_at = body.len();
+        body.push(0x00); // item 0 absent, padding clear
+        compress::put_f32_stream(&mut body, &[]); // no portions -> empty stream
+        assert!(decode(&seal(body.clone())).is_ok(), "clean padding must decode");
+        body[bitset_at] = 0x01; // lowest padding bit set
         assert!(matches!(decode(&seal(body)), Err(Error::Protocol(_))));
     }
 }

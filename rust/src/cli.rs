@@ -16,9 +16,12 @@
 //! (graceful stop at a tick boundary).
 //!
 //! Wire flags (`deploy` only): `--compress` offers the compressed batch
-//! frames to the fleet, `--secret S` turns on the keyed handshake (both
-//! ends must agree), and `--legacy-wire` makes a worker decline
-//! compression (a stand-in for a pre-codec binary in a mixed fleet).
+//! frames to the fleet, `--secret S` turns on the authenticated
+//! handshake (both ends must agree), `--legacy-wire` makes a worker
+//! decline compression, and `--legacy-hello` makes a server emit the
+//! pre-codec handshake layout so genuinely old worker binaries can join
+//! (incompatible with `--compress`/`--secret`; workers need no flag —
+//! they mirror the layout of the `Hello` they received).
 
 use std::collections::BTreeMap;
 
@@ -32,7 +35,8 @@ pub struct Args {
 }
 
 /// Known boolean switches (take no value).
-const SWITCHES: &[&str] = &["help", "xla", "quiet", "no-plot", "compress", "legacy-wire"];
+const SWITCHES: &[&str] =
+    &["help", "xla", "quiet", "no-plot", "compress", "legacy-wire", "legacy-hello"];
 
 impl Args {
     /// Parse from an iterator of arguments (without argv[0]).
@@ -141,6 +145,8 @@ mod tests {
         let b = p("deploy --connect 127.0.0.1:7000 --legacy-wire").unwrap();
         assert!(b.has("legacy-wire"));
         assert!(!b.has("compress"));
+        let c = p("deploy --serve 0.0.0.0:7000 --workers 2 --legacy-hello").unwrap();
+        assert!(c.has("legacy-hello"));
         assert!(p("deploy --secret").is_err());
     }
 

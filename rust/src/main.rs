@@ -18,10 +18,12 @@
 //!                 continue bit-identically) --run-until T (graceful
 //!                 stop at tick T after a final checkpoint)
 //!   wire:         --compress (offer compressed batch frames; each worker
-//!                 link negotiates in the handshake) --secret S (keyed
-//!                 handshake authentication; both ends must pass the same
-//!                 secret) --legacy-wire (worker only: decline
-//!                 compression, emulating a pre-codec binary)
+//!                 link negotiates in the handshake) --secret S
+//!                 (HMAC-authenticated handshake; both ends must pass the
+//!                 same secret) --legacy-wire (worker only: decline
+//!                 compression) --legacy-hello (server only: emit the
+//!                 pre-codec handshake layout for genuinely old workers;
+//!                 incompatible with --compress/--secret)
 //!
 //! flags:
 //!   --mc N        Monte-Carlo runs per curve            (default 3)
@@ -76,7 +78,7 @@ fn usage() -> ! {
          deployment:  pao-fed deploy [--serve ADDR --workers N | --connect ADDR]\n  \
          [--clients K] [--iters N] [--seed S] [--dim D] [--delta F] [--eval-every E]\n  \
          [--checkpoint-every N] [--checkpoint PATH] [--resume PATH] [--run-until T]\n  \
-         [--compress] [--secret S] [--legacy-wire]",
+         [--compress] [--secret S] [--legacy-wire] [--legacy-hello]",
         experiments::ALL.join(" "),
         experiments::EXTRAS.join(" ")
     );
@@ -154,6 +156,7 @@ fn deploy_scenario(
             wire: WireConfig {
                 compress: args.has("compress"),
                 secret: args.get("secret").unwrap_or("").to_string(),
+                legacy_hello: args.has("legacy-hello"),
             },
         },
     ))

@@ -182,28 +182,9 @@ pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
     h
 }
 
-/// Keyed FNV-1a-64 over `secret || 0x1f || parts`, finalized through a
-/// splitmix64 avalanche: the authenticated-handshake tag of the TCP
-/// fleet (`async_rt::wire::{hello_tag, ack_proof}`). The 0x1f separator
-/// keeps `("ab", [..])` and `("a", [..])`-style boundary shifts from
-/// colliding trivially.
-pub(crate) fn fnv1a64_keyed(secret: &[u8], parts: &[u64]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    let mut eat = |b: u8| {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100_0000_01b3);
-    };
-    for &b in secret {
-        eat(b);
-    }
-    eat(0x1f);
-    for &p in parts {
-        for b in p.to_le_bytes() {
-            eat(b);
-        }
-    }
-    crate::util::rng::splitmix64(h)
-}
+// Note: FNV is a *checksum* against accidental corruption, not a MAC —
+// the authenticated-handshake tags live in `util::sha256` (HMAC-SHA256),
+// because a keyed FNV is invertible from known plaintext.
 
 // ---------------------------------------------------------------- decode
 

@@ -1,5 +1,6 @@
 //! Self-contained substrates: PRNG, JSON, CSV/plot output, timing, the
-//! fork-join parallel layer, and the persistent worker pool behind it.
+//! fork-join parallel layer, the persistent worker pool behind it, and
+//! the SHA-256/HMAC pair the handshake authenticates with.
 //!
 //! The offline crate set has no `rand`/`serde`/`criterion`/`rayon`, so the
 //! library carries minimal, well-tested implementations of exactly what it
@@ -10,6 +11,7 @@ pub mod parallel;
 pub mod plot;
 pub mod pool;
 pub mod rng;
+pub mod sha256;
 pub mod table;
 
 use std::time::Instant;

@@ -13,8 +13,11 @@
 //!
 //! Also: the wire codec negotiation. A mixed fleet (one worker on
 //! compressed batch frames, one declining them via `--legacy-wire`)
-//! must stay bit-identical to the in-process run, and a worker with the
-//! wrong `--secret` must be rejected as a clean protocol error.
+//! must stay bit-identical to the in-process run, a worker with the
+//! wrong `--secret` must be rejected as a clean protocol error, and a
+//! `--legacy-hello` server — emitting the pre-codec handshake layout,
+//! with workers mirroring it in their acks — must still reproduce the
+//! in-process curve bit for bit.
 
 use pao_fed::async_rt::{run_deployment, run_deployment_tcp, DeploymentConfig, WireConfig};
 use pao_fed::data::stream::{FedStream, StreamConfig};
@@ -280,10 +283,11 @@ fn tcp_fleet_checkpoint_resume_is_bit_identical() {
 
 /// The compressed wire codec is an *encoding* choice, not a protocol
 /// change: a fleet where one worker negotiates compressed batch frames
-/// and the other declines them (`--legacy-wire`, standing in for a
-/// pre-codec binary) must reproduce the in-process deployment — and
-/// therefore the all-raw fleet — bit for bit, under an authenticated
-/// handshake on every link.
+/// and the other declines them (`--legacy-wire`) must reproduce the
+/// in-process deployment — and therefore the all-raw fleet — bit for
+/// bit, under an authenticated handshake on every link. (Interop with
+/// genuinely pre-codec *handshake* layouts is the `--legacy-hello` test
+/// below.)
 #[test]
 fn compressed_mixed_fleet_matches_in_process_bitwise() {
     let seed = 53;
@@ -318,7 +322,7 @@ fn compressed_mixed_fleet_matches_in_process_bitwise() {
         rff.clone(),
         part.clone(),
         delay,
-        dcfg(WireConfig { compress: true, secret: secret.into() }),
+        dcfg(WireConfig { compress: true, secret: secret.into(), ..Default::default() }),
         &listener,
         2,
     )
@@ -334,6 +338,76 @@ fn compressed_mixed_fleet_matches_in_process_bitwise() {
     assert_eq!(inproc.comm, tcp.comm, "mixed-fleet traffic counters diverge");
     assert_eq!(inproc.agg, tcp.agg);
     assert_eq!(inproc.local_steps, tcp.local_steps);
+}
+
+/// A `--legacy-hello` server emits handshake frames in the pre-codec
+/// layout (the exact bytes an old binary's trailing-bytes-rejecting
+/// decoder demands), and current workers mirror that layout in their
+/// acks — so both directions of the old-worker interop path are the
+/// genuine old frames, exercised here end to end: the run must still be
+/// bit-identical to the in-process deployment.
+#[test]
+fn legacy_hello_fleet_matches_in_process_bitwise() {
+    let seed = 61;
+    let (cfg, rff, part, delay) = build_env(seed, 8, 120);
+    let algo = algorithms::build(Variant::PaoFedU2, 0.4, 4, 10, 30);
+    let dcfg = |wire| DeploymentConfig {
+        algo: algo.clone(),
+        tick: Duration::ZERO,
+        env_seed: seed,
+        eval_every: 30,
+        persist: None,
+        run_until: None,
+        wire,
+    };
+
+    let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+    let inproc =
+        run_deployment(stream, rff.clone(), part.clone(), delay, dcfg(Default::default()))
+            .unwrap();
+
+    let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let children = spawn_workers(&addr, 2);
+    let tcp = run_deployment_tcp(
+        stream,
+        rff.clone(),
+        part.clone(),
+        delay,
+        dcfg(WireConfig { legacy_hello: true, ..Default::default() }),
+        &listener,
+        2,
+    )
+    .unwrap();
+    for mut c in children {
+        let status = c.wait().unwrap();
+        assert!(status.success(), "legacy-hello worker exited with {status}");
+    }
+
+    assert_eq!(inproc.iters, tcp.iters);
+    assert_eq!(inproc.mse_db, tcp.mse_db, "legacy-hello curve diverges");
+    assert_eq!(inproc.final_w, tcp.final_w, "legacy-hello model diverges");
+    assert_eq!(inproc.comm, tcp.comm, "legacy-hello traffic counters diverge");
+    assert_eq!(inproc.agg, tcp.agg);
+    assert_eq!(inproc.local_steps, tcp.local_steps);
+
+    // The legacy layout can carry neither a compression offer nor a
+    // challenge, so combining the flags is refused up front (before any
+    // worker is accepted).
+    let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let err = run_deployment_tcp(
+        stream,
+        rff,
+        part,
+        delay,
+        dcfg(WireConfig { legacy_hello: true, compress: true, ..Default::default() }),
+        &listener,
+        1,
+    )
+    .expect_err("--legacy-hello + --compress must be refused");
+    assert!(err.to_string().contains("legacy-hello"), "got: {err}");
 }
 
 /// A worker dialing in with the wrong shared secret must be rejected as
@@ -361,7 +435,11 @@ fn wrong_secret_worker_is_rejected_cleanly() {
             eval_every: 30,
             persist: None,
             run_until: None,
-            wire: WireConfig { compress: false, secret: "the-right-one".into() },
+            wire: WireConfig {
+                compress: false,
+                secret: "the-right-one".into(),
+                ..Default::default()
+            },
         },
         &listener,
         1,
