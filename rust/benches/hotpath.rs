@@ -7,13 +7,20 @@
 mod bench_harness;
 
 use bench_harness::Bench;
+use pao_fed::data::stream::{FedStream, StreamConfig};
+use pao_fed::data::synthetic::Eq39Source;
+use pao_fed::fl::algorithms::{build as build_algo, Variant};
 use pao_fed::fl::backend::{ComputeBackend, NativeBackend, StepArgs};
+use pao_fed::fl::delay::DelayModel;
+use pao_fed::fl::engine::{self, Environment};
+use pao_fed::fl::participation::Participation;
 use pao_fed::fl::selection::{ScheduleKind, SelectionSchedule};
 use pao_fed::fl::server::{AggregationMode, AlphaSchedule, Server, Update};
 use pao_fed::metrics::mse_test;
 use pao_fed::rff::RffSpace;
 use pao_fed::runtime::{artifact_dir, XlaBackend};
 use pao_fed::simd;
+use pao_fed::util::pool::PoolHandle;
 use pao_fed::util::rng::Pcg32;
 
 const K: usize = 256;
@@ -192,4 +199,90 @@ fn main() {
     });
 
     b.finish();
+
+    // ------------------------------------------------------------------
+    // Fused-step and tick-pipeline trajectory (BENCH_7.json): the fused
+    // row kernel against the unfused four-pass sequence it replaced, and
+    // the engine's per-tick cost with the double-buffered server model on
+    // versus fully serial ticks.
+    let mut b7 = Bench::from_args("fused_pipeline").with_sink("BENCH_7.json");
+
+    {
+        let (o0, rest) = rff.omega.split_at(D);
+        let (o1, rest) = rest.split_at(D);
+        let (o2, o3) = rest.split_at(D);
+        let scale = rff.scale();
+        let x4 = [0.3f32, -1.1, 0.7, 0.05];
+        let wg: Vec<f32> = (0..D).map(|_| rng.gaussian() as f32).collect();
+        let mask: Vec<f32> = (0..D).map(|j| if j % 3 == 0 { 1.0 } else { 0.0 }).collect();
+        let mut w: Vec<f32> = (0..D).map(|_| rng.gaussian() as f32).collect();
+        let mut z = vec![0.0f32; D];
+        b7.bench("step/fused_row_d200", || {
+            let e = simd::fused_step_row(
+                &rff.b,
+                o0,
+                o1,
+                o2,
+                o3,
+                x4,
+                scale,
+                &mut w,
+                Some((&wg, &mask)),
+                &mut z,
+                0.37,
+                0.4,
+            );
+            std::hint::black_box(e);
+        });
+        b7.bench("step/unfused_row_d200", || {
+            simd::masked_blend(&mut w, &wg, &mask);
+            simd::featurize4(&rff.b, o0, o1, o2, o3, x4, scale, &mut z);
+            let e = 0.37 - simd::dot(&w, &z);
+            simd::axpy(&mut w, 0.4 * e, &z);
+            std::hint::black_box(e);
+        });
+    }
+
+    {
+        const TICKS: usize = 100;
+        let seed = 5;
+        let cfg = StreamConfig {
+            n_clients: K,
+            n_iters: TICKS,
+            data_group_samples: vec![25, 50, 75, 100],
+            test_size: 64,
+        };
+        let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+        let env = Environment::new(
+            stream,
+            rff.clone(),
+            Participation::uniform(K, 0.6),
+            DelayModel::Geometric { delta: 0.2 },
+            seed,
+            &mut native,
+        )
+        .unwrap();
+        let algo = build_algo(Variant::PaoFedU2, 0.4, 4, 10, 5);
+
+        let both_enabled = b7.enabled("pipeline/run_serial_k256_t100")
+            && b7.enabled("pipeline/run_overlapped_k256_t100");
+        let serial = PoolHandle::serial();
+        b7.bench("pipeline/run_serial_k256_t100", || {
+            std::hint::black_box(engine::run_sharded(&env, &algo, &mut native, &serial).unwrap());
+        });
+        let serial_stats = b7.last_stats();
+        let pool = PoolHandle::global(4);
+        b7.bench("pipeline/run_overlapped_k256_t100", || {
+            std::hint::black_box(engine::run_sharded(&env, &algo, &mut native, &pool).unwrap());
+        });
+        let overlapped_stats = b7.last_stats();
+        if both_enabled {
+            if let (Some(s), Some(o)) = (serial_stats, overlapped_stats) {
+                b7.record_value("pipeline/per_tick_serial_ns", s.min_ns / TICKS as f64);
+                b7.record_value("pipeline/per_tick_overlapped_ns", o.min_ns / TICKS as f64);
+            }
+        }
+    }
+
+    b7.finish();
 }

@@ -34,11 +34,12 @@ use crate::fl::participation::Participation;
 use crate::fl::pipeline;
 use crate::fl::selection::SelectionSchedule;
 use crate::fl::server::{AggregateInfo, AggregationMode, Server, Update};
-use crate::metrics::{mse_test, to_db, CommStats};
+use crate::metrics::{mse_test, CommStats};
 use crate::persist::journal::{self, TickRecord};
 use crate::persist::snapshot::{self, QueueState, RunSnapshot, ServerState};
 use crate::persist::{curve, curve_path_for, PersistPolicy};
 use crate::rff::RffSpace;
+use crate::util::pool::PoolHandle;
 use std::net::TcpListener;
 use std::sync::Arc;
 use std::thread;
@@ -241,7 +242,10 @@ pub fn run_deployment_tcp(
 /// sampling — every floating-point operation in the same order regardless
 /// of transport, which is the whole determinism argument. Checkpoints and
 /// resume slot in at tick boundaries, so they compose with the sorted-ack
-/// rule without touching it.
+/// rule without touching it. Curve samples ride the
+/// [`pipeline::ModelBuffer`] front slot: each reads a snapshot of the
+/// model published at its own tick boundary and overlaps the following
+/// ticks, so the curve is bitwise what inline evaluation would produce.
 fn serve_loop<T: Transport>(
     stream: &FedStream,
     rff: &RffSpace,
@@ -281,6 +285,16 @@ fn serve_loop<T: Transport>(
         local_steps = snap.local_steps;
         start = snap.tick;
     }
+    // The double-buffered server model shared with the engine pipeline.
+    // The downlink here reads model *values*, so aggregation stays inline
+    // (back slot always resident); the buffer's contribution to this loop
+    // is the front slot — curve samples overlap the following ticks on
+    // the process-wide pool under the same eval-snapshot rule, joined at
+    // every checkpoint boundary.
+    let mut models = pipeline::ModelBuffer::new(server);
+    models.restore_curve(iters, mse_db);
+    let eval_pool = PoolHandle::shared();
+    let mut eval_shared: Option<(Arc<Vec<f32>>, Arc<Vec<f32>>)> = None;
     let stop = cfg.run_until.map_or(n_iters, |u| u.min(n_iters));
 
     // The durable eval curve (`<ckpt>.curve`, compressed binary) lands
@@ -312,7 +326,7 @@ fn serve_loop<T: Transport>(
     };
 
     for n in start..stop {
-        transport.begin_tick(n, &server.w)?;
+        transport.begin_tick(n, &models.server().w)?;
         // Participation decisions live on the server side of the protocol
         // (it must know whom to downlink to); the trials are the same
         // common-random-number streams the discrete engine uses.
@@ -336,7 +350,8 @@ fn serve_loop<T: Transport>(
             let portion = if is_participant[c] {
                 let coords = pipeline::downlink_coords(schedule, algo, c, n);
                 let mut values = Vec::with_capacity(coords.len());
-                coords.for_each(|j| values.push(server.w[j]));
+                let w = &models.server().w;
+                coords.for_each(|j| values.push(w[j]));
                 comm.downlink_scalars += values.len() as u64;
                 comm.downlink_msgs += 1;
                 Some((coords, values))
@@ -364,17 +379,25 @@ fn serve_loop<T: Transport>(
         }
 
         // Aggregate arrivals (stage 7, shared with the tick pipeline).
-        pipeline::aggregate_arrivals(&mut server, &mut queue, n, &mut agg_total);
+        pipeline::aggregate_arrivals(models.server_mut(), &mut queue, n, &mut agg_total);
 
         if n % cfg.eval_every == 0 || n + 1 == n_iters {
-            iters.push(n);
-            mse_db.push(to_db(mse_test(&server.w, &z_test, test_y)));
+            if eval_pool.is_serial() {
+                models.join_eval();
+                let mse = mse_test(&models.server().w, &z_test, test_y);
+                models.push_sample(n, mse);
+            } else {
+                let (z, y) = eval_shared.get_or_insert_with(|| {
+                    (Arc::new(z_test.clone()), Arc::new(test_y.clone()))
+                });
+                models.submit_eval(n, z, y, &eval_pool);
+            }
         }
 
         if let Some(j) = journal.as_mut() {
             j.append(&TickRecord {
                 tick: n,
-                w_hash: snapshot::hash_model(&server.w),
+                w_hash: snapshot::hash_model(&models.server().w),
                 uplink_msgs: comm.uplink_msgs,
             })?;
         }
@@ -385,6 +408,9 @@ fn serve_loop<T: Transport>(
                 && boundary < n_iters;
             let handoff = boundary == stop && stop < n_iters;
             if periodic || handoff {
+                // An exact curve cut: the in-flight sample belongs to a
+                // tick at or before this boundary.
+                models.join_eval();
                 let states = transport.dump_states(boundary)?;
                 let mut client_w = Vec::with_capacity(k * rff.d);
                 for w in &states {
@@ -401,19 +427,19 @@ fn serve_loop<T: Transport>(
                     algo: algo.clone(),
                     delay: *delay,
                     schedule: schedule.clone(),
-                    server: ServerState::capture(&server),
+                    server: ServerState::capture(models.server()),
                     queue: QueueState::capture(&queue),
                     client_w,
                     rng: Vec::new(),
                     comm,
                     agg: agg_total,
-                    curve_iters: iters.clone(),
-                    curve_db: mse_db.clone(),
+                    curve_iters: models.iters().to_vec(),
+                    curve_db: models.mse_db().to_vec(),
                     local_steps,
                 };
                 snapshot::write_file(&p.path, &snap)?;
                 if let Some(cp) = &curve_path {
-                    curve::write_file(cp, &iters, &mse_db)?;
+                    curve::write_file(cp, models.iters(), models.mse_db())?;
                 }
             }
         }
@@ -421,6 +447,8 @@ fn serve_loop<T: Transport>(
             thread::sleep(cfg.tick);
         }
     }
+
+    let (server, iters, mse_db) = models.into_parts();
 
     // Leave the durable curve current at the end of a persisted run (a
     // graceful `run_until` handoff already wrote it at the boundary, but

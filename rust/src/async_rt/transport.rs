@@ -35,7 +35,6 @@ use crate::fl::pipeline;
 use crate::fl::selection::{Coords, SelectionSchedule};
 use crate::fl::server::Update;
 use crate::rff::RffSpace;
-use crate::simd;
 use crate::util::rng::splitmix64;
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
@@ -146,13 +145,14 @@ impl ClientState {
         let mut learned = 0u32;
         if let Some((x, y)) = sample {
             if participating || algo.autonomous_updates {
-                // The same canonical kernels the engine's `step_row` uses
-                // (`crate::simd`): the 8-lane dot's fixed reduction order
-                // is what keeps the per-client deployment step bit-equal
-                // to the batched engine on every dispatch arm.
-                rff.features_into(x, &mut self.z);
-                let e = y - simd::dot(&self.w, &self.z);
-                simd::axpy(&mut self.w, algo.mu * e, &self.z);
+                // The same fused row-blocked step the engine's `step_row`
+                // uses (`RffSpace::fused_step` → `simd::fused_step_row`),
+                // with no blend — the downlink portion was applied by
+                // coordinate overwrite above. The kernel contract's fixed
+                // 8-lane reduction order is what keeps the per-client
+                // deployment step bit-equal to the batched engine on
+                // every dispatch arm.
+                rff.fused_step(x, &mut self.w, None, &mut self.z, y, algo.mu);
                 learned = 1;
             }
         }

@@ -276,7 +276,10 @@ pub fn run_variants(
         XLA_SERIAL_WARNING.call_once(|| {
             eprintln!(
                 "warning: the XLA backend is pinned to the serial engine; \
-                 --jobs/--shards are ignored for this run \
+                 --jobs/--shards are ignored for this run. The native \
+                 backend's pool path (sharded client step + double-buffered \
+                 aggregation/eval, fl::pipeline::ModelBuffer) does not apply: \
+                 PJRT executables are not shareable across threads \
                  (ROADMAP: \"XLA-backend parallel path\")"
             );
         });

@@ -101,20 +101,19 @@ fn step_row(
     gate: f32,
     mu: f32,
 ) -> f32 {
-    // Masked receive: w_eff = M w_global + (I - M) w_local.
-    simd::masked_blend(w_row, w_global, mask);
     if gate == 0.0 {
+        // Receive-only tick: masked blend w_eff = M w_global + (I - M) w.
+        simd::masked_blend(w_row, w_global, mask);
         return 0.0;
     }
-    // RFF featurization + a-priori error + rank-1 update, all on the
-    // canonical kernel layer (`crate::simd`): the 8-lane dot's reduction
-    // order is part of the contract, so the deployment runtime's
-    // per-client step (`async_rt::transport::ClientState`) lands on the
-    // same bits whichever ISA path dispatch picks.
-    rff.features_into(x, z);
-    let e = y - simd::dot(w_row, z);
-    simd::axpy(w_row, mu * e, z);
-    e
+    // Masked receive + RFF featurization + a-priori error + rank-1 update
+    // as one fused row-blocked pass on the canonical kernel layer
+    // ([`RffSpace::fused_step`] → `simd::fused_step_row` for L = 4).
+    // Bit-identical to the unfused kernel sequence by the lane-reduction
+    // contract, so the deployment runtime's per-client step
+    // (`async_rt::transport::ClientState`) lands on the same bits
+    // whichever ISA path dispatch picks.
+    rff.fused_step(x, w_row, Some((w_global, mask)), z, y, mu)
 }
 
 /// Pure-rust reference backend.

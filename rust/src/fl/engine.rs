@@ -182,12 +182,14 @@ pub fn run(
 
 /// Run `algo` in `env` on the worker pool: each iteration's batched client
 /// step shards over the pool (see [`ComputeBackend::client_step_sharded`])
-/// and the curve evaluation (stage 8) is pipelined with the next tick's
-/// compute under the eval-snapshot rule. A serial handle reproduces
-/// [`run`] exactly; any handle produces bitwise-identical curves because
-/// client rows are independent within a tick, the aggregation consumes
-/// uploads in client order either way, and evaluation reads a snapshot of
-/// the server model taken at the tick boundary.
+/// and the server model is double-buffered (`fl::pipeline::ModelBuffer`),
+/// so tick `n`'s aggregation and curve evaluation overlap tick `n+1`'s
+/// arrivals/schedule/downlink. A serial handle reproduces [`run`] exactly;
+/// any handle produces bitwise-identical curves because client rows are
+/// independent within a tick, the aggregation consumes uploads in client
+/// order either way and re-serializes before the next model read, and
+/// evaluation reads a snapshot of the server model taken at the tick
+/// boundary.
 pub fn run_sharded(
     env: &Environment,
     algo: &AlgoConfig,

@@ -14,11 +14,22 @@
 //!      over the worker pool;
 //! 6.   **uplink / delay** — [`uplink_coords`] + [`package_update`] +
 //!      [`file_update`] (shared);
-//! 7.   **aggregate** — [`aggregate_arrivals`] (shared);
-//! 8.   **eval** — the `EvalStage`, which may run *pipelined on the pool*:
-//!      the MSE sample is computed from a **snapshot** of `server.w` taken
-//!      at the tick boundary while subsequent ticks proceed, so curves are
-//!      bitwise-identical to inline evaluation (the eval-snapshot rule).
+//! 7.   **aggregate** — [`aggregate_arrivals`] (shared); under a pool the
+//!      engine dispatches it through the [`ModelBuffer`] back slot so it
+//!      overlaps the *next* tick's stages 1-4 (none of which read model
+//!      values — the sync barrier sits just before stage 5);
+//! 8.   **eval** — the [`ModelBuffer`] front slot, which may run
+//!      *pipelined on the pool*: the MSE sample is computed from a
+//!      **snapshot** of `server.w` published at the tick boundary while
+//!      subsequent ticks proceed, so curves are bitwise-identical to
+//!      inline evaluation (the eval-snapshot rule).
+//!
+//! The two overlapped stages together are the double-buffered server
+//! model: the live server in the back slot, eval snapshots in the front
+//! slot, with [`ModelBuffer::sync`] re-serializing before any model read.
+//! Both runtimes share the buffer — the engine overlaps stages 7 and 8,
+//! the deployment loop (whose downlink reads model *values* and therefore
+//! cannot float the aggregate) overlaps stage 8 only.
 //!
 //! The free functions are the single home of the downlink/uplink/schedule
 //! bookkeeping; `async_rt::protocol` calls the same ones instead of
@@ -120,6 +131,14 @@ pub fn file_update(
     queue.push(n + l, update);
 }
 
+/// Fold one aggregation's diagnostics into a run total.
+fn fold_info(total: &mut AggregateInfo, info: AggregateInfo) {
+    total.applied += info.applied;
+    total.discarded_stale += info.discarded_stale;
+    total.conflicts_resolved += info.conflicts_resolved;
+    total.touched_coords += info.touched_coords;
+}
+
 /// Stage 7 — drain the delay channel at `n`, aggregate into the server
 /// (eqs. 14-15 or eq. 6) and fold the diagnostics into `total`.
 pub fn aggregate_arrivals(
@@ -129,11 +148,7 @@ pub fn aggregate_arrivals(
     total: &mut AggregateInfo,
 ) {
     let arrivals = queue.drain(n);
-    let info = server.aggregate(n, &arrivals);
-    total.applied += info.applied;
-    total.discarded_stale += info.discarded_stale;
-    total.conflicts_resolved += info.conflicts_resolved;
-    total.touched_coords += info.touched_coords;
+    fold_info(total, server.aggregate(n, &arrivals));
 }
 
 /// Dense per-tick working state, allocated once and reused every tick
@@ -175,65 +190,215 @@ impl TickState {
     }
 }
 
-/// Stage 8 with the eval-snapshot rule. At most one evaluation is in
-/// flight; it reads a snapshot of `server.w` cloned at the tick boundary,
-/// so overlapping it with later ticks cannot change the curve. The MSE
-/// sample itself runs on the canonical kernel layer (`metrics::mse_test`
-/// -> `crate::simd::mse_batch`), so pipelined, inline and deployment
-/// evaluations agree bit for bit on every dispatch arm.
-struct EvalStage<'e> {
-    env: &'e Environment,
-    /// Shared copies of the featurized test set for pool-dispatched
-    /// evaluations (`'static` tasks cannot hold the `env` borrow). Built
-    /// lazily on the first pipelined sample, so serial runs never pay the
-    /// clone.
-    shared: Option<(Arc<Vec<f32>>, Arc<Vec<f32>>)>,
-    pending: Option<TaskHandle<f64>>,
+/// The double-buffered server model behind stages 7 and 8.
+///
+/// The **back** slot holds the live [`Server`]: every aggregation lands
+/// there, in tick order. The **front** slot is a refcounted snapshot of
+/// `server.w` published at eval boundaries, so pipelined curve samples
+/// never borrow the live model. Two kinds of work may be in flight at
+/// once:
+///
+/// * **aggregate(n)** — with a pool, [`ModelBuffer::aggregate`] moves the
+///   server into a one-shot task so the accumulation overlaps the next
+///   tick's arrivals/schedule/downlink (which read no model values).
+///   [`ModelBuffer::sync`] joins it before anything reads or mutates the
+///   model again; the float program is unchanged, only *when* it runs
+///   moves, so curves and checkpoints stay bitwise-identical to serial.
+/// * **eval(n)** — the eval-snapshot rule, generalized: the sample reads
+///   the front slot, published copy-on-write (`Arc::get_mut` after the
+///   previous join), so steady-state evaluations reuse one allocation.
+///
+/// An eval due while an aggregate is in flight must read the
+/// *post-aggregate* model; [`ModelBuffer::mark_eval`] defers it onto the
+/// pending task and [`ModelBuffer::sync`] surfaces the owed tick.
+/// Touching the model while an aggregate is in flight is a logic error
+/// and panics — the pipeline's tick order makes `sync` precede every
+/// such access.
+pub struct ModelBuffer {
+    /// Back slot: the live server (`None` exactly while an aggregate
+    /// task owns it).
+    back: Option<Server>,
+    pending_agg: Option<TaskHandle<(Server, AggregateInfo)>>,
+    /// Eval tick deferred until the in-flight aggregate lands.
+    eval_at: Option<usize>,
+    /// Front slot: the published eval snapshot.
+    front: Option<Arc<Vec<f32>>>,
+    pending_eval: Option<TaskHandle<f64>>,
     iters: Vec<usize>,
     mse_db: Vec<f64>,
 }
 
-impl<'e> EvalStage<'e> {
-    fn new(env: &'e Environment) -> Self {
-        EvalStage {
-            env,
-            shared: None,
-            pending: None,
+impl ModelBuffer {
+    /// Wrap a server as the back slot of a fresh buffer.
+    pub fn new(server: Server) -> Self {
+        ModelBuffer {
+            back: Some(server),
+            pending_agg: None,
+            eval_at: None,
+            front: None,
+            pending_eval: None,
             iters: Vec::new(),
             mse_db: Vec::new(),
         }
     }
 
-    /// Sample the curve at tick `n`. Serial handles evaluate inline; pool
-    /// handles overlap the evaluation with subsequent ticks.
-    fn submit(&mut self, n: usize, w: &[f32], pool: &PoolHandle) {
-        // Join the previous in-flight sample first so `mse_db` stays in
-        // tick order.
-        self.join_pending();
-        self.iters.push(n);
-        if pool.is_serial() {
-            let mse = mse_test(w, &self.env.z_test, &self.env.stream.test_y);
-            self.mse_db.push(to_db(mse));
-            return;
-        }
-        let env = self.env;
-        let (z, y) = self.shared.get_or_insert_with(|| {
-            (
-                Arc::new(env.z_test.clone()),
-                Arc::new(env.stream.test_y.clone()),
-            )
-        });
-        let snapshot = w.to_vec();
-        let z = Arc::clone(z);
-        let y = Arc::clone(y);
-        self.pending = Some(pool.submit(move || mse_test(&snapshot, &z, &y)));
+    /// The live server. Panics while an aggregate is in flight — call
+    /// [`ModelBuffer::sync`] first.
+    pub fn server(&self) -> &Server {
+        self.back
+            .as_ref()
+            .expect("model read with an aggregate in flight; sync first")
     }
 
-    fn join_pending(&mut self) {
-        if let Some(h) = self.pending.take() {
+    /// Mutable access to the live server (same in-flight rule).
+    pub fn server_mut(&mut self) -> &mut Server {
+        self.back
+            .as_mut()
+            .expect("model write with an aggregate in flight; sync first")
+    }
+
+    /// Join the in-flight aggregate, if any: restore the back slot, fold
+    /// its diagnostics into `total`, and surface the eval tick that was
+    /// deferred onto it — the caller owes that sample *now*, before
+    /// anything mutates the model again.
+    pub fn sync(&mut self, total: &mut AggregateInfo) -> Option<usize> {
+        if let Some(h) = self.pending_agg.take() {
+            let (server, info) = h.join();
+            self.back = Some(server);
+            fold_info(total, info);
+            return self.eval_at.take();
+        }
+        debug_assert!(self.eval_at.is_none());
+        None
+    }
+
+    /// Stage 7 over the buffer: aggregate `arrivals` at tick `now`.
+    /// Serial handles (and empty arrival sets — a no-op aggregation)
+    /// run inline; otherwise the server moves into a one-shot task so the
+    /// accumulation overlaps the next tick's model-value-free stages.
+    pub fn aggregate(
+        &mut self,
+        now: usize,
+        arrivals: Vec<Update>,
+        total: &mut AggregateInfo,
+        pool: &PoolHandle,
+    ) {
+        assert!(
+            self.pending_agg.is_none(),
+            "aggregate dispatched while one is already in flight"
+        );
+        if pool.is_serial() || arrivals.is_empty() {
+            fold_info(total, self.server_mut().aggregate(now, &arrivals));
+            return;
+        }
+        let mut server = self
+            .back
+            .take()
+            .expect("back slot present when no aggregate is in flight");
+        self.pending_agg = Some(pool.submit(move || {
+            let info = server.aggregate(now, &arrivals);
+            (server, info)
+        }));
+    }
+
+    /// Defer the eval due at tick `n` onto the in-flight aggregate.
+    /// Returns `false` when nothing is in flight (sample immediately).
+    pub fn mark_eval(&mut self, n: usize) -> bool {
+        if self.pending_agg.is_some() {
+            debug_assert!(self.eval_at.is_none(), "two evals deferred on one aggregate");
+            self.eval_at = Some(n);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Pipelined curve sample at tick `n`: publish the front-slot
+    /// snapshot and dispatch the MSE task. The sample itself runs on the
+    /// canonical kernel layer (`metrics::mse_test` ->
+    /// `crate::simd::mse_batch`), so pipelined, inline and deployment
+    /// evaluations agree bit for bit on every dispatch arm.
+    pub fn submit_eval(
+        &mut self,
+        n: usize,
+        z_test: &Arc<Vec<f32>>,
+        test_y: &Arc<Vec<f32>>,
+        pool: &PoolHandle,
+    ) {
+        // Join the previous in-flight sample first so `mse_db` stays in
+        // tick order (and so the front slot is reusable below).
+        self.join_eval();
+        self.iters.push(n);
+        let server = self
+            .back
+            .as_ref()
+            .expect("model read with an aggregate in flight; sync first");
+        publish(&mut self.front, &server.w);
+        let snapshot = Arc::clone(self.front.as_ref().expect("front slot just published"));
+        let z = Arc::clone(z_test);
+        let y = Arc::clone(test_y);
+        self.pending_eval = Some(pool.submit(move || mse_test(&snapshot, &z, &y)));
+    }
+
+    /// Record an inline curve sample at tick `n` (the serial path — no
+    /// snapshot, no task).
+    pub fn push_sample(&mut self, n: usize, mse: f64) {
+        self.join_eval();
+        self.iters.push(n);
+        self.mse_db.push(to_db(mse));
+    }
+
+    /// Join the in-flight curve sample, if any.
+    pub fn join_eval(&mut self) {
+        if let Some(h) = self.pending_eval.take() {
             self.mse_db.push(to_db(h.join()));
         }
     }
+
+    /// Curve iterations sampled so far ([`ModelBuffer::join_eval`] first
+    /// when an exact cut is needed).
+    pub fn iters(&self) -> &[usize] {
+        &self.iters
+    }
+
+    /// Curve values in dB, indexed like [`ModelBuffer::iters`].
+    pub fn mse_db(&self) -> &[f64] {
+        &self.mse_db
+    }
+
+    /// Restore a checkpointed curve (the resume path).
+    pub fn restore_curve(&mut self, iters: Vec<usize>, mse_db: Vec<f64>) {
+        self.iters = iters;
+        self.mse_db = mse_db;
+    }
+
+    /// Tear down: join the curve sample and hand back the server plus the
+    /// completed curve. Panics if an aggregate is still in flight.
+    pub fn into_parts(mut self) -> (Server, Vec<usize>, Vec<f64>) {
+        self.join_eval();
+        assert!(
+            self.pending_agg.is_none(),
+            "into_parts with an aggregate in flight; sync first"
+        );
+        let server = self
+            .back
+            .take()
+            .expect("back slot present when no aggregate is in flight");
+        (server, self.iters, self.mse_db)
+    }
+}
+
+/// Publish `w` into the front slot, reusing the existing allocation when
+/// the previous eval task has dropped its reference (the steady state —
+/// `submit_eval` joins the previous sample first).
+fn publish(front: &mut Option<Arc<Vec<f32>>>, w: &[f32]) {
+    if let Some(arc) = front {
+        if let Some(buf) = Arc::get_mut(arc) {
+            buf.copy_from_slice(w);
+            return;
+        }
+    }
+    *front = Some(Arc::new(w.to_vec()));
 }
 
 /// One engine run's full mutable state, advanced one federation iteration
@@ -246,11 +411,16 @@ pub struct TickPipeline<'e> {
     state: TickState,
     /// Per-client local models, `[K * D]`.
     w_locals: Vec<f32>,
-    server: Server,
+    /// The double-buffered server model (stages 7-8).
+    models: ModelBuffer,
     queue: DelayQueue<Update>,
     comm: CommStats,
     agg: AggregateInfo,
-    eval: EvalStage<'e>,
+    /// Shared copies of the featurized test set for pool-dispatched
+    /// evaluations (`'static` tasks cannot hold the `env` borrow). Built
+    /// lazily on the first pipelined sample, so serial runs never pay the
+    /// clone.
+    shared: Option<(Arc<Vec<f32>>, Arc<Vec<f32>>)>,
 }
 
 impl<'e> TickPipeline<'e> {
@@ -263,11 +433,11 @@ impl<'e> TickPipeline<'e> {
             schedule: SelectionSchedule::new(algo.schedule, d, algo.m, env.env_seed),
             state: TickState::new(k, d, l),
             w_locals: vec![0.0; k * d],
-            server: Server::new(d, algo.aggregation.clone()),
+            models: ModelBuffer::new(Server::new(d, algo.aggregation.clone())),
             queue: DelayQueue::for_run(&env.delay, env.stream.n_iters),
             comm: CommStats::default(),
             agg: AggregateInfo::default(),
-            eval: EvalStage::new(env),
+            shared: None,
             env,
             algo,
         }
@@ -297,20 +467,21 @@ impl<'e> TickPipeline<'e> {
         }
         let mut p = TickPipeline::new(env, algo);
         p.w_locals = snap.client_w.clone();
-        p.server = snap.server.rebuild(algo.aggregation.clone());
+        p.models = ModelBuffer::new(snap.server.rebuild(algo.aggregation.clone()));
+        p.models
+            .restore_curve(snap.curve_iters.clone(), snap.curve_db.clone());
         p.queue = snap.queue.rebuild()?;
         p.comm = snap.comm;
         p.agg = snap.agg;
-        p.eval.iters = snap.curve_iters.clone();
-        p.eval.mse_db = snap.curve_db.clone();
         Ok(p)
     }
 
     /// Capture the complete run state at the boundary before `next_tick`.
-    /// Joins any in-flight pipelined evaluation first — the eval-snapshot
-    /// rule makes that reordering invisible in the curve.
+    /// Joins any in-flight aggregate and pipelined evaluation first — the
+    /// buffer's sync rule makes that reordering invisible in the state.
     pub fn snapshot(&mut self, next_tick: usize) -> RunSnapshot {
-        self.eval.join_pending();
+        self.drain_pending(&PoolHandle::serial());
+        self.models.join_eval();
         RunSnapshot {
             tick: next_tick,
             env_seed: self.env.env_seed,
@@ -322,22 +493,25 @@ impl<'e> TickPipeline<'e> {
             algo: self.algo.clone(),
             delay: self.env.delay,
             schedule: self.schedule.clone(),
-            server: ServerState::capture(&self.server),
+            server: ServerState::capture(self.models.server()),
             queue: QueueState::capture(&self.queue),
             client_w: self.w_locals.clone(),
             rng: Vec::new(),
             comm: self.comm,
             agg: self.agg,
-            curve_iters: self.eval.iters.clone(),
-            curve_db: self.eval.mse_db.clone(),
+            curve_iters: self.models.iters().to_vec(),
+            curve_db: self.models.mse_db().to_vec(),
             local_steps: 0,
         }
     }
 
     /// The server model at the current tick boundary (the journal's
-    /// per-tick digest source).
-    pub fn server_model(&self) -> &[f32] {
-        &self.server.w
+    /// per-tick digest source). Joins any in-flight aggregate first, so a
+    /// journaled run re-serializes every tick — the determinism contract
+    /// outranks the overlap there.
+    pub fn server_model(&mut self) -> &[f32] {
+        self.drain_pending(&PoolHandle::serial());
+        &self.models.server().w
     }
 
     /// Communication totals so far (journaling).
@@ -346,6 +520,11 @@ impl<'e> TickPipeline<'e> {
     }
 
     /// Advance one federation iteration through all eight stages.
+    ///
+    /// Stages 1-4 read no model values, so the previous tick's overlapped
+    /// aggregate (and a curve sample deferred onto it) syncs *between*
+    /// stage 4 and stage 5 — that barrier is what makes the double-buffer
+    /// reordering invisible in every float the run produces.
     pub fn tick(
         &mut self,
         n: usize,
@@ -355,11 +534,40 @@ impl<'e> TickPipeline<'e> {
         self.stage_arrivals(n);
         self.stage_schedule(n);
         self.stage_downlink(n);
+        self.drain_pending(pool);
         self.stage_client_compute(backend, pool)?;
         self.stage_uplink(n);
-        self.stage_aggregate(n);
+        self.stage_aggregate(n, pool);
         self.stage_eval(n, pool);
         Ok(())
+    }
+
+    /// The sync barrier: land the in-flight aggregate, then pay any curve
+    /// sample that was deferred onto it (the model is now exactly the
+    /// post-aggregate state that eval tick owes).
+    fn drain_pending(&mut self, pool: &PoolHandle) {
+        if let Some(at) = self.models.sync(&mut self.agg) {
+            self.sample_eval(at, pool);
+        }
+    }
+
+    /// Sample the curve at tick `n`: inline on serial handles, pipelined
+    /// through the front slot otherwise.
+    fn sample_eval(&mut self, n: usize, pool: &PoolHandle) {
+        if pool.is_serial() {
+            self.models.join_eval();
+            let mse = mse_test(&self.models.server().w, &self.env.z_test, &self.env.stream.test_y);
+            self.models.push_sample(n, mse);
+            return;
+        }
+        let env = self.env;
+        let (z, y) = self.shared.get_or_insert_with(|| {
+            (
+                Arc::new(env.z_test.clone()),
+                Arc::new(env.stream.test_y.clone()),
+            )
+        });
+        self.models.submit_eval(n, z, y, pool);
     }
 
     /// Stages 1-2 — data arrivals from the materialized stream and
@@ -457,7 +665,7 @@ impl<'e> TickPipeline<'e> {
         backend.client_step_sharded(
             StepArgs {
                 w_locals: &mut self.w_locals,
-                w_global: &self.server.w,
+                w_global: &self.models.server().w,
                 recv_mask: &s.recv_mask,
                 x: &s.x,
                 y: &s.y,
@@ -488,33 +696,41 @@ impl<'e> TickPipeline<'e> {
         }
     }
 
-    /// Stage 7 — drain arrivals due at `n` and aggregate.
-    fn stage_aggregate(&mut self, n: usize) {
-        aggregate_arrivals(&mut self.server, &mut self.queue, n, &mut self.agg);
+    /// Stage 7 — drain arrivals due at `n` on the main thread (the
+    /// deterministic delivery order), then aggregate through the back
+    /// slot — overlapped with the next tick's stages 1-4 under a pool.
+    fn stage_aggregate(&mut self, n: usize, pool: &PoolHandle) {
+        let arrivals = self.queue.drain(n);
+        self.models.aggregate(n, arrivals, &mut self.agg, pool);
     }
 
     /// Stage 8 — sample the curve every `eval_every` ticks (and at the
-    /// end), pipelined on the pool under the eval-snapshot rule.
+    /// end). An eval tick whose aggregate is still in flight defers onto
+    /// it (the sample must read the post-aggregate model); otherwise the
+    /// sample dispatches now under the eval-snapshot rule.
     fn stage_eval(&mut self, n: usize, pool: &PoolHandle) {
         if n % self.algo.eval_every == 0 || n + 1 == self.env.stream.n_iters {
-            self.eval.submit(n, &self.server.w, pool);
+            if !self.models.mark_eval(n) {
+                self.sample_eval(n, pool);
+            }
         }
     }
 
-    /// Join any in-flight evaluation and assemble the run result.
-    pub fn finish(self) -> RunResult {
-        let final_mse = mse_test(&self.server.w, &self.env.z_test, &self.env.stream.test_y);
+    /// Land all in-flight work and assemble the run result.
+    pub fn finish(mut self) -> RunResult {
+        self.drain_pending(&PoolHandle::serial());
+        let final_mse = mse_test(
+            &self.models.server().w,
+            &self.env.z_test,
+            &self.env.stream.test_y,
+        );
         let TickPipeline {
-            mut eval,
-            server,
-            comm,
-            agg,
-            ..
+            models, comm, agg, ..
         } = self;
-        eval.join_pending();
+        let (server, iters, mse_db) = models.into_parts();
         RunResult {
-            iters: eval.iters,
-            mse_db: eval.mse_db,
+            iters,
+            mse_db,
             comm,
             final_w: server.w,
             agg,

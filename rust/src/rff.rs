@@ -133,6 +133,55 @@ impl RffSpace {
         simd::cos_scale(z, self.scale);
     }
 
+    /// One fused client step over this space: optional masked receive
+    /// blend, featurization of `x` into `z`, a-priori error
+    /// `e = y - <w, z>` under the canonical 8-lane dot, and the KLMS
+    /// update `w += (mu*e) * z` — all through
+    /// [`crate::simd::fused_step_row`] for the paper's L = 4 (two passes
+    /// over the row instead of four kernel calls), with the unfused
+    /// kernel sequence as the general-L path. Both paths are
+    /// bit-identical to the unfused sequence by the kernel contract, so
+    /// the engine's batched step and the deployment runtime's per-client
+    /// step land on the same bits whichever one runs.
+    pub fn fused_step(
+        &self,
+        x: &[f32],
+        w: &mut [f32],
+        blend: Option<(&[f32], &[f32])>,
+        z: &mut [f32],
+        y: f32,
+        mu: f32,
+    ) -> f32 {
+        debug_assert_eq!(x.len(), self.l);
+        let d = self.d;
+        if self.l == 4 {
+            let (o0, rest) = self.omega.split_at(d);
+            let (o1, rest) = rest.split_at(d);
+            let (o2, o3) = rest.split_at(d);
+            return simd::fused_step_row(
+                &self.b,
+                o0,
+                o1,
+                o2,
+                o3,
+                [x[0], x[1], x[2], x[3]],
+                self.scale,
+                w,
+                blend,
+                z,
+                y,
+                mu,
+            );
+        }
+        if let Some((wg, mask)) = blend {
+            simd::masked_blend(w, wg, mask);
+        }
+        self.features_into(x, z);
+        let e = y - simd::dot(w, z);
+        simd::axpy(w, mu * e, z);
+        e
+    }
+
     /// Featurize a batch `xs [T, L]` row-major into `[T, D]` row-major.
     pub fn features_batch(&self, xs: &[f32]) -> Vec<f32> {
         assert_eq!(xs.len() % self.l, 0);
@@ -238,6 +287,42 @@ mod tests {
         for (i, x) in xs.chunks(4).enumerate() {
             let single = rff.features(x);
             assert_eq!(&batch[i * 32..(i + 1) * 32], &single[..]);
+        }
+    }
+
+    #[test]
+    fn fused_step_matches_unfused_sequence_for_both_l_paths() {
+        // L = 4 routes through simd::fused_step_row; any other L runs the
+        // unfused sequence — both must land on the unfused bits exactly.
+        for l in [3usize, 4, 5] {
+            let mut rng = Pcg32::new(17, l as u64);
+            let rff = RffSpace::sample(l, 53, 1.0, &mut rng);
+            let x: Vec<f32> = (0..l).map(|_| rng.gaussian() as f32).collect();
+            let wg: Vec<f32> = (0..53).map(|_| rng.gaussian() as f32).collect();
+            let mask: Vec<f32> =
+                (0..53).map(|_| if rng.bernoulli(0.4) { 1.0 } else { 0.0 }).collect();
+            let w0: Vec<f32> = (0..53).map(|_| rng.gaussian() as f32).collect();
+            let (y, mu) = (0.8f32, 0.3f32);
+            for blend in [true, false] {
+                let bl = blend.then_some((&wg[..], &mask[..]));
+
+                let mut w_a = w0.clone();
+                let mut z_a = vec![0.0f32; 53];
+                let e_a = rff.fused_step(&x, &mut w_a, bl, &mut z_a, y, mu);
+
+                let mut w_b = w0.clone();
+                let mut z_b = vec![0.0f32; 53];
+                if blend {
+                    simd::masked_blend(&mut w_b, &wg, &mask);
+                }
+                rff.features_into(&x, &mut z_b);
+                let e_b = y - simd::dot(&w_b, &z_b);
+                simd::axpy(&mut w_b, mu * e_b, &z_b);
+
+                assert_eq!(e_a.to_bits(), e_b.to_bits(), "L={l} blend={blend}");
+                assert_eq!(w_a, w_b, "L={l} blend={blend}");
+                assert_eq!(z_a, z_b, "L={l} blend={blend}");
+            }
         }
     }
 

@@ -34,12 +34,21 @@
 //!
 //! [`active_level`] picks the widest available implementation once per
 //! process: AVX2 when detected at runtime, the SSE2 baseline otherwise on
-//! x86_64, NEON on aarch64, scalar everywhere else. Setting the
-//! environment variable `PAO_FED_FORCE_SCALAR` (to anything but `0` or
-//! the empty string) pins dispatch to the scalar reference — CI runs the
-//! whole test suite once per dispatch arm this way, and the property
-//! tests in `rust/tests/simd_kernels.rs` additionally compare the
-//! dispatched kernels against [`scalar`] directly on one machine.
+//! x86_64, NEON on aarch64, scalar everywhere else. Two environment
+//! variables override the pick:
+//!
+//! * `PAO_FED_SIMD_LEVEL` = `scalar` | `sse2` | `avx2` | `neon` pins
+//!   dispatch to exactly that arm — CI's dispatch matrix exercises every
+//!   mid-tier path (an AVX2 runner can run the SSE2 arm) on one machine.
+//!   An unknown name, or a level the host cannot execute, panics at first
+//!   kernel use: silently falling back would misreport which arm the run
+//!   exercised, and dispatching unavailable vector code is UB.
+//! * `PAO_FED_FORCE_SCALAR` (anything but `0` or the empty string) is the
+//!   older scalar-only switch, kept for compatibility;
+//!   `PAO_FED_SIMD_LEVEL` wins when both are set.
+//!
+//! The property tests in `rust/tests/simd_kernels.rs` additionally
+//! compare the dispatched kernels against [`scalar`] directly.
 //!
 //! Because every path is bit-identical, this layer composes silently with
 //! the other determinism contracts (the eval-snapshot rule, sorted-ack
@@ -106,11 +115,54 @@ fn pick_widest() -> SimdLevel {
     SimdLevel::Scalar
 }
 
+/// Whether this host can actually execute `level`'s kernels.
+fn available(level: SimdLevel) -> bool {
+    match level {
+        SimdLevel::Scalar => true,
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 => true,
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+        _ => false,
+    }
+}
+
+/// Parse a `PAO_FED_SIMD_LEVEL` value and check the host can run it.
+/// Split from [`active_level`]'s cache so the rule is unit-testable.
+fn resolve_override(value: &str) -> Result<SimdLevel, String> {
+    let want = match value.to_ascii_lowercase().as_str() {
+        "scalar" => SimdLevel::Scalar,
+        "sse2" => SimdLevel::Sse2,
+        "avx2" => SimdLevel::Avx2,
+        "neon" => SimdLevel::Neon,
+        other => {
+            return Err(format!(
+                "unknown level {other:?} (expected scalar, sse2, avx2 or neon)"
+            ))
+        }
+    };
+    if !available(want) {
+        return Err(format!("level {value:?} is not available on this host"));
+    }
+    Ok(want)
+}
+
 /// The dispatch level in effect for this process (detected once; honors
-/// `PAO_FED_FORCE_SCALAR`).
+/// `PAO_FED_SIMD_LEVEL`, then `PAO_FED_FORCE_SCALAR`).
 pub fn active_level() -> SimdLevel {
     static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
     *LEVEL.get_or_init(|| {
+        if let Some(v) = std::env::var_os("PAO_FED_SIMD_LEVEL") {
+            let v = v.to_string_lossy();
+            if !v.is_empty() {
+                return match resolve_override(&v) {
+                    Ok(level) => level,
+                    Err(msg) => panic!("PAO_FED_SIMD_LEVEL: {msg}"),
+                };
+            }
+        }
         let force = std::env::var_os("PAO_FED_FORCE_SCALAR")
             .is_some_and(|v| !v.is_empty() && v != "0");
         detect(force)
@@ -217,6 +269,54 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     }
 }
 
+/// Fused row-blocked client step (L = 4): optional masked blend,
+/// featurization, canonical 8-lane dot and the error-scaled axpy in two
+/// passes over the row instead of four kernel calls — bit-identical to
+/// the unfused `masked_blend`; `featurize4`; `dot`; `axpy` sequence on
+/// every dispatch level. See [`scalar::fused_step_row`]. Returns the
+/// a-priori error `e = y - <w_eff, z>`.
+#[inline]
+pub fn fused_step_row(
+    b: &[f32],
+    o0: &[f32],
+    o1: &[f32],
+    o2: &[f32],
+    o3: &[f32],
+    x: [f32; 4],
+    scale: f32,
+    w: &mut [f32],
+    blend: Option<(&[f32], &[f32])>,
+    z: &mut [f32],
+    y: f32,
+    mu: f32,
+) -> f32 {
+    let d = z.len();
+    // Unconditional: the vector arms read every slice through raw
+    // pointers at `z`-derived offsets, so a length mismatch from safe
+    // code must panic here, not read out of bounds in release builds.
+    assert!(b.len() == d && o0.len() == d && o1.len() == d && o2.len() == d && o3.len() == d);
+    assert_eq!(w.len(), d);
+    if let Some((wg, mask)) = blend {
+        assert_eq!(wg.len(), d);
+        assert_eq!(mask.len(), d);
+    }
+    match active_level() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe {
+            x86::fused_step_row_avx2(b, o0, o1, o2, o3, x, scale, w, blend, z, y, mu)
+        },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 => unsafe {
+            x86::fused_step_row_sse2(b, o0, o1, o2, o3, x, scale, w, blend, z, y, mu)
+        },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe {
+            neon::fused_step_row_neon(b, o0, o1, o2, o3, x, scale, w, blend, z, y, mu)
+        },
+        _ => scalar::fused_step_row(b, o0, o1, o2, o3, x, scale, w, blend, z, y, mu),
+    }
+}
+
 /// Batched test MSE over featurized rows: see [`scalar::mse_batch`].
 #[inline]
 pub fn mse_batch(w: &[f32], z_rows: &[f32], y: &[f32]) -> f64 {
@@ -244,6 +344,66 @@ mod tests {
         // Without forcing, x86_64/aarch64 hosts must pick a vector level.
         #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
         assert_ne!(detect(false), SimdLevel::Scalar);
+    }
+
+    #[test]
+    fn simd_level_override_parses_and_validates() {
+        // `scalar` is accepted everywhere, case-insensitively.
+        assert_eq!(resolve_override("scalar"), Ok(SimdLevel::Scalar));
+        assert_eq!(resolve_override("SCALAR"), Ok(SimdLevel::Scalar));
+        // Unknown names are an error, never a silent fallback.
+        assert!(resolve_override("avx512").is_err());
+        assert!(resolve_override("1").is_err());
+        // Host-specific: every name resolves iff the host can run it.
+        #[cfg(target_arch = "x86_64")]
+        {
+            assert_eq!(resolve_override("sse2"), Ok(SimdLevel::Sse2));
+            assert!(resolve_override("neon").is_err());
+            if std::arch::is_x86_feature_detected!("avx2") {
+                assert_eq!(resolve_override("avx2"), Ok(SimdLevel::Avx2));
+            } else {
+                assert!(resolve_override("avx2").is_err());
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            assert!(resolve_override("sse2").is_err());
+            assert!(resolve_override("avx2").is_err());
+        }
+    }
+
+    #[test]
+    fn fused_step_row_matches_unfused_smoke() {
+        // The cross-shape/cross-arm property tests live in
+        // tests/simd_kernels.rs; this is the in-crate smoke check on the
+        // dispatched arm.
+        let d = 37;
+        let gen = |k: usize, f: f32| -> Vec<f32> {
+            (0..d).map(|i| ((i * 7 + k) as f32 * f).sin()).collect()
+        };
+        let (b, o0, o1) = (gen(1, 0.3), gen(2, 0.11), gen(3, 0.23));
+        let (o2, o3) = (gen(4, 0.37), gen(5, 0.41));
+        let wg = gen(6, 0.53);
+        let mask: Vec<f32> = (0..d).map(|i| if i % 3 == 0 { 1.0 } else { 0.0 }).collect();
+        let x = [0.4f32, -1.1, 0.9, 0.05];
+        let (scale, y, mu) = (0.31f32, 0.7f32, 0.4f32);
+
+        let mut w_a = gen(7, 0.61);
+        let mut z_a = vec![0.0f32; d];
+        let e_a = fused_step_row(
+            &b, &o0, &o1, &o2, &o3, x, scale, &mut w_a, Some((&wg, &mask)), &mut z_a, y, mu,
+        );
+
+        let mut w_b = gen(7, 0.61);
+        let mut z_b = vec![0.0f32; d];
+        masked_blend(&mut w_b, &wg, &mask);
+        featurize4(&b, &o0, &o1, &o2, &o3, x, scale, &mut z_b);
+        let e_b = y - dot(&w_b, &z_b);
+        axpy(&mut w_b, mu * e_b, &z_b);
+
+        assert_eq!(e_a.to_bits(), e_b.to_bits());
+        assert_eq!(w_a, w_b);
+        assert_eq!(z_a, z_b);
     }
 
     #[test]

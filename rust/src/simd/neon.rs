@@ -158,6 +158,108 @@ pub unsafe fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
     sum
 }
 
+/// NEON [`scalar::fused_step_row`]: canonical 8-element blocks as two
+/// 4-wide halves into the `acc_lo`/`acc_hi` pair (lanes 0..4 / 4..8),
+/// the same reduction shape as [`dot_neon`]; `d mod 8` tail fully scalar.
+#[target_feature(enable = "neon")]
+pub unsafe fn fused_step_row_neon(
+    b: &[f32],
+    o0: &[f32],
+    o1: &[f32],
+    o2: &[f32],
+    o3: &[f32],
+    x: [f32; 4],
+    scale: f32,
+    w: &mut [f32],
+    blend: Option<(&[f32], &[f32])>,
+    z: &mut [f32],
+    y: f32,
+    mu: f32,
+) -> f32 {
+    let d = z.len();
+    let blocks = d / 8;
+    let (x0, x1) = (vdupq_n_f32(x[0]), vdupq_n_f32(x[1]));
+    let (x2, x3) = (vdupq_n_f32(x[2]), vdupq_n_f32(x[3]));
+    let vs = vdupq_n_f32(scale);
+    let mut acc_lo = vdupq_n_f32(0.0);
+    let mut acc_hi = vdupq_n_f32(0.0);
+    match blend {
+        Some((wg, mask)) => {
+            let one = vdupq_n_f32(1.0);
+            let zero = vdupq_n_f32(0.0);
+            for i in 0..blocks {
+                for half in 0..2 {
+                    let off = i * 8 + half * 4;
+                    let pw = w.as_mut_ptr().add(off);
+                    let wv = vld1q_f32(pw);
+                    let gv = vld1q_f32(wg.as_ptr().add(off));
+                    let mv = vld1q_f32(mask.as_ptr().add(off));
+                    let live = vmvnq_u32(vceqq_f32(mv, zero));
+                    let blended =
+                        vaddq_f32(vmulq_f32(mv, gv), vmulq_f32(vsubq_f32(one, mv), wv));
+                    let weff = vbslq_f32(live, blended, wv);
+                    vst1q_f32(pw, weff);
+                    let mut p = vld1q_f32(b.as_ptr().add(off));
+                    p = vaddq_f32(p, vmulq_f32(x0, vld1q_f32(o0.as_ptr().add(off))));
+                    p = vaddq_f32(p, vmulq_f32(x1, vld1q_f32(o1.as_ptr().add(off))));
+                    p = vaddq_f32(p, vmulq_f32(x2, vld1q_f32(o2.as_ptr().add(off))));
+                    p = vaddq_f32(p, vmulq_f32(x3, vld1q_f32(o3.as_ptr().add(off))));
+                    let zv = vmulq_f32(vs, fast_cos_f32x4(p));
+                    vst1q_f32(z.as_mut_ptr().add(off), zv);
+                    let prod = vmulq_f32(weff, zv);
+                    if half == 0 {
+                        acc_lo = vaddq_f32(acc_lo, prod);
+                    } else {
+                        acc_hi = vaddq_f32(acc_hi, prod);
+                    }
+                }
+            }
+            for j in blocks * 8..d {
+                let m = mask[j];
+                if m != 0.0 {
+                    w[j] = m * wg[j] + (1.0 - m) * w[j];
+                }
+                let phase = b[j] + x[0] * o0[j] + x[1] * o1[j] + x[2] * o2[j] + x[3] * o3[j];
+                z[j] = scale * scalar::fast_cos(phase);
+            }
+        }
+        None => {
+            for i in 0..blocks {
+                for half in 0..2 {
+                    let off = i * 8 + half * 4;
+                    let wv = vld1q_f32(w.as_ptr().add(off));
+                    let mut p = vld1q_f32(b.as_ptr().add(off));
+                    p = vaddq_f32(p, vmulq_f32(x0, vld1q_f32(o0.as_ptr().add(off))));
+                    p = vaddq_f32(p, vmulq_f32(x1, vld1q_f32(o1.as_ptr().add(off))));
+                    p = vaddq_f32(p, vmulq_f32(x2, vld1q_f32(o2.as_ptr().add(off))));
+                    p = vaddq_f32(p, vmulq_f32(x3, vld1q_f32(o3.as_ptr().add(off))));
+                    let zv = vmulq_f32(vs, fast_cos_f32x4(p));
+                    vst1q_f32(z.as_mut_ptr().add(off), zv);
+                    let prod = vmulq_f32(wv, zv);
+                    if half == 0 {
+                        acc_lo = vaddq_f32(acc_lo, prod);
+                    } else {
+                        acc_hi = vaddq_f32(acc_hi, prod);
+                    }
+                }
+            }
+            for j in blocks * 8..d {
+                let phase = b[j] + x[0] * o0[j] + x[1] * o1[j] + x[2] * o2[j] + x[3] * o3[j];
+                z[j] = scale * scalar::fast_cos(phase);
+            }
+        }
+    }
+    let v4 = vaddq_f32(acc_lo, acc_hi);
+    let v2 = vadd_f32(vget_low_f32(v4), vget_high_f32(v4));
+    let mut pred = vget_lane_f32::<0>(v2) + vget_lane_f32::<1>(v2);
+    for j in blocks * 8..d {
+        pred += w[j] * z[j];
+    }
+    let e = y - pred;
+    axpy_neon(w, mu * e, z);
+    e
+}
+
 /// NEON [`scalar::mse_batch`].
 #[target_feature(enable = "neon")]
 pub unsafe fn mse_batch_neon(w: &[f32], z_rows: &[f32], y: &[f32]) -> f64 {

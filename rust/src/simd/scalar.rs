@@ -167,6 +167,101 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     sum
 }
 
+/// Fused row-blocked client step (L = 4), the canonical reference for
+/// [`crate::simd::fused_step_row`]: one pass over the D-dim row in
+/// canonical [`LANES`]-element blocks performing, per element,
+///
+/// 1. the optional masked receive blend (`blend = Some((w_global, mask))`
+///    applies [`masked_blend`]'s per-element program; `None` skips it —
+///    the deployment runtime applies its downlink portion by coordinate
+///    overwrite before stepping),
+/// 2. the [`featurize4`] program (`z[j] = scale * fast_cos(phase)`), and
+/// 3. the lane-`l` dot accumulation `acc[l] += w[j] * z[j]`,
+///
+/// then collapses the lanes through the canonical tree
+/// `((l0+l4) + (l2+l6)) + ((l1+l5) + (l3+l7))`, adds the `d mod 8` tail
+/// products sequentially in ascending order, forms the a-priori error
+/// `e = y - pred`, and closes with the [`axpy`] pass `w += (mu*e) * z`.
+///
+/// Every per-element program and the whole reduction order are exactly
+/// the ones the unfused kernel sequence (`masked_blend`; `featurize4`;
+/// `dot`; `axpy`) executes, so the fused step is bit-identical to it on
+/// every dispatch level — the existing kernel goldens pin this program
+/// too, with no re-pins. What fusion buys is memory traffic: `w` and `z`
+/// are read/written once per pass instead of once per kernel.
+#[inline]
+pub fn fused_step_row(
+    b: &[f32],
+    o0: &[f32],
+    o1: &[f32],
+    o2: &[f32],
+    o3: &[f32],
+    x: [f32; 4],
+    scale: f32,
+    w: &mut [f32],
+    blend: Option<(&[f32], &[f32])>,
+    z: &mut [f32],
+    y: f32,
+    mu: f32,
+) -> f32 {
+    let d = z.len();
+    debug_assert_eq!(w.len(), d);
+    let blocks = d / LANES;
+    let mut acc = [0.0f32; LANES];
+    match blend {
+        Some((wg, mask)) => {
+            debug_assert!(wg.len() == d && mask.len() == d);
+            for i in 0..blocks {
+                let base = i * LANES;
+                for l in 0..LANES {
+                    let j = base + l;
+                    let m = mask[j];
+                    if m != 0.0 {
+                        w[j] = m * wg[j] + (1.0 - m) * w[j];
+                    }
+                    let phase =
+                        b[j] + x[0] * o0[j] + x[1] * o1[j] + x[2] * o2[j] + x[3] * o3[j];
+                    z[j] = scale * fast_cos(phase);
+                    acc[l] += w[j] * z[j];
+                }
+            }
+            for j in blocks * LANES..d {
+                let m = mask[j];
+                if m != 0.0 {
+                    w[j] = m * wg[j] + (1.0 - m) * w[j];
+                }
+                let phase = b[j] + x[0] * o0[j] + x[1] * o1[j] + x[2] * o2[j] + x[3] * o3[j];
+                z[j] = scale * fast_cos(phase);
+            }
+        }
+        None => {
+            for i in 0..blocks {
+                let base = i * LANES;
+                for l in 0..LANES {
+                    let j = base + l;
+                    let phase =
+                        b[j] + x[0] * o0[j] + x[1] * o1[j] + x[2] * o2[j] + x[3] * o3[j];
+                    z[j] = scale * fast_cos(phase);
+                    acc[l] += w[j] * z[j];
+                }
+            }
+            for j in blocks * LANES..d {
+                let phase = b[j] + x[0] * o0[j] + x[1] * o1[j] + x[2] * o2[j] + x[3] * o3[j];
+                z[j] = scale * fast_cos(phase);
+            }
+        }
+    }
+    let mut pred =
+        ((acc[0] + acc[4]) + (acc[2] + acc[6])) + ((acc[1] + acc[5]) + (acc[3] + acc[7]));
+    // Tail products join *after* the tree, ascending — `dot`'s order.
+    for j in blocks * LANES..d {
+        pred += w[j] * z[j];
+    }
+    let e = y - pred;
+    axpy(w, mu * e, z);
+    e
+}
+
 /// Batched test MSE: per row `t` of `z_rows [T, D]`, the prediction is
 /// the canonical [`dot`] of the row with `w`, and the squared residual
 /// `(y[t] - pred)^2` accumulates in f64 sequentially over rows (the f64

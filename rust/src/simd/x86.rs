@@ -181,6 +181,99 @@ pub unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
     sum
 }
 
+/// AVX2 [`scalar::fused_step_row`]: blend, featurize and dot-accumulate
+/// per 8-lane block with `w`/`z` resident in registers between the three
+/// per-element programs, then the canonical tree, ascending scalar tail,
+/// and the [`axpy_avx2`] closing pass.
+#[target_feature(enable = "avx2")]
+pub unsafe fn fused_step_row_avx2(
+    b: &[f32],
+    o0: &[f32],
+    o1: &[f32],
+    o2: &[f32],
+    o3: &[f32],
+    x: [f32; 4],
+    scale: f32,
+    w: &mut [f32],
+    blend: Option<(&[f32], &[f32])>,
+    z: &mut [f32],
+    y: f32,
+    mu: f32,
+) -> f32 {
+    let d = z.len();
+    let blocks = d / 8;
+    let (x0, x1) = (_mm256_set1_ps(x[0]), _mm256_set1_ps(x[1]));
+    let (x2, x3) = (_mm256_set1_ps(x[2]), _mm256_set1_ps(x[3]));
+    let vs = _mm256_set1_ps(scale);
+    let mut acc = _mm256_setzero_ps();
+    match blend {
+        Some((wg, mask)) => {
+            let one = _mm256_set1_ps(1.0);
+            let zero = _mm256_setzero_ps();
+            for i in 0..blocks {
+                let off = i * 8;
+                let pw = w.as_mut_ptr().add(off);
+                let wv = _mm256_loadu_ps(pw);
+                let gv = _mm256_loadu_ps(wg.as_ptr().add(off));
+                let mv = _mm256_loadu_ps(mask.as_ptr().add(off));
+                let live = _mm256_cmp_ps::<_CMP_NEQ_UQ>(mv, zero);
+                let blended = _mm256_add_ps(
+                    _mm256_mul_ps(mv, gv),
+                    _mm256_mul_ps(_mm256_sub_ps(one, mv), wv),
+                );
+                let weff = _mm256_blendv_ps(wv, blended, live);
+                _mm256_storeu_ps(pw, weff);
+                let mut p = _mm256_loadu_ps(b.as_ptr().add(off));
+                p = _mm256_add_ps(p, _mm256_mul_ps(x0, _mm256_loadu_ps(o0.as_ptr().add(off))));
+                p = _mm256_add_ps(p, _mm256_mul_ps(x1, _mm256_loadu_ps(o1.as_ptr().add(off))));
+                p = _mm256_add_ps(p, _mm256_mul_ps(x2, _mm256_loadu_ps(o2.as_ptr().add(off))));
+                p = _mm256_add_ps(p, _mm256_mul_ps(x3, _mm256_loadu_ps(o3.as_ptr().add(off))));
+                let zv = _mm256_mul_ps(vs, fast_cos_ps256(p));
+                _mm256_storeu_ps(z.as_mut_ptr().add(off), zv);
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(weff, zv));
+            }
+            for j in blocks * 8..d {
+                let m = mask[j];
+                if m != 0.0 {
+                    w[j] = m * wg[j] + (1.0 - m) * w[j];
+                }
+                let phase = b[j] + x[0] * o0[j] + x[1] * o1[j] + x[2] * o2[j] + x[3] * o3[j];
+                z[j] = scale * scalar::fast_cos(phase);
+            }
+        }
+        None => {
+            for i in 0..blocks {
+                let off = i * 8;
+                let wv = _mm256_loadu_ps(w.as_ptr().add(off));
+                let mut p = _mm256_loadu_ps(b.as_ptr().add(off));
+                p = _mm256_add_ps(p, _mm256_mul_ps(x0, _mm256_loadu_ps(o0.as_ptr().add(off))));
+                p = _mm256_add_ps(p, _mm256_mul_ps(x1, _mm256_loadu_ps(o1.as_ptr().add(off))));
+                p = _mm256_add_ps(p, _mm256_mul_ps(x2, _mm256_loadu_ps(o2.as_ptr().add(off))));
+                p = _mm256_add_ps(p, _mm256_mul_ps(x3, _mm256_loadu_ps(o3.as_ptr().add(off))));
+                let zv = _mm256_mul_ps(vs, fast_cos_ps256(p));
+                _mm256_storeu_ps(z.as_mut_ptr().add(off), zv);
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(wv, zv));
+            }
+            for j in blocks * 8..d {
+                let phase = b[j] + x[0] * o0[j] + x[1] * o1[j] + x[2] * o2[j] + x[3] * o3[j];
+                z[j] = scale * scalar::fast_cos(phase);
+            }
+        }
+    }
+    let lo = _mm256_castps256_ps128(acc);
+    let hi = _mm256_extractf128_ps::<1>(acc);
+    let v4 = _mm_add_ps(lo, hi);
+    let v2 = _mm_add_ps(v4, _mm_movehl_ps(v4, v4));
+    let v1 = _mm_add_ss(v2, _mm_shuffle_ps::<0b01>(v2, v2));
+    let mut pred = _mm_cvtss_f32(v1);
+    for j in blocks * 8..d {
+        pred += w[j] * z[j];
+    }
+    let e = y - pred;
+    axpy_avx2(w, mu * e, z);
+    e
+}
+
 /// AVX2 [`scalar::mse_batch`] (per-row [`dot_avx2`], sequential f64
 /// accumulation).
 #[target_feature(enable = "avx2")]
@@ -368,6 +461,110 @@ pub unsafe fn dot_sse2(a: &[f32], b: &[f32]) -> f32 {
         sum += a[j] * b[j];
     }
     sum
+}
+
+/// SSE2 [`scalar::fused_step_row`]: each canonical 8-element block runs
+/// as two 4-wide halves whose lane products land in the `acc_lo`/`acc_hi`
+/// register pair (lanes 0..4 / 4..8), so `acc_lo + acc_hi` is the same
+/// first fold AVX2's 256→128 extraction performs; the `d mod 8` tail is
+/// fully scalar, exactly like [`dot_sse2`]'s.
+pub unsafe fn fused_step_row_sse2(
+    b: &[f32],
+    o0: &[f32],
+    o1: &[f32],
+    o2: &[f32],
+    o3: &[f32],
+    x: [f32; 4],
+    scale: f32,
+    w: &mut [f32],
+    blend: Option<(&[f32], &[f32])>,
+    z: &mut [f32],
+    y: f32,
+    mu: f32,
+) -> f32 {
+    let d = z.len();
+    let blocks = d / 8;
+    let (x0, x1) = (_mm_set1_ps(x[0]), _mm_set1_ps(x[1]));
+    let (x2, x3) = (_mm_set1_ps(x[2]), _mm_set1_ps(x[3]));
+    let vs = _mm_set1_ps(scale);
+    let mut acc_lo = _mm_setzero_ps();
+    let mut acc_hi = _mm_setzero_ps();
+    match blend {
+        Some((wg, mask)) => {
+            let one = _mm_set1_ps(1.0);
+            let zero = _mm_setzero_ps();
+            for i in 0..blocks {
+                for half in 0..2 {
+                    let off = i * 8 + half * 4;
+                    let pw = w.as_mut_ptr().add(off);
+                    let wv = _mm_loadu_ps(pw);
+                    let gv = _mm_loadu_ps(wg.as_ptr().add(off));
+                    let mv = _mm_loadu_ps(mask.as_ptr().add(off));
+                    let live = _mm_cmpneq_ps(mv, zero);
+                    let blended =
+                        _mm_add_ps(_mm_mul_ps(mv, gv), _mm_mul_ps(_mm_sub_ps(one, mv), wv));
+                    let weff = select128(wv, blended, live);
+                    _mm_storeu_ps(pw, weff);
+                    let mut p = _mm_loadu_ps(b.as_ptr().add(off));
+                    p = _mm_add_ps(p, _mm_mul_ps(x0, _mm_loadu_ps(o0.as_ptr().add(off))));
+                    p = _mm_add_ps(p, _mm_mul_ps(x1, _mm_loadu_ps(o1.as_ptr().add(off))));
+                    p = _mm_add_ps(p, _mm_mul_ps(x2, _mm_loadu_ps(o2.as_ptr().add(off))));
+                    p = _mm_add_ps(p, _mm_mul_ps(x3, _mm_loadu_ps(o3.as_ptr().add(off))));
+                    let zv = _mm_mul_ps(vs, fast_cos_ps128(p));
+                    _mm_storeu_ps(z.as_mut_ptr().add(off), zv);
+                    let prod = _mm_mul_ps(weff, zv);
+                    if half == 0 {
+                        acc_lo = _mm_add_ps(acc_lo, prod);
+                    } else {
+                        acc_hi = _mm_add_ps(acc_hi, prod);
+                    }
+                }
+            }
+            for j in blocks * 8..d {
+                let m = mask[j];
+                if m != 0.0 {
+                    w[j] = m * wg[j] + (1.0 - m) * w[j];
+                }
+                let phase = b[j] + x[0] * o0[j] + x[1] * o1[j] + x[2] * o2[j] + x[3] * o3[j];
+                z[j] = scale * scalar::fast_cos(phase);
+            }
+        }
+        None => {
+            for i in 0..blocks {
+                for half in 0..2 {
+                    let off = i * 8 + half * 4;
+                    let wv = _mm_loadu_ps(w.as_ptr().add(off));
+                    let mut p = _mm_loadu_ps(b.as_ptr().add(off));
+                    p = _mm_add_ps(p, _mm_mul_ps(x0, _mm_loadu_ps(o0.as_ptr().add(off))));
+                    p = _mm_add_ps(p, _mm_mul_ps(x1, _mm_loadu_ps(o1.as_ptr().add(off))));
+                    p = _mm_add_ps(p, _mm_mul_ps(x2, _mm_loadu_ps(o2.as_ptr().add(off))));
+                    p = _mm_add_ps(p, _mm_mul_ps(x3, _mm_loadu_ps(o3.as_ptr().add(off))));
+                    let zv = _mm_mul_ps(vs, fast_cos_ps128(p));
+                    _mm_storeu_ps(z.as_mut_ptr().add(off), zv);
+                    let prod = _mm_mul_ps(wv, zv);
+                    if half == 0 {
+                        acc_lo = _mm_add_ps(acc_lo, prod);
+                    } else {
+                        acc_hi = _mm_add_ps(acc_hi, prod);
+                    }
+                }
+            }
+            for j in blocks * 8..d {
+                let phase = b[j] + x[0] * o0[j] + x[1] * o1[j] + x[2] * o2[j] + x[3] * o3[j];
+                z[j] = scale * scalar::fast_cos(phase);
+            }
+        }
+    }
+    let v4 = _mm_add_ps(acc_lo, acc_hi);
+    let v2 = _mm_add_ps(v4, _mm_movehl_ps(v4, v4));
+    let v1 = _mm_add_ss(v2, _mm_shuffle_ps::<0b01>(v2, v2));
+    let mut pred = _mm_cvtss_f32(v1);
+    for j in blocks * 8..d {
+        pred += w[j] * z[j];
+    }
+    let e = y - pred;
+    axpy_sse2(w, mu * e, z);
+    e
 }
 
 /// SSE2 [`scalar::mse_batch`].

@@ -193,6 +193,34 @@ fn pipelined_eval_curve_is_bitwise_identical() {
 }
 
 #[test]
+fn double_buffered_aggregate_matches_serial_bitwise() {
+    // With a pool the server model is double-buffered: stage 7 moves the
+    // server into a one-shot task that overlaps the next tick's
+    // arrivals/schedule/downlink, and an eval tick that lands while the
+    // aggregate is in flight defers onto it (it must read the
+    // post-aggregate model). Geometric delays keep the arrival sets
+    // non-empty so the async path actually engages; a short eval period
+    // forces many deferred samples. Curves, final model and aggregation
+    // diagnostics must be exactly the serial run's.
+    let (env, mut be) = big_env(17);
+    let algo = build(Variant::PaoFedU1, 0.4, 4, 10, 5);
+    let serial = engine::run(&env, &algo, &mut be).unwrap();
+    for workers in [1usize, 2, 4] {
+        let pool = PoolHandle::with_pool(Arc::new(WorkerPool::new(workers)), workers + 1);
+        let piped = engine::run_sharded(&env, &algo, &mut be, &pool).unwrap();
+        assert_eq!(serial.iters, piped.iters, "iters diverged at {workers} workers");
+        assert_eq!(serial.mse_db, piped.mse_db, "curve diverged at {workers} workers");
+        assert_eq!(serial.final_w, piped.final_w, "model diverged at {workers} workers");
+        assert_eq!(serial.final_mse, piped.final_mse);
+        assert_eq!(serial.agg.applied, piped.agg.applied);
+        assert_eq!(serial.agg.discarded_stale, piped.agg.discarded_stale);
+        assert_eq!(serial.agg.conflicts_resolved, piped.agg.conflicts_resolved);
+        assert_eq!(serial.agg.touched_coords, piped.agg.touched_coords);
+        assert_eq!(serial.comm.uplink_scalars, piped.comm.uplink_scalars);
+    }
+}
+
+#[test]
 fn tiny_runs_unaffected_by_shard_request() {
     // K = 16 is far below the shard threshold: the request must be a no-op.
     let ctx = small_ctx(Parallelism {

@@ -139,6 +139,38 @@ fn snapshot_resumes_bit_identically_across_dispatch_paths() {
     assert_results_equal(&reference, &resumed, "serial snapshot -> pooled resume");
 }
 
+/// Double-buffer persistence: rolling checkpoints taken from a *pooled*
+/// run — where the boundary must first land any in-flight aggregate (and
+/// the curve sample deferred onto it) and join the pipelined evaluation —
+/// carry the same bits as serial checkpoints, and the crash state they
+/// leave resumes bit-identically on either dispatch path.
+#[test]
+fn pooled_double_buffer_checkpoint_resume_is_bit_identical() {
+    let dir = tmp_dir("double_buffer");
+    let (env, mut be) = tiny_env(23);
+    let algo = algorithms::build(Variant::PaoFedU2, 0.4, 4, 10, 10);
+    let serial = PoolHandle::serial();
+    let pooled = PoolHandle::global(3);
+
+    let reference = engine::run(&env, &algo, &mut be).unwrap();
+
+    // Pooled journaled run with rolling checkpoints: every boundary syncs
+    // the back slot and cuts the curve exactly.
+    let p = PersistPolicy { path: dir.join("db.ckpt"), checkpoint_every: 35, resume: false };
+    let r = engine::run_resumable(&env, &algo, &mut be, &pooled, &p).unwrap();
+    assert_results_equal(&reference, &r, "pooled checkpointing run");
+    let snap = snapshot::read_file(&p.path).unwrap();
+    assert_eq!(snap.tick, 175, "rolling checkpoint should be the last boundary");
+
+    // Resume the crash state on the pooled path...
+    let presume = PersistPolicy { resume: true, ..p.clone() };
+    let r2 = engine::run_resumable(&env, &algo, &mut be, &pooled, &presume).unwrap();
+    assert_results_equal(&reference, &r2, "pooled resume");
+    // ...and the same on-disk state on the serial path.
+    let r3 = engine::run_resumable(&env, &algo, &mut be, &serial, &presume).unwrap();
+    assert_results_equal(&reference, &r3, "pooled snapshot -> serial resume");
+}
+
 /// The deployment contract: a run stopped gracefully at a tick boundary
 /// (`run_until` + final checkpoint) and resumed finishes bit-identically
 /// — curve, model, counters, local steps and journal.

@@ -204,6 +204,64 @@ fn mse_batch_matches_scalar_bitwise_across_shapes() {
 }
 
 #[test]
+fn fused_step_row_matches_unfused_scalar_sequence_across_shapes() {
+    // The fused client-step kernel is *defined* as the unfused sequence
+    // masked_blend -> featurize4 -> dot -> axpy run in one pass; whatever
+    // arm the dispatcher picked (or `PAO_FED_SIMD_LEVEL` pinned — the CI
+    // matrix runs this test once per level) must reproduce the scalar
+    // composition bit for bit: the error, the feature row and the updated
+    // weights.
+    let mut rng = Pcg32::new(48, 0);
+    for &d in &[0usize, 1, 7, 8, 9, 200, 201] {
+        for rep in 0..4 {
+            let b = awkward_vec(&mut rng, d);
+            let o0 = awkward_vec(&mut rng, d);
+            let o1 = awkward_vec(&mut rng, d);
+            let o2 = awkward_vec(&mut rng, d);
+            let o3 = awkward_vec(&mut rng, d);
+            let x = [rng.gaussian() as f32, 0.0, -2.5, 1e-4];
+            let wg = awkward_vec(&mut rng, d);
+            let masks: Vec<Option<Vec<f32>>> = vec![
+                None,
+                Some(vec![0.0; d]),
+                Some(vec![1.0; d]),
+                Some((0..d).map(|_| if rng.bernoulli(0.4) { 1.0 } else { 0.0 }).collect()),
+            ];
+            for (mi, mask) in masks.iter().enumerate() {
+                let w0 = awkward_vec(&mut rng, d);
+                let y = rng.gaussian() as f32;
+                let mu = 0.25f32;
+
+                let mut w_got = w0.clone();
+                let mut z_got = vec![0.0f32; d];
+                let blend = mask.as_ref().map(|m| (&wg[..], &m[..]));
+                let e_got = simd::fused_step_row(
+                    &b, &o0, &o1, &o2, &o3, x, 0.1, &mut w_got, blend, &mut z_got, y, mu,
+                );
+
+                let mut w_want = w0.clone();
+                let mut z_want = vec![0.0f32; d];
+                if let Some(m) = mask {
+                    simd::scalar::masked_blend(&mut w_want, &wg, m);
+                }
+                simd::scalar::featurize4(&b, &o0, &o1, &o2, &o3, x, 0.1, &mut z_want);
+                let e_want = y - simd::scalar::dot(&w_want, &z_want);
+                simd::scalar::axpy(&mut w_want, mu * e_want, &z_want);
+
+                assert_eq!(
+                    e_got.to_bits(),
+                    e_want.to_bits(),
+                    "fused e d={d} rep={rep} mask#{mi}: {e_got} vs {e_want} (level {:?})",
+                    simd::active_level()
+                );
+                assert_bits_eq(&z_got, &z_want, &format!("fused z d={d} rep={rep} mask#{mi}"));
+                assert_bits_eq(&w_got, &w_want, &format!("fused w d={d} rep={rep} mask#{mi}"));
+            }
+        }
+    }
+}
+
+#[test]
 fn featurization_through_rff_space_matches_scalar_kernels() {
     // End-to-end: RffSpace::features_into (the dispatched path) against a
     // hand-run of the scalar kernels, for the fused L = 4 shape and the
