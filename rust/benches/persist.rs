@@ -77,6 +77,7 @@ fn paper_scale_snapshot() -> RunSnapshot {
         curve_iters: (0..20).map(|i| i * 50).collect(),
         curve_db: (0..20).map(|i| -(i as f64) * 0.7).collect(),
         local_steps: 1 << 20,
+        topology: Vec::new(),
     }
 }
 

@@ -13,11 +13,24 @@
 //! machine (ISSUE 1), and the pool beating scoped spawn-per-call dispatch
 //! on client-step-shaped jobs (ISSUE 2). Results depend on the host; the
 //! bench prints the detected core count alongside each ratio.
+//!
+//! A second axis measures fleet-memory scaling (`BENCH_8.json`, target
+//! `scaling`): generative [`SubtreeAssignment`] frame bytes versus the
+//! materialized flat-fleet `Hello` as K grows 10x, the root's aggregation
+//! scratch footprint under a K-sized streaming fold, and an end-to-end
+//! 2-level aggregator-tree loopback run at K >= 1M (trimmed under
+//! `PAO_FED_BENCH_FAST`), bit-identity-checked against the in-process
+//! deployment at a verifiable K.
 
 mod bench_harness;
 
 use bench_harness::Bench;
-use pao_fed::data::stream::{FedStream, StreamConfig};
+use pao_fed::async_rt::wire::{self, ClientShard, SubtreeAssignment, WireMsg, WorkerAssignment};
+use pao_fed::async_rt::{
+    run_deployment, run_deployment_tcp, run_relay, run_worker_with, DeploymentConfig,
+    DeploymentReport, TreeConfig, WorkerOptions,
+};
+use pao_fed::data::stream::{FedStream, SourceSpec, StreamConfig, StreamSpec};
 use pao_fed::data::synthetic::Eq39Source;
 use pao_fed::experiments::common::{run_variants, PaperEnv};
 use pao_fed::experiments::{BackendKind, ExperimentCtx, Parallelism};
@@ -25,12 +38,16 @@ use pao_fed::fl::algorithms::{build, Variant};
 use pao_fed::fl::backend::NativeBackend;
 use pao_fed::fl::delay::DelayModel;
 use pao_fed::fl::engine::{self, Environment};
-use pao_fed::fl::participation::Participation;
+use pao_fed::fl::participation::{AvailSpec, Participation};
+use pao_fed::fl::selection::Coords;
+use pao_fed::fl::server::{Server, Update};
 use pao_fed::rff::RffSpace;
 use pao_fed::util::parallel::{available_cores, parallel_map, scoped_map};
 use pao_fed::util::pool::PoolHandle;
 use pao_fed::util::rng::Pcg32;
 use pao_fed::util::Stopwatch;
+use std::net::TcpListener;
+use std::time::Duration;
 
 /// Monte-Carlo scaling configuration: mc = 8 realizations of a reduced
 /// fig3a-style environment.
@@ -207,6 +224,273 @@ fn bench_pool_vs_scoped(b: &mut Bench) {
     b.record_secs("dispatch/pool", t_pool);
 }
 
+// ------------------------------------------------------- fleet memory in K
+
+/// Availability-group probabilities shared by every fleet-scaling scenario
+/// (must match between the server's [`Participation`] and the generative
+/// [`AvailSpec`] shipped in assignments).
+const AVAIL_PROBS: [f64; 4] = [0.25, 0.1, 0.025, 0.005];
+
+/// Encoded size of the generative tree handshake for a fleet of `k`
+/// clients: the frame carries a *recipe* ([`StreamSpec`] + [`AvailSpec`]),
+/// so its length must stay flat as K grows.
+fn subtree_frame_bytes(k: usize) -> usize {
+    let seed = 2023;
+    let n = 2000;
+    let spec = StreamSpec {
+        config: StreamConfig {
+            n_clients: k,
+            n_iters: n,
+            data_group_samples: vec![n / 4, n / 2, 3 * n / 4, n],
+            test_size: 200,
+        },
+        source: SourceSpec::Eq39 { seed },
+        seed,
+    };
+    let msg = WireMsg::SubtreeAssignment(SubtreeAssignment {
+        client_lo: 0,
+        client_hi: k / 2,
+        leaf_lo: 0,
+        fanout: 2,
+        n_leaves: 4,
+        env_seed: seed,
+        n_iters: n,
+        algo: build(Variant::PaoFedC2, 0.4, 4, 10, 50),
+        rff: RffSpace::sample(4, 200, 1.0, &mut Pcg32::derive(seed, &[1])),
+        spec,
+        session: 1,
+        k_total: k,
+        avail: AvailSpec::Grouped {
+            group_probs: AVAIL_PROBS.to_vec(),
+            data_groups: 4,
+        },
+        resume: None,
+        compress: false,
+        challenge: 7,
+        hello_tag: 0,
+    });
+    let mut buf = Vec::new();
+    wire::send_msg(&mut buf, &msg).expect("encode subtree assignment");
+    buf.len()
+}
+
+/// Encoded size of the materialized flat-fleet `Hello` over the same
+/// clients — one [`ClientShard`] plus one availability probability per
+/// client, so linear in K. The uncompressed frame length depends only on
+/// the element counts, so zeroed payloads measure the real layout.
+fn hello_frame_bytes(k: usize) -> usize {
+    let n = 2000;
+    let msg = WireMsg::Hello(WorkerAssignment {
+        client_lo: 0,
+        client_hi: k,
+        env_seed: 2023,
+        n_iters: n,
+        algo: build(Variant::PaoFedC2, 0.4, 4, 10, 50),
+        rff: RffSpace::sample(4, 200, 1.0, &mut Pcg32::derive(2023, &[1])),
+        clients: (0..k)
+            .map(|_| ClientShard {
+                present: vec![true; n],
+                xs: vec![0.0; n * 4],
+                ys: vec![0.0; n],
+            })
+            .collect(),
+        session: 1,
+        k_total: k,
+        avail_probs: vec![0.25; k],
+        resume: None,
+        compress: false,
+        challenge: 7,
+        hello_tag: 0,
+    });
+    let mut buf = Vec::new();
+    wire::send_msg(&mut buf, &msg).expect("encode hello");
+    buf.len()
+}
+
+/// Root aggregation scratch under a K-sized streaming fold: push K
+/// in-flight updates through `begin/push/finish` and report
+/// [`Server::scratch_bytes`]. Scratch is keyed by *active coordinates*,
+/// not by K, so the figure must stay flat as the fleet grows.
+fn bench_root_scratch(b: &mut Bench) {
+    let d = 200;
+    let algo = build(Variant::PaoFedC2, 0.4, 4, 10, 50);
+    for k in [10_000usize, 100_000] {
+        let mut server = Server::new(d, algo.aggregation.clone());
+        server.begin_aggregate(1);
+        let updates: Vec<Update> = (0..k)
+            .map(|c| Update {
+                client: c,
+                sent_iter: 0,
+                coords: Coords::Range { start: (4 * c) % d, len: 4, d },
+                values: vec![0.01; 4],
+            })
+            .collect();
+        for chunk in updates.chunks(1024) {
+            server.push_updates(chunk.to_vec());
+        }
+        let bytes = server.scratch_bytes();
+        let _ = server.finish_aggregate();
+        b.record_value(&format!("root_scratch_bytes_k{k}"), bytes as f64);
+    }
+}
+
+/// Drive a full 2-level aggregator tree over loopback entirely inside
+/// this process: the root serve loop, one [`run_relay`] thread per
+/// `fanouts` entry, and one [`run_worker_with`] thread per leaf (both
+/// speak the exact TCP protocol their process counterparts do). Returns
+/// the deployment report and the wall-clock seconds of the server loop.
+fn tree_loopback(
+    k: usize,
+    n: usize,
+    d: usize,
+    fanouts: &[usize],
+    eval_every: usize,
+) -> (DeploymentReport, f64) {
+    let seed = 2023;
+    let cfg = StreamConfig {
+        n_clients: k,
+        n_iters: n,
+        data_group_samples: vec![n / 4, n / 2, 3 * n / 4, n],
+        test_size: 64,
+    };
+    let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+    let rff = RffSpace::sample(4, d, 1.0, &mut Pcg32::derive(seed, &[1]));
+    let dcfg = DeploymentConfig {
+        algo: build(Variant::PaoFedC2, 0.4, 4, 10, eval_every),
+        tick: Duration::ZERO,
+        env_seed: seed,
+        eval_every,
+        persist: None,
+        run_until: None,
+        wire: Default::default(),
+        tree: TreeConfig {
+            topology: Some(fanouts.to_vec()),
+            spec: Some(StreamSpec {
+                config: cfg,
+                source: SourceSpec::Eq39 { seed },
+                seed,
+            }),
+            avail: Some(AvailSpec::Grouped {
+                group_probs: AVAIL_PROBS.to_vec(),
+                data_groups: 4,
+            }),
+            accept_deadline: None,
+        },
+    };
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind root");
+    let root = listener.local_addr().expect("root addr").to_string();
+    let mut joins = Vec::new();
+    for &f in fanouts {
+        let rl = TcpListener::bind("127.0.0.1:0").expect("bind relay");
+        let raddr = rl.local_addr().expect("relay addr").to_string();
+        let up = root.clone();
+        joins.push(std::thread::spawn(move || {
+            run_relay(&up, &rl, &WorkerOptions::default()).expect("relay failed");
+        }));
+        for _ in 0..f {
+            let wa = raddr.clone();
+            joins.push(std::thread::spawn(move || {
+                run_worker_with(&wa, &WorkerOptions::default()).expect("worker failed");
+            }));
+        }
+        // Subtree assignments are handed out in connection-arrival order;
+        // sequence each relay group so heterogeneous shapes stay sound.
+        std::thread::sleep(Duration::from_millis(200));
+    }
+    let n_workers = fanouts.iter().sum();
+    let sw = Stopwatch::start();
+    let report = run_deployment_tcp(
+        stream,
+        rff,
+        tree_participation(k),
+        DelayModel::Geometric { delta: 0.2 },
+        dcfg,
+        &listener,
+        n_workers,
+    )
+    .expect("tree deployment failed");
+    let secs = sw.secs();
+    for j in joins {
+        j.join().expect("fleet thread panicked");
+    }
+    (report, secs)
+}
+
+/// The participation vector every fleet-scaling run shares (the
+/// materialization of the `AvailSpec` the assignments carry).
+fn tree_participation(k: usize) -> Participation {
+    Participation::grouped(k, &AVAIL_PROBS, 4)
+}
+
+fn bench_fleet_tree() {
+    let mut b = Bench::from_args("scaling").with_sink("BENCH_8.json");
+    println!("== Aggregator tree / generative assignment scaling ==");
+
+    // Assignment bytes: the generative frame must stay flat as K grows
+    // 10x; the materialized Hello baseline is linear (measured at small K
+    // only — a 1M-client Hello would be tens of GB, which is the point).
+    for k in [10_000usize, 100_000, 1_000_000] {
+        b.record_value(
+            &format!("assignment_bytes_k{k}"),
+            subtree_frame_bytes(k) as f64,
+        );
+    }
+    for k in [64usize, 640] {
+        b.record_value(
+            &format!("hello_bytes_k{k}_materialized"),
+            hello_frame_bytes(k) as f64,
+        );
+    }
+    bench_root_scratch(&mut b);
+
+    // Determinism cross-check at a verifiable K: the 2-level tree must
+    // reproduce the in-process deployment bit for bit.
+    let seed = 2023;
+    let (small, _) = tree_loopback(64, 60, 16, &[2, 2], 20);
+    let cfg = StreamConfig {
+        n_clients: 64,
+        n_iters: 60,
+        data_group_samples: vec![15, 30, 45, 60],
+        test_size: 64,
+    };
+    let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+    let rff = RffSpace::sample(4, 16, 1.0, &mut Pcg32::derive(seed, &[1]));
+    let inproc = run_deployment(
+        stream,
+        rff,
+        tree_participation(64),
+        DelayModel::Geometric { delta: 0.2 },
+        DeploymentConfig {
+            algo: build(Variant::PaoFedC2, 0.4, 4, 10, 20),
+            tick: Duration::ZERO,
+            env_seed: seed,
+            eval_every: 20,
+            persist: None,
+            run_until: None,
+            wire: Default::default(),
+            tree: Default::default(),
+        },
+    )
+    .expect("in-process deployment failed");
+    let identical = inproc.mse_db == small.mse_db && inproc.final_w == small.final_w;
+    println!(
+        "  2-level tree bitwise-identical to in-process: {}",
+        if identical { "yes" } else { "NO (BUG)" }
+    );
+    assert!(identical, "tree loopback diverged from in-process");
+
+    // End-to-end 2-level loopback tree at scale: K >= 1M in the full
+    // measurement mode, trimmed in PAO_FED_BENCH_FAST smoke runs. Few
+    // iterations — the axis under test is fleet size, not run length.
+    let fast = std::env::var_os("PAO_FED_BENCH_FAST").is_some_and(|v| !v.is_empty() && v != "0");
+    let big_k = if fast { 2_000 } else { 1_000_000 };
+    let (report, secs) = tree_loopback(big_k, 4, 8, &[2, 2], 2);
+    assert_eq!(report.n_workers, 4, "tree run lost workers");
+    println!("  2-level loopback tree: K={big_k}, {secs:.3}s");
+    b.record_secs(&format!("tree_loopback_2level_k{big_k}"), secs);
+    b.finish();
+}
+
 fn main() {
     let mut b = Bench::from_args("scaling");
     println!("available cores: {}", available_cores());
@@ -214,5 +498,6 @@ fn main() {
     bench_client_shards(&mut b);
     bench_pool_vs_scoped(&mut b);
     b.finish();
+    bench_fleet_tree();
     std::fs::remove_dir_all(std::env::temp_dir().join("pao_fed_scaling_bench")).ok();
 }

@@ -50,11 +50,27 @@
 //! server must opt in with `--legacy-hello` to *emit* it (old decoders
 //! reject the appended fields as trailing bytes); workers mirror the
 //! layout of the `Hello` they received. See [`wire`]'s module docs.
+//!
+//! For fleets too large for one accept loop, the fleet can be shaped as
+//! an **aggregator tree** ([`transport::TreeConfig`], `deploy
+//! --topology` / `--relay` on the CLI): relay processes
+//! ([`run_relay`] / [`transport::RelayNode`]) each own a contiguous
+//! range of leaf workers, fold their `AckBatch`es into one
+//! `CombinedUpdate` frame per tick in fixed tree order, and forward
+//! state/shutdown traffic transparently. Combined with generative
+//! [`crate::data::stream::StreamSpec`] assignments (workers synthesize
+//! their shard locally from a compact recipe), root memory and uplink
+//! assignment bytes stay flat in K; any tree shape reproduces the flat
+//! fleet and the in-process run bit for bit because the shared
+//! [`transport::AckSource`] sorts acks by client id either way.
 
 mod protocol;
 pub mod transport;
 pub mod wire;
 
 pub use protocol::{run_deployment, run_deployment_tcp, DeploymentConfig, DeploymentReport};
-pub use transport::{run_worker, run_worker_with, WorkerOptions, WorkerReport};
+pub use transport::{
+    run_relay, run_worker, run_worker_with, AckSource, RelayNode, RelayReport, TreeConfig,
+    WorkerOptions, WorkerReport,
+};
 pub use wire::WireConfig;

@@ -24,7 +24,7 @@
 //! run early at a tick boundary after writing a final checkpoint — the
 //! graceful-handoff path.
 
-use super::transport::{ChannelTransport, TcpFleet, Transport};
+use super::transport::{AckSource, ChannelTransport, TcpFleet, Transport, TreeConfig};
 use super::wire::WireConfig;
 use crate::data::stream::FedStream;
 use crate::error::{Error, Result};
@@ -65,6 +65,11 @@ pub struct DeploymentConfig {
     /// the shared handshake secret. Ignored by the in-process transport
     /// (no wire). Defaults to raw frames, no secret.
     pub wire: WireConfig,
+    /// Aggregator-tree shape and generative-assignment options for the
+    /// TCP fleet (see [`TreeConfig`]). The in-process transport rejects a
+    /// non-flat topology. Defaults to a flat fleet with materialized
+    /// shards.
+    pub tree: TreeConfig,
 }
 
 /// What the deployment run produced.
@@ -164,7 +169,15 @@ pub fn run_deployment(
     cfg: DeploymentConfig,
 ) -> Result<DeploymentReport> {
     validate(&cfg)?;
+    if cfg.tree.topology.as_ref().is_some_and(|t| t.iter().any(|&f| f > 1)) {
+        return Err(Error::Config(
+            "aggregator trees require the TCP fleet (deploy --serve)".into(),
+        ));
+    }
     let resume = load_resume(&cfg, &stream, &rff, &participation, &delay)?;
+    if let Some(snap) = &resume {
+        snap.validate_topology(&[])?;
+    }
     let k = stream.n_clients;
     let schedule = SelectionSchedule::new(cfg.algo.schedule, rff.d, cfg.algo.m, cfg.env_seed);
     let stream = Arc::new(stream);
@@ -208,6 +221,19 @@ pub fn run_deployment_tcp(
 ) -> Result<DeploymentReport> {
     validate(&cfg)?;
     let resume = load_resume(&cfg, &stream, &rff, &participation, &delay)?;
+    if let Some(snap) = &resume {
+        // Refuse to resume under a reshaped aggregator tree: the snapshot
+        // names the topology it was taken under (flat normalizes to empty).
+        let fanouts: Vec<u32> = cfg
+            .tree
+            .topology
+            .as_deref()
+            .unwrap_or(&[])
+            .iter()
+            .map(|&f| f as u32)
+            .collect();
+        snap.validate_topology(&fanouts)?;
+    }
     let schedule = SelectionSchedule::new(cfg.algo.schedule, rff.d, cfg.algo.m, cfg.env_seed);
     let init = resume.as_ref().map(per_client_states);
     let mut transport = TcpFleet::serve(
@@ -220,6 +246,7 @@ pub fn run_deployment_tcp(
         cfg.env_seed,
         resume.as_ref().map(|s| (s.tick, init.as_deref().unwrap())),
         &cfg.wire,
+        &cfg.tree,
     )?;
     let result = serve_loop(
         &stream,
@@ -366,11 +393,7 @@ fn serve_loop<T: Transport>(
         // of thread scheduling *and* of which worker process answers
         // first (the deployment must reproduce the discrete engine bit
         // for bit).
-        let mut acks = Vec::with_capacity(k);
-        for _ in 0..k {
-            acks.push(transport.recv_ack()?);
-        }
-        acks.sort_by_key(|a| a.client);
+        let acks = transport.collect_acks(k)?;
         for ack in acks {
             local_steps += ack.learned as u64;
             if let Some(u) = ack.upload {
@@ -436,6 +459,7 @@ fn serve_loop<T: Transport>(
                     curve_iters: models.iters().to_vec(),
                     curve_db: models.mse_db().to_vec(),
                     local_steps,
+                    topology: snapshot::normalize_topology(&transport.topology()),
                 };
                 snapshot::write_file(&p.path, &snap)?;
                 if let Some(cp) = &curve_path {
@@ -504,6 +528,7 @@ mod tests {
                 persist: None,
                 run_until: None,
                 wire: Default::default(),
+                tree: Default::default(),
             },
         )
         .unwrap();
@@ -544,6 +569,7 @@ mod tests {
                 persist: None,
                 run_until: None,
                 wire: Default::default(),
+                tree: Default::default(),
             },
         );
         assert!(res.is_err(), "eval_every = 0 must be rejected");
@@ -568,6 +594,7 @@ mod tests {
             persist,
             run_until,
             wire: Default::default(),
+            tree: Default::default(),
         };
         // run_until without persist strands the run.
         let res = run_deployment(

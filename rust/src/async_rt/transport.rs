@@ -26,22 +26,24 @@
 //! checkpoint hook: it captures every client's local model at a tick
 //! boundary (and prunes the replay log to that boundary).
 
-use super::wire::{self, ClientShard, ResumePlan, WireMsg, WorkerAssignment};
-use crate::data::stream::FedStream;
+use super::wire::{self, ClientShard, ResumePlan, SubtreeAssignment, WireMsg, WorkerAssignment};
+use crate::data::stream::{FedStream, StreamSpec};
 use crate::error::{Error, Result};
 use crate::fl::engine::AlgoConfig;
-use crate::fl::participation::Participation;
+use crate::fl::participation::{AvailSpec, Participation};
 use crate::fl::pipeline;
 use crate::fl::selection::{Coords, SelectionSchedule};
 use crate::fl::server::Update;
 use crate::rff::RffSpace;
 use crate::util::rng::splitmix64;
+use std::collections::VecDeque;
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
 
 /// One client's per-tick acknowledgement (stage-6 uplink).
 #[derive(Clone, Debug)]
@@ -96,8 +98,46 @@ pub trait Transport {
         0
     }
 
+    /// The aggregator-tree shape behind this transport as raw per-child
+    /// fan-outs (entry `i` = leaf workers under root child `i`). Empty
+    /// for transports without a tree — the in-process channels and a flat
+    /// TCP fleet. Stamped (normalized) into run snapshots so a resume
+    /// refuses a reshaped tree.
+    fn topology(&self) -> Vec<u32> {
+        Vec::new()
+    }
+
     /// Broadcast end-of-run and release the fleet.
     fn shutdown(&mut self) -> Result<()>;
+}
+
+/// One full round of acknowledgements, in canonical aggregation order.
+///
+/// The server loop, a relay folding its subtree, and the in-process
+/// channel transport all gather acks through this one trait, so the
+/// accumulation order the aggregation sees — ascending client id — is
+/// fixed in exactly one place. Implemented for every [`Transport`] via
+/// the blanket impl below (collect, then sort); a relay's child fan-in
+/// reaches it through its own `Transport` impl, which is what makes a
+/// [`wire::WireMsg::CombinedUpdate`] concatenated in tree order
+/// bit-identical to the flat fleet's sorted acks.
+pub trait AckSource {
+    /// Block until `expected` acknowledgements have arrived and return
+    /// them sorted by client id.
+    fn collect_acks(&mut self, expected: usize) -> Result<Vec<Ack>>;
+}
+
+impl<T: Transport + ?Sized> AckSource for T {
+    fn collect_acks(&mut self, expected: usize) -> Result<Vec<Ack>> {
+        let mut acks = Vec::with_capacity(expected);
+        for _ in 0..expected {
+            acks.push(self.recv_ack()?);
+        }
+        // Client ids are unique within a tick, so this order is total:
+        // every transport interleaving collapses to the same sequence.
+        acks.sort_by_key(|a| a.client);
+        Ok(acks)
+    }
 }
 
 /// A client's whole local state: model, feature scratch, identity. The
@@ -439,6 +479,38 @@ fn make_assignment(
     }
 }
 
+/// Aggregator-tree / generative-assignment policy for a TCP fleet.
+///
+/// The default (`None` everywhere) is the flat fleet with materialized
+/// `Hello` shards and an unbounded recovery accept — exactly the pre-tree
+/// behavior. Setting `spec` alone switches a *flat* fleet to compact
+/// generative [`SubtreeAssignment`] handshakes (assignment bytes flat in
+/// K); `topology` additionally shapes the fleet as a 2-level aggregator
+/// tree and requires `spec` (a relay cannot forward materialized shards).
+#[derive(Clone, Debug, Default)]
+pub struct TreeConfig {
+    /// Per root child, how many leaf workers its subtree owns: `1` = the
+    /// child is a plain worker, `> 1` = the child is a relay
+    /// ([`run_relay`]) that accepts that many workers itself. The
+    /// fan-outs must sum to the fleet's worker count. `None` or empty =
+    /// flat fleet.
+    pub topology: Option<Vec<usize>>,
+    /// Generative description of the data stream; children materialize
+    /// their own client slice locally instead of receiving it on the
+    /// wire. Required when `topology` is set. Must describe the same
+    /// realization the server materialized.
+    pub spec: Option<StreamSpec>,
+    /// Compact description of the participation probabilities to ship in
+    /// generative assignments; `None` ships the explicit `[K]` vector.
+    /// Must reproduce the fleet's participation bit-exactly.
+    pub avail: Option<AvailSpec>,
+    /// How long the supervisor waits for a replacement connection when a
+    /// worker (or relay subtree) is lost, before aborting the run with an
+    /// error naming the lost shard. `None` = wait forever (the pre-tree
+    /// behavior). CLI: `deploy --accept-deadline SECS`.
+    pub accept_deadline: Option<Duration>,
+}
+
 /// The server side of the socket transport: accepts worker connections,
 /// hands each a contiguous client-id range plus its shard of the
 /// materialized stream, then routes tick messages by client id. Acks from
@@ -465,6 +537,16 @@ pub struct TcpFleet<'e> {
     /// the shared secret (empty = unauthenticated) every handshake must
     /// prove knowledge of.
     wire_cfg: wire::WireConfig,
+    /// Tree / generative-assignment policy (all-default = flat `Hello`s).
+    tree: TreeConfig,
+    /// Per direct child, how many leaf workers its subtree owns (all 1 =
+    /// flat fleet).
+    fanouts: Vec<usize>,
+    /// Per direct child, the index of its first leaf in global leaf order.
+    leaf_starts: Vec<usize>,
+    /// Total leaf workers W in the leaf-range formula
+    /// `leaf j hosts clients (j*K/W .. (j+1)*K/W)`.
+    n_leaves: usize,
     links: Vec<WorkerLink>,
     /// Per worker, the hosted client-id range `[lo, hi)`.
     ranges: Vec<(usize, usize)>,
@@ -516,6 +598,7 @@ impl<'e> TcpFleet<'e> {
         env_seed: u64,
         resume: Option<(usize, &[Vec<f32>])>,
         wire_cfg: &wire::WireConfig,
+        tree: &TreeConfig,
     ) -> Result<Self> {
         let k = stream.n_clients;
         if n_workers == 0 || n_workers > k {
@@ -545,84 +628,75 @@ impl<'e> TcpFleet<'e> {
                 "--legacy-hello is incompatible with --compress and --secret".into(),
             ));
         }
+        let fanouts: Vec<usize> = match &tree.topology {
+            Some(t) if !t.is_empty() => t.clone(),
+            _ => vec![1; n_workers],
+        };
+        if fanouts.iter().any(|&f| f == 0) {
+            return Err(Error::Config("aggregator-tree fan-outs must be >= 1".into()));
+        }
+        let n_leaves: usize = fanouts.iter().sum();
+        if n_leaves != n_workers {
+            return Err(Error::Config(format!(
+                "topology {fanouts:?} covers {n_leaves} leaf workers but the fleet \
+                 is sized for {n_workers}"
+            )));
+        }
+        if fanouts.iter().any(|&f| f > 1) && tree.spec.is_none() {
+            return Err(Error::Config(
+                "an aggregator tree needs a generative stream spec: relays re-shard \
+                 their range from the spec instead of forwarding materialized shards"
+                    .into(),
+            ));
+        }
+        if tree.spec.is_some() && wire_cfg.legacy_hello {
+            return Err(Error::Config(
+                "--legacy-hello is incompatible with generative (tree) assignments".into(),
+            ));
+        }
+        if let Some(spec) = &tree.spec {
+            if spec.config.n_clients != k || spec.config.n_iters != stream.n_iters {
+                return Err(Error::Config(format!(
+                    "stream spec describes K={} over {} iterations; the fleet runs \
+                     K={k} over {}",
+                    spec.config.n_clients, spec.config.n_iters, stream.n_iters
+                )));
+            }
+        }
+        if let Some(av) = &tree.avail {
+            // The compact spec must regenerate the exact participation the
+            // server draws from, or the fleet silently diverges.
+            if av.materialize(k).probs != participation.probs {
+                return Err(Error::Config(
+                    "availability spec does not reproduce the fleet's participation \
+                     probabilities"
+                        .into(),
+                ));
+            }
+        }
         let session = session_token(env_seed);
         let (event_tx, event_rx) = channel::<FleetEvent>();
-        let mut links = Vec::with_capacity(n_workers);
-        let mut ranges = Vec::with_capacity(n_workers);
+        let n_children = fanouts.len();
+        let mut ranges = Vec::with_capacity(n_children);
+        let mut leaf_starts = Vec::with_capacity(n_children);
         let mut owner = vec![0usize; k];
-        for i in 0..n_workers {
-            let (sock, peer) = listener.accept()?;
-            sock.set_nodelay(true)?;
-            let (lo, hi) = (i * k / n_workers, (i + 1) * k / n_workers);
+        let mut leaf = 0usize;
+        for (i, &f) in fanouts.iter().enumerate() {
+            // Child i owns leaves [leaf, leaf + f): the concatenation of
+            // their ranges under the global leaf-range formula, so any
+            // tree over W leaves shards the fleet exactly like a flat
+            // fleet of W workers.
+            let (lo, hi) = (leaf * k / n_leaves, (leaf + f) * k / n_leaves);
             owner[lo..hi].fill(i);
-            let plan = resume.map(|(tick, states)| ResumePlan {
-                base_tick: tick,
-                states: states[lo..hi].to_vec(),
-                log: Vec::new(),
-            });
-            let challenge = challenge_token(session, i, 0);
-            let assignment = make_assignment(
-                stream,
-                rff,
-                algo,
-                env_seed,
-                session,
-                &participation.probs,
-                lo,
-                hi,
-                plan,
-                wire_cfg,
-                challenge,
-            );
-            let mut writer = BufWriter::new(sock.try_clone()?);
-            let hello = WireMsg::Hello(assignment);
-            let payload = if wire_cfg.legacy_hello {
-                wire::encode_legacy_handshake(&hello)
-            } else {
-                wire::encode(&hello)
-            };
-            wire::write_frame(&mut writer, &payload)?;
-            writer.flush()?;
-            let mut reader = BufReader::new(sock);
-            let link_compress = match wire::recv_msg(&mut reader)? {
-                WireMsg::HelloAck { client_lo, session: s, compress, proof }
-                    if client_lo == lo && s == session =>
-                {
-                    if !wire_cfg.secret.is_empty()
-                        && proof != wire::ack_proof(&wire_cfg.secret, challenge, session, lo)
-                    {
-                        return Err(Error::Protocol(format!(
-                            "worker {peer} failed handshake authentication \
-                             (bad shared-secret proof)"
-                        )));
-                    }
-                    wire_cfg.compress && compress
-                }
-                other => {
-                    return Err(Error::Protocol(format!(
-                        "worker {peer} answered the handshake with {other:?}"
-                    )))
-                }
-            };
-            let tx = event_tx.clone();
-            let handle = thread::Builder::new()
-                .name(format!("pao-fed-worker-rx-{i}"))
-                .spawn(move || pump_acks(reader, tx, i, 0))
-                .map_err(|e| Error::Config(format!("spawn failed: {e}")))?;
-            links.push(WorkerLink {
-                writer,
-                reader: Some(handle),
-                pending: Vec::new(),
-                sent: Vec::new(),
-                compress: link_compress,
-            });
             ranges.push((lo, hi));
+            leaf_starts.push(leaf);
+            leaf += f;
         }
         let (log_base, base_states) = match resume {
             Some((tick, states)) => (tick, Some(states.to_vec())),
             None => (0, None),
         };
-        Ok(TcpFleet {
+        let mut fleet = TcpFleet {
             listener: listener.try_clone()?,
             session,
             stream,
@@ -631,9 +705,13 @@ impl<'e> TcpFleet<'e> {
             env_seed,
             avail_probs: participation.probs.clone(),
             wire_cfg: wire_cfg.clone(),
-            links,
+            tree: tree.clone(),
+            fanouts,
+            leaf_starts,
+            n_leaves,
+            links: Vec::with_capacity(n_children),
             ranges,
-            gens: vec![0; n_workers],
+            gens: vec![0; n_children],
             owner,
             events: event_rx,
             event_tx,
@@ -643,6 +721,121 @@ impl<'e> TcpFleet<'e> {
             log: Vec::new(),
             base_states,
             recovered: 0,
+        };
+        for i in 0..n_children {
+            let (sock, _) = fleet.listener.accept()?;
+            let (lo, hi) = fleet.ranges[i];
+            let plan = resume.map(|(tick, states)| ResumePlan {
+                base_tick: tick,
+                states: states[lo..hi].to_vec(),
+                log: Vec::new(),
+            });
+            let link = fleet.handshake_link(i, sock, plan)?;
+            fleet.links.push(link);
+        }
+        Ok(fleet)
+    }
+
+    /// Run the handshake on a fresh connection for child `i` at its
+    /// current generation: send the assignment — the generative
+    /// [`SubtreeAssignment`] when a stream spec is configured, the
+    /// materialized `Hello` otherwise — carrying `plan`, verify the
+    /// `HelloAck` (including the shared-secret proof when one is set),
+    /// and spawn the reader pump. Shared by the initial accept loop and
+    /// supervisor adoption.
+    fn handshake_link(
+        &mut self,
+        i: usize,
+        sock: TcpStream,
+        plan: Option<ResumePlan>,
+    ) -> Result<WorkerLink> {
+        sock.set_nodelay(true)?;
+        let peer = sock
+            .peer_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "<unknown peer>".into());
+        let (lo, hi) = self.ranges[i];
+        let gen = self.gens[i];
+        let challenge = challenge_token(self.session, i, gen);
+        let msg = if let Some(spec) = &self.tree.spec {
+            WireMsg::SubtreeAssignment(SubtreeAssignment {
+                client_lo: lo,
+                client_hi: hi,
+                leaf_lo: self.leaf_starts[i],
+                fanout: self.fanouts[i],
+                n_leaves: self.n_leaves,
+                env_seed: self.env_seed,
+                n_iters: self.stream.n_iters,
+                algo: self.algo.clone(),
+                rff: self.rff.clone(),
+                spec: spec.clone(),
+                session: self.session,
+                k_total: self.stream.n_clients,
+                avail: self
+                    .tree
+                    .avail
+                    .clone()
+                    .unwrap_or_else(|| AvailSpec::Explicit(self.avail_probs.clone())),
+                resume: plan,
+                compress: self.wire_cfg.compress,
+                challenge,
+                hello_tag: wire::hello_tag(&self.wire_cfg.secret, challenge, self.session, lo),
+            })
+        } else {
+            WireMsg::Hello(make_assignment(
+                self.stream,
+                self.rff,
+                &self.algo,
+                self.env_seed,
+                self.session,
+                &self.avail_probs,
+                lo,
+                hi,
+                plan,
+                &self.wire_cfg,
+                challenge,
+            ))
+        };
+        let mut writer = BufWriter::new(sock.try_clone()?);
+        let payload = if self.wire_cfg.legacy_hello {
+            wire::encode_legacy_handshake(&msg)
+        } else {
+            wire::encode(&msg)
+        };
+        wire::write_frame(&mut writer, &payload)?;
+        writer.flush()?;
+        let mut reader = BufReader::new(sock);
+        let link_compress = match wire::recv_msg(&mut reader)? {
+            WireMsg::HelloAck { client_lo, session, compress, proof }
+                if client_lo == lo && session == self.session =>
+            {
+                if !self.wire_cfg.secret.is_empty()
+                    && proof != wire::ack_proof(&self.wire_cfg.secret, challenge, self.session, lo)
+                {
+                    return Err(Error::Protocol(format!(
+                        "worker {peer} failed handshake authentication \
+                         (bad shared-secret proof)"
+                    )));
+                }
+                self.wire_cfg.compress && compress
+            }
+            other => {
+                return Err(Error::Protocol(format!(
+                    "worker {peer} answered the handshake with {other:?}"
+                )))
+            }
+        };
+        let tx = self.event_tx.clone();
+        let handle = thread::Builder::new()
+            .name(format!("pao-fed-worker-rx-{i}-g{gen}"))
+            .spawn(move || pump_acks(reader, tx, i, gen))
+            .map_err(|e| Error::Config(format!("spawn failed: {e}")))?;
+        Ok(WorkerLink {
+            writer,
+            reader: Some(handle),
+            pending: Vec::new(),
+            sent: Vec::new(),
+            compress: link_compress,
         })
     }
 
@@ -677,7 +870,9 @@ impl<'e> TcpFleet<'e> {
     /// the retained listener, hand it the shard plus the replay plan that
     /// rebuilds client state through `resume_tick`, and — when recovering
     /// mid-tick — re-send the outstanding downlinks of the in-flight
-    /// iteration. Blocks until a replacement completes the handshake.
+    /// iteration. Blocks until a replacement completes the handshake, or
+    /// until the configured accept deadline expires (a clean operator
+    /// abort naming the lost shard instead of a hang).
     fn recover_worker(&mut self, i: usize, resume_tick: usize) -> Result<()> {
         self.recovered += 1;
         if let Some(h) = self.links[i].reader.take() {
@@ -689,8 +884,15 @@ impl<'e> TcpFleet<'e> {
              waiting for a replacement on {:?}",
             self.listener.local_addr().ok()
         );
+        // A wrong-secret or malformed replacement does not restart the
+        // clock: the deadline bounds the whole outage, not one attempt.
+        let lost_at = Instant::now();
         loop {
-            let (sock, peer) = self.listener.accept()?;
+            let sock = self.accept_replacement(i, lost_at)?;
+            let peer = sock
+                .peer_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_else(|_| "<unknown peer>".into());
             match self.adopt(i, resume_tick, sock) {
                 Ok(()) => {
                     eprintln!(
@@ -710,10 +912,47 @@ impl<'e> TcpFleet<'e> {
         }
     }
 
+    /// One replacement accept, honoring [`TreeConfig::accept_deadline`]:
+    /// without a deadline this is a plain blocking accept (the pre-tree
+    /// behavior); with one, the listener polls non-blocking until a
+    /// connection arrives or the deadline (measured from `lost_at`, the
+    /// moment the worker was lost) passes — then fails the run with an
+    /// error naming the lost shard, so an operator who knows no
+    /// replacement is coming gets an abort instead of a hang.
+    fn accept_replacement(&self, i: usize, lost_at: Instant) -> Result<TcpStream> {
+        let Some(limit) = self.tree.accept_deadline else {
+            let (sock, _) = self.listener.accept()?;
+            return Ok(sock);
+        };
+        self.listener.set_nonblocking(true)?;
+        let res = loop {
+            match self.listener.accept() {
+                Ok((sock, _)) => break Ok(sock),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if lost_at.elapsed() >= limit {
+                        let (lo, hi) = self.ranges[i];
+                        break Err(Error::Protocol(format!(
+                            "no replacement for worker {i} (clients {lo}..{hi}) \
+                             within the {limit:?} accept deadline; aborting the \
+                             run — that shard's state is unrecoverable without one"
+                        )));
+                    }
+                    thread::sleep(Duration::from_millis(20));
+                }
+                Err(e) => break Err(e.into()),
+            }
+        };
+        // Restore the listener either way; the accepted socket must be
+        // blocking too (some platforms propagate the listener's flag).
+        let _ = self.listener.set_nonblocking(false);
+        let sock = res?;
+        sock.set_nonblocking(false)?;
+        Ok(sock)
+    }
+
     /// One adoption attempt on a fresh connection.
     fn adopt(&mut self, i: usize, resume_tick: usize, sock: TcpStream) -> Result<()> {
         self.gens[i] += 1;
-        sock.set_nodelay(true)?;
         let (lo, hi) = self.ranges[i];
         let plan = ResumePlan {
             base_tick: self.log_base,
@@ -724,63 +963,13 @@ impl<'e> TcpFleet<'e> {
                 .unwrap_or_default(),
             log: self.log[..resume_tick - self.log_base].to_vec(),
         };
-        let challenge = challenge_token(self.session, i, self.gens[i]);
-        let assignment = make_assignment(
-            self.stream,
-            self.rff,
-            &self.algo,
-            self.env_seed,
-            self.session,
-            &self.avail_probs,
-            lo,
-            hi,
-            Some(plan),
-            &self.wire_cfg,
-            challenge,
-        );
-        let mut writer = BufWriter::new(sock.try_clone()?);
-        let hello = WireMsg::Hello(assignment);
-        let payload = if self.wire_cfg.legacy_hello {
-            wire::encode_legacy_handshake(&hello)
-        } else {
-            wire::encode(&hello)
-        };
-        wire::write_frame(&mut writer, &payload)?;
-        writer.flush()?;
-        let mut reader = BufReader::new(sock);
-        let link_compress = match wire::recv_msg(&mut reader)? {
-            WireMsg::HelloAck { client_lo, session, compress, proof }
-                if client_lo == lo && session == self.session =>
-            {
-                if !self.wire_cfg.secret.is_empty()
-                    && proof
-                        != wire::ack_proof(&self.wire_cfg.secret, challenge, self.session, lo)
-                {
-                    // An Err here keeps the supervisor waiting for another
-                    // replacement — a wrong-secret peer cannot end the run.
-                    return Err(Error::Protocol(
-                        "replacement failed handshake authentication \
-                         (bad shared-secret proof)"
-                            .into(),
-                    ));
-                }
-                self.wire_cfg.compress && compress
-            }
-            other => {
-                return Err(Error::Protocol(format!(
-                    "replacement answered the handshake with {other:?}"
-                )))
-            }
-        };
-        let gen = self.gens[i];
-        let tx = self.event_tx.clone();
-        let handle = thread::Builder::new()
-            .name(format!("pao-fed-worker-rx-{i}-g{gen}"))
-            .spawn(move || pump_acks(reader, tx, i, gen))
-            .map_err(|e| Error::Config(format!("spawn failed: {e}")))?;
-        self.links[i].writer = writer;
-        self.links[i].reader = Some(handle);
-        self.links[i].compress = link_compress;
+        let link = self.handshake_link(i, sock, Some(plan))?;
+        // Keep the old link's `sent` bookkeeping: the re-send below (and
+        // a later same-tick recovery) still needs the in-flight items.
+        self.links[i].writer = link.writer;
+        self.links[i].reader = link.reader;
+        self.links[i].compress = link.compress;
+        let link_compress = self.links[i].compress;
         if resume_tick == self.pending_iter {
             let items: Vec<(usize, Option<(Coords, Vec<f32>)>)> = self.links[i]
                 .sent
@@ -819,6 +1008,18 @@ fn pump_acks(mut reader: BufReader<TcpStream>, tx: Sender<FleetEvent>, worker: u
             Ok(WireMsg::AckBatch { acks }) => {
                 // One frame per worker per tick; the server loop still
                 // consumes (and then sorts) individual acks.
+                for (client, upload, learned) in acks {
+                    let ack = Ack { client, upload, learned };
+                    if tx.send((worker, gen, Ok(Uplink::Ack(ack)))).is_err() {
+                        return;
+                    }
+                }
+            }
+            Ok(WireMsg::CombinedUpdate { acks, .. }) => {
+                // A relay's partial fold: one frame for its whole subtree
+                // per tick. The items are per-client acks, so the root
+                // consumes them exactly like a worker's batch (they get
+                // re-sorted with everyone else's before aggregation).
                 for (client, upload, learned) in acks {
                     let ack = Ack { client, upload, learned };
                     if tx.send((worker, gen, Ok(Uplink::Ack(ack)))).is_err() {
@@ -1006,6 +1207,10 @@ impl Transport for TcpFleet<'_> {
         self.recovered
     }
 
+    fn topology(&self) -> Vec<u32> {
+        self.fanouts.iter().map(|&f| f as u32).collect()
+    }
+
     fn shutdown(&mut self) -> Result<()> {
         // Defensive: nothing should be buffered at shutdown (every tick
         // blocks on its acks), but never strand a downlink.
@@ -1040,6 +1245,66 @@ fn extract_shard(stream: &FedStream, c: usize) -> ClientShard {
         }
     }
     shard
+}
+
+/// Turn a `fanout == 1` generative assignment into the materialized
+/// [`WorkerAssignment`] the worker loop runs on: validate the leaf
+/// geometry against the global leaf-range formula, synthesize the client
+/// slice locally from the stream spec
+/// ([`StreamSpec::materialize_slice`] replays the full shared RNG
+/// schedule but stores only this range — bit-identical to the server's
+/// materialization), and expand the availability spec. Everything
+/// downstream of the handshake is then identical for both assignment
+/// shapes.
+fn worker_assignment_from_subtree(sub: SubtreeAssignment) -> Result<WorkerAssignment> {
+    if sub.fanout != 1 {
+        return Err(Error::Protocol(format!(
+            "assignment fans out to {} children; this endpoint is a worker \
+             (inner tree nodes run `deploy --relay`)",
+            sub.fanout
+        )));
+    }
+    let (lo, hi, k) = (sub.client_lo, sub.client_hi, sub.k_total);
+    if sub.spec.config.n_clients != k || sub.spec.config.n_iters != sub.n_iters {
+        return Err(Error::Protocol(format!(
+            "stream spec describes K={} over {} iterations; the assignment says \
+             K={k} over {}",
+            sub.spec.config.n_clients, sub.spec.config.n_iters, sub.n_iters
+        )));
+    }
+    if sub.n_leaves > k
+        || lo != sub.leaf_lo * k / sub.n_leaves
+        || hi != (sub.leaf_lo + 1) * k / sub.n_leaves
+    {
+        return Err(Error::Protocol(format!(
+            "assignment range {lo}..{hi} disagrees with leaf {} of {} over K={k}",
+            sub.leaf_lo, sub.n_leaves
+        )));
+    }
+    let avail_probs = sub.avail.materialize(k).probs;
+    if avail_probs.len() != k {
+        return Err(Error::Protocol(format!(
+            "availability spec expands to {} probabilities for K={k}",
+            avail_probs.len()
+        )));
+    }
+    let slice = sub.spec.materialize_slice(lo, hi);
+    Ok(WorkerAssignment {
+        client_lo: lo,
+        client_hi: hi,
+        env_seed: sub.env_seed,
+        n_iters: sub.n_iters,
+        algo: sub.algo,
+        rff: sub.rff,
+        clients: (lo..hi).map(|c| extract_shard(&slice, c)).collect(),
+        session: sub.session,
+        k_total: k,
+        avail_probs,
+        resume: sub.resume,
+        compress: sub.compress,
+        challenge: sub.challenge,
+        hello_tag: sub.hello_tag,
+    })
 }
 
 // ---------------------------------------------------------------- worker
@@ -1180,8 +1445,9 @@ pub fn run_worker_with(addr: &str, opts: &WorkerOptions) -> Result<WorkerReport>
     let mut reader = BufReader::new(sock.try_clone()?);
     let mut writer = BufWriter::new(sock);
 
-    let assignment = match wire::recv_msg(&mut reader)? {
-        WireMsg::Hello(a) => a,
+    let (assignment, from_tree) = match wire::recv_msg(&mut reader)? {
+        WireMsg::Hello(a) => (a, false),
+        WireMsg::SubtreeAssignment(sub) => (worker_assignment_from_subtree(sub)?, true),
         other => {
             return Err(Error::Protocol(format!(
                 "expected handshake, got {other:?}"
@@ -1217,8 +1483,12 @@ pub fn run_worker_with(addr: &str, opts: &WorkerOptions) -> Result<WorkerReport>
     // the server may be a pre-codec binary whose decoder rejects trailing
     // bytes — so the ack must mirror that layout. It also means no
     // challenge was issued: a worker configured to authenticate refuses
-    // rather than silently running unauthenticated.
-    let legacy_hello = wire::hello_is_legacy(&assignment);
+    // rather than silently running unauthenticated. A generative tree
+    // assignment is never legacy (the frame tag postdates the codec);
+    // note that a relay->worker hop carries no auth fields, so workers
+    // behind a relay must run without --secret (the relay authenticated
+    // the root hop for the subtree).
+    let legacy_hello = !from_tree && wire::hello_is_legacy(&assignment);
     if legacy_hello && !opts.secret.is_empty() {
         return Err(Error::Protocol(
             "server sent an unauthenticated legacy handshake but --secret is set".into(),
@@ -1380,6 +1650,383 @@ fn serve_one(
     report.ticks += 1;
     report.local_steps += ack.learned as u64;
     Ok((ack.client, ack.upload, ack.learned))
+}
+
+// ----------------------------------------------------------------- relay
+
+/// What a relay process did, for logging at exit.
+#[derive(Clone, Copy, Debug)]
+pub struct RelayReport {
+    /// First client id of the folded subtree (inclusive).
+    pub client_lo: usize,
+    /// Last client id of the folded subtree (exclusive).
+    pub client_hi: usize,
+    /// Leaf workers the relay accepted and served.
+    pub workers: usize,
+    /// Tick batches folded upstream.
+    pub ticks: u64,
+}
+
+/// One worker connection under a relay.
+struct RelayChild {
+    writer: BufWriter<TcpStream>,
+    reader: BufReader<TcpStream>,
+    /// Hosted client range `[lo, hi)`.
+    lo: usize,
+    hi: usize,
+    /// Compressed batch frames negotiated on this link.
+    compress: bool,
+    /// Downlinks buffered for the in-flight tick (coalesced into one
+    /// `TickBatch` frame at flush, like the root's [`WorkerLink`]).
+    pending: Vec<(usize, Option<(Coords, Vec<f32>)>)>,
+}
+
+/// The inner node of the aggregator tree: a [`Transport`] over the
+/// relay's own child workers. [`run_relay`] drives it with the parent's
+/// downlinks and folds the collected acks into one
+/// [`wire::WireMsg::CombinedUpdate`] per tick.
+///
+/// Children are read *in fixed tree order* (ascending child index =
+/// ascending contiguous client ranges), single-threaded — no reader
+/// threads, no supervisor. A lost child fails the relay, which the root
+/// observes as a lost subtree and recovers whole (replacement relay +
+/// replacement workers, rebuilt by the same [`ResumePlan`] replay as a
+/// flat worker). Because the shared [`AckSource`] sorts by client id and
+/// child batches arrive range-ordered, the fold is bit-identical to the
+/// root collecting each worker directly.
+pub struct RelayNode {
+    children: Vec<RelayChild>,
+    /// First client id of the subtree (owner is indexed by `c - client_lo`).
+    client_lo: usize,
+    /// Client offset -> child index.
+    owner: Vec<usize>,
+    /// Iteration of the buffered / in-flight downlinks.
+    pending_iter: usize,
+    /// Acks decoded but not yet handed to `recv_ack`.
+    queue: VecDeque<Ack>,
+    /// Children owing an `AckBatch` this tick, in tree order, with how
+    /// many items each was sent.
+    awaiting: VecDeque<(usize, usize)>,
+}
+
+impl RelayNode {
+    /// Accept the subtree's `fanout` workers on `listener` and hand each
+    /// its leaf assignment (`fanout == 1` slices of this relay's
+    /// assignment, including per-child slices of the resume plan).
+    /// Child links inherit the upstream compression offer; the hop
+    /// carries no auth fields — the relay already authenticated the
+    /// parent hop for the whole subtree.
+    fn accept(
+        listener: &TcpListener,
+        sub: &SubtreeAssignment,
+        opts: &WorkerOptions,
+    ) -> Result<RelayNode> {
+        let (lo, hi, k, w) = (sub.client_lo, sub.client_hi, sub.k_total, sub.n_leaves);
+        if let Some(plan) = &sub.resume {
+            if !plan.states.is_empty() && plan.states.len() != hi - lo {
+                return Err(Error::Protocol(format!(
+                    "resume plan carries {} states for subtree {lo}..{hi}",
+                    plan.states.len()
+                )));
+            }
+        }
+        let compress_down = sub.compress && opts.allow_compress;
+        let mut children = Vec::with_capacity(sub.fanout);
+        let mut owner = vec![0usize; hi - lo];
+        for j in 0..sub.fanout {
+            let (sock, peer) = listener.accept()?;
+            sock.set_nodelay(true)?;
+            let leaf = sub.leaf_lo + j;
+            let (clo, chi) = (leaf * k / w, (leaf + 1) * k / w);
+            owner[clo - lo..chi - lo].fill(j);
+            let child_resume = sub.resume.as_ref().map(|p| ResumePlan {
+                base_tick: p.base_tick,
+                states: if p.states.is_empty() {
+                    Vec::new()
+                } else {
+                    p.states[clo - lo..chi - lo].to_vec()
+                },
+                log: p.log.clone(),
+            });
+            let child_sub = SubtreeAssignment {
+                client_lo: clo,
+                client_hi: chi,
+                leaf_lo: leaf,
+                fanout: 1,
+                n_leaves: w,
+                env_seed: sub.env_seed,
+                n_iters: sub.n_iters,
+                algo: sub.algo.clone(),
+                rff: sub.rff.clone(),
+                spec: sub.spec.clone(),
+                session: sub.session,
+                k_total: k,
+                avail: sub.avail.clone(),
+                resume: child_resume,
+                compress: compress_down,
+                challenge: 0,
+                hello_tag: 0,
+            };
+            let mut writer = BufWriter::new(sock.try_clone()?);
+            wire::send_msg(&mut writer, &WireMsg::SubtreeAssignment(child_sub))?;
+            writer.flush()?;
+            let mut reader = BufReader::new(sock);
+            let child_compress = match wire::recv_msg(&mut reader)? {
+                WireMsg::HelloAck { client_lo, session, compress, .. }
+                    if client_lo == clo && session == sub.session =>
+                {
+                    compress_down && compress
+                }
+                other => {
+                    return Err(Error::Protocol(format!(
+                        "relay child {peer} answered the handshake with {other:?}"
+                    )))
+                }
+            };
+            children.push(RelayChild {
+                writer,
+                reader,
+                lo: clo,
+                hi: chi,
+                compress: child_compress,
+                pending: Vec::new(),
+            });
+        }
+        Ok(RelayNode {
+            children,
+            client_lo: lo,
+            owner,
+            pending_iter: 0,
+            queue: VecDeque::new(),
+            awaiting: VecDeque::new(),
+        })
+    }
+
+    /// Coalesce and send every buffered downlink: one `TickBatch` frame
+    /// per child with pending items, recorded in tree order for the
+    /// fan-in (children compute in parallel once every batch is out).
+    fn flush_children(&mut self) -> Result<()> {
+        let iter = self.pending_iter;
+        for (ci, child) in self.children.iter_mut().enumerate() {
+            if child.pending.is_empty() {
+                continue;
+            }
+            let ticks = std::mem::take(&mut child.pending);
+            let n_items = ticks.len();
+            let batch = WireMsg::TickBatch { iter, ticks };
+            wire::send_msg_c(&mut child.writer, &batch, child.compress)?;
+            child.writer.flush()?;
+            self.awaiting.push_back((ci, n_items));
+        }
+        Ok(())
+    }
+}
+
+impl Transport for RelayNode {
+    fn begin_tick(&mut self, iter: usize, _w: &[f32]) -> Result<()> {
+        debug_assert!(
+            self.queue.is_empty() && self.awaiting.is_empty(),
+            "a new tick began with acks still in flight"
+        );
+        self.pending_iter = iter;
+        Ok(())
+    }
+
+    fn send_tick(
+        &mut self,
+        client: usize,
+        iter: usize,
+        portion: Option<(Coords, Vec<f32>)>,
+    ) -> Result<()> {
+        debug_assert_eq!(self.pending_iter, iter, "at most one iteration may be in flight");
+        let idx = client
+            .checked_sub(self.client_lo)
+            .filter(|&i| i < self.owner.len())
+            .ok_or_else(|| {
+                Error::Protocol(format!("tick for client {client} outside the relay's range"))
+            })?;
+        self.children[self.owner[idx]].pending.push((client, portion));
+        Ok(())
+    }
+
+    fn recv_ack(&mut self) -> Result<Ack> {
+        self.flush_children()?;
+        while self.queue.is_empty() {
+            let Some((ci, n_items)) = self.awaiting.pop_front() else {
+                return Err(Error::Protocol(
+                    "every child answered but acks are still owed".into(),
+                ));
+            };
+            let acks = match wire::recv_msg(&mut self.children[ci].reader)? {
+                WireMsg::AckBatch { acks } => acks,
+                other => {
+                    return Err(Error::Protocol(format!(
+                        "relay child {ci} answered the tick with {other:?}"
+                    )))
+                }
+            };
+            if acks.len() != n_items {
+                return Err(Error::Protocol(format!(
+                    "relay child {ci} acked {} of {n_items} ticks",
+                    acks.len()
+                )));
+            }
+            let (clo, chi) = (self.children[ci].lo, self.children[ci].hi);
+            for (client, upload, learned) in acks {
+                if !(clo..chi).contains(&client) {
+                    return Err(Error::Protocol(format!(
+                        "relay child {ci} acked client {client} outside its shard"
+                    )));
+                }
+                self.queue.push_back(Ack { client, upload, learned });
+            }
+        }
+        Ok(self.queue.pop_front().expect("loop exits with a queued ack"))
+    }
+
+    fn dump_states(&mut self, _next_tick: usize) -> Result<Vec<Vec<f32>>> {
+        for child in &mut self.children {
+            wire::send_msg(&mut child.writer, &WireMsg::StateRequest)?;
+            child.writer.flush()?;
+        }
+        let mut all = Vec::with_capacity(self.owner.len());
+        for (ci, child) in self.children.iter_mut().enumerate() {
+            match wire::recv_msg(&mut child.reader)? {
+                WireMsg::StateDump { client_lo, states }
+                    if client_lo == child.lo && states.len() == child.hi - child.lo =>
+                {
+                    all.extend(states);
+                }
+                other => {
+                    return Err(Error::Protocol(format!(
+                        "relay child {ci} answered the state request with {other:?}"
+                    )))
+                }
+            }
+        }
+        Ok(all)
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        for child in &mut self.children {
+            let _ = wire::send_msg(&mut child.writer, &WireMsg::Shutdown);
+            let _ = child.writer.flush();
+        }
+        Ok(())
+    }
+}
+
+/// Relay-process entry point: connect upstream to a [`TcpFleet`] server
+/// (or another parent) at `addr`, receive a `fanout > 1`
+/// [`SubtreeAssignment`], accept that many workers on `listener`, then
+/// fold the subtree's acks into one [`wire::WireMsg::CombinedUpdate`]
+/// frame per tick — the upstream cost of a tick becomes one frame per
+/// subtree instead of one per worker. Blocks for the whole run.
+///
+/// The relay is deliberately *stateless about the federation*: it never
+/// materializes shards or models, only routes frames and concatenates
+/// acks, so relay memory is flat in both K and D. State requests fan out
+/// to the children and reassemble into one range-ordered dump; a lost
+/// child fails the relay and the root recovers the subtree whole.
+///
+/// Honors the same `PAO_FED_CRASH_AT_TICK` test hook as a worker (exit
+/// code 3 on the first downlink at or past the given iteration) so
+/// supervisor tests can kill an inner tree node deterministically.
+pub fn run_relay(addr: &str, listener: &TcpListener, opts: &WorkerOptions) -> Result<RelayReport> {
+    let sock = TcpStream::connect(addr)?;
+    sock.set_nodelay(true)?;
+    let mut reader = BufReader::new(sock.try_clone()?);
+    let mut writer = BufWriter::new(sock);
+
+    let sub = match wire::recv_msg(&mut reader)? {
+        WireMsg::SubtreeAssignment(s) => s,
+        WireMsg::Hello(_) => {
+            return Err(Error::Protocol(
+                "parent sent a flat worker handshake; this endpoint is a relay \
+                 (start the server with --topology)"
+                    .into(),
+            ))
+        }
+        other => {
+            return Err(Error::Protocol(format!(
+                "expected a subtree assignment, got {other:?}"
+            )))
+        }
+    };
+    let (lo, hi, k, w) = (sub.client_lo, sub.client_hi, sub.k_total, sub.n_leaves);
+    if sub.leaf_lo + sub.fanout > w
+        || lo != sub.leaf_lo * k / w
+        || hi != (sub.leaf_lo + sub.fanout) * k / w
+    {
+        return Err(Error::Protocol(format!(
+            "subtree range {lo}..{hi} disagrees with leaves {}..{} of {w} over K={k}",
+            sub.leaf_lo,
+            sub.leaf_lo + sub.fanout
+        )));
+    }
+    if !opts.secret.is_empty()
+        && sub.hello_tag != wire::hello_tag(&opts.secret, sub.challenge, sub.session, lo)
+    {
+        return Err(Error::Protocol(
+            "parent failed handshake authentication (bad shared-secret hello tag)".into(),
+        ));
+    }
+    let compress_up = sub.compress && opts.allow_compress;
+    let mut node = RelayNode::accept(listener, &sub, opts)?;
+    let proof = wire::ack_proof(&opts.secret, sub.challenge, sub.session, lo);
+    wire::send_msg(
+        &mut writer,
+        &WireMsg::HelloAck { client_lo: lo, session: sub.session, compress: compress_up, proof },
+    )?;
+    writer.flush()?;
+
+    let crash_at: Option<usize> = std::env::var("PAO_FED_CRASH_AT_TICK")
+        .ok()
+        .and_then(|v| v.parse().ok());
+    let mut report =
+        RelayReport { client_lo: lo, client_hi: hi, workers: sub.fanout, ticks: 0 };
+    loop {
+        match wire::recv_msg(&mut reader)? {
+            WireMsg::TickBatch { iter, ticks } => {
+                if crash_at.is_some_and(|t| iter >= t) {
+                    eprintln!("relay: PAO_FED_CRASH_AT_TICK hit at iter {iter}; dying");
+                    std::process::exit(3);
+                }
+                let n_items = ticks.len();
+                node.begin_tick(iter, &[])?;
+                for (client, portion) in ticks {
+                    node.send_tick(client, iter, portion)?;
+                }
+                // The shared AckSource path: collect + sort by client id —
+                // over contiguous child ranges this *is* the fixed tree
+                // order, and the root re-sorts the concatenation with
+                // every other subtree's acks before aggregating.
+                let acks = node
+                    .collect_acks(n_items)?
+                    .into_iter()
+                    .map(|a| (a.client, a.upload, a.learned))
+                    .collect();
+                wire::send_msg_c(&mut writer, &WireMsg::CombinedUpdate { iter, acks }, compress_up)?;
+                writer.flush()?;
+                report.ticks += 1;
+            }
+            WireMsg::StateRequest => {
+                let states = node.dump_states(0)?;
+                wire::send_msg(&mut writer, &WireMsg::StateDump { client_lo: lo, states })?;
+                writer.flush()?;
+            }
+            WireMsg::Shutdown => {
+                node.shutdown()?;
+                break;
+            }
+            other => {
+                return Err(Error::Protocol(format!(
+                    "unexpected downlink message {other:?}"
+                )))
+            }
+        }
+    }
+    Ok(report)
 }
 
 #[cfg(test)]
@@ -1548,5 +2195,88 @@ mod tests {
         // Wrong log dimension.
         let plan = ResumePlan { base_tick: 0, states: vec![], log: vec![vec![0.0; 7]] };
         assert!(replay_shard(&assignment, &schedule, &mut states, &plan).is_err());
+    }
+
+    fn sample_subtree(leaf: usize, w: usize, k: usize, n: usize) -> SubtreeAssignment {
+        use crate::data::stream::{SourceSpec, StreamConfig};
+        let seed = 17;
+        let cfg = StreamConfig {
+            n_clients: k,
+            n_iters: n,
+            data_group_samples: vec![n / 2, n],
+            test_size: 6,
+        };
+        let (lo, hi) = (leaf * k / w, (leaf + 1) * k / w);
+        SubtreeAssignment {
+            client_lo: lo,
+            client_hi: hi,
+            leaf_lo: leaf,
+            fanout: 1,
+            n_leaves: w,
+            env_seed: seed,
+            n_iters: n,
+            algo: algorithms::build(Variant::PaoFedU2, 0.4, 4, 10, 5),
+            rff: RffSpace::sample(4, 8, 1.0, &mut Pcg32::derive(seed, &[1])),
+            spec: StreamSpec {
+                config: cfg,
+                source: SourceSpec::Eq39 { seed },
+                seed,
+            },
+            session: 5,
+            k_total: k,
+            avail: AvailSpec::Explicit(vec![0.5; k]),
+            resume: None,
+            compress: false,
+            challenge: 0,
+            hello_tag: 0,
+        }
+    }
+
+    /// A leaf subtree assignment synthesizes exactly the shard the server
+    /// would have extracted from the fully materialized stream — the
+    /// generative-assignment determinism contract, over an uneven K/W
+    /// split so the leaf-range rounding is exercised.
+    #[test]
+    fn subtree_leaf_assignment_matches_materialized_shard() {
+        let (k, n, w) = (10usize, 30usize, 4usize);
+        let full = sample_subtree(0, w, k, n).spec.materialize();
+        for leaf in 0..w {
+            let sub = sample_subtree(leaf, w, k, n);
+            let (lo, hi) = (sub.client_lo, sub.client_hi);
+            let a = worker_assignment_from_subtree(sub).unwrap();
+            assert_eq!((a.client_lo, a.client_hi), (lo, hi));
+            assert_eq!(a.clients.len(), hi - lo);
+            assert_eq!(a.avail_probs.len(), k);
+            for (i, c) in (lo..hi).enumerate() {
+                let want = extract_shard(&full, c);
+                assert_eq!(a.clients[i].present, want.present, "client {c} presence");
+                assert_eq!(a.clients[i].xs, want.xs, "client {c} inputs");
+                assert_eq!(a.clients[i].ys, want.ys, "client {c} targets");
+            }
+        }
+    }
+
+    /// Malformed subtree assignments are rejected before any shard is
+    /// synthesized: relay fan-outs on a worker endpoint, ranges that
+    /// disagree with the leaf formula, and stream specs sized for a
+    /// different fleet.
+    #[test]
+    fn subtree_geometry_is_validated() {
+        let (k, n, w) = (10usize, 30usize, 4usize);
+        let mut sub = sample_subtree(1, w, k, n);
+        sub.fanout = 2;
+        assert!(worker_assignment_from_subtree(sub).is_err(), "fanout > 1 on a worker");
+        let mut sub = sample_subtree(1, w, k, n);
+        sub.client_hi += 1;
+        assert!(worker_assignment_from_subtree(sub).is_err(), "range off the leaf formula");
+        let mut sub = sample_subtree(1, w, k, n);
+        sub.leaf_lo = w + 1;
+        assert!(worker_assignment_from_subtree(sub).is_err(), "leaf index out of range");
+        let mut sub = sample_subtree(1, w, k, n);
+        sub.spec.config.n_clients = k + 1;
+        assert!(worker_assignment_from_subtree(sub).is_err(), "spec sized for another fleet");
+        let mut sub = sample_subtree(1, w, k, n);
+        sub.avail = AvailSpec::Explicit(vec![0.5; k - 1]);
+        assert!(worker_assignment_from_subtree(sub).is_err(), "short availability vector");
     }
 }

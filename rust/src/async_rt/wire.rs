@@ -31,6 +31,15 @@
 //! Because the codec is lossless on IEEE-754 bit patterns, a compressed
 //! link reproduces the uncompressed curve bit for bit.
 //!
+//! ## Aggregator-tree frames
+//!
+//! The tree topology adds two frames continuing the same scheme:
+//! tag 11 [`WireMsg::CombinedUpdate`] (a relay's whole-subtree ack fold,
+//! one frame upstream per tick instead of one per worker, with a
+//! compressed twin at tag 13) and tag 12 [`WireMsg::SubtreeAssignment`]
+//! (the generative handshake: a [`StreamSpec`] + [`AvailSpec`] instead of
+//! materialized shards, so assignment bytes are flat in K).
+//!
 //! The same appended Hello/HelloAck fields carry the authenticated
 //! handshake: the server proves knowledge of the shared secret with
 //! [`hello_tag`] (a 64-bit truncation of HMAC-SHA256) over a fresh
@@ -54,8 +63,10 @@
 //! old server ↔ current worker automatically; old worker ↔ current
 //! server only under `legacy_hello`.
 
+use crate::data::stream::{SourceSpec, StreamConfig, StreamSpec};
 use crate::error::{Error, Result};
 use crate::fl::engine::AlgoConfig;
+use crate::fl::participation::AvailSpec;
 use crate::fl::selection::Coords;
 use crate::fl::server::Update;
 use crate::persist::codec::{self, Cur};
@@ -139,6 +150,25 @@ pub enum WireMsg {
     },
     /// Server -> worker: end of run.
     Shutdown,
+    /// Relay -> parent: every acknowledgement of one federation iteration
+    /// for the whole contiguous client range the relay's subtree owns,
+    /// partially folded into a single frame in fixed tree order
+    /// (ascending client id — which, over contiguous child ranges, is
+    /// exactly the root's sorted-ack order). The upstream cost of a tick
+    /// is one frame per *subtree* instead of one per worker.
+    CombinedUpdate {
+        /// Federation iteration shared by every item.
+        iter: usize,
+        /// Per client, `(client, upload, learned)` — the same item shape
+        /// as [`WireMsg::AckBatch`], sorted by client id.
+        acks: Vec<(usize, Option<Update>, u32)>,
+    },
+    /// Server/relay -> child: the generative handshake assigning a
+    /// contiguous client range *without* materialized shards — the child
+    /// synthesizes its slice locally from the carried [`StreamSpec`]
+    /// (`fanout == 1`: a worker) or re-shards the range to its own
+    /// children (`fanout > 1`: a relay). Assignment bytes are flat in K.
+    SubtreeAssignment(SubtreeAssignment),
 }
 
 /// How a (re)connecting worker reconstructs its clients' state before
@@ -200,6 +230,58 @@ pub struct WorkerAssignment {
     /// recognizes a legacy `Hello` ([`hello_is_legacy`]).
     pub challenge: u64,
     /// Truncated-HMAC proof that the server knows the shared secret
+    /// ([`hello_tag`]); 0 when the fleet runs without one.
+    pub hello_tag: u64,
+}
+
+/// The generative tree handshake: everything a subtree needs to host a
+/// contiguous client range, with the data stream and the participation
+/// vector carried as compact *specs* ([`StreamSpec`] / [`AvailSpec`])
+/// instead of materialized arrays — the frame's size is flat in K. The
+/// leaf geometry (`leaf_lo`, `n_leaves`) pins the global leaf-range
+/// formula `leaf j hosts clients (j*K/W .. (j+1)*K/W)`, so any tree over
+/// the same `n_leaves` shards the fleet identically to a flat fleet of
+/// `n_leaves` workers — the tree-shape half of the determinism contract.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SubtreeAssignment {
+    /// First client id of the subtree's range (inclusive).
+    pub client_lo: usize,
+    /// Last client id of the subtree's range (exclusive).
+    pub client_hi: usize,
+    /// Index of the subtree's first leaf in the global left-to-right
+    /// leaf order.
+    pub leaf_lo: usize,
+    /// Number of direct children: 1 = host the range directly (a leaf
+    /// worker); > 1 = accept that many children and re-shard (a relay).
+    pub fanout: usize,
+    /// Total leaves in the whole tree (W in the leaf-range formula).
+    pub n_leaves: usize,
+    /// Environment seed (keys the shared selection schedule).
+    pub env_seed: u64,
+    /// Run length in iterations.
+    pub n_iters: usize,
+    /// Algorithm preset (identical to the server's copy).
+    pub algo: AlgoConfig,
+    /// The shared RFF realization.
+    pub rff: RffSpace,
+    /// Generative description of the fleet-wide data stream; the child
+    /// materializes only its own slice.
+    pub spec: StreamSpec,
+    /// Session token binding the connection to one server run.
+    pub session: u64,
+    /// Total fleet size K.
+    pub k_total: usize,
+    /// Generative description of the participation probabilities.
+    pub avail: AvailSpec,
+    /// `Some` when the subtree must rebuild state before serving; a relay
+    /// slices the plan per child range.
+    pub resume: Option<ResumePlan>,
+    /// Parent offers compressed batched frames (tags 9/10/13) on this
+    /// link; in force only if the child's HelloAck accepts.
+    pub compress: bool,
+    /// Fresh challenge for the authenticated handshake (never 0).
+    pub challenge: u64,
+    /// Truncated-HMAC proof that the parent knows the shared secret
     /// ([`hello_tag`]); 0 when the fleet runs without one.
     pub hello_tag: u64,
 }
@@ -281,6 +363,67 @@ fn put_f32_rows(buf: &mut Vec<u8>, rows: &[Vec<f32>]) {
     }
 }
 
+/// The raw ack-item body shared by [`WireMsg::AckBatch`] and
+/// [`WireMsg::CombinedUpdate`]: count, then per item client id, optional
+/// update, learned count.
+fn put_ack_items(buf: &mut Vec<u8>, acks: &[(usize, Option<Update>, u32)]) {
+    codec::put_usize(buf, acks.len());
+    for (client, upload, learned) in acks {
+        codec::put_usize(buf, *client);
+        match upload {
+            None => codec::put_bool(buf, false),
+            Some(u) => {
+                codec::put_bool(buf, true);
+                codec::put_update(buf, u);
+            }
+        }
+        codec::put_u32(buf, *learned);
+    }
+}
+
+fn put_stream_spec(buf: &mut Vec<u8>, spec: &StreamSpec) {
+    codec::put_usize(buf, spec.config.n_clients);
+    codec::put_usize(buf, spec.config.n_iters);
+    codec::put_usize(buf, spec.config.data_group_samples.len());
+    for &s in &spec.config.data_group_samples {
+        codec::put_usize(buf, s);
+    }
+    codec::put_usize(buf, spec.config.test_size);
+    match &spec.source {
+        SourceSpec::Eq39 { seed } => {
+            buf.push(0);
+            codec::put_u64(buf, *seed);
+        }
+    }
+    codec::put_u64(buf, spec.seed);
+}
+
+fn put_avail_spec(buf: &mut Vec<u8>, avail: &AvailSpec) {
+    match avail {
+        AvailSpec::Explicit(probs) => {
+            buf.push(0);
+            codec::put_f64s(buf, probs);
+        }
+        AvailSpec::Grouped { group_probs, data_groups } => {
+            buf.push(1);
+            codec::put_f64s(buf, group_probs);
+            codec::put_usize(buf, *data_groups);
+        }
+    }
+}
+
+fn put_resume_opt(buf: &mut Vec<u8>, resume: &Option<ResumePlan>) {
+    match resume {
+        None => codec::put_bool(buf, false),
+        Some(plan) => {
+            codec::put_bool(buf, true);
+            codec::put_usize(buf, plan.base_tick);
+            put_f32_rows(buf, &plan.states);
+            put_f32_rows(buf, &plan.log);
+        }
+    }
+}
+
 /// Encode a message into a standalone payload (no frame header).
 pub fn encode(msg: &WireMsg) -> Vec<u8> {
     let mut buf = Vec::new();
@@ -308,15 +451,7 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
             codec::put_u64(&mut buf, h.session);
             codec::put_usize(&mut buf, h.k_total);
             codec::put_f64s(&mut buf, &h.avail_probs);
-            match &h.resume {
-                None => codec::put_bool(&mut buf, false),
-                Some(plan) => {
-                    codec::put_bool(&mut buf, true);
-                    codec::put_usize(&mut buf, plan.base_tick);
-                    put_f32_rows(&mut buf, &plan.states);
-                    put_f32_rows(&mut buf, &plan.log);
-                }
-            }
+            put_resume_opt(&mut buf, &h.resume);
             // Negotiation/auth fields ride after the legacy layout. A
             // current decoder detects their absence by the frame ending
             // early; a pre-codec decoder REJECTS them as trailing bytes,
@@ -363,24 +498,41 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
         }
         WireMsg::AckBatch { acks } => {
             buf.push(6);
-            codec::put_usize(&mut buf, acks.len());
-            for (client, upload, learned) in acks {
-                codec::put_usize(&mut buf, *client);
-                match upload {
-                    None => codec::put_bool(&mut buf, false),
-                    Some(u) => {
-                        codec::put_bool(&mut buf, true);
-                        codec::put_update(&mut buf, u);
-                    }
-                }
-                codec::put_u32(&mut buf, *learned);
-            }
+            put_ack_items(&mut buf, acks);
         }
         WireMsg::StateRequest => buf.push(7),
         WireMsg::StateDump { client_lo, states } => {
             buf.push(8);
             codec::put_usize(&mut buf, *client_lo);
             put_f32_rows(&mut buf, states);
+        }
+        WireMsg::CombinedUpdate { iter, acks } => {
+            buf.push(11);
+            codec::put_usize(&mut buf, *iter);
+            put_ack_items(&mut buf, acks);
+        }
+        WireMsg::SubtreeAssignment(a) => {
+            buf.push(12);
+            codec::put_usize(&mut buf, a.client_lo);
+            codec::put_usize(&mut buf, a.client_hi);
+            codec::put_usize(&mut buf, a.leaf_lo);
+            codec::put_usize(&mut buf, a.fanout);
+            codec::put_usize(&mut buf, a.n_leaves);
+            codec::put_u64(&mut buf, a.env_seed);
+            codec::put_usize(&mut buf, a.n_iters);
+            codec::put_algo(&mut buf, &a.algo);
+            codec::put_usize(&mut buf, a.rff.l);
+            codec::put_usize(&mut buf, a.rff.d);
+            codec::put_f32s(&mut buf, &a.rff.omega);
+            codec::put_f32s(&mut buf, &a.rff.b);
+            put_stream_spec(&mut buf, &a.spec);
+            codec::put_u64(&mut buf, a.session);
+            codec::put_usize(&mut buf, a.k_total);
+            put_avail_spec(&mut buf, &a.avail);
+            put_resume_opt(&mut buf, &a.resume);
+            codec::put_bool(&mut buf, a.compress);
+            codec::put_u64(&mut buf, a.challenge);
+            codec::put_u64(&mut buf, a.hello_tag);
         }
     }
     buf
@@ -427,6 +579,9 @@ pub fn hello_is_legacy(a: &WorkerAssignment) -> bool {
 pub const TAG_TICK_BATCH_C: u8 = 9;
 /// See [`TAG_TICK_BATCH_C`].
 pub const TAG_ACK_BATCH_C: u8 = 10;
+/// Compressed [`WireMsg::CombinedUpdate`] (the relay uplink hot path),
+/// same codec and checksum discipline as tags 9/10.
+pub const TAG_COMBINED_UPDATE_C: u8 = 13;
 
 fn put_client_deltas(buf: &mut Vec<u8>, clients: impl Iterator<Item = usize>) {
     let mut prev = 0i64;
@@ -550,30 +705,96 @@ pub fn encode_compressed(msg: &WireMsg) -> Vec<u8> {
         }
         WireMsg::AckBatch { acks } => {
             let mut buf = vec![TAG_ACK_BATCH_C];
-            codec::put_varint(&mut buf, acks.len() as u64);
-            put_client_deltas(&mut buf, acks.iter().map(|(c, _, _)| *c));
-            put_bitset(&mut buf, acks.iter().map(|(_, u, _)| u.is_some()));
-            for (_, _, learned) in acks {
-                codec::put_varint(&mut buf, *learned as u64);
-            }
-            let mut values: Vec<f32> = Vec::new();
-            for (client, upload, _) in acks {
-                if let Some(u) = upload {
-                    codec::put_varint(
-                        &mut buf,
-                        compress::zigzag(u.client as i64 - *client as i64),
-                    );
-                    codec::put_varint(&mut buf, u.sent_iter as u64);
-                    put_coords_c(&mut buf, &u.coords);
-                    codec::put_varint(&mut buf, u.values.len() as u64);
-                    values.extend_from_slice(&u.values);
-                }
-            }
-            compress::put_f32_stream(&mut buf, &values);
+            put_ack_items_c(&mut buf, acks);
+            seal(buf)
+        }
+        WireMsg::CombinedUpdate { iter, acks } => {
+            let mut buf = vec![TAG_COMBINED_UPDATE_C];
+            codec::put_varint(&mut buf, *iter as u64);
+            put_ack_items_c(&mut buf, acks);
             seal(buf)
         }
         other => encode(other),
     }
+}
+
+/// The compressed ack-item body shared by tags 10 and 13: varint count,
+/// delta-coded client ids, upload bitset, learned varints, per-upload
+/// metadata, one shared gorilla f32 stream.
+fn put_ack_items_c(buf: &mut Vec<u8>, acks: &[(usize, Option<Update>, u32)]) {
+    codec::put_varint(buf, acks.len() as u64);
+    put_client_deltas(buf, acks.iter().map(|(c, _, _)| *c));
+    put_bitset(buf, acks.iter().map(|(_, u, _)| u.is_some()));
+    for (_, _, learned) in acks {
+        codec::put_varint(buf, *learned as u64);
+    }
+    let mut values: Vec<f32> = Vec::new();
+    for (client, upload, _) in acks {
+        if let Some(u) = upload {
+            codec::put_varint(buf, compress::zigzag(u.client as i64 - *client as i64));
+            codec::put_varint(buf, u.sent_iter as u64);
+            put_coords_c(buf, &u.coords);
+            codec::put_varint(buf, u.values.len() as u64);
+            values.extend_from_slice(&u.values);
+        }
+    }
+    compress::put_f32_stream(buf, &values);
+}
+
+/// Decode the compressed ack-item body written by [`put_ack_items_c`].
+fn get_ack_items_c(c: &mut Cur<'_>) -> Result<Vec<(usize, Option<Update>, u32)>> {
+    let n = varint_usize(c)?;
+    if n > c.remaining() {
+        return Err(Error::Protocol(format!(
+            "corrupt batch count {n} exceeds {} remaining bytes",
+            c.remaining()
+        )));
+    }
+    let clients = get_client_deltas(c, n)?;
+    let uploaded = get_bitset(c, n)?;
+    let mut learned = Vec::with_capacity(n);
+    for _ in 0..n {
+        let l = c.varint()?;
+        learned.push(
+            u32::try_from(l).map_err(|_| Error::Protocol("learned count exceeds u32".into()))?,
+        );
+    }
+    let mut metas: Vec<Option<(usize, usize, Coords, usize)>> = Vec::with_capacity(n);
+    let mut total = 0usize;
+    for (i, &up) in uploaded.iter().enumerate() {
+        if up {
+            let delta = compress::unzigzag(c.varint()?);
+            let uclient = (clients[i] as i64)
+                .checked_add(delta)
+                .filter(|&v| v >= 0)
+                .ok_or_else(|| Error::Protocol("update client id out of range".into()))?
+                as usize;
+            let sent_iter = varint_usize(c)?;
+            let coords = get_coords_c(c)?;
+            let count = varint_usize(c)?;
+            total = total
+                .checked_add(count)
+                .ok_or_else(|| Error::Protocol("upload counts overflow".into()))?;
+            metas.push(Some((uclient, sent_iter, coords, count)));
+        } else {
+            metas.push(None);
+        }
+    }
+    let values = compress::get_f32_stream(c, total)?;
+    let mut off = 0usize;
+    Ok(clients
+        .into_iter()
+        .zip(metas)
+        .zip(learned)
+        .map(|((client, meta), l)| {
+            let upload = meta.map(|(uclient, sent_iter, coords, count)| {
+                let vals = values[off..off + count].to_vec();
+                off += count;
+                Update { client: uclient, sent_iter, coords, values: vals }
+            });
+            (client, upload, l)
+        })
+        .collect())
 }
 
 /// Decode one compressed (tag 9/10) payload. The trailing checksum is
@@ -636,61 +857,9 @@ fn decode_compressed(payload: &[u8]) -> Result<WireMsg> {
                 .collect();
             WireMsg::TickBatch { iter, ticks }
         }
-        TAG_ACK_BATCH_C => {
-            let n = varint_usize(&mut c)?;
-            if n > c.remaining() {
-                return Err(Error::Protocol(format!(
-                    "corrupt batch count {n} exceeds {} remaining bytes",
-                    c.remaining()
-                )));
-            }
-            let clients = get_client_deltas(&mut c, n)?;
-            let uploaded = get_bitset(&mut c, n)?;
-            let mut learned = Vec::with_capacity(n);
-            for _ in 0..n {
-                let l = c.varint()?;
-                learned.push(
-                    u32::try_from(l)
-                        .map_err(|_| Error::Protocol("learned count exceeds u32".into()))?,
-                );
-            }
-            let mut metas: Vec<Option<(usize, usize, Coords, usize)>> = Vec::with_capacity(n);
-            let mut total = 0usize;
-            for (i, &up) in uploaded.iter().enumerate() {
-                if up {
-                    let delta = compress::unzigzag(c.varint()?);
-                    let uclient = (clients[i] as i64)
-                        .checked_add(delta)
-                        .filter(|&v| v >= 0)
-                        .ok_or_else(|| Error::Protocol("update client id out of range".into()))?
-                        as usize;
-                    let sent_iter = varint_usize(&mut c)?;
-                    let coords = get_coords_c(&mut c)?;
-                    let count = varint_usize(&mut c)?;
-                    total = total
-                        .checked_add(count)
-                        .ok_or_else(|| Error::Protocol("upload counts overflow".into()))?;
-                    metas.push(Some((uclient, sent_iter, coords, count)));
-                } else {
-                    metas.push(None);
-                }
-            }
-            let values = compress::get_f32_stream(&mut c, total)?;
-            let mut off = 0usize;
-            let acks = clients
-                .into_iter()
-                .zip(metas)
-                .zip(learned)
-                .map(|((client, meta), l)| {
-                    let upload = meta.map(|(uclient, sent_iter, coords, count)| {
-                        let vals = values[off..off + count].to_vec();
-                        off += count;
-                        Update { client: uclient, sent_iter, coords, values: vals }
-                    });
-                    (client, upload, l)
-                })
-                .collect();
-            WireMsg::AckBatch { acks }
+        TAG_ACK_BATCH_C => WireMsg::AckBatch { acks: get_ack_items_c(&mut c)? },
+        TAG_COMBINED_UPDATE_C => {
+            WireMsg::CombinedUpdate { iter: varint_usize(&mut c)?, acks: get_ack_items_c(&mut c)? }
         }
         t => return Err(Error::Protocol(format!("bad compressed message tag {t}"))),
     };
@@ -723,11 +892,69 @@ fn f32_rows(c: &mut Cur<'_>) -> Result<Vec<Vec<f32>>> {
     Ok(rows)
 }
 
+/// Decode the raw ack-item body written by [`put_ack_items`].
+fn get_ack_items(c: &mut Cur<'_>) -> Result<Vec<(usize, Option<Update>, u32)>> {
+    // Each item carries at least client id + flag + learned count.
+    let n = c.len(13)?;
+    let mut acks = Vec::with_capacity(n);
+    for _ in 0..n {
+        let client = c.usize()?;
+        let upload = if c.bool()? { Some(c.update()?) } else { None };
+        acks.push((client, upload, c.u32()?));
+    }
+    Ok(acks)
+}
+
+fn get_stream_spec(c: &mut Cur<'_>) -> Result<StreamSpec> {
+    let n_clients = c.usize()?;
+    let n_iters = c.usize()?;
+    // Each group budget is one u64.
+    let n_groups = c.len(8)?;
+    let mut data_group_samples = Vec::with_capacity(n_groups);
+    for _ in 0..n_groups {
+        data_group_samples.push(c.usize()?);
+    }
+    let test_size = c.usize()?;
+    let source = match c.u8()? {
+        0 => SourceSpec::Eq39 { seed: c.u64()? },
+        t => return Err(Error::Protocol(format!("bad stream-source tag {t}"))),
+    };
+    let seed = c.u64()?;
+    Ok(StreamSpec {
+        config: StreamConfig { n_clients, n_iters, data_group_samples, test_size },
+        source,
+        seed,
+    })
+}
+
+fn get_avail_spec(c: &mut Cur<'_>) -> Result<AvailSpec> {
+    match c.u8()? {
+        0 => Ok(AvailSpec::Explicit(c.f64s()?)),
+        1 => Ok(AvailSpec::Grouped { group_probs: c.f64s()?, data_groups: c.usize()? }),
+        t => Err(Error::Protocol(format!("bad availability-spec tag {t}"))),
+    }
+}
+
+fn get_resume_opt(c: &mut Cur<'_>) -> Result<Option<ResumePlan>> {
+    if c.bool()? {
+        Ok(Some(ResumePlan {
+            base_tick: c.usize()?,
+            states: f32_rows(c)?,
+            log: f32_rows(c)?,
+        }))
+    } else {
+        Ok(None)
+    }
+}
+
 /// Decode one payload produced by [`encode`] or [`encode_compressed`]:
 /// every decoder accepts both the raw and the compressed tags, which is
 /// what lets a mixed fleet interoperate.
 pub fn decode(payload: &[u8]) -> Result<WireMsg> {
-    if matches!(payload.first(), Some(&TAG_TICK_BATCH_C) | Some(&TAG_ACK_BATCH_C)) {
+    if matches!(
+        payload.first(),
+        Some(&TAG_TICK_BATCH_C) | Some(&TAG_ACK_BATCH_C) | Some(&TAG_COMBINED_UPDATE_C)
+    ) {
         return decode_compressed(payload);
     }
     let mut c = Cur::new(payload);
@@ -765,15 +992,7 @@ pub fn decode(payload: &[u8]) -> Result<WireMsg> {
             let session = c.u64()?;
             let k_total = c.usize()?;
             let avail_probs = c.f64s()?;
-            let resume = if c.bool()? {
-                Some(ResumePlan {
-                    base_tick: c.usize()?,
-                    states: f32_rows(&mut c)?,
-                    log: f32_rows(&mut c)?,
-                })
-            } else {
-                None
-            };
+            let resume = get_resume_opt(&mut c)?;
             // A legacy Hello ends here; current peers append the
             // negotiation/auth fields (defaults: raw frames, no proof).
             let (compress, challenge, hello_tag) = if c.remaining() > 0 {
@@ -822,19 +1041,61 @@ pub fn decode(payload: &[u8]) -> Result<WireMsg> {
             }
             WireMsg::TickBatch { iter, ticks }
         }
-        6 => {
-            // Each item carries at least client id + flag + learned count.
-            let n = c.len(13)?;
-            let mut acks = Vec::with_capacity(n);
-            for _ in 0..n {
-                let client = c.usize()?;
-                let upload = if c.bool()? { Some(c.update()?) } else { None };
-                acks.push((client, upload, c.u32()?));
-            }
-            WireMsg::AckBatch { acks }
-        }
+        6 => WireMsg::AckBatch { acks: get_ack_items(&mut c)? },
         7 => WireMsg::StateRequest,
         8 => WireMsg::StateDump { client_lo: c.usize()?, states: f32_rows(&mut c)? },
+        11 => WireMsg::CombinedUpdate { iter: c.usize()?, acks: get_ack_items(&mut c)? },
+        12 => {
+            let client_lo = c.usize()?;
+            let client_hi = c.usize()?;
+            let leaf_lo = c.usize()?;
+            let fanout = c.usize()?;
+            let n_leaves = c.usize()?;
+            let env_seed = c.u64()?;
+            let n_iters = c.usize()?;
+            let algo = c.algo()?;
+            let l = c.usize()?;
+            let d = c.usize()?;
+            let omega = c.f32s()?;
+            let b = c.f32s()?;
+            if l.checked_mul(d) != Some(omega.len()) || b.len() != d {
+                return Err(Error::Protocol("rff dimensions disagree".into()));
+            }
+            let rff = RffSpace::from_parts(l, d, omega, b);
+            let spec = get_stream_spec(&mut c)?;
+            let session = c.u64()?;
+            let k_total = c.usize()?;
+            let avail = get_avail_spec(&mut c)?;
+            let resume = get_resume_opt(&mut c)?;
+            let compress = c.bool()?;
+            let challenge = c.u64()?;
+            let hello_tag = c.u64()?;
+            if fanout == 0 || client_lo > client_hi || n_leaves == 0 || leaf_lo >= n_leaves {
+                return Err(Error::Protocol(format!(
+                    "malformed subtree geometry: clients {client_lo}..{client_hi}, \
+                     leaf {leaf_lo} of {n_leaves}, fanout {fanout}"
+                )));
+            }
+            WireMsg::SubtreeAssignment(SubtreeAssignment {
+                client_lo,
+                client_hi,
+                leaf_lo,
+                fanout,
+                n_leaves,
+                env_seed,
+                n_iters,
+                algo,
+                rff,
+                spec,
+                session,
+                k_total,
+                avail,
+                resume,
+                compress,
+                challenge,
+                hello_tag,
+            })
+        }
         t => return Err(Error::Protocol(format!("bad message tag {t}"))),
     };
     if c.remaining() != 0 {
@@ -1114,9 +1375,12 @@ mod tests {
     #[test]
     fn corrupt_frames_error_cleanly() {
         assert!(decode(&[]).is_err());
-        assert!(decode(&[11]).is_err()); // bad tag
+        assert!(decode(&[42]).is_err()); // bad tag
         assert!(decode(&[9]).is_err()); // compressed tag, no checksum
+        assert!(decode(&[13]).is_err()); // compressed combined tag, no checksum
         assert!(decode(&[2, 1]).is_err()); // truncated Tick
+        assert!(decode(&[11]).is_err()); // truncated CombinedUpdate
+        assert!(decode(&[12, 3]).is_err()); // truncated SubtreeAssignment
         let mut good = encode(&WireMsg::HelloAck {
             client_lo: 1,
             session: 2,
@@ -1326,6 +1590,16 @@ mod tests {
                     (8, Some(update(8, vec![2, 3, 4])), 1),
                 ],
             },
+            WireMsg::CombinedUpdate { iter: 41, acks: vec![] },
+            WireMsg::CombinedUpdate {
+                iter: 1000,
+                acks: vec![
+                    (0, Some(update(0, vec![1, 2])), 1),
+                    (1, None, 0),
+                    (2, None, 1),
+                    (3, Some(update(3, vec![0, 31])), 1),
+                ],
+            },
         ]
     }
 
@@ -1336,7 +1610,10 @@ mod tests {
     fn compressed_batches_roundtrip_bit_exact() {
         for msg in batch_fixtures() {
             let enc = encode_compressed(&msg);
-            assert!(matches!(enc[0], TAG_TICK_BATCH_C | TAG_ACK_BATCH_C));
+            assert!(matches!(
+                enc[0],
+                TAG_TICK_BATCH_C | TAG_ACK_BATCH_C | TAG_COMBINED_UPDATE_C
+            ));
             assert_eq!(decode(&enc).unwrap(), msg, "compressed roundtrip drifted");
             // The raw encoding still decodes right beside it.
             assert_eq!(decode(&encode(&msg)).unwrap(), msg);
@@ -1433,5 +1710,129 @@ mod tests {
         assert!(decode(&seal(body.clone())).is_ok(), "clean padding must decode");
         body[bitset_at] = 0x01; // lowest padding bit set
         assert!(matches!(decode(&seal(body)), Err(Error::Protocol(_))));
+    }
+
+    fn sample_subtree(fanout: usize, resume: Option<ResumePlan>) -> SubtreeAssignment {
+        let mut rng = Pcg32::new(9, 4);
+        let rff = RffSpace::sample(4, 8, 1.0, &mut rng);
+        SubtreeAssignment {
+            client_lo: 8,
+            client_hi: 24,
+            leaf_lo: 1,
+            fanout,
+            n_leaves: 4,
+            env_seed: 2023,
+            n_iters: 50,
+            algo: algorithms::build(Variant::PaoFedC2, 0.4, 4, 10, 10),
+            rff,
+            spec: StreamSpec {
+                config: StreamConfig {
+                    n_clients: 32,
+                    n_iters: 50,
+                    data_group_samples: vec![12, 25, 37, 50],
+                    test_size: 40,
+                },
+                source: SourceSpec::Eq39 { seed: 11 },
+                seed: 2023,
+            },
+            session: 0xfeed_f00d,
+            k_total: 32,
+            avail: AvailSpec::Grouped { group_probs: vec![0.5, 0.25, 0.1, 0.05], data_groups: 4 },
+            resume,
+            compress: true,
+            challenge: 0x1dea,
+            hello_tag: hello_tag("tree", 0x1dea, 0xfeed_f00d, 8),
+        }
+    }
+
+    /// The tree frames round-trip exactly: the raw and compressed
+    /// `CombinedUpdate` encodings decode to identical messages, and a
+    /// `SubtreeAssignment` survives with both avail-spec forms and with
+    /// or without a resume plan — at a size flat in K.
+    #[test]
+    fn roundtrip_tree_frames() {
+        roundtrip(&WireMsg::CombinedUpdate { iter: 7, acks: vec![] });
+        let update = Update {
+            client: 9,
+            sent_iter: 6,
+            coords: Coords::List { idx: vec![0, 3], d: 8 },
+            values: vec![0.5, -0.0],
+        };
+        roundtrip(&WireMsg::CombinedUpdate {
+            iter: 7,
+            acks: vec![(8, None, 1), (9, Some(update), 0), (10, None, 0)],
+        });
+        for (fanout, resume) in [
+            (1, None),
+            (
+                3,
+                Some(ResumePlan {
+                    base_tick: 5,
+                    states: vec![vec![0.5; 8]; 16],
+                    log: vec![vec![0.25; 8]; 2],
+                }),
+            ),
+        ] {
+            let mut a = sample_subtree(fanout, resume);
+            roundtrip(&WireMsg::SubtreeAssignment(a.clone()));
+            a.avail = AvailSpec::Explicit(vec![0.25; 32]);
+            roundtrip(&WireMsg::SubtreeAssignment(a));
+        }
+        // Flat in K: growing the fleet 100x leaves the (resume-free)
+        // assignment frame the same size — the spec carries parameters,
+        // not arrays.
+        let small = sample_subtree(1, None);
+        let mut big = small.clone();
+        big.k_total = 3200;
+        big.spec.config.n_clients = 3200;
+        big.client_hi = 8 + 1600;
+        let es = encode(&WireMsg::SubtreeAssignment(small)).len();
+        let eb = encode(&WireMsg::SubtreeAssignment(big)).len();
+        assert_eq!(es, eb, "assignment bytes must not grow with K");
+    }
+
+    /// Adversarial sweep over the tree frames: truncation at every byte
+    /// boundary, hostile counts, and malformed geometry all produce
+    /// clean protocol errors.
+    #[test]
+    fn corrupt_tree_frames_error_cleanly() {
+        let good = encode(&WireMsg::SubtreeAssignment(sample_subtree(2, None)));
+        assert!(decode(&good).is_ok());
+        for cut in 1..good.len() {
+            assert!(decode(&good[..cut]).is_err(), "subtree prefix {cut} accepted");
+        }
+        let mut evil = good.clone();
+        evil.push(0); // trailing garbage
+        assert!(decode(&evil).is_err());
+        // Zero fanout is malformed geometry.
+        let mut zero_fanout = sample_subtree(1, None);
+        zero_fanout.fanout = 0;
+        assert!(decode(&encode(&WireMsg::SubtreeAssignment(zero_fanout))).is_err());
+        // An inverted client range likewise.
+        let mut inverted = sample_subtree(1, None);
+        (inverted.client_lo, inverted.client_hi) = (24, 8);
+        assert!(decode(&encode(&WireMsg::SubtreeAssignment(inverted))).is_err());
+        // A leaf index outside the tree likewise.
+        let mut stray = sample_subtree(1, None);
+        stray.leaf_lo = 4;
+        assert!(decode(&encode(&WireMsg::SubtreeAssignment(stray))).is_err());
+        // Raw CombinedUpdate: every proper prefix fails, hostile counts
+        // are refused before reservation.
+        let update = Update {
+            client: 1,
+            sent_iter: 3,
+            coords: Coords::Full { d: 2 },
+            values: vec![1.0, 2.0],
+        };
+        let good = encode(&WireMsg::CombinedUpdate {
+            iter: 4,
+            acks: vec![(0, None, 1), (1, Some(update), 0)],
+        });
+        for cut in 2..good.len() {
+            assert!(decode(&good[..cut]).is_err(), "combined prefix {cut} accepted");
+        }
+        let mut evil = good.clone();
+        evil[9..17].copy_from_slice(&u64::MAX.to_le_bytes()); // tag + iter, then count
+        assert!(decode(&evil).is_err());
     }
 }

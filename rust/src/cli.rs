@@ -22,6 +22,13 @@
 //! pre-codec handshake layout so genuinely old worker binaries can join
 //! (incompatible with `--compress`/`--secret`; workers need no flag —
 //! they mirror the layout of the `Hello` they received).
+//!
+//! Tree flags (`deploy` only): `--topology F1,F2,...` shapes the fleet as
+//! an aggregator tree (each child connection fans out to that many leaf
+//! workers; any entry above 1 expects a relay process there), `--relay`
+//! runs this process as an inner tree node (`--connect` upstream +
+//! `--serve` for its own workers), and `--accept-deadline SECS` bounds
+//! how long the server waits for a replacement after losing a child.
 
 use std::collections::BTreeMap;
 
@@ -36,7 +43,7 @@ pub struct Args {
 
 /// Known boolean switches (take no value).
 const SWITCHES: &[&str] =
-    &["help", "xla", "quiet", "no-plot", "compress", "legacy-wire", "legacy-hello"];
+    &["help", "xla", "quiet", "no-plot", "compress", "legacy-wire", "legacy-hello", "relay"];
 
 impl Args {
     /// Parse from an iterator of arguments (without argv[0]).
@@ -148,6 +155,18 @@ mod tests {
         let c = p("deploy --serve 0.0.0.0:7000 --workers 2 --legacy-hello").unwrap();
         assert!(c.has("legacy-hello"));
         assert!(p("deploy --secret").is_err());
+    }
+
+    #[test]
+    fn tree_flags_parse() {
+        // --relay is a switch; --topology and --accept-deadline take values.
+        let a = p("deploy --serve 0.0.0.0:7000 --topology 4,4 --accept-deadline 30").unwrap();
+        assert_eq!(a.get("topology"), Some("4,4"));
+        assert_eq!(a.get_parse("accept-deadline", 0u64).unwrap(), 30);
+        let b = p("deploy --relay --connect 127.0.0.1:7000 --serve 0.0.0.0:7001").unwrap();
+        assert!(b.has("relay"));
+        assert_eq!(b.get("connect"), Some("127.0.0.1:7000"));
+        assert!(p("deploy --topology").is_err());
     }
 
     #[test]

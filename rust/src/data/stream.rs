@@ -10,11 +10,12 @@
 //! identical stream* (common random numbers, required for the paper's
 //! curve comparisons).
 
+use super::synthetic::Eq39Source;
 use super::DataSource;
 use crate::util::rng::Pcg32;
 
 /// Configuration of the streaming schedule.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct StreamConfig {
     /// Number of clients K.
     pub n_clients: usize,
@@ -39,18 +40,27 @@ impl Default for StreamConfig {
 }
 
 /// One materialized environment realization of the data stream.
+///
+/// Holds either the full fleet (`client_lo() == 0`, storage `[K * N]`) or
+/// a contiguous client slice materialized by [`FedStream::build_slice`]
+/// (storage `[(hi - lo) * N]`, indexed by *global* client id). Both
+/// shapes answer `has_data`/`x`/`y` identically for the clients they
+/// hold, which is what lets a worker synthesize only its own shard while
+/// every call site keeps using global ids.
 pub struct FedStream {
     /// K.
     pub n_clients: usize,
+    /// First client id this realization stores (0 for a full build).
+    client_lo: usize,
     /// N.
     pub n_iters: usize,
     /// Raw input dimension L.
     pub dim: usize,
-    /// Flat inputs [K * N * L]; slot (k, n) is meaningful iff `present`.
+    /// Flat inputs [(hi-lo) * N * L]; slot (k, n) is meaningful iff `present`.
     xs: Vec<f32>,
-    /// Flat outputs [K * N].
+    /// Flat outputs [(hi-lo) * N].
     ys: Vec<f32>,
-    /// Arrival indicator [K * N].
+    /// Arrival indicator [(hi-lo) * N].
     present: Vec<bool>,
     /// Test inputs [T * L].
     pub test_x: Vec<f32>,
@@ -61,12 +71,36 @@ pub struct FedStream {
 impl FedStream {
     /// Materialize a stream from `source` under `cfg`, seeded by `seed`.
     pub fn build(cfg: &StreamConfig, source: &mut dyn DataSource, seed: u64) -> Self {
+        Self::build_slice(cfg, source, seed, 0, cfg.n_clients)
+    }
+
+    /// Materialize only clients `lo..hi` of the realization [`build`]
+    /// would produce, bit-identically: the generator replays the *full*
+    /// sequential RNG schedule (arrival draws and sample draws are
+    /// data-dependent, so no client can be skipped) but stores rows for
+    /// the slice only. Memory is `O((hi - lo) * N)` regardless of K —
+    /// the generative-shard contract workers rely on.
+    ///
+    /// [`build`]: FedStream::build
+    pub fn build_slice(
+        cfg: &StreamConfig,
+        source: &mut dyn DataSource,
+        seed: u64,
+        lo: usize,
+        hi: usize,
+    ) -> Self {
+        assert!(
+            lo <= hi && hi <= cfg.n_clients,
+            "client slice {lo}..{hi} out of range for K={}",
+            cfg.n_clients
+        );
         let (k, n, l) = (cfg.n_clients, cfg.n_iters, source.dim());
+        let span = hi - lo;
         let mut rng = Pcg32::derive(seed, &[0x57e4]);
         let groups = cfg.data_group_samples.len().max(1);
-        let mut xs = vec![0.0f32; k * n * l];
-        let mut ys = vec![0.0f32; k * n];
-        let mut present = vec![false; k * n];
+        let mut xs = vec![0.0f32; span * n * l];
+        let mut ys = vec![0.0f32; span * n];
+        let mut present = vec![false; span * n];
         // Iteration-major so non-stationary sources see federation time in
         // order (`DataSource::set_time`).
         for it in 0..n {
@@ -75,11 +109,16 @@ impl FedStream {
                 let g = data_group_of(client, k, groups);
                 let q = cfg.data_group_samples[g] as f64 / n as f64;
                 if rng.bernoulli(q.min(1.0)) {
+                    // The draw consumes RNG state even outside the slice:
+                    // the stream realization is one shared sequence.
                     let s = source.draw();
-                    let base = (client * n + it) * l;
-                    xs[base..base + l].copy_from_slice(&s.x);
-                    ys[client * n + it] = s.y;
-                    present[client * n + it] = true;
+                    if client >= lo && client < hi {
+                        let row = client - lo;
+                        let base = (row * n + it) * l;
+                        xs[base..base + l].copy_from_slice(&s.x);
+                        ys[row * n + it] = s.y;
+                        present[row * n + it] = true;
+                    }
                 }
             }
         }
@@ -92,6 +131,7 @@ impl FedStream {
         }
         FedStream {
             n_clients: k,
+            client_lo: lo,
             n_iters: n,
             dim: l,
             xs,
@@ -102,28 +142,96 @@ impl FedStream {
         }
     }
 
+    /// First client id this realization stores (0 for a full build).
+    #[inline]
+    pub fn client_lo(&self) -> usize {
+        self.client_lo
+    }
+
+    #[inline]
+    fn row(&self, k: usize) -> usize {
+        debug_assert!(k >= self.client_lo, "client {k} below slice start {}", self.client_lo);
+        k - self.client_lo
+    }
+
     /// Does client `k` receive a new sample at iteration `n`?
     #[inline]
     pub fn has_data(&self, k: usize, n: usize) -> bool {
-        self.present[k * self.n_iters + n]
+        self.present[self.row(k) * self.n_iters + n]
     }
 
     /// Input of the (k, n) sample (valid only when `has_data`).
     #[inline]
     pub fn x(&self, k: usize, n: usize) -> &[f32] {
-        let base = (k * self.n_iters + n) * self.dim;
+        let base = (self.row(k) * self.n_iters + n) * self.dim;
         &self.xs[base..base + self.dim]
     }
 
     /// Output of the (k, n) sample (valid only when `has_data`).
     #[inline]
     pub fn y(&self, k: usize, n: usize) -> f32 {
-        self.ys[k * self.n_iters + n]
+        self.ys[self.row(k) * self.n_iters + n]
     }
 
-    /// Total number of arrived samples (diagnostics).
+    /// Total number of arrived samples held by this realization
+    /// (diagnostics; for a slice, counts the slice's rows only).
     pub fn total_samples(&self) -> usize {
         self.present.iter().filter(|&&p| p).count()
+    }
+}
+
+/// Which seeded sample generator produced a stream — the wire-portable
+/// half of [`StreamSpec`]. Every variant must rebuild the exact `draw()`
+/// sequence from its recorded parameters alone.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SourceSpec {
+    /// The paper's eq. (39) synthetic benchmark at its default noise and
+    /// input-range knobs, seeded.
+    Eq39 {
+        /// Seed of the source's private PRNG stream.
+        seed: u64,
+    },
+}
+
+impl SourceSpec {
+    /// Instantiate the described source at its recorded seed.
+    pub fn instantiate(&self) -> Box<dyn DataSource> {
+        match self {
+            SourceSpec::Eq39 { seed } => Box::new(Eq39Source::new(*seed)),
+        }
+    }
+}
+
+/// A compact generative description of a whole [`FedStream`] realization:
+/// schedule config + source + environment seed. A few dozen bytes on the
+/// wire regardless of K, yet any holder can rebuild the full stream — or
+/// just its own client slice — bit-identically via [`materialize`] /
+/// [`materialize_slice`]. This is what a [`SubtreeAssignment`] ships
+/// instead of materialized per-client shards.
+///
+/// [`materialize`]: StreamSpec::materialize
+/// [`materialize_slice`]: StreamSpec::materialize_slice
+/// [`SubtreeAssignment`]: crate::async_rt::wire::WireMsg::SubtreeAssignment
+#[derive(Clone, Debug, PartialEq)]
+pub struct StreamSpec {
+    /// The streaming schedule (K, N, group budgets, test size).
+    pub config: StreamConfig,
+    /// The seeded sample generator.
+    pub source: SourceSpec,
+    /// Seed of the arrival schedule (the `FedStream::build` seed).
+    pub seed: u64,
+}
+
+impl StreamSpec {
+    /// Rebuild the full stream realization this spec describes.
+    pub fn materialize(&self) -> FedStream {
+        FedStream::build(&self.config, &mut *self.source.instantiate(), self.seed)
+    }
+
+    /// Rebuild only clients `lo..hi` of the realization (worker-local
+    /// shard synthesis; see [`FedStream::build_slice`]).
+    pub fn materialize_slice(&self, lo: usize, hi: usize) -> FedStream {
+        FedStream::build_slice(&self.config, &mut *self.source.instantiate(), self.seed, lo, hi)
     }
 }
 
@@ -202,5 +310,54 @@ mod tests {
         let s = FedStream::build(&cfg, &mut Eq39Source::new(1), 2);
         assert_eq!(s.test_y.len(), 50);
         assert_eq!(s.test_x.len(), 50 * 4);
+    }
+
+    #[test]
+    fn slice_build_matches_full_build_bitwise() {
+        let cfg = small_cfg();
+        let full = FedStream::build(&cfg, &mut Eq39Source::new(3), 7);
+        // Every contiguous slice shape, including empty and whole-range.
+        for (lo, hi) in [(0usize, 16usize), (0, 5), (5, 11), (11, 16), (7, 7)] {
+            let slice = FedStream::build_slice(&cfg, &mut Eq39Source::new(3), 7, lo, hi);
+            assert_eq!(slice.client_lo(), lo);
+            assert_eq!(slice.n_clients, 16);
+            for k in lo..hi {
+                for n in 0..400 {
+                    assert_eq!(slice.has_data(k, n), full.has_data(k, n));
+                    if full.has_data(k, n) {
+                        assert_eq!(slice.x(k, n), full.x(k, n));
+                        assert_eq!(slice.y(k, n).to_bits(), full.y(k, n).to_bits());
+                    }
+                }
+            }
+            // The held-out test set is part of the shared realization.
+            assert_eq!(slice.test_x, full.test_x);
+            assert_eq!(slice.test_y, full.test_y);
+        }
+    }
+
+    #[test]
+    fn stream_spec_materializes_bit_identically() {
+        let spec = StreamSpec {
+            config: small_cfg(),
+            source: SourceSpec::Eq39 { seed: 3 },
+            seed: 7,
+        };
+        let direct = FedStream::build(&small_cfg(), &mut Eq39Source::new(3), 7);
+        let full = spec.materialize();
+        let slice = spec.materialize_slice(4, 12);
+        for k in 0..16 {
+            for n in 0..400 {
+                assert_eq!(full.has_data(k, n), direct.has_data(k, n));
+                if (4..12).contains(&k) {
+                    assert_eq!(slice.has_data(k, n), direct.has_data(k, n));
+                    if direct.has_data(k, n) {
+                        assert_eq!(slice.x(k, n), direct.x(k, n));
+                    }
+                }
+            }
+        }
+        assert_eq!(full.test_x, direct.test_x);
+        assert_eq!(slice.test_y, direct.test_y);
     }
 }

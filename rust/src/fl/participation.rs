@@ -85,6 +85,45 @@ impl Participation {
     }
 }
 
+/// A wire-portable description of a [`Participation`] realization. The
+/// `Explicit` form carries the full `[K]` probability vector (exactly what
+/// a `WorkerAssignment` ships today); `Grouped` carries only the crossed
+/// block parameters of [`Participation::grouped`], a handful of bytes
+/// regardless of K — the availability half of the flat-in-K assignment
+/// contract. Both forms [`materialize`] to bit-identical probability
+/// vectors for the same fleet.
+///
+/// [`materialize`]: AvailSpec::materialize
+#[derive(Clone, Debug, PartialEq)]
+pub enum AvailSpec {
+    /// Every client's probability, verbatim.
+    Explicit(Vec<f64>),
+    /// The crossed data-group x availability-group block structure.
+    Grouped {
+        /// Per availability sub-block probability.
+        group_probs: Vec<f64>,
+        /// Number of contiguous data groups the fleet is split into.
+        data_groups: usize,
+    },
+}
+
+impl AvailSpec {
+    /// Rebuild the participation vector for a fleet of `k_total` clients.
+    pub fn materialize(&self, k_total: usize) -> Participation {
+        match self {
+            AvailSpec::Explicit(probs) => Participation { probs: probs.clone() },
+            AvailSpec::Grouped { group_probs, data_groups } => {
+                Participation::grouped(k_total, group_probs, *data_groups)
+            }
+        }
+    }
+
+    /// Describe an existing probability vector exactly.
+    pub fn explicit(p: &Participation) -> Self {
+        AvailSpec::Explicit(p.probs.clone())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -185,5 +224,17 @@ mod tests {
         assert!((p.probs[0] - 0.05).abs() < 1e-12);
         let q = Participation::uniform(3, 0.5).scaled(10.0);
         assert_eq!(q.probs[0], 1.0);
+    }
+
+    #[test]
+    fn avail_spec_materializes_bit_identically() {
+        let gp = [0.25, 0.1, 0.025, 0.005];
+        for k_total in [16usize, 97, 256] {
+            let direct = Participation::grouped(k_total, &gp, 4);
+            let grouped = AvailSpec::Grouped { group_probs: gp.to_vec(), data_groups: 4 };
+            assert_eq!(grouped.materialize(k_total).probs, direct.probs);
+            let explicit = AvailSpec::explicit(&direct);
+            assert_eq!(explicit.materialize(k_total).probs, direct.probs);
+        }
     }
 }

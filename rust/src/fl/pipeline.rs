@@ -502,6 +502,8 @@ impl<'e> TickPipeline<'e> {
             curve_iters: self.models.iters().to_vec(),
             curve_db: self.models.mse_db().to_vec(),
             local_steps: 0,
+            // The in-process engine is by definition flat.
+            topology: Vec::new(),
         }
     }
 

@@ -17,8 +17,23 @@
 //! `PlainAverage` implements the classical Online-Fed(SGD) aggregation of
 //! eq. (6) - `w_{n+1} = (1/|K_n|) sum w_k` over full-model arrivals - used
 //! by the baselines.
+//!
+//! ## Streaming fold
+//!
+//! The aggregation is a *streaming* fold: [`Server::begin_aggregate`]
+//! opens a pass, [`Server::push_updates`] consumes arrival chunks (e.g.
+//! one `CombinedUpdate` per subtree) incrementally, and
+//! [`Server::finish_aggregate`] resolves and applies. Scratch is keyed by
+//! the coordinates actually touched in the pass (a sparse map + a
+//! first-touch list), not by the model dimension — root memory is
+//! bounded by active coordinates, never by K. [`Server::aggregate`] is
+//! the one-shot wrapper over the same fold, bit-identical to pushing the
+//! same updates in any chunking (the bucket scales `1/|K_{n,l}|` are
+//! finalized before any accumulation, and contributions fold in arrival
+//! order regardless of chunk boundaries).
 
 use super::selection::Coords;
+use std::collections::HashMap;
 
 /// One client->server message: the masked model portion `S_{k,n} w_{k,n+1}`.
 #[derive(Clone, Debug, PartialEq)]
@@ -85,23 +100,54 @@ pub struct AggregateInfo {
     pub touched_coords: usize,
 }
 
+/// Per-active-coordinate scratch for one aggregation pass.
+///
+/// One slot exists per coordinate touched (stamped or accumulated) during
+/// the open pass, so scratch memory is O(active coordinates) rather than
+/// O(model dimension) — the streaming-root property the aggregator tree
+/// relies on.
+#[derive(Clone, Copy, Debug, Default)]
+struct Slot {
+    /// Accumulated deviation (bucket mode) or value sum (plain mode).
+    acc: f64,
+    /// Winning `sent_iter + 1` under most-recent-wins (0 = unstamped).
+    best: u64,
+    /// Covering-sender count (plain mode).
+    cnt: u32,
+    /// Whether the coordinate has entered the first-touch list. Membership
+    /// must not be inferred from `acc == 0.0` — a contribution that exactly
+    /// cancels (v == w[c]) leaves the accumulator at zero while the
+    /// coordinate is already listed.
+    listed: bool,
+}
+
+/// State of an open streaming aggregation pass.
+struct Pass {
+    /// Server iteration the arrivals are folded at.
+    now: usize,
+    /// Bucket sizes |K_{n,l}| accumulated across pushed chunks.
+    bucket_size: Vec<usize>,
+    /// Update chunks stashed for the deferred accumulation fold (bucket
+    /// scales depend on the *final* bucket sizes, so values can only fold
+    /// once the pass closes).
+    chunks: Vec<Vec<Update>>,
+    /// Total updates seen, stale ones included.
+    seen: usize,
+    /// Updates discarded because l > l_max.
+    discarded_stale: usize,
+}
+
 /// The federation server: owns the global model and applies aggregation.
 pub struct Server {
     /// Global model w_n.
     pub w: Vec<f32>,
     mode: AggregationMode,
-    /// Scratch: accumulated deviation per coordinate.
-    delta: Vec<f64>,
-    /// Scratch: touched coordinate list (sparse clear).
+    /// Sparse pass scratch, keyed by active coordinate only.
+    scratch: HashMap<u32, Slot>,
+    /// Coordinates in first-accumulation order — the apply order.
     touched: Vec<u32>,
-    /// Scratch: per-coordinate winning sent_iter + 1 (0 = untouched),
-    /// epoch-tagged to avoid clearing.
-    best_sent: Vec<u64>,
-    /// Scratch: epoch at which a coordinate last entered `touched`.
-    /// Membership must not be inferred from `delta[c] == 0.0` — a
-    /// contribution that exactly cancels (v == w[c]) leaves the
-    /// accumulator at zero while the coordinate is already listed.
-    touched_epoch: Vec<u64>,
+    /// Open streaming pass, if any.
+    pass: Option<Pass>,
     epoch: u64,
 }
 
@@ -111,10 +157,9 @@ impl Server {
         Server {
             w: vec![0.0; d],
             mode,
-            delta: vec![0.0; d],
+            scratch: HashMap::new(),
             touched: Vec::new(),
-            best_sent: vec![0; d],
-            touched_epoch: vec![0; d],
+            pass: None,
             epoch: 0,
         }
     }
@@ -130,160 +175,266 @@ impl Server {
         self.epoch
     }
 
+    /// Approximate heap bytes held by the aggregation scratch (the sparse
+    /// coordinate map plus the first-touch list). Grows with the peak
+    /// number of coordinates active in a single pass and is independent of
+    /// both the fleet size K and, for sparse schedules, the model
+    /// dimension — the root-memory column of the scaling bench.
+    pub fn scratch_bytes(&self) -> usize {
+        use std::mem::size_of;
+        // Hash-map buckets store the key, the slot, and ~1 byte of control
+        // metadata per entry; round the latter up to 8 for safety.
+        self.scratch.capacity() * (size_of::<u32>() + size_of::<Slot>() + 8)
+            + self.touched.capacity() * size_of::<u32>()
+    }
+
     /// Rebuild a server from checkpointed state: the model `w` and the
     /// scratch epoch. The conflict/membership scratch itself is rebuilt
-    /// empty — stamps are only ever compared within a single aggregation's
-    /// epoch, so zeroed scratch plus the saved epoch reproduces the
+    /// empty — stamps are only ever compared within a single aggregation
+    /// pass, so empty scratch plus the saved epoch reproduces the
     /// uninterrupted run bit for bit (pinned by `rust/tests/persistence.rs`).
     pub fn restore(w: Vec<f32>, mode: AggregationMode, epoch: u64) -> Self {
-        let d = w.len();
         Server {
             w,
             mode,
-            delta: vec![0.0; d],
+            scratch: HashMap::new(),
             touched: Vec::new(),
-            best_sent: vec![0; d],
-            touched_epoch: vec![0; d],
+            pass: None,
             epoch,
         }
     }
 
     /// Apply the updates arriving at iteration `now`; returns statistics.
+    ///
+    /// One-shot wrapper over the streaming fold: bit-identical to
+    /// [`begin_aggregate`](Self::begin_aggregate) + one
+    /// [`push_updates`](Self::push_updates) +
+    /// [`finish_aggregate`](Self::finish_aggregate), without cloning the
+    /// borrowed slice.
     pub fn aggregate(&mut self, now: usize, updates: &[Update]) -> AggregateInfo {
-        match &self.mode {
-            AggregationMode::PlainAverage => self.aggregate_plain(updates),
+        self.begin_aggregate(now);
+        for u in updates {
+            self.scan_update(u);
+        }
+        let pass = self.pass.take().expect("pass vanished mid-aggregate");
+        self.finish_pass(pass, updates)
+    }
+
+    /// Open a streaming aggregation pass at server iteration `now`.
+    ///
+    /// Panics if a pass is already open — the engine drives exactly one
+    /// pass per tick.
+    pub fn begin_aggregate(&mut self, now: usize) {
+        assert!(
+            self.pass.is_none(),
+            "begin_aggregate while a pass is already open"
+        );
+        let l_max = match &self.mode {
+            AggregationMode::PlainAverage => 0,
+            AggregationMode::DeviationBuckets { l_max, .. } => *l_max,
+        };
+        self.pass = Some(Pass {
+            now,
+            bucket_size: vec![0; l_max + 1],
+            chunks: Vec::new(),
+            seen: 0,
+            discarded_stale: 0,
+        });
+    }
+
+    /// Feed one chunk of arrivals (e.g. one subtree's `CombinedUpdate`)
+    /// into the open pass. Bucket counting and conflict stamping happen
+    /// immediately; value accumulation is deferred to
+    /// [`finish_aggregate`](Self::finish_aggregate) because the bucket
+    /// scales `1/|K_{n,l}|` are only final once every chunk has arrived.
+    /// Chunk boundaries never change the result: folding is in push order,
+    /// exactly as if all chunks were concatenated.
+    ///
+    /// Panics if no pass is open.
+    pub fn push_updates(&mut self, chunk: Vec<Update>) {
+        assert!(self.pass.is_some(), "push_updates without begin_aggregate");
+        for u in &chunk {
+            self.scan_update(u);
+        }
+        if !chunk.is_empty() {
+            let pass = self.pass.as_mut().expect("pass vanished mid-push");
+            pass.chunks.push(chunk);
+        }
+    }
+
+    /// Close the open pass: fold the stashed chunks, resolve conflicts,
+    /// apply the model step, and clear the sparse scratch.
+    ///
+    /// Panics if no pass is open.
+    pub fn finish_aggregate(&mut self) -> AggregateInfo {
+        let pass = self
+            .pass
+            .take()
+            .expect("finish_aggregate without begin_aggregate");
+        self.finish_pass(pass, &[])
+    }
+
+    /// Pass-1/2 work for a single update: count its lag bucket and, under
+    /// most-recent-wins, stamp its coordinates with the winning sent_iter.
+    fn scan_update(&mut self, u: &Update) {
+        let (l_max, mrw) = match &self.mode {
+            AggregationMode::PlainAverage => {
+                let pass = self.pass.as_mut().expect("no open pass");
+                pass.seen += 1;
+                return;
+            }
+            AggregationMode::DeviationBuckets {
+                l_max,
+                most_recent_wins,
+                ..
+            } => (*l_max, *most_recent_wins),
+        };
+        let pass = self.pass.as_mut().expect("no open pass");
+        pass.seen += 1;
+        let l = pass.now - u.sent_iter.min(pass.now);
+        if l > l_max {
+            pass.discarded_stale += 1;
+            return;
+        }
+        pass.bucket_size[l] += 1;
+        if mrw {
+            let stamp = u.sent_iter as u64 + 1;
+            let scratch = &mut self.scratch;
+            u.coords.for_each(|c| {
+                let slot = scratch.entry(c as u32).or_default();
+                if slot.best < stamp {
+                    slot.best = stamp;
+                }
+            });
+        }
+    }
+
+    /// Pass-3 work for a single bucket-mode update: accumulate its scaled
+    /// deviation into the sparse scratch, honoring conflict stamps.
+    fn fold_update(
+        &mut self,
+        u: &Update,
+        pass: &Pass,
+        alpha: &AlphaSchedule,
+        l_max: usize,
+        most_recent_wins: bool,
+        info: &mut AggregateInfo,
+    ) {
+        let now = pass.now;
+        let bucket_size = &pass.bucket_size;
+        let l = now - u.sent_iter.min(now);
+        if l > l_max {
+            return;
+        }
+        let a = alpha.alpha(l, l_max);
+        if a == 0.0 {
+            return;
+        }
+        let scale = a / bucket_size[l] as f64;
+        let stamp = u.sent_iter as u64 + 1;
+        let mut vi = 0;
+        let (scratch, touched, w) = (&mut self.scratch, &mut self.touched, &self.w);
+        u.coords.for_each(|c| {
+            let v = u.values[vi];
+            vi += 1;
+            let slot = scratch.entry(c as u32).or_default();
+            if most_recent_wins && slot.best != stamp {
+                info.conflicts_resolved += 1;
+                return;
+            }
+            if !slot.listed {
+                slot.listed = true;
+                touched.push(c as u32);
+            }
+            slot.acc += scale * (v - w[c]) as f64;
+        });
+        info.applied += 1;
+    }
+
+    /// Plain-average fold for a single update: coordinate-wise value sum
+    /// and sender count.
+    fn fold_plain(&mut self, u: &Update) {
+        let mut vi = 0;
+        let (scratch, touched) = (&mut self.scratch, &mut self.touched);
+        u.coords.for_each(|c| {
+            let slot = scratch.entry(c as u32).or_default();
+            slot.acc += u.values[vi] as f64;
+            vi += 1;
+            slot.cnt += 1;
+            if !slot.listed {
+                slot.listed = true;
+                touched.push(c as u32);
+            }
+        });
+    }
+
+    /// Fold everything stashed in `pass` (plus `direct`, the borrowed
+    /// one-shot slice), apply the step, and reset the scratch.
+    fn finish_pass(&mut self, pass: Pass, direct: &[Update]) -> AggregateInfo {
+        let mut info = AggregateInfo {
+            discarded_stale: pass.discarded_stale,
+            ..Default::default()
+        };
+        if pass.seen == 0 {
+            // No arrivals: no model step, no epoch bump, scratch untouched.
+            return info;
+        }
+        match self.mode.clone() {
+            AggregationMode::PlainAverage => {
+                for chunk in &pass.chunks {
+                    for u in chunk {
+                        self.fold_plain(u);
+                    }
+                }
+                for u in direct {
+                    self.fold_plain(u);
+                }
+                info.applied = pass.seen;
+                // Eq. (6): coordinate-wise mean over the covering senders.
+                // Each coordinate is independent, so first-touch apply
+                // order reproduces the dense coordinate sweep bit for bit.
+                let touched = std::mem::take(&mut self.touched);
+                for &c in &touched {
+                    let slot = self.scratch[&c];
+                    self.w[c as usize] = (slot.acc / slot.cnt as f64) as f32;
+                }
+                self.reset_scratch(touched);
+            }
             AggregationMode::DeviationBuckets {
                 alpha,
                 l_max,
                 most_recent_wins,
             } => {
-                let (alpha, l_max, mrw) = (alpha.clone(), *l_max, *most_recent_wins);
-                self.aggregate_buckets(now, updates, &alpha, l_max, mrw)
-            }
-        }
-    }
-
-    fn aggregate_plain(&mut self, updates: &[Update]) -> AggregateInfo {
-        if updates.is_empty() {
-            return AggregateInfo::default();
-        }
-        // Eq. (6): coordinate-wise mean over the arrived models. Baselines
-        // send full models, but handle partial rows defensively by averaging
-        // only over the senders covering each coordinate.
-        let d = self.w.len();
-        let mut sum = vec![0.0f64; d];
-        let mut cnt = vec![0u32; d];
-        for u in updates {
-            let mut vi = 0;
-            u.coords.for_each(|c| {
-                sum[c] += u.values[vi] as f64;
-                cnt[c] += 1;
-                vi += 1;
-            });
-        }
-        for c in 0..d {
-            if cnt[c] > 0 {
-                self.w[c] = (sum[c] / cnt[c] as f64) as f32;
-            }
-        }
-        AggregateInfo {
-            applied: updates.len(),
-            ..Default::default()
-        }
-    }
-
-    fn aggregate_buckets(
-        &mut self,
-        now: usize,
-        updates: &[Update],
-        alpha: &AlphaSchedule,
-        l_max: usize,
-        most_recent_wins: bool,
-    ) -> AggregateInfo {
-        let mut info = AggregateInfo::default();
-        if updates.is_empty() {
-            return info;
-        }
-
-        // Bucket sizes |K_{n,l}| (only over non-discarded updates).
-        let mut bucket_size = vec![0usize; l_max + 1];
-        for u in updates {
-            let l = now - u.sent_iter.min(now);
-            if l > l_max {
-                info.discarded_stale += 1;
-                continue;
-            }
-            bucket_size[l] += 1;
-        }
-
-        // Conflict resolution pre-pass: per coordinate, the most recent
-        // sent_iter wins; older contributions are masked out.
-        self.epoch += 1;
-        let epoch_base = self.epoch << 32;
-        if most_recent_wins {
-            for u in updates {
-                let l = now - u.sent_iter.min(now);
-                if l > l_max {
-                    continue;
-                }
-                let stamp = epoch_base | (u.sent_iter as u64 + 1);
-                u.coords.for_each(|c| {
-                    if self.best_sent[c] < stamp {
-                        self.best_sent[c] = stamp;
+                self.epoch += 1;
+                for chunk in &pass.chunks {
+                    for u in chunk {
+                        self.fold_update(u, &pass, &alpha, l_max, most_recent_wins, &mut info);
                     }
-                });
-            }
-        }
-
-        // Accumulate sum_l alpha_l Delta_{n,l} sparsely.
-        for u in updates {
-            let l = now - u.sent_iter.min(now);
-            if l > l_max {
-                continue;
-            }
-            let a = alpha.alpha(l, l_max);
-            if a == 0.0 {
-                continue;
-            }
-            let scale = a / bucket_size[l] as f64;
-            let stamp = epoch_base | (u.sent_iter as u64 + 1);
-            let epoch = self.epoch;
-            let mut vi = 0;
-            let (delta, touched, best, tep, w) = (
-                &mut self.delta,
-                &mut self.touched,
-                &self.best_sent,
-                &mut self.touched_epoch,
-                &self.w,
-            );
-            u.coords.for_each(|c| {
-                let v = u.values[vi];
-                vi += 1;
-                if most_recent_wins && best[c] != stamp {
-                    info.conflicts_resolved += 1;
-                    return;
                 }
-                // Epoch-stamped membership: a `delta[c] == 0.0` sentinel
-                // conflates "untouched" with "contribution exactly
-                // cancelled" and double-pushes the coordinate.
-                if tep[c] != epoch {
-                    tep[c] = epoch;
-                    touched.push(c as u32);
+                for u in direct {
+                    self.fold_update(u, &pass, &alpha, l_max, most_recent_wins, &mut info);
                 }
-                delta[c] += scale * (v - w[c]) as f64;
-            });
-            info.applied += 1;
+                info.touched_coords = self.touched.len();
+                // Apply in first-accumulation order — the same order the
+                // dense scratch's `touched` list produced.
+                let touched = std::mem::take(&mut self.touched);
+                for &c in &touched {
+                    let acc = self.scratch[&c].acc;
+                    let ci = c as usize;
+                    self.w[ci] = (self.w[ci] as f64 + acc) as f32;
+                }
+                self.reset_scratch(touched);
+            }
         }
-        info.touched_coords = self.touched.len();
-
-        // Apply and clear scratch.
-        for &c in &self.touched {
-            let c = c as usize;
-            self.w[c] = (self.w[c] as f64 + self.delta[c]) as f32;
-            self.delta[c] = 0.0;
-        }
-        self.touched.clear();
         info
+    }
+
+    /// Clear the sparse scratch after a pass, keeping allocations for the
+    /// next one.
+    fn reset_scratch(&mut self, mut touched: Vec<u32>) {
+        touched.clear();
+        self.touched = touched;
+        self.scratch.clear();
     }
 }
 
@@ -486,6 +637,71 @@ mod tests {
             assert_eq!(ia, ib, "diverging diagnostics at {it}");
             assert_eq!(a.w, b.w, "diverging model at {it}");
         }
+    }
+
+    #[test]
+    fn chunked_streaming_fold_matches_one_shot() {
+        // Tree roots consume one CombinedUpdate chunk per subtree; the
+        // result must be bit-identical to folding the concatenation in one
+        // shot, for every chunking of the same arrival sequence — that is
+        // what makes any tree shape reproduce the flat fleet.
+        for mode in [
+            buckets(3, AlphaSchedule::Powers(0.2)),
+            buckets(2, AlphaSchedule::Ones),
+            AggregationMode::PlainAverage,
+        ] {
+            let d = 6;
+            let mut one_shot = Server::new(d, mode.clone());
+            let mut chunked = Server::new(d, mode.clone());
+            for it in 1..30 {
+                // A mix of fresh, delayed, stale, and conflicting updates.
+                let ups = vec![
+                    upd(0, it, vec![it % d, (it + 1) % d], vec![1.0, -2.0], d),
+                    upd(1, it.saturating_sub(1), vec![it % d], vec![3.5], d),
+                    upd(2, it.saturating_sub(4), vec![(it + 2) % d], vec![0.25], d),
+                    upd(3, it, vec![(it + 1) % d], vec![-0.125], d),
+                ];
+                let ia = one_shot.aggregate(it, &ups);
+                chunked.begin_aggregate(it);
+                for piece in ups.chunks(if it % 2 == 0 { 1 } else { 3 }) {
+                    chunked.push_updates(piece.to_vec());
+                }
+                let ib = chunked.finish_aggregate();
+                assert_eq!(ia, ib, "diverging diagnostics at {it} ({mode:?})");
+                assert_eq!(one_shot.w, chunked.w, "diverging model at {it} ({mode:?})");
+                assert_eq!(one_shot.epoch(), chunked.epoch());
+            }
+        }
+    }
+
+    #[test]
+    fn empty_streaming_pass_is_a_no_op() {
+        let mut s = Server::new(3, buckets(5, AlphaSchedule::Ones));
+        s.w = vec![1.0, 2.0, 3.0];
+        s.begin_aggregate(7);
+        s.push_updates(Vec::new());
+        let info = s.finish_aggregate();
+        assert_eq!(info, AggregateInfo::default());
+        assert_eq!(s.w, vec![1.0, 2.0, 3.0]);
+        assert_eq!(s.epoch(), 0, "empty pass must not bump the epoch");
+    }
+
+    #[test]
+    fn scratch_stays_bounded_by_active_coordinates() {
+        // The sparse scratch must not grow with the model dimension: a run
+        // touching only a handful of coordinates in a huge model keeps the
+        // scratch footprint tiny.
+        let d = 1 << 20;
+        let mut s = Server::new(d, buckets(5, AlphaSchedule::Ones));
+        for it in 0..50 {
+            let ups = vec![upd(0, it, vec![it % 7, 1000 + it % 3], vec![1.0, 2.0], d)];
+            s.aggregate(it, &ups);
+        }
+        assert!(
+            s.scratch_bytes() < 64 * 1024,
+            "scratch ballooned to {} bytes",
+            s.scratch_bytes()
+        );
     }
 
     #[test]

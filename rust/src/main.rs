@@ -10,8 +10,16 @@
 //!   pao-fed deploy                          in-process thread-per-client
 //!   pao-fed deploy --serve ADDR --workers N federation server over TCP
 //!   pao-fed deploy --connect ADDR           worker process (a client shard)
+//!   pao-fed deploy --relay --connect ADDR --serve ADDR2
+//!                                           aggregator-tree inner node:
+//!                                           folds its workers' acks into
+//!                                           one CombinedUpdate per tick
 //!   deploy flags: --clients K --iters N --seed S --dim D --delta F
 //!                 --eval-every E (server-side scenario shape)
+//!   tree:         --topology F1,F2,... (server: fan-out per child link;
+//!                 entries > 1 expect a relay there) --accept-deadline S
+//!                 (server: abort if a lost child has no replacement
+//!                 within S seconds)
 //!   persistence:  --checkpoint-every N (atomic snapshot every N ticks)
 //!                 --checkpoint PATH (snapshot file, default
 //!                 pao-fed-deploy.ckpt) --resume PATH (restore and
@@ -52,16 +60,16 @@
 //! ```
 
 use pao_fed::async_rt::{
-    run_deployment, run_deployment_tcp, run_worker_with, DeploymentConfig, DeploymentReport,
-    WireConfig, WorkerOptions,
+    run_deployment, run_deployment_tcp, run_relay, run_worker_with, DeploymentConfig,
+    DeploymentReport, TreeConfig, WireConfig, WorkerOptions,
 };
 use pao_fed::cli::Args;
-use pao_fed::data::stream::{FedStream, StreamConfig};
+use pao_fed::data::stream::{FedStream, SourceSpec, StreamConfig, StreamSpec};
 use pao_fed::data::synthetic::Eq39Source;
 use pao_fed::experiments::{self, BackendKind, ExperimentCtx, Parallelism, PoolHandle};
 use pao_fed::fl::algorithms::{build, Variant};
 use pao_fed::fl::delay::DelayModel;
-use pao_fed::fl::participation::Participation;
+use pao_fed::fl::participation::{AvailSpec, Participation};
 use pao_fed::persist::PersistPolicy;
 use pao_fed::rff::RffSpace;
 use pao_fed::util::rng::Pcg32;
@@ -75,8 +83,10 @@ fn usage() -> ! {
          [--out DIR] [--jobs N] [--shards M] [--xla] [--quiet] \
          [--checkpoint-every N] [--resume DIR]\n\
          experiments: {} all | extras: {} extras\n\
-         deployment:  pao-fed deploy [--serve ADDR --workers N | --connect ADDR]\n  \
+         deployment:  pao-fed deploy [--serve ADDR --workers N | --connect ADDR | \
+         --relay --connect ADDR --serve ADDR2]\n  \
          [--clients K] [--iters N] [--seed S] [--dim D] [--delta F] [--eval-every E]\n  \
+         [--topology F1,F2,...] [--accept-deadline SECS]\n  \
          [--checkpoint-every N] [--checkpoint PATH] [--resume PATH] [--run-until T]\n  \
          [--compress] [--secret S] [--legacy-wire] [--legacy-hello]",
         experiments::ALL.join(" "),
@@ -130,17 +140,55 @@ fn deploy_scenario(
     } else {
         None
     };
-    let stream = FedStream::build(
-        &StreamConfig {
-            n_clients: k,
-            n_iters: n,
-            data_group_samples: vec![n / 4, n / 2, 3 * n / 4, n],
-            test_size: 200,
-        },
-        &mut Eq39Source::new(seed),
-        seed,
-    );
+    let scfg = StreamConfig {
+        n_clients: k,
+        n_iters: n,
+        data_group_samples: vec![n / 4, n / 2, 3 * n / 4, n],
+        test_size: 200,
+    };
+    let stream = FedStream::build(&scfg, &mut Eq39Source::new(seed), seed);
     let rff = RffSpace::sample(4, d, 1.0, &mut Pcg32::derive(seed, &[1]));
+    let topology = args
+        .get("topology")
+        .map(|t| {
+            t.split(',')
+                .map(|f| {
+                    f.trim()
+                        .parse::<usize>()
+                        .map_err(|_| format!("--topology: bad fan-out {f:?}"))
+                })
+                .collect::<Result<Vec<usize>, String>>()
+        })
+        .transpose()?;
+    let accept_deadline = args
+        .get("accept-deadline")
+        .map(|v| {
+            v.parse::<u64>()
+                .map(Duration::from_secs)
+                .map_err(|_| "bad --accept-deadline (whole seconds)".to_string())
+        })
+        .transpose()?;
+    // Trees need generative assignments (a relay forwards the recipe, not
+    // the data); a flat --serve fleet gets them too, which shrinks every
+    // handshake to a few dozen bytes. Only the pre-codec handshake layout
+    // (--legacy-hello) still ships materialized shards.
+    let tree = TreeConfig {
+        topology,
+        spec: if args.has("legacy-hello") {
+            None
+        } else {
+            Some(StreamSpec {
+                config: scfg,
+                source: SourceSpec::Eq39 { seed },
+                seed,
+            })
+        },
+        avail: Some(AvailSpec::Grouped {
+            group_probs: vec![0.25, 0.1, 0.025, 0.005],
+            data_groups: 4,
+        }),
+        accept_deadline,
+    };
     Ok((
         stream,
         rff,
@@ -158,6 +206,7 @@ fn deploy_scenario(
                 secret: args.get("secret").unwrap_or("").to_string(),
                 legacy_hello: args.has("legacy-hello"),
             },
+            tree,
         },
     ))
 }
@@ -184,6 +233,27 @@ fn print_deployment(report: &DeploymentReport) {
 }
 
 fn run_deploy(args: &Args) -> Result<(), String> {
+    if args.has("relay") {
+        let upstream = args
+            .get("connect")
+            .ok_or("--relay needs --connect ADDR (the parent to fold into)")?;
+        let bind = args
+            .get("serve")
+            .ok_or("--relay needs --serve ADDR (where its own workers connect)")?;
+        let listener = TcpListener::bind(bind).map_err(|e| format!("bind {bind}: {e}"))?;
+        let addr = listener.local_addr().map_err(|e| e.to_string())?;
+        let opts = WorkerOptions {
+            secret: args.get("secret").unwrap_or("").to_string(),
+            allow_compress: !args.has("legacy-wire"),
+        };
+        println!("relay: connecting to {upstream}; listening on {addr}");
+        let rep = run_relay(upstream, &listener, &opts).map_err(|e| e.to_string())?;
+        println!(
+            "relay done: folded clients {}..{} from {} worker(s), {} ticks",
+            rep.client_lo, rep.client_hi, rep.workers, rep.ticks
+        );
+        return Ok(());
+    }
     if let Some(addr) = args.get("connect") {
         println!("worker: connecting to {addr}");
         let opts = WorkerOptions {

@@ -36,12 +36,18 @@ use std::path::Path;
 /// Leading bytes of every snapshot file.
 pub const MAGIC: [u8; 8] = *b"PAOFSNAP";
 
-/// Current snapshot format version. v2 stores the large arrays — the
-/// `[K*D]` client-model block, the server model, the availability
-/// probabilities and the eval curve — in the compressed codec
-/// ([`compress`]); v1 stored everything raw. Writers emit v2; readers
-/// accept both, so pre-compression checkpoints still resume.
-pub const VERSION: u32 = 2;
+/// Current snapshot format version. v3 appends the aggregator-tree
+/// topology to the payload, making the tree shape part of the run
+/// identity ([`RunSnapshot::validate_topology`]). v2 stores the large
+/// arrays — the `[K*D]` client-model block, the server model, the
+/// availability probabilities and the eval curve — in the compressed
+/// codec ([`compress`]); v1 stored everything raw. Writers emit v3;
+/// readers accept all three, so pre-tree checkpoints still resume (with
+/// an empty, i.e. flat, topology).
+pub const VERSION: u32 = 3;
+
+/// The compressed pre-topology snapshot version (still readable).
+pub const VERSION_V2: u32 = 2;
 
 /// The legacy raw-array snapshot version (still readable).
 pub const VERSION_V1: u32 = 1;
@@ -165,23 +171,50 @@ pub struct RunSnapshot {
     /// Total local-learning steps so far (deployment runtime; the engine
     /// does not track this and stores 0).
     pub local_steps: u64,
+    /// Aggregator-tree shape the run was produced under: one entry per
+    /// root child giving the number of leaf workers beneath it (1 = a
+    /// plain worker, >1 = a relay subtree). Empty for the in-process
+    /// engine and for flat fleets — [`normalize_topology`] maps all-ones
+    /// lists to empty, since a root whose every child is a single worker
+    /// *is* the flat fleet. Part of the run identity: resume refuses a
+    /// mismatched tree via [`RunSnapshot::validate_topology`].
+    pub topology: Vec<u32>,
+}
+
+/// Canonical form of a tree shape: a fleet where every root child is a
+/// single worker is indistinguishable from the flat fleet and from the
+/// in-process engine (their aggregation orders coincide bit for bit), so
+/// all-ones fan-out lists normalize to the empty list.
+pub fn normalize_topology(fanouts: &[u32]) -> Vec<u32> {
+    if fanouts.iter().all(|&f| f <= 1) {
+        Vec::new()
+    } else {
+        fanouts.to_vec()
+    }
 }
 
 impl RunSnapshot {
-    /// Encode the snapshot payload in the current (v2, compressed)
-    /// format (no file header / checksum).
+    /// Encode the snapshot payload in the current (v3, compressed +
+    /// topology) format (no file header / checksum).
     pub fn encode(&self) -> Vec<u8> {
-        self.encode_with(true)
+        self.encode_with(true, true)
+    }
+
+    /// Encode the snapshot payload in the v2 compressed pre-topology
+    /// format. Kept as a writer so compatibility tests can produce
+    /// genuine v2 bytes without an old binary.
+    pub fn encode_v2(&self) -> Vec<u8> {
+        self.encode_with(true, false)
     }
 
     /// Encode the snapshot payload in the legacy v1 raw-array format.
     /// Kept as a writer so compatibility tests and benches can produce
     /// genuine v1 bytes without an old binary.
     pub fn encode_v1(&self) -> Vec<u8> {
-        self.encode_with(false)
+        self.encode_with(false, false)
     }
 
-    fn encode_with(&self, compressed: bool) -> Vec<u8> {
+    fn encode_with(&self, compressed: bool, with_topology: bool) -> Vec<u8> {
         let mut buf = Vec::new();
         codec::put_usize(&mut buf, self.tick);
         codec::put_u64(&mut buf, self.env_seed);
@@ -253,20 +286,31 @@ impl RunSnapshot {
             }
         }
         codec::put_u64(&mut buf, self.local_steps);
+        if with_topology {
+            codec::put_usize(&mut buf, self.topology.len());
+            for &f in &self.topology {
+                codec::put_u32(&mut buf, f);
+            }
+        }
         buf
     }
 
-    /// Decode one payload produced by [`RunSnapshot::encode`] (v2).
+    /// Decode one payload produced by [`RunSnapshot::encode`] (v3).
     pub fn decode(payload: &[u8]) -> Result<Self> {
-        Self::decode_with(payload, true)
+        Self::decode_with(payload, true, true)
+    }
+
+    /// Decode one v2 pre-topology payload ([`RunSnapshot::encode_v2`]).
+    pub fn decode_v2(payload: &[u8]) -> Result<Self> {
+        Self::decode_with(payload, true, false)
     }
 
     /// Decode one legacy v1 payload ([`RunSnapshot::encode_v1`]).
     pub fn decode_v1(payload: &[u8]) -> Result<Self> {
-        Self::decode_with(payload, false)
+        Self::decode_with(payload, false, false)
     }
 
-    fn decode_with(payload: &[u8], compressed: bool) -> Result<Self> {
+    fn decode_with(payload: &[u8], compressed: bool, with_topology: bool) -> Result<Self> {
         let mut c = Cur::new(payload);
         let tick = c.usize()?;
         let env_seed = c.u64()?;
@@ -375,6 +419,23 @@ impl RunSnapshot {
             (iters, db)
         };
         let local_steps = c.u64()?;
+        let topology = if with_topology {
+            let n = c.len(4)?;
+            let mut t = Vec::with_capacity(n);
+            for _ in 0..n {
+                let f = c.u32()?;
+                if f == 0 {
+                    return Err(Error::Protocol(
+                        "snapshot topology contains a zero fan-out".into(),
+                    ));
+                }
+                t.push(f);
+            }
+            t
+        } else {
+            // Pre-tree snapshot: by definition taken from a flat run.
+            Vec::new()
+        };
         if c.remaining() != 0 {
             return Err(Error::Protocol(format!(
                 "{} trailing bytes after snapshot",
@@ -401,6 +462,7 @@ impl RunSnapshot {
             curve_iters,
             curve_db,
             local_steps,
+            topology,
         })
     }
 
@@ -469,6 +531,24 @@ impl RunSnapshot {
         }
         Ok(())
     }
+
+    /// Reject resume under a different aggregator-tree shape. Both sides
+    /// are compared in [`normalize_topology`] canonical form, so a flat
+    /// fleet, a relay-per-worker tree and the in-process engine (which
+    /// are bit-identical realizations) interchange freely, while any
+    /// genuine re-treeing of the fleet is refused — worker state slices
+    /// and replay journals are keyed to the subtree layout.
+    pub fn validate_topology(&self, fanouts: &[u32]) -> Result<()> {
+        let have = normalize_topology(&self.topology);
+        let want = normalize_topology(fanouts);
+        if have != want {
+            return Err(Error::Config(format!(
+                "snapshot was taken under aggregator tree {have:?} but this fleet \
+                 is shaped {want:?} (empty = flat or in-process)"
+            )));
+        }
+        Ok(())
+    }
 }
 
 /// Parse snapshot file bytes (header + payload + checksum).
@@ -480,9 +560,10 @@ pub fn from_bytes(bytes: &[u8]) -> Result<RunSnapshot> {
         return Err(Error::Protocol("not a pao-fed snapshot (bad magic)".into()));
     }
     let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
-    if version != VERSION && version != VERSION_V1 {
+    if version != VERSION && version != VERSION_V2 && version != VERSION_V1 {
         return Err(Error::Protocol(format!(
-            "unsupported snapshot version {version} (this build reads {VERSION_V1} and {VERSION})"
+            "unsupported snapshot version {version} \
+             (this build reads {VERSION_V1}, {VERSION_V2} and {VERSION})"
         )));
     }
     let len = u64::from_le_bytes(bytes[12..20].try_into().unwrap());
@@ -501,10 +582,10 @@ pub fn from_bytes(bytes: &[u8]) -> Result<RunSnapshot> {
             "snapshot checksum mismatch: file says {want:#018x}, payload hashes to {got:#018x}"
         )));
     }
-    if version == VERSION_V1 {
-        RunSnapshot::decode_v1(payload)
-    } else {
-        RunSnapshot::decode(payload)
+    match version {
+        VERSION_V1 => RunSnapshot::decode_v1(payload),
+        VERSION_V2 => RunSnapshot::decode_v2(payload),
+        _ => RunSnapshot::decode(payload),
     }
 }
 
@@ -520,9 +601,15 @@ fn frame(version: u32, payload: Vec<u8>) -> Vec<u8> {
 }
 
 /// Serialize a snapshot to file bytes (header + payload + checksum) in
-/// the current v2 compressed format.
+/// the current v3 compressed + topology format.
 pub fn to_bytes(snap: &RunSnapshot) -> Vec<u8> {
     frame(VERSION, snap.encode())
+}
+
+/// Serialize a snapshot as a v2 pre-topology file — the fixture producer
+/// for read-compat tests.
+pub fn to_bytes_v2(snap: &RunSnapshot) -> Vec<u8> {
+    frame(VERSION_V2, snap.encode_v2())
 }
 
 /// Serialize a snapshot as a legacy v1 file — the fixture producer for
@@ -651,6 +738,7 @@ mod tests {
             curve_iters: vec![0, 25, 50, 75, 100],
             curve_db: vec![0.0, -3.5, -7.25, -9.0, -10.125],
             local_steps: 4096,
+            topology: Vec::new(),
         }
     }
 
@@ -666,19 +754,53 @@ mod tests {
     #[test]
     fn legacy_v1_files_still_read() {
         let snap = sample_snapshot();
-        // Payload-level v1 roundtrip.
+        // Payload-level v1/v2 roundtrips.
         assert_eq!(RunSnapshot::decode_v1(&snap.encode_v1()).unwrap(), snap);
-        // File-level: a v1-framed file decodes through the same entry
-        // point as v2 — pre-compression checkpoints still resume.
+        assert_eq!(RunSnapshot::decode_v2(&snap.encode_v2()).unwrap(), snap);
+        // File-level: v1- and v2-framed files decode through the same
+        // entry point as v3 — pre-compression and pre-topology
+        // checkpoints still resume.
         let v1 = to_bytes_v1(&snap);
         assert_eq!(u32::from_le_bytes(v1[8..12].try_into().unwrap()), VERSION_V1);
         assert_eq!(from_bytes(&v1).unwrap(), snap);
-        let v2 = to_bytes(&snap);
-        assert_eq!(u32::from_le_bytes(v2[8..12].try_into().unwrap()), VERSION);
+        let v2 = to_bytes_v2(&snap);
+        assert_eq!(u32::from_le_bytes(v2[8..12].try_into().unwrap()), VERSION_V2);
         assert_eq!(from_bytes(&v2).unwrap(), snap);
-        // A v1 payload does not accidentally parse as v2 or vice versa:
+        let v3 = to_bytes(&snap);
+        assert_eq!(u32::from_le_bytes(v3[8..12].try_into().unwrap()), VERSION);
+        assert_eq!(from_bytes(&v3).unwrap(), snap);
+        // A v1 payload does not accidentally parse as v3 or vice versa:
         // mixing framings must fail cleanly, not mis-decode.
         assert!(RunSnapshot::decode(&snap.encode_v1()).is_err());
+        // A v3 payload has trailing topology bytes a v2 reader rejects.
+        assert!(RunSnapshot::decode_v2(&snap.encode()).is_err());
+    }
+
+    #[test]
+    fn topology_is_part_of_run_identity() {
+        // A treed snapshot roundtrips exactly through the v3 framing.
+        let mut snap = sample_snapshot();
+        snap.topology = vec![2, 1, 3];
+        assert_eq!(from_bytes(&to_bytes(&snap)).unwrap(), snap);
+        // Resume accepts the identical tree and refuses reshaped ones.
+        assert!(snap.validate_topology(&[2, 1, 3]).is_ok());
+        assert!(snap.validate_topology(&[1, 2, 3]).is_err());
+        assert!(snap.validate_topology(&[]).is_err());
+        assert!(snap.validate_topology(&[2, 1, 3, 1]).is_err());
+        // Flat shapes all normalize to the same identity: in-process
+        // (empty), a flat fleet of any width (all ones).
+        let flat = sample_snapshot();
+        assert!(flat.validate_topology(&[]).is_ok());
+        assert!(flat.validate_topology(&[1, 1, 1, 1]).is_ok());
+        assert!(flat.validate_topology(&[2, 1]).is_err());
+        assert_eq!(normalize_topology(&[1, 1]), Vec::<u32>::new());
+        assert_eq!(normalize_topology(&[2, 1]), vec![2, 1]);
+        // A v2 file of the same run reads back as flat.
+        assert_eq!(from_bytes(&to_bytes_v2(&snap)).unwrap().topology, Vec::<u32>::new());
+        // A crafted zero fan-out is refused at decode.
+        let mut zero = sample_snapshot();
+        zero.topology = vec![2, 0];
+        assert!(RunSnapshot::decode(&zero.encode()).is_err());
     }
 
     #[test]

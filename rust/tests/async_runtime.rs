@@ -57,6 +57,7 @@ fn deployment_matches_discrete_engine() {
                 persist: None,
                 run_until: None,
                 wire: Default::default(),
+                tree: Default::default(),
             },
         )
         .unwrap();
@@ -91,6 +92,7 @@ fn deployment_survives_zero_participation() {
             persist: None,
             run_until: None,
             wire: Default::default(),
+            tree: Default::default(),
         },
     )
     .unwrap();

@@ -484,6 +484,7 @@ fn sample_snapshot(rng: &mut Pcg32) -> RunSnapshot {
         curve_iters: (0..12).map(|i| i * 25).collect(),
         curve_db: gen_f64s(rng, 12),
         local_steps: 4096,
+        topology: Vec::new(),
     }
 }
 

@@ -19,13 +19,16 @@
 //! with workers mirroring it in their acks — must still reproduce the
 //! in-process curve bit for bit.
 
-use pao_fed::async_rt::{run_deployment, run_deployment_tcp, DeploymentConfig, WireConfig};
-use pao_fed::data::stream::{FedStream, StreamConfig};
+use pao_fed::async_rt::{
+    run_deployment, run_deployment_tcp, run_relay, DeploymentConfig, DeploymentReport, TreeConfig,
+    WireConfig, WorkerOptions,
+};
+use pao_fed::data::stream::{FedStream, SourceSpec, StreamConfig, StreamSpec};
 use pao_fed::data::synthetic::Eq39Source;
 use pao_fed::fl::algorithms::{self, Variant};
-use pao_fed::persist::PersistPolicy;
 use pao_fed::fl::delay::DelayModel;
-use pao_fed::fl::participation::Participation;
+use pao_fed::fl::participation::{AvailSpec, Participation};
+use pao_fed::persist::PersistPolicy;
 use pao_fed::rff::RffSpace;
 use pao_fed::util::rng::Pcg32;
 use std::net::TcpListener;
@@ -95,6 +98,7 @@ fn killed_worker_is_replaced_and_curve_stays_bit_identical() {
         persist: None,
         run_until: None,
         wire: Default::default(),
+        tree: Default::default(),
     };
 
     // Baseline: in-process deployment (the bitwise reference).
@@ -161,6 +165,7 @@ fn tcp_loopback_matches_in_process_deployment_bitwise() {
             persist: None,
             run_until: None,
             wire: Default::default(),
+            tree: Default::default(),
         };
 
         // In-process thread-per-client deployment.
@@ -228,6 +233,7 @@ fn tcp_fleet_checkpoint_resume_is_bit_identical() {
         persist,
         run_until,
         wire: Default::default(),
+        tree: Default::default(),
     };
     let make_stream = || FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
 
@@ -302,6 +308,7 @@ fn compressed_mixed_fleet_matches_in_process_bitwise() {
         persist: None,
         run_until: None,
         wire,
+        tree: Default::default(),
     };
 
     // In-process reference (no wire at all).
@@ -359,6 +366,7 @@ fn legacy_hello_fleet_matches_in_process_bitwise() {
         persist: None,
         run_until: None,
         wire,
+        tree: Default::default(),
     };
 
     let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
@@ -440,6 +448,7 @@ fn wrong_secret_worker_is_rejected_cleanly() {
                 secret: "the-right-one".into(),
                 ..Default::default()
             },
+            tree: Default::default(),
         },
         &listener,
         1,
@@ -475,6 +484,7 @@ fn tcp_deployment_survives_zero_participation() {
             persist: None,
             run_until: None,
             wire: Default::default(),
+            tree: Default::default(),
         },
         &listener,
         2,
@@ -485,4 +495,251 @@ fn tcp_deployment_survives_zero_participation() {
     }
     assert_eq!(report.comm.uplink_msgs, 0);
     assert!(report.final_w.iter().all(|&v| v == 0.0));
+}
+
+// ------------------------------------------------------- aggregator tree
+
+/// The generative tree config for `build_env`'s scenario: same stream
+/// recipe and availability blocks the server materializes, so workers
+/// synthesizing their shards locally land on identical bytes.
+fn tree_cfg(cfg: &StreamConfig, seed: u64, topology: Option<Vec<usize>>) -> TreeConfig {
+    TreeConfig {
+        topology,
+        spec: Some(StreamSpec {
+            config: cfg.clone(),
+            source: SourceSpec::Eq39 { seed },
+            seed,
+        }),
+        avail: Some(AvailSpec::Grouped {
+            group_probs: vec![0.5, 0.25, 0.1, 0.05],
+            data_groups: 4,
+        }),
+        accept_deadline: None,
+    }
+}
+
+/// One direct child of the root: a leaf worker process, or a relay
+/// fronting `fanout` leaf worker processes.
+enum TreeChild {
+    Worker,
+    Relay { fanout: usize },
+}
+
+/// Stand up a fleet shaped by `children` (relays run as in-process
+/// threads off test-owned listeners so worker processes know where to
+/// dial; leaves are real child processes) and drive the root. Children
+/// are spawned with generous gaps because the root hands out subtree
+/// assignments in connection-arrival order.
+fn run_tree_fleet(
+    stream: FedStream,
+    rff: RffSpace,
+    part: Participation,
+    delay: DelayModel,
+    dcfg: DeploymentConfig,
+    children: &[TreeChild],
+) -> DeploymentReport {
+    let n_workers: usize = children
+        .iter()
+        .map(|c| match c {
+            TreeChild::Worker => 1,
+            TreeChild::Relay { fanout } => *fanout,
+        })
+        .sum();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let root = listener.local_addr().unwrap().to_string();
+    let mut leaves = Vec::new();
+    let mut relays = Vec::new();
+    for child in children {
+        match child {
+            TreeChild::Worker => leaves.extend(spawn_workers(&root, 1)),
+            TreeChild::Relay { fanout } => {
+                let rl = TcpListener::bind("127.0.0.1:0").unwrap();
+                let raddr = rl.local_addr().unwrap().to_string();
+                let up = root.clone();
+                relays.push(std::thread::spawn(move || {
+                    run_relay(&up, &rl, &WorkerOptions::default()).expect("relay failed")
+                }));
+                leaves.extend(spawn_workers(&raddr, *fanout));
+            }
+        }
+        std::thread::sleep(Duration::from_millis(300));
+    }
+    let report =
+        run_deployment_tcp(stream, rff, part, delay, dcfg, &listener, n_workers).unwrap();
+    for mut c in leaves {
+        let status = c.wait().unwrap();
+        assert!(status.success(), "leaf worker exited with {status}");
+    }
+    for r in relays {
+        r.join().expect("relay thread panicked");
+    }
+    report
+}
+
+/// The tree-shape determinism sweep: a flat fleet on generative
+/// assignments, a 2-level tree with uneven fan-out, and a
+/// relay-per-worker tree must all reproduce the in-process deployment —
+/// and therefore each other — bit for bit, including the snapshotless
+/// traffic counters (a relay folds frames, it must not change what the
+/// server counts).
+#[test]
+fn tree_shapes_match_in_process_bitwise() {
+    let seed = 71;
+    let (cfg, rff, part, delay) = build_env(seed, 10, 140);
+    let algo = algorithms::build(Variant::PaoFedC2, 0.4, 4, 10, 20);
+    let dcfg = |tree| DeploymentConfig {
+        algo: algo.clone(),
+        tick: Duration::ZERO,
+        env_seed: seed,
+        eval_every: 20,
+        persist: None,
+        run_until: None,
+        wire: Default::default(),
+        tree,
+    };
+
+    let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+    let inproc =
+        run_deployment(stream, rff.clone(), part.clone(), delay, dcfg(Default::default()))
+            .unwrap();
+
+    let shapes: [(&str, Option<Vec<usize>>, Vec<TreeChild>); 3] = [
+        // Flat fleet, but on the compact generative handshake.
+        ("flat", None, vec![TreeChild::Worker, TreeChild::Worker, TreeChild::Worker]),
+        // Uneven 2-level: one relay over two leaves + a direct worker,
+        // with K=10 over 3 leaves so the range rounding is exercised.
+        (
+            "uneven-2-level",
+            Some(vec![2, 1]),
+            vec![TreeChild::Relay { fanout: 2 }, TreeChild::Worker],
+        ),
+        // Degenerate relay-per-worker: every child an inner node.
+        (
+            "relay-per-worker",
+            Some(vec![1, 1, 1]),
+            vec![
+                TreeChild::Relay { fanout: 1 },
+                TreeChild::Relay { fanout: 1 },
+                TreeChild::Relay { fanout: 1 },
+            ],
+        ),
+    ];
+    for (name, topology, children) in shapes {
+        let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+        let tcp = run_tree_fleet(
+            stream,
+            rff.clone(),
+            part.clone(),
+            delay,
+            dcfg(tree_cfg(&cfg, seed, topology)),
+            &children,
+        );
+        assert_eq!(inproc.iters, tcp.iters, "{name}");
+        assert_eq!(inproc.mse_db, tcp.mse_db, "{name}: curves diverge");
+        assert_eq!(inproc.final_w, tcp.final_w, "{name}: models diverge");
+        assert_eq!(inproc.comm, tcp.comm, "{name}: traffic counters diverge");
+        assert_eq!(inproc.agg, tcp.agg, "{name}: aggregation diverges");
+        assert_eq!(inproc.local_steps, tcp.local_steps, "{name}");
+        assert_eq!(tcp.n_workers, 3, "{name}");
+    }
+}
+
+/// Reserve a loopback address for a child process to bind shortly after.
+/// The port is released before returning (ephemeral range, so a clash in
+/// the gap is unlikely).
+fn free_addr() -> String {
+    let l = TcpListener::bind("127.0.0.1:0").unwrap();
+    l.local_addr().unwrap().to_string()
+}
+
+fn spawn_relay_process(upstream: &str, bind: &str, crash_at: Option<usize>) -> Child {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_pao-fed"));
+    cmd.args(["deploy", "--relay", "--connect", upstream, "--serve", bind])
+        .stdout(Stdio::null())
+        .stderr(Stdio::inherit());
+    if let Some(t) = crash_at {
+        cmd.env("PAO_FED_CRASH_AT_TICK", t.to_string());
+    }
+    cmd.spawn().expect("spawn relay")
+}
+
+/// Kill a relay mid-run: the root must recover the *whole subtree*
+/// through a replacement relay (which re-shards the resume plan over
+/// fresh leaf workers via the PR-5 replay machinery), the dead relay's
+/// orphaned workers must exit nonzero, and the finished curve must stay
+/// bit-identical to an undisturbed in-process run.
+#[test]
+fn killed_relay_is_recovered_and_curve_stays_bit_identical() {
+    let seed = 83;
+    let crash_at = 50;
+    let (cfg, rff, part, delay) = build_env(seed, 9, 160);
+    let algo = algorithms::build(Variant::PaoFedC2, 0.4, 4, 10, 20);
+    let dcfg = |tree| DeploymentConfig {
+        algo: algo.clone(),
+        tick: Duration::ZERO,
+        env_seed: seed,
+        eval_every: 20,
+        persist: None,
+        run_until: None,
+        wire: Default::default(),
+        tree,
+    };
+
+    let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+    let inproc =
+        run_deployment(stream, rff.clone(), part.clone(), delay, dcfg(Default::default()))
+            .unwrap();
+
+    // Topology [2, 1]: child 0 is a relay process doomed to die at tick
+    // 50, fronting two workers; child 1 is a direct worker.
+    let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let root = listener.local_addr().unwrap().to_string();
+    let bind = free_addr();
+    let mut doomed = spawn_relay_process(&root, &bind, Some(crash_at));
+    std::thread::sleep(Duration::from_millis(300));
+    let orphans = spawn_workers(&bind, 2);
+    let direct = spawn_workers(&root, 1);
+
+    let replacement_root = root.clone();
+    let monitor = std::thread::spawn(move || {
+        let status = doomed.wait().expect("wait for doomed relay");
+        assert_eq!(status.code(), Some(3), "doomed relay exited with {status}");
+        let bind = free_addr();
+        let replacement = spawn_relay_process(&replacement_root, &bind, None);
+        std::thread::sleep(Duration::from_millis(300));
+        let workers = spawn_workers(&bind, 2);
+        (replacement, workers)
+    });
+
+    let tcp = run_deployment_tcp(
+        stream,
+        rff.clone(),
+        part.clone(),
+        delay,
+        dcfg(tree_cfg(&cfg, seed, Some(vec![2, 1]))),
+        &listener,
+        3,
+    )
+    .unwrap();
+    let (mut replacement, workers) = monitor.join().unwrap();
+    for mut c in direct {
+        assert!(c.wait().unwrap().success(), "direct worker failed");
+    }
+    assert!(replacement.wait().unwrap().success(), "replacement relay failed");
+    for mut w in workers {
+        assert!(w.wait().unwrap().success(), "replacement-subtree worker failed");
+    }
+    // The dead relay's workers lose their upstream and must fail loudly.
+    for mut w in orphans {
+        assert!(!w.wait().unwrap().success(), "orphaned worker should exit nonzero");
+    }
+
+    assert_eq!(tcp.recovered_workers, 1, "one subtree recovery expected");
+    assert_eq!(inproc.iters, tcp.iters);
+    assert_eq!(inproc.mse_db, tcp.mse_db, "curves diverge after relay recovery");
+    assert_eq!(inproc.final_w, tcp.final_w, "models diverge after relay recovery");
+    assert_eq!(inproc.comm, tcp.comm, "traffic counters diverge after relay recovery");
+    assert_eq!(inproc.agg, tcp.agg);
+    assert_eq!(inproc.local_steps, tcp.local_steps);
 }

@@ -197,6 +197,7 @@ fn deployment_stop_and_resume_is_bit_identical() {
         persist,
         run_until,
         wire: Default::default(),
+        tree: Default::default(),
     };
 
     // Uninterrupted references: bare, and journaled-with-periodic
@@ -381,6 +382,9 @@ fn random_snapshot(rng: &mut Pcg32) -> RunSnapshot {
         curve_iters: (0..(tick / 25 + 1)).map(|i| i * 25).collect(),
         curve_db: (0..(tick / 25 + 1)).map(|_| rng.gaussian()).collect(),
         local_steps: rng.next_u64() >> 30,
+        // Sometimes flat, sometimes a real tree (fan-outs >= 1; zero is
+        // rejected at decode, pinned in snapshot.rs unit tests).
+        topology: (0..rng.below(4)).map(|_| 1 + rng.below(4) as u32).collect(),
     }
 }
 
