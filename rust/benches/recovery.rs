@@ -1,0 +1,161 @@
+//! Recovery-path benchmarks: what a reconnect actually *ships* under the
+//! digest anti-entropy exchange vs. the full `ResumePlan` replay bundle,
+//! at a large shard (K = 4096 hosted clients, D = 200, 512 logged
+//! ticks), plus the digest-computation hot paths the exchange adds to a
+//! recovery. Files its trajectory into `BENCH_9.json` (schema
+//! `pao-fed-bench-v1`) beside the other perf artifacts.
+//!
+//! The byte figures use the generative `SubtreeAssignment` container
+//! (flat in K), so the measured difference between the reconnect shapes
+//! *is* the resume payload: the full bundle carries every client state
+//! plus the whole replay log, the digest fast path carries only hashes
+//! plus a near-empty plan, and the tail-bucket shape carries hashes plus
+//! one missing log bucket (the [`partial_plan`] helper).
+//!
+//! Run: `cargo bench --bench recovery [filter]`
+
+mod bench_harness;
+
+use bench_harness::Bench;
+use pao_fed::async_rt::transport::{
+    diff_digests, log_bucket_digests, partial_plan, state_digest, DIGEST_BUCKET_TICKS,
+};
+use pao_fed::async_rt::wire::{self, ResumePlan, SubtreeAssignment, WireMsg};
+use pao_fed::data::stream::{SourceSpec, StreamConfig, StreamSpec};
+use pao_fed::fl::algorithms::{self, Variant};
+use pao_fed::fl::participation::AvailSpec;
+use pao_fed::rff::RffSpace;
+use pao_fed::util::rng::Pcg32;
+
+const K_SHARD: usize = 4096;
+const D: usize = 200;
+const LOG: usize = 512;
+const SEED: u64 = 2023;
+
+fn rows(rng: &mut Pcg32, n: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|_| (0..D).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect())
+        .collect()
+}
+
+fn main() {
+    let mut b = Bench::from_args("recovery").with_sink("BENCH_9.json");
+    let mut rng = Pcg32::new(0x9ec0, 7);
+    let states = rows(&mut rng, K_SHARD);
+    let log = rows(&mut rng, LOG);
+    let algo = algorithms::build(Variant::PaoFedC2, 0.4, 4, 10, 50);
+    let rff = RffSpace::sample(4, D, 1.0, &mut rng);
+    let spec = StreamSpec {
+        config: StreamConfig {
+            n_clients: K_SHARD,
+            n_iters: 2000,
+            data_group_samples: vec![500, 1000, 1500, 2000],
+            test_size: 80,
+        },
+        source: SourceSpec::Eq39 { seed: SEED },
+        seed: SEED,
+    };
+    let avail = AvailSpec::Grouped {
+        group_probs: vec![0.5, 0.25, 0.1, 0.05],
+        data_groups: 4,
+    };
+    // The reconnect handshake container (one leaf hosting the shard);
+    // identical in every shape below, so the byte deltas are the plan.
+    let assignment = |resume: Option<ResumePlan>| {
+        WireMsg::SubtreeAssignment(SubtreeAssignment {
+            client_lo: 0,
+            client_hi: K_SHARD,
+            leaf_lo: 0,
+            fanout: 1,
+            n_leaves: 1,
+            env_seed: SEED,
+            n_iters: 2000,
+            algo: algo.clone(),
+            rff: rff.clone(),
+            spec: spec.clone(),
+            session: 0x5e55,
+            k_total: K_SHARD,
+            avail: avail.clone(),
+            resume,
+            compress: false,
+            challenge: 1,
+            hello_tag: 0,
+        })
+    };
+
+    // Pre-digest reconnect: the whole replay bundle in one frame.
+    let full_plan = ResumePlan { base_tick: 0, states: states.clone(), log: log.clone() };
+    let full = wire::encode(&assignment(Some(full_plan))).len();
+
+    // Digest fast path: advertise hashes, hear "need nothing", ship a
+    // near-empty plan (what a live-cache reconnect pays today).
+    let state_ds: Vec<u64> = states.iter().map(|w| state_digest(w)).collect();
+    let log_ds = log_bucket_digests(&log, DIGEST_BUCKET_TICKS);
+    let digest = wire::encode(&WireMsg::Digest {
+        session: 0x5e55,
+        base_tick: 0,
+        resume_tick: LOG,
+        client_lo: 0,
+        client_hi: K_SHARD,
+        bucket_ticks: DIGEST_BUCKET_TICKS,
+        state_digests: state_ds.clone(),
+        log_digests: log_ds.clone(),
+    })
+    .len();
+    let need_nothing = wire::encode(&WireMsg::DigestDelta {
+        session: 0x5e55,
+        need_all: false,
+        need_states: vec![],
+        need_log_buckets: vec![],
+    })
+    .len();
+    let lean =
+        wire::encode(&assignment(Some(ResumePlan { base_tick: LOG, states: vec![], log: vec![] })))
+            .len();
+    let fast = digest + need_nothing + lean;
+
+    // Tail-bucket shape: the peer holds everything except the last log
+    // bucket, and the partial plan ships exactly that bucket.
+    let tail_bucket = log_ds.len() - 1;
+    let tail_delta = wire::encode(&WireMsg::DigestDelta {
+        session: 0x5e55,
+        need_all: false,
+        need_states: vec![],
+        need_log_buckets: vec![tail_bucket],
+    })
+    .len();
+    let tail_plan = partial_plan(0, &states, &log, DIGEST_BUCKET_TICKS, &[], &[tail_bucket]);
+    let tail = digest + tail_delta + wire::encode(&assignment(Some(tail_plan))).len();
+
+    println!(
+        "reconnect bytes at K={K_SHARD} D={D} log={LOG}: \
+         full {full}, digest fast path {fast}, digest + tail bucket {tail}"
+    );
+    // The acceptance bar: the digest exchange must be *measurably*
+    // leaner than the full bundle, not marginally.
+    assert!(10 * fast < full, "digest fast path not an order of magnitude under full replay");
+    assert!(10 * tail < full, "tail-bucket reconnect not an order of magnitude under full replay");
+
+    b.record_value("full_resume_reconnect_bytes_k4096", full as f64);
+    b.record_value("digest_fastpath_reconnect_bytes_k4096", fast as f64);
+    b.record_value("digest_tail_bucket_reconnect_bytes_k4096", tail as f64);
+    b.record_value("full_over_digest_ratio", full as f64 / fast as f64);
+
+    // What the exchange costs in compute (both ends pay one of these).
+    b.bench("state_digests_k4096_d200", || {
+        let acc = states
+            .iter()
+            .map(|w| state_digest(w))
+            .fold(0u64, |a, x| a.rotate_left(1) ^ x);
+        std::hint::black_box(acc);
+    });
+    b.bench("log_bucket_digests_512_ticks_d200", || {
+        let ds = log_bucket_digests(&log, DIGEST_BUCKET_TICKS);
+        assert_eq!(ds.len(), LOG.div_ceil(DIGEST_BUCKET_TICKS));
+    });
+    b.bench("diff_digests_k4096_identical", || {
+        let (need_all, s, l) = diff_digests(&state_ds, &log_ds, &state_ds, &log_ds);
+        assert!(!need_all && s.is_empty() && l.is_empty());
+    });
+    b.finish();
+}

@@ -1,0 +1,360 @@
+//! Deterministic fault injection for the deployment fleet.
+//!
+//! A seeded [`FaultPlan`] — parsed from `--fault-plan` on the CLI or the
+//! `PAO_FED_FAULT_PLAN` environment variable — injects faults at the
+//! frame boundary of this process's outbound wire traffic: dropped
+//! connections, duplicated frames, time-delayed frames, single-bit tag
+//! corruption (which the receiver must surface as
+//! [`Error::Protocol`](crate::error::Error::Protocol)), simulated
+//! connect refusals, and process kills at a given tick. Everything is a
+//! pure function of the plan, so a chaotic run is exactly reproducible —
+//! which is what lets the chaos tests demand *bit-identical* results
+//! from a faulted fleet.
+//!
+//! The plan grammar is a semicolon-separated clause list:
+//!
+//! ```text
+//! seed=7; kill:tick=50; corrupt:frame=9; drop:frame=12;
+//! dup:frame=15; delay:frame=20,ms=40; refuse:connects=2
+//! ```
+//!
+//! * `seed=N` — seeds the corruption-bit selector (default 0).
+//! * `kill:tick=N` — exit(3) at the start of tick `N` (the worker/relay
+//!   crash hook; subsumes the older `PAO_FED_CRASH_AT_TICK`, which is
+//!   kept as an alias and merged by [`kill_tick`]).
+//! * `corrupt:frame=N` — flip one high bit of the `N`-th outbound
+//!   frame's tag byte (1-based), so the peer decodes a clean
+//!   `Error::Protocol` instead of a valid message.
+//! * `drop:frame=N` — discard the `N`-th outbound frame and fail the
+//!   connection (the sender sees a broken pipe, as if the link died).
+//! * `dup:frame=N` — write the `N`-th outbound frame twice.
+//! * `delay:frame=N[,ms=M]` — sleep `M` milliseconds (default 50)
+//!   before writing the `N`-th frame. A *time* delay only: per-link
+//!   frame order (and therefore the determinism contract) is preserved.
+//! * `refuse:connects=N` — make the first `N` outbound connect attempts
+//!   of this process fail, exercising the bounded-retry schedule.
+//!
+//! The hook in [`wire::write_frame`](crate::async_rt::wire::write_frame)
+//! is zero-cost when no plan is active: one static lookup that resolves
+//! to `None` once per process.
+
+use crate::error::{Error, Result};
+use crate::util::rng::splitmix64;
+use std::io::Write;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+/// What [`FaultPlan::frame_action`] decides for one outbound frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameAction {
+    /// Write the frame unchanged.
+    Send,
+    /// Flip one high bit of the frame's tag byte, then write it.
+    Corrupt,
+    /// Discard the frame and fail the connection (broken pipe).
+    Drop,
+    /// Write the frame twice.
+    Dup,
+    /// Sleep this many milliseconds, then write the frame once.
+    Delay(u64),
+}
+
+/// A deterministic schedule of injected faults for one process.
+///
+/// Frame indices are 1-based over this process's outbound frames (every
+/// frame that passes through `wire::write_frame`, handshakes included).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Seeds the corruption-bit selector (`corrupt:frame` clauses).
+    pub seed: u64,
+    /// Exit(3) at the start of this tick (worker/relay crash hook).
+    pub kill_tick: Option<usize>,
+    /// 1-based outbound frame numbers to corrupt.
+    pub corrupt_frames: Vec<u64>,
+    /// 1-based outbound frame numbers to drop (with the connection).
+    pub drop_frames: Vec<u64>,
+    /// 1-based outbound frame numbers to duplicate.
+    pub dup_frames: Vec<u64>,
+    /// 1-based outbound frame numbers to delay, with the delay in ms.
+    pub delay_frames: Vec<(u64, u64)>,
+    /// How many leading connect attempts to refuse.
+    pub refuse_connects: u64,
+}
+
+fn clause_num(clause: &str, key: &str) -> Result<u64> {
+    let val = clause
+        .strip_prefix(key)
+        .and_then(|rest| rest.strip_prefix('='))
+        .ok_or_else(|| Error::Config(format!("fault plan: malformed clause `{clause}`")))?;
+    val.parse()
+        .map_err(|_| Error::Config(format!("fault plan: `{clause}`: bad number `{val}`")))
+}
+
+impl FaultPlan {
+    /// Parse the semicolon-separated plan grammar (see the module docs).
+    /// Empty clauses are tolerated; anything else malformed is a
+    /// [`Error::Config`].
+    pub fn parse(text: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for clause in text.split(';') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            if let Some(rest) = clause.strip_prefix("delay:") {
+                // delay:frame=N[,ms=M]
+                let mut parts = rest.split(',');
+                let frame = clause_num(parts.next().unwrap_or(""), "frame")?;
+                let ms = match parts.next() {
+                    Some(p) => clause_num(p.trim(), "ms")?,
+                    None => 50,
+                };
+                if parts.next().is_some() {
+                    return Err(Error::Config(format!(
+                        "fault plan: `{clause}`: too many fields"
+                    )));
+                }
+                plan.delay_frames.push((frame, ms));
+            } else if let Some(rest) = clause.strip_prefix("corrupt:") {
+                plan.corrupt_frames.push(clause_num(rest, "frame")?);
+            } else if let Some(rest) = clause.strip_prefix("drop:") {
+                plan.drop_frames.push(clause_num(rest, "frame")?);
+            } else if let Some(rest) = clause.strip_prefix("dup:") {
+                plan.dup_frames.push(clause_num(rest, "frame")?);
+            } else if let Some(rest) = clause.strip_prefix("kill:") {
+                let t = clause_num(rest, "tick")?;
+                plan.kill_tick = Some(usize::try_from(t).map_err(|_| {
+                    Error::Config(format!("fault plan: `{clause}`: tick exceeds usize"))
+                })?);
+            } else if let Some(rest) = clause.strip_prefix("refuse:") {
+                plan.refuse_connects = clause_num(rest, "connects")?;
+            } else if clause.starts_with("seed") {
+                plan.seed = clause_num(clause, "seed")?;
+            } else {
+                return Err(Error::Config(format!(
+                    "fault plan: unknown clause `{clause}`"
+                )));
+            }
+        }
+        Ok(plan)
+    }
+
+    /// What to do with the `n`-th (1-based) outbound frame. Precedence
+    /// when several clauses name the same frame: drop > corrupt > dup >
+    /// delay — a dropped frame can't also be duplicated.
+    pub fn frame_action(&self, n: u64) -> FrameAction {
+        if self.drop_frames.contains(&n) {
+            FrameAction::Drop
+        } else if self.corrupt_frames.contains(&n) {
+            FrameAction::Corrupt
+        } else if self.dup_frames.contains(&n) {
+            FrameAction::Dup
+        } else if let Some(&(_, ms)) = self.delay_frames.iter().find(|&&(f, _)| f == n) {
+            FrameAction::Delay(ms)
+        } else {
+            FrameAction::Send
+        }
+    }
+
+    /// Flip one of the four high bits of the payload's tag byte, chosen
+    /// by `(seed, frame)`. Every wire tag is < 16, so a high-bit flip
+    /// always produces an invalid tag — the receiver rejects the frame
+    /// as a clean `Error::Protocol` ("bad message tag"), never a
+    /// half-parsed message.
+    pub fn corrupt_payload(&self, n: u64, payload: &mut [u8]) {
+        if let Some(tag) = payload.first_mut() {
+            let bit = splitmix64(self.seed ^ n.wrapping_mul(0x9e3779b97f4a7c15)) % 4;
+            *tag ^= 0x10 << bit;
+        }
+    }
+
+    /// Apply this plan's action for the `n`-th frame while writing one
+    /// length-prefixed frame to `w`. This is the whole injection
+    /// surface: [`wire::write_frame`](crate::async_rt::wire::write_frame)
+    /// delegates here when a plan is active, and the property harness
+    /// drives it directly against in-memory buffers.
+    pub fn write_frame_at(&self, w: &mut impl Write, payload: &[u8], n: u64) -> std::io::Result<()> {
+        let frame_once = |w: &mut dyn Write, body: &[u8]| -> std::io::Result<()> {
+            w.write_all(&(body.len() as u32).to_le_bytes())?;
+            w.write_all(body)
+        };
+        match self.frame_action(n) {
+            FrameAction::Send => frame_once(w, payload),
+            FrameAction::Corrupt => {
+                let mut bad = payload.to_vec();
+                self.corrupt_payload(n, &mut bad);
+                frame_once(w, &bad)
+            }
+            FrameAction::Drop => Err(std::io::Error::new(
+                std::io::ErrorKind::BrokenPipe,
+                format!("fault injection: dropped outbound frame {n}"),
+            )),
+            FrameAction::Dup => {
+                frame_once(w, payload)?;
+                frame_once(w, payload)
+            }
+            FrameAction::Delay(ms) => {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+                frame_once(w, payload)
+            }
+        }
+    }
+}
+
+/// The plan installed by the CLI (`--fault-plan`), if any.
+static INSTALLED: OnceLock<FaultPlan> = OnceLock::new();
+/// The plan parsed from `PAO_FED_FAULT_PLAN`, if any. Evaluated lazily,
+/// once; a malformed value aborts the process loudly rather than
+/// silently running fault-free.
+static FROM_ENV: OnceLock<Option<FaultPlan>> = OnceLock::new();
+/// Outbound frames written by this process (1-based after increment).
+static FRAMES: AtomicU64 = AtomicU64::new(0);
+/// Outbound connect attempts made by this process.
+static CONNECTS: AtomicU64 = AtomicU64::new(0);
+
+/// Install a plan process-wide (the `--fault-plan` entry point). Errors
+/// if a plan is already installed.
+pub fn install(plan: FaultPlan) -> Result<()> {
+    INSTALLED
+        .set(plan)
+        .map_err(|_| Error::Config("a fault plan is already installed".into()))
+}
+
+/// The active plan: an installed one wins, else `PAO_FED_FAULT_PLAN`.
+/// Returns `None` (after one cheap static lookup) in the common
+/// fault-free case.
+pub fn active() -> Option<&'static FaultPlan> {
+    if let Some(p) = INSTALLED.get() {
+        return Some(p);
+    }
+    FROM_ENV
+        .get_or_init(|| match std::env::var("PAO_FED_FAULT_PLAN") {
+            Ok(text) if !text.is_empty() => match FaultPlan::parse(&text) {
+                Ok(plan) => Some(plan),
+                Err(e) => {
+                    eprintln!("PAO_FED_FAULT_PLAN: {e}");
+                    std::process::exit(2);
+                }
+            },
+            _ => None,
+        })
+        .as_ref()
+}
+
+/// The per-process outbound-frame hook behind [`active`]: counts the
+/// frame and applies the plan's action for it.
+pub fn write_frame_hook(
+    plan: &FaultPlan,
+    w: &mut impl Write,
+    payload: &[u8],
+) -> std::io::Result<()> {
+    let n = FRAMES.fetch_add(1, Ordering::Relaxed) + 1;
+    plan.write_frame_at(w, payload, n)
+}
+
+/// The tick this process should die at: the active plan's `kill:tick`
+/// merged with the legacy `PAO_FED_CRASH_AT_TICK` alias (plan wins).
+pub fn kill_tick() -> Option<usize> {
+    static ALIAS: OnceLock<Option<usize>> = OnceLock::new();
+    let alias = *ALIAS.get_or_init(|| {
+        std::env::var("PAO_FED_CRASH_AT_TICK")
+            .ok()
+            .and_then(|v| v.parse().ok())
+    });
+    active().and_then(|p| p.kill_tick).or(alias)
+}
+
+/// The worker/relay crash hook: exit(3) if the plan kills this tick.
+/// `role` names the process kind in the death notice.
+pub fn check_kill(iter: usize, role: &str) {
+    if kill_tick() == Some(iter) {
+        eprintln!("{role}: injected crash at tick {iter}");
+        std::process::exit(3);
+    }
+}
+
+/// Should this connect attempt be refused? Consumes one attempt from
+/// the plan's `refuse:connects` budget.
+pub fn refuse_connect() -> bool {
+    match active() {
+        Some(plan) if plan.refuse_connects > 0 => {
+            CONNECTS.fetch_add(1, Ordering::Relaxed) < plan.refuse_connects
+        }
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_grammar() {
+        let p = FaultPlan::parse(
+            "seed=7; kill:tick=50; corrupt:frame=9; drop:frame=12; \
+             dup:frame=15; delay:frame=20,ms=40; delay:frame=21; refuse:connects=2",
+        )
+        .unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.kill_tick, Some(50));
+        assert_eq!(p.corrupt_frames, vec![9]);
+        assert_eq!(p.drop_frames, vec![12]);
+        assert_eq!(p.dup_frames, vec![15]);
+        assert_eq!(p.delay_frames, vec![(20, 40), (21, 50)]);
+        assert_eq!(p.refuse_connects, 2);
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::default());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_clauses() {
+        for bad in [
+            "frob:frame=1",
+            "corrupt:frame",
+            "corrupt:frame=x",
+            "delay:frame=1,ms=2,extra=3",
+            "seed",
+            "kill:tick=-1",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "`{bad}` must be rejected");
+        }
+    }
+
+    #[test]
+    fn precedence_drop_over_everything() {
+        let p = FaultPlan::parse("drop:frame=5;corrupt:frame=5;dup:frame=5;delay:frame=5").unwrap();
+        assert_eq!(p.frame_action(5), FrameAction::Drop);
+        assert_eq!(p.frame_action(4), FrameAction::Send);
+    }
+
+    #[test]
+    fn corruption_always_yields_an_invalid_tag() {
+        let p = FaultPlan { seed: 0xfeed, ..FaultPlan::default() };
+        for n in 1..64u64 {
+            for tag in 0u8..16 {
+                let mut payload = vec![tag, 1, 2, 3];
+                p.corrupt_payload(n, &mut payload);
+                assert!(payload[0] >= 16, "frame {n} tag {tag}: still valid");
+                assert_eq!(&payload[1..], &[1, 2, 3], "only the tag byte may change");
+            }
+        }
+    }
+
+    #[test]
+    fn dropped_frame_breaks_the_pipe() {
+        let p = FaultPlan::parse("drop:frame=2").unwrap();
+        let mut buf = Vec::new();
+        p.write_frame_at(&mut buf, &[9, 9], 1).unwrap();
+        let err = p.write_frame_at(&mut buf, &[9, 9], 2).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::BrokenPipe);
+        // Frame 1 landed intact; frame 2 never did.
+        assert_eq!(buf, [2, 0, 0, 0, 9, 9]);
+    }
+
+    #[test]
+    fn duplicated_frame_is_written_twice() {
+        let p = FaultPlan::parse("dup:frame=1").unwrap();
+        let mut buf = Vec::new();
+        p.write_frame_at(&mut buf, &[7], 1).unwrap();
+        assert_eq!(buf, [1, 0, 0, 0, 7, 1, 0, 0, 0, 7]);
+    }
+}

@@ -63,7 +63,18 @@
 //! assignment bytes stay flat in K; any tree shape reproduces the flat
 //! fleet and the in-process run bit for bit because the shared
 //! [`transport::AckSource`] sorts acks by client id either way.
+//!
+//! The fleet is chaos-hardened: a deterministic [`fault`] plan
+//! (`--fault-plan` / `PAO_FED_FAULT_PLAN`) injects drops, duplications,
+//! delays, corruption, connect refusals and tick-scheduled kills at the
+//! frame boundary; every outbound hop retries transient connect
+//! failures on a capped, jitter-free backoff schedule; and recovery
+//! handshakes open with a digest exchange ([`wire::WireMsg::Digest`] /
+//! [`wire::WireMsg::DigestDelta`]) so a reconnecting worker that kept
+//! its shard state receives a near-empty resume plan instead of the
+//! full replay bundle — with the same bit-identity contract throughout.
 
+pub mod fault;
 mod protocol;
 pub mod transport;
 pub mod wire;

@@ -96,6 +96,10 @@ pub struct DeploymentReport {
     pub recovered_workers: u64,
     /// Tick this run resumed from (`None` = started fresh).
     pub resumed_at: Option<usize>,
+    /// Audit-trail discontinuity found at resume time (`None` = the
+    /// journal is clean). A gapped resume still runs — the structured
+    /// event lets operators tell it apart from a clean one.
+    pub journal_gap: Option<journal::JournalGap>,
 }
 
 fn validate(cfg: &DeploymentConfig) -> Result<()> {
@@ -332,6 +336,7 @@ fn serve_loop<T: Transport>(
         Some(p) => Some(curve_path_for(&p.path)?),
         None => None,
     };
+    let mut journal_gap = None;
     let mut journal = match &cfg.persist {
         Some(p) => {
             let meta = snapshot::fingerprint(
@@ -343,11 +348,13 @@ fn serve_loop<T: Transport>(
                 algo,
                 delay,
             );
-            Some(journal::for_run(
+            let (j, gap) = journal::for_run_reporting(
                 &crate::persist::journal_path_for(&p.path)?,
                 meta,
                 start,
-            )?)
+            )?;
+            journal_gap = gap;
+            Some(j)
         }
         None => None,
     };
@@ -492,6 +499,7 @@ fn serve_loop<T: Transport>(
         n_workers: 0,
         recovered_workers: transport.recovered_workers(),
         resumed_at: resume.map(|s| s.tick),
+        journal_gap,
     })
 }
 
@@ -536,6 +544,7 @@ mod tests {
         assert_eq!(report.n_workers, 0);
         assert_eq!(report.recovered_workers, 0);
         assert_eq!(report.resumed_at, None);
+        assert_eq!(report.journal_gap, None);
         let first = report.mse_db[0];
         let last = *report.mse_db.last().unwrap();
         assert!(last < first - 5.0, "no learning: {first} -> {last}");

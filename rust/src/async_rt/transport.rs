@@ -25,6 +25,25 @@
 //! `rust/tests/multiprocess.rs`). [`Transport::dump_states`] is the
 //! checkpoint hook: it captures every client's local model at a tick
 //! boundary (and prunes the replay log to that boundary).
+//!
+//! **Anti-entropy recovery.** A recovery handshake opens with a digest
+//! exchange ([`wire::WireMsg::Digest`] / [`wire::WireMsg::DigestDelta`]):
+//! the supervisor advertises FNV-1a-64 digests of the plan it *would*
+//! ship ([`state_digest`] per base-state row, [`log_bucket_digests`] per
+//! [`DIGEST_BUCKET_TICKS`]-tick slice of the model log), and the peer
+//! answers with what it actually lacks. A worker that kept its live
+//! shard state across a reconnect ([`run_worker_with`]'s retry loop)
+//! needs nothing and receives a near-empty plan — recovery bytes drop
+//! from O(shard + log) to O(digests) — while a fresh replacement answers
+//! `need_all` and gets the full replay bundle, bit-identical either way.
+//! Every fleet hop also retries transient connect failures on the
+//! bounded, jitter-free backoff schedule of [`connect_with_retry`], and
+//! the deterministic fault plans of [`crate::async_rt::fault`] (worker /
+//! relay kills, dropped / duplicated / corrupted frames) are absorbed by
+//! the same recovery paths: duplicated `AckBatch` frames are discarded
+//! by their tick stamp, corrupted frames surface as [`Error::Protocol`]
+//! and trigger adoption, and the final curve stays bit-identical to the
+//! fault-free run.
 
 use super::wire::{self, ClientShard, ResumePlan, SubtreeAssignment, WireMsg, WorkerAssignment};
 use crate::data::stream::{FedStream, StreamSpec};
@@ -364,9 +383,14 @@ impl Transport for ChannelTransport {
 
 // ------------------------------------------------------------ TCP fleet
 
-/// Everything a worker connection sends upstream.
+/// Everything a worker connection sends upstream. Acks carry the
+/// optional tick stamp of the batch frame that delivered them: the
+/// supervisor discards stamped acks for a tick other than the in-flight
+/// one — how a fault-duplicated `AckBatch` that straddles a tick
+/// boundary is rejected instead of misfiling its acks (unstamped acks,
+/// from legacy frames, are accepted as before).
 enum Uplink {
-    Ack(Ack),
+    Ack(Ack, Option<usize>),
     State(usize, Vec<Vec<f32>>),
 }
 
@@ -392,11 +416,184 @@ struct WorkerLink {
     compress: bool,
 }
 
+/// Integer square root (largest `r` with `r * r <= n`), Newton's method.
+/// Hand-rolled because the crate's MSRV predates `usize::isqrt`.
+fn isqrt(n: usize) -> usize {
+    if n < 2 {
+        return n;
+    }
+    let mut x = n;
+    let mut y = n.div_ceil(2);
+    while y < x {
+        x = y;
+        y = (x + n / x) / 2;
+    }
+    x
+}
+
 /// Replay-log bound: when a run goes this many ticks without a
 /// checkpoint state dump, the supervisor requests one itself (discarding
 /// the snapshot) purely to re-anchor the log — so an uncheckpointed
-/// multi-hour fleet holds at most this many per-tick model copies.
-const LOG_SELF_ANCHOR: usize = 1024;
+/// fleet holds a bounded number of per-tick model copies.
+///
+/// The interval adapts to the fleet size: an anchor costs one state dump
+/// (K rows over the wire, ~K·D bytes) while replay cost grows with the
+/// log length (anchor-interval ticks of D-float models shipped *and*
+/// re-executed), so the interval that balances the two grows as √K —
+/// `64·⌈√K⌉`, clamped to `[256, 16384]`. K = 256 reproduces the old
+/// fixed 1024-tick anchor. `PAO_FED_ANCHOR_TICKS=N` overrides the rule
+/// (the escape hatch for operators who know their checkpoint cadence).
+pub fn anchor_rule(k: usize) -> usize {
+    (64 * isqrt(k)).clamp(256, 16384)
+}
+
+/// [`anchor_rule`] with the `PAO_FED_ANCHOR_TICKS` override applied;
+/// `override_var` is the raw env value (separated from `std::env` so the
+/// unit test pins the parse without mutating process state). Malformed
+/// or zero overrides fall back to the rule — an anchor interval of 0
+/// would dump state every tick.
+pub fn anchor_ticks(k: usize, override_var: Option<&str>) -> usize {
+    override_var
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| anchor_rule(k))
+}
+
+// ----------------------------------------------------------- anti-entropy
+
+/// Ticks per replay-log digest bucket in the anti-entropy exchange: the
+/// granularity at which a recovering peer can request missing history.
+/// 64 ticks of a D-float model digest down to one u64, a ~256·D/8 : 1
+/// reduction over shipping the bucket.
+pub const DIGEST_BUCKET_TICKS: usize = 64;
+
+/// FNV-1a-64 over a model row's IEEE-754 little-endian bytes — the same
+/// hash (and byte order) as the persist layer's checksums, so a digest
+/// match means the bytes that *would* have been shipped are identical.
+pub fn state_digest(w: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for v in w {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Digest the replay log in `bucket_ticks`-tick buckets: entry `b`
+/// hashes the concatenation of log rows `b*bucket_ticks ..
+/// min((b+1)*bucket_ticks, len)` (the final bucket may be short). An
+/// empty log digests to no buckets.
+pub fn log_bucket_digests(log: &[Vec<f32>], bucket_ticks: usize) -> Vec<u64> {
+    log.chunks(bucket_ticks)
+        .map(|bucket| {
+            let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+            for row in bucket {
+                for v in row {
+                    for b in v.to_le_bytes() {
+                        h ^= b as u64;
+                        h = h.wrapping_mul(0x100_0000_01b3);
+                    }
+                }
+            }
+            h
+        })
+        .collect()
+}
+
+/// Pure diff for the anti-entropy reply: compare the digests a peer
+/// holds locally against the supervisor's advertisement and name what to
+/// request — state-row indices and log-bucket indices whose digests
+/// disagree (or that the local side lacks entirely). A length mismatch
+/// on the state axis means the shard geometry changed, which no partial
+/// request can bridge: the first return value is `need_all`.
+pub fn diff_digests(
+    local_states: &[u64],
+    local_log: &[u64],
+    advertised_states: &[u64],
+    advertised_log: &[u64],
+) -> (bool, Vec<usize>, Vec<usize>) {
+    if local_states.len() != advertised_states.len() {
+        return (true, Vec::new(), Vec::new());
+    }
+    let need_states = advertised_states
+        .iter()
+        .enumerate()
+        .filter(|&(i, &d)| local_states[i] != d)
+        .map(|(i, _)| i)
+        .collect();
+    let need_log = advertised_log
+        .iter()
+        .enumerate()
+        .filter(|&(b, &d)| local_log.get(b) != Some(&d))
+        .map(|(b, _)| b)
+        .collect();
+    (false, need_states, need_log)
+}
+
+/// Assemble the partial resume plan answering a digest delta: requested
+/// state rows are shipped in place (unrequested rows travel as empty
+/// vectors — positional, so the receiver knows which is which) and the
+/// log carries only the requested buckets, concatenated in ascending
+/// bucket order. The live supervisor's recovery paths are binary
+/// (need-nothing or need-all, see [`TcpFleet`]); the partial shape is
+/// exercised by the unit tests and measured by `benches/recovery.rs`.
+pub fn partial_plan(
+    base_tick: usize,
+    states: &[Vec<f32>],
+    log: &[Vec<f32>],
+    bucket_ticks: usize,
+    need_states: &[usize],
+    need_log_buckets: &[usize],
+) -> ResumePlan {
+    let mut rows = vec![Vec::new(); states.len()];
+    for &i in need_states {
+        if let Some(w) = states.get(i) {
+            rows[i] = w.clone();
+        }
+    }
+    let mut partial_log = Vec::new();
+    for &b in need_log_buckets {
+        let lo = b * bucket_ticks;
+        let hi = ((b + 1) * bucket_ticks).min(log.len());
+        if lo < hi {
+            partial_log.extend(log[lo..hi].iter().cloned());
+        }
+    }
+    ResumePlan { base_tick, states: rows, log: partial_log }
+}
+
+/// Bounded, deterministic connect retry used on every fleet hop (worker
+/// and relay initial connects, worker reconnects): capped exponential
+/// backoff with no jitter — the schedule is a pure constant, so two runs
+/// of the same fault plan retry identically. Transient refusals (a
+/// supervisor between `recover_worker` and its accept, an injected
+/// [`fault::FaultPlan::refuse_connects`]) are absorbed; the last error
+/// surfaces once the schedule is exhausted.
+///
+/// [`fault::FaultPlan::refuse_connects`]: crate::async_rt::fault::FaultPlan
+pub fn connect_with_retry(addr: &str) -> Result<TcpStream> {
+    const BACKOFF_MS: [u64; 7] = [0, 25, 50, 100, 200, 400, 800];
+    let mut last: Option<Error> = None;
+    for ms in BACKOFF_MS {
+        if ms > 0 {
+            thread::sleep(Duration::from_millis(ms));
+        }
+        if crate::async_rt::fault::refuse_connect() {
+            last = Some(Error::Io(std::io::Error::new(
+                std::io::ErrorKind::ConnectionRefused,
+                "fault injection: connect refused",
+            )));
+            continue;
+        }
+        match TcpStream::connect(addr) {
+            Ok(sock) => return Ok(sock),
+            Err(e) => last = Some(e.into()),
+        }
+    }
+    Err(last.expect("backoff schedule is non-empty"))
+}
 
 /// Per-process entropy for the handshake tokens: the OS-seeded keys of a
 /// [`std::collections::hash_map::RandomState`] (fresh per instance) mixed
@@ -568,6 +765,8 @@ pub struct TcpFleet<'e> {
     log: Vec<Vec<f32>>,
     /// Client states at `log_base` (`None` = zeros, a fresh run).
     base_states: Option<Vec<Vec<f32>>>,
+    /// Self-anchor interval for the replay log ([`anchor_ticks`]).
+    anchor: usize,
     recovered: u64,
 }
 
@@ -720,6 +919,7 @@ impl<'e> TcpFleet<'e> {
             log_base,
             log: Vec::new(),
             base_states,
+            anchor: anchor_ticks(k, std::env::var("PAO_FED_ANCHOR_TICKS").ok().as_deref()),
             recovered: 0,
         };
         for i in 0..n_children {
@@ -730,7 +930,7 @@ impl<'e> TcpFleet<'e> {
                 states: states[lo..hi].to_vec(),
                 log: Vec::new(),
             });
-            let link = fleet.handshake_link(i, sock, plan)?;
+            let link = fleet.handshake_link(i, sock, plan, false)?;
             fleet.links.push(link);
         }
         Ok(fleet)
@@ -742,12 +942,18 @@ impl<'e> TcpFleet<'e> {
     /// materialized `Hello` otherwise — carrying `plan`, verify the
     /// `HelloAck` (including the shared-secret proof when one is set),
     /// and spawn the reader pump. Shared by the initial accept loop and
-    /// supervisor adoption.
+    /// supervisor adoption. `lean` (only ever set by the anti-entropy
+    /// fast path, after the peer answered "need nothing") strips the
+    /// materialized shard data from a flat `Hello` — the reconnecting
+    /// worker keeps its own copy, so re-shipping it would be the bulk of
+    /// the bytes the digest exchange exists to save; a generative
+    /// assignment is already shard-free.
     fn handshake_link(
         &mut self,
         i: usize,
         sock: TcpStream,
         plan: Option<ResumePlan>,
+        lean: bool,
     ) -> Result<WorkerLink> {
         sock.set_nodelay(true)?;
         let peer = sock
@@ -781,6 +987,25 @@ impl<'e> TcpFleet<'e> {
                 challenge,
                 hello_tag: wire::hello_tag(&self.wire_cfg.secret, challenge, self.session, lo),
             })
+        } else if lean {
+            let mut a = make_assignment(
+                self.stream,
+                self.rff,
+                &self.algo,
+                self.env_seed,
+                self.session,
+                &self.avail_probs,
+                lo,
+                lo, // empty range: no shards extracted
+                plan,
+                &self.wire_cfg,
+                challenge,
+            );
+            a.client_hi = hi;
+            a.clients = (lo..hi)
+                .map(|_| ClientShard { present: vec![], xs: vec![], ys: vec![] })
+                .collect();
+            WireMsg::Hello(a)
         } else {
             WireMsg::Hello(make_assignment(
                 self.stream,
@@ -875,6 +1100,13 @@ impl<'e> TcpFleet<'e> {
     /// abort naming the lost shard instead of a hang).
     fn recover_worker(&mut self, i: usize, resume_tick: usize) -> Result<()> {
         self.recovered += 1;
+        // Close the old socket *before* waiting for a replacement: a
+        // worker whose connection the supervisor abandoned (a corrupt
+        // uplink frame, say) may be blocked reading the next downlink —
+        // only the EOF from this shutdown tells it to reconnect, and its
+        // reconnect is the replacement we are about to accept. Also
+        // unblocks our own reader thread so the join cannot hang.
+        let _ = self.links[i].writer.get_ref().shutdown(std::net::Shutdown::Both);
         if let Some(h) = self.links[i].reader.take() {
             let _ = h.join();
         }
@@ -950,20 +1182,73 @@ impl<'e> TcpFleet<'e> {
         Ok(sock)
     }
 
-    /// One adoption attempt on a fresh connection.
+    /// One adoption attempt on a fresh connection. Unless the fleet
+    /// speaks the legacy handshake, it opens with the anti-entropy
+    /// exchange: advertise digests of the replay bundle, and ship the
+    /// full plan only when the peer actually needs it — a reconnecting
+    /// worker that kept its live shard state answers "need nothing" and
+    /// receives a near-empty plan plus a shard-data-free assignment.
     fn adopt(&mut self, i: usize, resume_tick: usize, sock: TcpStream) -> Result<()> {
         self.gens[i] += 1;
         let (lo, hi) = self.ranges[i];
-        let plan = ResumePlan {
-            base_tick: self.log_base,
-            states: self
+        let full_plan = |fleet: &Self| ResumePlan {
+            base_tick: fleet.log_base,
+            states: fleet
                 .base_states
                 .as_ref()
                 .map(|s| s[lo..hi].to_vec())
                 .unwrap_or_default(),
-            log: self.log[..resume_tick - self.log_base].to_vec(),
+            log: fleet.log[..resume_tick - fleet.log_base].to_vec(),
         };
-        let link = self.handshake_link(i, sock, Some(plan))?;
+        let (plan, lean) = if self.wire_cfg.legacy_hello {
+            // A pre-codec replacement cannot parse tag 14; skip straight
+            // to the full-replay handshake (the pre-digest behavior).
+            (full_plan(self), false)
+        } else {
+            // Unbuffered frames straight on the socket: the buffered
+            // reader/writer pair is built by `handshake_link` afterwards,
+            // and a buffered read here could strand pipelined bytes.
+            let n_log = resume_tick - self.log_base;
+            let digest = WireMsg::Digest {
+                session: self.session,
+                base_tick: self.log_base,
+                resume_tick,
+                client_lo: lo,
+                client_hi: hi,
+                bucket_ticks: DIGEST_BUCKET_TICKS,
+                state_digests: self
+                    .base_states
+                    .as_ref()
+                    .map(|s| s[lo..hi].iter().map(|w| state_digest(w)).collect())
+                    .unwrap_or_default(),
+                log_digests: log_bucket_digests(&self.log[..n_log], DIGEST_BUCKET_TICKS),
+            };
+            wire::send_msg(&mut &sock, &digest)?;
+            match wire::recv_msg(&mut &sock)? {
+                WireMsg::DigestDelta { session, need_all, need_states, need_log_buckets } => {
+                    if session != self.session {
+                        return Err(Error::Protocol(format!(
+                            "digest delta echoes session {session:#x}, not this run's"
+                        )));
+                    }
+                    // The live paths are binary: a peer that needs any
+                    // bucket gets the whole bundle (partial assembly is
+                    // a tested helper, not a fleet state — see
+                    // [`partial_plan`]).
+                    if !need_all && need_states.is_empty() && need_log_buckets.is_empty() {
+                        (ResumePlan { base_tick: resume_tick, states: vec![], log: vec![] }, true)
+                    } else {
+                        (full_plan(self), false)
+                    }
+                }
+                other => {
+                    return Err(Error::Protocol(format!(
+                        "replacement answered the digest with {other:?}"
+                    )))
+                }
+            }
+        };
+        let link = self.handshake_link(i, sock, Some(plan), lean)?;
         // Keep the old link's `sent` bookkeeping: the re-send below (and
         // a later same-tick recovery) still needs the in-flight items.
         self.links[i].writer = link.writer;
@@ -1001,28 +1286,30 @@ fn pump_acks(mut reader: BufReader<TcpStream>, tx: Sender<FleetEvent>, worker: u
         match wire::recv_msg(&mut reader) {
             Ok(WireMsg::Ack { client, upload, learned }) => {
                 let ack = Ack { client, upload, learned };
-                if tx.send((worker, gen, Ok(Uplink::Ack(ack)))).is_err() {
+                if tx.send((worker, gen, Ok(Uplink::Ack(ack, None)))).is_err() {
                     return;
                 }
             }
-            Ok(WireMsg::AckBatch { acks }) => {
+            Ok(WireMsg::AckBatch { acks, iter }) => {
                 // One frame per worker per tick; the server loop still
-                // consumes (and then sorts) individual acks.
+                // consumes (and then sorts) individual acks. The batch's
+                // tick stamp rides on each so the supervisor can discard
+                // a duplicated frame's acks.
                 for (client, upload, learned) in acks {
                     let ack = Ack { client, upload, learned };
-                    if tx.send((worker, gen, Ok(Uplink::Ack(ack)))).is_err() {
+                    if tx.send((worker, gen, Ok(Uplink::Ack(ack, iter)))).is_err() {
                         return;
                     }
                 }
             }
-            Ok(WireMsg::CombinedUpdate { acks, .. }) => {
+            Ok(WireMsg::CombinedUpdate { acks, iter }) => {
                 // A relay's partial fold: one frame for its whole subtree
                 // per tick. The items are per-client acks, so the root
                 // consumes them exactly like a worker's batch (they get
                 // re-sorted with everyone else's before aggregation).
                 for (client, upload, learned) in acks {
                     let ack = Ack { client, upload, learned };
-                    if tx.send((worker, gen, Ok(Uplink::Ack(ack)))).is_err() {
+                    if tx.send((worker, gen, Ok(Uplink::Ack(ack, Some(iter))))).is_err() {
                         return;
                     }
                 }
@@ -1056,7 +1343,7 @@ impl Transport for TcpFleet<'_> {
             iter,
             "replay log out of step with the tick clock"
         );
-        if self.log.len() >= LOG_SELF_ANCHOR {
+        if self.log.len() >= self.anchor {
             // Bound the log on uncheckpointed runs: capture the fleet's
             // client states (workers are idle at a tick boundary) and
             // re-anchor the replay base there. `dump_states` prunes.
@@ -1093,7 +1380,14 @@ impl Transport for TcpFleet<'_> {
                 continue; // straggler from a replaced connection
             }
             match ev {
-                Ok(Uplink::Ack(ack)) => {
+                Ok(Uplink::Ack(ack, stamp)) => {
+                    // A stamped ack for some other tick is the residue of
+                    // a duplicated batch frame that straddled a tick
+                    // boundary: discard it (the real acks of this tick
+                    // are still coming).
+                    if stamp.is_some_and(|it| it != self.pending_iter) {
+                        continue;
+                    }
                     // Never index with a wire-supplied id: a malformed ack
                     // is a protocol error, not a panic — and it must come
                     // from the worker that actually hosts the client.
@@ -1102,6 +1396,13 @@ impl Transport for TcpFleet<'_> {
                             "worker {wi} acked client {} outside its shard",
                             ack.client
                         )));
+                    }
+                    // A within-tick duplicate (a dup-injected frame, or a
+                    // recovered worker re-acking a client whose first ack
+                    // already landed) adds nothing: the first ack was
+                    // already consumed.
+                    if self.tick_acked[ack.client] {
+                        continue;
                     }
                     self.tick_acked[ack.client] = true;
                     return Ok(ack);
@@ -1176,10 +1477,18 @@ impl Transport for TcpFleet<'_> {
                     }
                     remaining -= 1;
                 }
-                Ok(Uplink::Ack(_)) => {
+                Ok(Uplink::Ack(_, stamp)) => {
+                    // Every real ack was consumed before the tick
+                    // completed, so a *stamped* ack here can only be the
+                    // residue of a duplicated batch frame straddling the
+                    // boundary: discard it. An unstamped ack has no such
+                    // explanation and stays a protocol violation.
+                    if stamp.is_some() {
+                        continue;
+                    }
                     return Err(Error::Protocol(
                         "unexpected ack at a checkpoint boundary".into(),
-                    ))
+                    ));
                 }
                 Err(e) => {
                     eprintln!("supervisor: worker {wi} lost during checkpoint: {e}");
@@ -1435,17 +1744,152 @@ pub fn run_worker(addr: &str) -> Result<WorkerReport> {
 /// layout — and refused outright when a secret is configured, since no
 /// challenge was issued.
 ///
-/// Test hook: `PAO_FED_CRASH_AT_TICK=N` makes the process exit abruptly
-/// (code 3, sockets unflushed) on the first downlink for iteration >= N —
-/// the deterministic "kill a worker mid-run" used by the supervisor
-/// recovery tests.
+/// **Self-healing:** the connect (initial and otherwise) runs on the
+/// bounded [`connect_with_retry`] schedule, and once a shard is hosted
+/// the worker survives a broken connection: it keeps its live client
+/// states, reconnects to the same address, and answers the supervisor's
+/// anti-entropy digest with "need nothing" — receiving a near-empty
+/// resume plan instead of the full replay bundle. A tick the worker
+/// already executed but whose acks were lost is answered from the ack
+/// cache rather than re-executed, which is what keeps the recovered
+/// curve bit-identical. After [`MAX_WORKER_RECONNECTS`] failed attempts
+/// the original error surfaces.
+///
+/// Test hooks: a [`crate::async_rt::fault`] plan (`--fault-plan` /
+/// `PAO_FED_FAULT_PLAN`, with `PAO_FED_CRASH_AT_TICK=N` kept as an
+/// alias for `kill:tick=N`) injects deterministic kills and frame
+/// faults — the chaos harness of the supervisor recovery tests.
 pub fn run_worker_with(addr: &str, opts: &WorkerOptions) -> Result<WorkerReport> {
-    let sock = TcpStream::connect(addr)?;
-    sock.set_nodelay(true)?;
-    let mut reader = BufReader::new(sock.try_clone()?);
-    let mut writer = BufWriter::new(sock);
+    let mut cache: Option<WorkerCache> = None;
+    let mut reconnects = 0u32;
+    loop {
+        let sock = connect_with_retry(addr)?;
+        match worker_session(sock, opts, &mut cache) {
+            Ok(report) => return Ok(report),
+            Err(e) => {
+                if cache.is_none() || reconnects >= MAX_WORKER_RECONNECTS {
+                    return Err(e);
+                }
+                reconnects += 1;
+                eprintln!(
+                    "worker: connection lost ({e}); reconnecting \
+                     ({reconnects}/{MAX_WORKER_RECONNECTS})"
+                );
+            }
+        }
+    }
+}
 
-    let (assignment, from_tree) = match wire::recv_msg(&mut reader)? {
+/// Reconnect budget for a worker that already hosts a shard: enough to
+/// ride out several injected faults or supervisor restarts, small enough
+/// that a genuinely rejected worker (wrong secret after a server
+/// restart, a desynced shard) fails loudly instead of looping.
+pub const MAX_WORKER_RECONNECTS: u32 = 5;
+
+/// Live shard state a worker retains across reconnects: everything the
+/// serve loop mutates, so a replacement connection whose digest exchange
+/// confirms the cache resumes serving without any replay bundle.
+struct WorkerCache {
+    assignment: WorkerAssignment,
+    schedule: SelectionSchedule,
+    states: Vec<ClientState>,
+    /// Next federation iteration this shard expects (batch frames).
+    next_iter: usize,
+    /// The last served batch's tick and ack items: a re-sent tick (lost
+    /// acks, or a fault-duplicated downlink) is answered with these
+    /// exact items — re-executing it would double-apply the local step.
+    last_acks: Option<(usize, Vec<(usize, Option<Update>, u32)>)>,
+    report: WorkerReport,
+}
+
+/// One connection's worth of the worker protocol: handshake (with the
+/// anti-entropy pre-phase when the server opens with a digest), then the
+/// serve loop. Returns only on clean shutdown; any error hands control
+/// back to [`run_worker_with`]'s reconnect loop.
+fn worker_session(
+    sock: TcpStream,
+    opts: &WorkerOptions,
+    cache: &mut Option<WorkerCache>,
+) -> Result<WorkerReport> {
+    sock.set_nodelay(true)?;
+    // A re-handshake must not hang on a half-open socket (the supervisor
+    // may not be in recovery at all): bound the reads until the link is
+    // live again, then clear — served ticks can be legitimately far
+    // apart.
+    if cache.is_some() {
+        sock.set_read_timeout(Some(Duration::from_secs(10)))?;
+    }
+    let mut reader = BufReader::new(sock.try_clone()?);
+    let mut writer = BufWriter::new(sock.try_clone()?);
+
+    let mut first = wire::recv_msg(&mut reader)?;
+    let mut fast = false;
+    if let WireMsg::Digest { session, resume_tick, client_lo, client_hi, .. } = first {
+        // Answer "need nothing" only when the cached live state provably
+        // covers the server's resume point: same session (hence run and
+        // replay schedule), same shard geometry, and a resume tick this
+        // cache has reached — equal (the interrupted tick was never
+        // served here) or one behind (it was served but the acks were
+        // lost; the re-sent downlink is answered from the ack cache).
+        // Anything else requests the full bundle.
+        let usable = cache.as_ref().is_some_and(|c| {
+            c.assignment.session == session
+                && c.assignment.client_lo == client_lo
+                && c.assignment.client_hi == client_hi
+                && (resume_tick == c.next_iter || resume_tick + 1 == c.next_iter)
+        });
+        wire::send_msg(
+            &mut writer,
+            &WireMsg::DigestDelta {
+                session,
+                need_all: !usable,
+                need_states: vec![],
+                need_log_buckets: vec![],
+            },
+        )?;
+        writer.flush()?;
+        fast = usable;
+        first = wire::recv_msg(&mut reader)?;
+    }
+    if fast {
+        let c = cache.as_mut().expect("fast path implies a cache");
+        // Lean handshake: the assignment is shard-data-free (this worker
+        // kept its copy); only the per-connection fields matter.
+        let (session, lo, challenge, hello_tag, offer) = match first {
+            WireMsg::Hello(a) => (a.session, a.client_lo, a.challenge, a.hello_tag, a.compress),
+            WireMsg::SubtreeAssignment(s) if s.fanout == 1 => {
+                (s.session, s.client_lo, s.challenge, s.hello_tag, s.compress)
+            }
+            other => {
+                return Err(Error::Protocol(format!(
+                    "expected a recovery assignment, got {other:?}"
+                )))
+            }
+        };
+        if session != c.assignment.session || lo != c.assignment.client_lo {
+            return Err(Error::Protocol(
+                "recovery assignment contradicts the digest the server just sent".into(),
+            ));
+        }
+        if !opts.secret.is_empty()
+            && hello_tag != wire::hello_tag(&opts.secret, challenge, session, lo)
+        {
+            return Err(Error::Protocol(
+                "server failed handshake authentication (bad shared-secret hello tag)".into(),
+            ));
+        }
+        let compress = offer && opts.allow_compress;
+        let proof = wire::ack_proof(&opts.secret, challenge, session, lo);
+        wire::send_msg(
+            &mut writer,
+            &WireMsg::HelloAck { client_lo: lo, session, compress, proof },
+        )?;
+        writer.flush()?;
+        sock.set_read_timeout(None)?;
+        return serve_worker(reader, writer, compress, c);
+    }
+
+    let (assignment, from_tree) = match first {
         WireMsg::Hello(a) => (a, false),
         WireMsg::SubtreeAssignment(sub) => (worker_assignment_from_subtree(sub)?, true),
         other => {
@@ -1534,35 +1978,48 @@ pub fn run_worker_with(addr: &str, opts: &WorkerOptions) -> Result<WorkerReport>
     wire::write_frame(&mut writer, &ack_payload)?;
     writer.flush()?;
 
-    let crash_at: Option<usize> = std::env::var("PAO_FED_CRASH_AT_TICK")
-        .ok()
-        .and_then(|v| v.parse().ok());
-    let crash_check = |iter: usize| {
-        if crash_at.is_some_and(|t| iter >= t) {
-            eprintln!(
-                "worker: PAO_FED_CRASH_AT_TICK={} hit at iter {iter}; dying",
-                crash_at.unwrap()
-            );
-            std::process::exit(3);
-        }
-    };
-
-    let mut report = WorkerReport {
+    let next_iter = assignment
+        .resume
+        .as_ref()
+        .map_or(0, |p| p.base_tick + p.log.len());
+    let report = WorkerReport {
         client_lo: lo,
         client_hi: hi,
         ticks: 0,
         local_steps: 0,
         replayed_ticks: replayed as u64,
     };
+    *cache = Some(WorkerCache {
+        assignment,
+        schedule,
+        states,
+        next_iter,
+        last_acks: None,
+        report,
+    });
+    sock.set_read_timeout(None)?;
+    serve_worker(reader, writer, compress, cache.as_mut().expect("just installed"))
+}
+
+/// The worker serve loop over an established link. All mutable shard
+/// state lives in `c`, so the loop survives its connection: on any error
+/// the caller may reconnect and re-enter with the same cache.
+fn serve_worker(
+    mut reader: BufReader<TcpStream>,
+    mut writer: BufWriter<TcpStream>,
+    compress: bool,
+    c: &mut WorkerCache,
+) -> Result<WorkerReport> {
+    let (lo, hi) = (c.assignment.client_lo, c.assignment.client_hi);
     loop {
         match wire::recv_msg(&mut reader)? {
             WireMsg::Tick { client, iter, portion } => {
-                crash_check(iter);
+                crate::async_rt::fault::check_kill(iter, "worker");
                 let (client, upload, learned) = serve_one(
-                    &assignment,
-                    &schedule,
-                    &mut states,
-                    &mut report,
+                    &c.assignment,
+                    &c.schedule,
+                    &mut c.states,
+                    &mut c.report,
                     client,
                     iter,
                     portion,
@@ -1576,33 +2033,67 @@ pub fn run_worker_with(addr: &str, opts: &WorkerOptions) -> Result<WorkerReport>
                 }
             }
             WireMsg::TickBatch { iter, ticks } => {
-                crash_check(iter);
+                crate::async_rt::fault::check_kill(iter, "worker");
+                if iter + 1 == c.next_iter {
+                    // A re-sent tick this shard already executed — a
+                    // recovery re-send after the acks were lost, or a
+                    // fault-duplicated downlink. Answer with the identical
+                    // cached acks; re-executing would double-apply the
+                    // local step and break bit-identity.
+                    let Some((cached_iter, acks)) = c.last_acks.clone() else {
+                        return Err(Error::Protocol(format!(
+                            "tick {iter} re-sent but no acks are cached"
+                        )));
+                    };
+                    wire::send_msg_c(
+                        &mut writer,
+                        &WireMsg::AckBatch { acks, iter: Some(cached_iter) },
+                        compress,
+                    )?;
+                    writer.flush()?;
+                    continue;
+                }
+                if iter != c.next_iter {
+                    return Err(Error::Protocol(format!(
+                        "tick {iter} arrived but this shard is at tick {}",
+                        c.next_iter
+                    )));
+                }
                 // The whole tick for this worker in one frame; answer
                 // with the whole tick's acks in one frame.
                 let mut acks = Vec::with_capacity(ticks.len());
                 for (client, portion) in ticks {
                     acks.push(serve_one(
-                        &assignment,
-                        &schedule,
-                        &mut states,
-                        &mut report,
+                        &c.assignment,
+                        &c.schedule,
+                        &mut c.states,
+                        &mut c.report,
                         client,
                         iter,
                         portion,
                     )?);
                 }
-                wire::send_msg_c(&mut writer, &WireMsg::AckBatch { acks }, compress)?;
+                // Cache before sending: a send that dies mid-frame must
+                // still find these acks when the tick is re-sent on a
+                // replacement connection.
+                c.last_acks = Some((iter, acks.clone()));
+                c.next_iter = iter + 1;
+                wire::send_msg_c(
+                    &mut writer,
+                    &WireMsg::AckBatch { acks, iter: Some(iter) },
+                    compress,
+                )?;
                 writer.flush()?;
             }
             WireMsg::StateRequest => {
-                let dump: Vec<Vec<f32>> = states.iter().map(|s| s.w.clone()).collect();
+                let dump: Vec<Vec<f32>> = c.states.iter().map(|s| s.w.clone()).collect();
                 wire::send_msg(
                     &mut writer,
                     &WireMsg::StateDump { client_lo: lo, states: dump },
                 )?;
                 writer.flush()?;
             }
-            WireMsg::Shutdown => break,
+            WireMsg::Shutdown => return Ok(c.report),
             other => {
                 return Err(Error::Protocol(format!(
                     "unexpected downlink message {other:?}"
@@ -1610,7 +2101,6 @@ pub fn run_worker_with(addr: &str, opts: &WorkerOptions) -> Result<WorkerReport>
             }
         }
     }
-    Ok(report)
 }
 
 /// Process one client's downlink on a worker: validate it against the
@@ -1857,12 +2347,23 @@ impl Transport for RelayNode {
                     "every child answered but acks are still owed".into(),
                 ));
             };
-            let acks = match wire::recv_msg(&mut self.children[ci].reader)? {
-                WireMsg::AckBatch { acks } => acks,
-                other => {
-                    return Err(Error::Protocol(format!(
-                        "relay child {ci} answered the tick with {other:?}"
-                    )))
+            let acks = loop {
+                match wire::recv_msg(&mut self.children[ci].reader)? {
+                    WireMsg::AckBatch { acks, iter } => {
+                        // A stale stamp marks a duplicated or re-sent
+                        // batch from an earlier tick (fault injection, a
+                        // child answering a re-send twice): discard it
+                        // and read on for the current tick's answer.
+                        if iter.is_some_and(|it| it != self.pending_iter) {
+                            continue;
+                        }
+                        break acks;
+                    }
+                    other => {
+                        return Err(Error::Protocol(format!(
+                            "relay child {ci} answered the tick with {other:?}"
+                        )))
+                    }
                 }
             };
             if acks.len() != n_items {
@@ -1929,16 +2430,36 @@ impl Transport for RelayNode {
 /// to the children and reassemble into one range-ordered dump; a lost
 /// child fails the relay and the root recovers the subtree whole.
 ///
-/// Honors the same `PAO_FED_CRASH_AT_TICK` test hook as a worker (exit
-/// code 3 on the first downlink at or past the given iteration) so
-/// supervisor tests can kill an inner tree node deterministically.
+/// Honors the same [`crate::async_rt::fault`] kill hook as a worker
+/// (`kill:tick=N` in a fault plan, `PAO_FED_CRASH_AT_TICK` as the alias:
+/// exit code 3 on the first downlink at or past the given iteration) so
+/// supervisor tests can kill an inner tree node deterministically. The
+/// upstream connect runs on the bounded [`connect_with_retry`] schedule;
+/// if the parent opens with an anti-entropy [`wire::WireMsg::Digest`]
+/// (this relay replaces a lost subtree), the relay answers "need all" —
+/// relays are stateless and subtrees recover as a unit, so there is
+/// never a cache to reconcile against.
 pub fn run_relay(addr: &str, listener: &TcpListener, opts: &WorkerOptions) -> Result<RelayReport> {
-    let sock = TcpStream::connect(addr)?;
+    let sock = connect_with_retry(addr)?;
     sock.set_nodelay(true)?;
     let mut reader = BufReader::new(sock.try_clone()?);
     let mut writer = BufWriter::new(sock);
 
-    let sub = match wire::recv_msg(&mut reader)? {
+    let mut first = wire::recv_msg(&mut reader)?;
+    if let WireMsg::Digest { session, .. } = first {
+        wire::send_msg(
+            &mut writer,
+            &WireMsg::DigestDelta {
+                session,
+                need_all: true,
+                need_states: vec![],
+                need_log_buckets: vec![],
+            },
+        )?;
+        writer.flush()?;
+        first = wire::recv_msg(&mut reader)?;
+    }
+    let sub = match first {
         WireMsg::SubtreeAssignment(s) => s,
         WireMsg::Hello(_) => {
             return Err(Error::Protocol(
@@ -1980,17 +2501,32 @@ pub fn run_relay(addr: &str, listener: &TcpListener, opts: &WorkerOptions) -> Re
     )?;
     writer.flush()?;
 
-    let crash_at: Option<usize> = std::env::var("PAO_FED_CRASH_AT_TICK")
-        .ok()
-        .and_then(|v| v.parse().ok());
     let mut report =
         RelayReport { client_lo: lo, client_hi: hi, workers: sub.fanout, ticks: 0 };
+    // Duplicate-downlink guard, mirroring the worker's ack cache: a
+    // re-sent tick (fault-duplicated frame) is answered with the cached
+    // combined update instead of re-driving the children.
+    let mut next_iter: Option<usize> = None;
+    let mut last_combined: Option<WireMsg> = None;
     loop {
         match wire::recv_msg(&mut reader)? {
             WireMsg::TickBatch { iter, ticks } => {
-                if crash_at.is_some_and(|t| iter >= t) {
-                    eprintln!("relay: PAO_FED_CRASH_AT_TICK hit at iter {iter}; dying");
-                    std::process::exit(3);
+                crate::async_rt::fault::check_kill(iter, "relay");
+                if next_iter == Some(iter + 1) {
+                    let Some(cached) = &last_combined else {
+                        return Err(Error::Protocol(format!(
+                            "tick {iter} re-sent but no combined update is cached"
+                        )));
+                    };
+                    wire::send_msg_c(&mut writer, cached, compress_up)?;
+                    writer.flush()?;
+                    continue;
+                }
+                if next_iter.is_some_and(|n| iter != n) {
+                    return Err(Error::Protocol(format!(
+                        "tick {iter} arrived but this subtree expects tick {}",
+                        next_iter.unwrap_or(0)
+                    )));
                 }
                 let n_items = ticks.len();
                 node.begin_tick(iter, &[])?;
@@ -2006,8 +2542,11 @@ pub fn run_relay(addr: &str, listener: &TcpListener, opts: &WorkerOptions) -> Re
                     .into_iter()
                     .map(|a| (a.client, a.upload, a.learned))
                     .collect();
-                wire::send_msg_c(&mut writer, &WireMsg::CombinedUpdate { iter, acks }, compress_up)?;
+                let combined = WireMsg::CombinedUpdate { iter, acks };
+                wire::send_msg_c(&mut writer, &combined, compress_up)?;
                 writer.flush()?;
+                last_combined = Some(combined);
+                next_iter = Some(iter + 1);
                 report.ticks += 1;
             }
             WireMsg::StateRequest => {
@@ -2278,5 +2817,100 @@ mod tests {
         let mut sub = sample_subtree(1, w, k, n);
         sub.avail = AvailSpec::Explicit(vec![0.5; k - 1]);
         assert!(worker_assignment_from_subtree(sub).is_err(), "short availability vector");
+    }
+
+    /// Pins the adaptive anchor rule: `64·⌈√K⌉` clamped to `[256,
+    /// 16384]`, reproducing the historical fixed 1024-tick anchor at
+    /// K = 256, and pins the `PAO_FED_ANCHOR_TICKS` override parse.
+    #[test]
+    fn anchor_interval_adapts_to_fleet_size() {
+        assert_eq!(anchor_rule(256), 1024, "K=256 must reproduce the old constant");
+        assert_eq!(anchor_rule(10), 256, "small fleets clamp at the floor");
+        assert_eq!(anchor_rule(0), 256);
+        assert_eq!(anchor_rule(4096), 4096, "64 * isqrt(4096)");
+        assert_eq!(anchor_rule(1 << 20), 16384, "huge fleets clamp at the ceiling");
+        // Monotone non-decreasing in K across a sweep.
+        let mut prev = 0;
+        for k in [0, 1, 4, 16, 100, 256, 1000, 4096, 100_000] {
+            let a = anchor_rule(k);
+            assert!(a >= prev, "anchor_rule({k}) regressed");
+            prev = a;
+        }
+        // Override parse: valid values win, junk and zero fall back.
+        assert_eq!(anchor_ticks(256, Some("512")), 512);
+        assert_eq!(anchor_ticks(256, Some(" 64 ")), 64, "whitespace tolerated");
+        assert_eq!(anchor_ticks(256, Some("junk")), 1024);
+        assert_eq!(anchor_ticks(256, Some("0")), 1024, "zero would anchor every tick");
+        assert_eq!(anchor_ticks(256, None), 1024);
+    }
+
+    /// The digest helpers: sensitivity of the FNV row hash, bucket
+    /// boundaries (incl. a short tail bucket), and the diff rules the
+    /// anti-entropy reply is built from.
+    #[test]
+    fn digest_helpers_detect_exact_divergence() {
+        let mut rng = Pcg32::derive(11, &[0xd1]);
+        let row = |rng: &mut Pcg32, d: usize| -> Vec<f32> {
+            (0..d).map(|_| rng.uniform() as f32 - 0.5).collect()
+        };
+        let a = row(&mut rng, 16);
+        assert_eq!(state_digest(&a), state_digest(&a), "digest is a pure function");
+        let mut b = a.clone();
+        b[7] = f32::from_bits(b[7].to_bits() ^ 1);
+        assert_ne!(state_digest(&a), state_digest(&b), "one flipped mantissa bit shows");
+        assert_ne!(state_digest(&[]), state_digest(&[0.0]), "length matters");
+
+        // Bucketing: 2.5 buckets of 2 rows -> 3 digests, and each bucket
+        // digest equals hashing that bucket's rows alone.
+        let log: Vec<Vec<f32>> = (0..5).map(|_| row(&mut rng, 8)).collect();
+        let buckets = log_bucket_digests(&log, 2);
+        assert_eq!(buckets.len(), 3);
+        assert_eq!(buckets[0], log_bucket_digests(&log[0..2], 2)[0]);
+        assert_eq!(buckets[2], log_bucket_digests(&log[4..5], 2)[0], "short tail bucket");
+        assert!(log_bucket_digests(&[], 2).is_empty());
+
+        // Diff: geometry mismatch on the state axis is need_all; digest
+        // disagreements and locally-missing buckets are named by index.
+        let local_states = [1u64, 2, 3];
+        let adv_states = [1u64, 9, 3];
+        let local_log = [10u64, 20];
+        let adv_log = [10u64, 21, 30];
+        let (need_all, s, l) = diff_digests(&local_states, &local_log, &adv_states, &adv_log);
+        assert!(!need_all);
+        assert_eq!(s, vec![1]);
+        assert_eq!(l, vec![1, 2], "disagreeing bucket + bucket the local side lacks");
+        let (need_all, s, l) = diff_digests(&local_states[..2], &local_log, &adv_states, &adv_log);
+        assert!(need_all, "state-axis length mismatch cannot be bridged");
+        assert!(s.is_empty() && l.is_empty());
+        let (need_all, s, l) = diff_digests(&local_states, &adv_log, &local_states, &adv_log);
+        assert!(!need_all);
+        assert!(s.is_empty() && l.is_empty(), "identical digests need nothing");
+    }
+
+    /// `partial_plan` ships exactly the requested rows/buckets and the
+    /// result is consistent with the full plan on everything requested.
+    #[test]
+    fn partial_plan_ships_only_what_was_asked() {
+        let mut rng = Pcg32::derive(12, &[0xd2]);
+        let row = |rng: &mut Pcg32| -> Vec<f32> { (0..6).map(|_| rng.uniform() as f32).collect() };
+        let states: Vec<Vec<f32>> = (0..4).map(|_| row(&mut rng)).collect();
+        let log: Vec<Vec<f32>> = (0..7).map(|_| row(&mut rng)).collect();
+        let plan = partial_plan(100, &states, &log, 3, &[0, 2], &[1, 2]);
+        assert_eq!(plan.base_tick, 100);
+        assert_eq!(plan.states.len(), states.len(), "rows stay positional");
+        assert_eq!(plan.states[0], states[0]);
+        assert!(plan.states[1].is_empty(), "unrequested rows travel empty");
+        assert_eq!(plan.states[2], states[2]);
+        assert!(plan.states[3].is_empty());
+        // Buckets of 3 over 7 rows: bucket 1 = rows 3..6, bucket 2 = row 6.
+        let want: Vec<Vec<f32>> = log[3..7].to_vec();
+        assert_eq!(plan.log, want, "requested buckets concatenate in ascending order");
+        // Requesting everything reproduces the full plan's payload.
+        let full = partial_plan(100, &states, &log, 3, &[0, 1, 2, 3], &[0, 1, 2]);
+        assert_eq!(full.states, states);
+        assert_eq!(full.log, log);
+        // Out-of-range requests are ignored rather than panicking.
+        let odd = partial_plan(0, &states, &log, 3, &[99], &[99]);
+        assert!(odd.states.iter().all(|r| r.is_empty()) && odd.log.is_empty());
     }
 }

@@ -40,6 +40,19 @@
 //! (the generative handshake: a [`StreamSpec`] + [`AvailSpec`] instead of
 //! materialized shards, so assignment bytes are flat in K).
 //!
+//! ## Anti-entropy frames
+//!
+//! Recovery handshakes open with a digest exchange: tag 14
+//! [`WireMsg::Digest`] carries FNV-1a-64 bucket digests over the
+//! supervisor's per-client states and logged model history, and tag 15
+//! [`WireMsg::DigestDelta`] is the reconnecting worker's answer naming
+//! only the buckets it lacks — so a worker that kept its shard state
+//! receives a near-empty resume plan instead of the full replay bundle.
+//! Faults injected by a [`crate::async_rt::fault`] plan land at this
+//! layer's frame boundary ([`write_frame`]), which is why corruption
+//! always surfaces as [`Error::Protocol`]: every tag is < 16 and the
+//! corruption rule flips a bit in the tag byte's high nibble.
+//!
 //! The same appended Hello/HelloAck fields carry the authenticated
 //! handshake: the server proves knowledge of the shared secret with
 //! [`hello_tag`] (a 64-bit truncation of HMAC-SHA256) over a fresh
@@ -135,6 +148,12 @@ pub enum WireMsg {
         /// Per processed client: `(client, upload, learned)` — the same
         /// fields as [`WireMsg::Ack`].
         acks: Vec<(usize, Option<Update>, u32)>,
+        /// The federation iteration these acks answer. Appended like the
+        /// handshake ext fields (absent frames decode to `None`), it
+        /// lets the server discard a duplicated batch that straddles a
+        /// tick boundary instead of misfiling its acks — the frame-dup
+        /// fault's determinism guard.
+        iter: Option<usize>,
     },
     /// Server -> worker: upload every hosted client's local model (the
     /// checkpoint state-capture request; answered by
@@ -169,6 +188,49 @@ pub enum WireMsg {
     /// (`fanout == 1`: a worker) or re-shards the range to its own
     /// children (`fanout > 1`: a relay). Assignment bytes are flat in K.
     SubtreeAssignment(SubtreeAssignment),
+    /// Server -> replacement peer: the anti-entropy opener of a recovery
+    /// handshake. Instead of shipping the full [`ResumePlan`] blind, the
+    /// supervisor first advertises FNV-1a-64 digests of what the plan
+    /// *would* contain — one digest per client state row at `base_tick`,
+    /// one per `bucket_ticks`-tick bucket of the logged model history up
+    /// to `resume_tick` — and the peer answers with a
+    /// [`WireMsg::DigestDelta`] naming only what it actually lacks.
+    Digest {
+        /// Session token binding the exchange to this server run.
+        session: u64,
+        /// Tick the state digests were captured at (the plan's base).
+        base_tick: usize,
+        /// Tick the rebuilt shard must resume at; the log digests cover
+        /// `base_tick .. resume_tick`.
+        resume_tick: usize,
+        /// First client id of the shard being recovered (inclusive).
+        client_lo: usize,
+        /// Last client id of the shard being recovered (exclusive).
+        client_hi: usize,
+        /// Ticks per log bucket (the digest granularity).
+        bucket_ticks: usize,
+        /// Per hosted client (`client_hi - client_lo` entries), the FNV
+        /// digest of its state row's f32 bit patterns at `base_tick`.
+        state_digests: Vec<u64>,
+        /// Per log bucket, the FNV digest over the concatenated bit
+        /// patterns of that bucket's logged models.
+        log_digests: Vec<u64>,
+    },
+    /// Peer -> server: the answer to a [`WireMsg::Digest`] — which state
+    /// rows and log buckets the peer needs shipped. A fresh replacement
+    /// (or a peer whose cache mismatches) sets `need_all`; a peer whose
+    /// live shard state is still valid requests nothing and receives a
+    /// near-empty plan.
+    DigestDelta {
+        /// Echo of the digest's session token.
+        session: u64,
+        /// Ship the full plan regardless of the index lists.
+        need_all: bool,
+        /// Shard-relative indices of state rows to ship, ascending.
+        need_states: Vec<usize>,
+        /// Log-bucket indices to ship, ascending.
+        need_log_buckets: Vec<usize>,
+    },
 }
 
 /// How a (re)connecting worker reconstructs its clients' state before
@@ -496,9 +558,14 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
                 put_portion(&mut buf, portion);
             }
         }
-        WireMsg::AckBatch { acks } => {
+        WireMsg::AckBatch { acks, iter } => {
             buf.push(6);
             put_ack_items(&mut buf, acks);
+            // The tick stamp rides after the legacy layout, like the
+            // handshake ext fields: absent on old frames, optional here.
+            if let Some(it) = iter {
+                codec::put_usize(&mut buf, *it);
+            }
         }
         WireMsg::StateRequest => buf.push(7),
         WireMsg::StateDump { client_lo, states } => {
@@ -534,8 +601,49 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
             codec::put_u64(&mut buf, a.challenge);
             codec::put_u64(&mut buf, a.hello_tag);
         }
+        WireMsg::Digest {
+            session,
+            base_tick,
+            resume_tick,
+            client_lo,
+            client_hi,
+            bucket_ticks,
+            state_digests,
+            log_digests,
+        } => {
+            buf.push(14);
+            codec::put_u64(&mut buf, *session);
+            codec::put_usize(&mut buf, *base_tick);
+            codec::put_usize(&mut buf, *resume_tick);
+            codec::put_usize(&mut buf, *client_lo);
+            codec::put_usize(&mut buf, *client_hi);
+            codec::put_usize(&mut buf, *bucket_ticks);
+            put_u64s(&mut buf, state_digests);
+            put_u64s(&mut buf, log_digests);
+        }
+        WireMsg::DigestDelta { session, need_all, need_states, need_log_buckets } => {
+            buf.push(15);
+            codec::put_u64(&mut buf, *session);
+            codec::put_bool(&mut buf, *need_all);
+            put_usizes(&mut buf, need_states);
+            put_usizes(&mut buf, need_log_buckets);
+        }
     }
     buf
+}
+
+fn put_u64s(buf: &mut Vec<u8>, vals: &[u64]) {
+    codec::put_usize(buf, vals.len());
+    for &v in vals {
+        codec::put_u64(buf, v);
+    }
+}
+
+fn put_usizes(buf: &mut Vec<u8>, vals: &[usize]) {
+    codec::put_usize(buf, vals.len());
+    for &v in vals {
+        codec::put_usize(buf, v);
+    }
 }
 
 /// Appended negotiation/auth bytes on a `Hello`: compress flag,
@@ -703,9 +811,14 @@ pub fn encode_compressed(msg: &WireMsg) -> Vec<u8> {
             compress::put_f32_stream(&mut buf, &values);
             seal(buf)
         }
-        WireMsg::AckBatch { acks } => {
+        WireMsg::AckBatch { acks, iter } => {
             let mut buf = vec![TAG_ACK_BATCH_C];
             put_ack_items_c(&mut buf, acks);
+            // Optional tick stamp, inside the sealed body (same
+            // trailing-field scheme as the raw tag-6 encoding).
+            if let Some(it) = iter {
+                codec::put_varint(&mut buf, *it as u64);
+            }
             seal(buf)
         }
         WireMsg::CombinedUpdate { iter, acks } => {
@@ -857,7 +970,11 @@ fn decode_compressed(payload: &[u8]) -> Result<WireMsg> {
                 .collect();
             WireMsg::TickBatch { iter, ticks }
         }
-        TAG_ACK_BATCH_C => WireMsg::AckBatch { acks: get_ack_items_c(&mut c)? },
+        TAG_ACK_BATCH_C => {
+            let acks = get_ack_items_c(&mut c)?;
+            let iter = if c.remaining() > 0 { Some(varint_usize(&mut c)?) } else { None };
+            WireMsg::AckBatch { acks, iter }
+        }
         TAG_COMBINED_UPDATE_C => {
             WireMsg::CombinedUpdate { iter: varint_usize(&mut c)?, acks: get_ack_items_c(&mut c)? }
         }
@@ -903,6 +1020,28 @@ fn get_ack_items(c: &mut Cur<'_>) -> Result<Vec<(usize, Option<Update>, u32)>> {
         acks.push((client, upload, c.u32()?));
     }
     Ok(acks)
+}
+
+/// Decode the u64 list written by [`put_u64s`].
+fn get_u64s(c: &mut Cur<'_>) -> Result<Vec<u64>> {
+    // Each element is one fixed-width u64.
+    let n = c.len(8)?;
+    let mut vals = Vec::with_capacity(n);
+    for _ in 0..n {
+        vals.push(c.u64()?);
+    }
+    Ok(vals)
+}
+
+/// Decode the index list written by [`put_usizes`].
+fn get_usizes(c: &mut Cur<'_>) -> Result<Vec<usize>> {
+    // Each element is one fixed-width u64 index.
+    let n = c.len(8)?;
+    let mut vals = Vec::with_capacity(n);
+    for _ in 0..n {
+        vals.push(c.usize()?);
+    }
+    Ok(vals)
 }
 
 fn get_stream_spec(c: &mut Cur<'_>) -> Result<StreamSpec> {
@@ -1041,7 +1180,11 @@ pub fn decode(payload: &[u8]) -> Result<WireMsg> {
             }
             WireMsg::TickBatch { iter, ticks }
         }
-        6 => WireMsg::AckBatch { acks: get_ack_items(&mut c)? },
+        6 => {
+            let acks = get_ack_items(&mut c)?;
+            let iter = if c.remaining() > 0 { Some(c.usize()?) } else { None };
+            WireMsg::AckBatch { acks, iter }
+        }
         7 => WireMsg::StateRequest,
         8 => WireMsg::StateDump { client_lo: c.usize()?, states: f32_rows(&mut c)? },
         11 => WireMsg::CombinedUpdate { iter: c.usize()?, acks: get_ack_items(&mut c)? },
@@ -1096,6 +1239,22 @@ pub fn decode(payload: &[u8]) -> Result<WireMsg> {
                 hello_tag,
             })
         }
+        14 => WireMsg::Digest {
+            session: c.u64()?,
+            base_tick: c.usize()?,
+            resume_tick: c.usize()?,
+            client_lo: c.usize()?,
+            client_hi: c.usize()?,
+            bucket_ticks: c.usize()?,
+            state_digests: get_u64s(&mut c)?,
+            log_digests: get_u64s(&mut c)?,
+        },
+        15 => WireMsg::DigestDelta {
+            session: c.u64()?,
+            need_all: c.bool()?,
+            need_states: get_usizes(&mut c)?,
+            need_log_buckets: get_usizes(&mut c)?,
+        },
         t => return Err(Error::Protocol(format!("bad message tag {t}"))),
     };
     if c.remaining() != 0 {
@@ -1117,6 +1276,10 @@ pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
             "frame of {} bytes exceeds MAX_FRAME",
             payload.len()
         )));
+    }
+    if let Some(plan) = crate::async_rt::fault::active() {
+        crate::async_rt::fault::write_frame_hook(plan, w, payload)?;
+        return Ok(());
     }
     w.write_all(&(payload.len() as u32).to_le_bytes())?;
     w.write_all(payload)?;
@@ -1287,9 +1450,16 @@ mod tests {
             coords,
             values: vec![0.5, -0.0, f32::MIN_POSITIVE],
         };
-        roundtrip(&WireMsg::AckBatch { acks: vec![] });
+        roundtrip(&WireMsg::AckBatch { acks: vec![], iter: None });
         roundtrip(&WireMsg::AckBatch {
-            acks: vec![(3, None, 1), (4, Some(update), 0), (5, None, 0)],
+            acks: vec![(3, None, 1), (4, Some(update.clone()), 0), (5, None, 0)],
+            iter: None,
+        });
+        // The optional tick stamp must survive both encodings (the
+        // roundtrip helper already exercises raw + framed paths).
+        roundtrip(&WireMsg::AckBatch {
+            acks: vec![(3, None, 1), (4, Some(update), 0)],
+            iter: Some(417),
         });
     }
 
@@ -1424,7 +1594,7 @@ mod tests {
                     (1, Some((Coords::Range { start: 2, len: 3, d: 8 }, vec![1.0, 2.0, 3.0]))),
                 ],
             },
-            WireMsg::AckBatch { acks: vec![(0, None, 1), (1, Some(update), 0)] },
+            WireMsg::AckBatch { acks: vec![(0, None, 1), (1, Some(update), 0)], iter: None },
             WireMsg::StateDump { client_lo: 2, states: vec![vec![1.0, 2.0], vec![3.0]] },
         ];
         for msg in &msgs {
@@ -1581,7 +1751,7 @@ mod tests {
                     ),
                 ],
             },
-            WireMsg::AckBatch { acks: vec![] },
+            WireMsg::AckBatch { acks: vec![], iter: None },
             WireMsg::AckBatch {
                 acks: vec![
                     (3, None, 1),
@@ -1589,6 +1759,11 @@ mod tests {
                     (5, None, 0),
                     (8, Some(update(8, vec![2, 3, 4])), 1),
                 ],
+                iter: None,
+            },
+            WireMsg::AckBatch {
+                acks: vec![(3, None, 1), (4, Some(update(4, vec![0, 5, 31])), 0)],
+                iter: Some(12345),
             },
             WireMsg::CombinedUpdate { iter: 41, acks: vec![] },
             WireMsg::CombinedUpdate {
@@ -1834,5 +2009,105 @@ mod tests {
         let mut evil = good.clone();
         evil[9..17].copy_from_slice(&u64::MAX.to_le_bytes()); // tag + iter, then count
         assert!(decode(&evil).is_err());
+    }
+
+    /// The anti-entropy frames round-trip exactly, in both directions
+    /// and at both extremes (empty digests / need-all deltas).
+    #[test]
+    fn roundtrip_anti_entropy_frames() {
+        roundtrip(&WireMsg::Digest {
+            session: 0xfeed_beef,
+            base_tick: 128,
+            resume_tick: 900,
+            client_lo: 8,
+            client_hi: 24,
+            bucket_ticks: 64,
+            state_digests: vec![0, u64::MAX, 0x9e37_79b9_7f4a_7c15],
+            log_digests: vec![0xcbf2_9ce4_8422_2325; 13],
+        });
+        roundtrip(&WireMsg::Digest {
+            session: 1,
+            base_tick: 0,
+            resume_tick: 0,
+            client_lo: 0,
+            client_hi: 0,
+            bucket_ticks: 1,
+            state_digests: vec![],
+            log_digests: vec![],
+        });
+        roundtrip(&WireMsg::DigestDelta {
+            session: 0xfeed_beef,
+            need_all: true,
+            need_states: vec![],
+            need_log_buckets: vec![],
+        });
+        roundtrip(&WireMsg::DigestDelta {
+            session: 0xfeed_beef,
+            need_all: false,
+            need_states: vec![8, 11, 23],
+            need_log_buckets: vec![0, 12],
+        });
+    }
+
+    /// Adversarial sweep over the anti-entropy frames: truncation at
+    /// every byte boundary and hostile list counts are clean protocol
+    /// errors, never panics.
+    #[test]
+    fn corrupt_anti_entropy_frames_error_cleanly() {
+        let digest = WireMsg::Digest {
+            session: 3,
+            base_tick: 64,
+            resume_tick: 200,
+            client_lo: 0,
+            client_hi: 10,
+            bucket_ticks: 64,
+            state_digests: vec![1, 2, 3],
+            log_digests: vec![4, 5],
+        };
+        let delta = WireMsg::DigestDelta {
+            session: 3,
+            need_all: false,
+            need_states: vec![1, 2],
+            need_log_buckets: vec![0],
+        };
+        for msg in [&digest, &delta] {
+            let good = encode(msg);
+            assert_eq!(decode(&good).unwrap(), *msg);
+            for cut in 1..good.len() {
+                assert!(decode(&good[..cut]).is_err(), "prefix {cut} of {msg:?} accepted");
+            }
+            let mut evil = good.clone();
+            evil.push(0); // trailing garbage
+            assert!(decode(&evil).is_err());
+        }
+        // Hostile list count: the Digest's state-digest count sits after
+        // tag + session + 5 usizes = 1 + 8 + 40 bytes.
+        let mut evil = encode(&digest);
+        evil[49..57].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(matches!(decode(&evil), Err(Error::Protocol(_))));
+    }
+
+    /// The AckBatch tick stamp follows the handshake ext-field contract:
+    /// stripping exactly the trailing stamp yields the legacy layout
+    /// (decoding to `iter: None`), while any other cut is corruption.
+    #[test]
+    fn ack_batch_stamp_is_an_ext_field() {
+        let stamped = WireMsg::AckBatch { acks: vec![(2, None, 1), (7, None, 0)], iter: Some(9) };
+        let good = encode(&stamped);
+        let legacy_cut = good.len() - 8; // the stamp is one fixed-width u64
+        assert_eq!(
+            decode(&good[..legacy_cut]).unwrap(),
+            WireMsg::AckBatch { acks: vec![(2, None, 1), (7, None, 0)], iter: None }
+        );
+        for cut in 1..good.len() {
+            if cut == legacy_cut {
+                continue;
+            }
+            assert!(decode(&good[..cut]).is_err(), "stamp prefix {cut} accepted");
+        }
+        // Compressed twin: the stamp survives the sealed encoding too.
+        let enc = encode_compressed(&stamped);
+        assert_eq!(enc[0], TAG_ACK_BATCH_C);
+        assert_eq!(decode(&enc).unwrap(), stamped);
     }
 }

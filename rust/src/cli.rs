@@ -29,6 +29,12 @@
 //! runs this process as an inner tree node (`--connect` upstream +
 //! `--serve` for its own workers), and `--accept-deadline SECS` bounds
 //! how long the server waits for a replacement after losing a child.
+//!
+//! Chaos flag (`deploy` only): `--fault-plan PLAN` installs a seeded
+//! deterministic fault plan for this process (frame drops, duplications,
+//! delays, corruption, connect refusals, tick-scheduled kills — see
+//! `async_rt::fault` for the grammar). The same plan text is honored
+//! from `PAO_FED_FAULT_PLAN` for processes spawned without the flag.
 
 use std::collections::BTreeMap;
 
@@ -167,6 +173,15 @@ mod tests {
         assert!(b.has("relay"));
         assert_eq!(b.get("connect"), Some("127.0.0.1:7000"));
         assert!(p("deploy --topology").is_err());
+    }
+
+    #[test]
+    fn fault_plan_flag_parses() {
+        // --fault-plan takes a value (the whole plan string) and is not a
+        // switch, so it needs no SWITCHES entry.
+        let a = p("deploy --connect 127.0.0.1:7000 --fault-plan seed=7;corrupt:frame=40").unwrap();
+        assert_eq!(a.get("fault-plan"), Some("seed=7;corrupt:frame=40"));
+        assert!(p("deploy --fault-plan").is_err());
     }
 
     #[test]

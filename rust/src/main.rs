@@ -32,6 +32,10 @@
 //!                 compression) --legacy-hello (server only: emit the
 //!                 pre-codec handshake layout for genuinely old workers;
 //!                 incompatible with --compress/--secret)
+//!   chaos:        --fault-plan PLAN (deterministic fault injection for
+//!                 this process, e.g. "seed=7;corrupt:frame=40;kill:tick=30";
+//!                 also readable from PAO_FED_FAULT_PLAN; see
+//!                 async_rt::fault for the grammar)
 //!
 //! flags:
 //!   --mc N        Monte-Carlo runs per curve            (default 3)
@@ -60,7 +64,7 @@
 //! ```
 
 use pao_fed::async_rt::{
-    run_deployment, run_deployment_tcp, run_relay, run_worker_with, DeploymentConfig,
+    fault, run_deployment, run_deployment_tcp, run_relay, run_worker_with, DeploymentConfig,
     DeploymentReport, TreeConfig, WireConfig, WorkerOptions,
 };
 use pao_fed::cli::Args;
@@ -88,7 +92,7 @@ fn usage() -> ! {
          [--clients K] [--iters N] [--seed S] [--dim D] [--delta F] [--eval-every E]\n  \
          [--topology F1,F2,...] [--accept-deadline SECS]\n  \
          [--checkpoint-every N] [--checkpoint PATH] [--resume PATH] [--run-until T]\n  \
-         [--compress] [--secret S] [--legacy-wire] [--legacy-hello]",
+         [--compress] [--secret S] [--legacy-wire] [--legacy-hello] [--fault-plan PLAN]",
         experiments::ALL.join(" "),
         experiments::EXTRAS.join(" ")
     );
@@ -230,9 +234,23 @@ fn print_deployment(report: &DeploymentReport) {
     if report.recovered_workers > 0 {
         println!("  supervisor recovered {} worker(s) mid-run", report.recovered_workers);
     }
+    if let Some(gap) = &report.journal_gap {
+        println!(
+            "  WARNING: journal gap at resume — {} of {} prefix records survived, \
+             tick {} first missing; audit trail restarted at the resumed suffix",
+            gap.found_records, gap.start_tick, gap.first_missing_tick
+        );
+    }
 }
 
 fn run_deploy(args: &Args) -> Result<(), String> {
+    // Install the fault plan before any role branches: server, relay and
+    // worker processes all read the same hook at their frame boundaries.
+    // (PAO_FED_FAULT_PLAN covers processes spawned without the flag.)
+    if let Some(plan) = args.get("fault-plan") {
+        let plan = fault::FaultPlan::parse(plan).map_err(|e| e.to_string())?;
+        fault::install(plan).map_err(|e| e.to_string())?;
+    }
     if args.has("relay") {
         let upstream = args
             .get("connect")

@@ -212,8 +212,37 @@ pub fn replay(path: &Path) -> Result<ReplayedJournal> {
 ///   created, with a stderr warning in the gap case — never a silently
 ///   gapped audit trail.
 pub fn for_run(path: &Path, fingerprint: u64, start_tick: usize) -> Result<Journal> {
+    Ok(for_run_reporting(path, fingerprint, start_tick)?.0)
+}
+
+/// A discontinuity found while resuming against an existing journal: the
+/// surviving records do not cover `0..start_tick` contiguously (a tail
+/// lost to power loss — appends are OS-flushed, not fsynced — or a
+/// damaged copy). The audit trail restarts at the resumed suffix; this
+/// record is the structured evidence, surfaced through the deployment
+/// report so operators can distinguish a clean resume from a gapped one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct JournalGap {
+    /// Tick the run resumed from — the prefix the journal should cover.
+    pub start_tick: usize,
+    /// Complete, checksum-valid records found below `start_tick`.
+    pub found_records: usize,
+    /// First tick of `0..start_tick` missing from the contiguous prefix.
+    pub first_missing_tick: usize,
+}
+
+/// [`for_run`], additionally reporting a [`JournalGap`] when the resume
+/// had to abandon a non-contiguous prior journal. `None` means the audit
+/// trail is clean: a fresh run, a trimmed contiguous prefix, or no prior
+/// journal at all (a checkpoint copied without its journal — there is no
+/// trail to gap).
+pub fn for_run_reporting(
+    path: &Path,
+    fingerprint: u64,
+    start_tick: usize,
+) -> Result<(Journal, Option<JournalGap>)> {
     if start_tick == 0 || !path.exists() {
-        return Journal::create(path, fingerprint);
+        return Ok((Journal::create(path, fingerprint)?, None));
     }
     let old = replay(path)?;
     if old.fingerprint != fingerprint {
@@ -225,12 +254,19 @@ pub fn for_run(path: &Path, fingerprint: u64, start_tick: usize) -> Result<Journ
     let contiguous = kept.clone().count() == start_tick
         && kept.clone().enumerate().all(|(i, r)| r.tick == i);
     if !contiguous {
+        let found_records = kept.clone().count();
+        let first_missing_tick = (0..start_tick)
+            .find(|&i| kept.clone().nth(i).map(|r| r.tick) != Some(i))
+            .unwrap_or(start_tick);
+        let gap = JournalGap { start_tick, found_records, first_missing_tick };
         eprintln!(
             "warning: journal {} does not cover ticks 0..{start_tick} contiguously \
-             (crash-shortened tail?); starting a fresh journal for the resumed suffix",
+             ({found_records} records survive, tick {first_missing_tick} is the first \
+             missing; crash-shortened tail?); starting a fresh journal for the \
+             resumed suffix",
             path.display()
         );
-        return Journal::create(path, fingerprint);
+        return Ok((Journal::create(path, fingerprint)?, Some(gap)));
     }
     // Rewrite the kept prefix into a sibling temp file and rename it into
     // place — the same atomicity discipline as the snapshot writer, so a
@@ -246,7 +282,7 @@ pub fn for_run(path: &Path, fingerprint: u64, start_tick: usize) -> Result<Journ
     std::fs::rename(&tmp, path)?;
     super::sync_parent_dir(path)?;
     j.path = path.to_path_buf();
-    Ok(j)
+    Ok((j, None))
 }
 
 #[cfg(test)]
@@ -425,5 +461,57 @@ mod tests {
         let j = for_run(&path, 5, 12).unwrap();
         drop(j);
         assert_eq!(replay(&path).unwrap().records.len(), 0);
+    }
+
+    #[test]
+    fn gap_is_reported_as_a_structured_event() {
+        // A hole in the middle: record 6 of 0..12 missing.
+        let path = tmp("gap_report.journal");
+        let mut j = Journal::create(&path, 5).unwrap();
+        for t in 0..12 {
+            if t != 6 {
+                j.append(&rec(t)).unwrap();
+            }
+        }
+        drop(j);
+        let (j, gap) = for_run_reporting(&path, 5, 12).unwrap();
+        drop(j);
+        assert_eq!(
+            gap,
+            Some(JournalGap { start_tick: 12, found_records: 11, first_missing_tick: 6 })
+        );
+        // A tail stopped short of the checkpoint: first missing is the
+        // record right past the survivors.
+        let path = tmp("gap_short.journal");
+        let mut j = Journal::create(&path, 5).unwrap();
+        for t in 0..8 {
+            j.append(&rec(t)).unwrap();
+        }
+        drop(j);
+        let (j, gap) = for_run_reporting(&path, 5, 12).unwrap();
+        drop(j);
+        assert_eq!(
+            gap,
+            Some(JournalGap { start_tick: 12, found_records: 8, first_missing_tick: 8 })
+        );
+        // Clean shapes report no gap: a fresh run, a contiguous trim, and
+        // a resume with no prior journal at all.
+        let path = tmp("gap_clean.journal");
+        let mut j = Journal::create(&path, 5).unwrap();
+        for t in 0..12 {
+            j.append(&rec(t)).unwrap();
+        }
+        drop(j);
+        let (j, gap) = for_run_reporting(&path, 5, 10).unwrap();
+        drop(j);
+        assert_eq!(gap, None, "a contiguous trimmed prefix is not a gap");
+        let (j, gap) = for_run_reporting(&path, 5, 0).unwrap();
+        drop(j);
+        assert_eq!(gap, None, "a fresh run is not a gap");
+        let missing = tmp("gap_missing_nonexistent.journal");
+        let _ = std::fs::remove_file(&missing);
+        let (j, gap) = for_run_reporting(&missing, 5, 7).unwrap();
+        drop(j);
+        assert_eq!(gap, None, "no prior journal means no trail to gap");
     }
 }

@@ -43,7 +43,7 @@ pub mod journal;
 pub mod snapshot;
 
 pub use curve::curve_path_for;
-pub use journal::{Journal, TickRecord};
+pub use journal::{Journal, JournalGap, TickRecord};
 pub use snapshot::RunSnapshot;
 
 use std::path::{Path, PathBuf};

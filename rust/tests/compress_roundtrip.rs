@@ -368,7 +368,7 @@ fn gen_batch(rng: &mut Pcg32, d: usize) -> WireMsg {
                 (c, upload, rng.below(2) as u32)
             })
             .collect();
-        WireMsg::AckBatch { acks }
+        WireMsg::AckBatch { acks, iter: None }
     }
 }
 

@@ -18,6 +18,13 @@
 //! `--legacy-hello` server — emitting the pre-codec handshake layout,
 //! with workers mirroring it in their acks — must still reproduce the
 //! in-process curve bit for bit.
+//!
+//! Also: chaos. Under seeded `--fault-plan` / `PAO_FED_FAULT_PLAN`
+//! fault plans (tick-scheduled kills, corrupted / dropped / duplicated
+//! frames, refused connects) the fleet must ride out every injected
+//! fault — live-cache digest reconnects, full-replay replacements, and
+//! whole-subtree relay recovery — and still finish **bit-identical** to
+//! the fault-free in-process run.
 
 use pao_fed::async_rt::{
     run_deployment, run_deployment_tcp, run_relay, DeploymentConfig, DeploymentReport, TreeConfig,
@@ -66,6 +73,17 @@ fn spawn_workers_with(addr: &str, count: usize, extra: &[&str]) -> Vec<Child> {
                 .unwrap_or_else(|e| panic!("spawn worker {i}: {e}"))
         })
         .collect()
+}
+
+/// A worker carrying a `--fault-plan` (the CLI path into
+/// `async_rt::fault`; relays get theirs via `PAO_FED_FAULT_PLAN`).
+fn spawn_worker_with_plan(addr: &str, plan: &str) -> Child {
+    Command::new(env!("CARGO_BIN_EXE_pao-fed"))
+        .args(["deploy", "--connect", addr, "--fault-plan", plan])
+        .stdout(Stdio::null())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawn worker with fault plan")
 }
 
 /// A worker that will crash (abrupt `exit(3)`, sockets unflushed) on its
@@ -663,6 +681,18 @@ fn spawn_relay_process(upstream: &str, bind: &str, crash_at: Option<usize>) -> C
     cmd.spawn().expect("spawn relay")
 }
 
+/// A relay whose fault plan arrives through the environment (the
+/// `PAO_FED_FAULT_PLAN` path into `async_rt::fault`).
+fn spawn_relay_with_plan(upstream: &str, bind: &str, plan: &str) -> Child {
+    Command::new(env!("CARGO_BIN_EXE_pao-fed"))
+        .args(["deploy", "--relay", "--connect", upstream, "--serve", bind])
+        .env("PAO_FED_FAULT_PLAN", plan)
+        .stdout(Stdio::null())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawn relay with fault plan")
+}
+
 /// Kill a relay mid-run: the root must recover the *whole subtree*
 /// through a replacement relay (which re-shards the resume plan over
 /// fresh leaf workers via the PR-5 replay machinery), the dead relay's
@@ -740,6 +770,213 @@ fn killed_relay_is_recovered_and_curve_stays_bit_identical() {
     assert_eq!(inproc.mse_db, tcp.mse_db, "curves diverge after relay recovery");
     assert_eq!(inproc.final_w, tcp.final_w, "models diverge after relay recovery");
     assert_eq!(inproc.comm, tcp.comm, "traffic counters diverge after relay recovery");
+    assert_eq!(inproc.agg, tcp.agg);
+    assert_eq!(inproc.local_steps, tcp.local_steps);
+}
+
+// ---------------------------------------------------------------- chaos
+
+/// The chaos soak: one fleet, every injected fault class at once, under
+/// seeded plans — so the whole chaotic run is reproducible — and the
+/// result must still be **bit-identical** to the fault-free in-process
+/// run.
+///
+/// Topology `[2, 1, 1]` over K=10:
+/// * child 0 — a relay (fronting two leaves) whose env plan kills it at
+///   tick 60: the root recovers the whole subtree as a unit through a
+///   replacement relay, and the orphaned leaves die loudly;
+/// * child 1 — a flat worker whose `--fault-plan` kills it at tick 30: a
+///   fresh replacement answers the digest exchange "need everything" and
+///   is rebuilt from the full replay plan;
+/// * child 2 — a flat worker whose plan refuses its first connect
+///   (bounded retry), corrupts uplink frame 40 (the supervisor must see
+///   a clean `Error::Protocol`, recover, and adopt the worker's own
+///   reconnect through the digest fast path), drops frame 55 (a second
+///   live-cache reconnect, this time triggered on the worker's side),
+///   and duplicates frame 70 (the ack-stamp dedup must swallow the copy
+///   without any disconnect at all).
+///
+/// Every recovery is deterministic, so the counter is pinned exactly:
+/// one worker kill + one subtree kill + two live-cache reconnects = 4.
+#[test]
+fn chaos_soak_fleet_is_bit_identical_to_fault_free_run() {
+    let seed = 97;
+    let (cfg, rff, part, delay) = build_env(seed, 10, 160);
+    let algo = algorithms::build(Variant::PaoFedC2, 0.4, 4, 10, 20);
+    let dcfg = |tree| DeploymentConfig {
+        algo: algo.clone(),
+        tick: Duration::ZERO,
+        env_seed: seed,
+        eval_every: 20,
+        persist: None,
+        run_until: None,
+        wire: Default::default(),
+        tree,
+    };
+
+    let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+    let inproc =
+        run_deployment(stream, rff.clone(), part.clone(), delay, dcfg(Default::default()))
+            .unwrap();
+
+    let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let root = listener.local_addr().unwrap().to_string();
+
+    // Child 0: the doomed relay and its two (soon to be orphaned) leaves.
+    let bind = free_addr();
+    let mut doomed_relay = spawn_relay_with_plan(&root, &bind, "kill:tick=60");
+    std::thread::sleep(Duration::from_millis(300));
+    let orphans = spawn_workers(&bind, 2);
+    std::thread::sleep(Duration::from_millis(300));
+    // Child 1: the doomed flat worker (CLI-installed plan).
+    let mut doomed_worker = spawn_worker_with_plan(&root, "kill:tick=30");
+    std::thread::sleep(Duration::from_millis(300));
+    // Child 2: the frame-chaos worker. It is its own replacement (the
+    // supervisor adopts its reconnects), so it needs no monitor.
+    let chaos = spawn_worker_with_plan(
+        &root,
+        "seed=3;refuse:connects=1;corrupt:frame=40;drop:frame=55;dup:frame=70",
+    );
+
+    let worker_root = root.clone();
+    let worker_monitor = std::thread::spawn(move || {
+        let status = doomed_worker.wait().expect("wait for doomed worker");
+        assert_eq!(status.code(), Some(3), "doomed worker exited with {status}");
+        spawn_workers(&worker_root, 1).remove(0)
+    });
+    let relay_root = root.clone();
+    let relay_monitor = std::thread::spawn(move || {
+        let status = doomed_relay.wait().expect("wait for doomed relay");
+        assert_eq!(status.code(), Some(3), "doomed relay exited with {status}");
+        let bind = free_addr();
+        let replacement = spawn_relay_process(&relay_root, &bind, None);
+        std::thread::sleep(Duration::from_millis(300));
+        let leaves = spawn_workers(&bind, 2);
+        (replacement, leaves)
+    });
+
+    let tcp = run_deployment_tcp(
+        stream,
+        rff.clone(),
+        part.clone(),
+        delay,
+        dcfg(tree_cfg(&cfg, seed, Some(vec![2, 1, 1]))),
+        &listener,
+        4,
+    )
+    .unwrap();
+
+    let worker_replacement = worker_monitor.join().unwrap();
+    let (relay_replacement, leaves) = relay_monitor.join().unwrap();
+    for mut c in [worker_replacement, chaos, relay_replacement]
+        .into_iter()
+        .chain(leaves)
+    {
+        let status = c.wait().unwrap();
+        assert!(status.success(), "surviving fleet member exited with {status}");
+    }
+    for mut w in orphans {
+        assert!(!w.wait().unwrap().success(), "orphaned leaf should exit nonzero");
+    }
+
+    assert_eq!(
+        tcp.recovered_workers, 4,
+        "worker kill + relay subtree + corrupt reconnect + drop reconnect"
+    );
+    assert_eq!(inproc.iters, tcp.iters);
+    assert_eq!(inproc.mse_db, tcp.mse_db, "chaos curve diverges");
+    assert_eq!(inproc.final_w, tcp.final_w, "chaos model diverges");
+    assert_eq!(inproc.comm, tcp.comm, "chaos traffic counters diverge");
+    assert_eq!(inproc.agg, tcp.agg, "chaos aggregation diverges");
+    assert_eq!(inproc.local_steps, tcp.local_steps);
+    assert_eq!(tcp.journal_gap, None, "no journal in play, no gap to report");
+}
+
+/// A leaf killed *behind* a surviving relay: today's semantics are that
+/// relay subtrees recover **as a unit** — the relay fails upstream when
+/// its leaf dies, the root replaces the whole subtree through a single
+/// recovery, and the sibling leaf (its relay now gone) dies loudly
+/// rather than being re-adopted piecemeal. This pins the ROADMAP's
+/// "relay subtrees recover as a unit" note as an executable contract;
+/// if per-leaf recovery ever lands, this test gets rewritten
+/// deliberately instead of the semantics drifting silently.
+#[test]
+fn killed_leaf_behind_surviving_relay_recovers_subtree_as_a_unit() {
+    let seed = 103;
+    let (cfg, rff, part, delay) = build_env(seed, 9, 160);
+    let algo = algorithms::build(Variant::PaoFedC2, 0.4, 4, 10, 20);
+    let dcfg = |tree| DeploymentConfig {
+        algo: algo.clone(),
+        tick: Duration::ZERO,
+        env_seed: seed,
+        eval_every: 20,
+        persist: None,
+        run_until: None,
+        wire: Default::default(),
+        tree,
+    };
+
+    let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+    let inproc =
+        run_deployment(stream, rff.clone(), part.clone(), delay, dcfg(Default::default()))
+            .unwrap();
+
+    // Topology [2, 1]: child 0 is a *healthy* relay fronting two leaves,
+    // one of which is doomed to die at tick 40; child 1 a direct worker.
+    let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let root = listener.local_addr().unwrap().to_string();
+    let bind = free_addr();
+    let mut relay = spawn_relay_process(&root, &bind, None);
+    std::thread::sleep(Duration::from_millis(300));
+    let mut doomed_leaf = spawn_worker_with_plan(&bind, "kill:tick=40");
+    let sibling = spawn_workers(&bind, 1);
+    std::thread::sleep(Duration::from_millis(300));
+    let direct = spawn_workers(&root, 1);
+
+    let replacement_root = root.clone();
+    let monitor = std::thread::spawn(move || {
+        let status = doomed_leaf.wait().expect("wait for doomed leaf");
+        assert_eq!(status.code(), Some(3), "doomed leaf exited with {status}");
+        // The leaf's death must take the relay down with it.
+        let status = relay.wait().expect("wait for relay");
+        assert!(!status.success(), "relay must fail upstream after losing a leaf");
+        let bind = free_addr();
+        let replacement = spawn_relay_process(&replacement_root, &bind, None);
+        std::thread::sleep(Duration::from_millis(300));
+        let leaves = spawn_workers(&bind, 2);
+        (replacement, leaves)
+    });
+
+    let tcp = run_deployment_tcp(
+        stream,
+        rff.clone(),
+        part.clone(),
+        delay,
+        dcfg(tree_cfg(&cfg, seed, Some(vec![2, 1]))),
+        &listener,
+        3,
+    )
+    .unwrap();
+    let (mut replacement, leaves) = monitor.join().unwrap();
+    for mut c in direct {
+        assert!(c.wait().unwrap().success(), "direct worker failed");
+    }
+    assert!(replacement.wait().unwrap().success(), "replacement relay failed");
+    for mut w in leaves {
+        assert!(w.wait().unwrap().success(), "replacement-subtree leaf failed");
+    }
+    // The sibling leaf loses its relay and must die loudly, not linger.
+    for mut w in sibling {
+        assert!(!w.wait().unwrap().success(), "sibling leaf should exit nonzero");
+    }
+
+    assert_eq!(tcp.recovered_workers, 1, "one whole-subtree recovery expected");
+    assert_eq!(inproc.iters, tcp.iters);
+    assert_eq!(inproc.mse_db, tcp.mse_db, "curves diverge after leaf-kill recovery");
+    assert_eq!(inproc.final_w, tcp.final_w, "models diverge after leaf-kill recovery");
+    assert_eq!(inproc.comm, tcp.comm, "traffic diverges after leaf-kill recovery");
     assert_eq!(inproc.agg, tcp.agg);
     assert_eq!(inproc.local_steps, tcp.local_steps);
 }
