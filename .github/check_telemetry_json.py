@@ -1,0 +1,103 @@
+#!/usr/bin/env python3
+"""Validate a pao-fed telemetry run log (schema pao-fed-telemetry-v1).
+
+The log is newline-delimited JSON: one snapshot object per line, each
+stamped with the schema id, an event kind ("tick" periodic snapshots,
+"final" end-of-run records), the 0-based tick index, monotone wall-clock
+nanoseconds, a spans object (per-stage count/total_ns/quantiles) and a
+counters object (scalar counters always present, zeros included).
+
+Beyond parsing, this asserts the log actually observed a run: at least
+one record, at least one "final" record, ticks non-decreasing between
+consecutive records of one run segment, and every span/counter value a
+finite non-negative number. Optional arguments pin expectations:
+
+Usage: check_telemetry_json.py RUN.jsonl [--min-ticks N] [--expect-span NAME]
+"""
+
+import argparse
+import json
+import math
+import sys
+
+SCHEMA = "pao-fed-telemetry-v1"
+SPAN_KEYS = ("count", "total_ns", "p50_ns", "p90_ns", "p99_ns", "max_ns")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path")
+    ap.add_argument("--min-ticks", type=int, default=1,
+                    help="require the last final record to cover at least N ticks")
+    ap.add_argument("--expect-span", action="append", default=[],
+                    help="require this span stage to appear with count > 0")
+    args = ap.parse_args()
+
+    def fail(msg: str) -> None:
+        print(f"{args.path}: {msg}", file=sys.stderr)
+        sys.exit(1)
+
+    with open(args.path) as f:
+        lines = [ln for ln in f.read().splitlines() if ln.strip()]
+    if not lines:
+        fail("empty run log — the telemetry sink recorded nothing")
+
+    finals = 0
+    prev_tick = None
+    last_final = None
+    for i, line in enumerate(lines, 1):
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError as e:
+            fail(f"line {i}: not valid JSON ({e})")
+        if rec.get("schema") != SCHEMA:
+            fail(f"line {i}: unexpected schema {rec.get('schema')!r}")
+        event = rec.get("event")
+        if event not in ("tick", "final"):
+            fail(f"line {i}: unexpected event {event!r}")
+        tick = rec.get("tick")
+        if not isinstance(tick, (int, float)) or tick < 0:
+            fail(f"line {i}: bad tick {tick!r}")
+        wall = rec.get("wall_ns")
+        if not isinstance(wall, (int, float)) or wall < 0:
+            fail(f"line {i}: bad wall_ns {wall!r}")
+        # A "final" resets the segment (several runs may share one
+        # process and sink); within a segment ticks never go backwards.
+        if prev_tick is not None and tick < prev_tick:
+            fail(f"line {i}: tick went backwards ({prev_tick} -> {tick})")
+        prev_tick = None if event == "final" else tick
+        spans = rec.get("spans")
+        if not isinstance(spans, dict):
+            fail(f"line {i}: missing spans object")
+        for name, st in spans.items():
+            if not isinstance(st, dict):
+                fail(f"line {i}: span {name!r} is not an object")
+            for key in SPAN_KEYS:
+                v = st.get(key)
+                if not isinstance(v, (int, float)) or not math.isfinite(v) or v < 0:
+                    fail(f"line {i}: span {name}/{key} = {v!r}")
+        counters = rec.get("counters")
+        if not isinstance(counters, dict) or not counters:
+            fail(f"line {i}: missing counters object")
+        for name, v in counters.items():
+            if not isinstance(v, (int, float)) or not math.isfinite(v) or v < 0:
+                fail(f"line {i}: counter {name} = {v!r}")
+        if event == "final":
+            finals += 1
+            last_final = rec
+
+    if finals == 0:
+        fail("no final record — the run never called finish()")
+    covered = last_final["tick"] + 1
+    if covered < args.min_ticks:
+        fail(f"last final record covers {covered} tick(s), expected >= {args.min_ticks}")
+    for name in args.expect_span:
+        st = last_final["spans"].get(name)
+        if not st or st.get("count", 0) <= 0:
+            fail(f"expected span {name!r} missing or empty in the final record")
+    print(f"{args.path}: ok ({len(lines)} record(s), {finals} final, "
+          f"{covered} tick(s) covered)")
+
+
+if __name__ == "__main__":
+    main()

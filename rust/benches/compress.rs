@@ -68,7 +68,7 @@ fn ack_batch(rng: &mut Pcg32) -> WireMsg {
             (c, Some(u), 1u32)
         })
         .collect();
-    WireMsg::AckBatch { acks, iter: None }
+    WireMsg::AckBatch { acks, iter: None, stats: None }
 }
 
 /// Same paper-scale snapshot fixture as `benches/persist.rs`: K=256

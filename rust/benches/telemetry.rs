@@ -1,0 +1,106 @@
+//! Telemetry overhead benchmarks: what observation costs when it is on,
+//! and — the load-bearing number — that leaving it *off* costs nothing.
+//! Files its trajectory into `BENCH_10.json` (schema `pao-fed-bench-v1`).
+//!
+//! The micro entries price one pass through each primitive (a disabled
+//! span guard is a single relaxed load; counters and the flight recorder
+//! are always-on relaxed atomics). The engine entries time the same
+//! 120-tick run with span timing disabled and enabled;
+//! `engine_overhead_pct` files the relative difference, which the
+//! observation-only contract targets at under 2% (the figure is filed,
+//! not asserted — wall-clock deltas this small are noise-prone on shared
+//! runners, and the BENCH trajectory is where the trend is watched).
+//!
+//! Run: `cargo bench --bench telemetry [filter]`
+
+mod bench_harness;
+
+use bench_harness::Bench;
+use pao_fed::data::stream::{FedStream, StreamConfig};
+use pao_fed::data::synthetic::Eq39Source;
+use pao_fed::fl::algorithms::{build, Variant};
+use pao_fed::fl::backend::NativeBackend;
+use pao_fed::fl::delay::DelayModel;
+use pao_fed::fl::engine::{self, Environment};
+use pao_fed::fl::participation::Participation;
+use pao_fed::obs::counters::{self, Ctr};
+use pao_fed::obs::{recorder, spans};
+use pao_fed::rff::RffSpace;
+use pao_fed::util::rng::Pcg32;
+
+fn main() {
+    let mut b = Bench::from_args("telemetry").with_sink("BENCH_10.json");
+
+    // ---- primitive costs ------------------------------------------------
+    spans::set_enabled(false);
+    b.bench("span_guard_disabled_x1000", || {
+        for _ in 0..1000 {
+            let _s = spans::span(spans::Stage::Eval);
+        }
+    });
+    spans::set_enabled(true);
+    b.bench("span_guard_enabled_x1000", || {
+        for _ in 0..1000 {
+            let _s = spans::span(spans::Stage::Eval);
+        }
+    });
+    spans::set_enabled(false);
+    b.bench("counter_inc_x1000", || {
+        for _ in 0..1000 {
+            counters::inc(Ctr::JournalRecords);
+        }
+    });
+    b.bench("recorder_record_x1000", || {
+        for _ in 0..1000 {
+            recorder::record(recorder::EventKind::Tick, 0, 1, 2);
+        }
+    });
+
+    // ---- whole-engine overhead ------------------------------------------
+    // One environment, built once; the two arms time the identical run
+    // with span timing off and on, so the delta is purely observation.
+    let seed = 77;
+    let k = 10;
+    let n = 120;
+    let cfg = StreamConfig {
+        n_clients: k,
+        n_iters: n,
+        data_group_samples: vec![n / 4, n / 2, 3 * n / 4, n],
+        test_size: 60,
+    };
+    let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+    let rff = RffSpace::sample(4, 24, 1.0, &mut Pcg32::derive(seed, &[1]));
+    let mut backend = NativeBackend::new(rff.clone());
+    let part = Participation::grouped(k, &[0.5, 0.25, 0.1, 0.05], 4);
+    let env = Environment::new(
+        stream,
+        rff,
+        part,
+        DelayModel::Geometric { delta: 0.3 },
+        seed,
+        &mut backend,
+    )
+    .expect("build environment");
+    let algo = build(Variant::PaoFedC2, 0.4, 4, 10, 30);
+
+    spans::set_enabled(false);
+    b.bench("engine_120_ticks_telemetry_off", || {
+        let res = engine::run(&env, &algo, &mut backend).expect("run");
+        assert!(res.final_mse.is_finite());
+    });
+    let off = b.enabled("engine_120_ticks_telemetry_off").then(|| b.last_stats()).flatten();
+    spans::set_enabled(true);
+    b.bench("engine_120_ticks_telemetry_on", || {
+        let res = engine::run(&env, &algo, &mut backend).expect("run");
+        assert!(res.final_mse.is_finite());
+    });
+    let on = b.enabled("engine_120_ticks_telemetry_on").then(|| b.last_stats()).flatten();
+    spans::set_enabled(false);
+
+    if let (Some(off), Some(on)) = (off, on) {
+        let pct = (on.mean_ns - off.mean_ns) * 100.0 / off.mean_ns;
+        println!("telemetry-on engine overhead: {pct:.2}% (target < 2%)");
+        b.record_value("engine_overhead_pct", pct);
+    }
+    b.finish();
+}

@@ -242,13 +242,32 @@ pub fn active() -> Option<&'static FaultPlan> {
 }
 
 /// The per-process outbound-frame hook behind [`active`]: counts the
-/// frame and applies the plan's action for it.
+/// frame, tallies the injected action in the fleet counters, and applies
+/// the plan's action for it.
 pub fn write_frame_hook(
     plan: &FaultPlan,
     w: &mut impl Write,
     payload: &[u8],
 ) -> std::io::Result<()> {
+    use crate::obs::counters::{inc, Ctr};
     let n = FRAMES.fetch_add(1, Ordering::Relaxed) + 1;
+    let action = plan.frame_action(n);
+    let kind = match action {
+        FrameAction::Send => None,
+        FrameAction::Corrupt => Some(Ctr::FaultsCorrupt),
+        FrameAction::Drop => Some(Ctr::FaultsDrop),
+        FrameAction::Dup => Some(Ctr::FaultsDup),
+        FrameAction::Delay(_) => Some(Ctr::FaultsDelay),
+    };
+    if let Some(c) = kind {
+        inc(c);
+        crate::obs::recorder::record(
+            crate::obs::recorder::EventKind::Fault,
+            0,
+            n,
+            payload.first().copied().unwrap_or(0) as u64,
+        );
+    }
     plan.write_frame_at(w, payload, n)
 }
 
@@ -268,7 +287,17 @@ pub fn kill_tick() -> Option<usize> {
 /// `role` names the process kind in the death notice.
 pub fn check_kill(iter: usize, role: &str) {
     if kill_tick() == Some(iter) {
-        eprintln!("{role}: injected crash at tick {iter}");
+        crate::obs::counters::inc(crate::obs::counters::Ctr::FaultsKill);
+        crate::obs::recorder::record(
+            crate::obs::recorder::EventKind::Kill,
+            iter as u64,
+            0,
+            0,
+        );
+        crate::obs::logger::warn(format_args!("{role}: injected crash at tick {iter}"));
+        if crate::obs::logger::on(crate::obs::logger::Level::Debug) {
+            crate::obs::recorder::dump_stderr();
+        }
         std::process::exit(3);
     }
 }
@@ -278,7 +307,17 @@ pub fn check_kill(iter: usize, role: &str) {
 pub fn refuse_connect() -> bool {
     match active() {
         Some(plan) if plan.refuse_connects > 0 => {
-            CONNECTS.fetch_add(1, Ordering::Relaxed) < plan.refuse_connects
+            let refused = CONNECTS.fetch_add(1, Ordering::Relaxed) < plan.refuse_connects;
+            if refused {
+                crate::obs::counters::inc(crate::obs::counters::Ctr::FaultsRefuse);
+                crate::obs::recorder::record(
+                    crate::obs::recorder::EventKind::Refuse,
+                    0,
+                    0,
+                    0,
+                );
+            }
+            refused
         }
         _ => false,
     }

@@ -35,6 +35,7 @@ use crate::fl::pipeline;
 use crate::fl::selection::SelectionSchedule;
 use crate::fl::server::{AggregateInfo, AggregationMode, Server, Update};
 use crate::metrics::{mse_test, CommStats};
+use crate::obs::{self, spans};
 use crate::persist::journal::{self, TickRecord};
 use crate::persist::snapshot::{self, QueueState, RunSnapshot, ServerState};
 use crate::persist::{curve, curve_path_for, PersistPolicy};
@@ -100,6 +101,13 @@ pub struct DeploymentReport {
     /// journal is clean). A gapped resume still runs — the structured
     /// event lets operators tell it apart from a clean one.
     pub journal_gap: Option<journal::JournalGap>,
+    /// Telemetry captured at report construction: stage-span histograms
+    /// and fleet counters accumulated over the run. For a TCP fleet this
+    /// covers the whole tree — workers and relays piggyback their
+    /// counter blocks on their final acks, absorbed before the report is
+    /// built. Span histograms are empty unless `--telemetry` /
+    /// `PAO_FED_TELEMETRY` enabled timing.
+    pub telemetry: crate::obs::RunTelemetry,
 }
 
 fn validate(cfg: &DeploymentConfig) -> Result<()> {
@@ -380,19 +388,22 @@ fn serve_loop<T: Transport>(
         let is_participant = pipeline::selection_mask(k, &participants);
 
         // Downlink (stage-4 bookkeeping shared with the tick pipeline).
-        for c in 0..k {
-            let portion = if is_participant[c] {
-                let coords = pipeline::downlink_coords(schedule, algo, c, n);
-                let mut values = Vec::with_capacity(coords.len());
-                let w = &models.server().w;
-                coords.for_each(|j| values.push(w[j]));
-                comm.downlink_scalars += values.len() as u64;
-                comm.downlink_msgs += 1;
-                Some((coords, values))
-            } else {
-                None
-            };
-            transport.send_tick(c, n, portion)?;
+        {
+            let _s = spans::span(spans::Stage::ServeDownlink);
+            for c in 0..k {
+                let portion = if is_participant[c] {
+                    let coords = pipeline::downlink_coords(schedule, algo, c, n);
+                    let mut values = Vec::with_capacity(coords.len());
+                    let w = &models.server().w;
+                    coords.for_each(|j| values.push(w[j]));
+                    comm.downlink_scalars += values.len() as u64;
+                    comm.downlink_msgs += 1;
+                    Some((coords, values))
+                } else {
+                    None
+                };
+                transport.send_tick(c, n, portion)?;
+            }
         }
 
         // Collect acks; sort by client id before filing uploads so the
@@ -400,18 +411,24 @@ fn serve_loop<T: Transport>(
         // of thread scheduling *and* of which worker process answers
         // first (the deployment must reproduce the discrete engine bit
         // for bit).
-        let acks = transport.collect_acks(k)?;
-        for ack in acks {
-            local_steps += ack.learned as u64;
-            if let Some(u) = ack.upload {
-                pipeline::file_update(&mut queue, delay, cfg.env_seed, &mut comm, n, u);
+        {
+            let _s = spans::span(spans::Stage::ServeCollect);
+            let acks = transport.collect_acks(k)?;
+            for ack in acks {
+                local_steps += ack.learned as u64;
+                if let Some(u) = ack.upload {
+                    pipeline::file_update(&mut queue, delay, cfg.env_seed, &mut comm, n, u);
+                }
             }
         }
 
         // Aggregate arrivals (stage 7, shared with the tick pipeline).
-        pipeline::aggregate_arrivals(models.server_mut(), &mut queue, n, &mut agg_total);
+        spans::time(spans::Stage::ServeAggregate, || {
+            pipeline::aggregate_arrivals(models.server_mut(), &mut queue, n, &mut agg_total)
+        });
 
         if n % cfg.eval_every == 0 || n + 1 == n_iters {
+            let _s = spans::span(spans::Stage::ServeEval);
             if eval_pool.is_serial() {
                 models.join_eval();
                 let mse = mse_test(&models.server().w, &z_test, test_y);
@@ -425,6 +442,7 @@ fn serve_loop<T: Transport>(
         }
 
         if let Some(j) = journal.as_mut() {
+            let _s = spans::span(spans::Stage::ServeJournal);
             j.append(&TickRecord {
                 tick: n,
                 w_hash: snapshot::hash_model(&models.server().w),
@@ -438,6 +456,7 @@ fn serve_loop<T: Transport>(
                 && boundary < n_iters;
             let handoff = boundary == stop && stop < n_iters;
             if periodic || handoff {
+                let _s = spans::span(spans::Stage::ServeCheckpoint);
                 // An exact curve cut: the in-flight sample belongs to a
                 // tick at or before this boundary.
                 models.join_eval();
@@ -477,6 +496,7 @@ fn serve_loop<T: Transport>(
         if !cfg.tick.is_zero() {
             thread::sleep(cfg.tick);
         }
+        obs::log::on_tick(n);
     }
 
     let (server, iters, mse_db) = models.into_parts();
@@ -488,6 +508,12 @@ fn serve_loop<T: Transport>(
         curve::write_file(cp, &iters, &mse_db)?;
     }
 
+    obs::log::finish(stop.saturating_sub(1));
+    if obs::logger::on(obs::logger::Level::Debug) {
+        // The flight recorder's recent structured events, for post-run
+        // forensics (reconnects, faults, recoveries, anchors).
+        obs::recorder::dump_stderr();
+    }
     Ok(DeploymentReport {
         iters,
         mse_db,
@@ -500,6 +526,7 @@ fn serve_loop<T: Transport>(
         recovered_workers: transport.recovered_workers(),
         resumed_at: resume.map(|s| s.tick),
         journal_gap,
+        telemetry: obs::RunTelemetry::capture(),
     })
 }
 

@@ -53,6 +53,7 @@ use crate::fl::participation::{AvailSpec, Participation};
 use crate::fl::pipeline;
 use crate::fl::selection::{Coords, SelectionSchedule};
 use crate::fl::server::Update;
+use crate::obs::{self, counters::Ctr, recorder, spans};
 use crate::rff::RffSpace;
 use crate::util::rng::splitmix64;
 use std::collections::VecDeque;
@@ -578,7 +579,11 @@ pub fn connect_with_retry(addr: &str) -> Result<TcpStream> {
     let mut last: Option<Error> = None;
     for ms in BACKOFF_MS {
         if ms > 0 {
+            obs::counters::inc(Ctr::BackoffSleeps);
             thread::sleep(Duration::from_millis(ms));
+        }
+        if last.is_some() {
+            obs::counters::inc(Ctr::ConnectRetries);
         }
         if crate::async_rt::fault::refuse_connect() {
             last = Some(Error::Io(std::io::Error::new(
@@ -1084,7 +1089,7 @@ impl<'e> TcpFleet<'e> {
             // re-sends outstanding ones to the replacement.
             self.links[i].sent.extend(ticks);
             if let Err(e) = res {
-                eprintln!("supervisor: downlink to worker {i} failed: {e}");
+                obs::logger::warn(format_args!("supervisor: downlink to worker {i} failed: {e}"));
                 self.recover_worker(i, self.pending_iter)?;
             }
         }
@@ -1100,6 +1105,7 @@ impl<'e> TcpFleet<'e> {
     /// abort naming the lost shard instead of a hang).
     fn recover_worker(&mut self, i: usize, resume_tick: usize) -> Result<()> {
         self.recovered += 1;
+        obs::counters::inc(Ctr::Recoveries);
         // Close the old socket *before* waiting for a replacement: a
         // worker whose connection the supervisor abandoned (a corrupt
         // uplink frame, say) may be blocked reading the next downlink —
@@ -1111,11 +1117,11 @@ impl<'e> TcpFleet<'e> {
             let _ = h.join();
         }
         let (lo, hi) = self.ranges[i];
-        eprintln!(
+        obs::logger::warn(format_args!(
             "supervisor: worker {i} (clients {lo}..{hi}) lost at tick {resume_tick}; \
              waiting for a replacement on {:?}",
             self.listener.local_addr().ok()
-        );
+        ));
         // A wrong-secret or malformed replacement does not restart the
         // clock: the deadline bounds the whole outage, not one attempt.
         let lost_at = Instant::now();
@@ -1127,18 +1133,19 @@ impl<'e> TcpFleet<'e> {
                 .unwrap_or_else(|_| "<unknown peer>".into());
             match self.adopt(i, resume_tick, sock) {
                 Ok(()) => {
-                    eprintln!(
+                    recorder::record(recorder::EventKind::Recover, resume_tick as u64, lo as u64, hi as u64);
+                    obs::logger::warn(format_args!(
                         "supervisor: worker {i} recovered by {peer} \
                          (replayed {} ticks)",
                         resume_tick - self.log_base
-                    );
+                    ));
                     return Ok(());
                 }
                 Err(e) => {
-                    eprintln!(
+                    obs::logger::warn(format_args!(
                         "supervisor: replacement {peer} failed the handshake: {e}; \
                          still waiting"
-                    );
+                    ));
                 }
             }
         }
@@ -1236,8 +1243,20 @@ impl<'e> TcpFleet<'e> {
                     // a tested helper, not a fleet state — see
                     // [`partial_plan`]).
                     if !need_all && need_states.is_empty() && need_log_buckets.is_empty() {
+                        obs::counters::inc(Ctr::DigestNeedNothing);
+                        recorder::record(
+                            recorder::EventKind::Adopt,
+                            resume_tick as u64,
+                            lo as u64,
+                            hi as u64,
+                        );
                         (ResumePlan { base_tick: resume_tick, states: vec![], log: vec![] }, true)
                     } else {
+                        if need_all {
+                            obs::counters::inc(Ctr::DigestNeedAll);
+                        } else {
+                            obs::counters::inc(Ctr::DigestPartial);
+                        }
                         (full_plan(self), false)
                     }
                 }
@@ -1282,6 +1301,17 @@ impl<'e> TcpFleet<'e> {
 /// the thread; after a clean shutdown nobody reads the channel anymore,
 /// so the forwarded error is inert.
 fn pump_acks(mut reader: BufReader<TcpStream>, tx: Sender<FleetEvent>, worker: usize, gen: u64) {
+    // Telemetry piggyback guard: a fault-duplicated final batch carries
+    // the same counter block twice; absorb at most one per connection.
+    let mut absorbed_stats = false;
+    let mut absorb = |stats: Option<Vec<(u8, u64)>>| {
+        if let Some(block) = stats {
+            if !absorbed_stats {
+                absorbed_stats = true;
+                obs::counters::absorb_block(&block);
+            }
+        }
+    };
     loop {
         match wire::recv_msg(&mut reader) {
             Ok(WireMsg::Ack { client, upload, learned }) => {
@@ -1290,11 +1320,12 @@ fn pump_acks(mut reader: BufReader<TcpStream>, tx: Sender<FleetEvent>, worker: u
                     return;
                 }
             }
-            Ok(WireMsg::AckBatch { acks, iter }) => {
+            Ok(WireMsg::AckBatch { acks, iter, stats }) => {
                 // One frame per worker per tick; the server loop still
                 // consumes (and then sorts) individual acks. The batch's
                 // tick stamp rides on each so the supervisor can discard
                 // a duplicated frame's acks.
+                absorb(stats);
                 for (client, upload, learned) in acks {
                     let ack = Ack { client, upload, learned };
                     if tx.send((worker, gen, Ok(Uplink::Ack(ack, iter)))).is_err() {
@@ -1302,11 +1333,12 @@ fn pump_acks(mut reader: BufReader<TcpStream>, tx: Sender<FleetEvent>, worker: u
                     }
                 }
             }
-            Ok(WireMsg::CombinedUpdate { acks, iter }) => {
+            Ok(WireMsg::CombinedUpdate { acks, iter, stats }) => {
                 // A relay's partial fold: one frame for its whole subtree
                 // per tick. The items are per-client acks, so the root
                 // consumes them exactly like a worker's batch (they get
                 // re-sorted with everyone else's before aggregation).
+                absorb(stats);
                 for (client, upload, learned) in acks {
                     let ack = Ack { client, upload, learned };
                     if tx.send((worker, gen, Ok(Uplink::Ack(ack, Some(iter))))).is_err() {
@@ -1348,6 +1380,8 @@ impl Transport for TcpFleet<'_> {
             // client states (workers are idle at a tick boundary) and
             // re-anchor the replay base there. `dump_states` prunes.
             let _ = self.dump_states(iter)?;
+            obs::counters::inc(Ctr::JournalAnchors);
+            recorder::record(recorder::EventKind::Anchor, iter as u64, self.anchor as u64, 0);
         }
         self.log.push(w.to_vec());
         self.pending_iter = iter;
@@ -1413,7 +1447,7 @@ impl Transport for TcpFleet<'_> {
                     ))
                 }
                 Err(e) => {
-                    eprintln!("supervisor: worker {wi} failed mid-tick: {e}");
+                    obs::logger::warn(format_args!("supervisor: worker {wi} failed mid-tick: {e}"));
                     // The whole tick travels in one frame, so this worker
                     // either served the in-flight tick completely (its
                     // acks were queued before the failure — the
@@ -1442,7 +1476,9 @@ impl Transport for TcpFleet<'_> {
             let res = wire::send_msg(&mut self.links[i].writer, &WireMsg::StateRequest)
                 .and_then(|_| self.links[i].writer.flush().map_err(Error::from));
             if let Err(e) = res {
-                eprintln!("supervisor: state request to worker {i} failed: {e}");
+                obs::logger::warn(format_args!(
+                    "supervisor: state request to worker {i} failed: {e}"
+                ));
                 self.recover_worker(i, next_tick)?;
                 wire::send_msg(&mut self.links[i].writer, &WireMsg::StateRequest)?;
                 self.links[i].writer.flush()?;
@@ -1491,7 +1527,9 @@ impl Transport for TcpFleet<'_> {
                     ));
                 }
                 Err(e) => {
-                    eprintln!("supervisor: worker {wi} lost during checkpoint: {e}");
+                    obs::logger::warn(format_args!(
+                        "supervisor: worker {wi} lost during checkpoint: {e}"
+                    ));
                     self.recover_worker(wi, next_tick)?;
                     if !dumped[wi] {
                         wire::send_msg(&mut self.links[wi].writer, &WireMsg::StateRequest)?;
@@ -1771,10 +1809,11 @@ pub fn run_worker_with(addr: &str, opts: &WorkerOptions) -> Result<WorkerReport>
                     return Err(e);
                 }
                 reconnects += 1;
-                eprintln!(
+                recorder::record(recorder::EventKind::Reconnect, 0, reconnects as u64, 0);
+                obs::logger::warn(format_args!(
                     "worker: connection lost ({e}); reconnecting \
                      ({reconnects}/{MAX_WORKER_RECONNECTS})"
-                );
+                ));
             }
         }
     }
@@ -1799,6 +1838,15 @@ struct WorkerCache {
     /// acks, or a fault-duplicated downlink) is answered with these
     /// exact items — re-executing it would double-apply the local step.
     last_acks: Option<(usize, Vec<(usize, Option<Update>, u32)>)>,
+    /// Whether this link's handshake carried the appended ext fields —
+    /// `true` for every tree assignment (the tag-12 layout always has
+    /// them) and for a non-legacy `Hello`. Gates the telemetry counter
+    /// block on the final ack: a legacy peer's decoder rejects trailing
+    /// bytes, so the block is only attached when the handshake proved
+    /// the peer current. Note this is a property of the *handshake*,
+    /// never of any telemetry setting — wire bytes stay independent of
+    /// whether observation is enabled.
+    ext_ok: bool,
     report: WorkerReport,
 }
 
@@ -1995,6 +2043,7 @@ fn worker_session(
         states,
         next_iter,
         last_acks: None,
+        ext_ok: !legacy_hello,
         report,
     });
     sock.set_read_timeout(None)?;
@@ -2045,9 +2094,13 @@ fn serve_worker(
                             "tick {iter} re-sent but no acks are cached"
                         )));
                     };
+                    // A resend never re-attaches the counter block: the
+                    // original final frame may also still be in flight
+                    // (fault-duplicated), and the server guards against
+                    // absorbing two blocks from one link anyway.
                     wire::send_msg_c(
                         &mut writer,
-                        &WireMsg::AckBatch { acks, iter: Some(cached_iter) },
+                        &WireMsg::AckBatch { acks, iter: Some(cached_iter), stats: None },
                         compress,
                     )?;
                     writer.flush()?;
@@ -2078,12 +2131,21 @@ fn serve_worker(
                 // replacement connection.
                 c.last_acks = Some((iter, acks.clone()));
                 c.next_iter = iter + 1;
+                // The final tick's batch carries this process's fleet
+                // counters so the root's run log covers the whole tree.
+                // Attached unconditionally (not only when telemetry is
+                // on) so the wire bytes never depend on an observation
+                // knob — but only on links whose handshake proved the
+                // peer understands appended ext fields.
+                let stats = (c.ext_ok && iter + 1 == c.assignment.n_iters)
+                    .then(obs::counters::export_block);
                 wire::send_msg_c(
                     &mut writer,
-                    &WireMsg::AckBatch { acks, iter: Some(iter) },
+                    &WireMsg::AckBatch { acks, iter: Some(iter), stats },
                     compress,
                 )?;
                 writer.flush()?;
+                obs::log::on_tick(iter);
             }
             WireMsg::StateRequest => {
                 let dump: Vec<Vec<f32>> = c.states.iter().map(|s| s.w.clone()).collect();
@@ -2093,7 +2155,10 @@ fn serve_worker(
                 )?;
                 writer.flush()?;
             }
-            WireMsg::Shutdown => return Ok(c.report),
+            WireMsg::Shutdown => {
+                obs::log::finish(c.next_iter.saturating_sub(1));
+                return Ok(c.report);
+            }
             other => {
                 return Err(Error::Protocol(format!(
                     "unexpected downlink message {other:?}"
@@ -2169,6 +2234,11 @@ struct RelayChild {
     /// Downlinks buffered for the in-flight tick (coalesced into one
     /// `TickBatch` frame at flush, like the root's [`WorkerLink`]).
     pending: Vec<(usize, Option<(Coords, Vec<f32>)>)>,
+    /// Telemetry counter block piggybacked on this child's final ack
+    /// batch; first block wins (a fault-duplicated frame carries the
+    /// same block twice). Folded into the relay's own block for the
+    /// final [`wire::WireMsg::CombinedUpdate`].
+    stats: Option<Vec<(u8, u64)>>,
 }
 
 /// The inner node of the aggregator tree: a [`Transport`] over the
@@ -2280,6 +2350,7 @@ impl RelayNode {
                 hi: chi,
                 compress: child_compress,
                 pending: Vec::new(),
+                stats: None,
             });
         }
         Ok(RelayNode {
@@ -2309,6 +2380,20 @@ impl RelayNode {
             self.awaiting.push_back((ci, n_items));
         }
         Ok(())
+    }
+
+    /// Fold every child's piggybacked counter block with this relay
+    /// process's own counters into the single block re-exported on the
+    /// final [`wire::WireMsg::CombinedUpdate`], so the root's telemetry
+    /// covers the whole subtree in one absorb.
+    fn subtree_stats(&self) -> Vec<(u8, u64)> {
+        let mut acc = obs::counters::export_block();
+        for child in &self.children {
+            if let Some(block) = &child.stats {
+                obs::counters::merge_block(&mut acc, block);
+            }
+        }
+        acc
     }
 }
 
@@ -2349,7 +2434,16 @@ impl Transport for RelayNode {
             };
             let acks = loop {
                 match wire::recv_msg(&mut self.children[ci].reader)? {
-                    WireMsg::AckBatch { acks, iter } => {
+                    WireMsg::AckBatch { acks, iter, stats } => {
+                        // The child's final batch piggybacks its fleet
+                        // counter block; keep the first one seen so a
+                        // duplicated frame cannot double-count.
+                        if let Some(block) = stats {
+                            let slot = &mut self.children[ci].stats;
+                            if slot.is_none() {
+                                *slot = Some(block);
+                            }
+                        }
                         // A stale stamp marks a duplicated or re-sent
                         // batch from an earlier tick (fault injection, a
                         // child answering a re-send twice): discard it
@@ -2537,17 +2631,24 @@ pub fn run_relay(addr: &str, listener: &TcpListener, opts: &WorkerOptions) -> Re
                 // over contiguous child ranges this *is* the fixed tree
                 // order, and the root re-sorts the concatenation with
                 // every other subtree's acks before aggregating.
-                let acks = node
-                    .collect_acks(n_items)?
+                let acks = spans::time(spans::Stage::RelayFold, || node.collect_acks(n_items))?
                     .into_iter()
                     .map(|a| (a.client, a.upload, a.learned))
                     .collect();
-                let combined = WireMsg::CombinedUpdate { iter, acks };
+                // On the last tick the children's final batches have all
+                // arrived (each carrying its counter block), so the
+                // relay folds subtree + self into one block upstream.
+                // Like the worker's, attachment depends only on the run
+                // shape, never on whether telemetry output is enabled.
+                let stats =
+                    (iter + 1 == sub.n_iters).then(|| node.subtree_stats());
+                let combined = WireMsg::CombinedUpdate { iter, acks, stats };
                 wire::send_msg_c(&mut writer, &combined, compress_up)?;
                 writer.flush()?;
                 last_combined = Some(combined);
                 next_iter = Some(iter + 1);
                 report.ticks += 1;
+                obs::log::on_tick(iter);
             }
             WireMsg::StateRequest => {
                 let states = node.dump_states(0)?;
@@ -2556,6 +2657,7 @@ pub fn run_relay(addr: &str, listener: &TcpListener, opts: &WorkerOptions) -> Re
             }
             WireMsg::Shutdown => {
                 node.shutdown()?;
+                obs::log::finish(next_iter.unwrap_or(1).saturating_sub(1));
                 break;
             }
             other => {

@@ -154,6 +154,15 @@ pub enum WireMsg {
         /// tick boundary instead of misfiling its acks — the frame-dup
         /// fault's determinism guard.
         iter: Option<usize>,
+        /// Telemetry piggyback: the worker's nonzero fleet counters as
+        /// `(id, value)` pairs ([`crate::obs::counters::export_block`]),
+        /// attached only to the *final* tick's batch so the root's
+        /// telemetry covers the whole fleet without extra frames. A
+        /// second trailing ext field after `iter` (absent on frames
+        /// from older binaries → `None`); always sent by current
+        /// binaries regardless of telemetry settings, so wire bytes
+        /// never depend on whether observation is enabled.
+        stats: Option<Vec<(u8, u64)>>,
     },
     /// Server -> worker: upload every hosted client's local model (the
     /// checkpoint state-capture request; answered by
@@ -181,6 +190,12 @@ pub enum WireMsg {
         /// Per client, `(client, upload, learned)` — the same item shape
         /// as [`WireMsg::AckBatch`], sorted by client id.
         acks: Vec<(usize, Option<Update>, u32)>,
+        /// Telemetry piggyback: the subtree's merged fleet counters
+        /// (the relay's own [`crate::obs::counters::export_block`]
+        /// folded with its children's final-ack blocks), attached only
+        /// to the final tick's fold. Trailing ext field — absent on
+        /// frames from older binaries → `None`.
+        stats: Option<Vec<(u8, u64)>>,
     },
     /// Server/relay -> child: the generative handshake assigning a
     /// contiguous client range *without* materialized shards — the child
@@ -443,6 +458,32 @@ fn put_ack_items(buf: &mut Vec<u8>, acks: &[(usize, Option<Update>, u32)]) {
     }
 }
 
+/// The raw telemetry-counter block shared by [`WireMsg::AckBatch`] and
+/// [`WireMsg::CombinedUpdate`]: pair count, then per pair the counter id
+/// byte and the u64 value.
+fn put_stats_block(buf: &mut Vec<u8>, stats: &[(u8, u64)]) {
+    codec::put_usize(buf, stats.len());
+    for (id, v) in stats {
+        buf.push(*id);
+        codec::put_u64(buf, *v);
+    }
+}
+
+fn get_stats_block(c: &mut Cur<'_>) -> Result<Vec<(u8, u64)>> {
+    let n = c.usize()?;
+    // A counter block never exceeds one entry per possible id.
+    if n > 256 {
+        return Err(Error::Protocol(format!("stats block count {n} out of range")));
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let id = c.u8()?;
+        let v = c.u64()?;
+        out.push((id, v));
+    }
+    Ok(out)
+}
+
 fn put_stream_spec(buf: &mut Vec<u8>, spec: &StreamSpec) {
     codec::put_usize(buf, spec.config.n_clients);
     codec::put_usize(buf, spec.config.n_iters);
@@ -558,13 +599,22 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
                 put_portion(&mut buf, portion);
             }
         }
-        WireMsg::AckBatch { acks, iter } => {
+        WireMsg::AckBatch { acks, iter, stats } => {
             buf.push(6);
             put_ack_items(&mut buf, acks);
             // The tick stamp rides after the legacy layout, like the
             // handshake ext fields: absent on old frames, optional here.
+            // The stats block rides after the stamp and therefore
+            // *requires* it — with no stamp the decoder would read the
+            // block's first bytes as the stamp. Senders always stamp
+            // when they attach stats (the final-tick ack is stamped);
+            // encode enforces the dependency by dropping an unstamped
+            // block rather than emitting an ambiguous frame.
             if let Some(it) = iter {
                 codec::put_usize(&mut buf, *it);
+                if let Some(st) = stats {
+                    put_stats_block(&mut buf, st);
+                }
             }
         }
         WireMsg::StateRequest => buf.push(7),
@@ -573,10 +623,14 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
             codec::put_usize(&mut buf, *client_lo);
             put_f32_rows(&mut buf, states);
         }
-        WireMsg::CombinedUpdate { iter, acks } => {
+        WireMsg::CombinedUpdate { iter, acks, stats } => {
             buf.push(11);
             codec::put_usize(&mut buf, *iter);
             put_ack_items(&mut buf, acks);
+            // Trailing ext field: absent on frames from older binaries.
+            if let Some(st) = stats {
+                put_stats_block(&mut buf, st);
+            }
         }
         WireMsg::SubtreeAssignment(a) => {
             buf.push(12);
@@ -811,24 +865,55 @@ pub fn encode_compressed(msg: &WireMsg) -> Vec<u8> {
             compress::put_f32_stream(&mut buf, &values);
             seal(buf)
         }
-        WireMsg::AckBatch { acks, iter } => {
+        WireMsg::AckBatch { acks, iter, stats } => {
             let mut buf = vec![TAG_ACK_BATCH_C];
             put_ack_items_c(&mut buf, acks);
             // Optional tick stamp, inside the sealed body (same
-            // trailing-field scheme as the raw tag-6 encoding).
+            // trailing-field scheme as the raw tag-6 encoding). The
+            // stats block requires the stamp, exactly as in `encode`.
             if let Some(it) = iter {
                 codec::put_varint(&mut buf, *it as u64);
+                if let Some(st) = stats {
+                    put_stats_block_c(&mut buf, st);
+                }
             }
             seal(buf)
         }
-        WireMsg::CombinedUpdate { iter, acks } => {
+        WireMsg::CombinedUpdate { iter, acks, stats } => {
             let mut buf = vec![TAG_COMBINED_UPDATE_C];
             codec::put_varint(&mut buf, *iter as u64);
             put_ack_items_c(&mut buf, acks);
+            if let Some(st) = stats {
+                put_stats_block_c(&mut buf, st);
+            }
             seal(buf)
         }
         other => encode(other),
     }
+}
+
+/// Compact telemetry-counter block (tags 10 and 13): varint pair count,
+/// then per pair the id byte and a varint value.
+fn put_stats_block_c(buf: &mut Vec<u8>, stats: &[(u8, u64)]) {
+    codec::put_varint(buf, stats.len() as u64);
+    for (id, v) in stats {
+        buf.push(*id);
+        codec::put_varint(buf, *v);
+    }
+}
+
+fn get_stats_block_c(c: &mut Cur<'_>) -> Result<Vec<(u8, u64)>> {
+    let n = varint_usize(c)?;
+    if n > 256 {
+        return Err(Error::Protocol(format!("stats block count {n} out of range")));
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let id = c.u8()?;
+        let v = c.varint()?;
+        out.push((id, v));
+    }
+    Ok(out)
 }
 
 /// The compressed ack-item body shared by tags 10 and 13: varint count,
@@ -973,10 +1058,16 @@ fn decode_compressed(payload: &[u8]) -> Result<WireMsg> {
         TAG_ACK_BATCH_C => {
             let acks = get_ack_items_c(&mut c)?;
             let iter = if c.remaining() > 0 { Some(varint_usize(&mut c)?) } else { None };
-            WireMsg::AckBatch { acks, iter }
+            let stats =
+                if c.remaining() > 0 { Some(get_stats_block_c(&mut c)?) } else { None };
+            WireMsg::AckBatch { acks, iter, stats }
         }
         TAG_COMBINED_UPDATE_C => {
-            WireMsg::CombinedUpdate { iter: varint_usize(&mut c)?, acks: get_ack_items_c(&mut c)? }
+            let iter = varint_usize(&mut c)?;
+            let acks = get_ack_items_c(&mut c)?;
+            let stats =
+                if c.remaining() > 0 { Some(get_stats_block_c(&mut c)?) } else { None };
+            WireMsg::CombinedUpdate { iter, acks, stats }
         }
         t => return Err(Error::Protocol(format!("bad compressed message tag {t}"))),
     };
@@ -1183,11 +1274,17 @@ pub fn decode(payload: &[u8]) -> Result<WireMsg> {
         6 => {
             let acks = get_ack_items(&mut c)?;
             let iter = if c.remaining() > 0 { Some(c.usize()?) } else { None };
-            WireMsg::AckBatch { acks, iter }
+            let stats = if c.remaining() > 0 { Some(get_stats_block(&mut c)?) } else { None };
+            WireMsg::AckBatch { acks, iter, stats }
         }
         7 => WireMsg::StateRequest,
         8 => WireMsg::StateDump { client_lo: c.usize()?, states: f32_rows(&mut c)? },
-        11 => WireMsg::CombinedUpdate { iter: c.usize()?, acks: get_ack_items(&mut c)? },
+        11 => {
+            let iter = c.usize()?;
+            let acks = get_ack_items(&mut c)?;
+            let stats = if c.remaining() > 0 { Some(get_stats_block(&mut c)?) } else { None };
+            WireMsg::CombinedUpdate { iter, acks, stats }
+        }
         12 => {
             let client_lo = c.usize()?;
             let client_hi = c.usize()?;
@@ -1277,6 +1374,10 @@ pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
             payload.len()
         )));
     }
+    // Observation only, and counted *before* the fault hook: the frame
+    // the protocol tried to send is the event of record, whatever the
+    // fault layer then does to it (the fault counters track that part).
+    crate::obs::counters::frame_sent(payload.first().copied().unwrap_or(0xff), payload.len());
     if let Some(plan) = crate::async_rt::fault::active() {
         crate::async_rt::fault::write_frame_hook(plan, w, payload)?;
         return Ok(());
@@ -1298,27 +1399,33 @@ pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>> {
     }
     let mut buf = vec![0u8; len];
     r.read_exact(&mut buf)?;
+    crate::obs::counters::frame_recv(buf.first().copied().unwrap_or(0xff), buf.len());
     Ok(buf)
 }
 
 /// Encode + frame + write one message.
 pub fn send_msg(w: &mut impl Write, msg: &WireMsg) -> Result<()> {
-    write_frame(w, &encode(msg))
+    let payload = crate::obs::spans::time(crate::obs::spans::Stage::WireEncode, || encode(msg));
+    write_frame(w, &payload)
 }
 
 /// [`send_msg`] with a per-link encoding choice: the transport calls
 /// this with the link's negotiated `compress` flag.
 pub fn send_msg_c(w: &mut impl Write, msg: &WireMsg, compress: bool) -> Result<()> {
-    if compress {
-        write_frame(w, &encode_compressed(msg))
-    } else {
-        write_frame(w, &encode(msg))
-    }
+    let payload = crate::obs::spans::time(crate::obs::spans::Stage::WireEncode, || {
+        if compress {
+            encode_compressed(msg)
+        } else {
+            encode(msg)
+        }
+    });
+    write_frame(w, &payload)
 }
 
 /// Read + decode one message.
 pub fn recv_msg(r: &mut impl Read) -> Result<WireMsg> {
-    decode(&read_frame(r)?)
+    let frame = read_frame(r)?;
+    crate::obs::spans::time(crate::obs::spans::Stage::WireDecode, || decode(&frame))
 }
 
 #[cfg(test)]
@@ -1450,16 +1557,29 @@ mod tests {
             coords,
             values: vec![0.5, -0.0, f32::MIN_POSITIVE],
         };
-        roundtrip(&WireMsg::AckBatch { acks: vec![], iter: None });
+        roundtrip(&WireMsg::AckBatch { acks: vec![], iter: None, stats: None });
         roundtrip(&WireMsg::AckBatch {
             acks: vec![(3, None, 1), (4, Some(update.clone()), 0), (5, None, 0)],
             iter: None,
+            stats: None,
         });
         // The optional tick stamp must survive both encodings (the
         // roundtrip helper already exercises raw + framed paths).
         roundtrip(&WireMsg::AckBatch {
+            acks: vec![(3, None, 1), (4, Some(update.clone()), 0)],
+            iter: Some(417),
+            stats: None,
+        });
+        // And the telemetry piggyback after it.
+        roundtrip(&WireMsg::AckBatch {
             acks: vec![(3, None, 1), (4, Some(update), 0)],
             iter: Some(417),
+            stats: Some(vec![(0, 3), (11, 1), (64, 417), (96, 123_456_789)]),
+        });
+        roundtrip(&WireMsg::AckBatch {
+            acks: vec![],
+            iter: Some(0),
+            stats: Some(vec![]),
         });
     }
 
@@ -1594,7 +1714,11 @@ mod tests {
                     (1, Some((Coords::Range { start: 2, len: 3, d: 8 }, vec![1.0, 2.0, 3.0]))),
                 ],
             },
-            WireMsg::AckBatch { acks: vec![(0, None, 1), (1, Some(update), 0)], iter: None },
+            WireMsg::AckBatch {
+                acks: vec![(0, None, 1), (1, Some(update), 0)],
+                iter: None,
+                stats: None,
+            },
             WireMsg::StateDump { client_lo: 2, states: vec![vec![1.0, 2.0], vec![3.0]] },
         ];
         for msg in &msgs {
@@ -1751,7 +1875,7 @@ mod tests {
                     ),
                 ],
             },
-            WireMsg::AckBatch { acks: vec![], iter: None },
+            WireMsg::AckBatch { acks: vec![], iter: None, stats: None },
             WireMsg::AckBatch {
                 acks: vec![
                     (3, None, 1),
@@ -1760,12 +1884,19 @@ mod tests {
                     (8, Some(update(8, vec![2, 3, 4])), 1),
                 ],
                 iter: None,
+                stats: None,
             },
             WireMsg::AckBatch {
                 acks: vec![(3, None, 1), (4, Some(update(4, vec![0, 5, 31])), 0)],
                 iter: Some(12345),
+                stats: None,
             },
-            WireMsg::CombinedUpdate { iter: 41, acks: vec![] },
+            WireMsg::AckBatch {
+                acks: vec![(3, None, 1)],
+                iter: Some(99),
+                stats: Some(vec![(0, 2), (15, u64::MAX), (64, 100), (175, 12_345)]),
+            },
+            WireMsg::CombinedUpdate { iter: 41, acks: vec![], stats: None },
             WireMsg::CombinedUpdate {
                 iter: 1000,
                 acks: vec![
@@ -1774,6 +1905,12 @@ mod tests {
                     (2, None, 1),
                     (3, Some(update(3, vec![0, 31])), 1),
                 ],
+                stats: None,
+            },
+            WireMsg::CombinedUpdate {
+                iter: 7,
+                acks: vec![(0, None, 1)],
+                stats: Some(vec![(11, 3), (96, 9_999_999)]),
             },
         ]
     }
@@ -1926,7 +2063,7 @@ mod tests {
     /// or without a resume plan — at a size flat in K.
     #[test]
     fn roundtrip_tree_frames() {
-        roundtrip(&WireMsg::CombinedUpdate { iter: 7, acks: vec![] });
+        roundtrip(&WireMsg::CombinedUpdate { iter: 7, acks: vec![], stats: None });
         let update = Update {
             client: 9,
             sent_iter: 6,
@@ -1935,7 +2072,13 @@ mod tests {
         };
         roundtrip(&WireMsg::CombinedUpdate {
             iter: 7,
-            acks: vec![(8, None, 1), (9, Some(update), 0), (10, None, 0)],
+            acks: vec![(8, None, 1), (9, Some(update.clone()), 0), (10, None, 0)],
+            stats: None,
+        });
+        roundtrip(&WireMsg::CombinedUpdate {
+            iter: 7,
+            acks: vec![(8, None, 1), (9, Some(update), 0)],
+            stats: Some(vec![(0, 1), (64, 7), (160, u64::MAX)]),
         });
         for (fanout, resume) in [
             (1, None),
@@ -2002,6 +2145,7 @@ mod tests {
         let good = encode(&WireMsg::CombinedUpdate {
             iter: 4,
             acks: vec![(0, None, 1), (1, Some(update), 0)],
+            stats: None,
         });
         for cut in 2..good.len() {
             assert!(decode(&good[..cut]).is_err(), "combined prefix {cut} accepted");
@@ -2092,12 +2236,16 @@ mod tests {
     /// (decoding to `iter: None`), while any other cut is corruption.
     #[test]
     fn ack_batch_stamp_is_an_ext_field() {
-        let stamped = WireMsg::AckBatch { acks: vec![(2, None, 1), (7, None, 0)], iter: Some(9) };
+        let stamped = WireMsg::AckBatch {
+            acks: vec![(2, None, 1), (7, None, 0)],
+            iter: Some(9),
+            stats: None,
+        };
         let good = encode(&stamped);
         let legacy_cut = good.len() - 8; // the stamp is one fixed-width u64
         assert_eq!(
             decode(&good[..legacy_cut]).unwrap(),
-            WireMsg::AckBatch { acks: vec![(2, None, 1), (7, None, 0)], iter: None }
+            WireMsg::AckBatch { acks: vec![(2, None, 1), (7, None, 0)], iter: None, stats: None }
         );
         for cut in 1..good.len() {
             if cut == legacy_cut {
@@ -2109,5 +2257,45 @@ mod tests {
         let enc = encode_compressed(&stamped);
         assert_eq!(enc[0], TAG_ACK_BATCH_C);
         assert_eq!(decode(&enc).unwrap(), stamped);
+    }
+
+    /// The telemetry piggyback is the *second* ext field: stripping it
+    /// yields the stamped layout, stripping both yields the legacy
+    /// layout, and a stats block without a stamp is never emitted (the
+    /// encoder drops it rather than writing an ambiguous frame).
+    #[test]
+    fn ack_batch_stats_block_is_a_second_ext_field() {
+        let acks = vec![(2, None, 1), (7, None, 0)];
+        let full = WireMsg::AckBatch {
+            acks: acks.clone(),
+            iter: Some(9),
+            stats: Some(vec![(0, 4), (64, 10)]),
+        };
+        let good = encode(&full);
+        // Block layout: count u64 + 2 pairs of (id u8 + value u64).
+        let block_len = 8 + 2 * 9;
+        let stamped_cut = good.len() - block_len;
+        assert_eq!(
+            decode(&good[..stamped_cut]).unwrap(),
+            WireMsg::AckBatch { acks: acks.clone(), iter: Some(9), stats: None }
+        );
+        assert_eq!(
+            decode(&good[..stamped_cut - 8]).unwrap(),
+            WireMsg::AckBatch { acks: acks.clone(), iter: None, stats: None }
+        );
+        // Unstamped stats are dropped, not emitted ambiguously.
+        let unstamped = encode(&WireMsg::AckBatch {
+            acks: acks.clone(),
+            iter: None,
+            stats: Some(vec![(0, 4)]),
+        });
+        assert_eq!(
+            decode(&unstamped).unwrap(),
+            WireMsg::AckBatch { acks, iter: None, stats: None }
+        );
+        // A hostile block count is refused before reservation.
+        let mut evil = good.clone();
+        evil[stamped_cut..stamped_cut + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(matches!(decode(&evil), Err(Error::Protocol(_))));
     }
 }

@@ -35,6 +35,14 @@
 //! delays, corruption, connect refusals, tick-scheduled kills — see
 //! `async_rt::fault` for the grammar). The same plan text is honored
 //! from `PAO_FED_FAULT_PLAN` for processes spawned without the flag.
+//!
+//! Telemetry flag (every command): `--telemetry PATH` enables span
+//! timing and writes the machine-readable run log (`pao-fed-telemetry-v1`
+//! JSONL, one snapshot every `PAO_FED_TELEMETRY_EVERY` ticks plus a
+//! final record) to PATH; `PAO_FED_TELEMETRY=PATH` is the env
+//! equivalent for spawned workers/relays. `PAO_FED_LOG=off|warn|info|
+//! debug` tunes the stderr logger independently. Telemetry is strictly
+//! observation-only — results are byte-identical with it on or off.
 
 use std::collections::BTreeMap;
 
@@ -182,6 +190,17 @@ mod tests {
         let a = p("deploy --connect 127.0.0.1:7000 --fault-plan seed=7;corrupt:frame=40").unwrap();
         assert_eq!(a.get("fault-plan"), Some("seed=7;corrupt:frame=40"));
         assert!(p("deploy --fault-plan").is_err());
+    }
+
+    #[test]
+    fn telemetry_flag_parses() {
+        // --telemetry takes a value (the JSONL path), so it needs no
+        // SWITCHES entry; a bare switch is an error.
+        let a = p("deploy --connect 127.0.0.1:7000 --telemetry out.jsonl").unwrap();
+        assert_eq!(a.get("telemetry"), Some("out.jsonl"));
+        let b = p("fig3a --telemetry /tmp/fig3a.jsonl").unwrap();
+        assert_eq!(b.get("telemetry"), Some("/tmp/fig3a.jsonl"));
+        assert!(p("deploy --telemetry").is_err());
     }
 
     #[test]

@@ -250,7 +250,9 @@ pub fn open(path: Option<&std::path::Path>, max_rows: usize, seed: u64) -> Box<d
     if let Some(p) = candidate {
         match CalcofiCsv::load(&p, max_rows) {
             Ok(src) => return Box::new(src),
-            Err(e) => eprintln!("calcofi: failed to load {p:?} ({e}); using synthetic substitute"),
+            Err(e) => crate::obs::logger::warn(format_args!(
+                "calcofi: failed to load {p:?} ({e}); using synthetic substitute"
+            )),
         }
     }
     Box::new(CalcofiSynthetic::new(seed))

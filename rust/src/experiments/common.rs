@@ -274,13 +274,13 @@ pub fn run_variants(
         // otherwise degrade to serial silently.
         static XLA_SERIAL_WARNING: std::sync::Once = std::sync::Once::new();
         XLA_SERIAL_WARNING.call_once(|| {
-            eprintln!(
-                "warning: the XLA backend is pinned to the serial engine; \
+            crate::obs::logger::warn(
+                "the XLA backend is pinned to the serial engine; \
                  --jobs/--shards are ignored for this run. The native \
                  backend's pool path (sharded client step + double-buffered \
                  aggregation/eval, fl::pipeline::ModelBuffer) does not apply: \
                  PJRT executables are not shareable across threads \
-                 (ROADMAP: \"XLA-backend parallel path\")"
+                 (ROADMAP: \"XLA-backend parallel path\")",
             );
         });
     }
@@ -306,11 +306,11 @@ pub fn run_variants(
             // Missing checkpoints start fresh by design (a sweep may be
             // partially complete), but a missing *directory* is almost
             // certainly a typo — say so instead of silently recomputing.
-            eprintln!(
-                "warning: --resume directory {} does not exist; \
+            crate::obs::logger::warn(format_args!(
+                "--resume directory {} does not exist; \
                  every Monte-Carlo run starts from tick 0",
                 dir.display()
-            );
+            ));
         }
     }
     let persist_dir = if ctx.checkpoint_every > 0 || ctx.resume_from.is_some() {

@@ -199,7 +199,9 @@ pub fn run_sharded(
     let mut pipeline = TickPipeline::new(env, algo);
     for n in 0..env.stream.n_iters {
         pipeline.tick(n, backend, pool)?;
+        crate::obs::log::on_tick(n);
     }
+    crate::obs::log::finish(env.stream.n_iters.saturating_sub(1));
     Ok(pipeline.finish())
 }
 
@@ -248,7 +250,9 @@ pub fn run_resumable(
         if every > 0 && (n + 1) % every == 0 && n + 1 < n_iters {
             snapshot::write_file(&persist.path, &pipeline.snapshot(n + 1))?;
         }
+        crate::obs::log::on_tick(n);
     }
+    crate::obs::log::finish(n_iters.saturating_sub(1));
     Ok(pipeline.finish())
 }
 

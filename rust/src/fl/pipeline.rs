@@ -533,14 +533,15 @@ impl<'e> TickPipeline<'e> {
         backend: &mut dyn ComputeBackend,
         pool: &PoolHandle,
     ) -> Result<()> {
-        self.stage_arrivals(n);
-        self.stage_schedule(n);
-        self.stage_downlink(n);
-        self.drain_pending(pool);
-        self.stage_client_compute(backend, pool)?;
-        self.stage_uplink(n);
-        self.stage_aggregate(n, pool);
-        self.stage_eval(n, pool);
+        use crate::obs::spans::{self, Stage};
+        spans::time(Stage::Arrivals, || self.stage_arrivals(n));
+        spans::time(Stage::Schedule, || self.stage_schedule(n));
+        spans::time(Stage::Downlink, || self.stage_downlink(n));
+        spans::time(Stage::Barrier, || self.drain_pending(pool));
+        spans::time(Stage::ClientCompute, || self.stage_client_compute(backend, pool))?;
+        spans::time(Stage::Uplink, || self.stage_uplink(n));
+        spans::time(Stage::Aggregate, || self.stage_aggregate(n, pool));
+        spans::time(Stage::Eval, || self.stage_eval(n, pool));
         Ok(())
     }
 

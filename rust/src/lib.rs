@@ -36,6 +36,7 @@ pub mod experiments;
 pub mod fl;
 pub mod linalg;
 pub mod metrics;
+pub mod obs;
 pub mod persist;
 pub mod rff;
 pub mod runtime;

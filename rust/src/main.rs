@@ -36,6 +36,12 @@
 //!                 this process, e.g. "seed=7;corrupt:frame=40;kill:tick=30";
 //!                 also readable from PAO_FED_FAULT_PLAN; see
 //!                 async_rt::fault for the grammar)
+//!   telemetry:    --telemetry PATH (every command: enable span timing and
+//!                 write the pao-fed-telemetry-v1 JSONL run log to PATH;
+//!                 PAO_FED_TELEMETRY=PATH for spawned workers/relays,
+//!                 PAO_FED_TELEMETRY_EVERY=N tunes the snapshot period,
+//!                 PAO_FED_LOG=off|warn|info|debug the stderr logger.
+//!                 Observation-only: results are byte-identical on or off)
 //!
 //! flags:
 //!   --mc N        Monte-Carlo runs per curve            (default 3)
@@ -92,7 +98,9 @@ fn usage() -> ! {
          [--clients K] [--iters N] [--seed S] [--dim D] [--delta F] [--eval-every E]\n  \
          [--topology F1,F2,...] [--accept-deadline SECS]\n  \
          [--checkpoint-every N] [--checkpoint PATH] [--resume PATH] [--run-until T]\n  \
-         [--compress] [--secret S] [--legacy-wire] [--legacy-hello] [--fault-plan PLAN]",
+         [--compress] [--secret S] [--legacy-wire] [--legacy-hello] [--fault-plan PLAN]\n\
+         telemetry:   [--telemetry PATH] (any command: span timing + JSONL run log;\n  \
+         env: PAO_FED_TELEMETRY, PAO_FED_TELEMETRY_EVERY, PAO_FED_LOG)",
         experiments::ALL.join(" "),
         experiments::EXTRAS.join(" ")
     );
@@ -241,6 +249,17 @@ fn print_deployment(report: &DeploymentReport) {
             gap.found_records, gap.start_tick, gap.first_missing_tick
         );
     }
+    // One-screen self-observation summary — only when the operator asked
+    // for telemetry, so the default output shape is unchanged.
+    if pao_fed::obs::spans::enabled() {
+        let table = report.telemetry.summary_table();
+        if !table.is_empty() {
+            println!("  telemetry:");
+            for line in table.lines() {
+                println!("    {line}");
+            }
+        }
+    }
 }
 
 fn run_deploy(args: &Args) -> Result<(), String> {
@@ -319,10 +338,37 @@ fn main() {
         usage();
     };
 
+    // Install telemetry before any command runs (experiments and every
+    // deploy role alike). An explicit --telemetry flag wins over the
+    // PAO_FED_TELEMETRY env knob, which covers spawned workers/relays.
+    let telemetry = if let Some(p) = args.get("telemetry") {
+        let path = PathBuf::from(p);
+        if let Err(e) = pao_fed::obs::log::install(&path) {
+            eprintln!("error: --telemetry {p}: {e}");
+            std::process::exit(2);
+        }
+        Some(path)
+    } else {
+        match pao_fed::obs::log::install_from_env() {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("error: PAO_FED_TELEMETRY: {e}");
+                std::process::exit(2);
+            }
+        }
+    };
+
     if cmd == "deploy" {
         if let Err(e) = run_deploy(&args) {
             eprintln!("deploy failed: {e}");
+            // The flight recorder holds the last structured events
+            // (reconnects, faults, protocol errors) — exactly what a
+            // failed deployment post-mortem needs.
+            pao_fed::obs::recorder::dump_stderr();
             std::process::exit(1);
+        }
+        if let Some(p) = &telemetry {
+            println!("  telemetry log: {}", p.display());
         }
         return;
     }
@@ -379,7 +425,18 @@ fn main() {
         println!("=== {id} ===");
         if let Err(e) = experiments::run(id, &ctx) {
             eprintln!("{id} failed: {e}");
+            pao_fed::obs::recorder::dump_stderr();
             std::process::exit(1);
+        }
+    }
+    if pao_fed::obs::spans::enabled() {
+        let table = pao_fed::obs::RunTelemetry::capture().summary_table();
+        if !table.is_empty() {
+            println!("=== telemetry ===");
+            println!("{table}");
+        }
+        if let Some(p) = &telemetry {
+            println!("telemetry log: {}", p.display());
         }
     }
 }

@@ -1,0 +1,323 @@
+//! Fleet counters: an always-on registry of relaxed atomic counters.
+//!
+//! Two tables: a scalar table indexed by [`Ctr`] (retries, faults by
+//! kind, digest outcomes, recoveries, journal/checkpoint activity) and
+//! four per-wire-tag tables (frames/bytes sent/received, one slot per
+//! tag plus an overflow slot for corrupted tags). Everything is a
+//! relaxed `fetch_add` — cheap enough to leave on unconditionally,
+//! which is load-bearing for determinism: because counting never
+//! depends on whether telemetry output is enabled, the bytes a peer
+//! puts on the wire (including the piggybacked counter block below)
+//! are identical with telemetry on or off.
+//!
+//! **Fleet composition.** Workers and relays call [`export_block`] to
+//! serialize their nonzero counters as compact `(id, value)` pairs,
+//! piggybacked on their final ack frame; the root calls
+//! [`absorb_block`] to fold each block into its own registry, so the
+//! root's run log and `DeploymentReport` telemetry cover the whole
+//! tree. Relays merge their children's blocks with [`merge_block`]
+//! before re-exporting. Block ids are append-only: never renumber a
+//! [`Ctr`] variant — old binaries' blocks must keep meaning the same
+//! thing, and unknown ids are ignored on absorb.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+/// Number of wire tags tracked individually (tags 0..15), plus one
+/// overflow slot for out-of-range (corrupted) tags.
+const TAG_SLOTS: usize = 17;
+
+/// Scalar fleet counters. The discriminant doubles as the wire id in
+/// exported counter blocks — append new variants, never renumber.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Ctr {
+    /// Connect attempts that failed and were retried.
+    ConnectRetries = 0,
+    /// Backoff sleeps taken between connect attempts.
+    BackoffSleeps,
+    /// Frames corrupted by the fault layer.
+    FaultsCorrupt,
+    /// Frames dropped by the fault layer.
+    FaultsDrop,
+    /// Frames duplicated by the fault layer.
+    FaultsDup,
+    /// Frames delayed by the fault layer.
+    FaultsDelay,
+    /// Process kills scheduled by the fault layer that fired.
+    FaultsKill,
+    /// Connects refused by the fault layer.
+    FaultsRefuse,
+    /// Digest exchanges that resolved to a full replay (need-all).
+    DigestNeedAll,
+    /// Digest exchanges that resolved to adoption (need-nothing).
+    DigestNeedNothing,
+    /// Digest exchanges that resolved to a partial plan.
+    DigestPartial,
+    /// Worker/relay recoveries completed by the supervisor.
+    Recoveries,
+    /// Journal records appended.
+    JournalRecords,
+    /// Journal self-anchor records appended.
+    JournalAnchors,
+    /// Checkpoint snapshots written.
+    CheckpointWrites,
+    /// Bytes written across all checkpoint snapshots.
+    CheckpointBytes,
+    /// Remote counter blocks absorbed from workers/relays.
+    RemoteBlocks,
+}
+
+/// All scalar counters, in id order; `Ctr::N_CTRS` sizes the table.
+pub const ALL_CTRS: [Ctr; Ctr::N_CTRS] = [
+    Ctr::ConnectRetries,
+    Ctr::BackoffSleeps,
+    Ctr::FaultsCorrupt,
+    Ctr::FaultsDrop,
+    Ctr::FaultsDup,
+    Ctr::FaultsDelay,
+    Ctr::FaultsKill,
+    Ctr::FaultsRefuse,
+    Ctr::DigestNeedAll,
+    Ctr::DigestNeedNothing,
+    Ctr::DigestPartial,
+    Ctr::Recoveries,
+    Ctr::JournalRecords,
+    Ctr::JournalAnchors,
+    Ctr::CheckpointWrites,
+    Ctr::CheckpointBytes,
+    Ctr::RemoteBlocks,
+];
+
+impl Ctr {
+    /// Number of scalar counters.
+    pub const N_CTRS: usize = 17;
+
+    /// Stable snake_case name, used as the JSON key in run-log records.
+    pub fn name(self) -> &'static str {
+        match self {
+            Ctr::ConnectRetries => "connect_retries",
+            Ctr::BackoffSleeps => "backoff_sleeps",
+            Ctr::FaultsCorrupt => "faults_corrupt",
+            Ctr::FaultsDrop => "faults_drop",
+            Ctr::FaultsDup => "faults_dup",
+            Ctr::FaultsDelay => "faults_delay",
+            Ctr::FaultsKill => "faults_kill",
+            Ctr::FaultsRefuse => "faults_refuse",
+            Ctr::DigestNeedAll => "digest_need_all",
+            Ctr::DigestNeedNothing => "digest_need_nothing",
+            Ctr::DigestPartial => "digest_partial",
+            Ctr::Recoveries => "recoveries",
+            Ctr::JournalRecords => "journal_records",
+            Ctr::JournalAnchors => "journal_anchors",
+            Ctr::CheckpointWrites => "checkpoint_writes",
+            Ctr::CheckpointBytes => "checkpoint_bytes",
+            Ctr::RemoteBlocks => "remote_blocks",
+        }
+    }
+}
+
+// Wire-block id layout. Scalars occupy 0..N_CTRS; the per-tag tables
+// each get a 32-id window so the scheme survives future tag growth.
+const ID_FRAMES_SENT: u8 = 64;
+const ID_BYTES_SENT: u8 = 96;
+const ID_FRAMES_RECV: u8 = 128;
+const ID_BYTES_RECV: u8 = 160;
+
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO: AtomicU64 = AtomicU64::new(0);
+
+static SCALARS: [AtomicU64; Ctr::N_CTRS] = [ZERO; Ctr::N_CTRS];
+static FRAMES_SENT: [AtomicU64; TAG_SLOTS] = [ZERO; TAG_SLOTS];
+static BYTES_SENT: [AtomicU64; TAG_SLOTS] = [ZERO; TAG_SLOTS];
+static FRAMES_RECV: [AtomicU64; TAG_SLOTS] = [ZERO; TAG_SLOTS];
+static BYTES_RECV: [AtomicU64; TAG_SLOTS] = [ZERO; TAG_SLOTS];
+
+/// Increment a scalar counter by 1.
+#[inline]
+pub fn inc(c: Ctr) {
+    SCALARS[c as usize].fetch_add(1, Relaxed);
+}
+
+/// Add `n` to a scalar counter.
+#[inline]
+pub fn add(c: Ctr, n: u64) {
+    SCALARS[c as usize].fetch_add(n, Relaxed);
+}
+
+/// Current value of a scalar counter.
+pub fn get(c: Ctr) -> u64 {
+    SCALARS[c as usize].load(Relaxed)
+}
+
+/// Slot for a wire tag: tags ≥ 16 (only possible via corruption) share
+/// the overflow slot.
+#[inline]
+fn tag_slot(tag: u8) -> usize {
+    (tag as usize).min(TAG_SLOTS - 1)
+}
+
+/// Record one frame sent whose payload starts with `tag` and spans
+/// `bytes` payload bytes.
+#[inline]
+pub fn frame_sent(tag: u8, bytes: usize) {
+    let s = tag_slot(tag);
+    FRAMES_SENT[s].fetch_add(1, Relaxed);
+    BYTES_SENT[s].fetch_add(bytes as u64, Relaxed);
+}
+
+/// Record one frame received whose payload starts with `tag` and spans
+/// `bytes` payload bytes.
+#[inline]
+pub fn frame_recv(tag: u8, bytes: usize) {
+    let s = tag_slot(tag);
+    FRAMES_RECV[s].fetch_add(1, Relaxed);
+    BYTES_RECV[s].fetch_add(bytes as u64, Relaxed);
+}
+
+/// Snapshot for reports and the run log: every scalar (zeros included,
+/// so the schema is stable) plus the nonzero per-tag entries under
+/// `frames_sent_tag{t}`-style keys. Compressed-vs-raw traffic falls out
+/// of the per-tag split (compressed batch tags 9/10/13 vs raw 5/6/11).
+pub fn snapshot() -> Vec<(String, u64)> {
+    let mut out: Vec<(String, u64)> = ALL_CTRS
+        .iter()
+        .map(|&c| (c.name().to_string(), get(c)))
+        .collect();
+    let tables: [(&str, &[AtomicU64; TAG_SLOTS]); 4] = [
+        ("frames_sent", &FRAMES_SENT),
+        ("bytes_sent", &BYTES_SENT),
+        ("frames_recv", &FRAMES_RECV),
+        ("bytes_recv", &BYTES_RECV),
+    ];
+    for (prefix, table) in tables {
+        for (t, cell) in table.iter().enumerate() {
+            let v = cell.load(Relaxed);
+            if v > 0 {
+                let key = if t < TAG_SLOTS - 1 {
+                    format!("{prefix}_tag{t}")
+                } else {
+                    format!("{prefix}_invalid")
+                };
+                out.push((key, v));
+            }
+        }
+    }
+    out
+}
+
+/// Serialize this process's nonzero counters as `(id, value)` pairs for
+/// piggybacking on the final ack. Per-tag entries only cover real tags
+/// (0..16); the overflow slot is local-only.
+pub fn export_block() -> Vec<(u8, u64)> {
+    let mut out = Vec::new();
+    for &c in ALL_CTRS.iter() {
+        let v = get(c);
+        if v > 0 {
+            out.push((c as u8, v));
+        }
+    }
+    let tables: [(u8, &[AtomicU64; TAG_SLOTS]); 4] = [
+        (ID_FRAMES_SENT, &FRAMES_SENT),
+        (ID_BYTES_SENT, &BYTES_SENT),
+        (ID_FRAMES_RECV, &FRAMES_RECV),
+        (ID_BYTES_RECV, &BYTES_RECV),
+    ];
+    for (base, table) in tables {
+        for (t, cell) in table.iter().enumerate().take(TAG_SLOTS - 1) {
+            let v = cell.load(Relaxed);
+            if v > 0 {
+                out.push((base + t as u8, v));
+            }
+        }
+    }
+    out
+}
+
+/// Fold a remote counter block into this registry. Unknown ids are
+/// ignored (forward compatibility with newer peers); `RemoteBlocks` is
+/// bumped once per call.
+pub fn absorb_block(block: &[(u8, u64)]) {
+    for &(id, v) in block {
+        match id {
+            id if (id as usize) < Ctr::N_CTRS => {
+                SCALARS[id as usize].fetch_add(v, Relaxed);
+            }
+            id if (ID_FRAMES_SENT..ID_FRAMES_SENT + 16).contains(&id) => {
+                FRAMES_SENT[(id - ID_FRAMES_SENT) as usize].fetch_add(v, Relaxed);
+            }
+            id if (ID_BYTES_SENT..ID_BYTES_SENT + 16).contains(&id) => {
+                BYTES_SENT[(id - ID_BYTES_SENT) as usize].fetch_add(v, Relaxed);
+            }
+            id if (ID_FRAMES_RECV..ID_FRAMES_RECV + 16).contains(&id) => {
+                FRAMES_RECV[(id - ID_FRAMES_RECV) as usize].fetch_add(v, Relaxed);
+            }
+            id if (ID_BYTES_RECV..ID_BYTES_RECV + 16).contains(&id) => {
+                BYTES_RECV[(id - ID_BYTES_RECV) as usize].fetch_add(v, Relaxed);
+            }
+            _ => {}
+        }
+    }
+    inc(Ctr::RemoteBlocks);
+}
+
+/// Sum `block` into `acc` id-by-id (relay fold of children's blocks
+/// before re-exporting upstream). Order of `acc` is id-sorted.
+pub fn merge_block(acc: &mut Vec<(u8, u64)>, block: &[(u8, u64)]) {
+    for &(id, v) in block {
+        match acc.binary_search_by_key(&id, |&(i, _)| i) {
+            Ok(pos) => acc[pos].1 = acc[pos].1.wrapping_add(v),
+            Err(pos) => acc.insert(pos, (id, v)),
+        }
+    }
+}
+
+/// Zero every counter (tests and benches only).
+pub fn reset() {
+    for c in SCALARS.iter() {
+        c.store(0, Relaxed);
+    }
+    for table in [&FRAMES_SENT, &BYTES_SENT, &FRAMES_RECV, &BYTES_RECV] {
+        for c in table.iter() {
+            c.store(0, Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ctr_names_are_unique() {
+        let mut names: Vec<&str> = ALL_CTRS.iter().map(|c| c.name()).collect();
+        names.sort_unstable();
+        let before = names.len();
+        names.dedup();
+        assert_eq!(before, names.len(), "duplicate counter name");
+    }
+
+    #[test]
+    fn all_ctrs_covers_every_discriminant() {
+        assert_eq!(ALL_CTRS.len(), Ctr::N_CTRS);
+        for (i, c) in ALL_CTRS.iter().enumerate() {
+            assert_eq!(*c as usize, i, "ALL_CTRS out of id order");
+        }
+        // Scalar ids must stay clear of the per-tag windows.
+        assert!(Ctr::N_CTRS < ID_FRAMES_SENT as usize);
+    }
+
+    #[test]
+    fn merge_block_sums_by_id() {
+        let mut acc = vec![(0u8, 5u64), (64, 2)];
+        merge_block(&mut acc, &[(0, 3), (7, 1), (64, 4)]);
+        assert_eq!(acc, vec![(0, 8), (7, 1), (64, 6)]);
+    }
+
+    #[test]
+    fn tag_slot_clamps_corrupt_tags() {
+        assert_eq!(tag_slot(0), 0);
+        assert_eq!(tag_slot(15), 15);
+        assert_eq!(tag_slot(16), 16);
+        assert_eq!(tag_slot(0xff), 16);
+    }
+}

@@ -1,0 +1,196 @@
+//! The machine-readable run log: periodic newline-delimited JSON
+//! snapshots of the span histograms and counter registry.
+//!
+//! Installed via `--telemetry PATH` or `PAO_FED_TELEMETRY=PATH`. Every
+//! `PAO_FED_TELEMETRY_EVERY` ticks (default 100) and once at run end,
+//! one compact JSON object is appended to the file:
+//!
+//! ```json
+//! {"schema":"pao-fed-telemetry-v1","event":"tick","tick":100,
+//!  "wall_ns":12345678,"ticks_per_sec":8100.0,
+//!  "spans":{"arrivals":{"count":100,"total_ns":...,"p50_ns":...,
+//!           "p90_ns":...,"p99_ns":...,"max_ns":...},...},
+//!  "counters":{"recoveries":0,...}}
+//! ```
+//!
+//! The final record has `"event":"final"`. A file may carry several
+//! final records (one per run sharing the process — experiments with
+//! multiple Monte-Carlo realizations, the on/off identity tests);
+//! consumers treat each line as an independent snapshot. Installing the
+//! sink is what flips [`spans`](super::spans) on; the counters were
+//! running either way, so enabling the log changes no wire byte and no
+//! model byte — it only adds clock reads and file writes.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+use super::{counters, spans};
+
+/// Schema identifier stamped on every record.
+pub const SCHEMA: &str = "pao-fed-telemetry-v1";
+
+/// Default snapshot interval in ticks (`PAO_FED_TELEMETRY_EVERY`).
+pub const DEFAULT_EVERY: usize = 100;
+
+struct Sink {
+    file: std::fs::File,
+    path: PathBuf,
+    every: usize,
+    started: Instant,
+    /// (tick, instant) of the previous record, for the tick-rate field.
+    last: Option<(u64, Instant)>,
+}
+
+static SINK: Mutex<Option<Sink>> = Mutex::new(None);
+/// Fast-path flag mirroring `SINK.is_some()` so `on_tick` costs one
+/// relaxed load when no sink is installed.
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+
+/// Install the run log at `path` (truncating any existing file) and
+/// enable span timing. Returns an error if the file cannot be created.
+pub fn install(path: &Path) -> std::io::Result<()> {
+    let file = std::fs::File::create(path)?;
+    let every = std::env::var("PAO_FED_TELEMETRY_EVERY")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(DEFAULT_EVERY);
+    let mut guard = SINK.lock().unwrap_or_else(|e| e.into_inner());
+    *guard = Some(Sink {
+        file,
+        path: path.to_path_buf(),
+        every,
+        started: Instant::now(),
+        last: None,
+    });
+    ACTIVE.store(true, Relaxed);
+    spans::set_enabled(true);
+    Ok(())
+}
+
+/// Install from `PAO_FED_TELEMETRY` if set and no sink is installed
+/// yet (an explicit `--telemetry` flag wins over the env knob).
+/// Returns the installed path, if any.
+pub fn install_from_env() -> std::io::Result<Option<PathBuf>> {
+    if active() {
+        return Ok(None);
+    }
+    match std::env::var("PAO_FED_TELEMETRY") {
+        Ok(p) if !p.trim().is_empty() => {
+            let path = PathBuf::from(p);
+            install(&path)?;
+            Ok(Some(path))
+        }
+        _ => Ok(None),
+    }
+}
+
+/// Whether a run-log sink is currently installed.
+#[inline]
+pub fn active() -> bool {
+    ACTIVE.load(Relaxed)
+}
+
+/// Tick hook for the run loops: appends a snapshot record every
+/// `every` ticks. One relaxed load when no sink is installed.
+#[inline]
+pub fn on_tick(tick: usize) {
+    if !ACTIVE.load(Relaxed) {
+        return;
+    }
+    on_tick_slow(tick);
+}
+
+fn on_tick_slow(tick: usize) {
+    let mut guard = SINK.lock().unwrap_or_else(|e| e.into_inner());
+    let Some(sink) = guard.as_mut() else { return };
+    // Tick indices are 0-based; snapshot after ticks every, 2·every, …
+    if (tick + 1) % sink.every != 0 {
+        return;
+    }
+    write_record(sink, "tick", tick as u64);
+}
+
+/// End-of-run hook: appends the `"event":"final"` record and flushes.
+/// The sink stays installed so a later run in the same process (next
+/// Monte-Carlo realization, the identity tests) keeps appending.
+pub fn finish(tick: usize) {
+    if !ACTIVE.load(Relaxed) {
+        return;
+    }
+    let mut guard = SINK.lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(sink) = guard.as_mut() {
+        write_record(sink, "final", tick as u64);
+        let _ = sink.file.flush();
+    }
+}
+
+/// Remove the sink (flushing first) and disable span timing. Returns
+/// the path the log was written to, if one was installed. Used by
+/// tests to alternate telemetry on/off within one process.
+pub fn close() -> Option<PathBuf> {
+    let mut guard = SINK.lock().unwrap_or_else(|e| e.into_inner());
+    let sink = guard.take();
+    ACTIVE.store(false, Relaxed);
+    spans::set_enabled(false);
+    sink.map(|mut s| {
+        let _ = s.file.flush();
+        s.path
+    })
+}
+
+/// Build and append one record. Write failures disable the sink with a
+/// warning rather than poisoning the run — telemetry must never turn an
+/// observable run into a failed one.
+fn write_record(sink: &mut Sink, event: &str, tick: u64) {
+    let now = Instant::now();
+    let wall_ns = now.duration_since(sink.started).as_nanos() as u64;
+    let rate = sink.last.map(|(t0, at0)| {
+        let dt = now.duration_since(at0).as_secs_f64();
+        // +1: tick indices are 0-based and records land after the tick.
+        let ticks = (tick + 1).saturating_sub(t0 + 1) as f64;
+        if dt > 0.0 { ticks / dt } else { 0.0 }
+    });
+    sink.last = Some((tick, now));
+
+    let mut spans_obj = std::collections::BTreeMap::new();
+    for (name, st) in spans::snapshot() {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("count".to_string(), Json::Num(st.count as f64));
+        m.insert("total_ns".to_string(), Json::Num(st.total_ns as f64));
+        m.insert("p50_ns".to_string(), Json::Num(st.p50_ns as f64));
+        m.insert("p90_ns".to_string(), Json::Num(st.p90_ns as f64));
+        m.insert("p99_ns".to_string(), Json::Num(st.p99_ns as f64));
+        m.insert("max_ns".to_string(), Json::Num(st.max_ns as f64));
+        spans_obj.insert(name.to_string(), Json::Obj(m));
+    }
+    let counters_obj: std::collections::BTreeMap<String, Json> = counters::snapshot()
+        .into_iter()
+        .map(|(k, v)| (k, Json::Num(v as f64)))
+        .collect();
+
+    let mut rec = std::collections::BTreeMap::new();
+    rec.insert("schema".to_string(), Json::Str(SCHEMA.to_string()));
+    rec.insert("event".to_string(), Json::Str(event.to_string()));
+    rec.insert("tick".to_string(), Json::Num(tick as f64));
+    rec.insert("wall_ns".to_string(), Json::Num(wall_ns as f64));
+    if let Some(r) = rate {
+        rec.insert("ticks_per_sec".to_string(), Json::Num(r));
+    }
+    rec.insert("spans".to_string(), Json::Obj(spans_obj));
+    rec.insert("counters".to_string(), Json::Obj(counters_obj));
+
+    let line = Json::Obj(rec).to_string_compact();
+    if writeln!(sink.file, "{line}").is_err() {
+        super::logger::warn(format_args!(
+            "telemetry sink {} failed to write; disabling run log",
+            sink.path.display()
+        ));
+        ACTIVE.store(false, Relaxed);
+    }
+}

@@ -1,0 +1,102 @@
+//! Tiny leveled stderr logger (`PAO_FED_LOG=off|warn|info|debug`).
+//!
+//! Replaces the ad-hoc `eprintln!` calls that used to be scattered
+//! through the transport, fault, journal, and experiment layers, so
+//! operational messages are consistently prefixed (`pao-fed[warn] …`)
+//! and filterable. The default level is `warn`: the messages users rely
+//! on today (journal-gap notices, recovery logs, the `--xla --jobs`
+//! serial warning) stay visible unless explicitly silenced with
+//! `PAO_FED_LOG=off`. Fatal pre-exit diagnostics (CLI usage errors, a
+//! malformed `--fault-plan`) intentionally stay on bare `eprintln!` —
+//! they must never be filterable.
+//!
+//! Call sites pass `format_args!(..)` so disabled levels cost one level
+//! check and no formatting or allocation.
+
+use std::fmt::Display;
+use std::sync::OnceLock;
+
+/// Logger verbosity, ordered so `level() >= Level::Info` gates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Nothing at all.
+    Off,
+    /// Operational warnings (default).
+    Warn,
+    /// Lifecycle notices (connects, checkpoints, recoveries in detail).
+    Info,
+    /// Everything, including flight-recorder dumps at report time.
+    Debug,
+}
+
+impl Level {
+    /// Parse a `PAO_FED_LOG` value; unknown strings fall back to the
+    /// default (`warn`) rather than erroring — a misspelled knob should
+    /// not change program behaviour beyond logging.
+    fn parse(s: &str) -> Level {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "none" | "0" => Level::Off,
+            "info" => Level::Info,
+            "debug" => Level::Debug,
+            _ => Level::Warn,
+        }
+    }
+}
+
+static LEVEL: OnceLock<Level> = OnceLock::new();
+
+/// The active log level (reads `PAO_FED_LOG` once, defaults to `warn`).
+pub fn level() -> Level {
+    *LEVEL.get_or_init(|| {
+        std::env::var("PAO_FED_LOG").map(|v| Level::parse(&v)).unwrap_or(Level::Warn)
+    })
+}
+
+/// Whether messages at `l` are currently emitted.
+#[inline]
+pub fn on(l: Level) -> bool {
+    level() >= l
+}
+
+/// Emit a warning (visible by default).
+pub fn warn(msg: impl Display) {
+    if on(Level::Warn) {
+        eprintln!("pao-fed[warn] {msg}");
+    }
+}
+
+/// Emit an informational notice (hidden by default).
+pub fn info(msg: impl Display) {
+    if on(Level::Info) {
+        eprintln!("pao-fed[info] {msg}");
+    }
+}
+
+/// Emit a debug message (hidden by default).
+pub fn debug(msg: impl Display) {
+    if on(Level::Debug) {
+        eprintln!("pao-fed[debug] {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_known_levels_and_defaults_unknown() {
+        assert_eq!(Level::parse("off"), Level::Off);
+        assert_eq!(Level::parse("0"), Level::Off);
+        assert_eq!(Level::parse("WARN"), Level::Warn);
+        assert_eq!(Level::parse(" info "), Level::Info);
+        assert_eq!(Level::parse("debug"), Level::Debug);
+        assert_eq!(Level::parse("verbose??"), Level::Warn);
+    }
+
+    #[test]
+    fn levels_order_for_gating() {
+        assert!(Level::Debug > Level::Info);
+        assert!(Level::Info > Level::Warn);
+        assert!(Level::Warn > Level::Off);
+    }
+}

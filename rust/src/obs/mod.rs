@@ -1,0 +1,152 @@
+//! Zero-dependency telemetry: stage spans, fleet counters, a flight
+//! recorder, and a machine-readable run log.
+//!
+//! Three pillars, all **observation-only** by construction:
+//!
+//! * [`spans`] — monotonic-clock timing around each named pipeline /
+//!   serve-loop / wire / persist stage, accumulated into fixed
+//!   log₂-bucket histograms (no allocation on the hot path). Disabled by
+//!   default; one relaxed atomic load when off.
+//! * [`counters`] — always-on relaxed atomic counters: frames and bytes
+//!   per wire tag, connect retries, faults injected by kind, digest
+//!   exchange outcomes, recoveries, journal/checkpoint activity.
+//!   Workers and relays piggyback a compact counter block on their final
+//!   ack so the root's view covers the whole fleet.
+//! * [`recorder`] — a bounded lock-free ring of recent structured events
+//!   (reconnects, fault injections, protocol errors, adoption
+//!   decisions), dumped to stderr on error paths and—at debug level—on
+//!   [`DeploymentReport`](crate::async_rt::DeploymentReport)
+//!   construction.
+//!
+//! The periodic run log ([`log`]) serializes snapshots of the first two
+//! pillars as newline-delimited JSON (`pao-fed-telemetry-v1`), installed
+//! via `--telemetry PATH` or `PAO_FED_TELEMETRY`. The leveled stderr
+//! logger ([`logger`], `PAO_FED_LOG=off|warn|info|debug`) replaces the
+//! ad-hoc `eprintln!`s that used to be scattered through the runtime.
+//!
+//! **The observation-only contract.** Telemetry never touches RNG or
+//! model state and never changes what bytes any peer sends: counters are
+//! always on (so wire traffic is identical with telemetry enabled or
+//! disabled), spans only read the monotonic clock, and the run log only
+//! snapshots both. Every bit-identity suite — the chaos soak included —
+//! must hold byte-for-byte with telemetry on or off, pinned by
+//! `rust/tests/telemetry.rs`.
+
+pub mod counters;
+pub mod log;
+pub mod logger;
+pub mod recorder;
+pub mod spans;
+
+use spans::SpanStats;
+
+/// An end-of-run telemetry summary: per-stage span totals plus a counter
+/// snapshot, captured into
+/// [`DeploymentReport`](crate::async_rt::DeploymentReport) so callers get
+/// the run's self-observation alongside its results.
+#[derive(Clone, Debug, Default)]
+pub struct RunTelemetry {
+    /// Stages that recorded at least one span, in declaration order.
+    pub spans: Vec<(&'static str, SpanStats)>,
+    /// Counter snapshot (scalar counters plus nonzero per-tag entries).
+    pub counters: Vec<(String, u64)>,
+}
+
+impl RunTelemetry {
+    /// Snapshot the process-wide span histograms and counter registry.
+    pub fn capture() -> Self {
+        RunTelemetry {
+            spans: spans::snapshot(),
+            counters: counters::snapshot(),
+        }
+    }
+
+    /// Compact one-screen summary: a span table (top stages by total
+    /// time) and the nonzero counters. Empty string when nothing was
+    /// recorded — callers can print unconditionally.
+    pub fn summary_table(&self) -> String {
+        let mut out = String::new();
+        if !self.spans.is_empty() {
+            let mut rows: Vec<&(&'static str, SpanStats)> = self.spans.iter().collect();
+            rows.sort_by(|a, b| b.1.total_ns.cmp(&a.1.total_ns));
+            let rows: Vec<Vec<String>> = rows
+                .iter()
+                .take(14)
+                .map(|(name, s)| {
+                    vec![
+                        name.to_string(),
+                        s.count.to_string(),
+                        fmt_ns(s.total_ns),
+                        fmt_ns(s.p50_ns),
+                        fmt_ns(s.p99_ns),
+                        fmt_ns(s.max_ns),
+                    ]
+                })
+                .collect();
+            out.push_str(&crate::util::table::render(
+                &["stage", "spans", "total", "p50", "p99", "max"],
+                &rows,
+            ));
+        }
+        let nonzero: Vec<Vec<String>> = self
+            .counters
+            .iter()
+            .filter(|(_, v)| *v > 0)
+            .map(|(name, v)| vec![name.clone(), v.to_string()])
+            .collect();
+        if !nonzero.is_empty() {
+            if !out.is_empty() {
+                out.push('\n');
+            }
+            out.push_str(&crate::util::table::render(&["counter", "value"], &nonzero));
+        }
+        out
+    }
+}
+
+/// Human-readable nanoseconds for summary tables.
+fn fmt_ns(ns: u64) -> String {
+    let ns = ns as f64;
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.1}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.1}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_table_renders_nonzero_counters() {
+        let t = RunTelemetry {
+            spans: vec![(
+                "arrivals",
+                SpanStats { count: 3, total_ns: 3_000, max_ns: 2_000, p50_ns: 1_024, p90_ns: 2_048, p99_ns: 2_048 },
+            )],
+            counters: vec![("recoveries".to_string(), 2), ("faults_drop".to_string(), 0)],
+        };
+        let s = t.summary_table();
+        assert!(s.contains("arrivals"));
+        assert!(s.contains("recoveries"));
+        assert!(!s.contains("faults_drop"), "zero counters stay out of the table");
+    }
+
+    #[test]
+    fn empty_telemetry_renders_empty() {
+        assert!(RunTelemetry::default().summary_table().is_empty());
+    }
+
+    #[test]
+    fn ns_formatting_picks_units() {
+        assert_eq!(fmt_ns(12), "12ns");
+        assert_eq!(fmt_ns(2_500), "2.5us");
+        assert_eq!(fmt_ns(3_000_000), "3.0ms");
+        assert_eq!(fmt_ns(2_000_000_000), "2.00s");
+    }
+}

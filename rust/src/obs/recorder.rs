@@ -1,0 +1,229 @@
+//! Flight recorder: a bounded lock-free ring of recent structured
+//! events.
+//!
+//! Writers from any thread stamp `(kind, tick, a, b)` tuples into a
+//! fixed 256-slot ring via a `fetch_add` cursor; each slot carries a
+//! seqlock-style generation word so a reader can tell a committed entry
+//! from one being overwritten concurrently. Everything is plain
+//! atomics — no locks, no allocation, no `unsafe` — so recording is
+//! safe from the transport reader threads and the pool workers alike.
+//!
+//! The ring is always on (a handful of relaxed stores per *event*, and
+//! events are rare: reconnects, faults, protocol errors — never
+//! per-coordinate work). It is dumped to stderr on error paths, and at
+//! `PAO_FED_LOG=debug` when a `DeploymentReport` is built, so the last
+//! ~256 things that happened before a failure are always recoverable
+//! from a crash log.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Ring capacity (events retained).
+pub const CAPACITY: usize = 256;
+
+/// What happened. Encoded as a `u64` in the ring; unknown values decode
+/// as [`EventKind::Unknown`] so old dumps stay readable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u64)]
+pub enum EventKind {
+    /// Placeholder for an unrecognized kind value.
+    Unknown = 0,
+    /// A tick boundary (`a` = ticks-per-record stride marker, unused).
+    Tick = 1,
+    /// A transport link (re)connected (`a` = attempt count).
+    Reconnect = 2,
+    /// The fault layer acted on a frame (`a` = action code, `b` = frame index).
+    Fault = 3,
+    /// A protocol error surfaced (`a` = context code).
+    ProtocolError = 4,
+    /// Digest exchange resolved to adoption (`a` = shard lo, `b` = shard hi).
+    Adopt = 5,
+    /// A worker/relay was rebuilt by replay (`a` = shard lo, `b` = shard hi).
+    Recover = 6,
+    /// A journal self-anchor was appended (`a` = anchor interval).
+    Anchor = 7,
+    /// Resume crossed a journal gap (`a` = from tick, `b` = to tick).
+    JournalGap = 8,
+    /// The fault layer killed this process at a tick boundary.
+    Kill = 9,
+    /// The fault layer refused an inbound connect (`a` = connect index).
+    Refuse = 10,
+    /// A checkpoint was written (`a` = bytes).
+    Checkpoint = 11,
+}
+
+impl EventKind {
+    fn from_u64(v: u64) -> EventKind {
+        match v {
+            1 => EventKind::Tick,
+            2 => EventKind::Reconnect,
+            3 => EventKind::Fault,
+            4 => EventKind::ProtocolError,
+            5 => EventKind::Adopt,
+            6 => EventKind::Recover,
+            7 => EventKind::Anchor,
+            8 => EventKind::JournalGap,
+            9 => EventKind::Kill,
+            10 => EventKind::Refuse,
+            11 => EventKind::Checkpoint,
+            _ => EventKind::Unknown,
+        }
+    }
+
+    /// Stable lowercase name for dumps.
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Unknown => "unknown",
+            EventKind::Tick => "tick",
+            EventKind::Reconnect => "reconnect",
+            EventKind::Fault => "fault",
+            EventKind::ProtocolError => "protocol_error",
+            EventKind::Adopt => "adopt",
+            EventKind::Recover => "recover",
+            EventKind::Anchor => "anchor",
+            EventKind::JournalGap => "journal_gap",
+            EventKind::Kill => "kill",
+            EventKind::Refuse => "refuse",
+            EventKind::Checkpoint => "checkpoint",
+        }
+    }
+}
+
+/// One decoded ring entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    /// Global sequence number (monotonic across the whole run).
+    pub seq: u64,
+    /// Event kind.
+    pub kind: EventKind,
+    /// Tick the event is associated with (0 when not tick-scoped).
+    pub tick: u64,
+    /// Kind-specific payload word.
+    pub a: u64,
+    /// Second kind-specific payload word.
+    pub b: u64,
+}
+
+/// One ring slot. `gen` is a seqlock-style generation: a writer claims
+/// the slot by storing `2*seq + 1` (odd = in progress), fills the
+/// payload words, then commits `2*seq + 2` (even, identifies `seq`).
+/// Readers accept a slot only when `gen` reads the same committed value
+/// before and after the payload loads.
+struct Slot {
+    generation: AtomicU64,
+    kind: AtomicU64,
+    tick: AtomicU64,
+    a: AtomicU64,
+    b: AtomicU64,
+}
+
+#[allow(clippy::declare_interior_mutable_const)]
+const EMPTY_SLOT: Slot = Slot {
+    generation: AtomicU64::new(0),
+    kind: AtomicU64::new(0),
+    tick: AtomicU64::new(0),
+    a: AtomicU64::new(0),
+    b: AtomicU64::new(0),
+};
+
+static RING: [Slot; CAPACITY] = [EMPTY_SLOT; CAPACITY];
+static CURSOR: AtomicU64 = AtomicU64::new(0);
+
+/// Committed generation word for sequence number `seq`.
+fn committed(seq: u64) -> u64 {
+    seq.wrapping_mul(2).wrapping_add(2)
+}
+
+/// Record an event. Lock-free and allocation-free; safe from any
+/// thread, including inside transport reader loops.
+pub fn record(kind: EventKind, tick: u64, a: u64, b: u64) {
+    let seq = CURSOR.fetch_add(1, Ordering::Relaxed);
+    let slot = &RING[(seq as usize) % CAPACITY];
+    slot.generation.store(committed(seq) - 1, Ordering::Release);
+    slot.kind.store(kind as u64, Ordering::Relaxed);
+    slot.tick.store(tick, Ordering::Relaxed);
+    slot.a.store(a, Ordering::Relaxed);
+    slot.b.store(b, Ordering::Relaxed);
+    slot.generation.store(committed(seq), Ordering::Release);
+}
+
+/// Snapshot the ring: the most recent committed events in sequence
+/// order (oldest first). Entries being overwritten mid-read are
+/// skipped rather than returned torn.
+pub fn snapshot() -> Vec<Event> {
+    let end = CURSOR.load(Ordering::Acquire);
+    let start = end.saturating_sub(CAPACITY as u64);
+    let mut out = Vec::with_capacity((end - start) as usize);
+    for seq in start..end {
+        let slot = &RING[(seq as usize) % CAPACITY];
+        let g0 = slot.generation.load(Ordering::Acquire);
+        if g0 != committed(seq) {
+            continue; // never committed, or already overwritten
+        }
+        let kind = slot.kind.load(Ordering::Relaxed);
+        let tick = slot.tick.load(Ordering::Relaxed);
+        let a = slot.a.load(Ordering::Relaxed);
+        let b = slot.b.load(Ordering::Relaxed);
+        if slot.generation.load(Ordering::Acquire) != g0 {
+            continue; // overwritten while reading
+        }
+        out.push(Event { seq, kind: EventKind::from_u64(kind), tick, a, b });
+    }
+    out
+}
+
+/// Render the ring into `w`, one line per event, oldest first.
+pub fn dump_to(w: &mut dyn std::io::Write) -> std::io::Result<()> {
+    let events = snapshot();
+    writeln!(w, "pao-fed flight recorder: {} event(s)", events.len())?;
+    for e in events {
+        writeln!(
+            w,
+            "  #{seq} tick={tick} {kind} a={a} b={b}",
+            seq = e.seq,
+            tick = e.tick,
+            kind = e.kind.name(),
+            a = e.a,
+            b = e.b
+        )?;
+    }
+    Ok(())
+}
+
+/// Dump the ring to stderr. Called on error paths; a no-op when the
+/// ring is empty so clean error messages stay clean.
+pub fn dump_stderr() {
+    if CURSOR.load(Ordering::Relaxed) == 0 {
+        return;
+    }
+    let _ = dump_to(&mut std::io::stderr().lock());
+}
+
+/// Number of events ever recorded (not capped at the ring size).
+pub fn recorded() -> u64 {
+    CURSOR.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_roundtrips_through_u64() {
+        for k in [
+            EventKind::Tick,
+            EventKind::Reconnect,
+            EventKind::Fault,
+            EventKind::ProtocolError,
+            EventKind::Adopt,
+            EventKind::Recover,
+            EventKind::Anchor,
+            EventKind::JournalGap,
+            EventKind::Kill,
+            EventKind::Refuse,
+            EventKind::Checkpoint,
+        ] {
+            assert_eq!(EventKind::from_u64(k as u64), k);
+        }
+        assert_eq!(EventKind::from_u64(9999), EventKind::Unknown);
+    }
+}

@@ -1,0 +1,355 @@
+//! Stage spans: monotonic-clock timing accumulated into fixed
+//! log₂-bucket histograms.
+//!
+//! Each instrumented code region is a [`Stage`]; entering it creates a
+//! [`Span`] guard whose `Drop` records the elapsed nanoseconds into that
+//! stage's histogram — 64 power-of-two buckets of relaxed atomics, so
+//! the hot path never allocates and never takes a lock. The whole pillar
+//! sits behind one [`AtomicBool`]: when disabled (the default),
+//! [`span`] is a single relaxed load returning an inert guard, and no
+//! clock is read at all. Timing is the *only* thing spans do — they
+//! never touch RNG, model state, or wire bytes, which is what keeps the
+//! bit-identity suites byte-for-byte unchanged with telemetry on or off.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+use std::time::Instant;
+
+/// Number of log₂ histogram buckets (covers the full `u64` ns range).
+const BUCKETS: usize = 64;
+
+/// A named instrumented region of the runtime.
+///
+/// The first block mirrors the `TickPipeline` stages, the second the
+/// `serve_loop` tick phases, the rest the wire/persist choke points.
+/// The discriminant indexes the static histogram table; the order here
+/// is the order [`snapshot`] reports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Stage {
+    /// `TickPipeline::stage_arrivals` — drawing client arrival times.
+    Arrivals = 0,
+    /// `TickPipeline::stage_schedule` — blind participation schedule.
+    Schedule,
+    /// `TickPipeline::stage_downlink` — server→client coordinate push.
+    Downlink,
+    /// `TickPipeline::drain_pending` — waiting out the previous tick's
+    /// overlapped uplink/aggregate before mutating shared state.
+    Barrier,
+    /// `TickPipeline::stage_client_compute` — the fused per-row step.
+    ClientCompute,
+    /// `TickPipeline::stage_uplink` — packaging client updates.
+    Uplink,
+    /// `TickPipeline::stage_aggregate` — folding arrivals into the model.
+    Aggregate,
+    /// `TickPipeline::stage_eval` — MSE curve evaluation.
+    Eval,
+    /// `serve_loop` downlink phase — one `TickBatch` per worker link.
+    ServeDownlink,
+    /// `serve_loop` ack collection — blocking on `collect_acks`.
+    ServeCollect,
+    /// `serve_loop` aggregate phase — folding collected updates.
+    ServeAggregate,
+    /// `serve_loop` eval phase.
+    ServeEval,
+    /// `serve_loop` per-tick journal append.
+    ServeJournal,
+    /// `serve_loop` periodic checkpoint (snapshot + curve write).
+    ServeCheckpoint,
+    /// Relay fold: one full downlink→collect→`CombinedUpdate` cycle.
+    RelayFold,
+    /// Wire message encode (raw or compressed codec).
+    WireEncode,
+    /// Wire message decode (raw or compressed codec).
+    WireDecode,
+    /// Compressed f32 stream encode (`persist::compress` writers).
+    CompressEncode,
+    /// Compressed f32 stream decode (`persist::compress` readers).
+    CompressDecode,
+    /// Atomic snapshot file write.
+    SnapshotWrite,
+    /// Journal record append.
+    JournalAppend,
+    /// Eval-curve file write.
+    CurveWrite,
+}
+
+/// All stages in report order; `Stage::N_STAGES` sizes the tables.
+pub const ALL_STAGES: [Stage; Stage::N_STAGES] = [
+    Stage::Arrivals,
+    Stage::Schedule,
+    Stage::Downlink,
+    Stage::Barrier,
+    Stage::ClientCompute,
+    Stage::Uplink,
+    Stage::Aggregate,
+    Stage::Eval,
+    Stage::ServeDownlink,
+    Stage::ServeCollect,
+    Stage::ServeAggregate,
+    Stage::ServeEval,
+    Stage::ServeJournal,
+    Stage::ServeCheckpoint,
+    Stage::RelayFold,
+    Stage::WireEncode,
+    Stage::WireDecode,
+    Stage::CompressEncode,
+    Stage::CompressDecode,
+    Stage::SnapshotWrite,
+    Stage::JournalAppend,
+    Stage::CurveWrite,
+];
+
+impl Stage {
+    /// Number of distinct stages.
+    pub const N_STAGES: usize = 22;
+
+    /// Stable snake_case name, used as the JSON key in run-log records.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Arrivals => "arrivals",
+            Stage::Schedule => "schedule",
+            Stage::Downlink => "downlink",
+            Stage::Barrier => "barrier",
+            Stage::ClientCompute => "client_compute",
+            Stage::Uplink => "uplink",
+            Stage::Aggregate => "aggregate",
+            Stage::Eval => "eval",
+            Stage::ServeDownlink => "serve_downlink",
+            Stage::ServeCollect => "serve_collect",
+            Stage::ServeAggregate => "serve_aggregate",
+            Stage::ServeEval => "serve_eval",
+            Stage::ServeJournal => "serve_journal",
+            Stage::ServeCheckpoint => "serve_checkpoint",
+            Stage::RelayFold => "relay_fold",
+            Stage::WireEncode => "wire_encode",
+            Stage::WireDecode => "wire_decode",
+            Stage::CompressEncode => "compress_encode",
+            Stage::CompressDecode => "compress_decode",
+            Stage::SnapshotWrite => "snapshot_write",
+            Stage::JournalAppend => "journal_append",
+            Stage::CurveWrite => "curve_write",
+        }
+    }
+}
+
+/// One stage's histogram: log₂ buckets plus count/sum/max scalars.
+struct Hist {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+// `const` items holding atomics are the standard trick for initializing
+// static arrays of non-Copy types; each use site gets a fresh value, so
+// the interior-mutability lint does not apply.
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO: AtomicU64 = AtomicU64::new(0);
+#[allow(clippy::declare_interior_mutable_const)]
+const EMPTY_HIST: Hist = Hist {
+    buckets: [ZERO; BUCKETS],
+    count: ZERO,
+    sum_ns: ZERO,
+    max_ns: ZERO,
+};
+
+static HISTS: [Hist; Stage::N_STAGES] = [EMPTY_HIST; Stage::N_STAGES];
+
+/// Master switch for span timing. Off by default; `--telemetry` /
+/// `PAO_FED_TELEMETRY` turn it on.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Enable or disable span timing process-wide.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Relaxed);
+}
+
+/// Whether span timing is currently enabled.
+pub fn enabled() -> bool {
+    ENABLED.load(Relaxed)
+}
+
+/// RAII guard returned by [`span`]; records elapsed time on drop.
+///
+/// When spans are disabled the guard holds no start time and its drop
+/// is a no-op — the cost of an uninstrumented pass through a stage is
+/// one relaxed atomic load.
+#[must_use = "a span guard measures until it is dropped"]
+pub struct Span {
+    stage: Stage,
+    start: Option<Instant>,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(start) = self.start {
+            record(self.stage, start.elapsed().as_nanos() as u64);
+        }
+    }
+}
+
+/// Open a timing span for `stage`; drop the guard to record it.
+#[inline]
+pub fn span(stage: Stage) -> Span {
+    let start = if ENABLED.load(Relaxed) { Some(Instant::now()) } else { None };
+    Span { stage, start }
+}
+
+/// Time a closure under `stage` and return its result.
+#[inline]
+pub fn time<R>(stage: Stage, f: impl FnOnce() -> R) -> R {
+    let _guard = span(stage);
+    f()
+}
+
+/// Record one observation of `ns` nanoseconds for `stage`.
+///
+/// Exposed so tests can feed deterministic values; normal call sites go
+/// through [`span`]/[`time`]. Always records, independent of the
+/// enabled flag (the flag gates *clock reads*, not the histogram).
+pub fn record(stage: Stage, ns: u64) {
+    let h = &HISTS[stage as usize];
+    h.buckets[bucket_index(ns)].fetch_add(1, Relaxed);
+    h.count.fetch_add(1, Relaxed);
+    h.sum_ns.fetch_add(ns, Relaxed);
+    h.max_ns.fetch_max(ns, Relaxed);
+}
+
+/// Bucket index for a duration: ⌊log₂ ns⌋, with 0 and 1 ns sharing
+/// bucket 0.
+fn bucket_index(ns: u64) -> usize {
+    (u64::BITS - ns.leading_zeros()).saturating_sub(1) as usize
+}
+
+/// Aggregated statistics for one stage, as exported to reports and the
+/// run log. Quantiles are log₂-bucket upper bounds (≤ 2x resolution),
+/// which is plenty for "where does tick time go".
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpanStats {
+    /// Number of recorded spans.
+    pub count: u64,
+    /// Sum of all recorded durations, ns.
+    pub total_ns: u64,
+    /// Largest recorded duration, ns.
+    pub max_ns: u64,
+    /// Median duration (bucket upper bound), ns.
+    pub p50_ns: u64,
+    /// 90th-percentile duration (bucket upper bound), ns.
+    pub p90_ns: u64,
+    /// 99th-percentile duration (bucket upper bound), ns.
+    pub p99_ns: u64,
+}
+
+/// Snapshot one stage's statistics.
+pub fn stats(stage: Stage) -> SpanStats {
+    let h = &HISTS[stage as usize];
+    let mut counts = [0u64; BUCKETS];
+    for (slot, bucket) in counts.iter_mut().zip(h.buckets.iter()) {
+        *slot = bucket.load(Relaxed);
+    }
+    let count: u64 = counts.iter().sum();
+    if count == 0 {
+        return SpanStats::default();
+    }
+    SpanStats {
+        count,
+        total_ns: h.sum_ns.load(Relaxed),
+        max_ns: h.max_ns.load(Relaxed),
+        p50_ns: quantile(&counts, count, 0.50),
+        p90_ns: quantile(&counts, count, 0.90),
+        p99_ns: quantile(&counts, count, 0.99),
+    }
+}
+
+/// Walk the bucket cumulative distribution to the requested quantile
+/// and return that bucket's upper bound in ns.
+fn quantile(counts: &[u64; BUCKETS], total: u64, q: f64) -> u64 {
+    let rank = ((total as f64) * q).ceil() as u64;
+    let rank = rank.clamp(1, total);
+    let mut seen = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        seen += c;
+        if seen >= rank {
+            // Bucket i holds durations in [2^i, 2^(i+1)); report the
+            // exclusive upper bound, saturating at u64::MAX for i=63.
+            return if i + 1 >= 64 { u64::MAX } else { 1u64 << (i + 1) };
+        }
+    }
+    u64::MAX
+}
+
+/// Snapshot every stage that has recorded at least one span, in
+/// declaration order.
+pub fn snapshot() -> Vec<(&'static str, SpanStats)> {
+    ALL_STAGES
+        .iter()
+        .filter_map(|&s| {
+            let st = stats(s);
+            (st.count > 0).then(|| (s.name(), st))
+        })
+        .collect()
+}
+
+/// Zero every histogram (tests and benches only — live code never
+/// resets, counters are cumulative for the process lifetime).
+pub fn reset() {
+    for h in HISTS.iter() {
+        for b in h.buckets.iter() {
+            b.store(0, Relaxed);
+        }
+        h.count.store(0, Relaxed);
+        h.sum_ns.store(0, Relaxed);
+        h.max_ns.store(0, Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_floor_log2() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(3), 1);
+        assert_eq!(bucket_index(4), 2);
+        assert_eq!(bucket_index(1023), 9);
+        assert_eq!(bucket_index(1024), 10);
+        assert_eq!(bucket_index(u64::MAX), 63);
+    }
+
+    #[test]
+    fn quantile_walks_cumulative_counts() {
+        let mut counts = [0u64; BUCKETS];
+        counts[0] = 50; // 50 obs ≤ 1ns
+        counts[10] = 40; // 40 obs ~1us
+        counts[20] = 10; // 10 obs ~1ms
+        assert_eq!(quantile(&counts, 100, 0.50), 1 << 1);
+        assert_eq!(quantile(&counts, 100, 0.90), 1 << 11);
+        assert_eq!(quantile(&counts, 100, 0.99), 1 << 21);
+    }
+
+    #[test]
+    fn stage_names_are_unique_snake_case() {
+        let mut names: Vec<&str> = ALL_STAGES.iter().map(|s| s.name()).collect();
+        names.sort_unstable();
+        let before = names.len();
+        names.dedup();
+        assert_eq!(before, names.len(), "duplicate stage name");
+        for n in names {
+            assert!(
+                n.chars().all(|c| c.is_ascii_lowercase() || c == '_'),
+                "stage name {n:?} is not snake_case"
+            );
+        }
+    }
+
+    #[test]
+    fn all_stages_covers_every_discriminant() {
+        assert_eq!(ALL_STAGES.len(), Stage::N_STAGES);
+        for (i, s) in ALL_STAGES.iter().enumerate() {
+            assert_eq!(*s as usize, i, "ALL_STAGES out of declaration order");
+        }
+    }
+}

@@ -373,6 +373,7 @@ fn f64s_from_stream(stream: &[u8], n: usize) -> Result<Vec<f64>> {
 
 /// Append a compressed f32 block (`varint n | varint nbytes | stream`).
 pub(crate) fn put_f32s(buf: &mut Vec<u8>, vals: &[f32]) {
+    let _s = crate::obs::spans::span(crate::obs::spans::Stage::CompressEncode);
     put_varint(buf, vals.len() as u64);
     let stream = f32_stream_bytes(vals);
     put_varint(buf, stream.len() as u64);
@@ -381,6 +382,7 @@ pub(crate) fn put_f32s(buf: &mut Vec<u8>, vals: &[f32]) {
 
 /// Decode a compressed f32 block written by [`put_f32s`].
 pub(crate) fn get_f32s(c: &mut Cur) -> Result<Vec<f32>> {
+    let _s = crate::obs::spans::span(crate::obs::spans::Stage::CompressDecode);
     let n = varint_usize(c)?;
     let nbytes = varint_usize(c)?;
     f32s_from_stream(c.take(nbytes)?, n)

@@ -110,6 +110,7 @@ pub fn curve_path_for(snapshot_path: &Path) -> Result<PathBuf> {
 /// Atomically write a curve file (temp sibling + rename + parent fsync,
 /// the same crash-safety discipline as snapshots).
 pub fn write_file(path: &Path, iters: &[usize], db: &[f64]) -> Result<()> {
+    let _s = crate::obs::spans::span(crate::obs::spans::Stage::CurveWrite);
     let bytes = to_bytes(iters, db)?;
     super::ensure_parent_dir(path)?;
     let tmp = super::tmp_sibling(path);

@@ -120,11 +120,13 @@ impl Journal {
 
     /// Append one record (framed, checksummed, flushed).
     pub fn append(&mut self, rec: &TickRecord) -> Result<()> {
+        let _s = crate::obs::spans::span(crate::obs::spans::Stage::JournalAppend);
         let payload = rec.encode();
         self.w.write_all(&(payload.len() as u32).to_le_bytes())?;
         self.w.write_all(&payload)?;
         self.w.write_all(&codec::fnv1a64(&payload).to_le_bytes())?;
         self.w.flush()?;
+        crate::obs::counters::inc(crate::obs::counters::Ctr::JournalRecords);
         Ok(())
     }
 
@@ -259,12 +261,18 @@ pub fn for_run_reporting(
             .find(|&i| kept.clone().nth(i).map(|r| r.tick) != Some(i))
             .unwrap_or(start_tick);
         let gap = JournalGap { start_tick, found_records, first_missing_tick };
-        eprintln!(
-            "warning: journal {} does not cover ticks 0..{start_tick} contiguously \
+        crate::obs::logger::warn(format_args!(
+            "journal {} does not cover ticks 0..{start_tick} contiguously \
              ({found_records} records survive, tick {first_missing_tick} is the first \
              missing; crash-shortened tail?); starting a fresh journal for the \
              resumed suffix",
             path.display()
+        ));
+        crate::obs::recorder::record(
+            crate::obs::recorder::EventKind::JournalGap,
+            start_tick as u64,
+            found_records as u64,
+            first_missing_tick as u64,
         );
         return Ok((Journal::create(path, fingerprint)?, Some(gap)));
     }

@@ -622,14 +622,24 @@ pub fn to_bytes_v1(snap: &RunSnapshot) -> Vec<u8> {
 /// are synced, and replace `path` via rename — a crash mid-write leaves
 /// the previous checkpoint intact.
 pub fn write_file(path: &Path, snap: &RunSnapshot) -> Result<()> {
+    let _s = crate::obs::spans::span(crate::obs::spans::Stage::SnapshotWrite);
     super::ensure_parent_dir(path)?;
     let tmp = super::tmp_sibling(path);
+    let bytes = to_bytes(snap);
     let mut f = std::fs::File::create(&tmp)?;
-    f.write_all(&to_bytes(snap))?;
+    f.write_all(&bytes)?;
     f.sync_all()?;
     drop(f);
     std::fs::rename(&tmp, path)?;
     super::sync_parent_dir(path)?;
+    crate::obs::counters::inc(crate::obs::counters::Ctr::CheckpointWrites);
+    crate::obs::counters::add(crate::obs::counters::Ctr::CheckpointBytes, bytes.len() as u64);
+    crate::obs::recorder::record(
+        crate::obs::recorder::EventKind::Checkpoint,
+        snap.tick as u64,
+        bytes.len() as u64,
+        0,
+    );
     Ok(())
 }
 

@@ -368,7 +368,16 @@ fn gen_batch(rng: &mut Pcg32, d: usize) -> WireMsg {
                 (c, upload, rng.below(2) as u32)
             })
             .collect();
-        WireMsg::AckBatch { acks, iter: None }
+        // Exercise both ext fields: the tick stamp and (only behind a
+        // stamp — the encoder drops an unstamped block) the telemetry
+        // counter block piggybacked on final batches.
+        let iter = rng.bernoulli(0.5).then(|| rng.below(1000));
+        let stats = (iter.is_some() && rng.bernoulli(0.4)).then(|| {
+            (0..rng.below(5))
+                .map(|_| (rng.below(200) as u8, rng.next_u64() >> rng.below(40)))
+                .collect()
+        });
+        WireMsg::AckBatch { acks, iter, stats }
     }
 }
 

@@ -68,6 +68,17 @@ fn gen_acks(rng: &mut Pcg32, d: usize) -> Vec<(usize, Option<Update>, u32)> {
         .collect()
 }
 
+/// A random telemetry counter block (sometimes absent, sometimes empty —
+/// both are legal on the wire). Ids are unconstrained u8s: the decoder
+/// preserves unknown ids, only `counters::absorb_block` filters them.
+fn gen_stats(rng: &mut Pcg32) -> Option<Vec<(u8, u64)>> {
+    rng.bernoulli(0.4).then(|| {
+        (0..rng.below(6))
+            .map(|_| (rng.below(256) as u8, rng.next_u64() >> rng.below(40)))
+            .collect()
+    })
+}
+
 /// A random message drawn from the kinds that actually cross faulted
 /// links mid-run, the new anti-entropy frames included.
 fn gen_msg(rng: &mut Pcg32) -> WireMsg {
@@ -86,11 +97,19 @@ fn gen_msg(rng: &mut Pcg32) -> WireMsg {
                 })
                 .collect(),
         },
-        1 => WireMsg::AckBatch {
+        1 => {
+            // The counter block is a second ext field behind the stamp:
+            // an unstamped batch never carries one (the encoder would
+            // drop it, breaking the clean-decode sanity check below).
+            let iter = rng.bernoulli(0.5).then(|| rng.below(1000));
+            let stats = iter.is_some().then(|| gen_stats(rng)).flatten();
+            WireMsg::AckBatch { acks: gen_acks(rng, d), iter, stats }
+        }
+        2 => WireMsg::CombinedUpdate {
+            iter: rng.below(1000),
             acks: gen_acks(rng, d),
-            iter: rng.bernoulli(0.5).then(|| rng.below(1000)),
+            stats: gen_stats(rng),
         },
-        2 => WireMsg::CombinedUpdate { iter: rng.below(1000), acks: gen_acks(rng, d) },
         3 => WireMsg::Digest {
             session: rng.next_u64(),
             base_tick: rng.below(500),

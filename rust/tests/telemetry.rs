@@ -1,0 +1,447 @@
+//! Integration: the telemetry layer's observation-only contract.
+//!
+//! * **Bit-identity.** The discrete engine and the deployment runtimes
+//!   must produce byte-for-byte identical results with telemetry on or
+//!   off — spans only read the monotonic clock, counters are always on
+//!   (so wire bytes never depend on an observation knob), and the run
+//!   log only snapshots both.
+//! * **Run-log schema.** `--telemetry PATH` output is valid
+//!   `pao-fed-telemetry-v1` JSONL whose span counts line up exactly with
+//!   the tick count.
+//! * **Flight recorder.** The 256-slot ring keeps the newest events in
+//!   sequence order across wraparound, and the seqlock never leaks a
+//!   torn entry under concurrent writers (case count scaled by
+//!   `PAO_FED_PROP_CASES`).
+//! * **Fleet counters.** Under a chaos fault plan every injected action
+//!   is tallied exactly once, and the counters are monotone.
+
+use pao_fed::async_rt::fault::{self, FaultPlan};
+use pao_fed::async_rt::{run_deployment, run_deployment_tcp, DeploymentConfig};
+use pao_fed::data::stream::{FedStream, StreamConfig};
+use pao_fed::data::synthetic::Eq39Source;
+use pao_fed::fl::algorithms::{build, Variant};
+use pao_fed::fl::backend::NativeBackend;
+use pao_fed::fl::delay::DelayModel;
+use pao_fed::fl::engine::{self, Environment};
+use pao_fed::fl::participation::Participation;
+use pao_fed::obs::counters::{self, Ctr};
+use pao_fed::obs::{log as runlog, recorder, spans};
+use pao_fed::rff::RffSpace;
+use pao_fed::util::json::Json;
+use pao_fed::util::rng::Pcg32;
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Telemetry state (the span switch, the run-log sink, the counter
+/// registry, the flight-recorder ring, the fault layer's frame counter)
+/// is process-global, so every test here serializes on this gate and
+/// leaves telemetry disabled on exit.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn prop_cases() -> usize {
+    std::env::var("PAO_FED_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200)
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("pao_fed_telemetry_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// A small engine scenario (10 clients, 200 ticks) shared by the
+/// identity and schema tests.
+fn engine_run(seed: u64) -> engine::RunResult {
+    let cfg = StreamConfig {
+        n_clients: 10,
+        n_iters: 200,
+        data_group_samples: vec![50, 100, 150, 200],
+        test_size: 60,
+    };
+    let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+    let rff = RffSpace::sample(4, 24, 1.0, &mut Pcg32::derive(seed, &[1]));
+    let mut backend = NativeBackend::new(rff.clone());
+    let part = Participation::grouped(10, &[0.5, 0.25, 0.1, 0.05], 4);
+    let env = Environment::new(
+        stream,
+        rff,
+        part,
+        DelayModel::Geometric { delta: 0.3 },
+        seed,
+        &mut backend,
+    )
+    .unwrap();
+    let algo = build(Variant::PaoFedC2, 0.4, 4, 10, 25);
+    engine::run(&env, &algo, &mut backend).unwrap()
+}
+
+#[test]
+fn disabled_spans_record_nothing_and_enabled_spans_do() {
+    let _g = lock();
+    runlog::close();
+    spans::reset();
+    {
+        let _s = spans::span(spans::Stage::Eval);
+    }
+    assert_eq!(
+        spans::stats(spans::Stage::Eval).count,
+        0,
+        "a disabled span guard must not record"
+    );
+    spans::set_enabled(true);
+    {
+        let _s = spans::span(spans::Stage::Eval);
+    }
+    spans::set_enabled(false);
+    assert_eq!(spans::stats(spans::Stage::Eval).count, 1);
+}
+
+#[test]
+fn engine_is_bit_identical_with_telemetry_on_and_off() {
+    let _g = lock();
+    runlog::close();
+    let baseline = engine_run(33);
+
+    let path = tmp("engine_identity.jsonl");
+    runlog::install(&path).unwrap();
+    let observed = engine_run(33);
+    runlog::close();
+
+    assert_eq!(baseline.final_w, observed.final_w, "model bytes diverge");
+    assert_eq!(baseline.mse_db, observed.mse_db, "curve diverges");
+    assert_eq!(baseline.iters, observed.iters);
+    assert_eq!(baseline.comm.uplink_scalars, observed.comm.uplink_scalars);
+    assert_eq!(baseline.comm.uplink_msgs, observed.comm.uplink_msgs);
+    assert_eq!(baseline.comm.downlink_scalars, observed.comm.downlink_scalars);
+    assert_eq!(baseline.agg, observed.agg);
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(!text.trim().is_empty(), "telemetry run produced no log");
+}
+
+#[test]
+fn in_process_deployment_is_bit_identical_with_telemetry_on_and_off() {
+    let _g = lock();
+    runlog::close();
+    let seed = 11;
+    let cfg = StreamConfig {
+        n_clients: 8,
+        n_iters: 120,
+        data_group_samples: vec![30, 60, 90, 120],
+        test_size: 60,
+    };
+    let rff = RffSpace::sample(4, 24, 1.0, &mut Pcg32::derive(seed, &[1]));
+    let part = Participation::grouped(8, &[0.5, 0.25, 0.1, 0.05], 4);
+    let delay = DelayModel::Geometric { delta: 0.3 };
+    let dcfg = || DeploymentConfig {
+        algo: build(Variant::PaoFedU2, 0.4, 4, 10, 20),
+        tick: Duration::ZERO,
+        env_seed: seed,
+        eval_every: 20,
+        persist: None,
+        run_until: None,
+        wire: Default::default(),
+        tree: Default::default(),
+    };
+
+    let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+    let off = run_deployment(stream, rff.clone(), part.clone(), delay, dcfg()).unwrap();
+
+    runlog::install(&tmp("inproc_identity.jsonl")).unwrap();
+    let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+    let on = run_deployment(stream, rff, part, delay, dcfg()).unwrap();
+    runlog::close();
+
+    assert_eq!(off.mse_db, on.mse_db, "curves diverge");
+    assert_eq!(off.final_w, on.final_w, "models diverge");
+    assert_eq!(off.comm.uplink_scalars, on.comm.uplink_scalars);
+    assert_eq!(off.comm.downlink_scalars, on.comm.downlink_scalars);
+    assert_eq!(off.local_steps, on.local_steps);
+    // The telemetry-on run self-reports its stage timings.
+    assert!(
+        !on.telemetry.spans.is_empty(),
+        "telemetry-on deployment captured no spans"
+    );
+}
+
+/// The full fleet shape: server + two real worker processes over
+/// loopback TCP, telemetry enabled everywhere (server sink + per-worker
+/// `--telemetry` logs). The curve must stay bit-identical to the
+/// telemetry-off in-process run, and the workers' piggybacked counter
+/// blocks must each be absorbed exactly once.
+#[test]
+fn tcp_fleet_is_bit_identical_with_telemetry_enabled_fleet_wide() {
+    let _g = lock();
+    runlog::close();
+    let seed = 21;
+    let cfg = StreamConfig {
+        n_clients: 10,
+        n_iters: 120,
+        data_group_samples: vec![30, 60, 90, 120],
+        test_size: 60,
+    };
+    let rff = RffSpace::sample(4, 24, 1.0, &mut Pcg32::derive(seed, &[1]));
+    let part = Participation::grouped(10, &[0.5, 0.25, 0.1, 0.05], 4);
+    let delay = DelayModel::Geometric { delta: 0.3 };
+    let dcfg = || DeploymentConfig {
+        algo: build(Variant::PaoFedC2, 0.4, 4, 10, 20),
+        tick: Duration::ZERO,
+        env_seed: seed,
+        eval_every: 20,
+        persist: None,
+        run_until: None,
+        wire: Default::default(),
+        tree: Default::default(),
+    };
+
+    // Baseline: telemetry-off in-process deployment.
+    let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+    let inproc = run_deployment(stream, rff.clone(), part.clone(), delay, dcfg()).unwrap();
+
+    // Telemetry-on fleet: fresh counters so the absorbed-block check is
+    // exact, server run log installed, each worker with its own log.
+    counters::reset();
+    spans::reset();
+    let server_log = tmp("tcp_server.jsonl");
+    runlog::install(&server_log).unwrap();
+    let stream = FedStream::build(&cfg, &mut Eq39Source::new(seed), seed);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let worker_logs: Vec<PathBuf> =
+        (0..2).map(|i| tmp(&format!("tcp_worker_{i}.jsonl"))).collect();
+    let children: Vec<std::process::Child> = worker_logs
+        .iter()
+        .map(|log| {
+            Command::new(env!("CARGO_BIN_EXE_pao-fed"))
+                .args(["deploy", "--connect", &addr, "--telemetry"])
+                .arg(log)
+                .stdout(Stdio::null())
+                .stderr(Stdio::inherit())
+                .spawn()
+                .expect("spawn worker")
+        })
+        .collect();
+    let tcp = run_deployment_tcp(stream, rff, part, delay, dcfg(), &listener, 2).unwrap();
+    runlog::close();
+    for mut c in children {
+        let status = c.wait().unwrap();
+        assert!(status.success(), "worker exited with {status}");
+    }
+
+    assert_eq!(inproc.mse_db, tcp.mse_db, "curves diverge");
+    assert_eq!(inproc.final_w, tcp.final_w, "models diverge");
+    assert_eq!(inproc.comm.uplink_scalars, tcp.comm.uplink_scalars);
+    assert_eq!(inproc.comm.uplink_msgs, tcp.comm.uplink_msgs);
+    assert_eq!(inproc.comm.downlink_scalars, tcp.comm.downlink_scalars);
+    assert_eq!(inproc.agg, tcp.agg);
+    assert_eq!(inproc.local_steps, tcp.local_steps);
+
+    // Both workers' final-ack counter blocks were absorbed exactly once.
+    assert_eq!(counters::get(Ctr::RemoteBlocks), 2);
+    let reported = tcp
+        .telemetry
+        .counters
+        .iter()
+        .find(|(k, _)| k == "remote_blocks")
+        .map(|&(_, v)| v);
+    assert_eq!(reported, Some(2));
+
+    // Every log in the fleet is valid JSONL with the right schema.
+    for log in worker_logs.iter().chain([&server_log]) {
+        let text = std::fs::read_to_string(log)
+            .unwrap_or_else(|e| panic!("read {}: {e}", log.display()));
+        assert!(!text.trim().is_empty(), "{} is empty", log.display());
+        for line in text.lines() {
+            let j = Json::parse(line).unwrap_or_else(|e| panic!("{}: {e}", log.display()));
+            assert_eq!(j.get("schema").and_then(|s| s.as_str()), Some(runlog::SCHEMA));
+        }
+        let last = Json::parse(text.lines().last().unwrap()).unwrap();
+        assert_eq!(last.get("event").and_then(|s| s.as_str()), Some("final"));
+    }
+}
+
+#[test]
+fn run_log_schema_and_span_counts_line_up_with_ticks() {
+    let _g = lock();
+    runlog::close();
+    // 200-tick run, snapshot every 50 -> records after ticks 49, 99,
+    // 149, 199, plus the final record at 199.
+    std::env::set_var("PAO_FED_TELEMETRY_EVERY", "50");
+    let path = tmp("schema.jsonl");
+    let installed = runlog::install(&path);
+    std::env::remove_var("PAO_FED_TELEMETRY_EVERY");
+    installed.unwrap();
+    spans::reset();
+    let _ = engine_run(7);
+    runlog::close();
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 5, "expected 4 periodic + 1 final record:\n{text}");
+    let mut last_tick = 0usize;
+    for (i, line) in lines.iter().enumerate() {
+        let j = Json::parse(line).unwrap();
+        assert_eq!(j.get("schema").and_then(|s| s.as_str()), Some(runlog::SCHEMA));
+        let event = j.get("event").and_then(|s| s.as_str()).unwrap();
+        if i + 1 == lines.len() {
+            assert_eq!(event, "final");
+        } else {
+            assert_eq!(event, "tick");
+        }
+        let tick = j.get("tick").and_then(|t| t.as_usize()).unwrap();
+        assert!(tick >= last_tick, "tick field must be monotone");
+        last_tick = tick;
+        assert!(j.get("wall_ns").and_then(|v| v.as_f64()).is_some());
+        // Scalar counters are always present (zeros included), so the
+        // schema is stable for downstream consumers.
+        let ctrs = j.get("counters").unwrap();
+        assert!(ctrs.get("journal_records").is_some());
+        assert!(ctrs.get("recoveries").is_some());
+        // The per-tick pipeline stages have run exactly once per tick.
+        let arrivals = j.get("spans").and_then(|s| s.get("arrivals")).unwrap();
+        assert_eq!(
+            arrivals.get("count").and_then(|v| v.as_usize()),
+            Some(tick + 1),
+            "arrivals span count out of step with the tick count"
+        );
+    }
+    assert_eq!(last_tick, 199);
+}
+
+#[test]
+fn flight_recorder_keeps_the_newest_events_in_order_across_wraparound() {
+    let _g = lock();
+    let base = recorder::recorded();
+    let n = (recorder::CAPACITY + 44) as u64; // force wraparound
+    for i in 0..n {
+        recorder::record(recorder::EventKind::Tick, 424_242, i, i + 1);
+    }
+    assert_eq!(recorder::recorded(), base + n);
+    let events = recorder::snapshot();
+    assert!(events.len() <= recorder::CAPACITY);
+    assert!(
+        events.windows(2).all(|w| w[0].seq < w[1].seq),
+        "snapshot out of sequence order"
+    );
+    assert_eq!(events.last().unwrap().seq, base + n - 1);
+    // After wraparound the ring holds exactly the newest CAPACITY
+    // events — all ours, none torn.
+    let ours: Vec<_> = events.iter().filter(|e| e.tick == 424_242).collect();
+    assert_eq!(ours.len(), recorder::CAPACITY);
+    for e in ours {
+        assert_eq!(e.kind, recorder::EventKind::Tick);
+        assert_eq!(e.b, e.a + 1, "torn ring entry");
+    }
+}
+
+#[test]
+fn flight_recorder_never_leaks_torn_entries_under_concurrent_writers() {
+    let _g = lock();
+    let threads = 4usize;
+    let per_thread = prop_cases().max(100) * 2;
+    let marker = 898_989u64;
+    let before = recorder::recorded();
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            s.spawn(move || {
+                for i in 0..per_thread {
+                    let a = (t * per_thread + i) as u64;
+                    recorder::record(recorder::EventKind::Reconnect, marker, a, a ^ 0x5a5a);
+                }
+            });
+        }
+    });
+    assert_eq!(
+        recorder::recorded(),
+        before + (threads * per_thread) as u64,
+        "every concurrent record must claim exactly one sequence number"
+    );
+    let events = recorder::snapshot();
+    assert!(events.windows(2).all(|w| w[0].seq < w[1].seq));
+    let ours: Vec<_> = events.iter().filter(|e| e.tick == marker).collect();
+    assert!(!ours.is_empty());
+    for e in ours {
+        assert_eq!(e.kind, recorder::EventKind::Reconnect);
+        assert_eq!(e.b, e.a ^ 0x5a5a, "torn entry leaked through the seqlock");
+    }
+}
+
+/// Drive the outbound-frame fault hook with a dense chaos plan and check
+/// the fault counters against the *observable* outcome of every call:
+/// each injected action is tallied exactly once (never zero, never
+/// twice), counters only ever grow, and each fault lands in the ring.
+#[test]
+fn fault_counters_tally_every_injected_action_monotonically() {
+    let _g = lock();
+    let limit = 100_000u64;
+    let plan = FaultPlan {
+        seed: 9,
+        kill_tick: None,
+        corrupt_frames: (1..=limit).filter(|n| n % 97 == 3).collect(),
+        drop_frames: (1..=limit).filter(|n| n % 101 == 5).collect(),
+        dup_frames: (1..=limit).filter(|n| n % 89 == 1).collect(),
+        delay_frames: Vec::new(),
+        refuse_connects: 0,
+    };
+    let mut rng = Pcg32::new(0x7e1e, 0);
+    let mut injected = 0u64;
+    let recorded_before = recorder::recorded();
+    for case in 0..prop_cases() {
+        let payload: Vec<u8> = (0..1 + rng.below(40)).map(|_| rng.below(256) as u8).collect();
+        let before = [
+            counters::get(Ctr::FaultsCorrupt),
+            counters::get(Ctr::FaultsDrop),
+            counters::get(Ctr::FaultsDup),
+            counters::get(Ctr::FaultsDelay),
+        ];
+        let mut buf = Vec::new();
+        let res = fault::write_frame_hook(&plan, &mut buf, &payload);
+        let after = [
+            counters::get(Ctr::FaultsCorrupt),
+            counters::get(Ctr::FaultsDrop),
+            counters::get(Ctr::FaultsDup),
+            counters::get(Ctr::FaultsDelay),
+        ];
+        for (b, a) in before.iter().zip(&after) {
+            assert!(a >= b, "case {case}: a fault counter went backwards");
+        }
+        let delta: u64 = after.iter().sum::<u64>() - before.iter().sum::<u64>();
+        let framed = 4 + payload.len();
+        match res {
+            Err(_) => {
+                // Dropped: the frame vanished with the connection.
+                assert!(buf.is_empty(), "case {case}: dropped frame left bytes");
+                assert_eq!(after[1], before[1] + 1, "case {case}: drop not tallied");
+                assert_eq!(delta, 1, "case {case}");
+                injected += 1;
+            }
+            Ok(()) if buf.len() == 2 * framed => {
+                assert_eq!(after[2], before[2] + 1, "case {case}: dup not tallied");
+                assert_eq!(delta, 1, "case {case}");
+                injected += 1;
+            }
+            Ok(()) => {
+                assert_eq!(buf.len(), framed, "case {case}: bad frame length");
+                if buf[4..] == payload[..] {
+                    assert_eq!(delta, 0, "case {case}: clean send tallied a fault");
+                } else {
+                    assert_eq!(after[0], before[0] + 1, "case {case}: corrupt not tallied");
+                    assert_eq!(delta, 1, "case {case}");
+                    injected += 1;
+                }
+            }
+        }
+    }
+    assert!(injected > 0, "plan too sparse: no faults hit in {} cases", prop_cases());
+    // Every injected action also landed in the flight recorder.
+    assert_eq!(recorder::recorded(), recorded_before + injected);
+}
